@@ -1,0 +1,19 @@
+//! Figure-2 style CUR image reconstruction (c = r = 100) comparing the
+//! optimal U, Drineas-08 U, and the fast U at increasing sketch sizes.
+//! Writes PGM files under out/ so the reconstructions can be eyeballed.
+//!
+//! ```sh
+//! cargo run --release --example cur_image -- --rows 480 --cols 292
+//! ```
+
+use fastspsd::cli::Args;
+use fastspsd::figures::{cur_fig, Ctx};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.insert(0, "fig2".into());
+    argv.push("--pgm".into());
+    let args = Args::parse(argv);
+    let ctx = Ctx::from_args(&args);
+    cur_fig::fig2(&ctx, &args);
+}

@@ -1,0 +1,22 @@
+//! End-to-end driver: the full stack on a real small workload.
+//!
+//! Spins up the Layer-3 approximation service over a synthetic-LIBSVM
+//! dataset, streams a mixed batch of approximation requests through the
+//! bounded queue (kernel blocks flow through the PJRT-compiled Pallas
+//! kernel when artifacts are present), and reports latency percentiles,
+//! throughput, and per-method quality. Recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_service
+//! ```
+
+use fastspsd::cli::Args;
+use fastspsd::figures::{e2e, Ctx};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.insert(0, "e2e".into());
+    let args = Args::parse(argv);
+    let ctx = Ctx::from_args(&args);
+    e2e::run(&ctx, &args);
+}

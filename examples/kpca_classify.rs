@@ -1,0 +1,17 @@
+//! KPCA + 10-NN classification on a synthetic PenDigit-like dataset
+//! (paper §6.3.2 / Figs 7-10, k = 3), comparing kernel approximations.
+//!
+//! ```sh
+//! cargo run --release --example kpca_classify -- --scale 0.1 --reps 2
+//! ```
+
+use fastspsd::cli::Args;
+use fastspsd::figures::{kpca_class, Ctx};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.insert(0, "fig7".into());
+    let args = Args::parse(argv);
+    let ctx = Ctx::from_args(&args);
+    kpca_class::run(&ctx, &args, 3);
+}

@@ -1,0 +1,17 @@
+//! Approximate spectral clustering (paper §6.4 / Figs 11-12): NMI and
+//! timing for Nyström / fast / prototype across sketch sizes.
+//!
+//! ```sh
+//! cargo run --release --example spectral_clustering -- --dataset DNA
+//! ```
+
+use fastspsd::cli::Args;
+use fastspsd::figures::{spectral_fig, Ctx};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.insert(0, "fig11".into());
+    let args = Args::parse(argv);
+    let ctx = Ctx::from_args(&args);
+    spectral_fig::run(&ctx, &args);
+}

@@ -1,0 +1,92 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO text + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (`make artifacts`); python never appears on the rust
+request path. Usage:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACT_SPECS
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name: str, fn, shapes) -> str:
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, so `make` can skip unchanged builds."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        if "__pycache__" in dirpath:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text", "fingerprint": source_fingerprint(), "artifacts": []}
+    for name, (fn, shapes) in ARTIFACT_SPECS.items():
+        if only is not None and name not in only:
+            continue
+        text = lower_one(name, fn, shapes)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        # "<kind>_<MxKxN>" — the shape suffix is a single token
+        kind = name.rsplit("_", 1)[0]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": kind,
+                "inputs": [list(s) for s in shapes],
+                "dtype": "f32",
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Layer-1 Pallas kernel: tiled matmul used by sketch products.
+
+The coordinator offloads dense products (C^T S assembly, KPCA feature
+projections V^T k(x)) to this kernel. The grid tiles the output; each tile
+contracts the full shared dimension in VMEM — for the AOT shape buckets used
+here (k <= 1024) both panels fit VMEM comfortably (see DESIGN.md §Perf), so
+no k-grid accumulator is needed and the MXU sees one large contraction per
+tile instead of many small ones.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128) -> jax.Array:
+    """(m, k) @ (k, n) -> (m, n) via the Pallas tile kernel."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction dims differ: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, y)

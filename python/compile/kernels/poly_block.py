@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: polynomial kernel block.
+
+    K[i, j] = (gamma * <x_i, y_j> + coef0) ** degree
+
+Extends the library beyond the paper's RBF experiments (any SPSD kernel
+works with the fast model). Same tiling story as rbf_block: the inner
+product is the MXU-shaped contraction; scale/shift/power are fused VPU
+ops. gamma/coef0/degree ride along as (1, 1) operands so one artifact per
+shape bucket serves every parameterization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _poly_block_kernel(gamma_ref, coef0_ref, degree_ref, x_ref, y_ref, o_ref):
+    xy = jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    base = gamma_ref[0, 0] * xy + coef0_ref[0, 0]
+    o_ref[...] = jnp.power(base, degree_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def poly_block(gamma, coef0, degree, x, y, *, bm: int = 128, bn: int = 128):
+    """Polynomial kernel block via the Pallas kernel.
+
+    Args:
+      gamma, coef0, degree: (1, 1) f32 kernel parameters.
+      x: (m, d), y: (n, d) f32 data blocks; m % bm == n % bn == 0.
+    """
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2
+    assert m % bm == 0 and n % bn == 0
+    grid = (m // bm, n // bn)
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _poly_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            scalar,
+            scalar,
+            scalar,
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(gamma, coef0, degree, x, y)

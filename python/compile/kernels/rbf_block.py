@@ -1,0 +1,78 @@
+"""Layer-1 Pallas kernel: fused RBF kernel block.
+
+Computes one (m, n) block of the RBF kernel matrix
+
+    K[i, j] = exp(-gamma * ||x_i - y_j||^2)
+            = exp(-gamma * (||x_i||^2 + ||y_j||^2 - 2 <x_i, y_j>))
+
+as a single fused kernel. The `-2 X Y^T` contraction is the MXU-shaped hot
+spot (a (bm, d) x (d, bn) matmul); the row norms and the exp are elementwise
+VPU work fused into the same kernel so the distance matrix never round-trips
+through HBM.
+
+TPU mapping (see DESIGN.md "Hardware adaptation"): the grid tiles the output
+into (bm, bn) blocks; BlockSpec streams the X panel per grid-row and the Y
+panel per grid-column HBM->VMEM. `gamma` rides along as a (1, 1) operand
+broadcast to every block. `interpret=True` is mandatory in this environment:
+real TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rbf_block_kernel(gamma_ref, x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile: fused norms + matmul + exp."""
+    x = x_ref[...]  # (bm, d) f32 in VMEM
+    y = y_ref[...]  # (bn, d) f32 in VMEM
+    # Row norms: VPU elementwise + reduce.
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True)  # (bn, 1)
+    # The MXU part: X @ Y^T via dot_general contracting the feature dim.
+    xy = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bm, bn)
+    d2 = xx + yy.T - 2.0 * xy
+    # Clamp tiny negatives from cancellation so exp never sees > 1.
+    d2 = jnp.maximum(d2, 0.0)
+    o_ref[...] = jnp.exp(-gamma_ref[0, 0] * d2)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def rbf_block(gamma: jax.Array, x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128) -> jax.Array:
+    """RBF kernel block K = exp(-gamma * dist2(x, y)) via the Pallas kernel.
+
+    Args:
+      gamma: (1, 1) f32, the RBF precision 1 / (2 sigma^2).
+      x: (m, d) f32 row-block of data points.
+      y: (n, d) f32 column-block of data points.
+      bm, bn: output tile sizes; m % bm == 0 and n % bn == 0.
+
+    Returns:
+      (m, n) f32 kernel block.
+    """
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _rbf_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # gamma broadcast
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),  # X panel per row
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),  # Y panel per col
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(gamma, x, y)

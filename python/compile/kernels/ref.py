@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_block_ref(gamma, x, y):
+    """Reference RBF block: exp(-gamma * ||x_i - y_j||^2), computed directly."""
+    # (m, 1, d) - (1, n, d) -> explicit pairwise differences; O(mnd) memory,
+    # fine for oracle-sized inputs and immune to the cancellation the fused
+    # kernel has to clamp.
+    diff = x[:, None, :] - y[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    g = jnp.asarray(gamma).reshape(())
+    return jnp.exp(-g * d2)
+
+
+def matmul_ref(x, y):
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def poly_block_ref(gamma, coef0, degree, x, y):
+    """Reference polynomial kernel block (gamma <x,y> + coef0)^degree."""
+    g = jnp.asarray(gamma).reshape(())
+    c0 = jnp.asarray(coef0).reshape(())
+    d = jnp.asarray(degree).reshape(())
+    return jnp.power(g * jnp.matmul(x, y.T) + c0, d)

@@ -1,0 +1,66 @@
+"""Layer-2 JAX model: the compute graphs that get AOT-lowered to HLO.
+
+Each public function here is a pure jax function over fixed-shape arrays that
+calls the Layer-1 Pallas kernels, so that the kernels lower into the same HLO
+module. `aot.py` lowers every (function, shape-bucket) pair listed in
+`ARTIFACT_SPECS` to `artifacts/<name>.hlo.txt` plus a manifest the rust
+runtime reads.
+
+Shape buckets: the rust coordinator pads data blocks to these shapes (rows
+with zero rows — cropped at assembly — and features with zero columns, which
+leaves RBF distances and matmul products unchanged).
+"""
+
+from __future__ import annotations
+
+from . import kernels
+from .kernels.rbf_block import rbf_block
+from .kernels.matmul import matmul
+from .kernels.poly_block import poly_block
+
+__all__ = ["rbf_block_graph", "matmul_graph", "poly_block_graph", "ARTIFACT_SPECS"]
+
+
+def rbf_block_graph(gamma, x, y):
+    """One (BM, BN) RBF kernel block; gamma is a (1,1) operand."""
+    return (rbf_block(gamma, x, y),)
+
+
+def matmul_graph(x, y):
+    """One (BM, BN) matmul tile with full-depth contraction."""
+    return (matmul(x, y),)
+
+
+def poly_block_graph(gamma, coef0, degree, x, y):
+    """One (BM, BN) polynomial kernel block; params are (1,1) operands."""
+    return (poly_block(gamma, coef0, degree, x, y),)
+
+
+# Output block edge for the kernel-matrix tiles.
+BM = 256
+BN = 256
+# Feature-dimension buckets covering the paper's datasets (d = 12..5000;
+# Gisette-like d=5000 maps to the 1024 bucket after PCA-style truncation or
+# two passes — the coordinator picks the smallest bucket >= d, capped here).
+D_BUCKETS = (16, 128, 1024)
+# Matmul tile: (BM x K) @ (K x BN) for sketch products / feature projection.
+MM_K = (256, 1024)
+
+# name -> (function, input shapes); every entry becomes one artifact.
+ARTIFACT_SPECS = {}
+for _d in D_BUCKETS:
+    ARTIFACT_SPECS[f"rbf_block_{BM}x{BN}x{_d}"] = (
+        rbf_block_graph,
+        [(1, 1), (BM, _d), (BN, _d)],
+    )
+for _k in MM_K:
+    ARTIFACT_SPECS[f"matmul_{BM}x{_k}x{BN}"] = (
+        matmul_graph,
+        [(BM, _k), (_k, BN)],
+    )
+# Polynomial kernel buckets (small-d datasets are its common use case).
+for _d in (16, 128):
+    ARTIFACT_SPECS[f"poly_block_{BM}x{BN}x{_d}"] = (
+        poly_block_graph,
+        [(1, 1), (1, 1), (1, 1), (BM, _d), (BN, _d)],
+    )

@@ -1,0 +1,125 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/values; fixed cases pin the AOT shape buckets.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.rbf_block import rbf_block
+from compile.kernels.matmul import matmul
+from compile.kernels.ref import rbf_block_ref, matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------- rbf_block
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    d=st.sampled_from([1, 2, 7, 16, 33]),
+    gamma=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_block_matches_ref(mt, nt, d, gamma, seed):
+    bm, bn = 8, 8
+    m, n = mt * bm, nt * bn
+    x = _rand((m, d), seed)
+    y = _rand((n, d), seed + 1)
+    g = jnp.full((1, 1), gamma, dtype=jnp.float32)
+    out = rbf_block(g, x, y, bm=bm, bn=bn)
+    ref = rbf_block_ref(gamma, x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("d", [16, 128, 1024])
+def test_rbf_block_aot_buckets(d):
+    """The exact shapes that get AOT-compiled must agree with the oracle."""
+    x = _rand((256, d), 42)
+    y = _rand((256, d), 43)
+    g = jnp.full((1, 1), 0.125, dtype=jnp.float32)
+    out = rbf_block(g, x, y, bm=128, bn=128)
+    ref = rbf_block_ref(0.125, x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_rbf_block_gamma_zero_is_all_ones():
+    x = _rand((16, 4), 0)
+    y = _rand((8, 4), 1)
+    g = jnp.zeros((1, 1), dtype=jnp.float32)
+    out = rbf_block(g, x, y, bm=8, bn=8)
+    np.testing.assert_allclose(np.asarray(out), np.ones((16, 8), np.float32), atol=0)
+
+
+def test_rbf_block_self_diagonal_is_one():
+    x = _rand((16, 8), 7)
+    g = jnp.full((1, 1), 0.5, dtype=jnp.float32)
+    out = np.asarray(rbf_block(g, x, x, bm=8, bn=8))
+    np.testing.assert_allclose(np.diag(out), np.ones(16, np.float32), rtol=1e-5)
+    # symmetry of the self-block
+    np.testing.assert_allclose(out, out.T, rtol=1e-5, atol=1e-6)
+
+
+def test_rbf_block_values_in_unit_interval():
+    x = _rand((16, 4), 3, scale=10.0)
+    y = _rand((16, 4), 4, scale=10.0)
+    g = jnp.full((1, 1), 2.0, dtype=jnp.float32)
+    out = np.asarray(rbf_block(g, x, y, bm=8, bn=8))
+    assert out.min() >= 0.0 and out.max() <= 1.0 + 1e-6
+
+
+def test_rbf_block_zero_feature_padding_invariance():
+    """Padding features with zero columns must not change the block."""
+    x = _rand((8, 5), 11)
+    y = _rand((8, 5), 12)
+    xp = jnp.pad(x, ((0, 0), (0, 11)))
+    yp = jnp.pad(y, ((0, 0), (0, 11)))
+    g = jnp.full((1, 1), 0.3, dtype=jnp.float32)
+    a = rbf_block(g, x, y, bm=8, bn=8)
+    b = rbf_block(g, xp, yp, bm=8, bn=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    k=st.sampled_from([1, 3, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(mt, nt, k, seed):
+    bm, bn = 8, 8
+    m, n = mt * bm, nt * bn
+    x = _rand((m, k), seed)
+    y = _rand((k, n), seed + 1)
+    out = matmul(x, y, bm=bm, bn=bn)
+    ref = matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("k", [256, 1024])
+def test_matmul_aot_buckets(k):
+    x = _rand((256, k), 5)
+    y = _rand((k, 256), 6)
+    out = matmul(x, y, bm=128, bn=128)
+    ref = matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    x = _rand((8, 8), 9)
+    eye = jnp.eye(8, dtype=jnp.float32)
+    out = matmul(x, eye, bm=8, bn=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)

@@ -1,0 +1,65 @@
+"""Polynomial-kernel Pallas tests vs the jnp oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.poly_block import poly_block
+from compile.kernels.ref import poly_block_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def _scalar(v):
+    return jnp.full((1, 1), v, dtype=jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mt=st.integers(1, 2),
+    nt=st.integers(1, 2),
+    d=st.sampled_from([1, 4, 16]),
+    gamma=st.floats(0.1, 2.0),
+    coef0=st.floats(0.0, 2.0),
+    degree=st.sampled_from([1.0, 2.0, 3.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_poly_block_matches_ref(mt, nt, d, gamma, coef0, degree, seed):
+    bm, bn = 8, 8
+    x = _rand((mt * bm, d), seed, 0.5)
+    y = _rand((nt * bn, d), seed + 1, 0.5)
+    out = poly_block(_scalar(gamma), _scalar(coef0), _scalar(degree), x, y, bm=bm, bn=bn)
+    ref = poly_block_ref(gamma, coef0, degree, x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d", [16, 128])
+def test_poly_block_aot_buckets(d):
+    x = _rand((256, d), 3, 0.2)
+    y = _rand((256, d), 4, 0.2)
+    out = poly_block(_scalar(0.5), _scalar(1.0), _scalar(2.0), x, y, bm=128, bn=128)
+    ref = poly_block_ref(0.5, 1.0, 2.0, x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=1e-4)
+
+
+def test_degree_one_is_affine_gram():
+    x = _rand((8, 4), 5)
+    y = _rand((8, 4), 6)
+    out = poly_block(_scalar(1.0), _scalar(0.0), _scalar(1.0), x, y, bm=8, bn=8)
+    ref = np.asarray(x) @ np.asarray(y).T
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_poly_block_in_artifact_specs():
+    from compile.model import ARTIFACT_SPECS
+
+    assert "poly_block_256x256x16" in ARTIFACT_SPECS
+    fn, shapes = ARTIFACT_SPECS["poly_block_256x256x16"]
+    assert shapes == [(1, 1), (1, 1), (1, 1), (256, 16), (256, 16)]

@@ -1,0 +1,20 @@
+//! Bench: Figures 7-10 — KPCA + 10-NN classification error at bench scale.
+
+use fastspsd::cli::Args;
+use fastspsd::figures::{kpca_class, Ctx};
+
+fn main() {
+    let args = Args::parse(
+        [
+            "fig7", "--scale", "0.05", "--reps", "1", "--dataset", "PenDigit", "--cpu",
+            "--cs", "10,20,40", "--out", "out",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    let ctx = Ctx::from_args(&args);
+    println!("== Fig 7/8 series (k=3, bench scale) ==");
+    kpca_class::run(&ctx, &args, 3);
+    println!("== Fig 9/10 series (k=10, bench scale) ==");
+    kpca_class::run(&ctx, &args, 10);
+}

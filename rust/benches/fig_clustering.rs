@@ -1,0 +1,18 @@
+//! Bench: Figures 11/12 — spectral clustering NMI at bench scale.
+
+use fastspsd::cli::Args;
+use fastspsd::figures::{spectral_fig, Ctx};
+
+fn main() {
+    let args = Args::parse(
+        [
+            "fig11", "--scale", "0.05", "--reps", "1", "--dataset", "PenDigit", "--cpu",
+            "--cs", "10,20,40", "--out", "out",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    let ctx = Ctx::from_args(&args);
+    println!("== Fig 11/12 series (bench scale) ==");
+    spectral_fig::run(&ctx, &args);
+}

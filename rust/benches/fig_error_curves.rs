@@ -1,0 +1,21 @@
+//! Bench: Figures 3/4 — regenerates the error-vs-(s/n) series at bench
+//! scale on one dataset per run (full sweep: `repro fig3` / `repro fig4`).
+
+use fastspsd::cli::Args;
+use fastspsd::figures::{error_curves, Ctx};
+
+fn main() {
+    let args = Args::parse(
+        [
+            "fig3", "--scale", "0.05", "--reps", "1", "--dataset", "PenDigit", "--cpu",
+            "--sfactors", "2,8,24", "--out", "out",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    let ctx = Ctx::from_args(&args);
+    println!("== Fig 3 series (bench scale) ==");
+    error_curves::run(&ctx, &args, false);
+    println!("== Fig 4 series (bench scale) ==");
+    error_curves::run(&ctx, &args, true);
+}

@@ -1,0 +1,18 @@
+//! Bench: Figures 5/6 — KPCA misalignment vs time/memory at bench scale.
+
+use fastspsd::cli::Args;
+use fastspsd::figures::{kpca_fig, Ctx};
+
+fn main() {
+    let args = Args::parse(
+        [
+            "fig5", "--scale", "0.05", "--reps", "1", "--dataset", "PenDigit", "--cpu",
+            "--cs", "10,20,40", "--out", "out",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    let ctx = Ctx::from_args(&args);
+    println!("== Fig 5/6 series (bench scale) ==");
+    kpca_fig::run(&ctx, &args);
+}

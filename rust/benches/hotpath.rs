@@ -1,0 +1,59 @@
+//! Bench: hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! GEMM, SVD/pinv, RBF block computation (pure-rust vs PJRT when artifacts
+//! exist), and the assemble path of the fast model.
+
+use fastspsd::benchkit::{black_box, BenchSuite};
+use fastspsd::coordinator::engine::{rbf_cross_cpu, KernelEngine};
+use fastspsd::linalg::{pinv, svd_thin, Matrix};
+use fastspsd::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let mut suite = BenchSuite::new("hot paths");
+    suite.header();
+
+    // GEMM scaling
+    for &n in &[128usize, 256, 512] {
+        let a = Matrix::randn(n, n, &mut rng);
+        let b = Matrix::randn(n, n, &mut rng);
+        let s = suite.bench(&format!("gemm {n}x{n}x{n}"), || {
+            black_box(a.matmul(&b));
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        println!("    {:.2} GFLOP/s", flops / s.mean_secs() / 1e9);
+    }
+
+    // factorizations at algorithm-relevant sizes
+    let c128 = Matrix::randn(1024, 64, &mut rng);
+    suite.bench("svd_thin 1024x64", || {
+        black_box(svd_thin(&c128));
+    });
+    suite.bench("pinv 1024x64", || {
+        black_box(pinv(&c128));
+    });
+    let sq = Matrix::randn(256, 256, &mut rng);
+    suite.bench("svd_thin 256x256", || {
+        black_box(svd_thin(&sq));
+    });
+
+    // RBF blocks: pure rust vs PJRT (if artifacts available)
+    let x = Matrix::randn(512, 16, &mut rng);
+    suite.bench("rbf_cross_cpu 512x512x16", || {
+        black_box(rbf_cross_cpu(&x, &x, 0.5));
+    });
+    let engine = KernelEngine::auto();
+    if engine.is_pjrt() {
+        suite.bench("rbf_cross_pjrt 512x512x16", || {
+            black_box(engine.rbf_cross(&x, &x, 0.5));
+        });
+        let x1024 = Matrix::randn(1024, 128, &mut rng);
+        suite.bench("rbf_cross_pjrt 1024x1024x128", || {
+            black_box(engine.rbf_cross(&x1024, &x1024, 0.5));
+        });
+        suite.bench("rbf_cross_cpu  1024x1024x128", || {
+            black_box(rbf_cross_cpu(&x1024, &x1024, 0.5));
+        });
+    } else {
+        println!("  (PJRT engine unavailable — run `make artifacts` to bench the AOT path)");
+    }
+}

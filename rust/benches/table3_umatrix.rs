@@ -1,0 +1,53 @@
+//! Bench: Table 3 — time to compute the U matrix per model, plus the
+//! entries-of-K accounting. Regenerates the paper's complexity comparison
+//! as measured rows (also emitted by `repro table3` with error columns).
+
+use fastspsd::benchkit::{black_box, BenchSuite};
+use fastspsd::coordinator::oracle::{DenseOracle, KernelOracle};
+use fastspsd::coordinator::engine::rbf_cross_cpu;
+use fastspsd::data::{make_blobs, sigma};
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::util::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("Table 3: U-matrix computation");
+    suite.header();
+    for &n in &[512usize, 1024, 2048] {
+        let ds = make_blobs("bench", n, 16, 8, 2.0, 1);
+        let sig = sigma::calibrate_sigma(&ds.x, 0.9, 400, 1);
+        let k = rbf_cross_cpu(&ds.x, &ds.x, sigma::gamma_of_sigma(sig));
+        let oracle = DenseOracle::new(k);
+        let c = (n / 100).max(8);
+        let s = 8 * c;
+        let mut rng = Rng::new(2);
+        let p = spsd::uniform_p(n, c, &mut rng);
+
+        suite.bench(&format!("nystrom/n={n}/c={c}"), || {
+            black_box(spsd::nystrom(&oracle, &p));
+        });
+        suite.bench(&format!("fast/n={n}/c={c}/s={s}"), || {
+            let mut r = Rng::new(3);
+            black_box(spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut r));
+        });
+        suite.bench(&format!("prototype/n={n}/c={c}"), || {
+            black_box(spsd::prototype(&oracle, &p));
+        });
+        // entries accounting (printed once per n)
+        oracle.reset_entries();
+        let _ = spsd::nystrom(&oracle, &p);
+        let e_ny = oracle.entries_observed();
+        oracle.reset_entries();
+        let mut r = Rng::new(3);
+        let _ = spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut r);
+        let e_fast = oracle.entries_observed();
+        oracle.reset_entries();
+        let _ = spsd::prototype(&oracle, &p);
+        let e_proto = oracle.entries_observed();
+        println!(
+            "  #entries n={n}: nystrom={e_ny} (nc={}), fast={e_fast} (nc+(s-c)^2≈{}), prototype={e_proto} (n^2+nc={})",
+            n * c,
+            n * c + (s - c) * (s - c),
+            n * n + n * c
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench: Table 4 — the five sketching families inside the fast model:
+//! time to form S^T C and S^T K S and solve for U^fast.
+
+use fastspsd::benchkit::{black_box, BenchSuite};
+use fastspsd::coordinator::engine::rbf_cross_cpu;
+use fastspsd::coordinator::oracle::DenseOracle;
+use fastspsd::data::{make_blobs, sigma};
+use fastspsd::sketch::SketchKind;
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::util::Rng;
+
+fn main() {
+    let n = 1024usize;
+    let ds = make_blobs("bench", n, 16, 8, 2.0, 1);
+    let sig = sigma::calibrate_sigma(&ds.x, 0.9, 400, 1);
+    let k = rbf_cross_cpu(&ds.x, &ds.x, sigma::gamma_of_sigma(sig));
+    let oracle = DenseOracle::new(k.clone());
+    let c = (n / 100).max(8);
+    let s = 8 * c;
+    let mut rng = Rng::new(2);
+    let p = spsd::uniform_p(n, c, &mut rng);
+
+    let mut suite = BenchSuite::new(&format!("Table 4: sketches in the fast model (n={n}, c={c}, s={s})"));
+    suite.header();
+    for kind in [
+        SketchKind::Uniform,
+        SketchKind::Leverage { scaled: false },
+        SketchKind::Leverage { scaled: true },
+        SketchKind::Gaussian,
+        SketchKind::Srht,
+        SketchKind::CountSketch,
+    ] {
+        let cfg = FastConfig { s, kind, force_p_in_s: kind.is_column_selection() };
+        let stats = suite.bench(kind.name(), || {
+            let mut r = Rng::new(3);
+            black_box(spsd::fast(&oracle, &p, cfg, &mut r));
+        });
+        let _ = stats;
+        // quality alongside cost
+        let mut r = Rng::new(3);
+        let a = spsd::fast(&oracle, &p, cfg, &mut r);
+        let err = k.sub(&a.materialize()).fro_norm_sq() / k.fro_norm_sq();
+        println!("    rel_err[{}] = {err:.4e}", kind.name());
+    }
+    println!(
+        "  expected shape: column selection ≈ fastest (sees nc+(s-c)^2 entries); projections pay nnz(K)·s"
+    );
+}

@@ -1,0 +1,46 @@
+//! Bench: Table 5 / §5.2 — CUR U-matrix cost: optimal U* = C†AR† vs the
+//! fast Ũ of eq. (9) at several sketch sizes.
+
+use fastspsd::benchkit::{black_box, BenchSuite};
+use fastspsd::cur::{self, FastCurConfig};
+use fastspsd::data::image;
+use fastspsd::util::Rng;
+
+fn main() {
+    let (m, n) = (1536usize, 1024usize);
+    let a = image::synth_image(m, n, 0);
+    let (c, r) = (50usize, 50usize);
+    let mut rng = Rng::new(1);
+    let cols = cur::select_uniform(n, c, &mut rng);
+    let rows = cur::select_uniform(m, r, &mut rng);
+
+    let mut suite = BenchSuite::new(&format!("Table 5: CUR U computation ({m}x{n}, c=r={c})"));
+    suite.header();
+    suite.bench("optimal  U=C†AR†", || {
+        black_box(cur::cur_optimal(&a, &cols, &rows));
+    });
+    suite.bench("drineas08 U=(PᵀAP)†", || {
+        black_box(cur::cur_drineas08(&a, &cols, &rows));
+    });
+    for f in [2usize, 4, 8] {
+        suite.bench(&format!("fast uniform s={f}x"), || {
+            let mut rr = Rng::new(2);
+            black_box(cur::cur_fast(&a, &cols, &rows, FastCurConfig::uniform(f * r, f * c), &mut rr));
+        });
+    }
+    suite.bench("fast leverage s=4x", || {
+        let mut rr = Rng::new(3);
+        black_box(cur::cur_fast(&a, &cols, &rows, FastCurConfig::leverage(4 * r, 4 * c), &mut rr));
+    });
+    // quality check rows
+    for (label, dec) in [
+        ("optimal", cur::cur_optimal(&a, &cols, &rows)),
+        ("drineas08", cur::cur_drineas08(&a, &cols, &rows)),
+        ("fast4x", {
+            let mut rr = Rng::new(2);
+            cur::cur_fast(&a, &cols, &rows, FastCurConfig::uniform(4 * r, 4 * c), &mut rr)
+        }),
+    ] {
+        println!("    rel_err[{label}] = {:.4e} (entries for U: {})", dec.rel_fro_error(&a), dec.entries_for_u);
+    }
+}

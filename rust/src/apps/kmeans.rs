@@ -1,0 +1,125 @@
+//! Lloyd's k-means with k-means++ initialization (used by the spectral
+//! clustering pipeline of §6.4).
+
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// Cluster rows of `points` into `k` groups; returns per-row assignments.
+pub fn kmeans(points: &Matrix, k: usize, max_iters: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = points.rows();
+    let d = points.cols();
+    assert!(k >= 1 && n >= 1);
+    let k = k.min(n);
+
+    // --- k-means++ seeding
+    let mut centers = Matrix::zeros(k, d);
+    let first = rng.usize_below(n);
+    centers.row_mut(0).copy_from_slice(points.row(first));
+    let mut dist2 = vec![f64::INFINITY; n];
+    for c in 1..k {
+        for i in 0..n {
+            let dd = sqdist(points.row(i), centers.row(c - 1));
+            if dd < dist2[i] {
+                dist2[i] = dd;
+            }
+        }
+        let next = rng.weighted_index(&dist2);
+        centers.row_mut(c).copy_from_slice(points.row(next));
+    }
+
+    // --- Lloyd iterations
+    let mut assign = vec![0usize; n];
+    for _ in 0..max_iters {
+        let mut changed = false;
+        for i in 0..n {
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for c in 0..k {
+                let dd = sqdist(points.row(i), centers.row(c));
+                if dd < bd {
+                    bd = dd;
+                    best = c;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+        // recompute centers; re-seed empty clusters at the farthest point
+        let mut counts = vec![0usize; k];
+        let mut sums = Matrix::zeros(k, d);
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            let row = points.row(i);
+            let dst = sums.row_mut(assign[i]);
+            for (s, &v) in dst.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        sqdist(points.row(a), centers.row(assign[a]))
+                            .partial_cmp(&sqdist(points.row(b), centers.row(assign[b])))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centers.row_mut(c).copy_from_slice(points.row(far));
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                for j in 0..d {
+                    centers[(c, j)] = sums[(c, j)] * inv;
+                }
+            }
+        }
+    }
+    assign
+}
+
+#[inline]
+fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_obvious_blobs() {
+        let mut rng = Rng::new(0);
+        let mut pts = Matrix::zeros(60, 2);
+        for i in 0..60 {
+            let c = i % 3;
+            pts[(i, 0)] = c as f64 * 20.0 + rng.gaussian() * 0.5;
+            pts[(i, 1)] = rng.gaussian() * 0.5;
+        }
+        let assign = kmeans(&pts, 3, 50, &mut rng);
+        // all points of the same true blob share a label
+        for blob in 0..3 {
+            let labels: Vec<usize> = (0..60).filter(|i| i % 3 == blob).map(|i| assign[i]).collect();
+            assert!(labels.windows(2).all(|w| w[0] == w[1]), "blob {blob} split");
+        }
+    }
+
+    #[test]
+    fn k_one_assigns_all_zero() {
+        let mut rng = Rng::new(1);
+        let pts = Matrix::randn(10, 3, &mut rng);
+        assert!(kmeans(&pts, 1, 10, &mut rng).iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::new(2);
+        let pts = Matrix::randn(3, 2, &mut rng);
+        let a = kmeans(&pts, 10, 5, &mut rng);
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|&c| c < 3));
+    }
+}

@@ -1,0 +1,99 @@
+//! K-nearest-neighbor classifier (the paper's §6.3.2 downstream task,
+//! matching MATLAB's `knnclassify` with 10 neighbors).
+
+use crate::linalg::Matrix;
+use crate::pool::parallel_for;
+use std::sync::Mutex;
+
+/// Classify each row of `test` by majority vote among its `k` nearest
+/// training rows (Euclidean distance in feature space). Ties break toward
+/// the nearer neighbor's class.
+pub fn knn_classify(train: &Matrix, labels: &[usize], test: &Matrix, k: usize) -> Vec<usize> {
+    assert_eq!(train.rows(), labels.len());
+    assert_eq!(train.cols(), test.cols());
+    assert!(k >= 1);
+    let n_test = test.rows();
+    let out = Mutex::new(vec![0usize; n_test]);
+    let nclasses = labels.iter().copied().max().map(|m| m + 1).unwrap_or(1);
+    parallel_for(n_test, 16, |t| {
+        let q = test.row(t);
+        // top-k via simple selection over a (dist, label) scan
+        let mut best: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+        for i in 0..train.rows() {
+            let d: f64 = train
+                .row(i)
+                .iter()
+                .zip(q)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if best.len() < k || d < best.last().unwrap().0 {
+                let pos = best.partition_point(|&(bd, _)| bd < d);
+                best.insert(pos, (d, labels[i]));
+                if best.len() > k {
+                    best.pop();
+                }
+            }
+        }
+        // majority vote, ties -> smaller summed distance
+        let mut votes = vec![0usize; nclasses];
+        let mut dist_sum = vec![0.0f64; nclasses];
+        for &(d, l) in &best {
+            votes[l] += 1;
+            dist_sum[l] += d;
+        }
+        let mut win = 0usize;
+        for c in 1..nclasses {
+            if votes[c] > votes[win] || (votes[c] == votes[win] && dist_sum[c] < dist_sum[win]) {
+                win = c;
+            }
+        }
+        out.lock().unwrap()[t] = win;
+    });
+    out.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn separable_blobs_classified_perfectly() {
+        let mut rng = Rng::new(0);
+        let mut train = Matrix::zeros(40, 2);
+        let mut labels = Vec::new();
+        for i in 0..40 {
+            let c = i % 2;
+            train[(i, 0)] = c as f64 * 10.0 + rng.gaussian() * 0.3;
+            train[(i, 1)] = rng.gaussian() * 0.3;
+            labels.push(c);
+        }
+        let mut test = Matrix::zeros(10, 2);
+        let mut expect = Vec::new();
+        for i in 0..10 {
+            let c = i % 2;
+            test[(i, 0)] = c as f64 * 10.0 + rng.gaussian() * 0.3;
+            test[(i, 1)] = rng.gaussian() * 0.3;
+            expect.push(c);
+        }
+        let pred = knn_classify(&train, &labels, &test, 5);
+        assert_eq!(pred, expect);
+    }
+
+    #[test]
+    fn k1_nearest_neighbor() {
+        let train = Matrix::from_vec(3, 1, vec![0.0, 5.0, 10.0]);
+        let labels = vec![0, 1, 2];
+        let test = Matrix::from_vec(2, 1, vec![4.4, 9.0]);
+        assert_eq!(knn_classify(&train, &labels, &test, 1), vec![1, 2]);
+    }
+
+    #[test]
+    fn tie_breaks_toward_nearer_class() {
+        // k=2: one neighbor of each class, the closer one must win.
+        let train = Matrix::from_vec(2, 1, vec![0.0, 3.0]);
+        let labels = vec![0, 1];
+        let test = Matrix::from_vec(1, 1, vec![1.0]);
+        assert_eq!(knn_classify(&train, &labels, &test, 2), vec![0]);
+    }
+}

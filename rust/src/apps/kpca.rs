@@ -1,0 +1,137 @@
+//! Approximate kernel PCA (paper §6.3).
+//!
+//! Training: top-k eigenpairs of `C U C^T ≈ K` (via Lemma 10, O(n c^2)).
+//! Feature extraction follows the paper: train features are columns of
+//! `Λ^{1/2} V^T`; a test point's features are `Λ^{-1/2} V^T k(x)`.
+
+use crate::linalg::{solve, Matrix};
+use crate::spsd::SpsdApprox;
+
+/// Top-k eigenpairs of (an approximation of) the kernel matrix.
+#[derive(Debug, Clone)]
+pub struct KpcaModel {
+    /// Top-k eigenvalues, descending (clamped to >= 0).
+    pub eigvals: Vec<f64>,
+    /// n x k eigenvectors.
+    pub v: Matrix,
+}
+
+/// KPCA from a low-rank approximation (the three models of the paper).
+pub fn kpca_from_approx(approx: &SpsdApprox, k: usize) -> KpcaModel {
+    let (mut vals, vecs) = solve::eig_k_of_cuc(&approx.c, &approx.u, k);
+    for v in &mut vals {
+        *v = v.max(0.0);
+    }
+    KpcaModel { eigvals: vals, v: vecs }
+}
+
+/// Exact KPCA baseline: top-k eigenpairs of the dense K via Lanczos
+/// (O(n²k) — the "expensive exact" the paper times against, computed the
+/// way a practitioner would).
+pub fn exact_kpca(kmat: &Matrix, k: usize) -> KpcaModel {
+    let (vals, vecs) = crate::linalg::lanczos_top_k(kmat, k, 0xE1A);
+    KpcaModel { eigvals: vals.iter().map(|&v| v.max(0.0)).collect(), v: vecs }
+}
+
+impl KpcaModel {
+    pub fn k(&self) -> usize {
+        self.eigvals.len()
+    }
+
+    /// Train features, one row per training point: `(Λ^{1/2} V^T)^T = V Λ^{1/2}`.
+    pub fn train_features(&self) -> Matrix {
+        Matrix::from_fn(self.v.rows(), self.k(), |i, j| {
+            self.v[(i, j)] * self.eigvals[j].max(0.0).sqrt()
+        })
+    }
+
+    /// Test features from cross-kernel columns `kx` (n_train x n_test):
+    /// row t of the result is `Λ^{-1/2} V^T k(x_t)`.
+    pub fn test_features(&self, kx: &Matrix) -> Matrix {
+        let vtk = self.v.tr_matmul(kx); // k x n_test
+        let mut out = vtk.transpose(); // n_test x k
+        for j in 0..self.k() {
+            let l = self.eigvals[j];
+            let inv = if l > 1e-12 { 1.0 / l.sqrt() } else { 0.0 };
+            for i in 0..out.rows() {
+                out[(i, j)] *= inv;
+            }
+        }
+        out
+    }
+}
+
+/// Misalignment (paper eq. 10): `(1/k) ‖U_k - Ṽ Ṽ^T U_k‖_F^2 ∈ [0, 1]`,
+/// where `U_k` are the exact top-k eigenvectors and `Ṽ` the approximate
+/// ones.
+pub fn misalignment(exact: &Matrix, approx: &Matrix) -> f64 {
+    assert_eq!(exact.rows(), approx.rows());
+    let k = exact.cols();
+    let vtu = approx.tr_matmul(exact); // k̃ x k
+    let proj = approx.matmul(&vtu); // Ṽ Ṽ^T U_k
+    exact.sub(&proj).fro_norm_sq() / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::oracle::DenseOracle;
+    use crate::spsd::{fast, uniform_p, FastConfig};
+    use crate::testkit::gen;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_kpca_matches_eigh() {
+        let mut rng = Rng::new(0);
+        let k = gen::spsd(&mut rng, 20, 20);
+        let m = exact_kpca(&k, 4);
+        assert_eq!(m.k(), 4);
+        // eigen equation
+        for j in 0..4 {
+            let v = m.v.col(j);
+            let kv = k.matvec(&v);
+            for i in 0..20 {
+                assert!((kv[i] - m.eigvals[j] * v[i]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn misalignment_zero_for_self_and_one_for_orthogonal() {
+        let mut rng = Rng::new(1);
+        let q = crate::linalg::qr::qr_thin(&Matrix::randn(20, 6, &mut rng)).q;
+        let u = q.select_cols(&[0, 1, 2]);
+        let v_same = q.select_cols(&[0, 1, 2]);
+        assert!(misalignment(&u, &v_same) < 1e-12);
+        let v_orth = q.select_cols(&[3, 4, 5]);
+        assert!((misalignment(&u, &v_orth) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn approx_kpca_matches_exact_on_low_rank() {
+        let mut rng = Rng::new(2);
+        let kmat = gen::spsd(&mut rng, 40, 5);
+        let o = DenseOracle::new(kmat.clone());
+        let p = uniform_p(40, 10, &mut rng);
+        let a = fast(&o, &p, FastConfig::uniform(20), &mut rng);
+        let approx = kpca_from_approx(&a, 3);
+        let exact = exact_kpca(&kmat, 3);
+        assert!(misalignment(&exact.v, &approx.v) < 1e-8);
+        for j in 0..3 {
+            assert!((approx.eigvals[j] - exact.eigvals[j]).abs() < 1e-6 * exact.eigvals[0]);
+        }
+    }
+
+    #[test]
+    fn feature_shapes_and_test_consistency() {
+        let mut rng = Rng::new(3);
+        let kmat = gen::spsd(&mut rng, 15, 15);
+        let m = exact_kpca(&kmat, 4);
+        let f = m.train_features();
+        assert_eq!((f.rows(), f.cols()), (15, 4));
+        // Using K's own columns as "test" kernel vectors reproduces train
+        // features: Λ^{-1/2} V^T K = Λ^{-1/2} Λ V^T = Λ^{1/2} V^T.
+        let tf = m.test_features(&kmat);
+        assert!(tf.max_abs_diff(&f) < 1e-7);
+    }
+}

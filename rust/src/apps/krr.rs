@@ -1,0 +1,147 @@
+//! Kernel ridge regression — the paper's "matrix inversion" motivation
+//! (§1, Appendix A Lemma 11): Gaussian-process-style regression requires
+//! solving `(K + α I) w = y`, O(n³) exactly. With `K ≈ C U C^T` the
+//! Woodbury path solves it in O(n c²), and prediction on a new point is
+//! `f(x) = k(x)^T w`.
+
+use crate::coordinator::oracle::RbfOracle;
+use crate::linalg::Matrix;
+use crate::spsd::SpsdApprox;
+
+/// A fitted approximate-KRR model.
+#[derive(Debug, Clone)]
+pub struct KrrModel {
+    /// Dual weights w (n_train).
+    pub weights: Vec<f64>,
+    pub alpha: f64,
+}
+
+/// Fit with an SPSD approximation of the train kernel (O(n c²)).
+pub fn fit_approx(approx: &SpsdApprox, alpha: f64, y: &[f64]) -> KrrModel {
+    KrrModel { weights: approx.solve_regularized(alpha, y), alpha }
+}
+
+/// Fit exactly against the dense kernel (O(n³) baseline).
+pub fn fit_exact(kmat: &Matrix, alpha: f64, y: &[f64]) -> KrrModel {
+    let n = kmat.rows();
+    let mut kk = kmat.clone();
+    for i in 0..n {
+        kk[(i, i)] += alpha;
+    }
+    let w = crate::linalg::solve::lu_solve(&kk, y).expect("K + alpha I is SPD");
+    KrrModel { weights: w, alpha }
+}
+
+impl KrrModel {
+    /// Predict for test points given the cross kernel `kx` (n_train x n_test).
+    pub fn predict(&self, kx: &Matrix) -> Vec<f64> {
+        kx.tr_matvec(&self.weights)
+    }
+}
+
+/// Convenience: fit + predict through an RBF oracle.
+pub fn predict_with_oracle(
+    model: &KrrModel,
+    oracle: &RbfOracle,
+    test_x: &Matrix,
+) -> Vec<f64> {
+    let kx = oracle.cross(test_x);
+    model.predict(&kx)
+}
+
+/// Mean squared error.
+pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::oracle::KernelOracle;
+    use crate::data::{make_blobs, sigma};
+    use crate::spsd::{self, FastConfig};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    /// Smooth target over blob data.
+    fn regression_problem(n: usize, seed: u64) -> (Matrix, Vec<f64>, Matrix, Vec<f64>, f64) {
+        let ds = make_blobs("krr", 2 * n, 4, 3, 2.0, seed);
+        let f = |row: &[f64]| row.iter().map(|x| (x * 0.7).sin()).sum::<f64>();
+        let xtr = ds.x.block(0, n, 0, 4);
+        let xte = ds.x.block(n, 2 * n, 0, 4);
+        let ytr: Vec<f64> = (0..n).map(|i| f(xtr.row(i))).collect();
+        let yte: Vec<f64> = (0..n).map(|i| f(xte.row(i))).collect();
+        let sig = sigma::calibrate_sigma(&xtr, 0.95, 300, seed);
+        (xtr, ytr, xte, yte, sigma::gamma_of_sigma(sig))
+    }
+
+    #[test]
+    fn approx_krr_tracks_exact_krr() {
+        let (xtr, ytr, xte, yte, gamma) = regression_problem(250, 0);
+        let oracle = RbfOracle::cpu(Arc::new(xtr.clone()), gamma);
+        let kfull = oracle.full();
+        let alpha = 0.1;
+        let exact = fit_exact(&kfull, alpha, &ytr);
+        let kx = oracle.cross(&xte);
+        let mse_exact = mse(&exact.predict(&kx), &yte);
+
+        let mut rng = Rng::new(1);
+        let p = spsd::uniform_p(250, 40, &mut rng);
+        let approx = spsd::fast(&oracle, &p, FastConfig::uniform(160), &mut rng);
+        let fast_model = fit_approx(&approx, alpha, &ytr);
+        let mse_fast = mse(&fast_model.predict(&kx), &yte);
+        // exact should be good, approximate within a modest factor
+        assert!(mse_exact < 0.1, "exact mse {mse_exact}");
+        assert!(
+            mse_fast < mse_exact * 4.0 + 0.05,
+            "fast mse {mse_fast} vs exact {mse_exact}"
+        );
+    }
+
+    #[test]
+    fn fast_beats_nystrom_krr_on_average() {
+        let (xtr, ytr, xte, yte, gamma) = regression_problem(200, 2);
+        let oracle = RbfOracle::cpu(Arc::new(xtr.clone()), gamma);
+        let kx = oracle.cross(&xte);
+        let alpha = 0.1;
+        let mut mse_ny = 0.0;
+        let mut mse_fast = 0.0;
+        for t in 0..5u64 {
+            let mut rng = Rng::new(10 + t);
+            let p = spsd::uniform_p(200, 16, &mut rng);
+            let ny = spsd::nystrom(&oracle, &p);
+            mse_ny += mse(&fit_approx(&ny, alpha, &ytr).predict(&kx), &yte);
+            let fa = spsd::fast(&oracle, &p, FastConfig::uniform(96), &mut rng);
+            mse_fast += mse(&fit_approx(&fa, alpha, &ytr).predict(&kx), &yte);
+        }
+        assert!(
+            mse_fast <= mse_ny * 1.05,
+            "fast {mse_fast} should be at least as good as nystrom {mse_ny}"
+        );
+    }
+
+    #[test]
+    fn exact_fit_interpolates_with_tiny_alpha() {
+        let (xtr, ytr, _xte, _yte, gamma) = regression_problem(60, 3);
+        let oracle = RbfOracle::cpu(Arc::new(xtr.clone()), gamma);
+        let kfull = oracle.full();
+        let model = fit_exact(&kfull, 1e-8, &ytr);
+        let pred = model.predict(&kfull);
+        let train_mse = mse(&pred, &ytr);
+        assert!(train_mse < 1e-6, "train mse {train_mse}");
+    }
+
+    #[test]
+    fn mse_edge_cases() {
+        assert_eq!(mse(&[], &[]), 0.0);
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Clustering / classification quality metrics.
+
+/// Normalized mutual information between two labelings, in [0, 1].
+/// NMI = I(A; B) / sqrt(H(A) H(B)); 1 for identical partitions (up to
+/// relabeling), ~0 for independent ones.
+pub fn nmi(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let ka = a.iter().copied().max().unwrap() + 1;
+    let kb = b.iter().copied().max().unwrap() + 1;
+    let mut joint = vec![vec![0usize; kb]; ka];
+    let mut ca = vec![0usize; ka];
+    let mut cb = vec![0usize; kb];
+    for i in 0..n {
+        joint[a[i]][b[i]] += 1;
+        ca[a[i]] += 1;
+        cb[b[i]] += 1;
+    }
+    let nf = n as f64;
+    let mut mi = 0.0;
+    for i in 0..ka {
+        for j in 0..kb {
+            let nij = joint[i][j] as f64;
+            if nij > 0.0 {
+                mi += nij / nf * ((nij * nf) / (ca[i] as f64 * cb[j] as f64)).ln();
+            }
+        }
+    }
+    let ha: f64 = ca
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / nf;
+            -p * p.ln()
+        })
+        .sum();
+    let hb: f64 = cb
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / nf;
+            -p * p.ln()
+        })
+        .sum();
+    if ha <= 0.0 || hb <= 0.0 {
+        // one side is a single cluster: NMI is 1 iff both are
+        return if ha <= 0.0 && hb <= 0.0 { 1.0 } else { 0.0 };
+    }
+    (mi / (ha * hb).sqrt()).clamp(0.0, 1.0)
+}
+
+/// Fraction of mismatched labels.
+pub fn error_rate(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).filter(|(p, t)| p != t).count() as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn nmi_identical_is_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        // invariant to relabeling
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert!((nmi(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_independent_is_small() {
+        let mut rng = Rng::new(0);
+        let a: Vec<usize> = (0..2000).map(|_| rng.usize_below(4)).collect();
+        let b: Vec<usize> = (0..2000).map(|_| rng.usize_below(4)).collect();
+        assert!(nmi(&a, &b) < 0.05);
+    }
+
+    #[test]
+    fn nmi_single_cluster_edge() {
+        let a = vec![0, 0, 0];
+        let b = vec![0, 1, 2];
+        assert_eq!(nmi(&a, &a), 1.0);
+        assert_eq!(nmi(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn error_rate_counts() {
+        assert_eq!(error_rate(&[0, 1, 1], &[0, 1, 0]), 1.0 / 3.0);
+        assert_eq!(error_rate(&[], &[]), 0.0);
+    }
+}

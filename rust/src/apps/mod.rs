@@ -1,0 +1,16 @@
+//! Evaluation workloads from the paper's §6: approximate KPCA,
+//! classification via KPCA features + KNN, and spectral clustering, plus
+//! their quality metrics (misalignment, classification error, NMI).
+
+pub mod kmeans;
+pub mod knn;
+pub mod kpca;
+pub mod krr;
+pub mod metrics;
+pub mod spectral;
+
+pub use kmeans::kmeans;
+pub use knn::knn_classify;
+pub use kpca::{exact_kpca, kpca_from_approx, misalignment, KpcaModel};
+pub use metrics::{error_rate, nmi};
+pub use spectral::{spectral_cluster_exact, spectral_cluster_from_approx};

@@ -1,0 +1,112 @@
+//! Approximate spectral clustering (paper §6.4, following Fowlkes et al.).
+//!
+//! With `C U C^T ≈ K` as the weight matrix: degrees `d = C U (C^T 1)`,
+//! normalized affinity `D^{-1/2} C U C^T D^{-1/2}`, whose top-k
+//! eigenvectors come from the Lemma-10 trick on `(D^{-1/2} C, U)` in
+//! O(n c^2). Rows are normalized and fed to k-means.
+
+use super::kmeans::kmeans;
+use crate::linalg::{solve, Matrix};
+use crate::spsd::SpsdApprox;
+use crate::util::Rng;
+
+/// Spectral clustering from a low-rank kernel approximation.
+pub fn spectral_cluster_from_approx(approx: &SpsdApprox, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = approx.c.rows();
+    // degrees d = C (U (C^T 1))
+    let ones = vec![1.0; n];
+    let ct1 = approx.c.tr_matvec(&ones);
+    let uct1 = approx.u.matvec(&ct1);
+    let d = approx.c.matvec(&uct1);
+    let dinv_sqrt: Vec<f64> = d
+        .iter()
+        .map(|&x| if x > 1e-12 { 1.0 / x.sqrt() } else { 0.0 })
+        .collect();
+    // C' = D^{-1/2} C; top-k eigenvectors of C' U C'^T
+    let mut cprime = approx.c.clone();
+    for i in 0..n {
+        let s = dinv_sqrt[i];
+        for v in cprime.row_mut(i) {
+            *v *= s;
+        }
+    }
+    let (_vals, vecs) = solve::eig_k_of_cuc(&cprime, &approx.u, k);
+    cluster_rows(&vecs, k, rng)
+}
+
+/// Exact spectral clustering baseline (top-k of the dense normalized
+/// affinity via Lanczos).
+pub fn spectral_cluster_exact(kmat: &Matrix, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = kmat.rows();
+    let ones = vec![1.0; n];
+    let d = kmat.matvec(&ones);
+    let mut norm = kmat.clone();
+    for i in 0..n {
+        let si = if d[i] > 1e-12 { 1.0 / d[i].sqrt() } else { 0.0 };
+        for j in 0..n {
+            let sj = if d[j] > 1e-12 { 1.0 / d[j].sqrt() } else { 0.0 };
+            norm[(i, j)] *= si * sj;
+        }
+    }
+    let (_vals, vecs) = crate::linalg::lanczos_top_k(&norm, k, 0x5BEC);
+    cluster_rows(&vecs, k, rng)
+}
+
+/// Row-normalize the spectral embedding and run k-means.
+fn cluster_rows(vecs: &Matrix, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut emb = vecs.clone();
+    for i in 0..emb.rows() {
+        let norm: f64 = emb.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for v in emb.row_mut(i) {
+                *v /= norm;
+            }
+        }
+    }
+    kmeans(&emb, k, 50, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::metrics::nmi;
+    use crate::coordinator::engine::rbf_cross_cpu;
+    use crate::coordinator::oracle::DenseOracle;
+    use crate::spsd::{fast, uniform_p, FastConfig};
+
+    /// Three well-separated 2-d blobs + their RBF kernel.
+    fn blobs_kernel(n_per: usize, seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let n = 3 * n_per;
+        let mut x = Matrix::zeros(n, 2);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i / n_per;
+            let (cx, cy) = [(0.0, 0.0), (8.0, 0.0), (0.0, 8.0)][c];
+            x[(i, 0)] = cx + rng.gaussian() * 0.5;
+            x[(i, 1)] = cy + rng.gaussian() * 0.5;
+            labels.push(c);
+        }
+        let k = rbf_cross_cpu(&x, &x, 0.5);
+        (k, labels)
+    }
+
+    #[test]
+    fn exact_spectral_recovers_blobs() {
+        let (k, labels) = blobs_kernel(20, 0);
+        let mut rng = Rng::new(1);
+        let pred = spectral_cluster_exact(&k, 3, &mut rng);
+        assert!(nmi(&pred, &labels) > 0.95, "nmi={}", nmi(&pred, &labels));
+    }
+
+    #[test]
+    fn approx_spectral_recovers_blobs() {
+        let (k, labels) = blobs_kernel(20, 2);
+        let o = DenseOracle::new(k);
+        let mut rng = Rng::new(3);
+        let p = uniform_p(60, 12, &mut rng);
+        let a = fast(&o, &p, FastConfig::uniform(30), &mut rng);
+        let pred = spectral_cluster_from_approx(&a, 3, &mut rng);
+        assert!(nmi(&pred, &labels) > 0.9, "nmi={}", nmi(&pred, &labels));
+    }
+}

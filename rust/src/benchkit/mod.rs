@@ -1,0 +1,160 @@
+//! Criterion-lite benchmark harness substrate (no `criterion` in the image).
+//!
+//! Each `cargo bench` target (`harness = false`) builds a [`BenchSuite`],
+//! registers closures, and gets warmup + adaptive iteration counts +
+//! mean/p50/p95 reporting. Results can also be captured programmatically
+//! for the table-generation benches.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's measured statistics.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Measure one closure: warm up for `warmup`, then run until `budget`
+/// elapses (at least `min_iters` iterations).
+pub fn measure(name: &str, warmup: Duration, budget: Duration, min_iters: usize, mut f: impl FnMut()) -> Stats {
+    // Warmup.
+    let w = Instant::now();
+    while w.elapsed() < warmup {
+        f();
+    }
+    // Timed runs.
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 10_000) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let n = samples.len();
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        min: samples[0],
+    }
+}
+
+/// A named collection of benchmarks with uniform budgets.
+pub struct BenchSuite {
+    pub title: String,
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub results: Vec<Stats>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        BenchSuite {
+            title: title.to_string(),
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(1),
+            min_iters: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick preset for expensive end-to-end benches.
+    pub fn slow(title: &str) -> Self {
+        BenchSuite {
+            warmup: Duration::from_millis(0),
+            budget: Duration::from_millis(1),
+            min_iters: 1,
+            ..BenchSuite::new(title)
+        }
+    }
+
+    pub fn bench(&mut self, name: &str, f: impl FnMut()) -> &Stats {
+        let stats = measure(name, self.warmup, self.budget, self.min_iters, f);
+        println!(
+            "  {:<44} {:>12} (p50 {:>12}, p95 {:>12}, {} iters)",
+            stats.name,
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p95),
+            stats.iters
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(&self) {
+        println!("\n== {} ==", self.title);
+    }
+}
+
+/// Keep a value alive and opaque to the optimizer.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let s = measure(
+            "noop",
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            4,
+            || {
+                black_box(3 + 4);
+            },
+        );
+        assert!(s.iters >= 4);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn suite_records_results() {
+        let mut suite = BenchSuite::slow("t");
+        suite.bench("a", || {
+            black_box(1);
+        });
+        suite.bench("b", || {
+            black_box(2);
+        });
+        assert_eq!(suite.results.len(), 2);
+        assert_eq!(suite.results[0].name, "a");
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal CLI argument parser substrate (no `clap` in the image).
+//!
+//! Supports `command --flag value --switch positional` style invocations
+//! with typed getters, defaults, and a usage printer.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare
+/// `--switch` flags, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--cs 50,100,200`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad integer {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_opts_switches_positionals() {
+        // NB: a bare `--switch` must come after positionals (or last) —
+        // `--switch value` is indistinguishable from an option otherwise.
+        let a = parse("fig3 --n 2000 --eta=0.9 input.txt --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig3"));
+        assert_eq!(a.get_usize("n", 0), 2000);
+        assert_eq!(a.get_f64("eta", 0.0), 0.9);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("c", 7), 7);
+        assert_eq!(a.get_str("name", "x"), "x");
+        assert_eq!(a.get_usize_list("cs", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn int_lists() {
+        let a = parse("x --cs 50,100,200");
+        assert_eq!(a.get_usize_list("cs", &[]), vec![50, 100, 200]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("x --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        parse("x --n abc").get_usize("n", 0);
+    }
+}

@@ -1,0 +1,430 @@
+//! Block scheduler: map arbitrary-shape kernel/matmul requests onto the
+//! fixed-shape AOT artifacts.
+//!
+//! The AOT computations have frozen shapes (256x256 output tiles, feature
+//! buckets {16, 128, 1024}); the engine
+//!   1. picks the smallest feature bucket >= d and zero-pads features
+//!      (RBF distances and matmul contractions are invariant to zero
+//!      columns),
+//!   2. zero-pads rows up to the tile size (padded rows produce garbage
+//!      kernel values that are cropped at assembly),
+//!   3. batches all tiles of a request into one runtime-thread submission
+//!      (the dynamic batching that keeps channel overhead off the hot
+//!      path), and
+//!   4. assembles the cropped tiles into the output matrix.
+//!
+//! Small requests fall back to the pure-rust path: padding a 20x20 block to
+//! 256x256 would waste 99% of the FLOPs. The crossover is tunable and
+//! benchmarked in `hotpath` (EXPERIMENTS.md §Perf).
+
+use crate::linalg::{gemm, Matrix};
+use crate::runtime::{ExecRequest, RuntimeHandle};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Output tile edge of the AOT artifacts.
+pub const TILE: usize = 256;
+
+/// Minimum fraction of a tile that must be useful before PJRT is preferred
+/// over the pure-rust fallback for that request.
+const MIN_FILL: f64 = 0.25;
+
+/// Executes kernel blocks either through PJRT artifacts or pure rust.
+pub struct KernelEngine {
+    runtime: Option<RuntimeHandle>,
+    /// (d_bucket, artifact name), ascending.
+    rbf_buckets: Vec<(usize, String)>,
+    /// (d_bucket, artifact name) for the polynomial kernel, ascending.
+    poly_buckets: Vec<(usize, String)>,
+    /// (k_bucket, artifact name), ascending.
+    mm_buckets: Vec<(usize, String)>,
+    pub pjrt_tiles: AtomicU64,
+    pub cpu_blocks: AtomicU64,
+}
+
+impl KernelEngine {
+    /// PJRT-backed engine over a spawned runtime.
+    pub fn pjrt(runtime: RuntimeHandle) -> Self {
+        let rbf_buckets = runtime.manifest().rbf_buckets();
+        let mut poly_buckets: Vec<(usize, String)> = runtime
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "poly_block")
+            .map(|a| (a.inputs[3][1], a.name.clone()))
+            .collect();
+        poly_buckets.sort();
+        let mut mm_buckets: Vec<(usize, String)> = runtime
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "matmul")
+            .map(|a| (a.inputs[0][1], a.name.clone()))
+            .collect();
+        mm_buckets.sort();
+        KernelEngine {
+            runtime: Some(runtime),
+            rbf_buckets,
+            poly_buckets,
+            mm_buckets,
+            pjrt_tiles: AtomicU64::new(0),
+            cpu_blocks: AtomicU64::new(0),
+        }
+    }
+
+    /// Pure-rust engine (tests, artifact-less runs).
+    pub fn cpu() -> Self {
+        KernelEngine {
+            runtime: None,
+            rbf_buckets: Vec::new(),
+            poly_buckets: Vec::new(),
+            mm_buckets: Vec::new(),
+            pjrt_tiles: AtomicU64::new(0),
+            cpu_blocks: AtomicU64::new(0),
+        }
+    }
+
+    /// Try the default artifacts, fall back to CPU.
+    pub fn auto() -> Self {
+        match RuntimeHandle::spawn_default() {
+            Ok(rt) => Self::pjrt(rt),
+            Err(_) => Self::cpu(),
+        }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Cross RBF kernel: `out[i, j] = exp(-gamma ||x_i - y_j||^2)` for row
+    /// blocks `x` (m x d) and `y` (n x d).
+    pub fn rbf_cross(&self, x: &Matrix, y: &Matrix, gamma: f64) -> Matrix {
+        assert_eq!(x.cols(), y.cols(), "feature dims differ");
+        let (m, n, d) = (x.rows(), y.rows(), x.cols());
+        if m == 0 || n == 0 {
+            return Matrix::zeros(m, n);
+        }
+        if let Some(bucket) = self.pick_rbf_bucket(m, n, d) {
+            match self.rbf_cross_pjrt(x, y, gamma, bucket) {
+                Ok(out) => return out,
+                Err(e) => eprintln!("warn: PJRT rbf_cross failed ({e:#}); falling back to CPU"),
+            }
+        }
+        self.cpu_blocks.fetch_add(1, Ordering::Relaxed);
+        rbf_cross_cpu(x, y, gamma)
+    }
+
+    /// Cross polynomial kernel `(gamma <x_i, y_j> + coef0)^degree`.
+    pub fn poly_cross(&self, x: &Matrix, y: &Matrix, gamma: f64, coef0: f64, degree: f64) -> Matrix {
+        assert_eq!(x.cols(), y.cols(), "feature dims differ");
+        let (m, n, d) = (x.rows(), y.rows(), x.cols());
+        if m == 0 || n == 0 {
+            return Matrix::zeros(m, n);
+        }
+        if self.runtime.is_some() {
+            if let Some((db, name)) = self
+                .poly_buckets
+                .iter()
+                .find(|(db, _)| *db >= d)
+                .cloned()
+            {
+                let mp = m.div_ceil(TILE) * TILE;
+                let np = n.div_ceil(TILE) * TILE;
+                let fill = (m * n * d) as f64 / (mp * np * db) as f64;
+                if fill >= MIN_FILL {
+                    match self.poly_cross_pjrt(x, y, gamma, coef0, degree, (db, name)) {
+                        Ok(out) => return out,
+                        Err(e) => {
+                            eprintln!("warn: PJRT poly_cross failed ({e:#}); falling back to CPU")
+                        }
+                    }
+                }
+            }
+        }
+        self.cpu_blocks.fetch_add(1, Ordering::Relaxed);
+        poly_cross_cpu(x, y, gamma, coef0, degree)
+    }
+
+    fn poly_cross_pjrt(
+        &self,
+        x: &Matrix,
+        y: &Matrix,
+        gamma: f64,
+        coef0: f64,
+        degree: f64,
+        (db, artifact): (usize, String),
+    ) -> anyhow::Result<Matrix> {
+        let rt = self.runtime.as_ref().unwrap();
+        let (m, n) = (x.rows(), y.rows());
+        let xp = pad_rows_cols_f32(x, m.div_ceil(TILE) * TILE, db);
+        let yp = pad_rows_cols_f32(y, n.div_ceil(TILE) * TILE, db);
+        let tiles_m = m.div_ceil(TILE);
+        let tiles_n = n.div_ceil(TILE);
+        let scalars: Vec<(Vec<f32>, Vec<usize>)> = [gamma, coef0, degree]
+            .iter()
+            .map(|&v| (vec![v as f32], vec![1usize, 1]))
+            .collect();
+        let mut reqs = Vec::with_capacity(tiles_m * tiles_n);
+        for ti in 0..tiles_m {
+            for tj in 0..tiles_n {
+                let mut inputs = scalars.clone();
+                inputs.push((slice_tile(&xp, db, ti), vec![TILE, db]));
+                inputs.push((slice_tile(&yp, db, tj), vec![TILE, db]));
+                reqs.push(ExecRequest { artifact: artifact.clone(), inputs });
+            }
+        }
+        self.pjrt_tiles.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let results = rt.execute_batch(reqs)?;
+        Ok(assemble_tiles(&results, m, n, tiles_n))
+    }
+
+    /// Matmul through the AOT tiles when profitable, else rust gemm.
+    pub fn matmul(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols(), b.rows());
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        if m == 0 || n == 0 || k == 0 {
+            return Matrix::zeros(m, n);
+        }
+        if let Some(bucket) = self.pick_mm_bucket(m, n, k) {
+            match self.matmul_pjrt(a, b, bucket) {
+                Ok(out) => return out,
+                Err(e) => eprintln!("warn: PJRT matmul failed ({e:#}); falling back to CPU"),
+            }
+        }
+        self.cpu_blocks.fetch_add(1, Ordering::Relaxed);
+        gemm::gemm(a, b)
+    }
+
+    fn pick_rbf_bucket(&self, m: usize, n: usize, d: usize) -> Option<(usize, String)> {
+        let rt = self.runtime.as_ref()?;
+        let _ = rt;
+        let (db, name) = self.rbf_buckets.iter().find(|(db, _)| *db >= d)?;
+        // fill fraction of the padded problem
+        let mp = m.div_ceil(TILE) * TILE;
+        let np = n.div_ceil(TILE) * TILE;
+        let fill = (m * n * d) as f64 / (mp * np * *db) as f64;
+        if fill < MIN_FILL {
+            return None;
+        }
+        Some((*db, name.clone()))
+    }
+
+    fn pick_mm_bucket(&self, m: usize, n: usize, k: usize) -> Option<(usize, String)> {
+        self.runtime.as_ref()?;
+        let (kb, name) = self.mm_buckets.iter().find(|(kb, _)| *kb >= k)?;
+        let mp = m.div_ceil(TILE) * TILE;
+        let np = n.div_ceil(TILE) * TILE;
+        let fill = (m * n * k) as f64 / (mp * np * *kb) as f64;
+        if fill < MIN_FILL {
+            return None;
+        }
+        Some((*kb, name.clone()))
+    }
+
+    fn rbf_cross_pjrt(
+        &self,
+        x: &Matrix,
+        y: &Matrix,
+        gamma: f64,
+        (db, artifact): (usize, String),
+    ) -> anyhow::Result<Matrix> {
+        let rt = self.runtime.as_ref().unwrap();
+        let (m, n) = (x.rows(), y.rows());
+        let xp = pad_rows_cols_f32(x, m.div_ceil(TILE) * TILE, db);
+        let yp = pad_rows_cols_f32(y, n.div_ceil(TILE) * TILE, db);
+        let tiles_m = m.div_ceil(TILE);
+        let tiles_n = n.div_ceil(TILE);
+        let gamma_in = (vec![gamma as f32], vec![1usize, 1]);
+        let mut reqs = Vec::with_capacity(tiles_m * tiles_n);
+        for ti in 0..tiles_m {
+            for tj in 0..tiles_n {
+                reqs.push(ExecRequest {
+                    artifact: artifact.clone(),
+                    inputs: vec![
+                        gamma_in.clone(),
+                        (slice_tile(&xp, db, ti), vec![TILE, db]),
+                        (slice_tile(&yp, db, tj), vec![TILE, db]),
+                    ],
+                });
+            }
+        }
+        self.pjrt_tiles.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let results = rt.execute_batch(reqs)?;
+        Ok(assemble_tiles(&results, m, n, tiles_n))
+    }
+
+    fn matmul_pjrt(&self, a: &Matrix, b: &Matrix, (kb, artifact): (usize, String)) -> anyhow::Result<Matrix> {
+        let rt = self.runtime.as_ref().unwrap();
+        let (m, n) = (a.rows(), b.cols());
+        // a: pad rows to tiles, features (k) to bucket
+        let ap = pad_rows_cols_f32(a, m.div_ceil(TILE) * TILE, kb);
+        // b: pad k (rows) to bucket, n to tiles; store b^T-style tiles? The
+        // artifact takes b as (kb, TILE) column panels.
+        let bt = b.transpose(); // n x k, row = a column of b
+        let btp = pad_rows_cols_f32(&bt, n.div_ceil(TILE) * TILE, kb);
+        let tiles_m = m.div_ceil(TILE);
+        let tiles_n = n.div_ceil(TILE);
+        let mut reqs = Vec::with_capacity(tiles_m * tiles_n);
+        for ti in 0..tiles_m {
+            for tj in 0..tiles_n {
+                // column panel tj of b: (kb x TILE) — transpose back
+                let bpanel_t = slice_tile(&btp, kb, tj); // TILE x kb flat
+                let mut bpanel = vec![0f32; kb * TILE];
+                for r in 0..TILE {
+                    for c in 0..kb {
+                        bpanel[c * TILE + r] = bpanel_t[r * kb + c];
+                    }
+                }
+                reqs.push(ExecRequest {
+                    artifact: artifact.clone(),
+                    inputs: vec![
+                        (slice_tile(&ap, kb, ti), vec![TILE, kb]),
+                        (bpanel, vec![kb, TILE]),
+                    ],
+                });
+            }
+        }
+        self.pjrt_tiles.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let results = rt.execute_batch(reqs)?;
+        Ok(assemble_tiles(&results, m, n, tiles_n))
+    }
+}
+
+/// Pure-rust RBF cross block: `exp(-gamma (|x|^2 + |y|^2 - 2 x y^T))`.
+pub fn rbf_cross_cpu(x: &Matrix, y: &Matrix, gamma: f64) -> Matrix {
+    let xy = gemm::gemm_nt(x, y);
+    let xn: Vec<f64> = (0..x.rows()).map(|i| x.row(i).iter().map(|v| v * v).sum()).collect();
+    let yn: Vec<f64> = (0..y.rows()).map(|j| y.row(j).iter().map(|v| v * v).sum()).collect();
+    let mut out = xy;
+    for i in 0..out.rows() {
+        let xi = xn[i];
+        let row = out.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            let d2 = (xi + yn[j] - 2.0 * *v).max(0.0);
+            *v = (-gamma * d2).exp();
+        }
+    }
+    out
+}
+
+/// Pure-rust polynomial cross block.
+pub fn poly_cross_cpu(x: &Matrix, y: &Matrix, gamma: f64, coef0: f64, degree: f64) -> Matrix {
+    let mut out = gemm::gemm_nt(x, y);
+    for v in out.data_mut() {
+        *v = (gamma * *v + coef0).powf(degree);
+    }
+    out
+}
+
+/// Pad `m` to `rows_to x cols_to` with zeros and flatten to f32 row-major.
+fn pad_rows_cols_f32(m: &Matrix, rows_to: usize, cols_to: usize) -> Vec<f32> {
+    assert!(rows_to >= m.rows() && cols_to >= m.cols());
+    let mut out = vec![0f32; rows_to * cols_to];
+    for i in 0..m.rows() {
+        let src = m.row(i);
+        let dst = &mut out[i * cols_to..i * cols_to + m.cols()];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s as f32;
+        }
+    }
+    out
+}
+
+/// Rows `[t*TILE, (t+1)*TILE)` of a padded flat buffer with `width` columns.
+fn slice_tile(padded: &[f32], width: usize, t: usize) -> Vec<f32> {
+    padded[t * TILE * width..(t + 1) * TILE * width].to_vec()
+}
+
+/// Stitch TILE x TILE result tiles (row-major per tile, tiles in row-major
+/// tile order) into an m x n matrix, cropping padding.
+fn assemble_tiles(results: &[Vec<f32>], m: usize, n: usize, tiles_n: usize) -> Matrix {
+    let mut out = Matrix::zeros(m, n);
+    for (idx, tile) in results.iter().enumerate() {
+        let ti = idx / tiles_n;
+        let tj = idx % tiles_n;
+        let r0 = ti * TILE;
+        let c0 = tj * TILE;
+        for r in 0..TILE.min(m.saturating_sub(r0)) {
+            let dst = &mut out.row_mut(r0 + r)[c0..(c0 + TILE).min(n)];
+            let src = &tile[r * TILE..r * TILE + dst.len()];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = s as f64;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn cpu_rbf_matches_formula() {
+        let mut rng = Rng::new(0);
+        let x = Matrix::randn(7, 3, &mut rng);
+        let y = Matrix::randn(5, 3, &mut rng);
+        let k = rbf_cross_cpu(&x, &y, 0.9);
+        for i in 0..7 {
+            for j in 0..5 {
+                let d2: f64 = (0..3).map(|t| (x[(i, t)] - y[(j, t)]).powi(2)).sum();
+                assert!((k[(i, j)] - (-0.9 * d2).exp()).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_engine_never_uses_pjrt() {
+        let e = KernelEngine::cpu();
+        assert!(!e.is_pjrt());
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(10, 4, &mut rng);
+        let k = e.rbf_cross(&x, &x, 0.5);
+        assert_eq!((k.rows(), k.cols()), (10, 10));
+        assert_eq!(e.pjrt_tiles.load(Ordering::Relaxed), 0);
+        assert!(e.cpu_blocks.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn cpu_engine_matmul_is_gemm() {
+        let e = KernelEngine::cpu();
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(6, 9, &mut rng);
+        let b = Matrix::randn(9, 4, &mut rng);
+        assert!(e.matmul(&a, &b).max_abs_diff(&gemm::gemm(&a, &b)) < 1e-12);
+    }
+
+    #[test]
+    fn padding_and_tiles_roundtrip() {
+        let m = Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
+        let p = pad_rows_cols_f32(&m, 4, 5);
+        assert_eq!(p.len(), 20);
+        assert_eq!(p[0], 0.0f32.max(0.0)); // m[0,0] = 0
+        assert_eq!(p[5], 2.0); // m[1,0]
+        assert_eq!(p[2], 0.0); // padded col
+        assert_eq!(p[15], 0.0); // padded row
+    }
+
+    #[test]
+    fn assemble_crops() {
+        // one 256-tile, target 2x3
+        let mut tile = vec![0f32; TILE * TILE];
+        for r in 0..2 {
+            for c in 0..3 {
+                tile[r * TILE + c] = (r * 10 + c) as f32;
+            }
+        }
+        let out = assemble_tiles(&[tile], 2, 3, 1);
+        assert_eq!(out[(1, 2)], 12.0);
+        assert_eq!(out[(0, 1)], 1.0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let e = KernelEngine::cpu();
+        let x = Matrix::zeros(0, 3);
+        let y = Matrix::zeros(4, 3);
+        let k = e.rbf_cross(&x, &y, 1.0);
+        assert_eq!((k.rows(), k.cols()), (0, 4));
+    }
+}

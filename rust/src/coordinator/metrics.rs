@@ -1,0 +1,145 @@
+//! Service metrics: counters and latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with exponential buckets from 1µs to ~17min.
+#[derive(Debug)]
+pub struct Histogram {
+    /// bucket i covers [2^i µs, 2^(i+1) µs)
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+    /// raw samples for exact quantiles (bounded; benches are small-N)
+    samples: Mutex<Vec<u64>>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+            max_nanos: AtomicU64::new(0),
+            samples: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, d: Duration) {
+        let nanos = d.as_nanos() as u64;
+        let micros = (nanos / 1_000).max(1);
+        let bucket = (63 - micros.leading_zeros() as usize).min(31);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.max_nanos.fetch_max(nanos, Ordering::Relaxed);
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < 100_000 {
+            s.push(nanos);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_nanos.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_nanos.load(Ordering::Relaxed))
+    }
+
+    /// Exact quantile from retained samples (q in [0, 1]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return Duration::ZERO;
+        }
+        s.sort_unstable();
+        let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+        Duration::from_nanos(s[idx])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} max={:?}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.95),
+            self.max()
+        )
+    }
+}
+
+/// All service-level metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: Counter,
+    pub completed: Counter,
+    pub failed: Counter,
+    pub rejected: Counter,
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::default();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.observe(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), Duration::from_millis(100));
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert_eq!(h.quantile(0.5), Duration::from_millis(3));
+        assert!(h.summary().contains("n=5"));
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the service that turns the paper's algorithms into
+//! a system.
+//!
+//! - [`oracle`] — the `KernelOracle` abstraction: "give me the K[I, J]
+//!   block" without ever materializing the n x n kernel matrix. This is the
+//!   interface the SPSD models consume, and the entry-counting hook behind
+//!   the paper's Figure 1 / Table 3 "#entries" accounting.
+//! - [`engine`] — the block scheduler: tiles a kernel (or matmul) request
+//!   into fixed 256x256 AOT shapes, pads rows/features with zeros, batches
+//!   the tiles to the PJRT runtime thread, and crops + assembles results.
+//! - [`service`] — the request loop: bounded-queue approximation service
+//!   with worker routing, per-request timing, and metrics.
+//! - [`metrics`] — counters + latency histograms.
+
+pub mod engine;
+pub mod metrics;
+pub mod oracle;
+pub mod planner;
+pub mod service;
+
+pub use engine::KernelEngine;
+pub use oracle::{DenseOracle, KernelOracle, PolyOracle, RbfOracle};
+pub use service::{ApproxRequest, ApproxResponse, ApproxService, MethodSpec, ServiceConfig};

@@ -1,0 +1,276 @@
+//! Kernel oracles: blockwise access to `K` without materializing it.
+//!
+//! The paper's central accounting (Figure 1, Table 3 right column) is *how
+//! many entries of K each model observes*. Every oracle counts the entries
+//! it serves, so tests and benches can verify e.g. that the fast model sees
+//! `nc + (s-c)^2` entries while the prototype model sees `n^2`.
+
+use super::engine::KernelEngine;
+use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Blockwise access to a symmetric kernel matrix.
+pub trait KernelOracle: Sync {
+    /// Matrix dimension n.
+    fn n(&self) -> usize;
+
+    /// The `K[rows, cols]` block.
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix;
+
+    /// Entries served so far (for the #entries accounting).
+    fn entries_observed(&self) -> u64;
+
+    /// Reset the entry counter.
+    fn reset_entries(&self);
+
+    /// Convenience: full columns `K[:, cols]` (the sketch `C` for a column
+    /// selection matrix `P`).
+    fn columns(&self, cols: &[usize]) -> Matrix {
+        let all: Vec<usize> = (0..self.n()).collect();
+        self.block(&all, cols)
+    }
+
+    /// Convenience: the full matrix (the prototype model's requirement).
+    fn full(&self) -> Matrix {
+        let all: Vec<usize> = (0..self.n()).collect();
+        self.block(&all, &all)
+    }
+}
+
+/// Oracle over an explicit dense matrix (tests, small baselines, and the
+/// CUR image experiment).
+pub struct DenseOracle {
+    k: Matrix,
+    entries: AtomicU64,
+}
+
+impl DenseOracle {
+    pub fn new(k: Matrix) -> Self {
+        assert_eq!(k.rows(), k.cols(), "kernel oracle needs a square matrix");
+        DenseOracle { k, entries: AtomicU64::new(0) }
+    }
+
+    pub fn inner(&self) -> &Matrix {
+        &self.k
+    }
+}
+
+impl KernelOracle for DenseOracle {
+    fn n(&self) -> usize {
+        self.k.rows()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        self.entries
+            .fetch_add((rows.len() * cols.len()) as u64, Ordering::Relaxed);
+        let mut out = Matrix::zeros(rows.len(), cols.len());
+        for (i, &r) in rows.iter().enumerate() {
+            let src = self.k.row(r);
+            let dst = out.row_mut(i);
+            for (j, &c) in cols.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    fn entries_observed(&self) -> u64 {
+        self.entries.load(Ordering::Relaxed)
+    }
+
+    fn reset_entries(&self) {
+        self.entries.store(0, Ordering::Relaxed);
+    }
+}
+
+/// RBF kernel oracle over a data matrix: `K_ij = exp(-gamma ||x_i - x_j||^2)`.
+/// Blocks are computed on demand by the [`KernelEngine`] (PJRT-backed when
+/// artifacts are loaded, pure-rust otherwise) — this is the path that keeps
+/// the fast model's kernel evaluations at `nc + (s-c)^2` instead of `n^2`.
+pub struct RbfOracle {
+    /// n x d data matrix (rows are points).
+    x: Arc<Matrix>,
+    pub gamma: f64,
+    engine: Arc<KernelEngine>,
+    entries: AtomicU64,
+}
+
+impl RbfOracle {
+    pub fn new(x: Arc<Matrix>, gamma: f64, engine: Arc<KernelEngine>) -> Self {
+        RbfOracle { x, gamma, engine, entries: AtomicU64::new(0) }
+    }
+
+    /// Build with the pure-rust engine (no PJRT).
+    pub fn cpu(x: Arc<Matrix>, gamma: f64) -> Self {
+        Self::new(x, gamma, Arc::new(KernelEngine::cpu()))
+    }
+
+    pub fn data(&self) -> &Matrix {
+        &self.x
+    }
+
+    /// Cross-kernel block against external points (test-time k(x) columns).
+    pub fn cross(&self, other: &Matrix) -> Matrix {
+        self.engine.rbf_cross(&self.x, other, self.gamma)
+    }
+}
+
+impl KernelOracle for RbfOracle {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        self.entries
+            .fetch_add((rows.len() * cols.len()) as u64, Ordering::Relaxed);
+        let xr = self.x.select_rows(rows);
+        let xc = self.x.select_rows(cols);
+        self.engine.rbf_cross(&xr, &xc, self.gamma)
+    }
+
+    fn entries_observed(&self) -> u64 {
+        self.entries.load(Ordering::Relaxed)
+    }
+
+    fn reset_entries(&self) {
+        self.entries.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Polynomial kernel oracle: `K_ij = (gamma <x_i, x_j> + coef0)^degree`.
+/// Exercises the poly_block artifact; any SPSD kernel works with the fast
+/// model (degree must be a positive integer, coef0 >= 0, for SPSD-ness).
+pub struct PolyOracle {
+    x: Arc<Matrix>,
+    pub gamma: f64,
+    pub coef0: f64,
+    pub degree: f64,
+    engine: Arc<KernelEngine>,
+    entries: AtomicU64,
+}
+
+impl PolyOracle {
+    pub fn new(x: Arc<Matrix>, gamma: f64, coef0: f64, degree: f64, engine: Arc<KernelEngine>) -> Self {
+        PolyOracle { x, gamma, coef0, degree, engine, entries: AtomicU64::new(0) }
+    }
+
+    pub fn cpu(x: Arc<Matrix>, gamma: f64, coef0: f64, degree: f64) -> Self {
+        Self::new(x, gamma, coef0, degree, Arc::new(KernelEngine::cpu()))
+    }
+
+    pub fn cross(&self, other: &Matrix) -> Matrix {
+        self.engine
+            .poly_cross(&self.x, other, self.gamma, self.coef0, self.degree)
+    }
+}
+
+impl KernelOracle for PolyOracle {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        self.entries
+            .fetch_add((rows.len() * cols.len()) as u64, Ordering::Relaxed);
+        let xr = self.x.select_rows(rows);
+        let xc = self.x.select_rows(cols);
+        self.engine
+            .poly_cross(&xr, &xc, self.gamma, self.coef0, self.degree)
+    }
+
+    fn entries_observed(&self) -> u64 {
+        self.entries.load(Ordering::Relaxed)
+    }
+
+    fn reset_entries(&self) {
+        self.entries.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_kernel() -> Matrix {
+        Matrix::from_fn(5, 5, |i, j| 1.0 / (1.0 + (i as f64 - j as f64).abs()))
+    }
+
+    #[test]
+    fn dense_oracle_blocks_and_counts() {
+        let o = DenseOracle::new(toy_kernel());
+        let b = o.block(&[0, 2], &[1, 3, 4]);
+        assert_eq!((b.rows(), b.cols()), (2, 3));
+        assert_eq!(b[(1, 0)], 1.0 / 2.0); // K[2,1]
+        assert_eq!(o.entries_observed(), 6);
+        o.reset_entries();
+        assert_eq!(o.entries_observed(), 0);
+        let c = o.columns(&[0]);
+        assert_eq!(c.rows(), 5);
+        assert_eq!(o.entries_observed(), 5);
+    }
+
+    #[test]
+    fn rbf_oracle_matches_direct_formula() {
+        let mut rng = crate::util::Rng::new(0);
+        let x = Arc::new(Matrix::randn(12, 3, &mut rng));
+        let o = RbfOracle::cpu(Arc::clone(&x), 0.7);
+        let rows = [1usize, 5, 9];
+        let cols = [0usize, 2, 3, 11];
+        let b = o.block(&rows, &cols);
+        for (i, &r) in rows.iter().enumerate() {
+            for (j, &c) in cols.iter().enumerate() {
+                let d2: f64 = (0..3).map(|t| (x[(r, t)] - x[(c, t)]).powi(2)).sum();
+                let expect = (-0.7 * d2).exp();
+                assert!((b[(i, j)] - expect).abs() < 1e-6, "({r},{c})");
+            }
+        }
+        assert_eq!(o.entries_observed(), 12);
+    }
+
+    #[test]
+    fn poly_oracle_matches_formula_and_is_spsd() {
+        let mut rng = crate::util::Rng::new(3);
+        let x = Arc::new(Matrix::randn(14, 3, &mut rng));
+        let o = PolyOracle::cpu(Arc::clone(&x), 0.5, 1.0, 2.0);
+        let k = o.full();
+        for i in 0..14 {
+            for j in 0..14 {
+                let dot: f64 = (0..3).map(|t| x[(i, t)] * x[(j, t)]).sum();
+                let expect = (0.5 * dot + 1.0).powi(2);
+                assert!((k[(i, j)] - expect).abs() < 1e-9);
+            }
+        }
+        // degree-2 polynomial kernel with coef0 > 0 is SPSD
+        let e = crate::linalg::eigh(&k);
+        assert!(e.values.iter().all(|&v| v > -1e-8));
+    }
+
+    #[test]
+    fn fast_model_works_on_poly_kernel() {
+        let mut rng = crate::util::Rng::new(4);
+        let x = Arc::new(Matrix::randn(60, 4, &mut rng));
+        let o = PolyOracle::cpu(x, 0.3, 1.0, 2.0);
+        let k = o.full();
+        o.reset_entries();
+        let p = crate::spsd::uniform_p(60, 12, &mut rng);
+        let a = crate::spsd::fast(&o, &p, crate::spsd::FastConfig::uniform(36), &mut rng);
+        // degree-2 poly kernel over R^4 has rank <= C(4+2,2) = 15; c=12
+        // columns get close; error must at least be small and entries few
+        let err = a.rel_fro_error(&k);
+        assert!(err < 0.05, "err={err}");
+        assert!(a.entries_observed < 60 * 60);
+    }
+
+    #[test]
+    fn rbf_full_is_symmetric_unit_diagonal() {
+        let mut rng = crate::util::Rng::new(1);
+        let x = Arc::new(Matrix::randn(10, 4, &mut rng));
+        let o = RbfOracle::cpu(x, 0.5);
+        let k = o.full();
+        assert!(k.max_abs_diff(&k.transpose()) < 1e-6);
+        for i in 0..10 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! The approximation service: the Layer-3 request loop.
+//!
+//! Clients submit [`ApproxRequest`]s (which model, c, s, downstream task
+//! size k); the service routes them to a worker pool with a bounded queue
+//! (backpressure), each worker builds the approximation against the shared
+//! kernel oracle — kernel blocks flow through the PJRT engine — and replies
+//! with eigenvalues + timings. Latency and queue-wait histograms feed the
+//! serving-style end-to-end example.
+
+use super::metrics::Metrics;
+use super::oracle::{KernelOracle, RbfOracle};
+use crate::pool::ThreadPool;
+use crate::sketch::SketchKind;
+use crate::spsd::{self, FastConfig};
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Which model a request wants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MethodSpec {
+    Nystrom,
+    Prototype,
+    Fast { s: usize, kind: SketchKind },
+}
+
+impl MethodSpec {
+    pub fn name(&self) -> String {
+        match self {
+            MethodSpec::Nystrom => "nystrom".into(),
+            MethodSpec::Prototype => "prototype".into(),
+            MethodSpec::Fast { s, kind } => format!("fast[{},s={s}]", kind.name()),
+        }
+    }
+}
+
+/// One approximation job.
+#[derive(Debug, Clone)]
+pub struct ApproxRequest {
+    pub id: u64,
+    pub method: MethodSpec,
+    /// sketch size c (columns of C).
+    pub c: usize,
+    /// downstream top-k eigenpairs to return.
+    pub k: usize,
+    pub seed: u64,
+}
+
+/// Reply for one job.
+#[derive(Debug, Clone)]
+pub struct ApproxResponse {
+    pub id: u64,
+    pub method: String,
+    /// top-k eigenvalues of C U C^T.
+    pub eigvals: Vec<f64>,
+    /// kernel entries observed building this approximation.
+    pub entries: u64,
+    /// seconds spent computing (excl. queue wait).
+    pub compute_secs: f64,
+    /// seconds from submit to completion.
+    pub total_secs: f64,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    /// max queued jobs before `submit` blocks (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 4, queue_capacity: 64 }
+    }
+}
+
+/// The running service.
+pub struct ApproxService {
+    oracle: Arc<RbfOracle>,
+    pool: ThreadPool,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicU64>,
+}
+
+impl ApproxService {
+    pub fn new(oracle: Arc<RbfOracle>, cfg: ServiceConfig) -> Self {
+        ApproxService {
+            oracle,
+            pool: ThreadPool::new(cfg.workers.max(1), cfg.queue_capacity.max(1)),
+            metrics: Arc::new(Metrics::default()),
+            inflight: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Submit a job; the response is delivered on `reply`. Blocks when the
+    /// queue is full.
+    pub fn submit(&self, req: ApproxRequest, reply: mpsc::Sender<ApproxResponse>) {
+        self.metrics.requests.inc();
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        let oracle = Arc::clone(&self.oracle);
+        let metrics = Arc::clone(&self.metrics);
+        let inflight = Arc::clone(&self.inflight);
+        let submitted = Instant::now();
+        self.pool.submit(move || {
+            let started = Instant::now();
+            metrics.queue_wait.observe(started.duration_since(submitted));
+            let resp = run_request(oracle.as_ref(), &req, submitted);
+            metrics.latency.observe(submitted.elapsed());
+            match &resp {
+                Ok(_) => metrics.completed.inc(),
+                Err(_) => metrics.failed.inc(),
+            }
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            if let Ok(r) = resp {
+                let _ = reply.send(r);
+            }
+        });
+    }
+
+    /// Wait for every submitted job to finish.
+    pub fn drain(&self) {
+        self.pool.wait_idle();
+    }
+}
+
+fn run_request(
+    oracle: &RbfOracle,
+    req: &ApproxRequest,
+    submitted: Instant,
+) -> anyhow::Result<ApproxResponse> {
+    let mut rng = Rng::new(req.seed);
+    let n = oracle.n();
+    let c = req.c.clamp(1, n);
+    let p = spsd::uniform_p(n, c, &mut rng);
+    let t0 = Instant::now();
+    let approx = match req.method {
+        MethodSpec::Nystrom => spsd::nystrom(oracle, &p),
+        MethodSpec::Prototype => spsd::prototype(oracle, &p),
+        MethodSpec::Fast { s, kind } => {
+            spsd::fast(oracle, &p, FastConfig { s, kind, force_p_in_s: true }, &mut rng)
+        }
+    };
+    let (eigvals, _vecs) = approx.eig_k(req.k.max(1));
+    Ok(ApproxResponse {
+        id: req.id,
+        method: req.method.name(),
+        eigvals,
+        entries: approx.entries_observed,
+        compute_secs: t0.elapsed().as_secs_f64(),
+        total_secs: submitted.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn service(n: usize, workers: usize, cap: usize) -> ApproxService {
+        let mut rng = Rng::new(0);
+        let x = Arc::new(Matrix::randn(n, 6, &mut rng));
+        let oracle = Arc::new(RbfOracle::cpu(x, 0.4));
+        ApproxService::new(oracle, ServiceConfig { workers, queue_capacity: cap })
+    }
+
+    #[test]
+    fn serves_all_methods() {
+        let svc = service(80, 2, 16);
+        let (tx, rx) = mpsc::channel();
+        let methods = [
+            MethodSpec::Nystrom,
+            MethodSpec::Prototype,
+            MethodSpec::Fast { s: 24, kind: SketchKind::Uniform },
+        ];
+        for (i, m) in methods.iter().enumerate() {
+            svc.submit(
+                ApproxRequest { id: i as u64, method: *m, c: 8, k: 3, seed: i as u64 },
+                tx.clone(),
+            );
+        }
+        svc.drain();
+        drop(tx);
+        let mut resps: Vec<ApproxResponse> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 3);
+        for r in &resps {
+            assert_eq!(r.eigvals.len(), 3);
+            assert!(r.eigvals[0] >= r.eigvals[1]);
+            assert!(r.compute_secs <= r.total_secs + 1e-9);
+        }
+        // prototype sees the most entries, nystrom the fewest
+        assert!(resps[1].entries > resps[2].entries);
+        assert!(resps[2].entries > resps[0].entries);
+        assert_eq!(svc.metrics().completed.get(), 3);
+        assert_eq!(svc.metrics().failed.get(), 0);
+        assert_eq!(svc.metrics().latency.count(), 3);
+    }
+
+    #[test]
+    fn many_concurrent_requests_complete() {
+        let svc = service(60, 4, 8);
+        let (tx, rx) = mpsc::channel();
+        let total = 30u64;
+        for i in 0..total {
+            svc.submit(
+                ApproxRequest {
+                    id: i,
+                    method: MethodSpec::Fast { s: 16, kind: SketchKind::Uniform },
+                    c: 6,
+                    k: 2,
+                    seed: i,
+                },
+                tx.clone(),
+            );
+        }
+        svc.drain();
+        drop(tx);
+        assert_eq!(rx.iter().count() as u64, total);
+        assert_eq!(svc.metrics().requests.get(), total);
+        assert_eq!(svc.inflight(), 0);
+    }
+}

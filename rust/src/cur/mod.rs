@@ -1,0 +1,335 @@
+//! CUR matrix decomposition (paper §5): `A ≈ C U R` with
+//!
+//! - [`cur_optimal`] — `U* = C† A R†` (eq. 8, cost O(mn·min{c,r})),
+//! - [`cur_drineas08`] — `U = (P_R^T A P_C)†` (the cheap 2008 baseline the
+//!   paper's Fig. 2(c) shows is poor),
+//! - [`cur_fast`] — `Ũ = (S_C^T C)† (S_C^T A S_R) (R S_R)†` (eq. 9,
+//!   Theorem 9) with uniform or leverage-score `S_C`, `S_R`,
+//! - [`adaptive_sample`] / [`uniform_adaptive2`] — residual-based column
+//!   selection (Wang et al. 2016) used to build better `C` (paper Fig. 4
+//!   and Theorem 8's near-optimal selection).
+
+pub mod sparse_cur;
+
+use crate::linalg::{pinv, Matrix};
+use crate::sketch::{self, SketchKind};
+use crate::util::{Rng, Stopwatch};
+
+/// A CUR decomposition `A ≈ C U R`.
+#[derive(Debug, Clone)]
+pub struct CurDecomp {
+    pub c: Matrix, // m x c
+    pub u: Matrix, // c x r
+    pub r: Matrix, // r x n
+    pub method: String,
+    pub build_secs: f64,
+    /// Entries of `A` read to *compute U* (C and R excluded — all methods
+    /// share them).
+    pub entries_for_u: u64,
+}
+
+impl CurDecomp {
+    pub fn materialize(&self) -> Matrix {
+        self.c.matmul(&self.u).matmul(&self.r)
+    }
+
+    pub fn rel_fro_error(&self, a: &Matrix) -> f64 {
+        a.sub(&self.materialize()).fro_norm_sq() / a.fro_norm_sq()
+    }
+}
+
+/// Uniformly sample `count` distinct indices from `[0, n)`, sorted.
+pub fn select_uniform(n: usize, count: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut idx = rng.sample_without_replacement(n, count.min(n));
+    idx.sort_unstable();
+    idx
+}
+
+/// Optimal U: `U* = C† A R†` — O(mn·min{c,r}).
+pub fn cur_optimal(a: &Matrix, col_idx: &[usize], row_idx: &[usize]) -> CurDecomp {
+    let sw = Stopwatch::start();
+    let c = a.select_cols(col_idx);
+    let r = a.select_rows(row_idx);
+    let cp = pinv(&c); // c x m
+    let rp = pinv(&r); // n x r
+    let u = cp.matmul(a).matmul(&rp);
+    CurDecomp {
+        c,
+        u,
+        r,
+        method: "optimal".into(),
+        build_secs: sw.secs(),
+        entries_for_u: (a.rows() * a.cols()) as u64,
+    }
+}
+
+/// Drineas et al. (2008): `U = (P_R^T A P_C)† = (A[rows, cols])†` — the
+/// degenerate fast model with `S_C = P_R`, `S_R = P_C`.
+pub fn cur_drineas08(a: &Matrix, col_idx: &[usize], row_idx: &[usize]) -> CurDecomp {
+    let sw = Stopwatch::start();
+    let c = a.select_cols(col_idx);
+    let r = a.select_rows(row_idx);
+    let w = a.select_rows(row_idx).select_cols(col_idx); // r x c
+    let u = pinv(&w); // c x r
+    CurDecomp {
+        c,
+        u,
+        r,
+        method: "drineas08".into(),
+        build_secs: sw.secs(),
+        entries_for_u: (row_idx.len() * col_idx.len()) as u64,
+    }
+}
+
+/// Configuration for the fast CUR U matrix (eq. 9).
+#[derive(Debug, Clone, Copy)]
+pub struct FastCurConfig {
+    pub s_c: usize,
+    pub s_r: usize,
+    /// Uniform or Leverage (w.r.t. row leverage of C / column leverage of R).
+    pub kind: SketchKind,
+    /// Force the selected rows to include `row_idx` and columns to include
+    /// `col_idx` (the CUR analogue of Corollary 5; improves accuracy).
+    pub force_overlap: bool,
+}
+
+impl FastCurConfig {
+    pub fn uniform(s_c: usize, s_r: usize) -> Self {
+        FastCurConfig { s_c, s_r, kind: SketchKind::Uniform, force_overlap: true }
+    }
+
+    pub fn leverage(s_c: usize, s_r: usize) -> Self {
+        FastCurConfig {
+            s_c,
+            s_r,
+            kind: SketchKind::Leverage { scaled: false },
+            force_overlap: true,
+        }
+    }
+}
+
+/// Fast CUR: `Ũ = (S_C^T C)† (S_C^T A S_R) (R S_R)†`, column-selection
+/// sketches only (the linear-time regime the paper recommends; projection
+/// sketches would need all of A).
+pub fn cur_fast(
+    a: &Matrix,
+    col_idx: &[usize],
+    row_idx: &[usize],
+    cfg: FastCurConfig,
+    rng: &mut Rng,
+) -> CurDecomp {
+    let sw = Stopwatch::start();
+    let (m, n) = (a.rows(), a.cols());
+    let c = a.select_cols(col_idx);
+    let r = a.select_rows(row_idx);
+
+    // Row sketch S_C over [m] (samples rows), column sketch S_R over [n].
+    let sc_idx = build_indices(&c, cfg.kind, cfg.s_c, m, if cfg.force_overlap { row_idx } else { &[] }, rng);
+    let rt = r.transpose();
+    let sr_idx = build_indices(&rt, cfg.kind, cfg.s_r, n, if cfg.force_overlap { col_idx } else { &[] }, rng);
+
+    let stc = c.select_rows(&sc_idx); // s_c x c
+    let rsr = r.select_cols(&sr_idx); // r x s_r
+    let core = a.select_rows(&sc_idx).select_cols(&sr_idx); // s_c x s_r
+    let u = pinv(&stc).matmul(&core).matmul(&pinv(&rsr));
+    CurDecomp {
+        c,
+        u,
+        r,
+        method: format!("fast[{}]", cfg.kind.name()),
+        build_secs: sw.secs(),
+        entries_for_u: (sc_idx.len() * sr_idx.len()) as u64,
+    }
+}
+
+/// Sample `s` row indices of `basis` (uniform or by row leverage scores),
+/// unioned with `forced`.
+fn build_indices(
+    basis: &Matrix,
+    kind: SketchKind,
+    s: usize,
+    n: usize,
+    forced: &[usize],
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let extra = s.saturating_sub(forced.len()).max(1);
+    let mut idx: Vec<usize> = match kind {
+        SketchKind::Uniform => rng.sample_without_replacement(n, extra.min(n)),
+        SketchKind::Leverage { .. } => {
+            let scores = sketch::leverage_scores(basis);
+            let rank: f64 = scores.iter().sum();
+            let mut out = Vec::new();
+            for (i, &l) in scores.iter().enumerate() {
+                let p = if rank > 0.0 { (extra as f64 * l / rank).min(1.0) } else { extra as f64 / n as f64 };
+                if rng.bernoulli(p) {
+                    out.push(i);
+                }
+            }
+            if out.is_empty() {
+                out.push(rng.usize_below(n));
+            }
+            out
+        }
+        other => panic!("fast CUR supports column-selection sketches, not {}", other.name()),
+    };
+    idx.extend_from_slice(forced);
+    idx.sort_unstable();
+    idx.dedup();
+    idx
+}
+
+/// Adaptive sampling (Wang & Zhang 2013): sample `count` extra column
+/// indices with probability proportional to the squared column norms of the
+/// residual `A - C C† A`. Requires the full matrix.
+pub fn adaptive_sample(a: &Matrix, current_cols: &[usize], count: usize, rng: &mut Rng) -> Vec<usize> {
+    let c = a.select_cols(current_cols);
+    let cp = pinv(&c);
+    let proj = c.matmul(&cp.matmul(a)); // C C† A
+    let resid = a.sub(&proj);
+    let weights: Vec<f64> = (0..a.cols())
+        .map(|j| (0..a.rows()).map(|i| resid[(i, j)] * resid[(i, j)]).sum())
+        .collect();
+    let mut chosen = Vec::with_capacity(count);
+    let mut w = weights;
+    for &cidx in current_cols {
+        w[cidx] = 0.0; // don't re-pick existing columns
+    }
+    for _ in 0..count {
+        let j = rng.weighted_index(&w);
+        chosen.push(j);
+        w[j] = 0.0;
+    }
+    chosen.sort_unstable();
+    chosen.dedup();
+    chosen
+}
+
+/// The uniform+adaptive² column-selection of Wang et al. (2016): c/3
+/// uniform, then two adaptive rounds of c/3 against the growing residual.
+pub fn uniform_adaptive2(a: &Matrix, c: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = a.cols();
+    let c1 = (c / 3).max(1);
+    let c3 = c.saturating_sub(2 * c1).max(1);
+    let mut idx = select_uniform(n, c1, rng);
+    let extra1 = adaptive_sample(a, &idx, c1, rng);
+    idx.extend(extra1);
+    idx.sort_unstable();
+    idx.dedup();
+    let extra2 = adaptive_sample(a, &idx, c3, rng);
+    idx.extend(extra2);
+    idx.sort_unstable();
+    idx.dedup();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::gen;
+
+    fn decaying_matrix(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let r = m.min(n);
+        let u = crate::linalg::qr::qr_thin(&Matrix::randn(m, r, &mut rng)).q;
+        let v = crate::linalg::qr::qr_thin(&Matrix::randn(n, r, &mut rng)).q;
+        let ud = Matrix::from_fn(m, r, |i, j| u[(i, j)] / ((j + 1) as f64).powi(2));
+        ud.matmul_tr(&v)
+    }
+
+    #[test]
+    fn optimal_is_best_for_fixed_c_r() {
+        let a = decaying_matrix(40, 30, 0);
+        let mut rng = Rng::new(1);
+        let cols = select_uniform(30, 6, &mut rng);
+        let rows = select_uniform(40, 6, &mut rng);
+        let opt = cur_optimal(&a, &cols, &rows);
+        let dri = cur_drineas08(&a, &cols, &rows);
+        let fast = cur_fast(&a, &cols, &rows, FastCurConfig::uniform(24, 24), &mut rng);
+        let (e_opt, e_dri, e_fast) =
+            (opt.rel_fro_error(&a), dri.rel_fro_error(&a), fast.rel_fro_error(&a));
+        assert!(e_opt <= e_fast + 1e-9, "optimal {e_opt} vs fast {e_fast}");
+        assert!(e_opt <= e_dri + 1e-9);
+        // Fig-2 shape: fast with s=4r is close to optimal, drineas08 is worse
+        assert!(e_fast <= e_dri + 1e-9, "fast {e_fast} should beat drineas08 {e_dri}");
+    }
+
+    #[test]
+    fn fast_cur_entry_count() {
+        let a = decaying_matrix(50, 45, 2);
+        let mut rng = Rng::new(3);
+        let cols = select_uniform(45, 5, &mut rng);
+        let rows = select_uniform(50, 5, &mut rng);
+        let f = cur_fast(&a, &cols, &rows, FastCurConfig::uniform(20, 20), &mut rng);
+        assert!(f.entries_for_u <= 25 * 25);
+        let o = cur_optimal(&a, &cols, &rows);
+        assert_eq!(o.entries_for_u, 50 * 45);
+    }
+
+    #[test]
+    fn exact_recovery_low_rank() {
+        // rank(A)=3, c=r=5 ⇒ all methods with enough sketch recover exactly
+        let mut rng = Rng::new(4);
+        let a = gen::low_rank(&mut rng, 30, 25, 3);
+        let cols = select_uniform(25, 5, &mut rng);
+        let rows = select_uniform(30, 5, &mut rng);
+        let opt = cur_optimal(&a, &cols, &rows);
+        assert!(opt.rel_fro_error(&a) < 1e-10);
+        let fast = cur_fast(&a, &cols, &rows, FastCurConfig::uniform(15, 15), &mut rng);
+        assert!(fast.rel_fro_error(&a) < 1e-9, "err={}", fast.rel_fro_error(&a));
+    }
+
+    #[test]
+    fn leverage_fast_cur_works() {
+        let a = decaying_matrix(35, 30, 5);
+        let mut rng = Rng::new(6);
+        let cols = select_uniform(30, 5, &mut rng);
+        let rows = select_uniform(35, 5, &mut rng);
+        let f = cur_fast(&a, &cols, &rows, FastCurConfig::leverage(20, 20), &mut rng);
+        let e = f.rel_fro_error(&a);
+        let e_opt = cur_optimal(&a, &cols, &rows).rel_fro_error(&a);
+        assert!(e <= 3.0 * e_opt + 1e-6, "leverage fast {e} vs opt {e_opt}");
+    }
+
+    #[test]
+    fn adaptive_improves_over_uniform() {
+        // Adaptive column selection should (on average) beat uniform for C.
+        let a = decaying_matrix(60, 50, 7);
+        let mut e_uni = 0.0;
+        let mut e_ada = 0.0;
+        for t in 0..5 {
+            let mut rng = Rng::new(100 + t);
+            let cols_u = select_uniform(50, 9, &mut rng);
+            let rows = select_uniform(60, 9, &mut rng);
+            e_uni += cur_optimal(&a, &cols_u, &rows).rel_fro_error(&a);
+            let cols_a = uniform_adaptive2(&a, 9, &mut rng);
+            e_ada += cur_optimal(&a, &cols_a, &rows).rel_fro_error(&a);
+        }
+        assert!(
+            e_ada <= e_uni * 1.1,
+            "adaptive ({e_ada}) should be ~at least as good as uniform ({e_uni})"
+        );
+    }
+
+    #[test]
+    fn adaptive_sample_avoids_existing() {
+        let a = decaying_matrix(20, 15, 8);
+        let mut rng = Rng::new(9);
+        let current = vec![0usize, 1, 2];
+        let extra = adaptive_sample(&a, &current, 4, &mut rng);
+        assert!(extra.iter().all(|e| !current.contains(e)));
+    }
+
+    #[test]
+    #[should_panic(expected = "column-selection")]
+    fn fast_cur_rejects_projection_sketch() {
+        let a = decaying_matrix(10, 10, 10);
+        let mut rng = Rng::new(11);
+        let cfg = FastCurConfig {
+            s_c: 5,
+            s_r: 5,
+            kind: SketchKind::Gaussian,
+            force_overlap: false,
+        };
+        cur_fast(&a, &[0, 1], &[0, 1], cfg, &mut rng);
+    }
+}

@@ -1,0 +1,148 @@
+//! Synthetic "natural image" for the Fig-2 CUR experiment.
+//!
+//! The paper decomposes a 1920 x 1168 internet photo. We generate a
+//! procedural image with the properties CUR cares about: a strong
+//! approximately-low-rank background (smooth gradients), mid-frequency
+//! texture, and localized structures that break exact low-rankness.
+//! Output values live in [0, 255]. A PGM writer is provided so results can
+//! be eyeballed.
+
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// Generate the synthetic image (rows x cols).
+pub fn synth_image(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut img = Matrix::zeros(rows, cols);
+    // (a) smooth low-rank background: sum of a few separable smooth terms
+    let terms = 6;
+    let mut row_basis = Vec::new();
+    let mut col_basis = Vec::new();
+    for t in 0..terms {
+        let fr = 0.5 + 1.7 * t as f64 + rng.f64();
+        let fc = 0.4 + 1.3 * t as f64 + rng.f64();
+        let pr = rng.f64() * std::f64::consts::TAU;
+        let pc = rng.f64() * std::f64::consts::TAU;
+        let amp = 60.0 / (t as f64 + 1.0);
+        row_basis.push(
+            (0..rows)
+                .map(|i| amp * (fr * i as f64 / rows as f64 * std::f64::consts::TAU + pr).sin())
+                .collect::<Vec<f64>>(),
+        );
+        col_basis.push(
+            (0..cols)
+                .map(|j| (fc * j as f64 / cols as f64 * std::f64::consts::TAU + pc).cos())
+                .collect::<Vec<f64>>(),
+        );
+    }
+    for i in 0..rows {
+        let dst = img.row_mut(i);
+        for t in 0..terms {
+            let r = row_basis[t][i];
+            for (j, v) in dst.iter_mut().enumerate() {
+                *v += r * col_basis[t][j];
+            }
+        }
+    }
+    // (b) mid-frequency texture (still fairly structured)
+    for i in 0..rows {
+        let si = (i as f64 * 0.21).sin();
+        let dst = img.row_mut(i);
+        for (j, v) in dst.iter_mut().enumerate() {
+            *v += 8.0 * si * (j as f64 * 0.17).cos();
+        }
+    }
+    // (c) localized shapes: *rotated* soft ellipses — the cross term
+    // (rho * di * dj) breaks separability, so these genuinely raise the
+    // numerical rank the way objects in a photo do.
+    for _ in 0..10 {
+        let ci = rng.f64() * rows as f64;
+        let cj = rng.f64() * cols as f64;
+        let ri = 30.0 + rng.f64() * 120.0;
+        let rj = 30.0 + rng.f64() * 120.0;
+        let rho = 1.2 * (rng.f64() - 0.5); // rotation / shear
+        let amp = 40.0 * rng.sign();
+        let i0 = ((ci - 3.0 * ri).max(0.0)) as usize;
+        let i1 = ((ci + 3.0 * ri).min(rows as f64 - 1.0)) as usize;
+        for i in i0..=i1 {
+            let di = (i as f64 - ci) / ri;
+            let j0 = ((cj - 3.0 * rj).max(0.0)) as usize;
+            let j1 = ((cj + 3.0 * rj).min(cols as f64 - 1.0)) as usize;
+            let dst = img.row_mut(i);
+            for (j, v) in dst.iter_mut().enumerate().take(j1 + 1).skip(j0) {
+                let dj = (j as f64 - cj) / rj;
+                let r2 = di * di + dj * dj + rho * di * dj;
+                if r2 < 9.0 {
+                    *v += amp * (-r2).exp();
+                }
+            }
+        }
+    }
+    // (c') faint sensor noise — keeps the tail spectrum non-zero like a
+    // real photograph (std ≈ 0.6 gray levels after rescaling).
+    for v in img.data_mut() {
+        *v += 1.5 * rng.gaussian();
+    }
+    // (d) shift/clip into [0, 255]
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in img.data() {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-9);
+    for v in img.data_mut() {
+        *v = (*v - lo) / span * 255.0;
+    }
+    img
+}
+
+/// Write as binary PGM (for eyeballing reconstructions).
+pub fn write_pgm(img: &Matrix, path: &std::path::Path) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "P5\n{} {}\n255", img.cols(), img.rows())?;
+    let bytes: Vec<u8> = img.data().iter().map(|&v| v.clamp(0.0, 255.0) as u8).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_thin;
+
+    #[test]
+    fn range_and_determinism() {
+        let a = synth_image(64, 48, 0);
+        let b = synth_image(64, 48, 0);
+        assert!(a.max_abs_diff(&b) == 0.0);
+        for &v in a.data() {
+            assert!((0.0..=255.0).contains(&v));
+        }
+        let c = synth_image(64, 48, 1);
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn approximately_low_rank() {
+        // top-20 singular values should capture most of the energy —
+        // the property Fig 2's CUR experiment relies on.
+        let img = synth_image(120, 90, 2);
+        let f = svd_thin(&img);
+        let total: f64 = f.s.iter().map(|s| s * s).sum();
+        let top20: f64 = f.s.iter().take(20).map(|s| s * s).sum();
+        assert!(top20 / total > 0.95, "top20 share = {}", top20 / total);
+        // but not exactly low rank
+        assert!(f.s[40] > 1e-8);
+    }
+
+    #[test]
+    fn pgm_roundtrip_header() {
+        let img = synth_image(10, 8, 3);
+        let path = std::env::temp_dir().join("fastspsd_test.pgm");
+        write_pgm(&img, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(data.starts_with(b"P5\n8 10\n255\n"));
+        assert_eq!(data.len(), "P5\n8 10\n255\n".len() + 80);
+    }
+}

@@ -1,0 +1,184 @@
+//! Synthetic dataset substrate.
+//!
+//! The paper evaluates on LIBSVM datasets (Tables 6 and 7) and one natural
+//! image; neither is reachable here (no network), so we generate synthetic
+//! stand-ins matched in size, dimension, class count, and — via
+//! [`sigma::calibrate_sigma`] — in the spectral-decay parameter η that
+//! drives every comparison (see DESIGN.md §3, Substitutions).
+
+pub mod image;
+pub mod sigma;
+
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// A generated dataset: rows of `x` are points.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+}
+
+/// Gaussian-mixture generator: `classes` clusters with random centers
+/// (spread `sep`), anisotropic within-class scales, in `d` dimensions.
+/// Produces the decaying-spectrum RBF kernels the paper's datasets exhibit.
+pub fn make_blobs(name: &str, n: usize, d: usize, classes: usize, sep: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let classes = classes.max(1);
+    // class centers
+    let centers = Matrix::from_fn(classes, d, |_, _| rng.gaussian() * sep);
+    // per-class anisotropic axis scales in [0.3, 1.2]
+    let scales = Matrix::from_fn(classes, d, |_, _| 0.3 + 0.9 * rng.f64());
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        for j in 0..d {
+            x[(i, j)] = centers[(c, j)] + rng.gaussian() * scales[(c, j)];
+        }
+        labels.push(c);
+    }
+    // shuffle rows so class order is not positional
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let x = x.select_rows(&perm);
+    let labels: Vec<usize> = perm.iter().map(|&i| labels[i]).collect();
+    Dataset { name: name.to_string(), x, labels, classes }
+}
+
+/// Shape spec for one of the paper's datasets.
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+    /// cluster separation used by the generator (tuned so RBF spectra decay
+    /// like the real datasets do at the paper's σ settings)
+    pub sep: f64,
+}
+
+/// The kernel-approximation datasets of Table 6.
+pub const TABLE6: [DatasetSpec; 5] = [
+    DatasetSpec { name: "Letters", n: 15_000, d: 16, classes: 26, sep: 2.0 },
+    DatasetSpec { name: "PenDigit", n: 10_992, d: 16, classes: 10, sep: 2.5 },
+    DatasetSpec { name: "Cpusmall", n: 8_192, d: 12, classes: 8, sep: 2.0 },
+    DatasetSpec { name: "Mushrooms", n: 8_124, d: 112, classes: 2, sep: 3.0 },
+    DatasetSpec { name: "WineQuality", n: 4_898, d: 12, classes: 7, sep: 2.0 },
+];
+
+/// The clustering / classification datasets of Table 7.
+pub const TABLE7: [DatasetSpec; 6] = [
+    DatasetSpec { name: "MNIST", n: 60_000, d: 780, classes: 10, sep: 3.0 },
+    DatasetSpec { name: "PenDigit", n: 10_992, d: 16, classes: 10, sep: 2.5 },
+    DatasetSpec { name: "USPS", n: 9_298, d: 256, classes: 10, sep: 3.0 },
+    DatasetSpec { name: "Mushrooms", n: 8_124, d: 112, classes: 2, sep: 3.0 },
+    DatasetSpec { name: "Gisette", n: 7_000, d: 1024, classes: 2, sep: 3.5 },
+    DatasetSpec { name: "DNA", n: 2_000, d: 180, classes: 3, sep: 2.5 },
+];
+
+impl DatasetSpec {
+    /// Generate at a reduced size: `n' = max(min_n, n * scale)` (the
+    /// experiments run at laptop scale; pass scale=1.0 for paper sizes).
+    pub fn generate(&self, scale: f64, seed: u64) -> Dataset {
+        let n = ((self.n as f64 * scale) as usize).clamp(200.min(self.n), self.n);
+        make_blobs(self.name, n, self.d, self.classes, self.sep, seed)
+    }
+}
+
+/// Look up a spec by (case-insensitive) name across both tables.
+pub fn find_spec(name: &str) -> Option<DatasetSpec> {
+    TABLE6
+        .iter()
+        .chain(TABLE7.iter())
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .copied()
+}
+
+/// Split a dataset 50/50 into train/test (paper §6.3.2).
+pub fn train_test_split(ds: &Dataset, rng: &mut Rng) -> (Dataset, Dataset) {
+    let n = ds.x.rows();
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let n_train = n / 2;
+    let (tr, te) = perm.split_at(n_train);
+    let make = |idx: &[usize], suffix: &str| Dataset {
+        name: format!("{}-{}", ds.name, suffix),
+        x: ds.x.select_rows(idx),
+        labels: idx.iter().map(|&i| ds.labels[i]).collect(),
+        classes: ds.classes,
+    };
+    (make(tr, "train"), make(te, "test"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_shapes_and_labels() {
+        let ds = make_blobs("t", 100, 5, 4, 2.0, 0);
+        assert_eq!((ds.x.rows(), ds.x.cols()), (100, 5));
+        assert_eq!(ds.labels.len(), 100);
+        assert!(ds.labels.iter().all(|&l| l < 4));
+        // all classes present
+        for c in 0..4 {
+            assert!(ds.labels.contains(&c));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = make_blobs("t", 50, 3, 2, 1.5, 7);
+        let b = make_blobs("t", 50, 3, 2, 1.5, 7);
+        assert!(a.x.max_abs_diff(&b.x) == 0.0);
+        assert_eq!(a.labels, b.labels);
+        let c = make_blobs("t", 50, 3, 2, 1.5, 8);
+        assert!(a.x.max_abs_diff(&c.x) > 0.0);
+    }
+
+    #[test]
+    fn registry_and_scaling() {
+        let spec = find_spec("pendigit").unwrap();
+        assert_eq!(spec.n, 10_992);
+        let ds = spec.generate(0.05, 1);
+        assert_eq!(ds.x.rows(), (10_992.0 * 0.05) as usize);
+        assert_eq!(ds.x.cols(), 16);
+        assert!(find_spec("nope").is_none());
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let ds = make_blobs("t", 101, 4, 3, 2.0, 2);
+        let mut rng = Rng::new(3);
+        let (tr, te) = train_test_split(&ds, &mut rng);
+        assert_eq!(tr.x.rows(), 50);
+        assert_eq!(te.x.rows(), 51);
+        assert_eq!(tr.labels.len() + te.labels.len(), 101);
+    }
+
+    #[test]
+    fn blobs_are_separated() {
+        // With sep >> within-class scale, same-class points are closer.
+        let ds = make_blobs("t", 120, 8, 3, 6.0, 4);
+        let mut same = 0.0;
+        let mut diff = 0.0;
+        let mut ns = 0;
+        let mut nd = 0;
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let d2: f64 = (0..8).map(|t| (ds.x[(i, t)] - ds.x[(j, t)]).powi(2)).sum();
+                if ds.labels[i] == ds.labels[j] {
+                    same += d2;
+                    ns += 1;
+                } else {
+                    diff += d2;
+                    nd += 1;
+                }
+            }
+        }
+        assert!(diff / nd as f64 > 2.0 * same / ns as f64);
+    }
+}

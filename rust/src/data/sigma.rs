@@ -1,0 +1,112 @@
+//! RBF scale calibration (paper §6.1).
+//!
+//! The paper sets σ so that `η = ‖K_k‖_F² / ‖K‖_F²` (k = ⌈n/100⌉) hits 0.9
+//! or 0.99. η is monotone increasing in σ, so we bisect, measuring η on a
+//! subsample for tractability.
+
+use crate::coordinator::engine::rbf_cross_cpu;
+use crate::linalg::{lanczos_top_k, Matrix};
+use crate::util::Rng;
+
+/// `η(K, k) = Σ_{i<=k} σ_i²(K) / Σ_i σ_i²(K)` — the share of Frobenius mass
+/// in the top-k spectrum. For SPSD K, `Σ_i σ_i² = ‖K‖_F²` and the top-k
+/// singular values are the top-k eigenvalues, so Lanczos gives this in
+/// O(n²·k) instead of a full O(n³) eigendecomposition.
+pub fn eta(kmat: &Matrix, k: usize) -> f64 {
+    let total = kmat.fro_norm_sq();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let (vals, _) = lanczos_top_k(kmat, k, 0x17A);
+    let top: f64 = vals.iter().map(|&v| v.max(0.0) * v.max(0.0)).sum();
+    (top / total).min(1.0)
+}
+
+/// η for the RBF kernel of `x` at scale `sigma`.
+pub fn eta_for_sigma(x: &Matrix, sigma: f64, k: usize) -> f64 {
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let kmat = rbf_cross_cpu(x, x, gamma);
+    eta(&kmat, k)
+}
+
+/// Find σ with `η(σ) ≈ target` by bisection on a subsample of at most
+/// `max_sub` points (k scales with the subsample as ⌈n_sub/100⌉).
+pub fn calibrate_sigma(x: &Matrix, target_eta: f64, max_sub: usize, seed: u64) -> f64 {
+    assert!((0.0..1.0).contains(&target_eta));
+    let mut rng = Rng::new(seed);
+    let n = x.rows();
+    let xs = if n > max_sub {
+        let idx = rng.sample_without_replacement(n, max_sub);
+        x.select_rows(&idx)
+    } else {
+        x.clone()
+    };
+    let k = xs.rows().div_ceil(100).max(1);
+
+    // Bracket: large σ ⇒ K → all-ones ⇒ η → 1; small σ ⇒ K → I ⇒ η → k/n.
+    let mut lo = 1e-3;
+    let mut hi = 1.0;
+    while eta_for_sigma(&xs, hi, k) < target_eta && hi < 1e4 {
+        hi *= 2.0;
+    }
+    while eta_for_sigma(&xs, lo, k) > target_eta && lo > 1e-6 {
+        lo *= 0.5;
+    }
+    for _ in 0..40 {
+        let mid = (lo * hi).sqrt(); // geometric bisection (σ spans decades)
+        if eta_for_sigma(&xs, mid, k) < target_eta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi / lo < 1.01 {
+            break;
+        }
+    }
+    (lo * hi).sqrt()
+}
+
+/// Convert σ to the RBF precision γ = 1/(2σ²).
+pub fn gamma_of_sigma(sigma: f64) -> f64 {
+    1.0 / (2.0 * sigma * sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_blobs;
+
+    #[test]
+    fn eta_bounds_and_monotonicity_in_k() {
+        let ds = make_blobs("t", 60, 4, 3, 2.0, 0);
+        let k = rbf_cross_cpu(&ds.x, &ds.x, 0.5);
+        let e1 = eta(&k, 1);
+        let e5 = eta(&k, 5);
+        let e60 = eta(&k, 60);
+        assert!(e1 > 0.0 && e1 <= e5 && e5 <= e60);
+        assert!((e60 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eta_monotone_in_sigma() {
+        let ds = make_blobs("t", 80, 4, 3, 2.0, 1);
+        let small = eta_for_sigma(&ds.x, 0.05, 1);
+        let large = eta_for_sigma(&ds.x, 20.0, 1);
+        assert!(large > small, "eta(20)={large} <= eta(0.05)={small}");
+        assert!(large > 0.9);
+    }
+
+    #[test]
+    fn calibration_hits_target() {
+        let ds = make_blobs("t", 300, 6, 4, 2.0, 2);
+        for target in [0.9, 0.99] {
+            let sigma = calibrate_sigma(&ds.x, target, 300, 3);
+            let k = 300usize.div_ceil(100);
+            let achieved = eta_for_sigma(&ds.x, sigma, k);
+            assert!(
+                (achieved - target).abs() < 0.03,
+                "target {target}: sigma={sigma} achieved={achieved}"
+            );
+        }
+    }
+}

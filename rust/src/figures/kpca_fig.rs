@@ -1,0 +1,98 @@
+//! Figures 5 & 6: approximate KPCA quality — misalignment (eq. 10) of the
+//! approximate top-k eigenvectors against the exact ones, plotted against
+//! elapsed time (Fig 5) and against c = memory (Fig 6). k = 3.
+
+use super::Ctx;
+use crate::apps::kpca;
+use crate::cli::Args;
+use crate::coordinator::oracle::KernelOracle;
+use crate::sketch::SketchKind;
+use crate::spsd::{self, FastConfig};
+use crate::util::{Rng, Stopwatch};
+
+pub fn run(ctx: &Ctx, args: &Args) {
+    let k = args.get_usize("k", 3);
+    let datasets = ["PenDigit", "USPS", "Mushrooms", "DNA"];
+    let only = args.get("dataset").map(|s| s.to_lowercase());
+    let mut csv = ctx.csv(
+        "fig5_6.csv",
+        "dataset,n,k,c,method,s,misalignment,secs,entries",
+    );
+    for name in datasets {
+        if let Some(o) = &only {
+            if !name.eq_ignore_ascii_case(o) {
+                continue;
+            }
+        }
+        let spec = crate::data::find_spec(name).unwrap();
+        let (ds, oracle, _sig) = ctx.oracle_for(spec, 0.9);
+        let n = ds.x.rows();
+        // exact KPCA baseline (the expensive thing the paper contrasts)
+        let kfull = oracle.full();
+        let sw = Stopwatch::start();
+        let exact = kpca::exact_kpca(&kfull, k);
+        let exact_secs = sw.secs();
+        csv.row(&format!("{name},{n},{k},{n},exact,0,0.0,{exact_secs:.4},{}", n * n));
+
+        let cs = args.get_usize_list("cs", &[10, 20, 40, 80]);
+        for &c in &cs {
+            let c = c.min(n / 2);
+            for rep in 0..ctx.reps {
+                let mut rng = Rng::new(ctx.seed + rep as u64 * 31 + c as u64);
+                let p = spsd::uniform_p(n, c, &mut rng);
+                let mut runs: Vec<(String, usize, f64, f64, u64)> = Vec::new();
+                {
+                    oracle.reset_entries();
+                    let sw = Stopwatch::start();
+                    let a = spsd::nystrom(oracle.as_ref(), &p);
+                    let m = kpca::kpca_from_approx(&a, k);
+                    runs.push((
+                        "nystrom".into(),
+                        c,
+                        kpca::misalignment(&exact.v, &m.v),
+                        sw.secs(),
+                        a.entries_observed,
+                    ));
+                }
+                for f in [2usize, 4, 8] {
+                    let s = (f * c).min(n);
+                    oracle.reset_entries();
+                    let sw = Stopwatch::start();
+                    let a = spsd::fast(
+                        oracle.as_ref(),
+                        &p,
+                        FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: true },
+                        &mut rng,
+                    );
+                    let m = kpca::kpca_from_approx(&a, k);
+                    runs.push((
+                        format!("fast_s{f}c"),
+                        s,
+                        kpca::misalignment(&exact.v, &m.v),
+                        sw.secs(),
+                        a.entries_observed,
+                    ));
+                }
+                {
+                    oracle.reset_entries();
+                    let sw = Stopwatch::start();
+                    let a = spsd::prototype(oracle.as_ref(), &p);
+                    let m = kpca::kpca_from_approx(&a, k);
+                    runs.push((
+                        "prototype".into(),
+                        n,
+                        kpca::misalignment(&exact.v, &m.v),
+                        sw.secs(),
+                        a.entries_observed,
+                    ));
+                }
+                for (method, s, mis, secs, entries) in runs {
+                    csv.row(&format!(
+                        "{name},{n},{k},{c},{method},{s},{mis:.6e},{secs:.4},{entries}"
+                    ));
+                }
+            }
+        }
+    }
+    csv.finish();
+}

@@ -1,0 +1,81 @@
+//! Extension experiment (paper §1 motivation, Appendix A Lemma 11):
+//! kernel ridge regression — test MSE and fit time for the exact O(n³)
+//! solve vs the three approximation models' O(n c²) Woodbury path.
+
+use super::Ctx;
+use crate::apps::krr;
+use crate::cli::Args;
+use crate::coordinator::oracle::KernelOracle;
+use crate::coordinator::RbfOracle;
+use crate::data::{self, sigma};
+use crate::sketch::SketchKind;
+use crate::spsd::{self, FastConfig};
+use crate::util::{Rng, Stopwatch};
+use std::sync::Arc;
+
+pub fn run(ctx: &Ctx, args: &Args) {
+    let spec = data::find_spec(args.get_str("dataset", "Cpusmall")).expect("unknown dataset");
+    let ds = spec.generate(ctx.scale, ctx.seed);
+    let mut rng0 = Rng::new(ctx.seed ^ 0x44AA);
+    let (train, test) = data::train_test_split(&ds, &mut rng0);
+    let n1 = train.x.rows();
+    // smooth synthetic regression target over the features
+    let f = |row: &[f64]| row.iter().map(|x| (0.6 * x).sin()).sum::<f64>();
+    let ytr: Vec<f64> = (0..n1).map(|i| f(train.x.row(i))).collect();
+    let yte: Vec<f64> = (0..test.x.rows()).map(|i| f(test.x.row(i))).collect();
+
+    let sig = sigma::calibrate_sigma(&train.x, 0.95, 500, ctx.seed);
+    let oracle = Arc::new(RbfOracle::new(
+        Arc::new(train.x.clone()),
+        sigma::gamma_of_sigma(sig),
+        Arc::clone(&ctx.engine),
+    ));
+    let kx = oracle.cross(&test.x);
+    let alpha = args.get_f64("alpha", 0.1);
+
+    let mut csv = ctx.csv("krr.csv", "dataset,n_train,c,method,s,mse,fit_secs");
+    // exact baseline
+    let kfull = oracle.full();
+    let sw = Stopwatch::start();
+    let exact = krr::fit_exact(&kfull, alpha, &ytr);
+    let t_exact = sw.secs();
+    let mse_exact = krr::mse(&exact.predict(&kx), &yte);
+    csv.row(&format!("{},{n1},{n1},exact,0,{mse_exact:.6e},{t_exact:.4}", spec.name));
+
+    let cs = args.get_usize_list("cs", &[10, 20, 40, 80]);
+    for &c in &cs {
+        let c = c.min(n1 / 2);
+        for rep in 0..ctx.reps {
+            let mut rng = Rng::new(ctx.seed + 31 * rep as u64 + c as u64);
+            let p = spsd::uniform_p(n1, c, &mut rng);
+            let mut eval = |method: &str, s: usize, approx: &spsd::SpsdApprox, secs: f64| {
+                let sw = Stopwatch::start();
+                let model = krr::fit_approx(approx, alpha, &ytr);
+                let mse = krr::mse(&model.predict(&kx), &yte);
+                csv.row(&format!(
+                    "{},{n1},{c},{method},{s},{mse:.6e},{:.4}",
+                    spec.name,
+                    secs + sw.secs()
+                ));
+            };
+            let sw = Stopwatch::start();
+            let ny = spsd::nystrom(oracle.as_ref(), &p);
+            eval("nystrom", c, &ny, sw.secs());
+            for f in [4usize, 8] {
+                let s = (f * c).min(n1);
+                let sw = Stopwatch::start();
+                let fa = spsd::fast(
+                    oracle.as_ref(),
+                    &p,
+                    FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: true },
+                    &mut rng,
+                );
+                eval(&format!("fast_s{f}c"), s, &fa, sw.secs());
+            }
+            let sw = Stopwatch::start();
+            let pr = spsd::prototype(oracle.as_ref(), &p);
+            eval("prototype", n1, &pr, sw.secs());
+        }
+    }
+    csv.finish();
+}

@@ -1,0 +1,164 @@
+//! Experiment drivers: one function per paper figure/table (DESIGN.md §4).
+//!
+//! Each driver prints the series the paper plots and writes a CSV under
+//! `out/`. They are shared by the `repro` CLI, the cargo benches, and the
+//! examples. Sizes default to laptop scale (`--scale`, `--reps` adjust).
+
+pub mod ablations;
+pub mod cur_fig;
+pub mod e2e;
+pub mod error_curves;
+pub mod kpca_class;
+pub mod kpca_fig;
+pub mod krr_fig;
+pub mod spectral_fig;
+pub mod tables;
+
+use crate::cli::Args;
+use crate::coordinator::{KernelEngine, RbfOracle};
+use crate::data::{self, sigma, Dataset};
+use std::io::Write;
+use std::sync::Arc;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub engine: Arc<KernelEngine>,
+    pub scale: f64,
+    pub reps: usize,
+    pub seed: u64,
+    pub out_dir: std::path::PathBuf,
+}
+
+impl Ctx {
+    pub fn from_args(args: &Args) -> Ctx {
+        let engine = if args.flag("cpu") {
+            Arc::new(KernelEngine::cpu())
+        } else {
+            Arc::new(KernelEngine::auto())
+        };
+        if engine.is_pjrt() {
+            eprintln!("# engine: PJRT (AOT artifacts)");
+        } else if args.flag("cpu") {
+            eprintln!("# engine: pure-rust (--cpu)");
+        } else {
+            eprintln!("# engine: pure-rust fallback (run `make artifacts` for PJRT)");
+        }
+        let out_dir = std::path::PathBuf::from(args.get_str("out", "out"));
+        let _ = std::fs::create_dir_all(&out_dir);
+        Ctx {
+            engine,
+            scale: args.get_f64("scale", 0.12),
+            reps: args.get_usize("reps", 3),
+            seed: args.get_u64("seed", 42),
+            out_dir,
+        }
+    }
+
+    /// Generate a dataset + calibrated RBF oracle at `target_eta`.
+    pub fn oracle_for(&self, spec: data::DatasetSpec, target_eta: f64) -> (Dataset, Arc<RbfOracle>, f64) {
+        let ds = spec.generate(self.scale, self.seed);
+        let sig = sigma::calibrate_sigma(&ds.x, target_eta, 600, self.seed ^ 0x5161);
+        let gamma = sigma::gamma_of_sigma(sig);
+        let oracle = Arc::new(RbfOracle::new(Arc::new(ds.x.clone()), gamma, Arc::clone(&self.engine)));
+        (ds, oracle, sig)
+    }
+
+    /// Open a CSV in the output directory.
+    pub fn csv(&self, name: &str, header: &str) -> CsvOut {
+        let path = self.out_dir.join(name);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).expect("create csv"));
+        writeln!(f, "{header}").unwrap();
+        println!("{header}");
+        CsvOut { f, path }
+    }
+}
+
+/// CSV writer that mirrors rows to stdout.
+pub struct CsvOut {
+    f: std::io::BufWriter<std::fs::File>,
+    pub path: std::path::PathBuf,
+}
+
+impl CsvOut {
+    pub fn row(&mut self, line: &str) {
+        writeln!(self.f, "{line}").unwrap();
+        println!("{line}");
+    }
+
+    pub fn finish(mut self) {
+        self.f.flush().unwrap();
+        eprintln!("# wrote {}", self.path.display());
+    }
+}
+
+const USAGE: &str = "\
+repro — reproduce 'Towards More Efficient SPSD Matrix Approximation and CUR
+Matrix Decomposition' (Wang, Zhang & Zhang, 2015)
+
+USAGE: repro <command> [--scale F] [--reps N] [--seed N] [--cpu] [--out DIR]
+
+COMMANDS
+  fig2        CUR image reconstruction vs (s_c, s_r)        [paper Fig 2]
+  fig3        kernel approx error vs s/n, uniform C         [paper Fig 3]
+  fig4        same with uniform+adaptive^2 C                [paper Fig 4]
+  fig5 fig6   KPCA misalignment vs time / vs c              [paper Fig 5-6]
+  fig7 fig8   classification error vs c / time (k=3)        [paper Fig 7-8]
+  fig9 fig10  classification error vs c / time (k=10)       [paper Fig 9-10]
+  fig11 fig12 spectral clustering NMI vs c / time           [paper Fig 11-12]
+  table3      U-matrix time + #entries per model            [paper Table 3]
+  table4      sketch cost for the 5 S families              [paper Table 4]
+  table5      CUR U-matrix cost: optimal vs fast            [paper Table 5]
+  e2e         end-to-end approximation service demo
+  ablate      DESIGN.md §5 ablations (P⊂S, leverage scaling, tile fill)
+  krr         kernel ridge regression: exact vs approximate solves
+  all         every figure + table at default scale
+
+Common options:
+  --scale F   dataset size factor vs the paper's n (default 0.12)
+  --reps N    repetitions per randomized point (default 3)
+  --cpu       force the pure-rust kernel engine (skip PJRT)
+  --out DIR   CSV output directory (default ./out)
+";
+
+/// CLI dispatch for the `repro` binary.
+pub fn run_cli() {
+    let args = Args::from_env();
+    let cmd = args.command.clone().unwrap_or_default();
+    let ctx = || Ctx::from_args(&args);
+    match cmd.as_str() {
+        "fig2" => cur_fig::fig2(&ctx(), &args),
+        "fig3" => error_curves::run(&ctx(), &args, false),
+        "fig4" => error_curves::run(&ctx(), &args, true),
+        "fig5" | "fig6" => kpca_fig::run(&ctx(), &args),
+        "fig7" | "fig8" => kpca_class::run(&ctx(), &args, 3),
+        "fig9" | "fig10" => kpca_class::run(&ctx(), &args, 10),
+        "fig11" | "fig12" => spectral_fig::run(&ctx(), &args),
+        "table3" => tables::table3(&ctx(), &args),
+        "table4" => tables::table4(&ctx(), &args),
+        "table5" => tables::table5(&ctx(), &args),
+        "e2e" => e2e::run(&ctx(), &args),
+        "ablate" => ablations::run(&ctx(), &args),
+        "krr" => krr_fig::run(&ctx(), &args),
+        "all" => {
+            let c = ctx();
+            cur_fig::fig2(&c, &args);
+            error_curves::run(&c, &args, false);
+            error_curves::run(&c, &args, true);
+            kpca_fig::run(&c, &args);
+            kpca_class::run(&c, &args, 3);
+            kpca_class::run(&c, &args, 10);
+            spectral_fig::run(&c, &args);
+            tables::table3(&c, &args);
+            tables::table4(&c, &args);
+            tables::table5(&c, &args);
+            e2e::run(&c, &args);
+        }
+        _ => {
+            print!("{USAGE}");
+            if !cmd.is_empty() {
+                eprintln!("\nerror: unknown command {cmd:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Figures 11 & 12: approximate spectral clustering — NMI against c
+//! (Fig 11) and against elapsed time (Fig 12).
+
+use super::Ctx;
+use crate::apps::{metrics::nmi, spectral};
+use crate::cli::Args;
+use crate::data;
+use crate::sketch::SketchKind;
+use crate::spsd::{self, FastConfig};
+use crate::util::{Rng, Stopwatch};
+
+pub fn run(ctx: &Ctx, args: &Args) {
+    let datasets = ["PenDigit", "USPS", "Mushrooms", "DNA"];
+    let only = args.get("dataset").map(|s| s.to_lowercase());
+    let mut csv = ctx.csv("fig11_12.csv", "dataset,n,k,c,method,s,nmi,secs");
+    for name in datasets {
+        if let Some(o) = &only {
+            if !name.eq_ignore_ascii_case(o) {
+                continue;
+            }
+        }
+        let spec = data::find_spec(name).unwrap();
+        let (ds, oracle, _sig) = ctx.oracle_for(spec, 0.9);
+        let n = ds.x.rows();
+        let k = ds.classes;
+        let cs = args.get_usize_list("cs", &[10, 20, 40, 80]);
+        for &c in &cs {
+            let c = c.min(n / 2);
+            for rep in 0..ctx.reps {
+                let mut rng = Rng::new(ctx.seed + rep as u64 * 977 + c as u64);
+                let p = spsd::uniform_p(n, c, &mut rng);
+                let mut eval =
+                    |method: &str, s: usize, approx: &spsd::SpsdApprox, secs_build: f64, rng: &mut Rng| {
+                        let sw = Stopwatch::start();
+                        let pred = spectral::spectral_cluster_from_approx(approx, k, rng);
+                        let score = nmi(&pred, &ds.labels);
+                        csv.row(&format!(
+                            "{name},{n},{k},{c},{method},{s},{score:.4},{:.4}",
+                            secs_build + sw.secs()
+                        ));
+                    };
+                let sw = Stopwatch::start();
+                let a = spsd::nystrom(oracle.as_ref(), &p);
+                eval("nystrom", c, &a, sw.secs(), &mut rng);
+                for f in [4usize, 8] {
+                    let s = (f * c).min(n);
+                    let sw = Stopwatch::start();
+                    let a = spsd::fast(
+                        oracle.as_ref(),
+                        &p,
+                        FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: true },
+                        &mut rng,
+                    );
+                    eval(&format!("fast_s{f}c"), s, &a, sw.secs(), &mut rng);
+                }
+                let sw = Stopwatch::start();
+                let a = spsd::prototype(oracle.as_ref(), &p);
+                eval("prototype", n, &a, sw.secs(), &mut rng);
+            }
+        }
+    }
+    csv.finish();
+}

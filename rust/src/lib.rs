@@ -1,0 +1,36 @@
+//! `fastspsd` — Fast SPSD matrix approximation and CUR decomposition.
+//!
+//! Rust + JAX + Pallas reproduction of *Wang, Zhang & Zhang (2015), "Towards
+//! More Efficient SPSD Matrix Approximation and CUR Matrix Decomposition"*.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`runtime`] loads the AOT-compiled HLO artifacts (Layer 1/2, authored in
+//!   python/jax/pallas at build time) onto a PJRT CPU client.
+//! - [`coordinator`] is the Layer-3 service: it tiles kernel matrices into
+//!   fixed-shape blocks, routes block evaluations to PJRT executables across
+//!   a worker pool, and assembles sketches without materializing `K`.
+//! - [`spsd`] / [`cur`] implement the paper's models (Nyström, prototype,
+//!   fast; CUR with optimal and fast `U`).
+//! - [`sketch`] implements the five sketching matrices of Lemma 2 / Table 4.
+//! - [`linalg`], [`pool`], [`cli`], [`benchkit`], [`testkit`], [`util`] are
+//!   substrates built from scratch (the image has no tokio/clap/criterion/
+//!   proptest — see DESIGN.md §3).
+//! - [`apps`] are the paper's evaluation workloads: KPCA, spectral
+//!   clustering, KNN classification, and their metrics.
+//! - [`data`] generates the synthetic stand-ins for the paper's LIBSVM
+//!   datasets and the Fig-2 image.
+
+pub mod apps;
+pub mod benchkit;
+pub mod figures;
+pub mod cli;
+pub mod coordinator;
+pub mod cur;
+pub mod data;
+pub mod linalg;
+pub mod pool;
+pub mod runtime;
+pub mod sketch;
+pub mod spsd;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,174 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! Used for the c x c / s x s inner problems (Lemma 10's `Z`, Nyström's
+//! `W`), the exact baselines in the experiments, and leverage scores.
+
+use super::Matrix;
+
+/// Eigendecomposition of a symmetric matrix: `A = V diag(l) V^T`,
+/// eigenvalues descending.
+pub struct Eigh {
+    pub values: Vec<f64>,
+    /// n x n, column j is the eigenvector for values[j].
+    pub vectors: Matrix,
+}
+
+const MAX_SWEEPS: usize = 100;
+
+/// Cyclic Jacobi eigendecomposition. `a` must be symmetric (enforced up to
+/// round-off by symmetrizing a copy).
+pub fn eigh(a: &Matrix) -> Eigh {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh needs a square matrix");
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Matrix::identity(n);
+    if n <= 1 {
+        return Eigh { values: (0..n).map(|i| m[(i, i)]).collect(), vectors: v };
+    }
+    for _sweep in 0..MAX_SWEEPS {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        let diag_scale: f64 = (0..n).map(|i| m[(i, i)] * m[(i, i)]).sum::<f64>().max(1e-300);
+        if off <= 1e-28 * diag_scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq == 0.0 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                if apq.abs() < 1e-18 * (app.abs() + aqq.abs() + 1e-300) {
+                    continue;
+                }
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // rows/cols p and q of m
+                for i in 0..n {
+                    let mip = m[(i, p)];
+                    let miq = m[(i, q)];
+                    m[(i, p)] = c * mip - s * miq;
+                    m[(i, q)] = s * mip + c * miq;
+                }
+                for j in 0..n {
+                    let mpj = m[(p, j)];
+                    let mqj = m[(q, j)];
+                    m[(p, j)] = c * mpj - s * mqj;
+                    m[(q, j)] = s * mpj + c * mqj;
+                }
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    Eigh {
+        values: order.iter().map(|&i| diag[i]).collect(),
+        vectors: v.select_cols(&order),
+    }
+}
+
+impl Eigh {
+    /// Top-k eigenpairs (values may include negatives for indefinite input).
+    pub fn top_k(&self, k: usize) -> (Vec<f64>, Matrix) {
+        let k = k.min(self.values.len());
+        let idx: Vec<usize> = (0..k).collect();
+        (self.values[..k].to_vec(), self.vectors.select_cols(&idx))
+    }
+
+    /// Reconstruct `V diag(l) V^T`.
+    pub fn reconstruct(&self) -> Matrix {
+        let vl = Matrix::from_fn(self.vectors.rows(), self.values.len(), |i, j| {
+            self.vectors[(i, j)] * self.values[j]
+        });
+        vl.matmul_tr(&self.vectors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_spsd(n: usize, rank: usize, rng: &mut Rng) -> Matrix {
+        let b = Matrix::randn(n, rank, rng);
+        b.matmul_tr(&b)
+    }
+
+    #[test]
+    fn reconstructs_symmetric() {
+        let mut rng = Rng::new(0);
+        for &n in &[1usize, 2, 5, 12, 30] {
+            let mut a = Matrix::randn(n, n, &mut rng);
+            a.symmetrize();
+            let e = eigh(&a);
+            assert!(e.reconstruct().max_abs_diff(&a) < 1e-8, "n={n}");
+            // descending
+            for i in 1..n {
+                assert!(e.values[i - 1] >= e.values[i] - 1e-10);
+            }
+            // orthonormal
+            let vtv = e.vectors.tr_matmul(&e.vectors);
+            assert!(vtv.max_abs_diff(&Matrix::identity(n)) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn known_eigenvalues() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = eigh(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spsd_has_nonnegative_spectrum() {
+        let mut rng = Rng::new(1);
+        let a = random_spsd(20, 5, &mut rng);
+        let e = eigh(&a);
+        assert!(e.values.iter().all(|&l| l > -1e-9));
+        // rank 5: exactly 5 eigenvalues materially positive
+        assert!(e.values[4] > 1e-6);
+        assert!(e.values[5].abs() < 1e-8);
+    }
+
+    #[test]
+    fn eigenvector_equation_holds() {
+        let mut rng = Rng::new(2);
+        let a = random_spsd(10, 10, &mut rng);
+        let e = eigh(&a);
+        for j in 0..3 {
+            let v: Vec<f64> = e.vectors.col(j);
+            let av = a.matvec(&v);
+            for i in 0..10 {
+                assert!((av[i] - e.values[j] * v[i]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::diag(&[1.0, 5.0, -2.0]);
+        let e = eigh(&a);
+        assert_eq!(e.values.len(), 3);
+        assert!((e.values[0] - 5.0).abs() < 1e-12);
+        assert!((e.values[2] + 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! Blocked, threaded GEMM — the L3 hot path for sketch products.
+//!
+//! Strategy: pack the B panel transposed so the inner loop is two contiguous
+//! slices (auto-vectorizes), block for L1/L2, and split the M dimension
+//! across `std::thread::scope` workers when the problem is big enough to
+//! amortize thread spawn. Tuning notes live in EXPERIMENTS.md §Perf.
+
+use super::Matrix;
+
+/// Number of worker threads for large products (0 = all cores).
+fn thread_count(work: usize) -> usize {
+    // Threshold chosen so small algebra (c x c) stays single-threaded.
+    const PAR_THRESHOLD: usize = 1 << 21; // ~2M flops
+    if work < PAR_THRESHOLD {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// C = A * B.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "gemm dims: {}x{} * {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    // Pack B^T so dot products run over contiguous rows of both operands.
+    let bt = b.transpose();
+    let mut c = Matrix::zeros(m, n);
+    gemm_rows_nt(a, &bt, &mut c, m * n * k);
+    c
+}
+
+/// C = A^T * B (A is k x m, result m x n) without materializing A^T.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn dims");
+    let at = a.transpose();
+    let bt = b.transpose();
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    gemm_rows_nt(&at, &bt, &mut c, a.cols() * b.cols() * a.rows());
+    c
+}
+
+/// C = A * B^T — both operands already row-major in the "right" layout.
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt dims");
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    gemm_rows_nt(a, b, &mut c, a.rows() * b.rows() * a.cols());
+    c
+}
+
+/// Core: C[i, j] = sum_k A[i, k] * BT[j, k]; rows of C split across threads.
+fn gemm_rows_nt(a: &Matrix, bt: &Matrix, c: &mut Matrix, work: usize) {
+    let m = a.rows();
+    let n = bt.rows();
+    let k = a.cols();
+    debug_assert_eq!(bt.cols(), k);
+    let nthreads = thread_count(work).min(m.max(1));
+    if nthreads <= 1 {
+        let rows = c.data_mut();
+        gemm_chunk(a, bt, rows, 0, m, n, k);
+        return;
+    }
+    let chunk_rows = m.div_ceil(nthreads);
+    let a_ref = &*a;
+    let bt_ref = &*bt;
+    let mut chunks: Vec<&mut [f64]> = c.data_mut().chunks_mut(chunk_rows * n).collect();
+    std::thread::scope(|s| {
+        for (t, chunk) in chunks.iter_mut().enumerate() {
+            let r0 = t * chunk_rows;
+            let r1 = (r0 + chunk.len() / n).min(m);
+            let chunk: &mut [f64] = chunk;
+            s.spawn(move || gemm_chunk(a_ref, bt_ref, chunk, r0, r1, n, k));
+        }
+    });
+}
+
+/// Compute rows [r0, r1) of C into `out` (which holds exactly those rows).
+///
+/// 2x4 register-blocked micro-kernel over (i, j) with a k-blocked outer
+/// loop so the active B panel stays in L1/L2 at large k. Perf history in
+/// EXPERIMENTS.md §Perf.
+#[inline]
+fn gemm_chunk(a: &Matrix, bt: &Matrix, out: &mut [f64], r0: usize, r1: usize, n: usize, k: usize) {
+    const JB: usize = 4;
+    const KB: usize = 256; // k-panel: 4 rows of B = 8 KiB ≪ L1
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        // Only sub-block j when the full B k-panel overflows L2 (~512 KiB);
+        // otherwise the extra loop bookkeeping costs more than it saves.
+        let jblk = if n * (k1 - k0) * 8 > 512 * 1024 { 64 } else { n };
+        let mut jb0 = 0;
+        while jb0 < n {
+        let jb1 = (jb0 + jblk).min(n);
+        let mut i = r0;
+        // 2-row blocks of A amortize each B panel load across two outputs.
+        while i + 2 <= r1 {
+            let a0 = &a.row(i)[k0..k1];
+            let a1 = &a.row(i + 1)[k0..k1];
+            let (c0_all, c1_all) = out[(i - r0) * n..].split_at_mut(n);
+            let c0 = &mut c0_all[..n];
+            let c1 = &mut c1_all[..n];
+            let mut j = jb0;
+            while j + JB <= jb1 {
+                let b0 = &bt.row(j)[k0..k1];
+                let b1 = &bt.row(j + 1)[k0..k1];
+                let b2 = &bt.row(j + 2)[k0..k1];
+                let b3 = &bt.row(j + 3)[k0..k1];
+                let (mut s00, mut s01, mut s02, mut s03) = (0.0f64, 0.0, 0.0, 0.0);
+                let (mut s10, mut s11, mut s12, mut s13) = (0.0f64, 0.0, 0.0, 0.0);
+                for t in 0..a0.len() {
+                    let av0 = a0[t];
+                    let av1 = a1[t];
+                    s00 += av0 * b0[t];
+                    s01 += av0 * b1[t];
+                    s02 += av0 * b2[t];
+                    s03 += av0 * b3[t];
+                    s10 += av1 * b0[t];
+                    s11 += av1 * b1[t];
+                    s12 += av1 * b2[t];
+                    s13 += av1 * b3[t];
+                }
+                c0[j] += s00;
+                c0[j + 1] += s01;
+                c0[j + 2] += s02;
+                c0[j + 3] += s03;
+                c1[j] += s10;
+                c1[j + 1] += s11;
+                c1[j + 2] += s12;
+                c1[j + 3] += s13;
+                j += JB;
+            }
+            while j < jb1 {
+                let brow = &bt.row(j)[k0..k1];
+                c0[j] += dot(a0, brow);
+                c1[j] += dot(a1, brow);
+                j += 1;
+            }
+            i += 2;
+        }
+        // remainder row
+        while i < r1 {
+            let arow = &a.row(i)[k0..k1];
+            let crow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            let mut j = jb0;
+            while j + JB <= jb1 {
+                let b0 = &bt.row(j)[k0..k1];
+                let b1 = &bt.row(j + 1)[k0..k1];
+                let b2 = &bt.row(j + 2)[k0..k1];
+                let b3 = &bt.row(j + 3)[k0..k1];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+                for t in 0..arow.len() {
+                    let av = arow[t];
+                    s0 += av * b0[t];
+                    s1 += av * b1[t];
+                    s2 += av * b2[t];
+                    s3 += av * b3[t];
+                }
+                crow[j] += s0;
+                crow[j + 1] += s1;
+                crow[j + 2] += s2;
+                crow[j + 3] += s3;
+                j += JB;
+            }
+            while j < jb1 {
+                crow[j] += dot(arow, &bt.row(j)[k0..k1]);
+                j += 1;
+            }
+            i += 1;
+        }
+        jb0 = jb1;
+        }
+        k0 = k1;
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for kk in 0..a.cols() {
+                    s += a[(i, kk)] * b[(kk, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Rng::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (7, 4, 9), (16, 16, 16), (33, 17, 29)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let c = gemm(&a, &b);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-10, "{}x{}x{}", m, k, n);
+        }
+    }
+
+    #[test]
+    fn matches_naive_threaded_size() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(200, 150, &mut rng);
+        let b = Matrix::randn(150, 180, &mut rng);
+        let c = gemm(&a, &b);
+        assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-9);
+    }
+
+    #[test]
+    fn tn_and_nt_variants() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(20, 30, &mut rng);
+        let b = Matrix::randn(20, 25, &mut rng);
+        let c = gemm_tn(&a, &b); // 30 x 25
+        assert!(c.max_abs_diff(&naive(&a.transpose(), &b)) < 1e-10);
+        let d = Matrix::randn(15, 30, &mut rng);
+        let e = gemm_nt(&a, &d); // 20 x 15
+        assert!(e.max_abs_diff(&naive(&a, &d.transpose())) < 1e-10);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(10, 10, &mut rng);
+        assert!(gemm(&a, &Matrix::identity(10)).max_abs_diff(&a) < 1e-12);
+        assert!(gemm(&Matrix::identity(10), &a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        gemm(&Matrix::zeros(2, 3), &Matrix::zeros(4, 2));
+    }
+}

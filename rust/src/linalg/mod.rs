@@ -1,0 +1,480 @@
+//! Dense linear algebra substrate, built from scratch (no BLAS/LAPACK in
+//! the image). Row-major `f64` matrices with the operations the paper's
+//! algorithms need: blocked/threaded GEMM, Householder QR, one-sided Jacobi
+//! SVD, cyclic-Jacobi symmetric eigendecomposition, Moore–Penrose
+//! pseudo-inverse, and structured solves (Appendix A of the paper).
+
+pub mod eig;
+pub mod gemm;
+pub mod lanczos;
+pub mod pinv;
+pub mod qr;
+pub mod solve;
+pub mod sparse;
+pub mod svd;
+
+pub use eig::{eigh, Eigh};
+pub use lanczos::lanczos_top_k;
+pub use pinv::pinv;
+pub use qr::{qr_thin, QrThin};
+pub use svd::{svd_thin, SvdThin};
+
+use crate::util::Rng;
+use std::fmt;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            let row: Vec<String> = (0..cmax).map(|j| format!("{:9.4}", self[(i, j)])).collect();
+            writeln!(f, "  [{}{}]", row.join(", "), if cmax < self.cols { ", ..." } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  ...")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Matrix {
+    // ------------------------------------------------------- constructors
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Matrix with i.i.d. standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix::from_fn(rows, cols, |_, _| rng.gaussian())
+    }
+
+    pub fn diag(values: &[f64]) -> Self {
+        let n = values.len();
+        let mut m = Matrix::zeros(n, n);
+        for (i, &v) in values.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    // ------------------------------------------------------------ queries
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    // --------------------------------------------------------- structure
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Rows selected by `idx` (may repeat / reorder).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Columns selected by `idx`.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (c, &j) in idx.iter().enumerate() {
+                dst[c] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Contiguous sub-block `[r0..r1) x [c0..c1)`.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `src` into this matrix starting at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Matrix) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for i in 0..src.rows {
+            self.row_mut(r0 + i)[c0..c0 + src.cols].copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        out.set_block(0, 0, self);
+        out.set_block(0, self.cols, other);
+        out
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Matrix::zeros(self.rows + other.rows, self.cols);
+        out.set_block(0, 0, self);
+        out.set_block(self.rows, 0, other);
+        out
+    }
+
+    // --------------------------------------------------------- arithmetic
+
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        gemm::gemm(self, other)
+    }
+
+    /// `self^T * other` without forming the transpose.
+    pub fn tr_matmul(&self, other: &Matrix) -> Matrix {
+        gemm::gemm_tn(self, other)
+    }
+
+    /// `self * other^T` without forming the transpose.
+    pub fn matmul_tr(&self, other: &Matrix) -> Matrix {
+        gemm::gemm_nt(self, other)
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// `self^T * x`.
+    pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += a * xi;
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v *= s;
+        }
+        out
+    }
+
+    fn zip(&self, other: &Matrix, f: impl Fn(f64, f64) -> f64) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    // ------------------------------------------------------------- norms
+
+    pub fn fro_norm(&self) -> f64 {
+        self.fro_norm_sq().sqrt()
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&v| v * v).sum()
+    }
+
+    /// Spectral norm estimate via power iteration on `A^T A`.
+    pub fn spectral_norm_est(&self, iters: usize, rng: &mut Rng) -> f64 {
+        let mut v: Vec<f64> = (0..self.cols).map(|_| rng.gaussian()).collect();
+        let mut norm = 0.0;
+        for _ in 0..iters {
+            let av = self.matvec(&v);
+            let atav = self.tr_matvec(&av);
+            norm = atav.iter().map(|x| x * x).sum::<f64>().sqrt().sqrt();
+            let n2: f64 = atav.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if n2 == 0.0 {
+                return 0.0;
+            }
+            v = atav.iter().map(|x| x / n2).collect();
+        }
+        norm
+    }
+
+    /// Trace (square matrices).
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Symmetrize in place: `(A + A^T) / 2`.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    // ------------------------------------------------------- conversions
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Matrix {
+        Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn index_and_rowcol() {
+        let m = small();
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.col(2), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = small();
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t[(2, 1)], 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let m = small();
+        let r = m.select_rows(&[1, 0, 1]);
+        assert_eq!(r.row(0), &[4.0, 5.0, 6.0]);
+        assert_eq!(r.rows(), 3);
+        let c = m.select_cols(&[2, 0]);
+        assert_eq!(c.row(0), &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn block_and_set_block() {
+        let m = small();
+        let b = m.block(0, 2, 1, 3);
+        assert_eq!(b.row(0), &[2.0, 3.0]);
+        let mut z = Matrix::zeros(3, 4);
+        z.set_block(1, 2, &b);
+        assert_eq!(z[(1, 2)], 2.0);
+        assert_eq!(z[(2, 3)], 6.0);
+    }
+
+    #[test]
+    fn concat() {
+        let m = small();
+        let h = m.hcat(&m);
+        assert_eq!(h.cols(), 6);
+        assert_eq!(h[(1, 4)], 5.0);
+        let v = m.vcat(&m);
+        assert_eq!(v.rows(), 4);
+        assert_eq!(v[(3, 0)], 4.0);
+    }
+
+    #[test]
+    fn matvec_and_tr_matvec() {
+        let m = small();
+        assert_eq!(m.matvec(&[1.0, 0.0, 1.0]), vec![4.0, 10.0]);
+        assert_eq!(m.tr_matvec(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let m = small();
+        assert_eq!(m.add(&m), m.scale(2.0));
+        assert_eq!(m.sub(&m), Matrix::zeros(2, 3));
+        let mut a = m.clone();
+        a.axpy(2.0, &m);
+        assert_eq!(a, m.scale(3.0));
+    }
+
+    #[test]
+    fn norms_and_trace() {
+        let m = Matrix::diag(&[3.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.trace(), 7.0);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let m = Matrix::diag(&[1.0, -7.0, 3.0]);
+        let mut rng = Rng::new(0);
+        let est = m.spectral_norm_est(50, &mut rng);
+        assert!((est - 7.0).abs() < 1e-6, "est={est}");
+    }
+
+    #[test]
+    fn symmetrize() {
+        let mut m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 4.0, 3.0]);
+        m.symmetrize();
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = small();
+        let f = m.to_f32();
+        let back = Matrix::from_f32(2, 3, &f);
+        assert!(m.max_abs_diff(&back) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+}

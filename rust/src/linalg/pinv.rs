@@ -1,0 +1,83 @@
+//! Moore–Penrose pseudo-inverse via the thin SVD.
+
+use super::svd::svd_thin;
+use super::Matrix;
+
+/// `A† = V diag(1/s) U^T` with LAPACK-style rank tolerance.
+pub fn pinv(a: &Matrix) -> Matrix {
+    if a.rows() == 0 || a.cols() == 0 {
+        return Matrix::zeros(a.cols(), a.rows());
+    }
+    let f = svd_thin(a);
+    let rank = f.rank(a.rows(), a.cols());
+    if rank == 0 {
+        return Matrix::zeros(a.cols(), a.rows());
+    }
+    // V_r diag(1/s_r) U_r^T
+    let vs = Matrix::from_fn(f.v.rows(), rank, |i, j| f.v[(i, j)] / f.s[j]);
+    let idx: Vec<usize> = (0..rank).collect();
+    let ur = f.u.select_cols(&idx);
+    vs.matmul_tr(&ur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// The four Penrose conditions.
+    fn check_penrose(a: &Matrix, ap: &Matrix, tol: f64) {
+        let a_ap_a = a.matmul(ap).matmul(a);
+        assert!(a_ap_a.max_abs_diff(a) < tol, "A A† A = A");
+        let ap_a_ap = ap.matmul(a).matmul(ap);
+        assert!(ap_a_ap.max_abs_diff(ap) < tol, "A† A A† = A†");
+        let aap = a.matmul(ap);
+        assert!(aap.max_abs_diff(&aap.transpose()) < tol, "(A A†) symmetric");
+        let apa = ap.matmul(a);
+        assert!(apa.max_abs_diff(&apa.transpose()) < tol, "(A† A) symmetric");
+    }
+
+    #[test]
+    fn full_rank_square_is_inverse() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(6, 6, &mut rng);
+        let ap = pinv(&a);
+        assert!(a.matmul(&ap).max_abs_diff(&Matrix::identity(6)) < 1e-8);
+    }
+
+    #[test]
+    fn penrose_conditions_various_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(8, 8), (12, 5), (5, 12)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            check_penrose(&a, &pinv(&a), 1e-8);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_penrose() {
+        let mut rng = Rng::new(2);
+        let b = Matrix::randn(10, 3, &mut rng);
+        let c = Matrix::randn(3, 8, &mut rng);
+        let a = b.matmul(&c);
+        check_penrose(&a, &pinv(&a), 1e-7);
+    }
+
+    #[test]
+    fn zero_and_empty() {
+        let z = pinv(&Matrix::zeros(4, 2));
+        assert_eq!((z.rows(), z.cols()), (2, 4));
+        assert_eq!(z, Matrix::zeros(2, 4));
+        let e = pinv(&Matrix::zeros(0, 3));
+        assert_eq!((e.rows(), e.cols()), (3, 0));
+    }
+
+    #[test]
+    fn diag_pinv() {
+        let a = Matrix::diag(&[2.0, 0.0, 4.0]);
+        let ap = pinv(&a);
+        assert!((ap[(0, 0)] - 0.5).abs() < 1e-12);
+        assert!(ap[(1, 1)].abs() < 1e-12);
+        assert!((ap[(2, 2)] - 0.25).abs() < 1e-12);
+    }
+}

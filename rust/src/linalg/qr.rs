@@ -1,0 +1,151 @@
+//! Thin Householder QR: `A (m x n, m >= n) = Q (m x n) R (n x n)`.
+//!
+//! Used for orthonormal bases of sketches (Algorithm 1 step 3) and inside
+//! the pseudo-inverse fallbacks. Column pivoting is not needed for the
+//! paper's algorithms; rank deficiency is handled downstream by the SVD.
+
+use super::Matrix;
+
+/// Thin QR factorization result.
+pub struct QrThin {
+    /// m x n with orthonormal columns (spanning col(A) when A has full rank).
+    pub q: Matrix,
+    /// n x n upper triangular.
+    pub r: Matrix,
+}
+
+/// Compute the thin QR of `a` (requires `m >= n`).
+pub fn qr_thin(a: &Matrix) -> QrThin {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "qr_thin needs m >= n, got {m}x{n}");
+    let mut r = a.clone(); // will be reduced in place
+    // Householder vectors stored per column.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // norm of column k below (and including) row k
+        let mut alpha = 0.0;
+        for i in k..m {
+            alpha += r[(i, k)] * r[(i, k)];
+        }
+        alpha = alpha.sqrt();
+        if r[(k, k)] > 0.0 {
+            alpha = -alpha;
+        }
+        let mut v = vec![0.0; m - k];
+        if alpha == 0.0 {
+            // zero column: identity reflector
+            vs.push(v);
+            continue;
+        }
+        v[0] = r[(k, k)] - alpha;
+        for i in (k + 1)..m {
+            v[i - k] = r[(i, k)];
+        }
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        // apply reflector H = I - 2 v v^T / (v^T v) to R[k.., k..]
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * r[(i, j)];
+            }
+            let scale = 2.0 * dot / vnorm_sq;
+            for i in k..m {
+                r[(i, j)] -= scale * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+    // Build thin Q by applying reflectors to the first n columns of I.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let scale = 2.0 * dot / vnorm_sq;
+            for i in k..m {
+                q[(i, j)] -= scale * v[i - k];
+            }
+        }
+    }
+    // Zero the strictly-lower part of R (numerical dust) and truncate.
+    let mut r_out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    QrThin { q, r: r_out }
+}
+
+/// Orthonormal basis of col(A): thin-QR Q with near-zero columns dropped
+/// when A is rank deficient (detected via |R[i,i]|).
+pub fn orthonormal_basis(a: &Matrix, tol_rel: f64) -> Matrix {
+    let f = qr_thin(a);
+    let n = f.r.rows();
+    let rmax = (0..n).map(|i| f.r[(i, i)].abs()).fold(0.0, f64::max);
+    if rmax == 0.0 {
+        return Matrix::zeros(a.rows(), 0);
+    }
+    let keep: Vec<usize> = (0..n).filter(|&i| f.r[(i, i)].abs() > tol_rel * rmax).collect();
+    f.q.select_cols(&keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstructs_and_orthonormal() {
+        let mut rng = Rng::new(0);
+        for &(m, n) in &[(5, 5), (10, 4), (40, 17), (3, 1)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let f = qr_thin(&a);
+            let qr = f.q.matmul(&f.r);
+            assert!(qr.max_abs_diff(&a) < 1e-9, "{m}x{n} recon");
+            let qtq = f.q.tr_matmul(&f.q);
+            assert!(qtq.max_abs_diff(&Matrix::identity(n)) < 1e-9, "{m}x{n} ortho");
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(f.r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_basis() {
+        let mut rng = Rng::new(1);
+        let b = Matrix::randn(20, 3, &mut rng);
+        let c = Matrix::randn(3, 7, &mut rng);
+        let a = b.matmul(&c); // rank 3, 20x7
+        let q = orthonormal_basis(&a, 1e-10);
+        assert_eq!(q.cols(), 3);
+        let qtq = q.tr_matmul(&q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(3)) < 1e-9);
+        // Projection Q Q^T A == A
+        let proj = q.matmul(&q.tr_matmul(&a));
+        assert!(proj.max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn zero_matrix_basis_is_empty() {
+        let q = orthonormal_basis(&Matrix::zeros(5, 3), 1e-12);
+        assert_eq!(q.cols(), 0);
+    }
+}

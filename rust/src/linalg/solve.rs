@@ -1,0 +1,221 @@
+//! Structured solves from Appendix A of the paper.
+//!
+//! - [`eig_of_cuc`] — Lemma 10: eigendecomposition of `C U C^T` in O(n c^2).
+//! - [`woodbury_solve`] — Lemma 11: solve `(C U C^T + a I) w = y` in
+//!   O(n c^2) via Sherman–Morrison–Woodbury.
+//! - Triangular and SPD solves used internally.
+
+use super::eig::eigh;
+use super::svd::svd_thin;
+use super::Matrix;
+
+/// Eigendecomposition of the low-rank SPSD approximation `C U C^T`
+/// (Lemma 10): returns (eigenvalues desc, eigenvectors n x r) where
+/// r = rank(C), in O(n c^2) instead of O(n^3).
+pub fn eig_of_cuc(c: &Matrix, u: &Matrix) -> (Vec<f64>, Matrix) {
+    assert_eq!(c.cols(), u.rows());
+    assert_eq!(u.rows(), u.cols());
+    // C = Uc Sc Vc^T  (thin)
+    let f = svd_thin(c);
+    let rank = f.rank(c.rows(), c.cols());
+    let idx: Vec<usize> = (0..rank).collect();
+    let uc = f.u.select_cols(&idx);
+    // Z = (Sc Vc^T) U (Sc Vc^T)^T, r x r
+    let svt = Matrix::from_fn(rank, c.cols(), |i, j| f.s[i] * f.v[(j, i)]);
+    let z = svt.matmul(u).matmul_tr(&svt);
+    let e = eigh(&z);
+    // eigenvectors = Uc Vz
+    let vecs = uc.matmul(&e.vectors);
+    (e.values, vecs)
+}
+
+/// Top-k eigenpairs of `C U C^T` (k <= rank(C)).
+pub fn eig_k_of_cuc(c: &Matrix, u: &Matrix, k: usize) -> (Vec<f64>, Matrix) {
+    let (vals, vecs) = eig_of_cuc(c, u);
+    let k = k.min(vals.len());
+    let idx: Vec<usize> = (0..k).collect();
+    (vals[..k].to_vec(), vecs.select_cols(&idx))
+}
+
+/// Solve `(C U C^T + alpha I_n) w = y` via Woodbury (Lemma 11).
+///
+/// For SPSD `U` we factor `U = G G^T` (via its eigendecomposition, dropping
+/// the numerically-zero part so a merely semi-definite `U` is fine), set
+/// `B = C G`, and apply `(B B^T + alpha I)^{-1} = (I - B (alpha I +
+/// B^T B)^{-1} B^T) / alpha`. Total cost O(n c^2) — never forms the n x n
+/// system.
+pub fn woodbury_solve(c: &Matrix, u: &Matrix, alpha: f64, y: &[f64]) -> Vec<f64> {
+    assert!(alpha > 0.0, "alpha must be positive");
+    assert_eq!(c.rows(), y.len());
+    let e = eigh(u);
+    let lmax = e.values.first().copied().unwrap_or(0.0).max(0.0);
+    let tol = lmax * u.rows() as f64 * f64::EPSILON;
+    let keep: Vec<usize> = (0..e.values.len()).filter(|&i| e.values[i] > tol).collect();
+    if keep.is_empty() {
+        // C U C^T == 0 up to round-off
+        return y.iter().map(|&yi| yi / alpha).collect();
+    }
+    // G = V_+ diag(sqrt(l_+)), B = C G  (n x r)
+    let g = Matrix::from_fn(u.rows(), keep.len(), |i, j| {
+        e.vectors[(i, keep[j])] * e.values[keep[j]].sqrt()
+    });
+    let b = c.matmul(&g);
+    // inner = alpha I + B^T B (r x r, SPD) — solved densely
+    let mut inner = b.tr_matmul(&b);
+    for i in 0..inner.rows() {
+        inner[(i, i)] += alpha;
+    }
+    let bty = b.tr_matvec(y);
+    let z = lu_solve(&inner, &bty).expect("alpha I + B^T B is SPD");
+    let bz = b.matvec(&z);
+    y.iter()
+        .zip(&bz)
+        .map(|(&yi, &bi)| (yi - bi) / alpha)
+        .collect()
+}
+
+/// Dense LU solve with partial pivoting (small systems, fallbacks, tests).
+pub fn lu_solve(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    assert_eq!(n, b.len());
+    let mut m = a.clone();
+    let mut x: Vec<f64> = b.to_vec();
+    for k in 0..n {
+        // pivot
+        let mut piv = k;
+        let mut pmax = m[(k, k)].abs();
+        for i in (k + 1)..n {
+            if m[(i, k)].abs() > pmax {
+                pmax = m[(i, k)].abs();
+                piv = i;
+            }
+        }
+        if pmax < 1e-300 {
+            return None; // singular
+        }
+        if piv != k {
+            for j in 0..n {
+                let t = m[(k, j)];
+                m[(k, j)] = m[(piv, j)];
+                m[(piv, j)] = t;
+            }
+            x.swap(k, piv);
+        }
+        for i in (k + 1)..n {
+            let f = m[(i, k)] / m[(k, k)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in k..n {
+                let v = m[(k, j)];
+                m[(i, j)] -= f * v;
+            }
+            x[i] -= f * x[k];
+        }
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in (i + 1)..n {
+            s -= m[(i, j)] * x[j];
+        }
+        x[i] = s / m[(i, i)];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn lu_solves_random_system() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(8, 8, &mut rng);
+        let xtrue: Vec<f64> = (0..8).map(|i| i as f64 - 3.0).collect();
+        let b = a.matvec(&xtrue);
+        let x = lu_solve(&a, &b).unwrap();
+        for i in 0..8 {
+            assert!((x[i] - xtrue[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Matrix::zeros(3, 3);
+        assert!(lu_solve(&a, &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn eig_of_cuc_matches_direct() {
+        let mut rng = Rng::new(1);
+        let c = Matrix::randn(30, 5, &mut rng);
+        let mut u = Matrix::randn(5, 5, &mut rng);
+        u.symmetrize();
+        let full = c.matmul(&u).matmul_tr(&c);
+        let (vals, vecs) = eig_of_cuc(&c, &u);
+        // reconstruct
+        let vl = Matrix::from_fn(30, vals.len(), |i, j| vecs[(i, j)] * vals[j]);
+        let recon = vl.matmul_tr(&vecs);
+        assert!(recon.max_abs_diff(&full) < 1e-8);
+        // eigenvectors orthonormal
+        let vtv = vecs.tr_matmul(&vecs);
+        assert!(vtv.max_abs_diff(&Matrix::identity(vals.len())) < 1e-8);
+    }
+
+    #[test]
+    fn eig_of_cuc_rank_deficient_c() {
+        let mut rng = Rng::new(2);
+        let b = Matrix::randn(20, 2, &mut rng);
+        let c = b.matmul(&Matrix::randn(2, 6, &mut rng)); // rank 2
+        let mut u = Matrix::randn(6, 6, &mut rng);
+        u.symmetrize();
+        let (vals, vecs) = eig_of_cuc(&c, &u);
+        assert_eq!(vals.len(), 2);
+        assert_eq!(vecs.cols(), 2);
+        let full = c.matmul(&u).matmul_tr(&c);
+        let vl = Matrix::from_fn(20, 2, |i, j| vecs[(i, j)] * vals[j]);
+        assert!(vl.matmul_tr(&vecs).max_abs_diff(&full) < 1e-8);
+    }
+
+    #[test]
+    fn woodbury_matches_dense_solve() {
+        let mut rng = Rng::new(3);
+        let c = Matrix::randn(25, 4, &mut rng);
+        let g = Matrix::randn(4, 4, &mut rng);
+        let u = g.matmul_tr(&g); // SPSD
+        let alpha = 0.7;
+        let y: Vec<f64> = (0..25).map(|_| rng.gaussian()).collect();
+        // dense: (C U C^T + alpha I) w = y
+        let mut kk = c.matmul(&u).matmul_tr(&c);
+        for i in 0..25 {
+            kk[(i, i)] += alpha;
+        }
+        let dense = lu_solve(&kk, &y).unwrap();
+        let fast = woodbury_solve(&c, &u, alpha, &y);
+        for i in 0..25 {
+            assert!((dense[i] - fast[i]).abs() < 1e-7, "i={i}: {} vs {}", dense[i], fast[i]);
+        }
+    }
+
+    #[test]
+    fn woodbury_singular_u_still_works() {
+        let mut rng = Rng::new(4);
+        let c = Matrix::randn(15, 3, &mut rng);
+        let g = Matrix::randn(3, 1, &mut rng);
+        let u = g.matmul_tr(&g); // rank-1 SPSD
+        let alpha = 0.5;
+        let y: Vec<f64> = (0..15).map(|_| rng.gaussian()).collect();
+        let mut kk = c.matmul(&u).matmul_tr(&c);
+        for i in 0..15 {
+            kk[(i, i)] += alpha;
+        }
+        let dense = lu_solve(&kk, &y).unwrap();
+        let fast = woodbury_solve(&c, &u, alpha, &y);
+        for i in 0..15 {
+            assert!((dense[i] - fast[i]).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Sparse CSR matrix substrate.
+//!
+//! The paper's cost model charges `nnz(A)`-time for CountSketch and notes
+//! (§5.1) that CUR "preserves the sparsity" of `A` — unlike the SVD. This
+//! module provides the CSR representation those claims live on: nnz-time
+//! sketching, sparse row/column selection (so C and R stay sparse), and
+//! the dense bridges the algorithms need.
+
+use super::Matrix;
+use crate::util::Rng;
+
+/// Compressed sparse row matrix (f64).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// row i spans indptr[i]..indptr[i+1] in `indices`/`values`
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from (row, col, value) triplets; duplicate entries are summed.
+    pub fn from_triplets(rows: usize, cols: usize, mut trip: Vec<(usize, usize, f64)>) -> Self {
+        trip.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(trip.len());
+        let mut values: Vec<f64> = Vec::with_capacity(trip.len());
+        for &(r, c, v) in &trip {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            indptr[r + 1] += 1;
+            indices.push(c);
+            values.push(v);
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        // merge duplicates within rows (already sorted)
+        let mut m = CsrMatrix { rows, cols, indptr, indices, values };
+        m.merge_duplicates();
+        m
+    }
+
+    fn merge_duplicates(&mut self) {
+        let mut new_indptr = vec![0usize; self.rows + 1];
+        let mut new_indices = Vec::with_capacity(self.indices.len());
+        let mut new_values = Vec::with_capacity(self.values.len());
+        for r in 0..self.rows {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            let mut j = lo;
+            while j < hi {
+                let c = self.indices[j];
+                let mut v = self.values[j];
+                let mut k = j + 1;
+                while k < hi && self.indices[k] == c {
+                    v += self.values[k];
+                    k += 1;
+                }
+                if v != 0.0 {
+                    new_indices.push(c);
+                    new_values.push(v);
+                }
+                j = k;
+            }
+            new_indptr[r + 1] = new_indices.len();
+        }
+        self.indptr = new_indptr;
+        self.indices = new_indices;
+        self.values = new_values;
+    }
+
+    pub fn from_dense(m: &Matrix, tol: f64) -> Self {
+        let mut trip = Vec::new();
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v.abs() > tol {
+                    trip.push((i, j, v));
+                }
+            }
+        }
+        CsrMatrix::from_triplets(m.rows(), m.cols(), trip)
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for j in self.indptr[r]..self.indptr[r + 1] {
+                out[(r, self.indices[j])] = self.values[j];
+            }
+        }
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Sparse matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let mut s = 0.0;
+            for j in self.indptr[r]..self.indptr[r + 1] {
+                s += self.values[j] * x[self.indices[j]];
+            }
+            out[r] = s;
+        }
+        out
+    }
+
+    /// CSR × dense — O(nnz · k) for a (cols x k) dense right factor.
+    pub fn matmul_dense(&self, b: &Matrix) -> Matrix {
+        assert_eq!(b.rows(), self.cols);
+        let mut out = Matrix::zeros(self.rows, b.cols());
+        for r in 0..self.rows {
+            let dst = out.row_mut(r);
+            for j in self.indptr[r]..self.indptr[r + 1] {
+                let v = self.values[j];
+                let brow = b.row(self.indices[j]);
+                for (d, &x) in dst.iter_mut().zip(brow) {
+                    *d += v * x;
+                }
+            }
+        }
+        out
+    }
+
+    /// Select rows, preserving sparsity (the "R" of sparse CUR).
+    pub fn select_rows(&self, idx: &[usize]) -> CsrMatrix {
+        let mut trip = Vec::new();
+        for (newr, &r) in idx.iter().enumerate() {
+            for j in self.indptr[r]..self.indptr[r + 1] {
+                trip.push((newr, self.indices[j], self.values[j]));
+            }
+        }
+        CsrMatrix::from_triplets(idx.len(), self.cols, trip)
+    }
+
+    /// Select columns, preserving sparsity (the "C" of sparse CUR).
+    pub fn select_cols(&self, idx: &[usize]) -> CsrMatrix {
+        let mut newcol = vec![usize::MAX; self.cols];
+        for (nc, &c) in idx.iter().enumerate() {
+            newcol[c] = nc;
+        }
+        let mut trip = Vec::new();
+        for r in 0..self.rows {
+            for j in self.indptr[r]..self.indptr[r + 1] {
+                let nc = newcol[self.indices[j]];
+                if nc != usize::MAX {
+                    trip.push((r, nc, self.values[j]));
+                }
+            }
+        }
+        CsrMatrix::from_triplets(self.rows, idx.len(), trip)
+    }
+
+    /// Squared column norms in one nnz pass (adaptive-sampling weights).
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for j in 0..self.nnz() {
+            out[self.indices[j]] += self.values[j] * self.values[j];
+        }
+        out
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// CountSketch `S^T A` in O(nnz) — the Table-4 claim for sparse inputs.
+    /// `cols_map`/`signs` define S (one ±1 per *row* of A).
+    pub fn countsketch_left(&self, s: usize, cols_map: &[usize], signs: &[f64]) -> Matrix {
+        assert_eq!(cols_map.len(), self.rows);
+        let mut out = Matrix::zeros(s, self.cols);
+        for r in 0..self.rows {
+            let target = cols_map[r];
+            let sg = signs[r];
+            let dst = out.row_mut(target);
+            for j in self.indptr[r]..self.indptr[r + 1] {
+                dst[self.indices[j]] += sg * self.values[j];
+            }
+        }
+        out
+    }
+}
+
+/// Sparse random matrix: each entry nonzero with probability `density`,
+/// values standard normal.
+pub fn sprandn(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> CsrMatrix {
+    let mut trip = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.bernoulli(density) {
+                trip.push((r, c, rng.gaussian()));
+            }
+        }
+    }
+    CsrMatrix::from_triplets(rows, cols, trip)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2], [0, 0, 0], [3, 4, 0]]
+        CsrMatrix::from_triplets(3, 3, vec![(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)])
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let s = sample();
+        assert_eq!(s.nnz(), 4);
+        let d = s.to_dense();
+        assert_eq!(d[(0, 2)], 2.0);
+        assert_eq!(d[(1, 1)], 0.0);
+        let back = CsrMatrix::from_dense(&d, 0.0);
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn duplicates_summed_and_zeros_dropped() {
+        let s = CsrMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 3.0), (1, 1, -3.0)]);
+        assert_eq!(s.nnz(), 1);
+        assert_eq!(s.to_dense()[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let s = sample();
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(s.matvec(&x), s.to_dense().matvec(&x));
+    }
+
+    #[test]
+    fn matmul_dense_matches() {
+        let mut rng = Rng::new(0);
+        let s = sprandn(10, 8, 0.3, &mut rng);
+        let b = Matrix::randn(8, 5, &mut rng);
+        let fast = s.matmul_dense(&b);
+        let slow = s.to_dense().matmul(&b);
+        assert!(fast.max_abs_diff(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn selection_preserves_sparsity() {
+        let mut rng = Rng::new(1);
+        let s = sprandn(20, 15, 0.2, &mut rng);
+        let rows = s.select_rows(&[0, 5, 19]);
+        assert_eq!(rows.rows(), 3);
+        assert!(rows.density() <= 1.0);
+        assert!(rows.to_dense().max_abs_diff(&s.to_dense().select_rows(&[0, 5, 19])) < 1e-15);
+        let cols = s.select_cols(&[1, 7, 14]);
+        assert!(cols.to_dense().max_abs_diff(&s.to_dense().select_cols(&[1, 7, 14])) < 1e-15);
+        // sparse CUR pieces keep the same nnz density order as A
+        assert!(cols.nnz() <= s.nnz());
+    }
+
+    #[test]
+    fn col_norms_and_fro() {
+        let s = sample();
+        let n = s.col_norms_sq();
+        assert_eq!(n, vec![10.0, 16.0, 4.0]);
+        assert_eq!(s.fro_norm_sq(), 30.0);
+    }
+
+    #[test]
+    fn countsketch_matches_dense_path() {
+        let mut rng = Rng::new(2);
+        let s = sprandn(30, 10, 0.25, &mut rng);
+        let buckets = 8;
+        let cols_map: Vec<usize> = (0..30).map(|_| rng.usize_below(buckets)).collect();
+        let signs: Vec<f64> = (0..30).map(|_| rng.sign()).collect();
+        let fast = s.countsketch_left(buckets, &cols_map, &signs);
+        // dense reference
+        let mut sk = Matrix::zeros(30, buckets);
+        for r in 0..30 {
+            sk[(r, cols_map[r])] = signs[r];
+        }
+        let slow = sk.tr_matmul(&s.to_dense());
+        assert!(fast.max_abs_diff(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn sprandn_density() {
+        let mut rng = Rng::new(3);
+        let s = sprandn(100, 100, 0.1, &mut rng);
+        let d = s.density();
+        assert!((d - 0.1).abs() < 0.02, "density {d}");
+    }
+}

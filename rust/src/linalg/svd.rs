@@ -1,0 +1,220 @@
+//! Thin SVD via one-sided Jacobi (Hestenes) with QR preconditioning.
+//!
+//! One-sided Jacobi orthogonalizes pairs of columns of `A V` until all
+//! column pairs are numerically orthogonal; singular values are the final
+//! column norms. It is simple, backward stable, and accurate for the small
+//! to mid-size factors (c, s « n) the paper's algorithms decompose. For
+//! tall matrices we first QR-reduce so Jacobi runs on the n x n `R`.
+
+use super::qr::qr_thin;
+use super::Matrix;
+
+/// Thin SVD: `A (m x n) = U (m x r) diag(s) V^T (r x n)` with r = min(m, n);
+/// singular values descending, including zeros for rank-deficient inputs.
+pub struct SvdThin {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub v: Matrix, // n x r (columns are right singular vectors)
+}
+
+const MAX_SWEEPS: usize = 60;
+
+/// One-sided Jacobi on a square-ish work matrix; returns (W, V) with
+/// W = A*V having orthogonal columns.
+fn jacobi_orthogonalize(a: &Matrix) -> (Matrix, Matrix) {
+    let n = a.cols();
+    let mut w = a.clone();
+    let mut v = Matrix::identity(n);
+    // tolerance relative to the largest column norm
+    let eps = 1e-15;
+    for _sweep in 0..MAX_SWEEPS {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // alpha = w_p . w_p, beta = w_q . w_q, gamma = w_p . w_q
+                let (mut alpha, mut beta, mut gamma) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..w.rows() {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    alpha += wp * wp;
+                    beta += wq * wq;
+                    gamma += wp * wq;
+                }
+                if gamma.abs() <= eps * (alpha * beta).sqrt() || alpha * beta == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                // Jacobi rotation angle
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..w.rows() {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+    (w, v)
+}
+
+/// Compute the thin SVD of `a`.
+pub fn svd_thin(a: &Matrix) -> SvdThin {
+    let (m, n) = (a.rows(), a.cols());
+    if m < n {
+        // SVD of A^T = U' S V'^T  =>  A = V' S U'^T
+        let t = svd_thin(&a.transpose());
+        return SvdThin { u: t.v, s: t.s, v: t.u };
+    }
+    // QR precondition: A = Q R, SVD(R) = Ur S V^T, so U = Q Ur.
+    let (q, work) = if m > n {
+        let f = qr_thin(a);
+        (Some(f.q), f.r)
+    } else {
+        (None, a.clone())
+    };
+    let (w, v) = jacobi_orthogonalize(&work);
+    // singular values = column norms of w
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..w.rows()).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    let s: Vec<f64> = order.iter().map(|&j| norms[j]).collect();
+    let smax = s.first().copied().unwrap_or(0.0);
+    // U columns: w_j / sigma_j; fill zero-sigma columns with zeros (callers
+    // use rank-aware helpers, e.g. pinv, that drop them).
+    let mut ur = Matrix::zeros(w.rows(), n);
+    for (jj, &j) in order.iter().enumerate() {
+        if norms[j] > smax * 1e-300 && norms[j] > 0.0 {
+            for i in 0..w.rows() {
+                ur[(i, jj)] = w[(i, j)] / norms[j];
+            }
+        }
+    }
+    let v_sorted = v.select_cols(&order);
+    let u = match q {
+        Some(q) => q.matmul(&ur),
+        None => ur,
+    };
+    SvdThin { u, s, v: v_sorted }
+}
+
+impl SvdThin {
+    /// Numerical rank with tolerance `max(m, n) * eps * s_max` (LAPACK-style).
+    pub fn rank(&self, m: usize, n: usize) -> usize {
+        let smax = self.s.first().copied().unwrap_or(0.0);
+        let tol = smax * (m.max(n) as f64) * f64::EPSILON;
+        self.s.iter().take_while(|&&x| x > tol).count()
+    }
+
+    /// Reconstruct `U diag(s) V^T`.
+    pub fn reconstruct(&self) -> Matrix {
+        let us = Matrix::from_fn(self.u.rows(), self.s.len(), |i, j| self.u[(i, j)] * self.s[j]);
+        us.matmul_tr(&self.v)
+    }
+
+    /// Best rank-k truncation (returns U_k, s_k, V_k).
+    pub fn truncate(&self, k: usize) -> SvdThin {
+        let k = k.min(self.s.len());
+        let idx: Vec<usize> = (0..k).collect();
+        SvdThin {
+            u: self.u.select_cols(&idx),
+            s: self.s[..k].to_vec(),
+            v: self.v.select_cols(&idx),
+        }
+    }
+}
+
+/// `‖A - A_k‖_F^2` via the tail singular values of `a`.
+pub fn best_rank_k_error_sq(a: &Matrix, k: usize) -> f64 {
+    let f = svd_thin(a);
+    f.s.iter().skip(k).map(|&x| x * x).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn check_svd(a: &Matrix, tol: f64) {
+        let f = svd_thin(a);
+        let r = f.s.len();
+        assert_eq!(r, a.rows().min(a.cols()));
+        // descending
+        for i in 1..r {
+            assert!(f.s[i - 1] >= f.s[i] - 1e-12);
+        }
+        // reconstruction
+        assert!(f.reconstruct().max_abs_diff(a) < tol, "recon {}x{}", a.rows(), a.cols());
+        // V orthonormal on the nonzero part
+        let rank = f.rank(a.rows(), a.cols());
+        let idx: Vec<usize> = (0..rank).collect();
+        let vr = f.v.select_cols(&idx);
+        assert!(vr.tr_matmul(&vr).max_abs_diff(&Matrix::identity(rank)) < 1e-8);
+        let ur = f.u.select_cols(&idx);
+        assert!(ur.tr_matmul(&ur).max_abs_diff(&Matrix::identity(rank)) < 1e-8);
+    }
+
+    #[test]
+    fn random_shapes() {
+        let mut rng = Rng::new(0);
+        for &(m, n) in &[(1, 1), (5, 5), (12, 7), (7, 12), (40, 10), (10, 40)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            check_svd(&a, 1e-8);
+        }
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Matrix::diag(&[4.0, 1.0, 9.0]);
+        let f = svd_thin(&a);
+        assert!((f.s[0] - 9.0).abs() < 1e-10);
+        assert!((f.s[1] - 4.0).abs() < 1e-10);
+        assert!((f.s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        let mut rng = Rng::new(1);
+        let b = Matrix::randn(20, 3, &mut rng);
+        let c = Matrix::randn(3, 15, &mut rng);
+        let a = b.matmul(&c);
+        let f = svd_thin(&a);
+        assert_eq!(f.rank(20, 15), 3);
+        assert!(f.s[3] < 1e-8);
+        check_svd(&a, 1e-8);
+    }
+
+    #[test]
+    fn truncate_is_best_rank_k() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(15, 10, &mut rng);
+        let f = svd_thin(&a);
+        let k = 4;
+        let ak = f.truncate(k).reconstruct();
+        let err = a.sub(&ak).fro_norm_sq();
+        let tail: f64 = f.s.iter().skip(k).map(|&x| x * x).sum();
+        assert!((err - tail).abs() < 1e-8 * tail.max(1.0));
+        assert!((best_rank_k_error_sq(&a, k) - tail).abs() < 1e-8);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let f = svd_thin(&Matrix::zeros(4, 3));
+        assert!(f.s.iter().all(|&x| x == 0.0));
+        assert_eq!(f.rank(4, 3), 0);
+    }
+}

@@ -1,0 +1,6 @@
+//! `repro` — CLI entrypoint. Subcommands regenerate every figure and table
+//! of the paper (see DESIGN.md §4) plus an end-to-end serving demo; run
+//! with no arguments for usage.
+fn main() {
+    fastspsd::figures::run_cli();
+}

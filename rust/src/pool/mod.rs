@@ -1,0 +1,268 @@
+//! Worker thread pool substrate (no tokio in the image).
+//!
+//! A fixed pool of workers fed by an MPMC channel built on
+//! `Mutex<VecDeque>` + `Condvar`, with a bounded-queue mode for
+//! backpressure. `parallel_for` provides scoped data-parallel loops for the
+//! coordinator and benches.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    cond: Condvar,
+    /// signaled when a job is popped (for bounded-queue producers)
+    space: Condvar,
+    capacity: usize,
+    shutdown: AtomicBool,
+    inflight: AtomicUsize,
+    done: Condvar,
+    panics: AtomicUsize,
+}
+
+/// Fixed-size worker pool with an optionally bounded job queue.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// `threads` workers; `capacity` bounds the pending-job queue
+    /// (`usize::MAX` for unbounded). Submitting beyond capacity blocks the
+    /// producer — the coordinator's backpressure mechanism.
+    pub fn new(threads: usize, capacity: usize) -> Self {
+        assert!(threads > 0);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            space: Condvar::new(),
+            capacity,
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..threads)
+            .map(|_| {
+                let q = Arc::clone(&queue);
+                std::thread::spawn(move || worker_loop(q))
+            })
+            .collect();
+        ThreadPool { queue, workers }
+    }
+
+    /// Pool sized to the machine, unbounded queue.
+    pub fn with_default_threads() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n, usize::MAX)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Number of jobs queued or running.
+    pub fn inflight(&self) -> usize {
+        self.queue.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Number of jobs that panicked (caught; the worker survives).
+    pub fn panics(&self) -> usize {
+        self.queue.panics.load(Ordering::SeqCst)
+    }
+
+    /// Submit a job; blocks while the queue is at capacity (backpressure).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut jobs = self.queue.jobs.lock().unwrap();
+        while jobs.len() >= self.queue.capacity {
+            jobs = self.queue.space.wait(jobs).unwrap();
+        }
+        self.queue.inflight.fetch_add(1, Ordering::SeqCst);
+        jobs.push_back(Box::new(job));
+        drop(jobs);
+        self.queue.cond.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut jobs = self.queue.jobs.lock().unwrap();
+        while self.queue.inflight.load(Ordering::SeqCst) > 0 {
+            jobs = self.queue.done.wait(jobs).unwrap();
+        }
+        drop(jobs);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.queue.shutdown.store(true, Ordering::SeqCst);
+        self.queue.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let job = {
+            let mut jobs = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    q.space.notify_one();
+                    break j;
+                }
+                if q.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                jobs = q.cond.wait(jobs).unwrap();
+            }
+        };
+        // Failure isolation: a panicking job must not kill the worker or
+        // wedge `wait_idle` (the inflight count still drops below).
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+            q.panics.fetch_add(1, Ordering::SeqCst);
+        }
+        if q.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _guard = q.jobs.lock().unwrap();
+            q.done.notify_all();
+        }
+    }
+}
+
+/// Scoped parallel-for over `0..n`: splits into contiguous chunks across up
+/// to `max_threads` scoped threads and calls `f(i)` for each index.
+pub fn parallel_for(n: usize, max_threads: usize, f: impl Fn(usize) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let threads = max_threads
+        .min(n)
+        .min(std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1))
+        .max(1);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            s.spawn(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, usize::MAX);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        // capacity 2, one slow worker: the producer must block rather than
+        // queueing all jobs instantly.
+        let pool = ThreadPool::new(1, 2);
+        let started = std::time::Instant::now();
+        for _ in 0..6 {
+            pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        }
+        // With capacity 2 and 10ms jobs, submitting 6 must take >= ~30ms.
+        assert!(started.elapsed() >= std::time::Duration::from_millis(25));
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn wait_idle_without_jobs_returns() {
+        let pool = ThreadPool::new(2, 8);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(97, 8, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_and_one() {
+        parallel_for(0, 4, |_| panic!("must not run"));
+        let hit = AtomicU64::new(0);
+        parallel_for(1, 4, |_| {
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge_pool() {
+        let pool = ThreadPool::new(2, usize::MAX);
+        let c = Arc::new(AtomicU64::new(0));
+        for i in 0..10 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                if i % 3 == 0 {
+                    panic!("injected failure");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // must not hang
+        assert_eq!(c.load(Ordering::SeqCst), 6);
+        assert_eq!(pool.panics(), 4);
+        // pool still works afterwards
+        let c2 = Arc::clone(&c);
+        pool.submit(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(c.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(3, usize::MAX);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,143 @@
+//! Artifact manifest: what `python -m compile.aot` produced.
+
+use super::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+    /// `"rbf_block"` or `"matmul"`.
+    pub kind: String,
+    /// Input shapes, in argument order.
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        if json.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("{path:?}: unsupported manifest format");
+        }
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{path:?}: missing artifacts array"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+            let kind = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string();
+            let mut inputs = Vec::new();
+            for shp in a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+            {
+                let dims: Option<Vec<usize>> =
+                    shp.as_arr().map(|ds| ds.iter().filter_map(Json::as_usize).collect());
+                inputs.push(dims.ok_or_else(|| anyhow!("artifact {name}: bad shape"))?);
+            }
+            artifacts.push(ArtifactSpec { name, file: PathBuf::from(file), kind, inputs });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All rbf_block artifacts as (d_bucket, name), ascending by d.
+    pub fn rbf_buckets(&self) -> Vec<(usize, String)> {
+        let mut out: Vec<(usize, String)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "rbf_block")
+            .map(|a| (a.inputs[1][1], a.name.clone()))
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+/// Default artifact directory: `$FASTSPSD_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("FASTSPSD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("fastspsd_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"format": "hlo-text", "artifacts": [
+                {"name": "rbf_block_256x256x16", "file": "a.hlo.txt", "kind": "rbf_block",
+                 "inputs": [[1,1],[256,16],[256,16]], "dtype": "f32"},
+                {"name": "rbf_block_256x256x128", "file": "b.hlo.txt", "kind": "rbf_block",
+                 "inputs": [[1,1],[256,128],[256,128]], "dtype": "f32"},
+                {"name": "matmul_256x256x256", "file": "c.hlo.txt", "kind": "matmul",
+                 "inputs": [[256,256],[256,256]], "dtype": "f32"}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert!(m.find("matmul_256x256x256").is_some());
+        assert!(m.find("nope").is_none());
+        assert_eq!(
+            m.rbf_buckets(),
+            vec![
+                (16, "rbf_block_256x256x16".to_string()),
+                (128, "rbf_block_256x256x128".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn missing_dir_is_error_with_hint() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let dir = std::env::temp_dir().join("fastspsd_manifest_bad");
+        write_manifest(&dir, r#"{"format": "proto", "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! The `xla` crate's PJRT types wrap `Rc` internals and are not `Send`, so
+//! a dedicated **runtime thread** owns the `PjRtClient` and every compiled
+//! executable; the rest of the system talks to it through a cloneable,
+//! `Send` [`RuntimeHandle`] over an mpsc channel. Block requests arrive in
+//! batches (the coordinator's dynamic batcher groups them) and the PJRT CPU
+//! client parallelizes internally.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo — interchange is HLO
+//! *text* (`HloModuleProto::from_text_file`), and lowering used
+//! `return_tuple=True`, so results unwrap with `to_tuple1`.
+
+pub mod json;
+pub mod manifest;
+
+pub use manifest::{default_artifact_dir, ArtifactSpec, Manifest};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// One computation to run: artifact name + flat f32 inputs with shapes.
+pub struct ExecRequest {
+    pub artifact: String,
+    pub inputs: Vec<(Vec<f32>, Vec<usize>)>,
+}
+
+type Reply = mpsc::Sender<Result<Vec<Vec<f32>>>>;
+
+enum Msg {
+    Exec { reqs: Vec<ExecRequest>, reply: Reply },
+}
+
+/// Counters exported by the runtime thread.
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub batches: AtomicU64,
+    pub executions: AtomicU64,
+    pub exec_nanos: AtomicU64,
+}
+
+impl RuntimeStats {
+    /// (batches, executions, total exec seconds)
+    pub fn snapshot(&self) -> (u64, u64, f64) {
+        (
+            self.batches.load(Ordering::Relaxed),
+            self.executions.load(Ordering::Relaxed),
+            self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+}
+
+/// Cloneable, `Send + Sync` handle to the runtime thread. (The raw mpsc
+/// `Sender` is not `Sync`, so it lives behind a mutex; contention is
+/// negligible because submissions are batched.)
+pub struct RuntimeHandle {
+    tx: Mutex<mpsc::Sender<Msg>>,
+    manifest: Arc<Manifest>,
+    stats: Arc<RuntimeStats>,
+    // joined on last drop
+    join: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+}
+
+impl Clone for RuntimeHandle {
+    fn clone(&self) -> Self {
+        RuntimeHandle {
+            tx: Mutex::new(self.tx.lock().unwrap().clone()),
+            manifest: Arc::clone(&self.manifest),
+            stats: Arc::clone(&self.stats),
+            join: Arc::clone(&self.join),
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Load the manifest, spawn the runtime thread, compile every artifact
+    /// on it, and return once compilation succeeded (or failed).
+    pub fn spawn(artifact_dir: impl AsRef<std::path::Path>) -> Result<RuntimeHandle> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let man = Arc::clone(&manifest);
+        let stats = Arc::new(RuntimeStats::default());
+        let st = Arc::clone(&stats);
+        let join = std::thread::Builder::new()
+            .name("fastspsd-pjrt".into())
+            .spawn(move || runtime_thread(man, rx, ready_tx, st))
+            .context("spawning runtime thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during startup"))??;
+        Ok(RuntimeHandle {
+            tx: Mutex::new(tx),
+            manifest,
+            stats,
+            join: Arc::new(Mutex::new(Some(join))),
+        })
+    }
+
+    /// Spawn from the default artifact directory
+    /// (`$FASTSPSD_ARTIFACTS` or `./artifacts`).
+    pub fn spawn_default() -> Result<RuntimeHandle> {
+        Self::spawn(default_artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> &RuntimeStats {
+        &self.stats
+    }
+
+    /// Execute a batch of requests; results in request order.
+    pub fn execute_batch(&self, reqs: Vec<ExecRequest>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Msg::Exec { reqs, reply })
+            .map_err(|_| anyhow!("runtime thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped the reply"))?
+    }
+
+    /// Execute a single request.
+    pub fn execute_one(&self, artifact: &str, inputs: Vec<(Vec<f32>, Vec<usize>)>) -> Result<Vec<f32>> {
+        let mut out = self.execute_batch(vec![ExecRequest { artifact: artifact.to_string(), inputs }])?;
+        Ok(out.pop().expect("one result per request"))
+    }
+}
+
+impl Drop for RuntimeHandle {
+    fn drop(&mut self) {
+        // When the last clone goes away the channel disconnects, the thread
+        // loop exits, and we join it (only the final clone holds Some).
+        if Arc::strong_count(&self.join) == 1 {
+            let (dummy_tx, _) = mpsc::channel();
+            let tx = std::mem::replace(self.tx.get_mut().unwrap(), dummy_tx);
+            drop(tx);
+            if let Some(j) = self.join.lock().unwrap().take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+fn runtime_thread(
+    manifest: Arc<Manifest>,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+    stats: Arc<RuntimeStats>,
+) {
+    // Compile everything up front; report the first failure through `ready`.
+    let setup = (|| -> Result<(xla::PjRtClient, HashMap<String, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let mut exes = HashMap::new();
+        for spec in &manifest.artifacts {
+            let path = manifest.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+            exes.insert(spec.name.clone(), exe);
+        }
+        Ok((client, exes))
+    })();
+    let (client, exes) = match setup {
+        Ok(x) => {
+            let _ = ready.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _client = client; // keep alive for the executables' lifetime
+
+    while let Ok(Msg::Exec { reqs, reply }) = rx.recv() {
+        let t0 = std::time::Instant::now();
+        let result = run_batch(&manifest, &exes, &reqs);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.executions.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        stats
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let _ = reply.send(result);
+    }
+}
+
+fn run_batch(
+    manifest: &Manifest,
+    exes: &HashMap<String, xla::PjRtLoadedExecutable>,
+    reqs: &[ExecRequest],
+) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::with_capacity(reqs.len());
+    for req in reqs {
+        let spec = manifest
+            .find(&req.artifact)
+            .ok_or_else(|| anyhow!("unknown artifact {:?}", req.artifact))?;
+        let exe = exes.get(&req.artifact).expect("compiled at startup");
+        if req.inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                req.artifact,
+                spec.inputs.len(),
+                req.inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(req.inputs.len());
+        for (i, (data, shape)) in req.inputs.iter().enumerate() {
+            if shape != &spec.inputs[i] {
+                return Err(anyhow!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    req.artifact,
+                    shape,
+                    spec.inputs[i]
+                ));
+            }
+            let numel: usize = shape.iter().product();
+            if data.len() != numel {
+                return Err(anyhow!(
+                    "{}: input {i} has {} elements for shape {:?}",
+                    req.artifact,
+                    data.len(),
+                    shape
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i} of {}: {e}", req.artifact))?;
+            literals.push(lit);
+        }
+        let results = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e}", req.artifact))?;
+        let lit = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e}", req.artifact))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let inner = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1 {}: {e}", req.artifact))?;
+        let vals = inner
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {}: {e}", req.artifact))?;
+        out.push(vals);
+    }
+    Ok(out)
+}

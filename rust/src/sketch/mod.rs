@@ -1,0 +1,419 @@
+//! Matrix sketching (paper §3.1): the five sketching matrices of Lemma 2 /
+//! Table 4 — uniform sampling, leverage-score sampling, Gaussian
+//! projection, SRHT, and CountSketch.
+//!
+//! A sketch `S ∈ R^{n x s}` is represented by [`SketchOp`] so that `S^T A`
+//! applies in the cheapest form for each family (row gather for column
+//! selection, signed row-hash accumulation for CountSketch, fast
+//! Walsh–Hadamard for SRHT) rather than by dense multiplication.
+
+pub mod srht;
+
+use crate::linalg::{svd_thin, Matrix};
+use crate::util::Rng;
+
+/// Which sketching family (and options) to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchKind {
+    Uniform,
+    /// Leverage-score sampling w.r.t. the row leverage scores of `C`;
+    /// `scaled=false` is the paper's §4.5 stability trick.
+    Leverage { scaled: bool },
+    Gaussian,
+    Srht,
+    CountSketch,
+}
+
+impl SketchKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SketchKind::Uniform => "uniform",
+            SketchKind::Leverage { scaled: true } => "leverage",
+            SketchKind::Leverage { scaled: false } => "leverage-unscaled",
+            SketchKind::Gaussian => "gaussian",
+            SketchKind::Srht => "srht",
+            SketchKind::CountSketch => "countsketch",
+        }
+    }
+
+    /// Column selection sketches only observe an `s x s` block of `K`
+    /// (Table 4 #Entries column); projections need all of it.
+    pub fn is_column_selection(self) -> bool {
+        matches!(self, SketchKind::Uniform | SketchKind::Leverage { .. })
+    }
+}
+
+/// An `n x s` sketching matrix in applicable form.
+#[derive(Debug, Clone)]
+pub enum SketchOp {
+    /// Column-selection: column j of S is `scales[j] * e_{indices[j]}`.
+    Select { n: usize, indices: Vec<usize>, scales: Vec<f64> },
+    /// CountSketch: input row i maps to output row `cols[i]` with `signs[i]`.
+    RowHash { n: usize, s: usize, cols: Vec<usize>, signs: Vec<f64> },
+    /// Dense n x s (Gaussian).
+    Dense(Matrix),
+    /// SRHT: sign-flip rows, Walsh–Hadamard, then select `rows` (already
+    /// scaled). `n_pad` is the power-of-two padding length.
+    SrhtOp { n: usize, n_pad: usize, signs: Vec<f64>, rows: Vec<usize>, scale: f64 },
+}
+
+impl SketchOp {
+    /// Number of input rows n.
+    pub fn n(&self) -> usize {
+        match self {
+            SketchOp::Select { n, .. } => *n,
+            SketchOp::RowHash { n, .. } => *n,
+            SketchOp::Dense(m) => m.rows(),
+            SketchOp::SrhtOp { n, .. } => *n,
+        }
+    }
+
+    /// Sketch size s (columns of S).
+    pub fn s(&self) -> usize {
+        match self {
+            SketchOp::Select { indices, .. } => indices.len(),
+            SketchOp::RowHash { s, .. } => *s,
+            SketchOp::Dense(m) => m.cols(),
+            SketchOp::SrhtOp { rows, .. } => rows.len(),
+        }
+    }
+
+    /// Selected index set (column-selection sketches only).
+    pub fn indices(&self) -> Option<&[usize]> {
+        match self {
+            SketchOp::Select { indices, .. } => Some(indices),
+            _ => None,
+        }
+    }
+
+    /// `S^T A` (s x m) for `A` (n x m).
+    pub fn apply_left(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), self.n(), "sketch size mismatch");
+        match self {
+            SketchOp::Select { indices, scales, .. } => {
+                let mut out = a.select_rows(indices);
+                for (r, &sc) in scales.iter().enumerate() {
+                    if sc != 1.0 {
+                        for v in out.row_mut(r) {
+                            *v *= sc;
+                        }
+                    }
+                }
+                out
+            }
+            SketchOp::RowHash { s, cols, signs, .. } => {
+                let mut out = Matrix::zeros(*s, a.cols());
+                for i in 0..a.rows() {
+                    let dst_row = cols[i];
+                    let sg = signs[i];
+                    let src = a.row(i);
+                    let dst = out.row_mut(dst_row);
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d += sg * v;
+                    }
+                }
+                out
+            }
+            SketchOp::Dense(s_mat) => s_mat.tr_matmul(a),
+            SketchOp::SrhtOp { n_pad, signs, rows, scale, .. } => {
+                // (D A) padded to n_pad, FWHT per column, select rows.
+                let mut work = Matrix::zeros(*n_pad, a.cols());
+                for i in 0..a.rows() {
+                    let sg = signs[i];
+                    let src = a.row(i);
+                    let dst = work.row_mut(i);
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d = sg * v;
+                    }
+                }
+                srht::fwht_columns(&mut work);
+                let mut out = work.select_rows(rows);
+                for v in out.data_mut() {
+                    *v *= *scale;
+                }
+                out
+            }
+        }
+    }
+
+    /// `S^T A S` for square symmetric `A` (n x n): apply left then right.
+    pub fn conjugate(&self, a: &Matrix) -> Matrix {
+        let sta = self.apply_left(a); // s x n
+        let stat = self.apply_left(&sta.transpose()); // s x s = S^T (S^T A)^T
+        stat.transpose()
+    }
+}
+
+/// Row leverage scores of `C`: `l_i = ||row i of U_C||^2` where `U_C` is an
+/// orthonormal basis of col(C). Sums to rank(C).
+pub fn leverage_scores(c: &Matrix) -> Vec<f64> {
+    let f = svd_thin(c);
+    let rank = f.rank(c.rows(), c.cols());
+    (0..c.rows())
+        .map(|i| (0..rank).map(|j| f.u[(i, j)] * f.u[(i, j)]).sum())
+        .collect()
+}
+
+/// Uniform column selection, `s` distinct indices, scales `sqrt(n/s)`
+/// (or 1.0 when `scaled` is false).
+pub fn uniform(n: usize, s: usize, scaled: bool, rng: &mut Rng) -> SketchOp {
+    let s = s.min(n);
+    let indices = rng.sample_without_replacement(n, s);
+    let scale = if scaled { (n as f64 / s as f64).sqrt() } else { 1.0 };
+    SketchOp::Select { n, indices: indices.clone(), scales: vec![scale; indices.len()] }
+}
+
+/// Leverage-score sampling per Algorithm 2: index i enters S with
+/// probability `min(1, s * l_i / rank)`, scaled by `1/sqrt(s l_i / rank)`
+/// when `scaled` (the paper's §4.5 trick is `scaled=false`). Expected
+/// number of columns is ~s.
+pub fn leverage(scores: &[f64], s: usize, scaled: bool, rng: &mut Rng) -> SketchOp {
+    let n = scores.len();
+    let rank: f64 = scores.iter().sum();
+    let mut indices = Vec::new();
+    let mut scales = Vec::new();
+    for (i, &l) in scores.iter().enumerate() {
+        let p = if rank > 0.0 { (s as f64 * l / rank).min(1.0) } else { s as f64 / n as f64 };
+        if rng.bernoulli(p) {
+            indices.push(i);
+            scales.push(if scaled && p > 0.0 { 1.0 / p.sqrt() } else { 1.0 });
+        }
+    }
+    if indices.is_empty() {
+        // degenerate: fall back to one uniform pick so S is non-empty
+        indices.push(rng.usize_below(n));
+        scales.push(1.0);
+    }
+    SketchOp::Select { n, indices, scales }
+}
+
+/// Force `P ⊂ S` (Corollary 5 / §4.5): union the sketch's index set with
+/// `p_idx`, giving the forced indices probability 1 (scale 1).
+pub fn with_forced_indices(op: SketchOp, p_idx: &[usize]) -> SketchOp {
+    match op {
+        SketchOp::Select { n, mut indices, mut scales } => {
+            for &p in p_idx {
+                if let Some(pos) = indices.iter().position(|&i| i == p) {
+                    scales[pos] = 1.0; // probability forced to 1 => no scaling
+                } else {
+                    indices.push(p);
+                    scales.push(1.0);
+                }
+            }
+            // keep deterministic order
+            let mut order: Vec<usize> = (0..indices.len()).collect();
+            order.sort_by_key(|&i| indices[i]);
+            SketchOp::Select {
+                n,
+                indices: order.iter().map(|&i| indices[i]).collect(),
+                scales: order.iter().map(|&i| scales[i]).collect(),
+            }
+        }
+        other => other,
+    }
+}
+
+/// Gaussian projection `S = G / sqrt(s)`.
+pub fn gaussian(n: usize, s: usize, rng: &mut Rng) -> SketchOp {
+    let scale = 1.0 / (s as f64).sqrt();
+    SketchOp::Dense(Matrix::from_fn(n, s, |_, _| rng.gaussian() * scale))
+}
+
+/// Subsampled randomized Hadamard transform.
+pub fn srht_sketch(n: usize, s: usize, rng: &mut Rng) -> SketchOp {
+    let n_pad = n.next_power_of_two();
+    let signs: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+    let rows = rng.sample_without_replacement(n_pad, s.min(n_pad));
+    // S^T x = sqrt(n_pad/s) * P^T (H x / sqrt(n_pad)) with D folded in.
+    let scale = (n_pad as f64 / s as f64).sqrt() / (n_pad as f64).sqrt();
+    SketchOp::SrhtOp { n, n_pad, signs, rows, scale }
+}
+
+/// CountSketch: each row hashed to one of `s` buckets with a random sign.
+pub fn countsketch(n: usize, s: usize, rng: &mut Rng) -> SketchOp {
+    let cols: Vec<usize> = (0..n).map(|_| rng.usize_below(s)).collect();
+    let signs: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+    SketchOp::RowHash { n, s, cols, signs }
+}
+
+/// Build a sketch of the requested kind. For `Leverage`, `c` supplies the
+/// matrix whose row leverage scores drive the sampling.
+pub fn build(kind: SketchKind, n: usize, s: usize, c: Option<&Matrix>, rng: &mut Rng) -> SketchOp {
+    match kind {
+        SketchKind::Uniform => uniform(n, s, true, rng),
+        SketchKind::Leverage { scaled } => {
+            let scores = leverage_scores(c.expect("leverage sketch needs C"));
+            leverage(&scores, s, scaled, rng)
+        }
+        SketchKind::Gaussian => gaussian(n, s, rng),
+        SketchKind::Srht => srht_sketch(n, s, rng),
+        SketchKind::CountSketch => countsketch(n, s, rng),
+    }
+}
+
+/// Materialize S as a dense n x s matrix (tests / small problems).
+pub fn materialize(op: &SketchOp) -> Matrix {
+    let n = op.n();
+    let eye = Matrix::identity(n);
+    op.apply_left(&eye).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_left_matches_materialized_all_kinds() {
+        let mut rng = Rng::new(0);
+        let n = 24;
+        let a = Matrix::randn(n, 5, &mut rng);
+        for kind in [
+            SketchKind::Uniform,
+            SketchKind::Leverage { scaled: true },
+            SketchKind::Leverage { scaled: false },
+            SketchKind::Gaussian,
+            SketchKind::Srht,
+            SketchKind::CountSketch,
+        ] {
+            let c = Matrix::randn(n, 4, &mut rng);
+            let op = build(kind, n, 8, Some(&c), &mut rng);
+            let sta = op.apply_left(&a);
+            let s_dense = materialize(&op);
+            let expect = s_dense.tr_matmul(&a);
+            assert!(
+                sta.max_abs_diff(&expect) < 1e-9,
+                "{}: apply_left != S^T A",
+                kind.name()
+            );
+            assert_eq!(sta.rows(), op.s());
+        }
+    }
+
+    #[test]
+    fn conjugate_is_symmetric_for_symmetric_input() {
+        let mut rng = Rng::new(1);
+        let g = Matrix::randn(16, 16, &mut rng);
+        let k = g.matmul_tr(&g);
+        let op = uniform(16, 6, true, &mut rng);
+        let sks = op.conjugate(&k);
+        assert_eq!((sks.rows(), sks.cols()), (6, 6));
+        assert!(sks.max_abs_diff(&sks.transpose()) < 1e-9);
+    }
+
+    #[test]
+    fn leverage_scores_sum_to_rank() {
+        let mut rng = Rng::new(2);
+        let b = Matrix::randn(30, 3, &mut rng);
+        let c = b.matmul(&Matrix::randn(3, 6, &mut rng)); // rank 3
+        let l = leverage_scores(&c);
+        let sum: f64 = l.iter().sum();
+        assert!((sum - 3.0).abs() < 1e-8, "sum={sum}");
+        assert!(l.iter().all(|&x| (-1e-12..=1.0 + 1e-9).contains(&x)));
+    }
+
+    #[test]
+    fn uniform_scaling_preserves_expected_gram() {
+        // E[S S^T] = I  =>  E[x^T S S^T x] = ||x||^2 (sanity via averaging)
+        let mut rng = Rng::new(3);
+        let n = 40;
+        let x = Matrix::randn(n, 1, &mut rng);
+        let mut acc = 0.0;
+        let trials = 3000;
+        for _ in 0..trials {
+            let op = uniform(n, 10, true, &mut rng);
+            let sx = op.apply_left(&x);
+            acc += sx.fro_norm_sq();
+        }
+        let expect = x.fro_norm_sq();
+        let mean = acc / trials as f64;
+        assert!((mean - expect).abs() / expect < 0.1, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn gaussian_preserves_norms_on_average() {
+        let mut rng = Rng::new(4);
+        let n = 30;
+        let x = Matrix::randn(n, 1, &mut rng);
+        let mut acc = 0.0;
+        let trials = 800;
+        for _ in 0..trials {
+            let op = gaussian(n, 20, &mut rng);
+            acc += op.apply_left(&x).fro_norm_sq();
+        }
+        let expect = x.fro_norm_sq();
+        assert!((acc / trials as f64 - expect).abs() / expect < 0.15);
+    }
+
+    #[test]
+    fn countsketch_unbiased_gram() {
+        let mut rng = Rng::new(5);
+        let n = 25;
+        let x = Matrix::randn(n, 1, &mut rng);
+        let mut acc = 0.0;
+        let trials = 2000;
+        for _ in 0..trials {
+            let op = countsketch(n, 12, &mut rng);
+            acc += op.apply_left(&x).fro_norm_sq();
+        }
+        let expect = x.fro_norm_sq();
+        assert!((acc / trials as f64 - expect).abs() / expect < 0.1);
+    }
+
+    #[test]
+    fn srht_isometry_on_average() {
+        let mut rng = Rng::new(6);
+        let n = 24; // padded to 32
+        let x = Matrix::randn(n, 1, &mut rng);
+        let mut acc = 0.0;
+        let trials = 1500;
+        for _ in 0..trials {
+            let op = srht_sketch(n, 12, &mut rng);
+            acc += op.apply_left(&x).fro_norm_sq();
+        }
+        let expect = x.fro_norm_sq();
+        assert!((acc / trials as f64 - expect).abs() / expect < 0.1);
+    }
+
+    #[test]
+    fn forced_indices_union() {
+        let mut rng = Rng::new(7);
+        let op = uniform(20, 5, false, &mut rng);
+        let forced = vec![0usize, 19];
+        let op2 = with_forced_indices(op, &forced);
+        let idx = op2.indices().unwrap();
+        assert!(idx.contains(&0) && idx.contains(&19));
+        // sorted, unique
+        let mut sorted = idx.to_vec();
+        sorted.dedup();
+        assert_eq!(sorted.len(), idx.len());
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn leverage_unscaled_has_unit_scales() {
+        let mut rng = Rng::new(8);
+        let c = Matrix::randn(30, 4, &mut rng);
+        let scores = leverage_scores(&c);
+        let op = leverage(&scores, 10, false, &mut rng);
+        if let SketchOp::Select { scales, .. } = &op {
+            assert!(scales.iter().all(|&s| s == 1.0));
+        } else {
+            panic!("leverage must be Select");
+        }
+    }
+
+    #[test]
+    fn subspace_embedding_property_gaussian() {
+        // Property 1 sanity: singular values of S^T U near 1 for orthonormal U.
+        let mut rng = Rng::new(9);
+        let n = 60;
+        let k = 3;
+        let q = crate::linalg::qr::qr_thin(&Matrix::randn(n, k, &mut rng)).q;
+        let op = gaussian(n, 50, &mut rng);
+        let stu = op.apply_left(&q);
+        let f = svd_thin(&stu);
+        for &s in &f.s {
+            assert!((s - 1.0).abs() < 0.6, "singular value {s} too far from 1");
+        }
+    }
+}

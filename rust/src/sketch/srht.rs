@@ -1,0 +1,78 @@
+//! Fast Walsh–Hadamard transform (unnormalized), applied to each column of
+//! a matrix in place. Row count must be a power of two.
+
+use crate::linalg::Matrix;
+
+/// In-place unnormalized FWHT over each column of `m` (rows = 2^p).
+pub fn fwht_columns(m: &mut Matrix) {
+    let n = m.rows();
+    assert!(n.is_power_of_two(), "FWHT needs power-of-two rows, got {n}");
+    let cols = m.cols();
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                for c in 0..cols {
+                    let x = m[(j, c)];
+                    let y = m[(j + h, c)];
+                    m[(j, c)] = x + y;
+                    m[(j + h, c)] = x - y;
+                }
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Naive Hadamard matrix H_n (Sylvester construction).
+    fn hadamard(n: usize) -> Matrix {
+        assert!(n.is_power_of_two());
+        let mut h = Matrix::from_vec(1, 1, vec![1.0]);
+        while h.rows() < n {
+            let m = h.rows();
+            let mut next = Matrix::zeros(2 * m, 2 * m);
+            next.set_block(0, 0, &h);
+            next.set_block(0, m, &h);
+            next.set_block(m, 0, &h);
+            next.set_block(m, m, &h.scale(-1.0));
+            h = next;
+        }
+        h
+    }
+
+    #[test]
+    fn matches_dense_hadamard() {
+        let mut rng = Rng::new(0);
+        for &n in &[1usize, 2, 4, 16, 32] {
+            let a = Matrix::randn(n, 3, &mut rng);
+            let mut fast = a.clone();
+            fwht_columns(&mut fast);
+            let dense = hadamard(n).matmul(&a);
+            assert!(fast.max_abs_diff(&dense) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn involution_up_to_n() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(8, 2, &mut rng);
+        let mut b = a.clone();
+        fwht_columns(&mut b);
+        fwht_columns(&mut b);
+        assert!(b.scale(1.0 / 8.0).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_panics() {
+        let mut m = Matrix::zeros(6, 1);
+        fwht_columns(&mut m);
+    }
+}

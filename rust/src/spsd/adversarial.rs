@@ -1,0 +1,76 @@
+//! Adversarial matrices from the paper's lower bounds (Appendix B / F).
+//!
+//! `K = diag(B, ..., B)` with `B = (1-a) I_p + a 1 1^T`, `p = n/k`, `a → 1`.
+//! Theorem 7 lower-bounds the fast model's error on this family; Theorem 1
+//! uses it to show the Nyström method cannot be linear-time under a 1+ε
+//! requirement.
+
+use crate::linalg::Matrix;
+
+/// The block-diagonal adversarial matrix (Lemma 21). `n` must be a
+/// multiple of `k`.
+pub fn block_diag(n: usize, k: usize, alpha: f64) -> Matrix {
+    assert!(n % k == 0, "n={n} must be divisible by k={k}");
+    assert!((0.0..1.0).contains(&alpha));
+    let p = n / k;
+    Matrix::from_fn(n, n, |i, j| {
+        if i / p != j / p {
+            0.0
+        } else if i == j {
+            1.0
+        } else {
+            alpha
+        }
+    })
+}
+
+/// `‖A - A_k‖_F^2 = (1-a)^2 (n-k)` for the adversarial matrix (Lemma 21).
+pub fn best_rank_k_error_sq(n: usize, k: usize, alpha: f64) -> f64 {
+    (1.0 - alpha).powi(2) * (n - k) as f64
+}
+
+/// Theorem 7's lower bound on `‖K - K̃_fast‖_F^2 / ‖K - K_k‖_F^2` for
+/// column-selection P ⊂ S.
+pub fn theorem7_lower_bound(n: usize, k: usize, c: usize, s: usize) -> f64 {
+    let (nf, kf, cf, sf) = (n as f64, k as f64, c as f64, s as f64);
+    (nf - cf) / (nf - kf) * (1.0 + 2.0 * kf / cf)
+        + (nf - sf) / (nf - kf) * (kf * (nf - sf)) / (sf * sf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::best_rank_k_error_sq as svd_tail;
+
+    #[test]
+    fn structure_is_block_diagonal() {
+        let a = block_diag(12, 3, 0.5);
+        assert_eq!(a[(0, 0)], 1.0);
+        assert_eq!(a[(0, 3)], 0.5);
+        assert_eq!(a[(0, 4)], 0.0); // across blocks
+        assert!(a.max_abs_diff(&a.transpose()) < 1e-15);
+    }
+
+    #[test]
+    fn lemma21_rank_k_error() {
+        let (n, k, alpha) = (20, 4, 0.9);
+        let a = block_diag(n, k, alpha);
+        let exact = svd_tail(&a, k);
+        let formula = best_rank_k_error_sq(n, k, alpha);
+        assert!(
+            (exact - formula).abs() < 1e-8 * formula.max(1e-12),
+            "exact={exact} formula={formula}"
+        );
+    }
+
+    #[test]
+    fn lower_bound_limits_match_paper_remarks() {
+        // s = n ⇒ second term vanishes: prototype-model lower bound shape.
+        let lb_proto = theorem7_lower_bound(1000, 10, 50, 1000);
+        assert!((lb_proto - (950.0 / 990.0) * (1.0 + 20.0 / 50.0)).abs() < 1e-12);
+        // s = c ⇒ Nyström-shaped Ω(1 + kn/c^2) behaviour: bound grows with n.
+        let lb_small_n = theorem7_lower_bound(1_000, 10, 50, 50);
+        let lb_big_n = theorem7_lower_bound(10_000, 10, 50, 50);
+        assert!(lb_big_n > 5.0 * lb_small_n);
+    }
+}

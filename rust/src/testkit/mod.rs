@@ -1,0 +1,116 @@
+//! Property-testing substrate (no `proptest` in the image).
+//!
+//! Seeded generators + a case runner: each property runs over `cases`
+//! random inputs drawn from explicit generators; failures report the
+//! case seed so they replay deterministically.
+
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 32, seed: 0xFA57_59D5 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Prop { cases, seed }
+    }
+
+    /// Run `f` over `cases` independent RNG streams; panics with the case
+    /// index + derived seed on the first failure (so it can be replayed).
+    pub fn check(&self, name: &str, f: impl Fn(&mut Rng) -> Result<(), String>) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case as u64 + 1));
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!("property {name:?} failed at case {case} (seed {case_seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use super::*;
+
+    /// Integer in `[lo, hi]`.
+    pub fn int(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.usize_below(hi - lo + 1)
+    }
+
+    /// Random dense matrix with standard-normal entries.
+    pub fn matrix(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+        Matrix::randn(m, n, rng)
+    }
+
+    /// Random SPSD matrix of exact rank `r` (n x n).
+    pub fn spsd(rng: &mut Rng, n: usize, r: usize) -> Matrix {
+        let b = Matrix::randn(n, r, rng);
+        b.matmul_tr(&b)
+    }
+
+    /// Random matrix of exact rank `r`.
+    pub fn low_rank(rng: &mut Rng, m: usize, n: usize, r: usize) -> Matrix {
+        let b = Matrix::randn(m, r, rng);
+        let c = Matrix::randn(r, n, rng);
+        b.matmul(&c)
+    }
+}
+
+/// Assert two matrices are elementwise close.
+pub fn assert_close(a: &Matrix, b: &Matrix, tol: f64, what: &str) -> Result<(), String> {
+    let d = a.max_abs_diff(b);
+    if d <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: max |diff| = {d:.3e} > tol {tol:.1e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        Prop::default().check("true", |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn check_reports_failure_with_seed() {
+        Prop::new(4, 1).check("false", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Rng::new(0);
+        let m = gen::matrix(&mut rng, 3, 4);
+        assert_eq!((m.rows(), m.cols()), (3, 4));
+        let s = gen::spsd(&mut rng, 5, 2);
+        assert_eq!((s.rows(), s.cols()), (5, 5));
+        // SPSD symmetric
+        assert!(s.max_abs_diff(&s.transpose()) < 1e-12);
+        let lr = gen::low_rank(&mut rng, 6, 7, 2);
+        let f = crate::linalg::svd_thin(&lr);
+        assert_eq!(f.rank(6, 7), 2);
+        let k = gen::int(&mut rng, 2, 9);
+        assert!((2..=9).contains(&k));
+    }
+
+    #[test]
+    fn assert_close_works() {
+        let a = Matrix::identity(3);
+        assert!(assert_close(&a, &a, 0.0, "same").is_ok());
+        let b = a.scale(1.1);
+        assert!(assert_close(&a, &b, 0.01, "diff").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Small shared utilities: RNG, timing.
+
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,262 @@
+//! Edge-case and robustness tests across modules: degenerate sizes,
+//! rank-deficient inputs, clamping behaviour, and numerical corner cases.
+
+use fastspsd::apps::{kmeans, knn_classify, kpca};
+use fastspsd::coordinator::oracle::{DenseOracle, KernelOracle};
+use fastspsd::cur;
+use fastspsd::data;
+use fastspsd::linalg::{eigh, pinv, svd_thin, Matrix};
+use fastspsd::sketch;
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::testkit::gen;
+use fastspsd::util::Rng;
+
+// ---------------------------------------------------------------- linalg
+
+#[test]
+fn gemm_with_zero_dims() {
+    let a = Matrix::zeros(0, 5);
+    let b = Matrix::zeros(5, 3);
+    let c = a.matmul(&b);
+    assert_eq!((c.rows(), c.cols()), (0, 3));
+    let d = Matrix::zeros(3, 0);
+    let e = Matrix::zeros(0, 4);
+    let f = d.matmul(&e);
+    assert_eq!((f.rows(), f.cols()), (3, 4));
+    assert_eq!(f, Matrix::zeros(3, 4));
+}
+
+#[test]
+fn svd_of_single_row_and_column() {
+    let row = Matrix::from_vec(1, 4, vec![3.0, 0.0, 4.0, 0.0]);
+    let f = svd_thin(&row);
+    assert!((f.s[0] - 5.0).abs() < 1e-12);
+    let col = row.transpose();
+    let f2 = svd_thin(&col);
+    assert!((f2.s[0] - 5.0).abs() < 1e-12);
+}
+
+#[test]
+fn eigh_handles_repeated_eigenvalues() {
+    // 2 I ⊕ block: repeated eigenvalue 2 with multiplicity 3
+    let a = Matrix::diag(&[2.0, 2.0, 2.0, 7.0]);
+    let e = eigh(&a);
+    assert!((e.values[0] - 7.0).abs() < 1e-12);
+    for i in 1..4 {
+        assert!((e.values[i] - 2.0).abs() < 1e-12);
+    }
+    assert!(e.reconstruct().max_abs_diff(&a) < 1e-10);
+}
+
+#[test]
+fn pinv_of_ill_conditioned() {
+    // LAPACK-style tolerance is smax * max(m,n) * eps ≈ 2.2e-15 here:
+    // a 1e-16 direction must be dropped, a 1e-13 one must be kept.
+    let mut rng = Rng::new(0);
+    let u = fastspsd::linalg::qr::qr_thin(&Matrix::randn(10, 2, &mut rng)).q;
+    let v = fastspsd::linalg::qr::qr_thin(&Matrix::randn(8, 2, &mut rng)).q;
+    let below = Matrix::from_fn(10, 2, |i, j| u[(i, j)] * if j == 0 { 1.0 } else { 1e-16 });
+    let a = below.matmul_tr(&v);
+    let ap = pinv(&a);
+    assert!(ap.fro_norm() < 10.0, "below-tolerance direction kept: {}", ap.fro_norm());
+    let above = Matrix::from_fn(10, 2, |i, j| u[(i, j)] * if j == 0 { 1.0 } else { 1e-13 });
+    let b = above.matmul_tr(&v);
+    let bp = pinv(&b);
+    assert!(bp.fro_norm() > 1e12, "above-tolerance direction dropped: {}", bp.fro_norm());
+}
+
+// ---------------------------------------------------------------- sketch
+
+#[test]
+fn srht_exact_power_of_two() {
+    let mut rng = Rng::new(1);
+    let n = 32;
+    let a = Matrix::randn(n, 3, &mut rng);
+    let op = sketch::srht_sketch(n, 8, &mut rng);
+    let fast = op.apply_left(&a);
+    let dense = sketch::materialize(&op).tr_matmul(&a);
+    assert!(fast.max_abs_diff(&dense) < 1e-9);
+}
+
+#[test]
+fn leverage_with_rank_deficient_c_including_zero_rows() {
+    let mut rng = Rng::new(2);
+    let mut c = gen::low_rank(&mut rng, 20, 5, 2);
+    // zero out some rows entirely → zero leverage scores
+    for r in [3usize, 7, 11] {
+        for v in c.row_mut(r) {
+            *v = 0.0;
+        }
+    }
+    let scores = sketch::leverage_scores(&c);
+    assert!(scores[3] < 1e-12 && scores[7] < 1e-12);
+    let op = sketch::leverage(&scores, 6, true, &mut rng);
+    // zero-score rows are never selected
+    if let Some(idx) = op.indices() {
+        assert!(!idx.contains(&3) && !idx.contains(&7) && !idx.contains(&11));
+    }
+}
+
+#[test]
+fn sketch_s_larger_than_n_clamps() {
+    let mut rng = Rng::new(3);
+    let op = sketch::uniform(10, 50, true, &mut rng);
+    assert_eq!(op.s(), 10);
+}
+
+// ------------------------------------------------------------------ spsd
+
+#[test]
+fn nystrom_with_single_column() {
+    let mut rng = Rng::new(4);
+    let k = gen::spsd(&mut rng, 15, 15);
+    let o = DenseOracle::new(k.clone());
+    let a = spsd::nystrom(&o, &[7]);
+    assert_eq!((a.u.rows(), a.u.cols()), (1, 1));
+    // rank-1 approximation error is bounded by ||K||
+    assert!(a.rel_fro_error(&k) <= 1.0 + 1e-9);
+}
+
+#[test]
+fn fast_with_s_exceeding_n() {
+    let mut rng = Rng::new(5);
+    let k = gen::spsd(&mut rng, 20, 4);
+    let o = DenseOracle::new(k.clone());
+    let p = spsd::uniform_p(20, 6, &mut rng);
+    let a = spsd::fast(&o, &p, FastConfig::uniform(100), &mut rng);
+    // covers all indices → equals prototype objective; rank(K)=4<6 → exact
+    assert!(a.rel_fro_error(&k) < 1e-9);
+}
+
+#[test]
+fn uniform_p_is_sorted_distinct_and_clamped() {
+    let mut rng = Rng::new(6);
+    let p = spsd::uniform_p(10, 25, &mut rng);
+    assert_eq!(p.len(), 10);
+    assert!(p.windows(2).all(|w| w[0] < w[1]));
+}
+
+#[test]
+fn models_preserve_spsd_structure() {
+    // U matrices must stay symmetric so C U C^T is symmetric.
+    let mut rng = Rng::new(7);
+    let k = gen::spsd(&mut rng, 30, 10);
+    let o = DenseOracle::new(k);
+    let p = spsd::uniform_p(30, 6, &mut rng);
+    for a in [
+        spsd::nystrom(&o, &p),
+        spsd::fast(&o, &p, FastConfig::uniform(15), &mut rng),
+        spsd::prototype(&o, &p),
+    ] {
+        assert!(a.u.max_abs_diff(&a.u.transpose()) < 1e-10, "{}", a.method);
+        let m = a.materialize();
+        assert!(m.max_abs_diff(&m.transpose()) < 1e-8, "{}", a.method);
+    }
+}
+
+// ------------------------------------------------------------------- cur
+
+#[test]
+fn cur_with_all_rows_and_columns_is_exact() {
+    let mut rng = Rng::new(8);
+    let a = Matrix::randn(12, 9, &mut rng);
+    let cols: Vec<usize> = (0..9).collect();
+    let rows: Vec<usize> = (0..12).collect();
+    let dec = cur::cur_optimal(&a, &cols, &rows);
+    assert!(dec.rel_fro_error(&a) < 1e-12);
+}
+
+#[test]
+fn cur_single_row_single_column() {
+    let mut rng = Rng::new(9);
+    let a = gen::low_rank(&mut rng, 10, 8, 1); // rank 1
+    let dec = cur::cur_optimal(&a, &[2], &[5]);
+    assert!(dec.rel_fro_error(&a) < 1e-9, "rank-1 A from one row/col");
+}
+
+#[test]
+fn uniform_adaptive2_returns_enough_columns() {
+    let mut rng = Rng::new(10);
+    let a = gen::matrix(&mut rng, 30, 25);
+    let idx = cur::uniform_adaptive2(&a, 9, &mut rng);
+    assert!(idx.len() >= 7 && idx.len() <= 10, "got {}", idx.len());
+    assert!(idx.windows(2).all(|w| w[0] < w[1]));
+}
+
+// ------------------------------------------------------------------ apps
+
+#[test]
+fn kpca_k_exceeding_rank_clamps() {
+    let mut rng = Rng::new(11);
+    let k = gen::spsd(&mut rng, 20, 3);
+    let o = DenseOracle::new(k);
+    let p = spsd::uniform_p(20, 6, &mut rng);
+    let a = spsd::fast(&o, &p, FastConfig::uniform(12), &mut rng);
+    let model = kpca::kpca_from_approx(&a, 10);
+    // eig_k_of_cuc truncates at rank(C) <= 6
+    assert!(model.k() <= 6);
+    assert!(model.eigvals.iter().all(|&v| v >= 0.0));
+}
+
+#[test]
+fn knn_with_k_larger_than_train_set() {
+    let train = Matrix::from_vec(3, 1, vec![0.0, 1.0, 10.0]);
+    let labels = vec![0, 0, 1];
+    let test = Matrix::from_vec(1, 1, vec![0.5]);
+    // k = 10 > 3 neighbours available: majority over all of them
+    let pred = knn_classify(&train, &labels, &test, 10);
+    assert_eq!(pred, vec![0]);
+}
+
+#[test]
+fn kmeans_with_duplicate_points() {
+    let pts = Matrix::from_vec(6, 1, vec![1.0, 1.0, 1.0, 9.0, 9.0, 9.0]);
+    let mut rng = Rng::new(12);
+    let assign = kmeans(&pts, 2, 20, &mut rng);
+    assert_eq!(assign[0], assign[1]);
+    assert_eq!(assign[1], assign[2]);
+    assert_eq!(assign[3], assign[4]);
+    assert_ne!(assign[0], assign[3]);
+}
+
+// ------------------------------------------------------------------ data
+
+#[test]
+fn dataset_scale_clamps_to_minimum() {
+    let spec = data::find_spec("DNA").unwrap();
+    let ds = spec.generate(1e-9, 0);
+    assert_eq!(ds.x.rows(), 200); // floor
+    let full = spec.generate(5.0, 0);
+    assert_eq!(full.x.rows(), 2000); // ceiling = paper size
+}
+
+#[test]
+fn eta_of_identity_kernel_is_k_over_n() {
+    let k = Matrix::identity(50);
+    let e = data::sigma::eta(&k, 5);
+    assert!((e - 0.1).abs() < 1e-9);
+}
+
+// ----------------------------------------------------------- coordinator
+
+#[test]
+fn oracle_entries_accumulate_across_calls() {
+    let mut rng = Rng::new(13);
+    let o = DenseOracle::new(gen::spsd(&mut rng, 10, 10));
+    o.block(&[0, 1], &[0, 1, 2]);
+    o.block(&[3], &[4]);
+    assert_eq!(o.entries_observed(), 7);
+}
+
+#[test]
+fn histogram_quantiles_are_ordered() {
+    use fastspsd::coordinator::metrics::Histogram;
+    use std::time::Duration;
+    let h = Histogram::default();
+    for i in 1..=100u64 {
+        h.observe(Duration::from_micros(i * 10));
+    }
+    assert!(h.quantile(0.1) <= h.quantile(0.5));
+    assert!(h.quantile(0.5) <= h.quantile(0.95));
+    assert!(h.quantile(0.95) <= h.max());
+}

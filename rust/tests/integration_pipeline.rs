@@ -1,0 +1,176 @@
+//! Cross-module integration: the full algorithm pipelines at small scale —
+//! dataset → oracle → approximation → downstream task → metric. Runs on
+//! the pure-rust engine so it works without artifacts; the PJRT variant
+//! runs when artifacts exist.
+
+use fastspsd::apps::{knn_classify, kpca, metrics, spectral};
+use fastspsd::coordinator::oracle::KernelOracle;
+use fastspsd::coordinator::{ApproxRequest, ApproxService, KernelEngine, MethodSpec, RbfOracle, ServiceConfig};
+use fastspsd::data::{self, sigma};
+use fastspsd::linalg::Matrix;
+use fastspsd::sketch::SketchKind;
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::util::Rng;
+use std::sync::{mpsc, Arc};
+
+fn small_oracle(n: usize, seed: u64) -> (data::Dataset, Arc<RbfOracle>) {
+    let ds = data::make_blobs("it", n, 8, 4, 3.0, seed);
+    let sig = sigma::calibrate_sigma(&ds.x, 0.9, 300, seed);
+    let oracle = Arc::new(RbfOracle::cpu(
+        Arc::new(ds.x.clone()),
+        sigma::gamma_of_sigma(sig),
+    ));
+    (ds, oracle)
+}
+
+#[test]
+fn fig1_observed_entries_accounting() {
+    // The Figure-1 claim: Nyström sees an n x c block; the fast model an
+    // n x c block plus an (s'-c)^2 block; the prototype everything.
+    let (_ds, oracle) = small_oracle(200, 0);
+    let n = 200usize;
+    let c = 10usize;
+    let mut rng = Rng::new(1);
+    let p = spsd::uniform_p(n, c, &mut rng);
+
+    oracle.reset_entries();
+    let _ = spsd::nystrom(oracle.as_ref(), &p);
+    assert_eq!(oracle.entries_observed(), (n * c) as u64);
+
+    oracle.reset_entries();
+    let fast = spsd::fast(oracle.as_ref(), &p, FastConfig::uniform(4 * c), &mut rng);
+    let fresh = fast.entries_observed - (n * c) as u64;
+    let s_minus_c = (fresh as f64).sqrt();
+    assert!((s_minus_c.round() * s_minus_c.round() - fresh as f64).abs() < 1e-9);
+    assert!(fast.entries_observed < (n * n) as u64 / 2);
+
+    oracle.reset_entries();
+    let _ = spsd::prototype(oracle.as_ref(), &p);
+    assert!(oracle.entries_observed() >= (n * n) as u64);
+}
+
+#[test]
+fn kpca_pipeline_fast_beats_nystrom_misalignment() {
+    let (_ds, oracle) = small_oracle(300, 2);
+    let kfull = oracle.full();
+    let exact = kpca::exact_kpca(&kfull, 3);
+    let c = 12;
+    let mut mis_ny = 0.0;
+    let mut mis_fast = 0.0;
+    for t in 0..5u64 {
+        let mut rng = Rng::new(10 + t);
+        let p = spsd::uniform_p(300, c, &mut rng);
+        let ny = kpca::kpca_from_approx(&spsd::nystrom(oracle.as_ref(), &p), 3);
+        mis_ny += kpca::misalignment(&exact.v, &ny.v);
+        let fa = kpca::kpca_from_approx(
+            &spsd::fast(oracle.as_ref(), &p, FastConfig::uniform(8 * c), &mut rng),
+            3,
+        );
+        mis_fast += kpca::misalignment(&exact.v, &fa.v);
+    }
+    assert!(
+        mis_fast <= mis_ny,
+        "fast misalignment {mis_fast} should beat nystrom {mis_ny}"
+    );
+}
+
+#[test]
+fn classification_pipeline_end_to_end() {
+    let ds = data::make_blobs("clf", 400, 10, 3, 4.0, 3);
+    let mut rng = Rng::new(4);
+    let (train, test) = data::train_test_split(&ds, &mut rng);
+    let sig = sigma::calibrate_sigma(&train.x, 0.9, 300, 5);
+    let oracle = RbfOracle::cpu(Arc::new(train.x.clone()), sigma::gamma_of_sigma(sig));
+    let p = spsd::uniform_p(train.x.rows(), 16, &mut rng);
+    let approx = spsd::fast(&oracle, &p, FastConfig::uniform(64), &mut rng);
+    let model = kpca::kpca_from_approx(&approx, 3);
+    let kx = oracle.cross(&test.x);
+    let ftr = model.train_features();
+    let fte = model.test_features(&kx);
+    let pred = knn_classify(&ftr, &train.labels, &fte, 10);
+    let err = metrics::error_rate(&pred, &test.labels);
+    assert!(err < 0.1, "well-separated blobs must classify well, err={err}");
+}
+
+#[test]
+fn spectral_pipeline_end_to_end() {
+    let ds = data::make_blobs("spec", 240, 6, 3, 6.0, 6);
+    let sig = sigma::calibrate_sigma(&ds.x, 0.9, 240, 7);
+    let oracle = RbfOracle::cpu(Arc::new(ds.x.clone()), sigma::gamma_of_sigma(sig));
+    let mut rng = Rng::new(8);
+    let p = spsd::uniform_p(240, 12, &mut rng);
+    let approx = spsd::fast(&oracle, &p, FastConfig::uniform(48), &mut rng);
+    let pred = spectral::spectral_cluster_from_approx(&approx, 3, &mut rng);
+    let score = metrics::nmi(&pred, &ds.labels);
+    assert!(score > 0.8, "nmi={score}");
+}
+
+#[test]
+fn service_over_pjrt_engine_if_available() {
+    let engine = Arc::new(KernelEngine::auto());
+    let ds = data::make_blobs("svc", 600, 16, 4, 3.0, 9);
+    let sig = sigma::calibrate_sigma(&ds.x, 0.9, 300, 10);
+    let oracle = Arc::new(RbfOracle::new(
+        Arc::new(ds.x.clone()),
+        sigma::gamma_of_sigma(sig),
+        Arc::clone(&engine),
+    ));
+    let svc = ApproxService::new(oracle, ServiceConfig { workers: 3, queue_capacity: 8 });
+    let (tx, rx) = mpsc::channel();
+    for i in 0..12u64 {
+        svc.submit(
+            ApproxRequest {
+                id: i,
+                method: MethodSpec::Fast { s: 48, kind: SketchKind::Uniform },
+                c: 12,
+                k: 4,
+                seed: i,
+            },
+            tx.clone(),
+        );
+    }
+    svc.drain();
+    drop(tx);
+    let resps: Vec<_> = rx.iter().collect();
+    assert_eq!(resps.len(), 12);
+    for r in &resps {
+        assert_eq!(r.eigvals.len(), 4);
+        assert!(r.eigvals[0] > 0.0);
+    }
+    assert_eq!(svc.metrics().failed.get(), 0);
+    if engine.is_pjrt() {
+        // The service's small c-column blocks correctly fall back to the
+        // CPU path (padding a 600x12 block to 768x256 tiles would waste
+        // >96% of the FLOPs); a dense full-kernel request must hit PJRT.
+        let x = Matrix::randn(600, 16, &mut Rng::new(99));
+        let _ = engine.rbf_cross(&x, &x, 0.5);
+        assert!(engine.pjrt_tiles.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    }
+}
+
+#[test]
+fn regularized_solve_via_all_three_models() {
+    let (_ds, oracle) = small_oracle(150, 11);
+    let mut rng = Rng::new(12);
+    let p = spsd::uniform_p(150, 20, &mut rng);
+    let y: Vec<f64> = (0..150).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+    for approx in [
+        spsd::nystrom(oracle.as_ref(), &p),
+        spsd::fast(oracle.as_ref(), &p, FastConfig::uniform(60), &mut rng),
+        spsd::prototype(oracle.as_ref(), &p),
+    ] {
+        let w = approx.solve_regularized(0.8, &y);
+        let mut kk = approx.materialize();
+        for i in 0..150 {
+            kk[(i, i)] += 0.8;
+        }
+        let resid: f64 = kk
+            .matvec(&w)
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(resid < 1e-6, "{}: residual {resid}", approx.method);
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration tests for the PJRT runtime + block-scheduler engine.
+//! These need `make artifacts`; they skip (with a note) when the artifact
+//! directory is missing so `cargo test` works in a fresh checkout.
+
+use fastspsd::coordinator::engine::{rbf_cross_cpu, KernelEngine};
+use fastspsd::linalg::Matrix;
+use fastspsd::runtime::{default_artifact_dir, RuntimeHandle};
+use fastspsd::util::Rng;
+
+fn runtime_or_skip() -> Option<RuntimeHandle> {
+    match RuntimeHandle::spawn(default_artifact_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest();
+    assert!(m.find("rbf_block_256x256x16").is_some());
+    assert!(m.find("rbf_block_256x256x128").is_some());
+    assert!(m.find("rbf_block_256x256x1024").is_some());
+    assert!(m.find("matmul_256x256x256").is_some());
+    let buckets = m.rbf_buckets();
+    assert_eq!(buckets.iter().map(|(d, _)| *d).collect::<Vec<_>>(), vec![16, 128, 1024]);
+}
+
+#[test]
+fn raw_rbf_artifact_matches_cpu_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(256, 16, &mut rng);
+    let y = Matrix::randn(256, 16, &mut rng);
+    let gamma = 0.35f64;
+    let to_f32 = |m: &Matrix| m.data().iter().map(|&v| v as f32).collect::<Vec<f32>>();
+    let out = rt
+        .execute_one(
+            "rbf_block_256x256x16",
+            vec![
+                (vec![gamma as f32], vec![1, 1]),
+                (to_f32(&x), vec![256, 16]),
+                (to_f32(&y), vec![256, 16]),
+            ],
+        )
+        .expect("execute");
+    assert_eq!(out.len(), 256 * 256);
+    let got = Matrix::from_f32(256, 256, &out);
+    let expect = rbf_cross_cpu(&x, &y, gamma);
+    assert!(got.max_abs_diff(&expect) < 1e-4, "diff={}", got.max_abs_diff(&expect));
+}
+
+#[test]
+fn engine_pjrt_matches_cpu_on_ragged_sizes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let engine = KernelEngine::pjrt(rt);
+    assert!(engine.is_pjrt());
+    let mut rng = Rng::new(1);
+    // ragged sizes that force padding + multi-tile assembly
+    for &(m, n, d) in &[(300usize, 300usize, 10usize), (512, 260, 16), (257, 700, 100)] {
+        let x = Matrix::randn(m, d, &mut rng);
+        let y = Matrix::randn(n, d, &mut rng);
+        let fast = engine.rbf_cross(&x, &y, 0.5);
+        let slow = rbf_cross_cpu(&x, &y, 0.5);
+        assert_eq!((fast.rows(), fast.cols()), (m, n));
+        assert!(
+            fast.max_abs_diff(&slow) < 1e-4,
+            "({m},{n},{d}) diff={}",
+            fast.max_abs_diff(&slow)
+        );
+    }
+    assert!(engine.pjrt_tiles.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn engine_matmul_matches_gemm() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let engine = KernelEngine::pjrt(rt);
+    let mut rng = Rng::new(2);
+    let a = Matrix::randn(300, 200, &mut rng);
+    let b = Matrix::randn(200, 280, &mut rng);
+    let fast = engine.matmul(&a, &b);
+    let slow = a.matmul(&b);
+    assert!(fast.max_abs_diff(&slow) < 2e-3, "diff={}", fast.max_abs_diff(&slow));
+}
+
+#[test]
+fn engine_falls_back_for_small_or_wide_inputs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let engine = KernelEngine::pjrt(rt);
+    let mut rng = Rng::new(3);
+    // tiny: padding waste → CPU path
+    let x = Matrix::randn(8, 4, &mut rng);
+    let _ = engine.rbf_cross(&x, &x, 1.0);
+    assert!(engine.cpu_blocks.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    // d beyond the largest bucket → CPU path
+    let wide = Matrix::randn(300, 2000, &mut rng);
+    let before = engine.pjrt_tiles.load(std::sync::atomic::Ordering::Relaxed);
+    let k = engine.rbf_cross(&wide, &wide, 0.01);
+    assert_eq!(k.rows(), 300);
+    assert_eq!(engine.pjrt_tiles.load(std::sync::atomic::Ordering::Relaxed), before);
+}
+
+#[test]
+fn runtime_rejects_bad_requests() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // unknown artifact
+    assert!(rt.execute_one("nope", vec![]).is_err());
+    // wrong arity
+    assert!(rt.execute_one("rbf_block_256x256x16", vec![]).is_err());
+    // wrong shape
+    let bad = rt.execute_one(
+        "rbf_block_256x256x16",
+        vec![
+            (vec![1.0], vec![1, 1]),
+            (vec![0.0; 10], vec![10, 1]),
+            (vec![0.0; 256 * 16], vec![256, 16]),
+        ],
+    );
+    assert!(bad.is_err());
+    // wrong element count for declared shape
+    let bad2 = rt.execute_one(
+        "rbf_block_256x256x16",
+        vec![
+            (vec![1.0], vec![1, 1]),
+            (vec![0.0; 5], vec![256, 16]),
+            (vec![0.0; 256 * 16], vec![256, 16]),
+        ],
+    );
+    assert!(bad2.is_err());
+}
+
+#[test]
+fn runtime_shared_across_threads() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let engine = std::sync::Arc::new(KernelEngine::pjrt(rt));
+    let mut rng = Rng::new(4);
+    let x = std::sync::Arc::new(Matrix::randn(300, 16, &mut rng));
+    let expect = rbf_cross_cpu(&x, &x, 0.5);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let e = std::sync::Arc::clone(&engine);
+            let xx = std::sync::Arc::clone(&x);
+            let ex = &expect;
+            s.spawn(move || {
+                let k = e.rbf_cross(&xx, &xx, 0.5);
+                assert!(k.max_abs_diff(ex) < 1e-4);
+            });
+        }
+    });
+}

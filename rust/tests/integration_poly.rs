@@ -1,0 +1,36 @@
+//! PJRT integration for the polynomial-kernel artifact (skips without
+//! artifacts).
+
+use fastspsd::coordinator::engine::{poly_cross_cpu, KernelEngine};
+use fastspsd::linalg::Matrix;
+use fastspsd::runtime::{default_artifact_dir, RuntimeHandle};
+use fastspsd::util::Rng;
+
+#[test]
+fn poly_pjrt_matches_cpu() {
+    let rt = match RuntimeHandle::spawn(default_artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            return;
+        }
+    };
+    if rt.manifest().find("poly_block_256x256x16").is_none() {
+        eprintln!("SKIP (artifacts predate poly_block — run `make artifacts`)");
+        return;
+    }
+    let engine = KernelEngine::pjrt(rt);
+    let mut rng = Rng::new(0);
+    for &(m, n, d) in &[(256usize, 256usize, 16usize), (300, 280, 10)] {
+        let x = Matrix::randn(m, d, &mut rng).scale(0.3);
+        let y = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let fast = engine.poly_cross(&x, &y, 0.7, 1.0, 2.0);
+        let slow = poly_cross_cpu(&x, &y, 0.7, 1.0, 2.0);
+        assert!(
+            fast.max_abs_diff(&slow) < 1e-4,
+            "({m},{n},{d}) diff={}",
+            fast.max_abs_diff(&slow)
+        );
+    }
+    assert!(engine.pjrt_tiles.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}

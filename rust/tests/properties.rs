@@ -1,0 +1,203 @@
+//! Property-based tests (testkit substrate) over the paper's theorems and
+//! the linear-algebra invariants they rest on.
+
+use fastspsd::coordinator::oracle::DenseOracle;
+use fastspsd::linalg::{eigh, pinv, svd_thin, Matrix};
+use fastspsd::sketch;
+use fastspsd::spsd::{self, adversarial, FastConfig};
+use fastspsd::testkit::{assert_close, gen, Prop};
+use fastspsd::util::Rng;
+
+#[test]
+fn prop_pinv_penrose_conditions() {
+    Prop::new(24, 0xA11CE).check("pinv penrose", |rng| {
+        let m = gen::int(rng, 1, 14);
+        let n = gen::int(rng, 1, 14);
+        let r = gen::int(rng, 1, m.min(n));
+        let a = gen::low_rank(rng, m, n, r);
+        let ap = pinv(&a);
+        assert_close(&a.matmul(&ap).matmul(&a), &a, 1e-7, "A A† A")?;
+        assert_close(&ap.matmul(&a).matmul(&ap), &ap, 1e-7, "A† A A†")?;
+        let aap = a.matmul(&ap);
+        assert_close(&aap, &aap.transpose(), 1e-8, "A A† sym")?;
+        let apa = ap.matmul(&a);
+        assert_close(&apa, &apa.transpose(), 1e-8, "A† A sym")
+    });
+}
+
+#[test]
+fn prop_svd_reconstruction_and_rank() {
+    Prop::new(24, 0xBEEF).check("svd", |rng| {
+        let m = gen::int(rng, 1, 16);
+        let n = gen::int(rng, 1, 16);
+        let r = gen::int(rng, 1, m.min(n));
+        let a = gen::low_rank(rng, m, n, r);
+        let f = svd_thin(&a);
+        assert_close(&f.reconstruct(), &a, 1e-7, "recon")?;
+        if f.rank(m, n) != r {
+            return Err(format!("rank {} != {r}", f.rank(m, n)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigh_reconstruction() {
+    Prop::new(24, 0xCAFE).check("eigh", |rng| {
+        let n = gen::int(rng, 1, 18);
+        let mut a = gen::matrix(rng, n, n);
+        a.symmetrize();
+        let e = eigh(&a);
+        assert_close(&e.reconstruct(), &a, 1e-7, "recon")?;
+        for w in e.values.windows(2) {
+            if w[0] < w[1] - 1e-10 {
+                return Err("not descending".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem6_exact_recovery_iff_rank_match() {
+    // rank(C) == rank(K)  =>  exact recovery (all sketching matrices);
+    // rank(C) < rank(K)   =>  strictly positive error.
+    Prop::new(16, 0x7E06).check("theorem 6", |rng| {
+        let n = gen::int(rng, 20, 40);
+        let r = gen::int(rng, 2, 6);
+        let k = gen::spsd(rng, n, r);
+        let o = DenseOracle::new(k.clone());
+        // c >= r columns: rank(C) = rank(K) almost surely
+        let c = r + gen::int(rng, 1, 4);
+        let p = spsd::uniform_p(n, c, rng);
+        let a = spsd::fast(&o, &p, FastConfig::uniform(2 * c + 2), rng);
+        let err = a.rel_fro_error(&k);
+        if err > 1e-8 {
+            return Err(format!("rank-match case: err {err}"));
+        }
+        // c < r columns: rank(C) < rank(K) → cannot be exact
+        if r >= 3 {
+            let p2 = spsd::uniform_p(n, r - 1, rng);
+            let a2 = spsd::fast(&o, &p2, FastConfig::uniform(3 * r), rng);
+            let err2 = a2.rel_fro_error(&k);
+            if err2 < 1e-12 {
+                return Err("deficient C recovered exactly?!".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem3_fast_near_optimal_objective() {
+    // With S = everything (s = n), the fast model equals the prototype's
+    // optimal objective; with large s it should be within a modest factor.
+    Prop::new(10, 0x7E03).check("theorem 3", |rng| {
+        let n = gen::int(rng, 40, 70);
+        // decaying spectrum
+        let q = fastspsd::linalg::qr::qr_thin(&gen::matrix(rng, n, n)).q;
+        let qd = Matrix::from_fn(n, n, |i, j| q[(i, j)] / ((j + 1) as f64).powi(2));
+        let k = qd.matmul_tr(&q);
+        let o = DenseOracle::new(k.clone());
+        let c = 8;
+        let p = spsd::uniform_p(n, c, rng);
+        let opt = spsd::optimal_objective(&k, &o.inner().select_cols(&p));
+        // s = n + c makes the union S = sample ∪ P cover every index, so
+        // the fast model coincides with the prototype (S^T = I up to perm).
+        let a = spsd::fast(&o, &p, FastConfig::uniform(n + c), rng);
+        let obj = k.sub(&a.materialize()).fro_norm_sq();
+        if obj > opt * (1.0 + 1e-6) + 1e-12 {
+            return Err(format!("s=n should be optimal: {obj} vs {opt}"));
+        }
+        let a2 = spsd::fast(&o, &p, FastConfig::uniform(n / 2), rng);
+        let obj2 = k.sub(&a2.materialize()).fro_norm_sq();
+        if obj2 > opt * 3.0 + 1e-12 {
+            return Err(format!("s=n/2 too far from optimal: {obj2} vs {opt}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn theorem7_lower_bound_holds_on_adversarial_matrix() {
+    // On K = diag(B..B) with a → 1, the measured fast-model error ratio
+    // must respect the Theorem-7 lower bound (we use a < 1 so we allow a
+    // small slack factor).
+    let n = 60;
+    let k = 3;
+    let alpha = 0.999;
+    let kmat = adversarial::block_diag(n, k, alpha);
+    let o = DenseOracle::new(kmat.clone());
+    let best_k = adversarial::best_rank_k_error_sq(n, k, alpha);
+    let mut rng = Rng::new(0);
+    for (c, s) in [(6usize, 12usize), (9, 18), (6, 30)] {
+        let bound = adversarial::theorem7_lower_bound(n, k, c, s);
+        let mut worst_ratio: f64 = f64::INFINITY;
+        for t in 0..6 {
+            let mut r = Rng::new(t);
+            let p = spsd::uniform_p(n, c, &mut r);
+            let a = spsd::fast(&o, &p, FastConfig::uniform(s), &mut rng);
+            let err = kmat.sub(&a.materialize()).fro_norm_sq();
+            worst_ratio = worst_ratio.min(err / best_k);
+        }
+        // allow 10% slack for finite alpha and |S| randomness
+        assert!(
+            worst_ratio >= 0.90 * bound,
+            "c={c} s={s}: measured ratio {worst_ratio:.3} < 0.90 * bound {bound:.3}"
+        );
+    }
+}
+
+#[test]
+fn prop_sketch_apply_consistency() {
+    // Every sketch family: apply_left(A) == materialize(S)^T A.
+    Prop::new(12, 0x51E7).check("sketch ops", |rng| {
+        let n = gen::int(rng, 8, 40);
+        let d = gen::int(rng, 1, 6);
+        let s = gen::int(rng, 2, n.max(3) - 1);
+        let a = gen::matrix(rng, n, d);
+        let c = gen::matrix(rng, n, 3);
+        for kind in [
+            sketch::SketchKind::Uniform,
+            sketch::SketchKind::Leverage { scaled: true },
+            sketch::SketchKind::Gaussian,
+            sketch::SketchKind::Srht,
+            sketch::SketchKind::CountSketch,
+        ] {
+            let op = sketch::build(kind, n, s, Some(&c), rng);
+            let fastp = op.apply_left(&a);
+            let dense = sketch::materialize(&op).tr_matmul(&a);
+            assert_close(&fastp, &dense, 1e-8, kind.name())?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_woodbury_solves_system() {
+    Prop::new(16, 0x50_1E).check("woodbury", |rng| {
+        let n = gen::int(rng, 10, 40);
+        let c = gen::int(rng, 1, 8);
+        let cm = gen::matrix(rng, n, c);
+        let g = gen::matrix(rng, c, c);
+        let u = g.matmul_tr(&g);
+        let alpha = 0.1 + rng.f64();
+        let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let w = fastspsd::linalg::solve::woodbury_solve(&cm, &u, alpha, &y);
+        let mut kk = cm.matmul(&u).matmul_tr(&cm);
+        for i in 0..n {
+            kk[(i, i)] += alpha;
+        }
+        let resid: f64 = kk
+            .matvec(&w)
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        if resid > 1e-6 {
+            return Err(format!("residual {resid}"));
+        }
+        Ok(())
+    });
+}

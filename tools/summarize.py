@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Summarize out/*.csv experiment results into markdown tables.
+
+Usage: python tools/summarize.py [out_dir]
+
+Prints one compact markdown table per figure/table CSV, averaging over
+repetitions, shaped like the series the paper plots.
+"""
+
+import csv
+import os
+import sys
+from collections import defaultdict
+
+
+def load(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def mean(xs):
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else float("nan")
+
+
+def fig3(rows, name):
+    print(f"\n### {name}: rel error ‖K−CUCᵀ‖²/‖K‖² (mean over reps)\n")
+    datasets = sorted({r["dataset"] for r in rows})
+    for ds in datasets:
+        for eta in sorted({r["eta"] for r in rows if r["dataset"] == ds}):
+            sel = [r for r in rows if r["dataset"] == ds and r["eta"] == eta]
+            n = sel[0]["n"]
+            c = sel[0]["c"]
+            base = {}
+            for m in ("nystrom", "prototype"):
+                base[m] = mean(float(r["rel_err"]) for r in sel if r["method"] == m)
+            print(f"**{ds}** (n={n}, c={c}, η={eta}): nystrom={base['nystrom']:.3e}  prototype={base['prototype']:.3e}")
+            print("| s/n | fast[uniform] | fast[leverage] |")
+            print("|---|---|---|")
+            svals = sorted({float(r["s_over_n"]) for r in sel if r["method"].startswith("fast")})
+            for s in svals:
+                u = mean(
+                    float(r["rel_err"])
+                    for r in sel
+                    if r["method"] == "fast[uniform]" and abs(float(r["s_over_n"]) - s) < 1e-9
+                )
+                l = mean(
+                    float(r["rel_err"])
+                    for r in sel
+                    if r["method"] == "fast[leverage-unscaled]"
+                    and abs(float(r["s_over_n"]) - s) < 1e-9
+                )
+                print(f"| {s:.3f} | {u:.3e} | {l:.3e} |")
+            print()
+
+
+def generic_by(rows, name, group_keys, series_key, value_key, extra=()):
+    print(f"\n### {name}: {value_key} by {series_key} (mean over reps)\n")
+    groups = defaultdict(list)
+    for r in rows:
+        groups[tuple(r[k] for k in group_keys)].append(r)
+    methods = sorted({r[series_key] for r in rows})
+    header = list(group_keys) + methods + list(extra)
+    print("| " + " | ".join(header) + " |")
+    print("|" + "---|" * len(header))
+    for key in sorted(groups, key=lambda t: tuple((len(x), x) for x in t)):
+        sel = groups[key]
+        cells = list(key)
+        for m in methods:
+            v = mean(float(r[value_key]) for r in sel if r[series_key] == m)
+            cells.append(f"{v:.3e}" if v == v else "—")
+        for e in extra:
+            cells.append(sel[0].get(e, ""))
+        print("| " + " | ".join(str(c) for c in cells) + " |")
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "out"
+    handlers = {
+        "fig3.csv": lambda r: fig3(r, "Fig 3"),
+        "fig4.csv": lambda r: fig3(r, "Fig 4"),
+        "fig2.csv": lambda r: generic_by(r, "Fig 2", ["setting", "s_c", "s_r"], "setting", "rel_err"),
+        "fig5_6.csv": lambda r: generic_by(r, "Fig 5/6", ["dataset", "c"], "method", "misalignment"),
+        "fig7_8.csv": lambda r: generic_by(r, "Fig 7/8 (k=3)", ["dataset", "c"], "method", "class_err"),
+        "fig9_10.csv": lambda r: generic_by(r, "Fig 9/10 (k=10)", ["dataset", "c"], "method", "class_err"),
+        "fig11_12.csv": lambda r: generic_by(r, "Fig 11/12", ["dataset", "c"], "method", "nmi"),
+        "table3.csv": lambda r: generic_by(r, "Table 3 (time)", ["n", "c"], "method", "u_secs"),
+        "table4.csv": lambda r: generic_by(r, "Table 4 (time)", ["n", "c", "s"], "sketch", "u_secs"),
+        "table5.csv": lambda r: generic_by(r, "Table 5 (time)", ["m", "n"], "method", "u_secs"),
+        "ablate_p_in_s.csv": lambda r: generic_by(r, "Ablation P⊂S", ["s"], "force_p", "rel_err_mean"),
+        "ablate_leverage_scaling.csv": lambda r: generic_by(
+            r, "Ablation leverage scaling", ["s"], "scaled", "rel_err_max"
+        ),
+        "ablate_engine_fill.csv": lambda r: generic_by(
+            r, "Ablation engine fill", ["m"], "d", "pjrt_secs", extra=("cpu_secs",)
+        ),
+    }
+    for fname, fn in handlers.items():
+        path = os.path.join(out, fname)
+        if os.path.exists(path):
+            rows = load(path)
+            if rows:
+                fn(rows)
+
+
+if __name__ == "__main__":
+    main()
