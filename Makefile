@@ -1,0 +1,31 @@
+# fastspsd build/verify entry points.
+#
+#   make perf-check   — tier-1 verify + quick hotpath bench (perf gate):
+#                       builds release, runs the test suite, then runs the
+#                       hotpath microbenchmarks in quick mode and leaves
+#                       machine-readable results in BENCH_hotpath.json.
+#   make artifacts    — AOT-compile the PJRT kernel artifacts (needs the
+#                       python/jax toolchain; optional — everything falls
+#                       back to the pure-rust engine without them).
+#   make test / build — the tier-1 pieces individually.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test bench perf-check artifacts
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench --bench hotpath
+
+perf-check: build test
+	FASTSPSD_BENCH_QUICK=1 $(CARGO) bench --bench hotpath
+	@echo "perf-check OK — smoke numbers in BENCH_hotpath.quick.json; run 'make bench' for the full-budget BENCH_hotpath.json"
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

@@ -1,26 +1,60 @@
 //! Bench: hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! GEMM, SVD/pinv, RBF block computation (pure-rust vs PJRT when artifacts
-//! exist), and the assemble path of the fast model.
+//! GEMM v2 (packed/pooled), SYRK vs full gemm, fused-epilogue RBF blocks,
+//! SVD/pinv, σ-calibration, and the PJRT path when artifacts exist.
+//!
+//! Emits machine-readable `BENCH_hotpath.json` (name, mean/p50/p95 secs,
+//! GFLOP/s) so the perf trajectory is tracked across PRs; `make perf-check`
+//! runs it in quick mode (`FASTSPSD_BENCH_QUICK=1`).
 
 use fastspsd::benchkit::{black_box, BenchSuite};
-use fastspsd::coordinator::engine::{rbf_cross_cpu, KernelEngine};
-use fastspsd::linalg::{pinv, svd_thin, Matrix};
+use fastspsd::coordinator::engine::{rbf_cross_cpu, rbf_gram_cpu, KernelEngine};
+use fastspsd::data::sigma;
+use fastspsd::linalg::{gemm, pinv, svd_thin, Matrix};
 use fastspsd::util::Rng;
 
 fn main() {
     let mut rng = Rng::new(0);
     let mut suite = BenchSuite::new("hot paths");
     suite.header();
+    println!("  ({} worker threads)", fastspsd::pool::configured_threads());
 
-    // GEMM scaling
+    // GEMM scaling (allocating wrapper — the historical headline numbers)
     for &n in &[128usize, 256, 512] {
         let a = Matrix::randn(n, n, &mut rng);
         let b = Matrix::randn(n, n, &mut rng);
-        let s = suite.bench(&format!("gemm {n}x{n}x{n}"), || {
+        let flops = 2.0 * (n as f64).powi(3);
+        suite.bench_flops(&format!("gemm {n}x{n}x{n}"), flops, || {
             black_box(a.matmul(&b));
         });
+    }
+
+    // gemm_into: same product, caller-provided output (no allocation)
+    {
+        let n = 512;
+        let a = Matrix::randn(n, n, &mut rng);
+        let b = Matrix::randn(n, n, &mut rng);
+        let mut c = Matrix::zeros(n, n);
         let flops = 2.0 * (n as f64).powi(3);
-        println!("    {:.2} GFLOP/s", flops / s.mean_secs() / 1e9);
+        suite.bench_flops("gemm_into 512x512x512", flops, || {
+            gemm::gemm_into(&a, &b, &mut c);
+            black_box(c.data()[0]);
+        });
+    }
+
+    // SYRK vs same-shape full product (acceptance: syrk >= 1.3x faster)
+    {
+        let a = Matrix::randn(512, 512, &mut rng);
+        let flops = 2.0 * 512f64.powi(3);
+        suite.bench_flops("gemm_nt(A,A) 512x512", flops, || {
+            black_box(a.matmul_tr(&a));
+        });
+        // same nominal flop count, so the GFLOP/s column shows the saving
+        suite.bench_flops("syrk_nt 512x512", flops, || {
+            black_box(gemm::syrk_nt(&a));
+        });
+        if let (Some(full), Some(tri)) = (suite.mean_of("gemm_nt(A,A) 512x512"), suite.mean_of("syrk_nt 512x512")) {
+            println!("    syrk speedup over gemm_nt: {:.2}x", full / tri);
+        }
     }
 
     // factorizations at algorithm-relevant sizes
@@ -36,15 +70,28 @@ fn main() {
         black_box(svd_thin(&sq));
     });
 
-    // RBF blocks: pure rust vs PJRT (if artifacts available)
+    // RBF blocks: fused-epilogue cross + symmetric gram paths
     let x = Matrix::randn(512, 16, &mut rng);
+    let y = Matrix::randn(512, 16, &mut rng);
     suite.bench("rbf_cross_cpu 512x512x16", || {
-        black_box(rbf_cross_cpu(&x, &x, 0.5));
+        black_box(rbf_cross_cpu(&x, &y, 0.5));
     });
+    suite.bench("rbf_gram_cpu 512x512x16", || {
+        black_box(rbf_gram_cpu(&x, 0.5));
+    });
+
+    // σ-calibration: the bisection loop re-exponentiates one precomputed
+    // distance matrix instead of rebuilding ~40 kernels
+    let blob = Matrix::randn(300, 8, &mut rng);
+    suite.bench("calibrate_sigma n=300", || {
+        black_box(sigma::calibrate_sigma(&blob, 0.9, 300, 7));
+    });
+
+    // PJRT path (if artifacts available)
     let engine = KernelEngine::auto();
     if engine.is_pjrt() {
         suite.bench("rbf_cross_pjrt 512x512x16", || {
-            black_box(engine.rbf_cross(&x, &x, 0.5));
+            black_box(engine.rbf_cross(&x, &y, 0.5));
         });
         let x1024 = Matrix::randn(1024, 128, &mut rng);
         suite.bench("rbf_cross_pjrt 1024x1024x128", || {
@@ -55,5 +102,16 @@ fn main() {
         });
     } else {
         println!("  (PJRT engine unavailable — run `make artifacts` to bench the AOT path)");
+    }
+
+    // Quick smoke runs land in a separate file so they never clobber the
+    // full-budget perf trajectory.
+    let path = if fastspsd::benchkit::quick_mode() {
+        "BENCH_hotpath.quick.json"
+    } else {
+        "BENCH_hotpath.json"
+    };
+    if let Err(e) = suite.write_json(path) {
+        eprintln!("warn: could not write {path}: {e}");
     }
 }

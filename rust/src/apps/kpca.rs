@@ -50,11 +50,15 @@ impl KpcaModel {
     pub fn test_features(&self, kx: &Matrix) -> Matrix {
         let vtk = self.v.tr_matmul(kx); // k x n_test
         let mut out = vtk.transpose(); // n_test x k
-        for j in 0..self.k() {
-            let l = self.eigvals[j];
-            let inv = if l > 1e-12 { 1.0 / l.sqrt() } else { 0.0 };
-            for i in 0..out.rows() {
-                out[(i, j)] *= inv;
+        let inv: Vec<f64> = self
+            .eigvals
+            .iter()
+            .map(|&l| if l > 1e-12 { 1.0 / l.sqrt() } else { 0.0 })
+            .collect();
+        // scale row-major (one streaming pass instead of k column strides)
+        for i in 0..out.rows() {
+            for (v, &s) in out.row_mut(i).iter_mut().zip(&inv) {
+                *v *= s;
             }
         }
         out

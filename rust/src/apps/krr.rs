@@ -23,11 +23,8 @@ pub fn fit_approx(approx: &SpsdApprox, alpha: f64, y: &[f64]) -> KrrModel {
 
 /// Fit exactly against the dense kernel (O(n³) baseline).
 pub fn fit_exact(kmat: &Matrix, alpha: f64, y: &[f64]) -> KrrModel {
-    let n = kmat.rows();
     let mut kk = kmat.clone();
-    for i in 0..n {
-        kk[(i, i)] += alpha;
-    }
+    kk.add_diag(alpha);
     let w = crate::linalg::solve::lu_solve(&kk, y).expect("K + alpha I is SPD");
     KrrModel { weights: w, alpha }
 }

@@ -3,7 +3,10 @@
 //! Each `cargo bench` target (`harness = false`) builds a [`BenchSuite`],
 //! registers closures, and gets warmup + adaptive iteration counts +
 //! mean/p50/p95 reporting. Results can also be captured programmatically
-//! for the table-generation benches.
+//! for the table-generation benches, and dumped as machine-readable JSON
+//! (`BenchSuite::write_json`) so the perf trajectory is tracked across PRs
+//! (EXPERIMENTS.md §Perf). Setting `FASTSPSD_BENCH_QUICK=1` shrinks the
+//! warmup/budget for CI-style smoke runs (`make perf-check`).
 
 use std::time::{Duration, Instant};
 
@@ -16,6 +19,8 @@ pub struct Stats {
     pub p50: Duration,
     pub p95: Duration,
     pub min: Duration,
+    /// Throughput in GFLOP/s when the bench declared its flop count.
+    pub gflops: Option<f64>,
 }
 
 impl Stats {
@@ -61,6 +66,7 @@ pub fn measure(name: &str, warmup: Duration, budget: Duration, min_iters: usize,
         p50: samples[n / 2],
         p95: samples[(n * 95 / 100).min(n - 1)],
         min: samples[0],
+        gflops: None,
     }
 }
 
@@ -70,16 +76,30 @@ pub struct BenchSuite {
     pub warmup: Duration,
     pub budget: Duration,
     pub min_iters: usize,
+    /// Whether this suite ran with the quick-mode budgets (recorded in the
+    /// JSON so smoke numbers are never mistaken for full-budget ones).
+    pub quick: bool,
     pub results: Vec<Stats>,
+}
+
+/// True when `FASTSPSD_BENCH_QUICK` requests a fast smoke run.
+pub fn quick_mode() -> bool {
+    std::env::var("FASTSPSD_BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
 }
 
 impl BenchSuite {
     pub fn new(title: &str) -> Self {
+        let (warmup, budget) = if quick_mode() {
+            (Duration::from_millis(50), Duration::from_millis(200))
+        } else {
+            (Duration::from_millis(200), Duration::from_secs(1))
+        };
         BenchSuite {
             title: title.to_string(),
-            warmup: Duration::from_millis(200),
-            budget: Duration::from_secs(1),
+            warmup,
+            budget,
             min_iters: 3,
+            quick: quick_mode(),
             results: Vec::new(),
         }
     }
@@ -96,13 +116,30 @@ impl BenchSuite {
 
     pub fn bench(&mut self, name: &str, f: impl FnMut()) -> &Stats {
         let stats = measure(name, self.warmup, self.budget, self.min_iters, f);
+        self.push(stats)
+    }
+
+    /// Like [`bench`](Self::bench) but annotates throughput from the
+    /// benchmark's known flop count per iteration.
+    pub fn bench_flops(&mut self, name: &str, flops: f64, f: impl FnMut()) -> &Stats {
+        let mut stats = measure(name, self.warmup, self.budget, self.min_iters, f);
+        stats.gflops = Some(flops / stats.mean_secs() / 1e9);
+        self.push(stats)
+    }
+
+    fn push(&mut self, stats: Stats) -> &Stats {
+        let gf = stats
+            .gflops
+            .map(|g| format!("  {g:8.2} GFLOP/s"))
+            .unwrap_or_default();
         println!(
-            "  {:<44} {:>12} (p50 {:>12}, p95 {:>12}, {} iters)",
+            "  {:<44} {:>12} (p50 {:>12}, p95 {:>12}, {} iters){}",
             stats.name,
             fmt_dur(stats.mean),
             fmt_dur(stats.p50),
             fmt_dur(stats.p95),
-            stats.iters
+            stats.iters,
+            gf
         );
         self.results.push(stats);
         self.results.last().unwrap()
@@ -111,6 +148,47 @@ impl BenchSuite {
     pub fn header(&self) {
         println!("\n== {} ==", self.title);
     }
+
+    /// Mean of the named result, if present (for speedup summaries).
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|s| s.name == name).map(|s| s.mean_secs())
+    }
+
+    /// Dump every result as machine-readable JSON (hand-rolled — no serde
+    /// in the image): `{"suite": ..., "results": [{name, mean_secs, ...}]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"suite\": \"{}\",\n", escape(&self.title)));
+        out.push_str(&format!("  \"quick\": {},\n", self.quick));
+        out.push_str("  \"results\": [\n");
+        for (i, s) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_secs\": {:.9e}, \"p50_secs\": {:.9e}, \"p95_secs\": {:.9e}, \"min_secs\": {:.9e}, \"gflops\": {}}}{}\n",
+                escape(&s.name),
+                s.iters,
+                s.mean.as_secs_f64(),
+                s.p50.as_secs_f64(),
+                s.p95.as_secs_f64(),
+                s.min.as_secs_f64(),
+                s.gflops.map(|g| format!("{g:.3}")).unwrap_or_else(|| "null".into()),
+                if i + 1 < self.results.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`to_json`](Self::to_json) to `path`, reporting where it went.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("  results written to {path}");
+        Ok(())
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 /// Keep a value alive and opaque to the optimizer.
@@ -136,6 +214,7 @@ mod tests {
         );
         assert!(s.iters >= 4);
         assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert!(s.gflops.is_none());
     }
 
     #[test]
@@ -149,6 +228,36 @@ mod tests {
         });
         assert_eq!(suite.results.len(), 2);
         assert_eq!(suite.results[0].name, "a");
+        assert!(suite.mean_of("a").is_some());
+        assert!(suite.mean_of("zzz").is_none());
+    }
+
+    #[test]
+    fn bench_flops_annotates_throughput() {
+        let mut suite = BenchSuite::slow("t");
+        let s = suite.bench_flops("f", 1e6, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.gflops.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let mut suite = BenchSuite::slow("json \"suite\"");
+        suite.bench("plain", || {
+            black_box(1);
+        });
+        suite.bench_flops("with flops", 1e9, || {
+            black_box(2);
+        });
+        let j = suite.to_json();
+        assert!(j.contains("\"suite\": \"json \\\"suite\\\"\""));
+        assert!(j.contains("\"quick\": "));
+        assert!(j.contains("\"name\": \"plain\""));
+        assert!(j.contains("\"gflops\": null"));
+        assert!(j.matches('{').count() == j.matches('}').count());
+        // trailing-comma discipline: one comma between the two results
+        assert!(j.contains("}},\n") || j.contains("},\n"));
     }
 
     #[test]

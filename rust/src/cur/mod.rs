@@ -185,10 +185,16 @@ pub fn adaptive_sample(a: &Matrix, current_cols: &[usize], count: usize, rng: &m
     let c = a.select_cols(current_cols);
     let cp = pinv(&c);
     let proj = c.matmul(&cp.matmul(a)); // C C† A
-    let resid = a.sub(&proj);
-    let weights: Vec<f64> = (0..a.cols())
-        .map(|j| (0..a.rows()).map(|i| resid[(i, j)] * resid[(i, j)]).sum())
-        .collect();
+    // Residual column norms accumulated row-major in one streaming pass
+    // (no column-strided reads, no residual matrix materialized).
+    let mut weights = vec![0.0f64; a.cols()];
+    for i in 0..a.rows() {
+        let (ar, pr) = (a.row(i), proj.row(i));
+        for (w, (&av, &pv)) in weights.iter_mut().zip(ar.iter().zip(pr)) {
+            let r = av - pv;
+            *w += r * r;
+        }
+    }
     let mut chosen = Vec::with_capacity(count);
     let mut w = weights;
     for &cidx in current_cols {

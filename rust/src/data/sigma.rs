@@ -2,10 +2,12 @@
 //!
 //! The paper sets σ so that `η = ‖K_k‖_F² / ‖K‖_F²` (k = ⌈n/100⌉) hits 0.9
 //! or 0.99. η is monotone increasing in σ, so we bisect, measuring η on a
-//! subsample for tractability.
+//! subsample for tractability. The squared-distance matrix of the subsample
+//! is computed **once** (a single triangular SYRK with a fused epilogue)
+//! and every bisection step only re-exponentiates it — the bracketing +
+//! 40-step loop costs ~1 GEMM instead of ~40.
 
-use crate::coordinator::engine::rbf_cross_cpu;
-use crate::linalg::{lanczos_top_k, Matrix};
+use crate::linalg::{gemm, lanczos_top_k, Matrix};
 use crate::util::Rng;
 
 /// `η(K, k) = Σ_{i<=k} σ_i²(K) / Σ_i σ_i²(K)` — the share of Frobenius mass
@@ -22,11 +24,36 @@ pub fn eta(kmat: &Matrix, k: usize) -> f64 {
     (top / total).min(1.0)
 }
 
-/// η for the RBF kernel of `x` at scale `sigma`.
-pub fn eta_for_sigma(x: &Matrix, sigma: f64, k: usize) -> f64 {
-    let gamma = 1.0 / (2.0 * sigma * sigma);
-    let kmat = rbf_cross_cpu(x, x, gamma);
+/// Pairwise squared-distance matrix `D2[i, j] = ||x_i - x_j||²`, computed
+/// with the triangular SYRK path and a fused epilogue (exactly symmetric,
+/// clamped at 0).
+pub fn sq_dist_matrix(x: &Matrix) -> Matrix {
+    let xn = x.row_sq_norms();
+    gemm::syrk_nt_map(x, &|i, j, dot| (xn[i] + xn[j] - 2.0 * dot).max(0.0))
+}
+
+/// `out = exp(-gamma * d2)` elementwise (the per-σ work of calibration).
+fn exp_into(d2: &Matrix, gamma: f64, out: &mut Matrix) {
+    debug_assert_eq!((out.rows(), out.cols()), (d2.rows(), d2.cols()));
+    for (kv, &dv) in out.data_mut().iter_mut().zip(d2.data()) {
+        *kv = (-gamma * dv).exp();
+    }
+}
+
+/// η for the RBF kernel at scale `sigma` given a precomputed
+/// squared-distance matrix — the bisection hot loop. Only the elementwise
+/// `exp` is recomputed per σ (calibration additionally reuses one scratch
+/// kernel buffer across all steps).
+pub fn eta_for_sigma_with_d2(d2: &Matrix, sigma: f64, k: usize) -> f64 {
+    let mut kmat = Matrix::zeros(d2.rows(), d2.cols());
+    exp_into(d2, 1.0 / (2.0 * sigma * sigma), &mut kmat);
     eta(&kmat, k)
+}
+
+/// η for the RBF kernel of `x` at scale `sigma` (one-shot convenience;
+/// calibration uses [`eta_for_sigma_with_d2`] to avoid rebuilding K).
+pub fn eta_for_sigma(x: &Matrix, sigma: f64, k: usize) -> f64 {
+    eta_for_sigma_with_d2(&sq_dist_matrix(x), sigma, k)
 }
 
 /// Find σ with `η(σ) ≈ target` by bisection on a subsample of at most
@@ -42,19 +69,27 @@ pub fn calibrate_sigma(x: &Matrix, target_eta: f64, max_sub: usize, seed: u64) -
         x.clone()
     };
     let k = xs.rows().div_ceil(100).max(1);
+    // One kernel-shaped product and one scratch buffer for the whole
+    // calibration; every step below only re-exponentiates.
+    let d2 = sq_dist_matrix(&xs);
+    let mut scratch = Matrix::zeros(d2.rows(), d2.cols());
+    let mut eta_at = |sigma: f64| -> f64 {
+        exp_into(&d2, 1.0 / (2.0 * sigma * sigma), &mut scratch);
+        eta(&scratch, k)
+    };
 
     // Bracket: large σ ⇒ K → all-ones ⇒ η → 1; small σ ⇒ K → I ⇒ η → k/n.
     let mut lo = 1e-3;
     let mut hi = 1.0;
-    while eta_for_sigma(&xs, hi, k) < target_eta && hi < 1e4 {
+    while eta_at(hi) < target_eta && hi < 1e4 {
         hi *= 2.0;
     }
-    while eta_for_sigma(&xs, lo, k) > target_eta && lo > 1e-6 {
+    while eta_at(lo) > target_eta && lo > 1e-6 {
         lo *= 0.5;
     }
     for _ in 0..40 {
         let mid = (lo * hi).sqrt(); // geometric bisection (σ spans decades)
-        if eta_for_sigma(&xs, mid, k) < target_eta {
+        if eta_at(mid) < target_eta {
             lo = mid;
         } else {
             hi = mid;
@@ -74,6 +109,7 @@ pub fn gamma_of_sigma(sigma: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::rbf_cross_cpu;
     use crate::data::make_blobs;
 
     #[test]
@@ -94,6 +130,22 @@ mod tests {
         let large = eta_for_sigma(&ds.x, 20.0, 1);
         assert!(large > small, "eta(20)={large} <= eta(0.05)={small}");
         assert!(large > 0.9);
+    }
+
+    #[test]
+    fn precomputed_d2_matches_direct_kernel() {
+        let ds = make_blobs("t", 50, 4, 3, 2.0, 4);
+        let d2 = sq_dist_matrix(&ds.x);
+        assert_eq!(d2.max_abs_diff(&d2.transpose()), 0.0);
+        for sigma in [0.3, 1.0, 4.0] {
+            let gamma = gamma_of_sigma(sigma);
+            let direct = rbf_cross_cpu(&ds.x, &ds.x, gamma);
+            let mut from_d2 = Matrix::zeros(50, 50);
+            for (kv, &dv) in from_d2.data_mut().iter_mut().zip(d2.data()) {
+                *kv = (-gamma * dv).exp();
+            }
+            assert!(direct.max_abs_diff(&from_d2) < 1e-12, "sigma={sigma}");
+        }
     }
 
     #[test]

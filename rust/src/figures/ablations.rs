@@ -96,10 +96,15 @@ fn ablate_engine_fill(ctx: &Ctx, args: &Args) {
     let mut rng = Rng::new(ctx.seed);
     for &m in &[64usize, 128, 192, 256, 512, 1024] {
         let x = Matrix::randn(m, d, &mut rng);
+        // Time the CPU path against a distinct (identical) y so it measures
+        // the full cross block like the PJRT side — same-reference inputs
+        // would dispatch to the ~half-FLOP symmetric gram path and skew the
+        // crossover.
+        let y = x.clone();
         let sw = Stopwatch::start();
         let reps = 3;
         for _ in 0..reps {
-            let _ = rbf_cross_cpu(&x, &x, 0.5);
+            let _ = rbf_cross_cpu(&x, &y, 0.5);
         }
         let cpu = sw.secs() / reps as f64;
         // call the tiled PJRT path directly regardless of fill heuristic
@@ -131,7 +136,7 @@ fn ablate_gemm_threads(ctx: &Ctx) {
         "# gemm 768^3: {:.4}s/iter = {:.2} GFLOP/s on {} cores",
         secs,
         flops / secs / 1e9,
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        crate::pool::configured_threads()
     );
 }
 

@@ -1,183 +1,606 @@
-//! Blocked, threaded GEMM — the L3 hot path for sketch products.
+//! GEMM v2 — packed, pooled, register-blocked dense products.
 //!
-//! Strategy: pack the B panel transposed so the inner loop is two contiguous
-//! slices (auto-vectorizes), block for L1/L2, and split the M dimension
-//! across `std::thread::scope` workers when the problem is big enough to
-//! amortize thread spawn. Tuning notes live in EXPERIMENTS.md §Perf.
+//! The L3 hot path for sketch products and kernel-block assembly. Design
+//! (EXPERIMENTS.md §Perf):
+//!
+//! - **Packed panels.** Both operands are repacked into 64-byte-aligned
+//!   sliver panels (`MR`-row slivers of A in `[t*MR + r]` order, `NR`-column
+//!   slivers of B in `[t*NR + c]` order) so the micro-kernel reads two
+//!   contiguous, aligned streams regardless of the logical transpose. Pack
+//!   buffers are grow-only thread-locals — steady state does zero
+//!   allocations, and [`gemm_into`] writes into a caller-provided matrix.
+//! - **Register-blocked micro-kernel, two-level cache blocking.**
+//!   `MR x NR = 4 x 4` accumulators live in registers for each `KC`
+//!   k-chunk (16 doubles + operand registers fit the x86-64 baseline
+//!   register file; with AVX the compiler vectorizes each accumulator
+//!   row); `KC = 256` keeps both 8 KiB stream chunks L1-resident at any
+//!   k, and `IB = 8` i-slivers share each B chunk with accumulators
+//!   parked in a 1 KiB stack block between chunks. C is written exactly
+//!   once per tile — no read-modify-write traffic against the output.
+//! - **Pooled execution.** Row-sliver spans are distributed over the shared
+//!   [`crate::pool::global`] pool via `scoped` — no per-call thread spawn.
+//!   Chunk boundaries never change per-element summation order, so results
+//!   are bit-identical across thread counts (`FASTSPSD_THREADS=1` included).
+//! - **Fused epilogues.** Every driver takes an `epi(i, j, dot) -> f64`
+//!   applied at tile-store time while the tile is register/cache hot; the
+//!   RBF/polynomial kernels in `coordinator::engine` use this to produce
+//!   kernel blocks in one blocked pass (no second sweep over the output).
+//! - **Symmetric products.** [`syrk_nt`] / [`syrk_tn`] / [`symm_nt`]
+//!   compute only tiles touching the upper triangle and mirror the rest —
+//!   ~2x fewer FLOPs for Gram-shaped products (`A A^T`, `A^T A`,
+//!   `C† K (C†)^T`, ...).
 
 use super::Matrix;
+use crate::pool;
+use std::cell::Cell;
 
-/// Number of worker threads for large products (0 = all cores).
-fn thread_count(work: usize) -> usize {
-    // Threshold chosen so small algebra (c x c) stays single-threaded.
-    const PAR_THRESHOLD: usize = 1 << 21; // ~2M flops
-    if work < PAR_THRESHOLD {
-        return 1;
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
+/// Rows per A sliver (micro-kernel height).
+const MR: usize = 4;
+/// Columns per B sliver (micro-kernel width).
+const NR: usize = 4;
+/// k-chunk per micro-kernel call: each packed stream chunk is
+/// `KC * {MR,NR} * 8 = 8 KiB`, so both stay L1-resident at any k.
+const KC: usize = 256;
+/// i-slivers whose accumulator tiles are kept live together so one
+/// B-sliver k-chunk is reused from L1 across IB tiles (IB * MR * NR
+/// doubles = 1 KiB of accumulators).
+const IB: usize = 8;
+/// Extra f64 slots reserved so pack panels can start 64-byte aligned.
+const ALIGN_F64: usize = 8;
+
+// ------------------------------------------------------------- public API
 
 /// C = A * B.
 pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.rows(), "gemm dims: {}x{} * {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    // Pack B^T so dot products run over contiguous rows of both operands.
-    let bt = b.transpose();
-    let mut c = Matrix::zeros(m, n);
-    gemm_rows_nt(a, &bt, &mut c, m * n * k);
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm_into(a, b, &mut c);
     c
+}
+
+/// C = A * B into a caller-provided output (no allocation on this path).
+pub fn gemm_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "gemm dims: {}x{} * {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    assert_eq!((out.rows(), out.cols()), (a.rows(), b.cols()), "gemm_into: bad output shape");
+    let (m, n) = (a.rows(), b.cols());
+    gemm_driver(a, false, b, false, out.data_mut(), m, n, usize::MAX, &|_, _, v| v);
 }
 
 /// C = A^T * B (A is k x m, result m x n) without materializing A^T.
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows(), b.rows(), "gemm_tn dims");
-    let at = a.transpose();
-    let bt = b.transpose();
     let mut c = Matrix::zeros(a.cols(), b.cols());
-    gemm_rows_nt(&at, &bt, &mut c, a.cols() * b.cols() * a.rows());
+    gemm_tn_into(a, b, &mut c);
     c
+}
+
+/// C = A^T * B into a caller-provided output.
+pub fn gemm_tn_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn dims");
+    assert_eq!((out.rows(), out.cols()), (a.cols(), b.cols()), "gemm_tn_into: bad output shape");
+    let (m, n) = (a.cols(), b.cols());
+    gemm_driver(a, true, b, false, out.data_mut(), m, n, usize::MAX, &|_, _, v| v);
 }
 
 /// C = A * B^T — both operands already row-major in the "right" layout.
 pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.cols(), "gemm_nt dims");
     let mut c = Matrix::zeros(a.rows(), b.rows());
-    gemm_rows_nt(a, b, &mut c, a.rows() * b.rows() * a.cols());
+    gemm_nt_into(a, b, &mut c);
     c
 }
 
-/// Core: C[i, j] = sum_k A[i, k] * BT[j, k]; rows of C split across threads.
-fn gemm_rows_nt(a: &Matrix, bt: &Matrix, c: &mut Matrix, work: usize) {
-    let m = a.rows();
-    let n = bt.rows();
-    let k = a.cols();
-    debug_assert_eq!(bt.cols(), k);
-    let nthreads = thread_count(work).min(m.max(1));
-    if nthreads <= 1 {
-        let rows = c.data_mut();
-        gemm_chunk(a, bt, rows, 0, m, n, k);
+/// C = A * B^T into a caller-provided output.
+pub fn gemm_nt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt dims");
+    assert_eq!((out.rows(), out.cols()), (a.rows(), b.rows()), "gemm_nt_into: bad output shape");
+    let (m, n) = (a.rows(), b.rows());
+    gemm_driver(a, false, b, true, out.data_mut(), m, n, usize::MAX, &|_, _, v| v);
+}
+
+/// C[i, j] = epi(i, j, (A B^T)[i, j]) — the fused-epilogue entry used by
+/// the kernel engines: the epilogue runs per tile while the dot products
+/// are still register/cache hot, so e.g. an RBF block needs no second pass.
+pub fn gemm_nt_map<E>(a: &Matrix, b: &Matrix, epi: &E) -> Matrix
+where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    assert_eq!(a.cols(), b.cols(), "gemm_nt dims");
+    let (m, n) = (a.rows(), b.rows());
+    let mut c = Matrix::zeros(m, n);
+    gemm_driver(a, false, b, true, c.data_mut(), m, n, usize::MAX, epi);
+    c
+}
+
+/// C = A * B with the parallel width capped at `max_threads` — the
+/// determinism/bench hook (results are bit-identical for every cap).
+pub fn gemm_with_threads(a: &Matrix, b: &Matrix, max_threads: usize) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "gemm dims: {}x{} * {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, n) = (a.rows(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    gemm_driver(a, false, b, false, c.data_mut(), m, n, max_threads.max(1), &|_, _, v| v);
+    c
+}
+
+/// Symmetric rank-k update `C = A A^T` (A is m x k): computes only tiles
+/// touching the upper triangle, then mirrors — ~2x fewer FLOPs than
+/// `gemm_nt(A, A)`.
+pub fn syrk_nt(a: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), a.rows());
+    symm_driver(a, false, a, false, &mut c, usize::MAX, &|_, _, v| v);
+    c
+}
+
+/// `C = A^T A` (A is k x m, result m x m), triangle + mirror.
+pub fn syrk_tn(a: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols(), a.cols());
+    symm_driver(a, true, a, true, &mut c, usize::MAX, &|_, _, v| v);
+    c
+}
+
+/// `C[i, j] = epi(i, j, (A A^T)[i, j])` over the upper triangle, mirrored.
+/// Used for Gram-shaped kernel blocks (RBF/poly gram, squared distances).
+/// `epi` must be symmetric in (i, j) for the result to be meaningful.
+pub fn syrk_nt_map<E>(a: &Matrix, epi: &E) -> Matrix
+where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let mut c = Matrix::zeros(a.rows(), a.rows());
+    symm_driver(a, false, a, false, &mut c, usize::MAX, epi);
+    c
+}
+
+/// `C = A B^T` for a product known to be symmetric (e.g. `M W M^T` chains
+/// split as `A = M W`, `B = M` with symmetric `W`): computes the upper
+/// triangle only and mirrors, making the result exactly symmetric.
+pub fn symm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "symm_nt: result must be square");
+    assert_eq!(a.cols(), b.cols(), "symm_nt dims");
+    let mut c = Matrix::zeros(a.rows(), a.rows());
+    symm_driver(a, false, b, false, &mut c, usize::MAX, &|_, _, v| v);
+    c
+}
+
+// -------------------------------------------------------- pack workspaces
+
+thread_local! {
+    // Grow-only pack buffers: one A panel per executing thread, one B panel
+    // per calling thread. Taken/put back around each use so nested calls
+    // degrade to a fresh allocation instead of aliasing.
+    static A_PACK: Cell<Vec<f64>> = const { Cell::new(Vec::new()) };
+    static B_PACK: Cell<Vec<f64>> = const { Cell::new(Vec::new()) };
+}
+
+/// Largest workspace kept cached per thread slot (f64 elements, 32 MiB).
+/// Bigger panels are freed after use so one huge product doesn't pin its
+/// high-water footprint for the life of the process.
+const MAX_CACHED_WORKSPACE: usize = 1 << 22;
+
+fn with_buf<R>(
+    slot: &'static std::thread::LocalKey<Cell<Vec<f64>>>,
+    len: usize,
+    f: impl FnOnce(&mut [f64]) -> R,
+) -> R {
+    let mut buf = slot.with(|c| c.take());
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    let r = f(&mut buf[..len]);
+    if buf.len() > MAX_CACHED_WORKSPACE {
+        buf = Vec::new();
+    }
+    slot.with(|c| c.set(buf));
+    r
+}
+
+/// First 64-byte-aligned window of `len` elements inside `buf`
+/// (`buf.len() >= len + ALIGN_F64`).
+fn align64(buf: &mut [f64], len: usize) -> &mut [f64] {
+    let off = buf.as_ptr().align_offset(64);
+    let off = if off == usize::MAX { 0 } else { off };
+    &mut buf[off..off + len]
+}
+
+/// Parallel width for `flops` of work: small products stay on the caller.
+fn workers_for(flops: usize) -> usize {
+    // Threshold chosen so small algebra (c x c) stays single-threaded.
+    const PAR_THRESHOLD: usize = 1 << 21; // ~2M flops
+    if flops < PAR_THRESHOLD {
+        1
+    } else {
+        pool::configured_threads()
+    }
+}
+
+/// Pack logical-B (k x n) into NR-column slivers: sliver `js` holds
+/// `dst[js*k*NR + t*NR + c] = B[t, js*NR + c]`, zero-padded to NR columns.
+/// `b_rowmajor_is_bt == true` means `b` is stored n x k (its rows are
+/// logical B columns — the `gemm_nt` layout).
+fn pack_b(b: &Matrix, b_rowmajor_is_bt: bool, k: usize, n: usize, dst: &mut [f64]) {
+    let nsliv = n.div_ceil(NR);
+    debug_assert_eq!(dst.len(), nsliv * k * NR);
+    if !b_rowmajor_is_bt {
+        // single pass over B's rows; writes touch one cache line per sliver
+        for t in 0..k {
+            let row = b.row(t);
+            for js in 0..nsliv {
+                let j0 = js * NR;
+                let live = NR.min(n - j0);
+                let d = &mut dst[js * k * NR + t * NR..js * k * NR + t * NR + NR];
+                d[..live].copy_from_slice(&row[j0..j0 + live]);
+                for v in &mut d[live..] {
+                    *v = 0.0;
+                }
+            }
+        }
+    } else {
+        // b stored n x k: storage row j is logical column j
+        if n % NR != 0 {
+            for v in dst[(nsliv - 1) * k * NR..].iter_mut() {
+                *v = 0.0;
+            }
+        }
+        for j in 0..n {
+            let row = b.row(j);
+            let base = (j / NR) * k * NR + (j % NR);
+            for (t, &v) in row.iter().enumerate() {
+                dst[base + t * NR] = v;
+            }
+        }
+    }
+}
+
+/// Pack `live_rows` logical-A rows starting at `i0` into MR-row slivers:
+/// sliver `s` holds `dst[s*k*MR + t*MR + r] = A[i0 + s*MR + r, t]`,
+/// zero-padded to a multiple of MR rows. `a_trans == true` means `a` is
+/// stored k x m (logical row i is storage column i).
+fn pack_a_block(a: &Matrix, a_trans: bool, i0: usize, live_rows: usize, k: usize, dst: &mut [f64]) {
+    let ns = live_rows.div_ceil(MR);
+    debug_assert_eq!(dst.len(), ns * k * MR);
+    if live_rows % MR != 0 {
+        for v in dst[(ns - 1) * k * MR..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+    if !a_trans {
+        for r in 0..live_rows {
+            let row = a.row(i0 + r);
+            let base = (r / MR) * k * MR + (r % MR);
+            for (t, &v) in row.iter().enumerate() {
+                dst[base + t * MR] = v;
+            }
+        }
+    } else {
+        for t in 0..k {
+            let row = a.row(t);
+            for r in 0..live_rows {
+                dst[(r / MR) * k * MR + t * MR + (r % MR)] = row[i0 + r];
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- micro-kernel
+
+/// MR x NR register-blocked inner product over packed slivers: the
+/// accumulator tile stays in registers for the whole k loop; `ap`/`bp` are
+/// contiguous aligned streams, so the k loop auto-vectorizes.
+#[inline(always)]
+fn microkernel(ap: &[f64], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let ar = a[r];
+            let accr = &mut acc[r];
+            for c in 0..NR {
+                accr[c] += ar * b[c];
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- general driver
+
+/// Compute `out[i, j] = epi(i, j, sum_t A[i, t] * B[t, j])` for logical
+/// A (m x k) and B (k x n), with storage transposes handled by packing.
+/// `out` is fully overwritten. Parallel over MR-row sliver spans on the
+/// global pool; per-element summation order is independent of the width.
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver<E>(
+    a: &Matrix,
+    a_trans: bool,
+    b: &Matrix,
+    b_rowmajor_is_bt: bool,
+    out: &mut [f64],
+    m: usize,
+    n: usize,
+    max_width: usize,
+    epi: &E,
+) where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let k = if a_trans { a.rows() } else { a.cols() };
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
         return;
     }
-    let chunk_rows = m.div_ceil(nthreads);
-    let a_ref = &*a;
-    let bt_ref = &*bt;
-    let mut chunks: Vec<&mut [f64]> = c.data_mut().chunks_mut(chunk_rows * n).collect();
-    std::thread::scope(|s| {
-        for (t, chunk) in chunks.iter_mut().enumerate() {
-            let r0 = t * chunk_rows;
-            let r1 = (r0 + chunk.len() / n).min(m);
-            let chunk: &mut [f64] = chunk;
-            s.spawn(move || gemm_chunk(a_ref, bt_ref, chunk, r0, r1, n, k));
+    if k == 0 {
+        for i in 0..m {
+            for (j, v) in out[i * n..(i + 1) * n].iter_mut().enumerate() {
+                *v = epi(i, j, 0.0);
+            }
+        }
+        return;
+    }
+    let nsliv_i = m.div_ceil(MR);
+    let nsliv_j = n.div_ceil(NR);
+    let width = workers_for(2 * m * n * k).min(nsliv_i).min(max_width).max(1);
+    with_buf(&B_PACK, nsliv_j * k * NR + ALIGN_F64, |bbuf| {
+        let bp = align64(bbuf, nsliv_j * k * NR);
+        pack_b(b, b_rowmajor_is_bt, k, n, bp);
+        let bp: &[f64] = bp;
+        if width == 1 {
+            compute_span(a, a_trans, bp, out, 0, nsliv_i, m, n, k, epi);
+            return;
+        }
+        // Split the output into row spans on MR-sliver boundaries; each span
+        // is an exclusive &mut slice, so no synchronization on stores.
+        let span = nsliv_i.div_ceil(width);
+        let mut spans: Vec<(usize, usize, &mut [f64])> = Vec::with_capacity(width);
+        let mut rest = out;
+        let mut s0 = 0;
+        while s0 < nsliv_i {
+            let s1 = (s0 + span).min(nsliv_i);
+            let rows = (s1 * MR).min(m) - s0 * MR;
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+            spans.push((s0, s1, head));
+            rest = tail;
+            s0 = s1;
+        }
+        let mut iter = spans.into_iter();
+        let first = iter.next().expect("at least one span");
+        pool::global().scoped(|scope| {
+            for (lo, hi, cspan) in iter {
+                scope.spawn(move || compute_span(a, a_trans, bp, cspan, lo, hi, m, n, k, epi));
+            }
+            let (lo, hi, cspan) = first;
+            compute_span(a, a_trans, bp, cspan, lo, hi, m, n, k, epi);
+        });
+    });
+}
+
+/// Compute slivers `[s0, s1)` of the output into `cspan` (exactly those
+/// rows): pack the A block once, then run the micro-kernel tile by tile,
+/// applying the epilogue as each tile is stored.
+#[allow(clippy::too_many_arguments)]
+fn compute_span<E>(
+    a: &Matrix,
+    a_trans: bool,
+    bp: &[f64],
+    cspan: &mut [f64],
+    s0: usize,
+    s1: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    epi: &E,
+) where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let live_rows = (s1 * MR).min(m) - s0 * MR;
+    let ns = s1 - s0;
+    debug_assert_eq!(cspan.len(), live_rows * n);
+    with_buf(&A_PACK, ns * k * MR + ALIGN_F64, |abuf| {
+        let ap_all = align64(abuf, ns * k * MR);
+        pack_a_block(a, a_trans, s0 * MR, live_rows, k, ap_all);
+        let nsliv_j = n.div_ceil(NR);
+        // Two-level cache blocking: KC-chunked k keeps both packed streams
+        // in L1, and IB i-slivers share each B-sliver chunk while their
+        // accumulator tiles stay in a 1 KiB stack block. Per element the
+        // summation order is still plain ascending t, so blocking changes
+        // nothing at the bit level (and neither does the thread width).
+        let mut sb = 0;
+        while sb < ns {
+            let se = (sb + IB).min(ns);
+            for js in 0..nsliv_j {
+                let j0 = js * NR;
+                let tile_cols = NR.min(n - j0);
+                let mut accs = [[[0.0f64; NR]; MR]; IB];
+                let mut t0 = 0;
+                while t0 < k {
+                    let t1 = (t0 + KC).min(k);
+                    let bsl = &bp[js * k * NR + t0 * NR..js * k * NR + t1 * NR];
+                    for s in sb..se {
+                        let ap = &ap_all[s * k * MR + t0 * MR..s * k * MR + t1 * MR];
+                        microkernel(ap, bsl, &mut accs[s - sb]);
+                    }
+                    t0 = t1;
+                }
+                for s in sb..se {
+                    let i0 = (s0 + s) * MR;
+                    let tile_rows = MR.min(m - i0);
+                    let row_base = s * MR * n;
+                    let acc = &accs[s - sb];
+                    for r in 0..tile_rows {
+                        let dst = &mut cspan[row_base + r * n + j0..row_base + r * n + j0 + tile_cols];
+                        let arow = &acc[r];
+                        for (cc, v) in dst.iter_mut().enumerate() {
+                            *v = epi(i0 + r, j0 + cc, arow[cc]);
+                        }
+                    }
+                }
+            }
+            sb = se;
         }
     });
 }
 
-/// Compute rows [r0, r1) of C into `out` (which holds exactly those rows).
-///
-/// 2x4 register-blocked micro-kernel over (i, j) with a k-blocked outer
-/// loop so the active B panel stays in L1/L2 at large k. Perf history in
-/// EXPERIMENTS.md §Perf.
-#[inline]
-fn gemm_chunk(a: &Matrix, bt: &Matrix, out: &mut [f64], r0: usize, r1: usize, n: usize, k: usize) {
-    const JB: usize = 4;
-    const KB: usize = 256; // k-panel: 4 rows of B = 8 KiB ≪ L1
-    for v in out.iter_mut() {
-        *v = 0.0;
+// ------------------------------------------------------ symmetric driver
+
+/// Raw output pointer shared across sliver tasks. Each task writes a
+/// disjoint set of rows (slivers form a partition), so access is race-free.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Compute `out[i, j] = epi(i, j, sum_t A[i, t] * B[j, t])` for a product
+/// known to be symmetric: only tiles intersecting the upper triangle are
+/// computed; the strict lower triangle is mirrored afterwards. Sliver order
+/// is zigzagged so the triangular workload balances across contiguous
+/// chunks. Results are bit-identical across widths.
+fn symm_driver<E>(
+    a: &Matrix,
+    a_trans: bool,
+    b: &Matrix,
+    b_trans: bool,
+    out: &mut Matrix,
+    max_width: usize,
+    epi: &E,
+) where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let (m, k) = if a_trans { (a.cols(), a.rows()) } else { (a.rows(), a.cols()) };
+    let (mb, kb) = if b_trans { (b.cols(), b.rows()) } else { (b.rows(), b.cols()) };
+    assert_eq!(m, mb, "symm: operands must produce a square result");
+    assert_eq!(k, kb, "symm dims");
+    assert_eq!((out.rows(), out.cols()), (m, m), "symm: bad output shape");
+    if m == 0 {
+        return;
     }
-    let mut k0 = 0;
-    while k0 < k {
-        let k1 = (k0 + KB).min(k);
-        // Only sub-block j when the full B k-panel overflows L2 (~512 KiB);
-        // otherwise the extra loop bookkeeping costs more than it saves.
-        let jblk = if n * (k1 - k0) * 8 > 512 * 1024 { 64 } else { n };
-        let mut jb0 = 0;
-        while jb0 < n {
-        let jb1 = (jb0 + jblk).min(n);
-        let mut i = r0;
-        // 2-row blocks of A amortize each B panel load across two outputs.
-        while i + 2 <= r1 {
-            let a0 = &a.row(i)[k0..k1];
-            let a1 = &a.row(i + 1)[k0..k1];
-            let (c0_all, c1_all) = out[(i - r0) * n..].split_at_mut(n);
-            let c0 = &mut c0_all[..n];
-            let c1 = &mut c1_all[..n];
-            let mut j = jb0;
-            while j + JB <= jb1 {
-                let b0 = &bt.row(j)[k0..k1];
-                let b1 = &bt.row(j + 1)[k0..k1];
-                let b2 = &bt.row(j + 2)[k0..k1];
-                let b3 = &bt.row(j + 3)[k0..k1];
-                let (mut s00, mut s01, mut s02, mut s03) = (0.0f64, 0.0, 0.0, 0.0);
-                let (mut s10, mut s11, mut s12, mut s13) = (0.0f64, 0.0, 0.0, 0.0);
-                for t in 0..a0.len() {
-                    let av0 = a0[t];
-                    let av1 = a1[t];
-                    s00 += av0 * b0[t];
-                    s01 += av0 * b1[t];
-                    s02 += av0 * b2[t];
-                    s03 += av0 * b3[t];
-                    s10 += av1 * b0[t];
-                    s11 += av1 * b1[t];
-                    s12 += av1 * b2[t];
-                    s13 += av1 * b3[t];
+    let n = m;
+    if k == 0 {
+        for i in 0..m {
+            for j in i..n {
+                out[(i, j)] = epi(i, j, 0.0);
+            }
+        }
+        mirror_lower_from_upper(out);
+        return;
+    }
+    let nsliv_i = m.div_ceil(MR);
+    let nsliv_j = n.div_ceil(NR);
+    // triangle ~halves the flops; threshold on the actual work
+    let width = workers_for(m * n * k).min(nsliv_i).min(max_width).max(1);
+    with_buf(&B_PACK, nsliv_j * k * NR + ALIGN_F64, |bbuf| {
+        let bp = align64(bbuf, nsliv_j * k * NR);
+        // right operand is logical B^T: when b is stored m x k its rows are
+        // exactly the right operand's columns
+        pack_b(b, !b_trans, k, n, bp);
+        let bp: &[f64] = bp;
+        let cptr = SendPtr(out.data_mut().as_mut_ptr());
+        if width == 1 {
+            for s in 0..nsliv_i {
+                symm_sliver(a, a_trans, bp, cptr, s, m, n, k, epi);
+            }
+        } else {
+            let chunk = nsliv_i.div_ceil(width);
+            pool::global().scoped(|scope| {
+                for t in 1..width {
+                    let lo = t * chunk;
+                    let hi = ((t + 1) * chunk).min(nsliv_i);
+                    if lo >= hi {
+                        break;
+                    }
+                    scope.spawn(move || {
+                        for idx in lo..hi {
+                            symm_sliver(a, a_trans, bp, cptr, zigzag(idx, nsliv_i), m, n, k, epi);
+                        }
+                    });
                 }
-                c0[j] += s00;
-                c0[j + 1] += s01;
-                c0[j + 2] += s02;
-                c0[j + 3] += s03;
-                c1[j] += s10;
-                c1[j + 1] += s11;
-                c1[j + 2] += s12;
-                c1[j + 3] += s13;
-                j += JB;
-            }
-            while j < jb1 {
-                let brow = &bt.row(j)[k0..k1];
-                c0[j] += dot(a0, brow);
-                c1[j] += dot(a1, brow);
-                j += 1;
-            }
-            i += 2;
-        }
-        // remainder row
-        while i < r1 {
-            let arow = &a.row(i)[k0..k1];
-            let crow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
-            let mut j = jb0;
-            while j + JB <= jb1 {
-                let b0 = &bt.row(j)[k0..k1];
-                let b1 = &bt.row(j + 1)[k0..k1];
-                let b2 = &bt.row(j + 2)[k0..k1];
-                let b3 = &bt.row(j + 3)[k0..k1];
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
-                for t in 0..arow.len() {
-                    let av = arow[t];
-                    s0 += av * b0[t];
-                    s1 += av * b1[t];
-                    s2 += av * b2[t];
-                    s3 += av * b3[t];
+                for idx in 0..chunk.min(nsliv_i) {
+                    symm_sliver(a, a_trans, bp, cptr, zigzag(idx, nsliv_i), m, n, k, epi);
                 }
-                crow[j] += s0;
-                crow[j + 1] += s1;
-                crow[j + 2] += s2;
-                crow[j + 3] += s3;
-                j += JB;
-            }
-            while j < jb1 {
-                crow[j] += dot(arow, &bt.row(j)[k0..k1]);
-                j += 1;
-            }
-            i += 1;
+            });
         }
-        jb0 = jb1;
-        }
-        k0 = k1;
+    });
+    mirror_lower_from_upper(out);
+}
+
+/// Balance the triangular workload: even indices walk from the top (wide
+/// rows), odd indices from the bottom (narrow rows), so contiguous index
+/// chunks carry near-equal work. Bijective on `0..n`.
+fn zigzag(idx: usize, n: usize) -> usize {
+    if idx % 2 == 0 {
+        idx / 2
+    } else {
+        n - 1 - idx / 2
     }
 }
 
-#[inline]
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+/// One MR-row sliver of the symmetric product: tiles strictly below the
+/// diagonal are skipped; boundary tiles may compute a few sub-diagonal
+/// entries, which the mirror pass overwrites.
+#[allow(clippy::too_many_arguments)]
+fn symm_sliver<E>(
+    a: &Matrix,
+    a_trans: bool,
+    bp: &[f64],
+    c: SendPtr,
+    s: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    epi: &E,
+) where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let i0 = s * MR;
+    let tile_rows = MR.min(m - i0);
+    with_buf(&A_PACK, k * MR + ALIGN_F64, |abuf| {
+        let ap = align64(abuf, k * MR);
+        pack_a_block(a, a_trans, i0, tile_rows, k, ap);
+        let nsliv_j = n.div_ceil(NR);
+        // first sliver whose column range reaches the diagonal: js*NR+NR > i0
+        for js in (i0 / NR)..nsliv_j {
+            let j0 = js * NR;
+            let tile_cols = NR.min(n - j0);
+            let bsl = &bp[js * k * NR..(js + 1) * k * NR];
+            let mut acc = [[0.0f64; NR]; MR];
+            microkernel(ap, bsl, &mut acc);
+            for r in 0..tile_rows {
+                let i = i0 + r;
+                // SAFETY: slivers partition the rows; row `i` is written
+                // only by this call, and no other task reads it.
+                let dst = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * n + j0), tile_cols) };
+                let arow = &acc[r];
+                for (cc, v) in dst.iter_mut().enumerate() {
+                    *v = epi(i, j0 + cc, arow[cc]);
+                }
+            }
+        }
+    });
+}
+
+/// Copy the strict upper triangle onto the strict lower one, in 64x64
+/// blocks for cache locality, parallel over row blocks. Readers touch only
+/// strictly-upper elements and writers only strictly-lower ones, so the
+/// tasks are race-free.
+fn mirror_lower_from_upper(out: &mut Matrix) {
+    let n = out.rows();
+    if n < 2 {
+        return;
+    }
+    const B: usize = 64;
+    let nblk = n.div_ceil(B);
+    let ptr = SendPtr(out.data_mut().as_mut_ptr());
+    pool::parallel_for(nblk, pool::configured_threads(), |bi| {
+        let r0 = bi * B;
+        let r1 = (r0 + B).min(n);
+        for cb in 0..=bi {
+            let c0 = cb * B;
+            for i in r0.max(1)..r1 {
+                let c1 = (c0 + B).min(i);
+                if c0 >= c1 {
+                    continue;
+                }
+                // SAFETY: row block `bi` is owned by this task; reads are
+                // from strictly-upper elements no task writes.
+                let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * n + c0), c1 - c0) };
+                for (off, v) in row.iter_mut().enumerate() {
+                    let j = c0 + off;
+                    *v = unsafe { *ptr.0.add(j * n + i) };
+                }
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -243,5 +666,145 @@ mod tests {
     #[should_panic]
     fn dim_mismatch_panics() {
         gemm(&Matrix::zeros(2, 3), &Matrix::zeros(4, 2));
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let mut rng = Rng::new(4);
+        for &(m, k, n) in &[(1, 1, 1), (5, 7, 3), (9, 2, 13), (12, 12, 12), (31, 33, 2)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let mut c = Matrix::from_fn(m, n, |_, _| f64::NAN);
+            gemm_into(&a, &b, &mut c);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-10, "gemm_into {m}x{k}x{n}");
+
+            let at = a.transpose(); // k... logical A via trans storage
+            let mut c2 = Matrix::from_fn(m, n, |_, _| f64::NAN);
+            gemm_tn_into(&at, &b, &mut c2);
+            assert!(c2.max_abs_diff(&naive(&a, &b)) < 1e-10, "gemm_tn_into {m}x{k}x{n}");
+
+            let bt = b.transpose(); // n x k
+            let mut c3 = Matrix::from_fn(m, n, |_, _| f64::NAN);
+            gemm_nt_into(&a, &bt, &mut c3);
+            assert!(c3.max_abs_diff(&naive(&a, &b)) < 1e-10, "gemm_nt_into {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn zero_k_applies_epilogue_over_zero_dot() {
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 4);
+        let c = gemm(&a, &b);
+        assert_eq!((c.rows(), c.cols()), (3, 4));
+        assert!(c.data().iter().all(|&v| v == 0.0));
+        let bt = Matrix::zeros(4, 0);
+        let k = gemm_nt_map(&a, &bt, &|i, j, dot| dot + (i * 10 + j) as f64);
+        assert_eq!(k[(2, 3)], 23.0);
+    }
+
+    #[test]
+    fn epilogue_fuses_elementwise_map() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(13, 6, &mut rng);
+        let b = Matrix::randn(9, 6, &mut rng);
+        let fused = gemm_nt_map(&a, &b, &|i, j, dot| (2.0 * dot).exp() + (i + j) as f64);
+        let plain = gemm_nt(&a, &b);
+        for i in 0..13 {
+            for j in 0..9 {
+                let expect = (2.0 * plain[(i, j)]).exp() + (i + j) as f64;
+                assert!((fused[(i, j)] - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_matches_naive_and_is_exactly_symmetric() {
+        let mut rng = Rng::new(6);
+        for &(m, k) in &[(1, 1), (2, 9), (5, 3), (12, 12), (33, 7), (40, 64)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let c = syrk_nt(&a);
+            assert!(c.max_abs_diff(&naive(&a, &a.transpose())) < 1e-10, "syrk_nt {m}x{k}");
+            let ct = syrk_tn(&a.transpose());
+            assert!(ct.max_abs_diff(&naive(&a, &a.transpose())) < 1e-10, "syrk_tn {m}x{k}");
+            for i in 0..m {
+                for j in (i + 1)..m {
+                    // bitwise symmetry, not just approximate
+                    assert_eq!(c[(i, j)].to_bits(), c[(j, i)].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symm_nt_matches_full_product_for_symmetric_chains() {
+        let mut rng = Rng::new(7);
+        let x = Matrix::randn(17, 9, &mut rng);
+        let mut w = Matrix::randn(9, 9, &mut rng);
+        w.symmetrize();
+        let xw = x.matmul(&w);
+        let full = naive(&xw, &x.transpose()); // X W X^T, symmetric
+        let sym = symm_nt(&xw, &x);
+        assert!(sym.max_abs_diff(&full) < 1e-9);
+        assert!(sym.max_abs_diff(&sym.transpose()) == 0.0);
+    }
+
+    #[test]
+    fn syrk_map_applies_symmetric_epilogue() {
+        let mut rng = Rng::new(8);
+        let x = Matrix::randn(21, 5, &mut rng);
+        let g = syrk_nt_map(&x, &|i, j, dot| dot * 0.5 + ((i * j) as f64).sqrt());
+        let plain = gemm_nt(&x, &x);
+        for i in 0..21 {
+            for j in 0..21 {
+                let expect = plain[(i, j)] * 0.5 + ((i * j) as f64).sqrt();
+                assert!((g[(i, j)] - expect).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        // The determinism contract: pooled execution must not change a
+        // single bit of the result for any parallel width. Sizes exceed the
+        // parallel threshold so the width caps actually bite.
+        let mut rng = Rng::new(9);
+        let a = Matrix::randn(200, 150, &mut rng);
+        let b = Matrix::randn(150, 180, &mut rng);
+        let reference = gemm_with_threads(&a, &b, 1);
+        for threads in [2, 3, 4, 8, 16] {
+            let c = gemm_with_threads(&a, &b, threads);
+            assert_eq!(reference.data().len(), c.data().len());
+            for (x, y) in reference.data().iter().zip(c.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "width {threads} changed bits");
+            }
+        }
+    }
+
+    #[test]
+    fn symm_driver_bit_identical_across_widths() {
+        // 210*210*60 flops > the 2M parallel threshold
+        let mut rng = Rng::new(10);
+        let x = Matrix::randn(210, 60, &mut rng);
+        let mut reference = Matrix::zeros(210, 210);
+        symm_driver(&x, false, &x, false, &mut reference, 1, &|_, _, v| v);
+        for threads in [2, 5, 8] {
+            let mut c = Matrix::zeros(210, 210);
+            symm_driver(&x, false, &x, false, &mut c, threads, &|_, _, v| v);
+            for (p, q) in reference.data().iter().zip(c.data()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "width {threads} changed bits");
+            }
+        }
+    }
+
+    #[test]
+    fn zigzag_is_a_permutation() {
+        for n in [1usize, 2, 5, 8, 13] {
+            let mut seen = vec![false; n];
+            for idx in 0..n {
+                let z = zigzag(idx, n);
+                assert!(z < n && !seen[z], "n={n} idx={idx}");
+                seen[z] = true;
+            }
+        }
     }
 }

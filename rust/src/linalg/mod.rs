@@ -14,6 +14,7 @@ pub mod sparse;
 pub mod svd;
 
 pub use eig::{eigh, Eigh};
+pub use gemm::{gemm_into, gemm_nt_into, gemm_tn_into, symm_nt, syrk_nt, syrk_tn};
 pub use lanczos::lanczos_top_k;
 pub use pinv::pinv;
 pub use qr::{qr_thin, QrThin};
@@ -237,6 +238,32 @@ impl Matrix {
         gemm::gemm_nt(self, other)
     }
 
+    /// Gram matrix `self * self^T` via the triangular [`gemm::syrk_nt`]
+    /// path (~2x fewer FLOPs than `matmul_tr(self)`), exactly symmetric.
+    pub fn gram_nt(&self) -> Matrix {
+        gemm::syrk_nt(self)
+    }
+
+    /// Gram matrix `self^T * self` via [`gemm::syrk_tn`].
+    pub fn gram_tn(&self) -> Matrix {
+        gemm::syrk_tn(self)
+    }
+
+    /// Squared euclidean norm of every row (the RBF epilogue input).
+    pub fn row_sq_norms(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|v| v * v).sum())
+            .collect()
+    }
+
+    /// `self += alpha * I` (ridge shifts; square matrices).
+    pub fn add_diag(&mut self, alpha: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += alpha;
+        }
+    }
+
     /// Matrix-vector product.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols);
@@ -454,6 +481,22 @@ mod tests {
         let mut rng = Rng::new(0);
         let est = m.spectral_norm_est(50, &mut rng);
         assert!((est - 7.0).abs() < 1e-6, "est={est}");
+    }
+
+    #[test]
+    fn gram_and_row_norms_and_add_diag() {
+        let m = small();
+        let g = m.gram_nt(); // 2x2
+        assert!((g[(0, 0)] - 14.0).abs() < 1e-12);
+        assert!((g[(0, 1)] - 32.0).abs() < 1e-12);
+        assert_eq!(g[(0, 1)], g[(1, 0)]);
+        let gt = m.gram_tn(); // 3x3
+        assert!((gt[(0, 0)] - 17.0).abs() < 1e-12);
+        assert_eq!(m.row_sq_norms(), vec![14.0, 77.0]);
+        let mut d = Matrix::identity(2);
+        d.add_diag(0.5);
+        assert_eq!(d[(0, 0)], 1.5);
+        assert_eq!(d[(0, 1)], 0.0);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! - Triangular and SPD solves used internally.
 
 use super::eig::eigh;
+use super::gemm;
 use super::svd::svd_thin;
 use super::Matrix;
 
@@ -20,9 +21,10 @@ pub fn eig_of_cuc(c: &Matrix, u: &Matrix) -> (Vec<f64>, Matrix) {
     let rank = f.rank(c.rows(), c.cols());
     let idx: Vec<usize> = (0..rank).collect();
     let uc = f.u.select_cols(&idx);
-    // Z = (Sc Vc^T) U (Sc Vc^T)^T, r x r
+    // Z = (Sc Vc^T) U (Sc Vc^T)^T, r x r — symmetric (U is), so the
+    // triangular product keeps Z exactly symmetric for eigh.
     let svt = Matrix::from_fn(rank, c.cols(), |i, j| f.s[i] * f.v[(j, i)]);
-    let z = svt.matmul(u).matmul_tr(&svt);
+    let z = gemm::symm_nt(&svt.matmul(u), &svt);
     let e = eigh(&z);
     // eigenvectors = Uc Vz
     let vecs = uc.matmul(&e.vectors);
@@ -60,11 +62,9 @@ pub fn woodbury_solve(c: &Matrix, u: &Matrix, alpha: f64, y: &[f64]) -> Vec<f64>
         e.vectors[(i, keep[j])] * e.values[keep[j]].sqrt()
     });
     let b = c.matmul(&g);
-    // inner = alpha I + B^T B (r x r, SPD) — solved densely
-    let mut inner = b.tr_matmul(&b);
-    for i in 0..inner.rows() {
-        inner[(i, i)] += alpha;
-    }
+    // inner = alpha I + B^T B (r x r, SPD) — Gram via triangular SYRK
+    let mut inner = gemm::syrk_tn(&b);
+    inner.add_diag(alpha);
     let bty = b.tr_matvec(y);
     let z = lu_solve(&inner, &bty).expect("alpha I + B^T B is SPD");
     let bz = b.matvec(&z);

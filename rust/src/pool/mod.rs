@@ -2,12 +2,16 @@
 //!
 //! A fixed pool of workers fed by an MPMC channel built on
 //! `Mutex<VecDeque>` + `Condvar`, with a bounded-queue mode for
-//! backpressure. `parallel_for` provides scoped data-parallel loops for the
-//! coordinator and benches.
+//! backpressure. Since GEMM v2, all data-parallel loops in the crate run
+//! through one lazily-initialized [`global`] pool via [`parallel_for`] /
+//! [`ThreadPool::scoped`] — per-call `std::thread::scope` spawning is gone
+//! from the hot paths, and `FASTSPSD_THREADS` pins the parallel width for
+//! deterministic single-threaded runs.
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -28,6 +32,30 @@ struct Queue {
 pub struct ThreadPool {
     queue: Arc<Queue>,
     workers: Vec<JoinHandle<()>>,
+}
+
+/// Parallel width for this process: `FASTSPSD_THREADS` when set to a
+/// positive integer (deterministic test/bench runs), otherwise the
+/// machine's available parallelism. Read once and cached.
+pub fn configured_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        match std::env::var("FASTSPSD_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+        {
+            Some(n) if n > 0 => n,
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    })
+}
+
+/// The process-wide pool: lazily initialized with [`configured_threads`]
+/// workers and an unbounded queue, shared by GEMM, kernel-block evaluation,
+/// and sketch application. Never dropped (workers live for the process).
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(configured_threads(), usize::MAX))
 }
 
 impl ThreadPool {
@@ -57,8 +85,7 @@ impl ThreadPool {
 
     /// Pool sized to the machine, unbounded queue.
     pub fn with_default_threads() -> Self {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ThreadPool::new(n, usize::MAX)
+        ThreadPool::new(configured_threads(), usize::MAX)
     }
 
     pub fn threads(&self) -> usize {
@@ -95,6 +122,126 @@ impl ThreadPool {
         }
         drop(jobs);
     }
+
+    /// Pop one pending job without blocking (used by waiting scope owners
+    /// to help drain the queue).
+    fn try_pop(&self) -> Option<Job> {
+        let mut jobs = self.queue.jobs.lock().unwrap();
+        let job = jobs.pop_front();
+        if job.is_some() {
+            self.queue.space.notify_one();
+        }
+        job
+    }
+
+    /// Scoped data-parallel execution on the pool: jobs spawned through the
+    /// [`Scope`] may borrow from the caller's stack; `scoped` returns only
+    /// after every spawned job has finished. While waiting, the calling
+    /// thread helps execute queued jobs, so a pool worker may itself open a
+    /// scope (nested parallelism) without deadlocking the pool. If any
+    /// scoped job panicked, `scoped` panics after all jobs have settled.
+    pub fn scoped<'env, R>(&self, f: impl FnOnce(&Scope<'_, 'env>) -> R) -> R {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState {
+                remaining: Mutex::new(0),
+                done: Condvar::new(),
+                panicked: AtomicBool::new(false),
+            }),
+            _env: PhantomData,
+        };
+        // If `f` panics we must still wait for every spawned job before
+        // unwinding — the jobs borrow the caller's stack (same contract as
+        // std::thread::scope).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&scope)));
+        // Wait for the scope's jobs, helping drain the queue only while our
+        // own jobs are still pending (ours may be queued behind others, and
+        // helping keeps nested scopes deadlock-free) — a completed scope
+        // returns immediately instead of adopting unrelated work. Every job
+        // of this scope was queued before `f` returned, so once the queue
+        // is observed empty the stragglers are already running on workers
+        // and their completion guards will signal `done`.
+        loop {
+            if *scope.state.remaining.lock().unwrap() == 0 {
+                break;
+            }
+            if let Some(job) = self.try_pop() {
+                execute_job(&self.queue, job);
+                continue;
+            }
+            let remaining = scope.state.remaining.lock().unwrap();
+            if *remaining != 0 {
+                let _woken = scope.state.done.wait(remaining).unwrap();
+            }
+        }
+        match result {
+            Ok(r) => {
+                if scope.state.panicked.load(Ordering::SeqCst) {
+                    panic!("a job spawned in ThreadPool::scoped panicked");
+                }
+                r
+            }
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+}
+
+struct ScopeState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Handle for spawning borrow-carrying jobs inside [`ThreadPool::scoped`].
+pub struct Scope<'pool, 'env> {
+    pool: &'pool ThreadPool,
+    state: Arc<ScopeState>,
+    // Invariant over 'env, like std::thread::Scope: the closure may borrow
+    // anything that outlives the `scoped` call, mutably or not.
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+/// Decrements the scope's pending count even if the job panics (the drop
+/// runs during unwinding), recording the panic for re-raise in `scoped`.
+struct ScopeGuard(Arc<ScopeState>);
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut remaining = self.0.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    /// Queue `job` on the pool. The job may borrow from `'env`.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'env) {
+        *self.state.remaining.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let _guard = ScopeGuard(state);
+            job();
+        });
+        // SAFETY: `ThreadPool::scoped` does not return until `remaining`
+        // reaches 0, i.e. until this closure (and everything it borrows
+        // from 'env) has finished running, so extending the lifetime to
+        // 'static never lets the job outlive its borrows.
+        let boxed: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(boxed)
+        };
+        let mut jobs = self.pool.queue.jobs.lock().unwrap();
+        // Scoped jobs ignore the capacity bound: blocking here could
+        // deadlock a scope opened from within a worker.
+        self.pool.queue.inflight.fetch_add(1, Ordering::SeqCst);
+        jobs.push_back(boxed);
+        drop(jobs);
+        self.pool.queue.cond.notify_one();
+    }
 }
 
 impl Drop for ThreadPool {
@@ -104,6 +251,20 @@ impl Drop for ThreadPool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Run one job with the pool's panic isolation and inflight accounting
+/// (shared by workers and helping scope owners).
+fn execute_job(q: &Queue, job: Job) {
+    // Failure isolation: a panicking job must not kill the worker or
+    // wedge `wait_idle` (the inflight count still drops below).
+    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+        q.panics.fetch_add(1, Ordering::SeqCst);
+    }
+    if q.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+        let _guard = q.jobs.lock().unwrap();
+        q.done.notify_all();
     }
 }
 
@@ -122,48 +283,45 @@ fn worker_loop(q: Arc<Queue>) {
                 jobs = q.cond.wait(jobs).unwrap();
             }
         };
-        // Failure isolation: a panicking job must not kill the worker or
-        // wedge `wait_idle` (the inflight count still drops below).
-        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
-            q.panics.fetch_add(1, Ordering::SeqCst);
-        }
-        if q.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
-            let _guard = q.jobs.lock().unwrap();
-            q.done.notify_all();
-        }
+        execute_job(&q, job);
     }
 }
 
-/// Scoped parallel-for over `0..n`: splits into contiguous chunks across up
-/// to `max_threads` scoped threads and calls `f(i)` for each index.
+/// Data-parallel loop over `0..n` on the [`global`] pool: splits into
+/// contiguous chunks across up to `max_threads` workers (further capped by
+/// [`configured_threads`]) and calls `f(i)` for each index exactly once.
+/// The caller runs the first chunk itself and helps drain the queue while
+/// waiting, so no thread is ever spawned per call. Chunk boundaries never
+/// change which `f(i)` runs, so results are identical across widths.
 pub fn parallel_for(n: usize, max_threads: usize, f: impl Fn(usize) + Sync) {
     if n == 0 {
         return;
     }
-    let threads = max_threads
-        .min(n)
-        .min(std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1))
-        .max(1);
-    if threads == 1 {
+    let width = max_threads.min(n).min(configured_threads()).max(1);
+    if width == 1 {
         for i in 0..n {
             f(i);
         }
         return;
     }
-    let chunk = n.div_ceil(threads);
+    let chunk = n.div_ceil(width);
     let f = &f;
-    std::thread::scope(|s| {
-        for t in 0..threads {
+    global().scoped(|scope| {
+        for t in 1..width {
             let lo = t * chunk;
             let hi = ((t + 1) * chunk).min(n);
             if lo >= hi {
                 break;
             }
-            s.spawn(move || {
+            scope.spawn(move || {
                 for i in lo..hi {
                     f(i);
                 }
             });
+        }
+        // The caller computes the first chunk while the pool runs the rest.
+        for i in 0..chunk.min(n) {
+            f(i);
         }
     });
 }
@@ -227,6 +385,54 @@ mod tests {
     }
 
     #[test]
+    fn scoped_borrows_stack_data() {
+        let pool = ThreadPool::new(3, usize::MAX);
+        let mut results = vec![0u64; 64];
+        {
+            let chunks: Vec<&mut [u64]> = results.chunks_mut(16).collect();
+            pool.scoped(|scope| {
+                for (t, chunk) in chunks.into_iter().enumerate() {
+                    scope.spawn(move || {
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = (t * 16 + i) as u64;
+                        }
+                    });
+                }
+            });
+        }
+        assert!(results.iter().enumerate().all(|(i, &v)| v == i as u64));
+    }
+
+    #[test]
+    fn scoped_nested_does_not_deadlock() {
+        // A scoped job that itself opens a scope on the same pool; with one
+        // worker this only terminates because waiters help drain the queue.
+        let pool = ThreadPool::new(1, usize::MAX);
+        let total = AtomicU64::new(0);
+        pool.scoped(|outer| {
+            outer.spawn(|| {
+                pool.scoped(|inner| {
+                    for _ in 0..8 {
+                        inner.spawn(|| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped panicked")]
+    fn scoped_propagates_job_panics() {
+        let pool = ThreadPool::new(2, usize::MAX);
+        pool.scoped(|scope| {
+            scope.spawn(|| panic!("inner failure"));
+        });
+    }
+
+    #[test]
     fn panicking_job_does_not_wedge_pool() {
         let pool = ThreadPool::new(2, usize::MAX);
         let c = Arc::new(AtomicU64::new(0));
@@ -264,5 +470,14 @@ mod tests {
         pool.wait_idle();
         drop(pool);
         assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_configured() {
+        let p1 = global() as *const ThreadPool;
+        let p2 = global() as *const ThreadPool;
+        assert_eq!(p1, p2);
+        assert!(global().threads() >= 1);
+        assert!(configured_threads() >= 1);
     }
 }

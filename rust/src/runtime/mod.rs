@@ -17,6 +17,7 @@ pub mod manifest;
 pub use manifest::{default_artifact_dir, ArtifactSpec, Manifest};
 
 use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -146,6 +147,23 @@ impl Drop for RuntimeHandle {
     }
 }
 
+/// Without the `pjrt` feature (the default in this image — the `xla` crate
+/// is not available) the runtime thread reports failure at startup, so
+/// `RuntimeHandle::spawn` returns `Err` and every caller falls back to the
+/// pure-rust engine path.
+#[cfg(not(feature = "pjrt"))]
+fn runtime_thread(
+    _manifest: Arc<Manifest>,
+    _rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+    _stats: Arc<RuntimeStats>,
+) {
+    let _ = ready.send(Err(anyhow!(
+        "PJRT support not compiled in (build with --features pjrt and an xla dependency)"
+    )));
+}
+
+#[cfg(feature = "pjrt")]
 fn runtime_thread(
     manifest: Arc<Manifest>,
     rx: mpsc::Receiver<Msg>,
@@ -192,6 +210,7 @@ fn runtime_thread(
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn run_batch(
     manifest: &Manifest,
     exes: &HashMap<String, xla::PjRtLoadedExecutable>,

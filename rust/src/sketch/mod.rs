@@ -136,8 +136,24 @@ impl SketchOp {
         }
     }
 
-    /// `S^T A S` for square symmetric `A` (n x n): apply left then right.
+    /// `S^T A S` for square symmetric `A` (n x n). Column selections gather
+    /// the `s x s` sub-block directly (no transposes, no dense products);
+    /// the projection families apply left twice.
     pub fn conjugate(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), a.cols(), "conjugate needs a square matrix");
+        if let SketchOp::Select { indices, scales, .. } = self {
+            let s = indices.len();
+            let mut out = Matrix::zeros(s, s);
+            for (r, &i) in indices.iter().enumerate() {
+                let src = a.row(i);
+                let sr = scales[r];
+                let dst = out.row_mut(r);
+                for (c, &j) in indices.iter().enumerate() {
+                    dst[c] = sr * scales[c] * src[j];
+                }
+            }
+            return out;
+        }
         let sta = self.apply_left(a); // s x n
         let stat = self.apply_left(&sta.transpose()); // s x s = S^T (S^T A)^T
         stat.transpose()
@@ -298,6 +314,18 @@ mod tests {
         let sks = op.conjugate(&k);
         assert_eq!((sks.rows(), sks.cols()), (6, 6));
         assert!(sks.max_abs_diff(&sks.transpose()) < 1e-9);
+    }
+
+    #[test]
+    fn conjugate_select_matches_dense_path() {
+        let mut rng = Rng::new(10);
+        let g = Matrix::randn(18, 18, &mut rng);
+        let k = g.matmul_tr(&g);
+        let op = uniform(18, 7, true, &mut rng);
+        let fast = op.conjugate(&k);
+        let s_dense = materialize(&op);
+        let expect = s_dense.tr_matmul(&k).matmul(&s_dense);
+        assert!(fast.max_abs_diff(&expect) < 1e-9);
     }
 
     #[test]

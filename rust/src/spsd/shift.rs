@@ -14,7 +14,7 @@
 //! kernel entries**.
 
 use super::SpsdApprox;
-use crate::linalg::{qr, solve, Matrix};
+use crate::linalg::{gemm, qr, solve, Matrix};
 
 /// A spectrally shifted low-rank approximation
 /// `K̃ = C U C^T + δ (I - Q Q^T)` with `Q` an orthonormal basis of col(C).
@@ -32,8 +32,8 @@ pub fn spectral_shift(base: SpsdApprox, trace_k: f64) -> ShiftedApprox {
     let n = base.c.rows();
     let q = qr::orthonormal_basis(&base.c, 1e-12);
     let rank = q.cols();
-    // tr(C U C^T) = tr(U (C^T C))
-    let ctc = base.c.tr_matmul(&base.c);
+    // tr(C U C^T) = tr(U (C^T C)); C^T C is a Gram — triangular SYRK
+    let ctc = gemm::syrk_tn(&base.c);
     let tr_approx = base.u.matmul(&ctc).trace();
     let denom = (n - rank).max(1) as f64;
     let delta = ((trace_k - tr_approx) / denom).max(0.0);
@@ -44,7 +44,7 @@ impl ShiftedApprox {
     /// Materialize `C U C^T + δ (I - Q Q^T)` (evaluation only).
     pub fn materialize(&self) -> Matrix {
         let mut m = self.base.materialize();
-        let qqt = self.q.matmul_tr(&self.q);
+        let qqt = gemm::syrk_nt(&self.q);
         for i in 0..m.rows() {
             for j in 0..m.cols() {
                 let eye = if i == j { 1.0 } else { 0.0 };
