@@ -22,10 +22,12 @@ test:
 
 bench:
 	$(CARGO) bench --bench hotpath
+	$(CARGO) bench --bench stream
 
 perf-check: build test
 	FASTSPSD_BENCH_QUICK=1 $(CARGO) bench --bench hotpath
-	@echo "perf-check OK — smoke numbers in BENCH_hotpath.quick.json; run 'make bench' for the full-budget BENCH_hotpath.json"
+	FASTSPSD_BENCH_QUICK=1 $(CARGO) bench --bench stream
+	@echo "perf-check OK — smoke numbers in BENCH_hotpath.quick.json / BENCH_stream.quick.json; run 'make bench' for the full-budget JSONs"
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

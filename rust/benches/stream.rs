@@ -1,0 +1,144 @@
+//! Bench: streamed-vs-materialized build throughput for the tile pipeline
+//! (EXPERIMENTS.md §Streaming).
+//!
+//! Emits machine-readable `BENCH_stream.json` (quick mode:
+//! `BENCH_stream.quick.json`, via the same `FASTSPSD_BENCH_QUICK=1` flag
+//! as the hotpath bench) with one entry per (model, path, tile) so the
+//! streamed-within-10%-of-materialized acceptance bar is checkable across
+//! PRs. Also prints the allocation gauge's peak for each path — the bench
+//! binary installs the counting allocator, so the memory numbers here are
+//! real, not predicted.
+
+use fastspsd::benchkit::alloc::{AllocGauge, CountingAlloc};
+use fastspsd::benchkit::{black_box, BenchSuite};
+use fastspsd::coordinator::oracle::RbfOracle;
+use fastspsd::cur::{self, FastCurConfig};
+use fastspsd::linalg::Matrix;
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::stream::StreamConfig;
+use fastspsd::util::Rng;
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Default streaming tile height (the acceptance bar's "default tile").
+const DEFAULT_TILE: usize = 256;
+
+fn fmt_mib(bytes: usize) -> String {
+    format!("{:.2} MiB", bytes as f64 / (1024.0 * 1024.0))
+}
+
+/// Peak extra allocation of one run of `f`, measured AFTER the suite's
+/// bench pass has already warmed pool threads and grow-only pack buffers
+/// (EXPERIMENTS.md §Streaming measurement method).
+fn gauged<R>(mut f: impl FnMut() -> R) -> usize {
+    let g = AllocGauge::start();
+    black_box(f());
+    g.peak_extra_bytes()
+}
+
+fn main() {
+    let quick = fastspsd::benchkit::quick_mode();
+    let mut suite = BenchSuite::new("stream pipeline");
+    suite.header();
+    println!("  ({} worker threads)", fastspsd::pool::configured_threads());
+
+    // ---- fast model on an RBF oracle: the headline path ----------------
+    let n = if quick { 800 } else { 3000 };
+    let (c, s) = (32, 96);
+    let mut rng = Rng::new(0);
+    let x = Arc::new(Matrix::randn(n, 16, &mut rng));
+    let oracle = RbfOracle::cpu(x, 0.4);
+    let p = spsd::uniform_p(n, c, &mut rng);
+
+    suite.bench(&format!("fast[uniform] materialized n={n}"), || {
+        black_box(spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut Rng::new(1)));
+    });
+    let peak = gauged(|| spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut Rng::new(1)));
+    println!("    peak extra: {}", fmt_mib(peak));
+    for tile in [64usize, DEFAULT_TILE] {
+        suite.bench(&format!("fast[uniform] streamed t={tile} n={n}"), || {
+            black_box(spsd::fast_streamed(
+                &oracle,
+                &p,
+                FastConfig::uniform(s),
+                StreamConfig::tiled(tile),
+                &mut Rng::new(1),
+            ));
+        });
+        let peak = gauged(|| {
+            spsd::fast_streamed(
+                &oracle,
+                &p,
+                FastConfig::uniform(s),
+                StreamConfig::tiled(tile),
+                &mut Rng::new(1),
+            )
+        });
+        println!("    peak extra: {}", fmt_mib(peak));
+    }
+    if let (Some(mat), Some(st)) = (
+        suite.mean_of(&format!("fast[uniform] materialized n={n}")),
+        suite.mean_of(&format!("fast[uniform] streamed t={DEFAULT_TILE} n={n}")),
+    ) {
+        println!("    streamed/materialized at default tile: {:.3}x", st / mat);
+    }
+
+    // ---- nystrom --------------------------------------------------------
+    suite.bench(&format!("nystrom materialized n={n}"), || {
+        black_box(spsd::nystrom(&oracle, &p));
+    });
+    let peak = gauged(|| spsd::nystrom(&oracle, &p));
+    println!("    peak extra: {}", fmt_mib(peak));
+    suite.bench(&format!("nystrom streamed t={DEFAULT_TILE} n={n}"), || {
+        black_box(spsd::nystrom_streamed(&oracle, &p, StreamConfig::tiled(DEFAULT_TILE)));
+    });
+    let peak = gauged(|| spsd::nystrom_streamed(&oracle, &p, StreamConfig::tiled(DEFAULT_TILE)));
+    println!("    peak extra: {}", fmt_mib(peak));
+
+    // ---- prototype (the n² -> tile·n memory win) ------------------------
+    let np = if quick { 500 } else { 1200 };
+    let mut rng = Rng::new(2);
+    let xp = Arc::new(Matrix::randn(np, 16, &mut rng));
+    let oracle_p = RbfOracle::cpu(xp, 0.4);
+    let pp = spsd::uniform_p(np, c, &mut rng);
+    suite.bench(&format!("prototype materialized n={np}"), || {
+        black_box(spsd::prototype(&oracle_p, &pp));
+    });
+    let peak = gauged(|| spsd::prototype(&oracle_p, &pp));
+    println!("    peak extra: {}", fmt_mib(peak));
+    suite.bench(&format!("prototype streamed t={DEFAULT_TILE} n={np}"), || {
+        black_box(spsd::prototype_streamed(&oracle_p, &pp, StreamConfig::tiled(DEFAULT_TILE)));
+    });
+    let peak =
+        gauged(|| spsd::prototype_streamed(&oracle_p, &pp, StreamConfig::tiled(DEFAULT_TILE)));
+    println!("    peak extra: {}", fmt_mib(peak));
+
+    // ---- CUR over a dense matrix ---------------------------------------
+    let (m_cur, n_cur) = if quick { (600, 450) } else { (2000, 1500) };
+    let mut rng = Rng::new(3);
+    let a = Matrix::randn(m_cur, n_cur, &mut rng);
+    let cols = cur::select_uniform(n_cur, 40, &mut rng);
+    let rows = cur::select_uniform(m_cur, 40, &mut rng);
+    suite.bench(&format!("cur_fast materialized {m_cur}x{n_cur}"), || {
+        black_box(cur::cur_fast(&a, &cols, &rows, FastCurConfig::uniform(120, 120), &mut Rng::new(4)));
+    });
+    suite.bench(&format!("cur_fast streamed t={DEFAULT_TILE} {m_cur}x{n_cur}"), || {
+        black_box(cur::cur_fast_streamed(
+            &a,
+            &cols,
+            &rows,
+            FastCurConfig::uniform(120, 120),
+            StreamConfig::tiled(DEFAULT_TILE),
+            &mut Rng::new(4),
+        ));
+    });
+
+    // Quick smoke runs land in a separate file so they never clobber the
+    // full-budget perf trajectory.
+    let path = if quick { "BENCH_stream.quick.json" } else { "BENCH_stream.json" };
+    if let Err(e) = suite.write_json(path) {
+        eprintln!("warn: could not write {path}: {e}");
+    }
+}

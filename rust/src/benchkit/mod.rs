@@ -8,6 +8,8 @@
 //! (EXPERIMENTS.md §Perf). Setting `FASTSPSD_BENCH_QUICK=1` shrinks the
 //! warmup/budget for CI-style smoke runs (`make perf-check`).
 
+pub mod alloc;
+
 use std::time::{Duration, Instant};
 
 /// One benchmark's measured statistics.

@@ -8,7 +8,30 @@
 use super::engine::KernelEngine;
 use crate::linalg::Matrix;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// One-entry memo of the gathered landmark rows `x[cols, :]`: a streamed
+/// build calls `row_block` once per tile with the same `cols`, and without
+/// this the `c x d` gather would be recomputed n/tile_rows times (at
+/// tile_rows=1 that copy rivals the kernel evaluation itself).
+struct LandmarkCache {
+    key: Vec<usize>,
+    rows: Arc<Matrix>,
+}
+
+impl LandmarkCache {
+    fn lookup(slot: &Mutex<Option<LandmarkCache>>, x: &Matrix, cols: &[usize]) -> Arc<Matrix> {
+        let mut guard = slot.lock().unwrap();
+        if let Some(c) = guard.as_ref() {
+            if c.key == cols {
+                return Arc::clone(&c.rows);
+            }
+        }
+        let rows = Arc::new(x.select_rows(cols));
+        *guard = Some(LandmarkCache { key: cols.to_vec(), rows: Arc::clone(&rows) });
+        rows
+    }
+}
 
 /// Blockwise access to a symmetric kernel matrix.
 pub trait KernelOracle: Sync {
@@ -17,6 +40,23 @@ pub trait KernelOracle: Sync {
 
     /// The `K[rows, cols]` block.
     fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix;
+
+    /// Contiguous row-range fast path: `K[r0..r1, cols]`. The default
+    /// builds a row-index `Vec`; implementations override to avoid the
+    /// allocation — this is the call the streaming tiles sit on, so it
+    /// runs once per tile, not once per build.
+    fn row_block(&self, r0: usize, r1: usize, cols: &[usize]) -> Matrix {
+        let rows: Vec<usize> = (r0..r1).collect();
+        self.block(&rows, cols)
+    }
+
+    /// Contiguous full-width rows `K[r0..r1, :]` (the prototype / projection
+    /// sketch tile). Default pays one `0..n` index `Vec`; implementations
+    /// override to serve the rows directly.
+    fn full_rows(&self, r0: usize, r1: usize) -> Matrix {
+        let all: Vec<usize> = (0..self.n()).collect();
+        self.row_block(r0, r1, &all)
+    }
 
     /// Entries served so far (for the #entries accounting).
     fn entries_observed(&self) -> u64;
@@ -27,14 +67,12 @@ pub trait KernelOracle: Sync {
     /// Convenience: full columns `K[:, cols]` (the sketch `C` for a column
     /// selection matrix `P`).
     fn columns(&self, cols: &[usize]) -> Matrix {
-        let all: Vec<usize> = (0..self.n()).collect();
-        self.block(&all, cols)
+        self.row_block(0, self.n(), cols)
     }
 
     /// Convenience: the full matrix (the prototype model's requirement).
     fn full(&self) -> Matrix {
-        let all: Vec<usize> = (0..self.n()).collect();
-        self.block(&all, &all)
+        self.full_rows(0, self.n())
     }
 }
 
@@ -75,6 +113,26 @@ impl KernelOracle for DenseOracle {
         out
     }
 
+    fn row_block(&self, r0: usize, r1: usize, cols: &[usize]) -> Matrix {
+        self.entries
+            .fetch_add(((r1 - r0) * cols.len()) as u64, Ordering::Relaxed);
+        let mut out = Matrix::zeros(r1 - r0, cols.len());
+        for i in r0..r1 {
+            let src = self.k.row(i);
+            let dst = out.row_mut(i - r0);
+            for (j, &c) in cols.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    fn full_rows(&self, r0: usize, r1: usize) -> Matrix {
+        self.entries
+            .fetch_add(((r1 - r0) * self.k.cols()) as u64, Ordering::Relaxed);
+        self.k.block(r0, r1, 0, self.k.cols())
+    }
+
     fn entries_observed(&self) -> u64 {
         self.entries.load(Ordering::Relaxed)
     }
@@ -94,11 +152,12 @@ pub struct RbfOracle {
     pub gamma: f64,
     engine: Arc<KernelEngine>,
     entries: AtomicU64,
+    landmarks: Mutex<Option<LandmarkCache>>,
 }
 
 impl RbfOracle {
     pub fn new(x: Arc<Matrix>, gamma: f64, engine: Arc<KernelEngine>) -> Self {
-        RbfOracle { x, gamma, engine, entries: AtomicU64::new(0) }
+        RbfOracle { x, gamma, engine, entries: AtomicU64::new(0), landmarks: Mutex::new(None) }
     }
 
     /// Build with the pure-rust engine (no PJRT).
@@ -129,6 +188,25 @@ impl KernelOracle for RbfOracle {
         self.engine.rbf_cross(&xr, &xc, self.gamma)
     }
 
+    fn row_block(&self, r0: usize, r1: usize, cols: &[usize]) -> Matrix {
+        self.entries
+            .fetch_add(((r1 - r0) * cols.len()) as u64, Ordering::Relaxed);
+        let xr = self.x.block(r0, r1, 0, self.x.cols());
+        let xc = LandmarkCache::lookup(&self.landmarks, &self.x, cols);
+        self.engine.rbf_cross(&xr, &xc, self.gamma)
+    }
+
+    fn full_rows(&self, r0: usize, r1: usize) -> Matrix {
+        self.entries
+            .fetch_add(((r1 - r0) * self.n()) as u64, Ordering::Relaxed);
+        if r0 == 0 && r1 == self.n() {
+            // same-reference dispatch takes the symmetric Gram path
+            return self.engine.rbf_cross(&self.x, &self.x, self.gamma);
+        }
+        let xr = self.x.block(r0, r1, 0, self.x.cols());
+        self.engine.rbf_cross(&xr, &self.x, self.gamma)
+    }
+
     fn entries_observed(&self) -> u64 {
         self.entries.load(Ordering::Relaxed)
     }
@@ -148,11 +226,20 @@ pub struct PolyOracle {
     pub degree: f64,
     engine: Arc<KernelEngine>,
     entries: AtomicU64,
+    landmarks: Mutex<Option<LandmarkCache>>,
 }
 
 impl PolyOracle {
     pub fn new(x: Arc<Matrix>, gamma: f64, coef0: f64, degree: f64, engine: Arc<KernelEngine>) -> Self {
-        PolyOracle { x, gamma, coef0, degree, engine, entries: AtomicU64::new(0) }
+        PolyOracle {
+            x,
+            gamma,
+            coef0,
+            degree,
+            engine,
+            entries: AtomicU64::new(0),
+            landmarks: Mutex::new(None),
+        }
     }
 
     pub fn cpu(x: Arc<Matrix>, gamma: f64, coef0: f64, degree: f64) -> Self {
@@ -177,6 +264,28 @@ impl KernelOracle for PolyOracle {
         let xc = self.x.select_rows(cols);
         self.engine
             .poly_cross(&xr, &xc, self.gamma, self.coef0, self.degree)
+    }
+
+    fn row_block(&self, r0: usize, r1: usize, cols: &[usize]) -> Matrix {
+        self.entries
+            .fetch_add(((r1 - r0) * cols.len()) as u64, Ordering::Relaxed);
+        let xr = self.x.block(r0, r1, 0, self.x.cols());
+        let xc = LandmarkCache::lookup(&self.landmarks, &self.x, cols);
+        self.engine
+            .poly_cross(&xr, &xc, self.gamma, self.coef0, self.degree)
+    }
+
+    fn full_rows(&self, r0: usize, r1: usize) -> Matrix {
+        self.entries
+            .fetch_add(((r1 - r0) * self.n()) as u64, Ordering::Relaxed);
+        if r0 == 0 && r1 == self.n() {
+            return self
+                .engine
+                .poly_cross(&self.x, &self.x, self.gamma, self.coef0, self.degree);
+        }
+        let xr = self.x.block(r0, r1, 0, self.x.cols());
+        self.engine
+            .poly_cross(&xr, &self.x, self.gamma, self.coef0, self.degree)
     }
 
     fn entries_observed(&self) -> u64 {
@@ -208,6 +317,33 @@ mod tests {
         let c = o.columns(&[0]);
         assert_eq!(c.rows(), 5);
         assert_eq!(o.entries_observed(), 5);
+    }
+
+    #[test]
+    fn row_block_and_full_rows_match_block_access() {
+        let mut rng = crate::util::Rng::new(7);
+        let k = toy_kernel();
+        let o = DenseOracle::new(k.clone());
+        let cols = [0usize, 2, 4];
+        let rows: Vec<usize> = (1..4).collect();
+        assert_eq!(o.row_block(1, 4, &cols).max_abs_diff(&o.block(&rows, &cols)), 0.0);
+        assert_eq!(o.full_rows(2, 5).max_abs_diff(&k.block(2, 5, 0, 5)), 0.0);
+        o.reset_entries();
+        let _ = o.row_block(0, 5, &cols);
+        assert_eq!(o.entries_observed(), 15);
+
+        let x = Arc::new(Matrix::randn(12, 3, &mut rng));
+        let r = RbfOracle::cpu(Arc::clone(&x), 0.6);
+        let all: Vec<usize> = (0..12).collect();
+        let via_block = r.block(&(3..9).collect::<Vec<_>>(), &cols);
+        assert_eq!(r.row_block(3, 9, &cols).max_abs_diff(&via_block), 0.0);
+        let tile = r.full_rows(4, 8);
+        let ref_tile = r.block(&(4..8).collect::<Vec<_>>(), &all);
+        assert!(tile.max_abs_diff(&ref_tile) < 1e-14);
+
+        let p = PolyOracle::cpu(Arc::clone(&x), 0.4, 1.0, 2.0);
+        let via = p.block(&(0..5).collect::<Vec<_>>(), &cols);
+        assert_eq!(p.row_block(0, 5, &cols).max_abs_diff(&via), 0.0);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Request planner: turn an accuracy/budget target into (method, c, s).
+//! Request planner: turn an accuracy/budget target into (method, c, s,
+//! tile_rows).
 //!
 //! This encodes the paper's complexity model as a routing policy — the
 //! coordinator's answer to "I have n points and want 1+ε error against the
@@ -9,12 +10,16 @@
 //! - fast needs `c = O(k/ε)` and `s = O(c√(n/ε))` with `nc + (s−c)²`
 //!   entries (Thm 3 / Remark 4) — linear in n.
 //!
-//! `plan` picks the cheapest method whose predicted entry budget fits, and
-//! clamps against n. Constants are calibrated pragmatically (c = 2k/ε,
-//! matching the paper's near-optimal column selection results).
+//! `plan` picks the cheapest method whose predicted *entry* count fits the
+//! entry budget AND whose predicted *peak working set* fits the memory
+//! budget — streaming the build through the tile pipeline (a `tile_rows`
+//! in the plan) when that is what makes it fit. Constants are calibrated
+//! pragmatically (c = 2k/ε, matching the paper's near-optimal column
+//! selection results).
 
 use super::service::MethodSpec;
 use crate::sketch::SketchKind;
+use crate::stream::DEFAULT_QUEUE_DEPTH;
 
 /// What the caller wants.
 #[derive(Debug, Clone, Copy)]
@@ -28,6 +33,16 @@ pub struct Goal {
     /// max kernel entries the caller can afford to evaluate
     /// (`u64::MAX` = unconstrained)
     pub entry_budget: u64,
+    /// max bytes of peak working memory the build may use
+    /// (`u64::MAX` = unconstrained)
+    pub memory_budget: u64,
+}
+
+impl Goal {
+    /// Goal with both budgets unconstrained.
+    pub fn unbounded(n: usize, k: usize, epsilon: f64) -> Self {
+        Goal { n, k, epsilon, entry_budget: u64::MAX, memory_budget: u64::MAX }
+    }
 }
 
 /// A concrete plan.
@@ -37,6 +52,11 @@ pub struct Plan {
     pub c: usize,
     /// predicted kernel entries observed
     pub predicted_entries: u64,
+    /// Row-tile height the build should stream with (`None` = run the
+    /// materialized path).
+    pub tile_rows: Option<usize>,
+    /// predicted peak working-set bytes at `tile_rows`
+    pub predicted_peak_bytes: u64,
 }
 
 /// Sketch sizes from the paper's theory with pragmatic constants.
@@ -64,6 +84,50 @@ pub fn predicted_entries(n: usize, c: usize, s: usize, method: &MethodSpec) -> u
     }
 }
 
+/// Bytes per stored kernel entry (f64).
+const ENTRY_BYTES: u64 = 8;
+
+/// Tiles simultaneously alive in the pipeline at the default queue depth:
+/// one being produced + queued + one being folded.
+fn live_tiles() -> u64 {
+    (DEFAULT_QUEUE_DEPTH + 2) as u64
+}
+
+/// Predicted peak working-set bytes for a build. `tile_rows = None` is the
+/// materialized path; `Some(t)` streams `t`-row tiles through the
+/// pipeline. The terms are the dominant allocations: the `C` panel (an
+/// output — every method pays it), the sketch-sized intermediates, and
+/// either the full `n x n` kernel (materialized prototype / projection
+/// sketches) or the live tiles.
+pub fn predicted_peak_bytes(
+    n: usize,
+    c: usize,
+    s: usize,
+    method: &MethodSpec,
+    tile_rows: Option<usize>,
+) -> u64 {
+    let (n, c, s) = (n as u64, c as u64, s as u64);
+    let t = tile_rows.map(|t| t as u64);
+    match method {
+        MethodSpec::Nystrom => {
+            let base = n * c + 2 * c * c;
+            ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * c))
+        }
+        MethodSpec::Prototype => match t {
+            // C + K + C† + U
+            None => ENTRY_BYTES * (n * n + 2 * n * c + c * c),
+            // C + C† + U + live tiles of K rows
+            Some(t) => ENTRY_BYTES * (2 * n * c + c * c + live_tiles() * t * n),
+        },
+        MethodSpec::Fast { .. } => {
+            // column-selection accounting (what the planner emits):
+            // C + C[S,:] + S^T C + S^T K S + U
+            let base = n * c + 2 * s * c + s * s + c * c;
+            ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * c))
+        }
+    }
+}
+
 /// Predicted flops: U computation (Table 3 middle column) plus the
 /// downstream O(nc²) eig/solve every method pays. This is where the
 /// paper's "linear vs quadratic in n" separation shows up: at the c each
@@ -80,7 +144,34 @@ pub fn predicted_flops(n: usize, c: usize, s: usize, method: &MethodSpec) -> f64
     }
 }
 
-/// Choose the fastest method whose predicted entry count fits the budget.
+/// Fit a candidate against the memory budget: keep the materialized path
+/// when it fits, otherwise stream (prototype is the method whose floor
+/// streaming actually lowers — `C` dominates the others, so tiling can't
+/// save a build whose output already exceeds the budget). Returns `None`
+/// when no tile height makes it fit.
+fn fit_memory(mut plan: Plan, n: usize, s: usize, memory_budget: u64) -> Option<Plan> {
+    if plan.predicted_peak_bytes <= memory_budget {
+        return Some(plan);
+    }
+    if !matches!(plan.method, MethodSpec::Prototype) {
+        return None;
+    }
+    let (nn, cc) = (n as u64, plan.c as u64);
+    let base = ENTRY_BYTES * (2 * nn * cc + cc * cc);
+    let per_tile_row = ENTRY_BYTES * live_tiles() * nn;
+    if memory_budget < base + per_tile_row {
+        return None; // even one-row tiles overshoot
+    }
+    let t = (((memory_budget - base) / per_tile_row) as usize).clamp(1, n);
+    plan.tile_rows = Some(t);
+    plan.predicted_peak_bytes = predicted_peak_bytes(n, plan.c, s, &plan.method, Some(t));
+    Some(plan)
+}
+
+/// Choose the fastest method whose predicted entry count and peak memory
+/// both fit the budgets. Never panics: an infeasible pair of budgets
+/// degrades to the fewest-entries candidate in its most memory-frugal form
+/// (the caller sees the overshoot in the plan's predicted fields).
 pub fn plan(goal: Goal) -> Plan {
     let n = goal.n.max(2);
     let eps = goal.epsilon.clamp(1e-6, 1.0);
@@ -95,22 +186,17 @@ pub fn plan(goal: Goal) -> Plan {
     // Prototype: small c but n² observation.
     let c_proto = theory_c(goal.k, eps).min(n / 2).max(1);
 
+    let make = |method: MethodSpec, c: usize, s: usize| Plan {
+        method,
+        c,
+        predicted_entries: predicted_entries(n, c, s, &method),
+        tile_rows: None,
+        predicted_peak_bytes: predicted_peak_bytes(n, c, s, &method, None),
+    };
     let mut candidates = [
-        Plan {
-            method: fast,
-            c: c_fast,
-            predicted_entries: predicted_entries(n, c_fast, s_fast, &fast),
-        },
-        Plan {
-            method: MethodSpec::Nystrom,
-            c: c_ny,
-            predicted_entries: predicted_entries(n, c_ny, c_ny, &MethodSpec::Nystrom),
-        },
-        Plan {
-            method: MethodSpec::Prototype,
-            c: c_proto,
-            predicted_entries: predicted_entries(n, c_proto, n, &MethodSpec::Prototype),
-        },
+        make(fast, c_fast, s_fast),
+        make(MethodSpec::Nystrom, c_ny, c_ny),
+        make(MethodSpec::Prototype, c_proto, n),
     ];
     // fastest first
     candidates.sort_by(|a, b| {
@@ -119,16 +205,30 @@ pub fn plan(goal: Goal) -> Plan {
         fa.partial_cmp(&fb).unwrap()
     });
     for cand in candidates {
-        if cand.predicted_entries <= goal.entry_budget {
-            return cand;
+        if cand.predicted_entries > goal.entry_budget {
+            continue;
+        }
+        if let Some(fitted) = fit_memory(cand, n, plan_s(&cand), goal.memory_budget) {
+            return fitted;
         }
     }
-    // nothing fits: return the fewest-entries candidate (caller sees the
-    // overshoot)
-    *candidates
+    // nothing fits both budgets: degrade gracefully to the fewest-entries
+    // candidate, streamed as tightly as its method allows
+    let fallback = *candidates
         .iter()
         .min_by_key(|p| p.predicted_entries)
-        .unwrap()
+        .unwrap();
+    let s = plan_s(&fallback);
+    fit_memory(fallback, n, s, goal.memory_budget).unwrap_or_else(|| {
+        if matches!(fallback.method, MethodSpec::Prototype) {
+            let mut p = fallback;
+            p.tile_rows = Some(1);
+            p.predicted_peak_bytes = predicted_peak_bytes(n, p.c, s, &p.method, Some(1));
+            p
+        } else {
+            fallback
+        }
+    })
 }
 
 fn plan_s(p: &Plan) -> usize {
@@ -148,11 +248,12 @@ mod tests {
         // Theorem 1 / §1.1: under a 1+ε guarantee the fast model is the
         // only linear-time option once n is large enough that Nyström's
         // c = Ω(√(nk/ε)) makes its downstream n·c² quadratic.
-        let p = plan(Goal { n: 100_000_000, k: 5, epsilon: 0.5, entry_budget: u64::MAX });
+        let p = plan(Goal::unbounded(100_000_000, 5, 0.5));
         assert!(matches!(p.method, MethodSpec::Fast { .. }), "{p:?}");
         // and it stays far below n² observation
         let n2 = 100_000_000u64 as f64 * 100_000_000u64 as f64;
         assert!((p.predicted_entries as f64) < n2 / 1e3);
+        assert_eq!(p.tile_rows, None, "no memory pressure, no tiling");
     }
 
     #[test]
@@ -179,18 +280,70 @@ mod tests {
 
     #[test]
     fn tiny_budget_falls_back_to_cheapest() {
-        let p = plan(Goal { n: 10_000, k: 5, epsilon: 0.1, entry_budget: 10 });
+        let p = plan(Goal { n: 10_000, k: 5, epsilon: 0.1, entry_budget: 10, memory_budget: u64::MAX });
         // can't fit anything: returns cheapest (never prototype)
         assert!(!matches!(p.method, MethodSpec::Prototype));
     }
 
     #[test]
     fn small_n_clamps() {
-        let p = plan(Goal { n: 50, k: 10, epsilon: 0.01, entry_budget: u64::MAX });
+        let p = plan(Goal::unbounded(50, 10, 0.01));
         assert!(p.c <= 25);
         if let MethodSpec::Fast { s, .. } = p.method {
             assert!(s <= 50);
         }
+    }
+
+    #[test]
+    fn theory_sizes_clamp_against_tiny_n() {
+        // theory_c/theory_s blow far past n at small n and harsh targets;
+        // plan must clamp c ≤ n/2 and s ≤ n without panicking, for every
+        // method that could be selected.
+        for n in [2usize, 3, 5, 8, 16] {
+            for k in [1usize, 4, 50] {
+                for eps in [1e-6, 0.01, 1.0] {
+                    let p = plan(Goal::unbounded(n, k, eps));
+                    assert!(p.c >= 1 && p.c <= (n.max(2) / 2).max(1), "n={n} k={k} {p:?}");
+                    if let MethodSpec::Fast { s, .. } = p.method {
+                        assert!(s <= n.max(2), "n={n} k={k} s={s}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn entry_budget_crossover_points() {
+        // Sweep the entry budget downward and watch the method cross over:
+        // prototype-class budgets admit everything, then the n²-observing
+        // prototype drops out, then fast, leaving Nyström (fewest entries
+        // at fixed c when its c fits), then nothing fits and the planner
+        // degrades to the fewest-entries candidate.
+        // n large enough that the fast model is flops-fastest (its point)
+        // while Nyström still observes fewer entries at its own c.
+        let (n, k, eps) = (10_000_000usize, 5, 0.05);
+        let c_f = theory_c(k, eps).min(n / 2).max(1);
+        let s_f = theory_s(n, c_f, eps).min(n);
+        let fast_entries = predicted_entries(n, c_f, s_f, &MethodSpec::Fast { s: s_f, kind: SketchKind::Uniform });
+        let c_n = nystrom_c_lower_bound(n, k, eps).min(n / 2).max(1);
+        let ny_entries = predicted_entries(n, c_n, c_n, &MethodSpec::Nystrom);
+        assert!(ny_entries < fast_entries, "test shape: nystrom must be cheaper in entries");
+
+        // budget exactly at fast's requirement: fast is admissible and
+        // (being flops-fastest at this n) chosen
+        let p = plan(Goal { n, k, epsilon: eps, entry_budget: fast_entries, memory_budget: u64::MAX });
+        assert!(matches!(p.method, MethodSpec::Fast { .. }), "{p:?}");
+        assert!(p.predicted_entries <= fast_entries);
+
+        // one entry below fast's requirement: falls through to Nyström
+        let p = plan(Goal { n, k, epsilon: eps, entry_budget: fast_entries - 1, memory_budget: u64::MAX });
+        assert!(matches!(p.method, MethodSpec::Nystrom), "{p:?}");
+
+        // below every method: graceful degradation, never a panic, and the
+        // overshoot is visible to the caller
+        let p = plan(Goal { n, k, epsilon: eps, entry_budget: ny_entries - 1, memory_budget: u64::MAX });
+        assert!(p.predicted_entries > ny_entries - 1);
+        assert!(!matches!(p.method, MethodSpec::Prototype));
     }
 
     #[test]
@@ -201,11 +354,87 @@ mod tests {
             k: 5,
             epsilon: 0.05,
             entry_budget: n * n / 2,
+            memory_budget: u64::MAX,
         });
         assert!(
             !matches!(with_budget.method, MethodSpec::Prototype),
             "n²-observing prototype must not be chosen under an n²/2 budget"
         );
+    }
+
+    #[test]
+    fn memory_budget_tiles_the_prototype() {
+        // Entry budget forces prototype (only it fits nothing else… use an
+        // unconstrained entry budget but a memory budget below n²·8: the
+        // planner may pick any method, but if prototype were materialized
+        // it would blow the budget — verify the fitted form directly.
+        let (n, c) = (4_000usize, 20usize);
+        let mat = predicted_peak_bytes(n, c, 0, &MethodSpec::Prototype, None);
+        let budget = mat / 4;
+        let fitted = fit_memory(
+            Plan {
+                method: MethodSpec::Prototype,
+                c,
+                predicted_entries: predicted_entries(n, c, n, &MethodSpec::Prototype),
+                tile_rows: None,
+                predicted_peak_bytes: mat,
+            },
+            n,
+            0,
+            budget,
+        )
+        .expect("a tile height must fit an n²/4 budget");
+        let t = fitted.tile_rows.expect("must stream");
+        assert!(t >= 1 && t < n);
+        assert!(fitted.predicted_peak_bytes <= budget, "{fitted:?}");
+
+        // exact boundary: a budget equal to the one-row-tile peak must be
+        // accepted with t = 1, not rejected as infeasible
+        let one_row = predicted_peak_bytes(n, c, 0, &MethodSpec::Prototype, Some(1));
+        let fitted = fit_memory(
+            Plan {
+                method: MethodSpec::Prototype,
+                c,
+                predicted_entries: predicted_entries(n, c, n, &MethodSpec::Prototype),
+                tile_rows: None,
+                predicted_peak_bytes: mat,
+            },
+            n,
+            0,
+            one_row,
+        )
+        .expect("budget at the one-row peak is feasible");
+        assert_eq!(fitted.tile_rows, Some(1));
+        assert_eq!(fitted.predicted_peak_bytes, one_row);
+
+        // and end-to-end: a plan under that memory budget never reports a
+        // materialized peak above it when it claims to fit
+        let p = plan(Goal { n, k: 5, epsilon: 0.1, entry_budget: u64::MAX, memory_budget: budget });
+        assert!(p.predicted_peak_bytes <= budget, "{p:?}");
+    }
+
+    #[test]
+    fn infeasible_memory_budget_degrades_without_panic() {
+        // 1-byte memory budget: nothing fits; the planner still returns a
+        // plan (fewest entries, most frugal form) instead of panicking.
+        let p = plan(Goal { n: 5_000, k: 5, epsilon: 0.1, entry_budget: u64::MAX, memory_budget: 1 });
+        assert!(p.predicted_peak_bytes > 1);
+        assert!(!matches!(p.method, MethodSpec::Prototype));
+        // and with both budgets impossible
+        let p = plan(Goal { n: 5_000, k: 5, epsilon: 0.1, entry_budget: 1, memory_budget: 1 });
+        assert!(p.predicted_entries > 1);
+    }
+
+    #[test]
+    fn peak_bytes_monotone_in_tile_rows() {
+        for &t in &[1usize, 8, 64, 512] {
+            let a = predicted_peak_bytes(10_000, 50, 200, &MethodSpec::Prototype, Some(t));
+            let b = predicted_peak_bytes(10_000, 50, 200, &MethodSpec::Prototype, Some(t * 2));
+            assert!(a < b);
+            // streamed prototype beats materialized once tiles are thin
+            let mat = predicted_peak_bytes(10_000, 50, 200, &MethodSpec::Prototype, None);
+            assert!(a < mat);
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::oracle::{KernelOracle, RbfOracle};
 use crate::pool::ThreadPool;
 use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig};
+use crate::stream::StreamConfig;
 use crate::util::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -45,6 +46,10 @@ pub struct ApproxRequest {
     /// downstream top-k eigenpairs to return.
     pub k: usize,
     pub seed: u64,
+    /// `Some(t)`: build through the tile pipeline in `t`-row tiles (the
+    /// planner emits this when the memory budget demands it); `None`: the
+    /// materialized path.
+    pub tile_rows: Option<usize>,
 }
 
 /// Reply for one job.
@@ -142,13 +147,21 @@ fn run_request(
     let n = oracle.n();
     let c = req.c.clamp(1, n);
     let p = spsd::uniform_p(n, c, &mut rng);
+    let stream_cfg = match req.tile_rows {
+        Some(t) => StreamConfig::tiled(t),
+        None => StreamConfig::whole(),
+    };
     let t0 = Instant::now();
     let approx = match req.method {
-        MethodSpec::Nystrom => spsd::nystrom(oracle, &p),
-        MethodSpec::Prototype => spsd::prototype(oracle, &p),
-        MethodSpec::Fast { s, kind } => {
-            spsd::fast(oracle, &p, FastConfig { s, kind, force_p_in_s: true }, &mut rng)
-        }
+        MethodSpec::Nystrom => spsd::nystrom_streamed(oracle, &p, stream_cfg),
+        MethodSpec::Prototype => spsd::prototype_streamed(oracle, &p, stream_cfg),
+        MethodSpec::Fast { s, kind } => spsd::fast_streamed(
+            oracle,
+            &p,
+            FastConfig { s, kind, force_p_in_s: true },
+            stream_cfg,
+            &mut rng,
+        ),
     };
     let (eigvals, _vecs) = approx.eig_k(req.k.max(1));
     Ok(ApproxResponse {
@@ -184,7 +197,14 @@ mod tests {
         ];
         for (i, m) in methods.iter().enumerate() {
             svc.submit(
-                ApproxRequest { id: i as u64, method: *m, c: 8, k: 3, seed: i as u64 },
+                ApproxRequest {
+                    id: i as u64,
+                    method: *m,
+                    c: 8,
+                    k: 3,
+                    seed: i as u64,
+                    tile_rows: None,
+                },
                 tx.clone(),
             );
         }
@@ -219,6 +239,7 @@ mod tests {
                     c: 6,
                     k: 2,
                     seed: i,
+                    tile_rows: None,
                 },
                 tx.clone(),
             );
@@ -228,5 +249,49 @@ mod tests {
         assert_eq!(rx.iter().count() as u64, total);
         assert_eq!(svc.metrics().requests.get(), total);
         assert_eq!(svc.inflight(), 0);
+    }
+
+    #[test]
+    fn streamed_requests_match_materialized_results() {
+        // The same (method, c, seed) served materialized and through the
+        // tile pipeline must agree: bit-identically for the gather-based
+        // fast/nystrom paths, to reduction-reordering tolerance for the
+        // prototype. One worker: the per-request entry delta is read off a
+        // single shared oracle counter, so overlapping builds would
+        // misattribute entries and make the equality assertion flaky.
+        let svc = service(70, 1, 16);
+        let (tx, rx) = mpsc::channel();
+        let methods = [
+            MethodSpec::Nystrom,
+            MethodSpec::Prototype,
+            MethodSpec::Fast { s: 20, kind: SketchKind::Uniform },
+        ];
+        let mut id = 0u64;
+        for m in methods {
+            for tile_rows in [None, Some(13)] {
+                svc.submit(
+                    ApproxRequest { id, method: m, c: 7, k: 4, seed: 42, tile_rows },
+                    tx.clone(),
+                );
+                id += 1;
+            }
+        }
+        svc.drain();
+        drop(tx);
+        let mut resps: Vec<ApproxResponse> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 6);
+        for pair in resps.chunks(2) {
+            let (mat, st) = (&pair[0], &pair[1]);
+            assert_eq!(mat.entries, st.entries, "{}: entry accounting must not change", mat.method);
+            for (a, b) in mat.eigvals.iter().zip(&st.eigvals) {
+                let scale = mat.eigvals[0].abs().max(1e-12);
+                assert!(
+                    (a - b).abs() <= 1e-9 * scale,
+                    "{}: streamed eig {b} vs materialized {a}",
+                    mat.method
+                );
+            }
+        }
     }
 }

@@ -39,7 +39,14 @@ pub fn run(ctx: &Ctx, args: &Args) {
             _ => MethodSpec::Fast { s: 8 * c, kind: SketchKind::Uniform },
         };
         svc.submit(
-            ApproxRequest { id: i as u64, method, c, k: 5, seed: ctx.seed + i as u64 },
+            ApproxRequest {
+                id: i as u64,
+                method,
+                c,
+                k: 5,
+                seed: ctx.seed + i as u64,
+                tile_rows: None,
+            },
             tx.clone(),
         );
     }

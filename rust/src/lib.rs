@@ -11,6 +11,11 @@
 //!   a worker pool, and assembles sketches without materializing `K`.
 //! - [`spsd`] / [`cur`] implement the paper's models (Nyström, prototype,
 //!   fast; CUR with optimal and fast `U`).
+//! - [`stream`] is the tiled producer/consumer pipeline between the oracle
+//!   and the models: row-tiles of `K` flow through fused consumers with a
+//!   bounded double-buffered queue, so builds run with peak extra memory
+//!   `O(tile_rows·c + s²)` instead of materializing `n x c` (or `n x n`)
+//!   panels.
 //! - [`sketch`] implements the five sketching matrices of Lemma 2 / Table 4.
 //! - [`linalg`], [`pool`], [`cli`], [`benchkit`], [`testkit`], [`util`] are
 //!   substrates built from scratch (the image has no tokio/clap/criterion/
@@ -32,5 +37,6 @@ pub mod pool;
 pub mod runtime;
 pub mod sketch;
 pub mod spsd;
+pub mod stream;
 pub mod testkit;
 pub mod util;

@@ -135,6 +135,12 @@ pub fn syrk_tn(a: &Matrix) -> Matrix {
     c
 }
 
+/// `C = A^T A` into a caller-provided (fully overwritten) output — the
+/// zero-allocation form the streaming Gram fold reuses per tile.
+pub fn syrk_tn_into(a: &Matrix, out: &mut Matrix) {
+    symm_driver(a, true, a, true, out, usize::MAX, &|_, _, v| v);
+}
+
 /// `C[i, j] = epi(i, j, (A A^T)[i, j])` over the upper triangle, mirrored.
 /// Used for Gram-shaped kernel blocks (RBF/poly gram, squared distances).
 /// `epi` must be symmetric in (i, j) for the result to be meaningful.
@@ -732,6 +738,17 @@ mod tests {
                     assert_eq!(c[(i, j)].to_bits(), c[(j, i)].to_bits());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn syrk_tn_into_overwrites_dirty_output() {
+        let mut rng = Rng::new(11);
+        for &(k, m) in &[(1usize, 1usize), (9, 5), (17, 13)] {
+            let a = Matrix::randn(k, m, &mut rng);
+            let mut out = Matrix::from_fn(m, m, |_, _| f64::NAN);
+            syrk_tn_into(&a, &mut out);
+            assert!(out.max_abs_diff(&syrk_tn(&a)) == 0.0, "{k}x{m}");
         }
     }
 

@@ -13,8 +13,19 @@ use crate::util::Rng;
 /// Top-k eigenpairs (descending) of symmetric `a` via Lanczos with full
 /// reorthogonalization. Deterministic given `seed`.
 pub fn lanczos_top_k(a: &Matrix, k: usize, seed: u64) -> (Vec<f64>, Matrix) {
-    let n = a.rows();
-    assert_eq!(n, a.cols(), "lanczos needs a square symmetric matrix");
+    assert_eq!(a.rows(), a.cols(), "lanczos needs a square symmetric matrix");
+    lanczos_top_k_op(a.rows(), k, seed, |q| a.matvec(q))
+}
+
+/// Matrix-free Lanczos: top-k eigenpairs of the symmetric operator
+/// `matvec: R^n -> R^n`. This is what the streaming layer uses to run
+/// Lanczos against the implicit `C U C^T` without materializing it.
+pub fn lanczos_top_k_op(
+    n: usize,
+    k: usize,
+    seed: u64,
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+) -> (Vec<f64>, Matrix) {
     let k = k.min(n);
     if k == 0 {
         return (vec![], Matrix::zeros(n, 0));
@@ -35,7 +46,7 @@ pub fn lanczos_top_k(a: &Matrix, k: usize, seed: u64) -> (Vec<f64>, Matrix) {
     let mut actual_m = m;
     for j in 0..m {
         // w = A q_j
-        let mut w = a.matvec(q.row(j));
+        let mut w = matvec(q.row(j));
         // alpha_j = q_j . w
         let aj = dot(q.row(j), &w);
         alpha[j] = aj;

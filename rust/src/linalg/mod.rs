@@ -14,8 +14,8 @@ pub mod sparse;
 pub mod svd;
 
 pub use eig::{eigh, Eigh};
-pub use gemm::{gemm_into, gemm_nt_into, gemm_tn_into, symm_nt, syrk_nt, syrk_tn};
-pub use lanczos::lanczos_top_k;
+pub use gemm::{gemm_into, gemm_nt_into, gemm_tn_into, symm_nt, syrk_nt, syrk_tn, syrk_tn_into};
+pub use lanczos::{lanczos_top_k, lanczos_top_k_op};
 pub use pinv::pinv;
 pub use qr::{qr_thin, QrThin};
 pub use svd::{svd_thin, SvdThin};

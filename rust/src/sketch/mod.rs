@@ -136,6 +136,67 @@ impl SketchOp {
         }
     }
 
+    /// Streaming building block: fold the contribution of input rows
+    /// `[r0, r0 + tile.rows())` into `acc += S[r0..r1, :]^T · tile`, where
+    /// `tile` holds those rows of the streamed matrix. Summed over an
+    /// ordered tile partition of `[0, n)` this reproduces
+    /// [`apply_left`](Self::apply_left) — bit-identically for `Select` and
+    /// `RowHash` (each destination element sees the same additions in the
+    /// same order), and up to reduction reordering for `Dense` / `SrhtOp`
+    /// (the SRHT path evaluates the selected Sylvester-Hadamard rows
+    /// directly, `H[r][i] = (-1)^popcount(r & i)`, instead of a full FWHT).
+    pub fn fold_rows(&self, r0: usize, tile: &Matrix, acc: &mut Matrix) {
+        let r1 = r0 + tile.rows();
+        assert!(r1 <= self.n(), "fold_rows: tile past the end of S");
+        assert_eq!(
+            (acc.rows(), acc.cols()),
+            (self.s(), tile.cols()),
+            "fold_rows: accumulator must be s x tile-width"
+        );
+        match self {
+            SketchOp::Select { indices, scales, .. } => {
+                for (pos, &i) in indices.iter().enumerate() {
+                    if i >= r0 && i < r1 {
+                        let sc = scales[pos];
+                        let src = tile.row(i - r0);
+                        let dst = acc.row_mut(pos);
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += sc * v;
+                        }
+                    }
+                }
+            }
+            SketchOp::RowHash { cols, signs, .. } => {
+                for i in r0..r1 {
+                    let sg = signs[i];
+                    let src = tile.row(i - r0);
+                    let dst = acc.row_mut(cols[i]);
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d += sg * v;
+                    }
+                }
+            }
+            SketchOp::Dense(s_mat) => {
+                let sub = s_mat.block(r0, r1, 0, s_mat.cols());
+                acc.axpy(1.0, &crate::linalg::gemm::gemm_tn(&sub, tile));
+            }
+            SketchOp::SrhtOp { signs, rows, scale, .. } => {
+                // Padded rows (i >= n) are zero, so only real rows fold.
+                for (out_r, &hr) in rows.iter().enumerate() {
+                    let dst = acc.row_mut(out_r);
+                    for i in r0..r1 {
+                        let h = if (hr & i).count_ones() % 2 == 1 { -1.0 } else { 1.0 };
+                        let w = *scale * h * signs[i];
+                        let src = tile.row(i - r0);
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += w * v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// `S^T A S` for square symmetric `A` (n x n). Column selections gather
     /// the `s x s` sub-block directly (no transposes, no dense products);
     /// the projection families apply left twice.
@@ -302,6 +363,41 @@ mod tests {
                 kind.name()
             );
             assert_eq!(sta.rows(), op.s());
+        }
+    }
+
+    #[test]
+    fn fold_rows_over_partition_matches_apply_left() {
+        let mut rng = Rng::new(20);
+        let n = 30;
+        let a = Matrix::randn(n, 4, &mut rng);
+        for kind in [
+            SketchKind::Uniform,
+            SketchKind::Leverage { scaled: false },
+            SketchKind::Gaussian,
+            SketchKind::Srht,
+            SketchKind::CountSketch,
+        ] {
+            let c = Matrix::randn(n, 3, &mut rng);
+            let op = build(kind, n, 9, Some(&c), &mut rng);
+            let direct = op.apply_left(&a);
+            // fold over an uneven partition: 11 + 11 + 8 rows
+            let mut acc = Matrix::zeros(op.s(), 4);
+            let mut r0 = 0;
+            for height in [11usize, 11, 8] {
+                let tile = a.block(r0, r0 + height, 0, 4);
+                op.fold_rows(r0, &tile, &mut acc);
+                r0 += height;
+            }
+            let tol = match kind {
+                SketchKind::Gaussian | SketchKind::Srht => 1e-12 * direct.fro_norm().max(1.0),
+                _ => 0.0, // gather/hash paths are bit-identical
+            };
+            assert!(
+                acc.max_abs_diff(&direct) <= tol,
+                "{}: fold_rows != apply_left",
+                kind.name()
+            );
         }
     }
 

@@ -16,6 +16,10 @@ pub mod shift;
 use crate::coordinator::oracle::KernelOracle;
 use crate::linalg::{gemm, pinv, solve, Matrix};
 use crate::sketch::{self, SketchKind, SketchOp};
+use crate::stream::{
+    CollectConsumer, ConjugateFold, PrototypeUFold, RowGather, SketchFold, StreamConfig,
+    StreamingOracle,
+};
 use crate::util::{Rng, Stopwatch};
 
 /// A low-rank SPSD approximation `K ≈ C U C^T`.
@@ -65,13 +69,56 @@ pub fn uniform_p(n: usize, c: usize, rng: &mut Rng) -> Vec<usize> {
     idx
 }
 
+/// Build `C = K[:, P]` and optionally gather `C[rows, :]` in the same
+/// pass. The whole-tile config takes the direct `columns` path
+/// (bit-identical to the historical materialized build); tiled configs run
+/// the bounded double-buffered pipeline, so peak extra memory beyond `C`
+/// itself is `O(tile_rows · c)`.
+fn build_c_panel(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    stream_cfg: StreamConfig,
+    gather: Option<&[usize]>,
+) -> (Matrix, Option<Matrix>) {
+    let n = oracle.n();
+    if stream_cfg.is_whole(n) {
+        let c = oracle.columns(p_idx);
+        let g = gather.map(|idx| c.select_rows(idx));
+        return (c, g);
+    }
+    let so = StreamingOracle::new(oracle, stream_cfg);
+    let mut collect = CollectConsumer::new(n, p_idx.len());
+    match gather {
+        None => {
+            so.stream_columns(p_idx, &mut [&mut collect]);
+            (collect.into_matrix(), None)
+        }
+        Some(idx) => {
+            let mut g = RowGather::new(idx.to_vec(), p_idx.len());
+            so.stream_columns(p_idx, &mut [&mut collect, &mut g]);
+            (collect.into_matrix(), Some(g.into_matrix()))
+        }
+    }
+}
+
 /// The Nyström method: `U = (P^T C)† = W†`. Observes only the `n x c`
 /// column block.
 pub fn nystrom(oracle: &dyn KernelOracle, p_idx: &[usize]) -> SpsdApprox {
+    nystrom_streamed(oracle, p_idx, StreamConfig::whole())
+}
+
+/// Nyström through the tile pipeline: `C` is collected and `W = C[P, :]`
+/// gathered in one streamed pass. Bit-identical to [`nystrom`] for every
+/// tile size (pure gathers).
+pub fn nystrom_streamed(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    stream_cfg: StreamConfig,
+) -> SpsdApprox {
     let sw = Stopwatch::start();
     let before = oracle.entries_observed();
-    let c = oracle.columns(p_idx);
-    let w = c.select_rows(p_idx); // W = K[P, P], already inside C
+    let (c, w) = build_c_panel(oracle, p_idx, stream_cfg, Some(p_idx));
+    let w = w.expect("gather requested");
     let mut u = pinv(&w);
     u.symmetrize();
     SpsdApprox {
@@ -86,14 +133,36 @@ pub fn nystrom(oracle: &dyn KernelOracle, p_idx: &[usize]) -> SpsdApprox {
 
 /// The prototype model: `U* = C† K (C†)^T`. Observes all n^2 entries.
 pub fn prototype(oracle: &dyn KernelOracle, p_idx: &[usize]) -> SpsdApprox {
+    prototype_streamed(oracle, p_idx, StreamConfig::whole())
+}
+
+/// Prototype model through the tile pipeline: the `n x n` kernel flows
+/// through `U = Σ_t C†[:, t] (K_t (C†)^T)` one row-tile at a time, so peak
+/// extra memory is `O(tile_rows · n + c²)` instead of `O(n²)` — still
+/// observing all `n²` entries (that is the model's defining cost), just
+/// never storing them. Matches [`prototype`] up to reduction reordering
+/// (≤1e-12 relative).
+pub fn prototype_streamed(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    stream_cfg: StreamConfig,
+) -> SpsdApprox {
     let sw = Stopwatch::start();
     let before = oracle.entries_observed();
-    let c = oracle.columns(p_idx);
-    let k = oracle.full();
+    let n = oracle.n();
+    let (c, _) = build_c_panel(oracle, p_idx, stream_cfg, None);
     let cp = pinv(&c); // c x n
-    // (C† K)(C†)^T is symmetric (K is): triangular product + mirror gives
-    // an exactly symmetric U at ~half the flops of the full gemm.
-    let u = gemm::symm_nt(&cp.matmul(&k), &cp);
+    let u = if stream_cfg.is_whole(n) {
+        let k = oracle.full();
+        // (C† K)(C†)^T is symmetric (K is): triangular product + mirror
+        // gives an exactly symmetric U at ~half the flops of the full gemm.
+        gemm::symm_nt(&cp.matmul(&k), &cp)
+    } else {
+        let so = StreamingOracle::new(oracle, stream_cfg);
+        let mut fold = PrototypeUFold::new(&cp);
+        so.stream_full(&mut [&mut fold]);
+        fold.into_matrix()
+    };
     SpsdApprox {
         c,
         u,
@@ -135,33 +204,74 @@ pub fn fast(
     cfg: FastConfig,
     rng: &mut Rng,
 ) -> SpsdApprox {
+    fast_streamed(oracle, p_idx, cfg, StreamConfig::whole(), rng)
+}
+
+/// The fast model through the tile pipeline. For column-selection sketches
+/// one streamed pass over `K[:, P]` collects `C` and gathers `C[S, :]`
+/// (everything `S^T C` and `S^T K S` need besides the `(s-c)²` fresh
+/// oracle block), so peak extra memory beyond the `C` output is
+/// `O(tile_rows · c + s²)`. Projection sketches fold `S^T C` during the
+/// `C` pass and `S^T K S` over full-K row tiles — still observing `n²`
+/// entries (Table 4) but never storing them.
+///
+/// With a whole-tile config this *is* the materialized path ([`fast`]
+/// delegates here); selection-sketch results are bit-identical across tile
+/// sizes, projection sketches match up to reduction reordering.
+pub fn fast_streamed(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    cfg: FastConfig,
+    stream_cfg: StreamConfig,
+    rng: &mut Rng,
+) -> SpsdApprox {
     let sw = Stopwatch::start();
     let before = oracle.entries_observed();
     let n = oracle.n();
-    let c_mat = oracle.columns(p_idx);
 
-    let (stc, sks) = match cfg.kind {
-        SketchKind::Uniform | SketchKind::Leverage { .. } => {
-            // Column-selection S: assemble S^T K S from rows of C we already
-            // have plus one (s'-c) x (s'-c) oracle block.
-            let op = build_selection_sketch(&c_mat, p_idx, cfg, n, rng);
-            let (indices, scales) = match &op {
-                SketchOp::Select { indices, scales, .. } => (indices.clone(), scales.clone()),
-                _ => unreachable!(),
-            };
-            let stc = op.apply_left(&c_mat); // s x c
-            let sks = assemble_sks(oracle, &c_mat, p_idx, &indices, &scales);
-            (stc, sks)
+    let (c_mat, stc, sks) = match cfg.kind {
+        SketchKind::Uniform => {
+            // S doesn't depend on C: draw it up front so C[S, :] is
+            // gathered in the same pass that builds C.
+            let op = build_selection_sketch(None, p_idx, cfg, n, rng);
+            let (indices, scales) = select_parts(&op);
+            let (c_mat, rows_s) = build_c_panel(oracle, p_idx, stream_cfg, Some(&indices));
+            let rows_s = rows_s.expect("gather requested");
+            let stc = scale_rows(&rows_s, &scales);
+            let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+            (c_mat, stc, sks)
+        }
+        SketchKind::Leverage { .. } => {
+            // Leverage scores need all of C: one pass builds it, then S is
+            // drawn and its rows gathered from the in-memory panel.
+            let (c_mat, _) = build_c_panel(oracle, p_idx, stream_cfg, None);
+            let op = build_selection_sketch(Some(&c_mat), p_idx, cfg, n, rng);
+            let (indices, scales) = select_parts(&op);
+            let rows_s = c_mat.select_rows(&indices);
+            let stc = scale_rows(&rows_s, &scales);
+            let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+            (c_mat, stc, sks)
         }
         _ => {
-            // Projection sketches need the full K (Table 4 — theoretical
-            // interest / benchmarking only).
-            let op = sketch::build(cfg.kind, n, cfg.s, Some(&c_mat), rng);
-            let k = oracle.full();
-            let stc = op.apply_left(&c_mat);
-            let mut sks = op.conjugate(&k);
-            sks.symmetrize();
-            (stc, sks)
+            // Projection sketches need every entry of K (Table 4 —
+            // theoretical interest / benchmarking only).
+            let op = sketch::build(cfg.kind, n, cfg.s, None, rng);
+            if stream_cfg.is_whole(n) {
+                let c_mat = oracle.columns(p_idx);
+                let k = oracle.full();
+                let stc = op.apply_left(&c_mat);
+                let mut sks = op.conjugate(&k);
+                sks.symmetrize();
+                (c_mat, stc, sks)
+            } else {
+                let so = StreamingOracle::new(oracle, stream_cfg);
+                let mut collect = CollectConsumer::new(n, p_idx.len());
+                let mut stc_fold = SketchFold::new(&op, p_idx.len());
+                so.stream_columns(p_idx, &mut [&mut collect, &mut stc_fold]);
+                let mut sks_fold = ConjugateFold::new(&op);
+                so.stream_full(&mut [&mut sks_fold]);
+                (collect.into_matrix(), stc_fold.into_matrix(), sks_fold.into_matrix())
+            }
         }
     };
 
@@ -178,9 +288,33 @@ pub fn fast(
     }
 }
 
+/// Clone out the index/scale arrays of a column-selection sketch.
+fn select_parts(op: &SketchOp) -> (Vec<usize>, Vec<f64>) {
+    match op {
+        SketchOp::Select { indices, scales, .. } => (indices.clone(), scales.clone()),
+        _ => unreachable!("selection sketch expected"),
+    }
+}
+
+/// `diag(scales) · rows` — the `S^T C` of a column-selection sketch given
+/// the already-gathered rows `C[S, :]`. Matches `SketchOp::apply_left`
+/// bit-for-bit (same gather, same in-place scaling).
+fn scale_rows(rows_s: &Matrix, scales: &[f64]) -> Matrix {
+    let mut out = rows_s.clone();
+    for (r, &sc) in scales.iter().enumerate() {
+        if sc != 1.0 {
+            for v in out.row_mut(r) {
+                *v *= sc;
+            }
+        }
+    }
+    out
+}
+
 /// Build the column-selection S for the fast model, honoring `P ⊂ S`.
+/// `c_mat` is only consulted for leverage-score sampling.
 fn build_selection_sketch(
-    c_mat: &Matrix,
+    c_mat: Option<&Matrix>,
     p_idx: &[usize],
     cfg: FastConfig,
     n: usize,
@@ -194,7 +328,7 @@ fn build_selection_sketch(
             sketch::uniform(n, extra.max(1), false, rng)
         }
         SketchKind::Leverage { scaled } => {
-            let scores = sketch::leverage_scores(c_mat);
+            let scores = sketch::leverage_scores(c_mat.expect("leverage sampling needs C"));
             sketch::leverage(&scores, extra.max(1), scaled, rng)
         }
         _ => unreachable!(),
@@ -207,35 +341,39 @@ fn build_selection_sketch(
 }
 
 /// `S^T K S` for a column-selection S over index set `indices`, reusing the
-/// rows of C for every (i, j) pair where j ∈ P: `K[i, p_j] = C[i, j]`.
-/// Only the `(S \ P) x (S \ P)` block touches the oracle.
+/// gathered rows `c_s = C[S, :]` for every (i, j) pair where j ∈ P:
+/// `K[s_i, p_j] = C[s_i, j] = c_s[i, j]`. Only the `(S \ P) x (S \ P)`
+/// block touches the oracle — and only the `s x c` gather (not the full
+/// `n x c` panel) is needed here, which is what lets the streamed build
+/// drop `C` tiles as soon as they are folded.
 fn assemble_sks(
     oracle: &dyn KernelOracle,
-    c_mat: &Matrix,
+    c_s: &Matrix,
     p_idx: &[usize],
     indices: &[usize],
     scales: &[f64],
 ) -> Matrix {
     let s = indices.len();
+    debug_assert_eq!((c_s.rows(), c_s.cols()), (s, p_idx.len()));
     // position of each p in the C columns
     let col_of: std::collections::HashMap<usize, usize> =
         p_idx.iter().enumerate().map(|(j, &p)| (p, j)).collect();
     let mut out = Matrix::zeros(s, s);
-    // rows/cols of S covered by C: K[i, p] = C[i, col_of(p)]
+    // rows/cols of S covered by C: K[s_r, p] = c_s[r, col_of(p)]
     let in_p: Vec<Option<usize>> = indices.iter().map(|i| col_of.get(i).copied()).collect();
     let fresh: Vec<usize> = (0..s).filter(|&j| in_p[j].is_none()).collect();
-    // (a) columns in P (and by symmetry rows in P) come from C
-    for (r, &i) in indices.iter().enumerate() {
+    // (a) columns in P (and by symmetry rows in P) come from the gather
+    for r in 0..s {
         for (cc, &jpos) in in_p.iter().enumerate() {
             if let Some(cj) = jpos {
-                out[(r, cc)] = c_mat[(i, cj)];
+                out[(r, cc)] = c_s[(r, cj)];
             }
         }
     }
     for (r, &rpos) in in_p.iter().enumerate() {
         if let Some(cr) = rpos {
-            for (cc, &j) in indices.iter().enumerate() {
-                out[(r, cc)] = c_mat[(j, cr)];
+            for cc in 0..s {
+                out[(r, cc)] = c_s[(cc, cr)];
             }
         }
     }
@@ -426,6 +564,59 @@ mod tests {
             let err = a.rel_fro_error(o.inner());
             assert!(err < 1e-8, "{}: err {err}", kind.name());
             assert!(a.entries_observed >= (n * n) as u64, "{} needs full K", kind.name());
+        }
+    }
+
+    #[test]
+    fn streamed_builds_match_materialized_on_dense_oracle() {
+        // Gather-based paths (uniform/leverage fast, nystrom) are
+        // bit-identical to the materialized build for every tile size;
+        // prototype matches up to reduction reordering.
+        let n = 53; // deliberately not divisible by the tile sizes
+        let o = spsd_oracle(n, 9, 20);
+        let mut rng = Rng::new(21);
+        let p = uniform_p(n, 8, &mut rng);
+        for tile in [1usize, 7, 16, n] {
+            let cfgs = [FastConfig::uniform(20), FastConfig::leverage(20)];
+            for cfg in cfgs {
+                let mut r1 = Rng::new(99);
+                let mut r2 = Rng::new(99);
+                let a = fast(&o, &p, cfg, &mut r1);
+                let b = fast_streamed(&o, &p, cfg, StreamConfig::tiled(tile), &mut r2);
+                assert_eq!(a.c.max_abs_diff(&b.c), 0.0, "{} C tile={tile}", a.method);
+                assert_eq!(a.u.max_abs_diff(&b.u), 0.0, "{} U tile={tile}", a.method);
+                assert_eq!(a.entries_observed, b.entries_observed, "{} entries", a.method);
+            }
+            let a = nystrom(&o, &p);
+            let b = nystrom_streamed(&o, &p, StreamConfig::tiled(tile));
+            assert_eq!(a.c.max_abs_diff(&b.c), 0.0);
+            assert_eq!(a.u.max_abs_diff(&b.u), 0.0);
+
+            let a = prototype(&o, &p);
+            let b = prototype_streamed(&o, &p, StreamConfig::tiled(tile));
+            assert_eq!(a.c.max_abs_diff(&b.c), 0.0);
+            let scale = a.u.fro_norm().max(1e-12);
+            assert!(
+                b.u.sub(&a.u).fro_norm() / scale < 1e-12,
+                "prototype U tile={tile}"
+            );
+            assert_eq!(a.entries_observed, b.entries_observed);
+        }
+    }
+
+    #[test]
+    fn streamed_projection_sketches_match_within_tolerance() {
+        let n = 34;
+        let o = spsd_oracle(n, 5, 22);
+        let p = uniform_p(n, 7, &mut Rng::new(23));
+        for kind in [SketchKind::Gaussian, SketchKind::CountSketch, SketchKind::Srht] {
+            let cfg = FastConfig { s: 18, kind, force_p_in_s: false };
+            let a = fast(&o, &p, cfg, &mut Rng::new(55));
+            let b = fast_streamed(&o, &p, cfg, StreamConfig::tiled(9), &mut Rng::new(55));
+            let k = o.inner();
+            let diff = a.materialize().sub(&b.materialize()).fro_norm() / k.fro_norm();
+            assert!(diff < 1e-10, "{}: {diff}", kind.name());
+            assert!(b.entries_observed >= (n * n) as u64, "{} must observe n²", kind.name());
         }
     }
 

@@ -1,0 +1,438 @@
+//! Composable tile consumers: each folds one streamed row-tile into a
+//! bounded accumulator as it arrives.
+//!
+//! Gather-style consumers ([`CollectConsumer`], [`RowGather`],
+//! [`ColSubsetCollect`], and [`SketchFold`] over column-selection /
+//! CountSketch ops) are bit-identical to the materialized path because
+//! tiles arrive in ascending row order and every destination element is
+//! touched by the same additions in the same order. Accumulation-style
+//! consumers ([`GramFold`], [`PrototypeUFold`], [`ConjugateFold`], dense /
+//! SRHT [`SketchFold`]) regroup a sum over `n` by tile boundaries, so they
+//! match the materialized path only up to reduction reordering (≤1e-12
+//! relative — asserted by `tests/stream_equiv.rs`).
+
+use crate::linalg::{gemm, Matrix};
+use crate::sketch::SketchOp;
+
+/// Folds streamed row-tiles. `consume` is called once per tile, in
+/// ascending `r0` order, with `tile.rows()` rows starting at virtual row
+/// `r0`.
+pub trait TileConsumer {
+    fn consume(&mut self, r0: usize, tile: &Matrix);
+}
+
+/// Reassembles the streamed matrix (used when the full panel *is* the
+/// output, e.g. the `C` of `C U C^T`).
+pub struct CollectConsumer {
+    out: Matrix,
+}
+
+impl CollectConsumer {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        CollectConsumer { out: Matrix::zeros(rows, cols) }
+    }
+
+    pub fn into_matrix(self) -> Matrix {
+        self.out
+    }
+}
+
+impl TileConsumer for CollectConsumer {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        for r in 0..tile.rows() {
+            self.out.row_mut(r0 + r).copy_from_slice(tile.row(r));
+        }
+    }
+}
+
+/// Gathers the rows at `indices` (in the order given, duplicates allowed)
+/// into an `indices.len() x width` matrix: `out[j, :] = stream[indices[j],
+/// cols]`. With `cols = None` the full tile width is kept. This is how the
+/// streamed builds extract `W = C[P, :]` and `C[S, :]` without a second
+/// pass.
+pub struct RowGather {
+    indices: Vec<usize>,
+    cols: Option<Vec<usize>>,
+    out: Matrix,
+}
+
+impl RowGather {
+    pub fn new(indices: Vec<usize>, width: usize) -> Self {
+        let out = Matrix::zeros(indices.len(), width);
+        RowGather { indices, cols: None, out }
+    }
+
+    /// Gather only the given columns of each selected row.
+    pub fn with_cols(indices: Vec<usize>, cols: Vec<usize>) -> Self {
+        let out = Matrix::zeros(indices.len(), cols.len());
+        RowGather { indices, cols: Some(cols), out }
+    }
+
+    pub fn into_matrix(self) -> Matrix {
+        self.out
+    }
+}
+
+impl TileConsumer for RowGather {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let r1 = r0 + tile.rows();
+        for (j, &i) in self.indices.iter().enumerate() {
+            if i >= r0 && i < r1 {
+                let src = tile.row(i - r0);
+                match &self.cols {
+                    None => self.out.row_mut(j).copy_from_slice(src),
+                    Some(cols) => {
+                        let dst = self.out.row_mut(j);
+                        for (d, &cc) in dst.iter_mut().zip(cols.iter()) {
+                            *d = src[cc];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Collects a column subset of the stream: `out[:, j] = stream[:,
+/// cols[j]]` (the `C = A[:, P_C]` of a streamed CUR build over full-width
+/// tiles).
+pub struct ColSubsetCollect {
+    cols: Vec<usize>,
+    out: Matrix,
+}
+
+impl ColSubsetCollect {
+    pub fn new(rows: usize, cols: Vec<usize>) -> Self {
+        let out = Matrix::zeros(rows, cols.len());
+        ColSubsetCollect { cols, out }
+    }
+
+    pub fn into_matrix(self) -> Matrix {
+        self.out
+    }
+}
+
+impl TileConsumer for ColSubsetCollect {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        for r in 0..tile.rows() {
+            let src = tile.row(r);
+            let dst = self.out.row_mut(r0 + r);
+            for (d, &cc) in dst.iter_mut().zip(self.cols.iter()) {
+                *d = src[cc];
+            }
+        }
+    }
+}
+
+/// Fused sketch application: accumulates `S^T A` tile by tile via
+/// [`SketchOp::fold_rows`] — row gather for column selection, signed
+/// hash-accumulate for CountSketch, direct Sylvester-Hadamard rows for
+/// SRHT, `gemm_tn` for Gaussian. Peak memory `O(s · width)` regardless of
+/// `n`.
+pub struct SketchFold<'a> {
+    op: &'a SketchOp,
+    acc: Matrix,
+    /// Persistent `s x width` scratch for the Gaussian (`Dense`) fold, so
+    /// the hot path runs `gemm_tn_into` with zero per-tile output
+    /// allocation. Empty for the other families.
+    scratch: Matrix,
+}
+
+impl<'a> SketchFold<'a> {
+    pub fn new(op: &'a SketchOp, width: usize) -> Self {
+        let scratch = match op {
+            SketchOp::Dense(_) => Matrix::zeros(op.s(), width),
+            _ => Matrix::zeros(0, 0),
+        };
+        SketchFold { op, acc: Matrix::zeros(op.s(), width), scratch }
+    }
+
+    /// The accumulated `S^T A`.
+    pub fn into_matrix(self) -> Matrix {
+        self.acc
+    }
+}
+
+impl TileConsumer for SketchFold<'_> {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        if let SketchOp::Dense(s_mat) = self.op {
+            // acc += S[r0..r1, :]^T · tile (same product as fold_rows's
+            // Dense branch, through the reused scratch)
+            let sub = s_mat.block(r0, r0 + tile.rows(), 0, s_mat.cols());
+            gemm::gemm_tn_into(&sub, tile, &mut self.scratch);
+            self.acc.axpy(1.0, &self.scratch);
+        } else {
+            self.op.fold_rows(r0, tile, &mut self.acc);
+        }
+    }
+}
+
+/// Gram accumulation `A^T A = Σ_t tile_t^T tile_t` via per-tile `syrk_tn`
+/// into a reused scratch — exactly symmetric output, `O(width²)` memory.
+pub struct GramFold {
+    acc: Matrix,
+    scratch: Matrix,
+}
+
+impl GramFold {
+    pub fn new(width: usize) -> Self {
+        GramFold { acc: Matrix::zeros(width, width), scratch: Matrix::zeros(width, width) }
+    }
+
+    pub fn into_matrix(self) -> Matrix {
+        self.acc
+    }
+}
+
+impl TileConsumer for GramFold {
+    fn consume(&mut self, _r0: usize, tile: &Matrix) {
+        gemm::syrk_tn_into(tile, &mut self.scratch);
+        self.acc.axpy(1.0, &self.scratch);
+    }
+}
+
+/// Matvec fold `A^T x`: each tile contributes `tile^T x[r0..r1]`. The
+/// first pass of the implicit `C U C^T` matvec.
+pub struct MatvecFold<'a> {
+    x: &'a [f64],
+    acc: Vec<f64>,
+}
+
+impl<'a> MatvecFold<'a> {
+    pub fn new(x: &'a [f64], width: usize) -> Self {
+        MatvecFold { x, acc: vec![0.0; width] }
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.acc
+    }
+}
+
+impl TileConsumer for MatvecFold<'_> {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let part = tile.tr_matvec(&self.x[r0..r0 + tile.rows()]);
+        for (a, p) in self.acc.iter_mut().zip(part) {
+            *a += p;
+        }
+    }
+}
+
+/// Prototype-model U fold over full-K row tiles:
+/// `U = C† K (C†)^T = Σ_t C†[:, t-rows] · (K_t · (C†)^T)`, so the `n x n`
+/// kernel is never stored — peak extra memory `O(tile_rows · n + c²)`.
+pub struct PrototypeUFold<'a> {
+    /// `C†`, c x n.
+    cp: &'a Matrix,
+    acc: Matrix,
+    /// `tile_rows x c` scratch for `K_t (C†)^T`, reallocated only when the
+    /// tile height changes (once, at the ragged last tile).
+    tmp: Matrix,
+    /// `c x c` scratch for the per-tile product.
+    prod: Matrix,
+}
+
+impl<'a> PrototypeUFold<'a> {
+    pub fn new(cp: &'a Matrix) -> Self {
+        let c = cp.rows();
+        PrototypeUFold {
+            cp,
+            acc: Matrix::zeros(c, c),
+            tmp: Matrix::zeros(0, c),
+            prod: Matrix::zeros(c, c),
+        }
+    }
+
+    /// The accumulated `C† K (C†)^T` (symmetrized — tile grouping breaks
+    /// exact symmetry at the last bit).
+    pub fn into_matrix(self) -> Matrix {
+        let mut u = self.acc;
+        u.symmetrize();
+        u
+    }
+}
+
+impl TileConsumer for PrototypeUFold<'_> {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let t = tile.rows();
+        let c = self.cp.rows();
+        if self.tmp.rows() != t {
+            self.tmp = Matrix::zeros(t, c);
+        }
+        // tmp = K_t (C†)^T : (t x n)·(n x c) — cp is stored c x n, so this
+        // is a plain nt-product into the reused scratch.
+        gemm::gemm_nt_into(tile, self.cp, &mut self.tmp);
+        // acc += C†[:, r0..r1] · tmp : (c x t)·(t x c)
+        let cp_block = self.cp.block(0, c, r0, r0 + t);
+        gemm::gemm_into(&cp_block, &self.tmp, &mut self.prod);
+        self.acc.axpy(1.0, &self.prod);
+    }
+}
+
+/// Streamed `S^T K S` for projection sketches over full-K row tiles:
+/// each tile contributes `S[r0..r1, :]^T · (K_t S)` with
+/// `K_t S = (S^T K_t^T)^T`, so the projection families observe their `n²`
+/// entries (Table 4) without ever storing them — peak extra memory
+/// `O(tile_rows · (n + s) + s²)`.
+pub struct ConjugateFold<'a> {
+    op: &'a SketchOp,
+    acc: Matrix,
+}
+
+impl<'a> ConjugateFold<'a> {
+    pub fn new(op: &'a SketchOp) -> Self {
+        let s = op.s();
+        ConjugateFold { op, acc: Matrix::zeros(s, s) }
+    }
+
+    /// The accumulated `S^T K S` (symmetrized).
+    pub fn into_matrix(self) -> Matrix {
+        let mut m = self.acc;
+        m.symmetrize();
+        m
+    }
+}
+
+impl TileConsumer for ConjugateFold<'_> {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let kts = self.op.apply_left(&tile.transpose()).transpose(); // t x s
+        self.op.fold_rows(r0, &kts, &mut self.acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{self, SketchKind};
+    use crate::stream::{run_pipeline, MatrixSource};
+    use crate::util::Rng;
+
+    fn stream_all(a: &Matrix, tile: usize, consumers: &mut [&mut dyn TileConsumer]) {
+        let src = MatrixSource::new(a);
+        run_pipeline(&src, tile, 2, consumers);
+    }
+
+    #[test]
+    fn row_gather_matches_select_rows() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(23, 5, &mut rng);
+        let idx = vec![0usize, 7, 7, 19, 22];
+        for tile in [1usize, 4, 23] {
+            let mut g = RowGather::new(idx.clone(), 5);
+            stream_all(&a, tile, &mut [&mut g]);
+            assert_eq!(g.into_matrix().max_abs_diff(&a.select_rows(&idx)), 0.0);
+        }
+        let mut g = RowGather::with_cols(vec![3, 11], vec![1, 4]);
+        stream_all(&a, 6, &mut [&mut g]);
+        let got = g.into_matrix();
+        assert_eq!(got[(0, 0)], a[(3, 1)]);
+        assert_eq!(got[(1, 1)], a[(11, 4)]);
+    }
+
+    #[test]
+    fn col_subset_collect_matches_select_cols() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(17, 9, &mut rng);
+        let cols = vec![0usize, 2, 8];
+        let mut c = ColSubsetCollect::new(17, cols.clone());
+        stream_all(&a, 5, &mut [&mut c]);
+        assert_eq!(c.into_matrix().max_abs_diff(&a.select_cols(&cols)), 0.0);
+    }
+
+    #[test]
+    fn sketch_fold_matches_apply_left_all_families() {
+        let mut rng = Rng::new(2);
+        let n = 40;
+        let a = Matrix::randn(n, 6, &mut rng);
+        for kind in [
+            SketchKind::Uniform,
+            SketchKind::Leverage { scaled: true },
+            SketchKind::Gaussian,
+            SketchKind::Srht,
+            SketchKind::CountSketch,
+        ] {
+            let basis = Matrix::randn(n, 4, &mut rng);
+            let op = sketch::build(kind, n, 12, Some(&basis), &mut rng);
+            let direct = op.apply_left(&a);
+            for tile in [1usize, 7, 40] {
+                let mut fold = SketchFold::new(&op, 6);
+                stream_all(&a, tile, &mut [&mut fold]);
+                let folded = fold.into_matrix();
+                let scale = direct.fro_norm().max(1.0);
+                assert!(
+                    folded.max_abs_diff(&direct) < 1e-12 * scale,
+                    "{} tile={tile}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gram_fold_matches_syrk_tn() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(31, 7, &mut rng);
+        let direct = gemm::syrk_tn(&a);
+        for tile in [1usize, 8, 31] {
+            let mut fold = GramFold::new(7);
+            stream_all(&a, tile, &mut [&mut fold]);
+            let g = fold.into_matrix();
+            assert!(g.max_abs_diff(&direct) < 1e-12 * direct.fro_norm().max(1.0));
+            assert_eq!(g.max_abs_diff(&g.transpose()), 0.0, "exactly symmetric");
+        }
+    }
+
+    #[test]
+    fn matvec_fold_matches_tr_matvec() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(26, 5, &mut rng);
+        let x: Vec<f64> = (0..26).map(|i| (i as f64 * 0.3).sin()).collect();
+        let direct = a.tr_matvec(&x);
+        let mut fold = MatvecFold::new(&x, 5);
+        stream_all(&a, 9, &mut [&mut fold]);
+        let got = fold.into_vec();
+        for (g, d) in got.iter().zip(&direct) {
+            assert!((g - d).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn conjugate_fold_matches_dense_conjugate() {
+        let mut rng = Rng::new(5);
+        let g = Matrix::randn(24, 24, &mut rng);
+        let k = g.matmul_tr(&g);
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
+            let op = sketch::build(kind, 24, 10, None, &mut rng);
+            let mut direct = op.conjugate(&k);
+            direct.symmetrize();
+            for tile in [5usize, 24] {
+                let mut fold = ConjugateFold::new(&op);
+                stream_all(&k, tile, &mut [&mut fold]);
+                let got = fold.into_matrix();
+                assert!(
+                    got.max_abs_diff(&direct) < 1e-11 * direct.fro_norm().max(1.0),
+                    "{} tile={tile}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prototype_fold_matches_dense_chain() {
+        let mut rng = Rng::new(6);
+        let g = Matrix::randn(30, 30, &mut rng);
+        let k = g.matmul_tr(&g);
+        let c = k.select_cols(&[1, 5, 9, 20]);
+        let cp = crate::linalg::pinv(&c);
+        let direct = gemm::symm_nt(&cp.matmul(&k), &cp);
+        for tile in [4usize, 30] {
+            let mut fold = PrototypeUFold::new(&cp);
+            stream_all(&k, tile, &mut [&mut fold]);
+            let u = fold.into_matrix();
+            assert!(
+                u.max_abs_diff(&direct) < 1e-11 * direct.fro_norm().max(1.0),
+                "tile={tile}"
+            );
+        }
+    }
+}

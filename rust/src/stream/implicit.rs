@@ -1,0 +1,186 @@
+//! Streaming operations against the *implicit* approximation `C U C^T`:
+//! matvec and top-k Lanczos that never hold `C` (let alone `C U C^T`) in
+//! memory — `C` is re-streamed from its [`TileSource`] on every pass.
+//!
+//! This trades kernel recomputation for memory: each matvec re-observes
+//! the `n x c` panel (the oracle's entry counter keeps charging for it),
+//! which is the right trade exactly when `C` does not fit next to the rest
+//! of the workload. When `C` is resident, use
+//! [`SpsdApprox::eig_k`](crate::spsd::SpsdApprox::eig_k) instead.
+
+use super::{run_pipeline, GramFold, MatvecFold, StreamConfig, TileConsumer, TileSource};
+use crate::linalg::{eigh, lanczos, solve, Matrix};
+
+/// Second-pass consumer: `y[r0..r1] = tile · z`.
+struct OutMatvec {
+    z: Vec<f64>,
+    y: Vec<f64>,
+}
+
+impl TileConsumer for OutMatvec {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let part = tile.matvec(&self.z);
+        self.y[r0..r0 + tile.rows()].copy_from_slice(&part);
+    }
+}
+
+/// `y = C U C^T x` in two streaming passes over `src` (the `C` panel):
+/// `t = C^T x` (fold), `z = U t`, `y = C z` (emit). Peak extra memory
+/// `O(tile_rows · c + c²)`.
+pub fn matvec_cuc(src: &dyn TileSource, u: &Matrix, x: &[f64], cfg: StreamConfig) -> Vec<f64> {
+    let n = src.rows();
+    let c = src.cols();
+    assert_eq!(x.len(), n, "matvec_cuc: x must have n entries");
+    assert_eq!((u.rows(), u.cols()), (c, c), "matvec_cuc: U must be c x c");
+    let mut fold = MatvecFold::new(x, c);
+    run_pipeline(src, cfg.tile_rows, cfg.queue_depth, &mut [&mut fold]);
+    let z = u.matvec(&fold.into_vec());
+    let mut out = OutMatvec { z, y: vec![0.0; n] };
+    run_pipeline(src, cfg.tile_rows, cfg.queue_depth, &mut [&mut out]);
+    out.y
+}
+
+/// Solve `(C U C^T + alpha I) w = y` against the implicit approximation
+/// (the streamed form of Lemma 11 / `woodbury_solve`): one pass over `C`
+/// folds the Gram `C^T C` ([`GramFold`]) and `C^T y` ([`MatvecFold`])
+/// together, the Woodbury inner system `alpha I + G^T (C^T C) G` (with
+/// `U = G G^T`) is solved at `c x c` scale, and a second pass emits
+/// `C (G z)`. Peak extra memory `O(tile_rows · c + c²)` — `C` is never
+/// resident.
+pub fn solve_regularized(
+    src: &dyn TileSource,
+    u: &Matrix,
+    alpha: f64,
+    y: &[f64],
+    cfg: StreamConfig,
+) -> Vec<f64> {
+    let n = src.rows();
+    let c = src.cols();
+    assert!(alpha > 0.0, "alpha must be positive");
+    assert_eq!(y.len(), n, "solve_regularized: y must have n entries");
+    assert_eq!((u.rows(), u.cols()), (c, c), "solve_regularized: U must be c x c");
+    // U = G G^T via its eigendecomposition, dropping the numerically-zero
+    // part (same factorization as linalg::solve::woodbury_solve).
+    let e = eigh(u);
+    let lmax = e.values.first().copied().unwrap_or(0.0).max(0.0);
+    let tol = lmax * c as f64 * f64::EPSILON;
+    let keep: Vec<usize> = (0..e.values.len()).filter(|&i| e.values[i] > tol).collect();
+    if keep.is_empty() {
+        return y.iter().map(|&yi| yi / alpha).collect();
+    }
+    let g = Matrix::from_fn(c, keep.len(), |i, j| {
+        e.vectors[(i, keep[j])] * e.values[keep[j]].sqrt()
+    });
+    // One pass: C^T C and C^T y together.
+    let mut gram = GramFold::new(c);
+    let mut cty = MatvecFold::new(y, c);
+    run_pipeline(src, cfg.tile_rows, cfg.queue_depth, &mut [&mut gram, &mut cty]);
+    // inner = alpha I + G^T (C^T C) G  (= alpha I + B^T B for B = C G)
+    let ctc = gram.into_matrix();
+    let mut inner = crate::linalg::gemm::symm_nt(&ctc.matmul(&g).transpose(), &g.transpose());
+    inner.add_diag(alpha);
+    let bty = g.tr_matvec(&cty.into_vec());
+    let z = solve::lu_solve(&inner, &bty).expect("alpha I + B^T B is SPD");
+    // Second pass: B z = C (G z).
+    let gz = g.matvec(&z);
+    let mut out = OutMatvec { z: gz, y: vec![0.0; n] };
+    run_pipeline(src, cfg.tile_rows, cfg.queue_depth, &mut [&mut out]);
+    y.iter()
+        .zip(&out.y)
+        .map(|(&yi, &bi)| (yi - bi) / alpha)
+        .collect()
+}
+
+/// Top-k eigenpairs (descending) of the implicit `C U C^T` via Lanczos
+/// over the streamed matvec. Memory stays `O(tile_rows · c + n · iters)`
+/// (the Krylov basis); each Lanczos step re-streams `C` twice.
+pub fn top_k_eigs(
+    src: &dyn TileSource,
+    u: &Matrix,
+    k: usize,
+    seed: u64,
+    cfg: StreamConfig,
+) -> (Vec<f64>, Matrix) {
+    lanczos::lanczos_top_k_op(src.rows(), k, seed, |v| matvec_cuc(src, u, v, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::MatrixSource;
+    use crate::util::Rng;
+
+    fn toy(n: usize, c: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let cmat = Matrix::randn(n, c, &mut rng);
+        let mut u = Matrix::randn(c, c, &mut rng);
+        u.symmetrize();
+        (cmat, u)
+    }
+
+    #[test]
+    fn matvec_matches_dense_chain() {
+        let (cmat, u) = toy(37, 5, 0);
+        let x: Vec<f64> = (0..37).map(|i| ((i * 7 % 11) as f64) - 5.0).collect();
+        let dense = cmat.matmul(&u).matmul(&cmat.transpose());
+        let expect = dense.matvec(&x);
+        for tile in [1usize, 8, 37] {
+            let src = MatrixSource::new(&cmat);
+            let y = matvec_cuc(&src, &u, &x, StreamConfig::tiled(tile));
+            let scale: f64 = expect.iter().map(|v| v * v).sum::<f64>().sqrt().max(1.0);
+            for (a, b) in y.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-10 * scale, "tile={tile}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_regularized_matches_woodbury() {
+        let mut rng = Rng::new(2);
+        let cmat = Matrix::randn(33, 5, &mut rng);
+        let g = Matrix::randn(5, 5, &mut rng);
+        let u = g.matmul_tr(&g); // SPSD
+        let y: Vec<f64> = (0..33).map(|_| rng.gaussian()).collect();
+        let direct = crate::linalg::solve::woodbury_solve(&cmat, &u, 0.6, &y);
+        for tile in [1usize, 8, 33] {
+            let src = MatrixSource::new(&cmat);
+            let w = solve_regularized(&src, &u, 0.6, &y, StreamConfig::tiled(tile));
+            let scale: f64 = direct.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+            for (a, b) in w.iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-8 * scale, "tile={tile}: {a} vs {b}");
+            }
+        }
+        // rank-deficient U still works (the zero part is dropped)
+        let g1 = Matrix::randn(5, 1, &mut rng);
+        let u1 = g1.matmul_tr(&g1);
+        let direct = crate::linalg::solve::woodbury_solve(&cmat, &u1, 0.6, &y);
+        let src = MatrixSource::new(&cmat);
+        let w = solve_regularized(&src, &u1, 0.6, &y, StreamConfig::tiled(8));
+        for (a, b) in w.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn top_k_matches_materialized_eigs() {
+        // SPSD chain: U = I so C U C^T = C C^T, eigenvalues = singular
+        // values of C squared.
+        let mut rng = Rng::new(1);
+        let cmat = Matrix::randn(40, 4, &mut rng);
+        let u = Matrix::identity(4);
+        let src = MatrixSource::new(&cmat);
+        let (vals, vecs) = top_k_eigs(&src, &u, 3, 7, StreamConfig::tiled(9));
+        assert_eq!(vals.len(), 3);
+        assert_eq!((vecs.rows(), vecs.cols()), (40, 3));
+        let dense = cmat.matmul_tr(&cmat);
+        let exact = crate::linalg::eigh(&dense);
+        for i in 0..3 {
+            assert!(
+                (vals[i] - exact.values[i]).abs() < 1e-6 * exact.values[0],
+                "eig {i}: {} vs {}",
+                vals[i],
+                exact.values[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! The bounded double-buffered tile scheduler.
+//!
+//! `run_pipeline` splits a [`TileSource`](super::TileSource) into
+//! `tile_rows`-high tiles, computes them on the global thread pool, and
+//! feeds each tile to every consumer *in row order* on the caller's
+//! thread. The producer runs at most `queue_depth` tiles ahead (a bounded
+//! `Mutex<VecDeque>` + two condvars), so peak live tiles are
+//! `queue_depth + 2` (one being produced, `queue_depth` queued, one being
+//! folded) regardless of `n` — this is what turns the paper's entry-count
+//! accounting into a memory bound.
+//!
+//! Consumption order is deterministic (ascending `r0`), so gather-style
+//! consumers are bit-identical to the materialized path and
+//! accumulation-style consumers differ only by reduction grouping.
+
+use super::{TileConsumer, TileSource};
+use crate::linalg::Matrix;
+use crate::pool;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct ChanState {
+    buf: VecDeque<(usize, Matrix)>,
+    /// Producer finished pushing every tile.
+    tx_done: bool,
+    /// Consumer stopped (normally or by unwinding); producer must bail out
+    /// rather than block on a queue nobody drains.
+    rx_dead: bool,
+}
+
+/// Bounded SPSC tile queue.
+struct Chan {
+    state: Mutex<ChanState>,
+    nonempty: Condvar,
+    nonfull: Condvar,
+    capacity: usize,
+}
+
+impl Chan {
+    fn new(capacity: usize) -> Self {
+        Chan {
+            state: Mutex::new(ChanState {
+                buf: VecDeque::with_capacity(capacity),
+                tx_done: false,
+                rx_dead: false,
+            }),
+            nonempty: Condvar::new(),
+            nonfull: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocks while the queue is full. Returns false when the receiver is
+    /// gone (the producer should stop computing tiles).
+    fn push(&self, item: (usize, Matrix)) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.buf.len() >= self.capacity && !st.rx_dead {
+            st = self.nonfull.wait(st).unwrap();
+        }
+        if st.rx_dead {
+            return false;
+        }
+        st.buf.push_back(item);
+        drop(st);
+        self.nonempty.notify_one();
+        true
+    }
+
+    fn close_tx(&self) {
+        self.state.lock().unwrap().tx_done = true;
+        self.nonempty.notify_all();
+    }
+
+    fn close_rx(&self) {
+        self.state.lock().unwrap().rx_dead = true;
+        self.nonfull.notify_all();
+    }
+
+    /// Blocks until a tile is available; `None` once the producer is done
+    /// and the queue is drained.
+    fn pop(&self) -> Option<(usize, Matrix)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                drop(st);
+                self.nonfull.notify_one();
+                return Some(item);
+            }
+            if st.tx_done {
+                return None;
+            }
+            st = self.nonempty.wait(st).unwrap();
+        }
+    }
+}
+
+/// Marks the receiver dead on drop so a panicking consumer can never
+/// deadlock the producer against a full queue.
+struct RxGuard<'a>(&'a Chan);
+
+impl Drop for RxGuard<'_> {
+    fn drop(&mut self) {
+        self.0.close_rx();
+    }
+}
+
+/// Marks the producer done on drop — including when `TileSource::tile`
+/// panics (the pool catches job panics without rethrowing, so without this
+/// guard the consumer would wait on `nonempty` forever).
+struct TxGuard<'a>(&'a Chan);
+
+impl Drop for TxGuard<'_> {
+    fn drop(&mut self) {
+        self.0.close_tx();
+    }
+}
+
+/// Stream `src` through `consumers` in `tile_rows`-high tiles.
+///
+/// When one tile covers every row the pipeline is skipped entirely: the
+/// tile is computed inline and fed once (the materialized fallback). A
+/// `queue_depth` of 1 still overlaps producer and consumer; 2 (the
+/// default) double-buffers.
+pub fn run_pipeline(
+    src: &dyn TileSource,
+    tile_rows: usize,
+    queue_depth: usize,
+    consumers: &mut [&mut dyn TileConsumer],
+) {
+    let n = src.rows();
+    if n == 0 {
+        return;
+    }
+    let t = tile_rows.clamp(1, n);
+    if t >= n {
+        let tile = src.tile(0, n);
+        for c in consumers.iter_mut() {
+            c.consume(0, &tile);
+        }
+        return;
+    }
+    let chan = Chan::new(queue_depth.max(1));
+    let chan_ref = &chan;
+    pool::global().scoped(|scope| {
+        scope.spawn(move || {
+            let _done = TxGuard(chan_ref);
+            let mut r0 = 0;
+            while r0 < n {
+                let r1 = (r0 + t).min(n);
+                if !chan_ref.push((r0, src.tile(r0, r1))) {
+                    return; // receiver gone — stop producing
+                }
+                r0 = r1;
+            }
+        });
+        let _guard = RxGuard(chan_ref);
+        while let Some((r0, tile)) = chan_ref.pop() {
+            for c in consumers.iter_mut() {
+                c.consume(r0, &tile);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{CollectConsumer, MatrixSource, TileSource};
+    use crate::util::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn visits_every_row_once_in_order_for_awkward_tile_sizes() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(29, 3, &mut rng);
+        for tile in [1usize, 2, 7, 13, 28, 29, 64] {
+            struct Probe {
+                next: usize,
+            }
+            impl TileConsumer for Probe {
+                fn consume(&mut self, r0: usize, tile: &Matrix) {
+                    assert_eq!(r0, self.next, "tiles must arrive in order");
+                    assert!(tile.rows() > 0);
+                    self.next = r0 + tile.rows();
+                }
+            }
+            let src = MatrixSource::new(&a);
+            let mut probe = Probe { next: 0 };
+            let mut collect = CollectConsumer::new(29, 3);
+            run_pipeline(&src, tile, 2, &mut [&mut probe, &mut collect]);
+            assert_eq!(probe.next, 29, "tile={tile}");
+            assert_eq!(collect.into_matrix().max_abs_diff(&a), 0.0, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn producer_stays_within_queue_depth() {
+        // A source that counts outstanding tiles: produced - consumed must
+        // never exceed depth + 2 (one in production, depth queued, one
+        // being folded).
+        struct CountingSource {
+            produced: AtomicUsize,
+        }
+        impl TileSource for CountingSource {
+            fn rows(&self) -> usize {
+                64
+            }
+            fn cols(&self) -> usize {
+                2
+            }
+            fn tile(&self, r0: usize, r1: usize) -> Matrix {
+                self.produced.fetch_add(1, Ordering::SeqCst);
+                Matrix::from_fn(r1 - r0, 2, |i, j| (r0 + i + j) as f64)
+            }
+        }
+        struct SlowConsumer<'a> {
+            src: &'a CountingSource,
+            consumed: usize,
+            max_outstanding: usize,
+        }
+        impl TileConsumer for SlowConsumer<'_> {
+            fn consume(&mut self, _r0: usize, _tile: &Matrix) {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                let produced = self.src.produced.load(Ordering::SeqCst);
+                self.max_outstanding = self.max_outstanding.max(produced - self.consumed);
+                self.consumed += 1;
+            }
+        }
+        for depth in [1usize, 2, 3] {
+            let src = CountingSource { produced: AtomicUsize::new(0) };
+            let mut cons = SlowConsumer { src: &src, consumed: 0, max_outstanding: 0 };
+            run_pipeline(&src, 4, depth, &mut [&mut cons]);
+            assert_eq!(cons.consumed, 16);
+            assert!(
+                cons.max_outstanding <= depth + 2,
+                "depth {depth}: {} tiles outstanding",
+                cons.max_outstanding
+            );
+        }
+    }
+
+    #[test]
+    fn empty_source_is_a_noop() {
+        let a = Matrix::zeros(0, 4);
+        let src = MatrixSource::new(&a);
+        struct MustNotRun;
+        impl TileConsumer for MustNotRun {
+            fn consume(&mut self, _: usize, _: &Matrix) {
+                panic!("no tiles expected");
+            }
+        }
+        run_pipeline(&src, 8, 2, &mut [&mut MustNotRun]);
+    }
+
+    #[test]
+    fn panicking_producer_does_not_deadlock_consumer() {
+        // A TileSource that panics mid-stream: the TxGuard must close the
+        // channel so the consumer unblocks, and ThreadPool::scoped must
+        // re-raise the job panic so the truncated stream never escapes
+        // silently.
+        struct BombSource;
+        impl TileSource for BombSource {
+            fn rows(&self) -> usize {
+                32
+            }
+            fn cols(&self) -> usize {
+                2
+            }
+            fn tile(&self, r0: usize, r1: usize) -> Matrix {
+                if r0 >= 8 {
+                    panic!("producer bomb");
+                }
+                Matrix::zeros(r1 - r0, 2)
+            }
+        }
+        struct Sink;
+        impl TileConsumer for Sink {
+            fn consume(&mut self, _: usize, _: &Matrix) {}
+        }
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_pipeline(&BombSource, 4, 2, &mut [&mut Sink]);
+        }));
+        assert!(result.is_err(), "producer panic must propagate, not hang or vanish");
+    }
+
+    #[test]
+    fn panicking_consumer_does_not_deadlock_producer() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(128, 2, &mut rng);
+        let src = MatrixSource::new(&a);
+        struct Bomb {
+            seen: usize,
+        }
+        impl TileConsumer for Bomb {
+            fn consume(&mut self, _: usize, _: &Matrix) {
+                self.seen += 1;
+                if self.seen == 2 {
+                    panic!("consumer bomb");
+                }
+            }
+        }
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut bomb = Bomb { seen: 0 };
+            run_pipeline(&src, 4, 1, &mut [&mut bomb]);
+        }));
+        assert!(result.is_err(), "panic must propagate, not hang");
+    }
+}

@@ -125,6 +125,9 @@ fn service_over_pjrt_engine_if_available() {
                 c: 12,
                 k: 4,
                 seed: i,
+                // alternate materialized / tile-pipeline builds: both must
+                // serve identical results through the same service
+                tile_rows: if i % 2 == 0 { None } else { Some(64) },
             },
             tx.clone(),
         );

@@ -1,0 +1,182 @@
+//! Equivalence of the streamed builds with the materialized paths: the
+//! tile pipeline must change *where* the arithmetic happens, not *what* it
+//! computes. Gather-based paths (fast with column-selection sketches,
+//! Nyström, CUR) are bit-identical for every tile size; reduction-grouping
+//! paths (prototype, projection sketches) must stay within 1e-12 relative
+//! Frobenius error. Tile sizes deliberately include 1, sizes that do not
+//! divide n, and n itself.
+
+use fastspsd::coordinator::oracle::{DenseOracle, RbfOracle};
+use fastspsd::cur::{self, FastCurConfig};
+use fastspsd::linalg::Matrix;
+use fastspsd::sketch::SketchKind;
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::stream::{self, MatrixSource, StreamConfig};
+use fastspsd::util::Rng;
+use std::sync::Arc;
+
+const N: usize = 151; // prime: no tile size divides it
+const TILES: [usize; 4] = [1, 7, 64, N];
+
+fn rbf_oracle(n: usize, seed: u64) -> RbfOracle {
+    let mut rng = Rng::new(seed);
+    let x = Arc::new(Matrix::randn(n, 5, &mut rng));
+    RbfOracle::cpu(x, 0.4)
+}
+
+fn rel_fro(a: &Matrix, b: &Matrix) -> f64 {
+    a.sub(b).fro_norm() / b.fro_norm().max(1e-300)
+}
+
+#[test]
+fn fast_streamed_matches_materialized_for_every_sketch_family() {
+    // The acceptance criterion: streamed fast-model build on an RBF oracle
+    // within 1e-12 relative Fro error of the materialized path for every
+    // sketch family, across tile sizes that do and don't divide n.
+    let o = rbf_oracle(N, 1);
+    let p = spsd::uniform_p(N, 10, &mut Rng::new(2));
+    let kinds = [
+        (SketchKind::Uniform, true),
+        (SketchKind::Leverage { scaled: false }, true),
+        (SketchKind::Gaussian, false),
+        (SketchKind::Srht, false),
+        (SketchKind::CountSketch, false),
+    ];
+    for (kind, force_p) in kinds {
+        let cfg = FastConfig { s: 30, kind, force_p_in_s: force_p };
+        let mat = spsd::fast(&o, &p, cfg, &mut Rng::new(7));
+        let mat_full = mat.materialize();
+        for tile in TILES {
+            let st = spsd::fast_streamed(&o, &p, cfg, StreamConfig::tiled(tile), &mut Rng::new(7));
+            assert_eq!(
+                st.c.max_abs_diff(&mat.c),
+                0.0,
+                "{}: C panel must be bit-identical (tile={tile})",
+                kind.name()
+            );
+            let err = rel_fro(&st.materialize(), &mat_full);
+            assert!(err <= 1e-12, "{} tile={tile}: rel err {err}", kind.name());
+            if kind.is_column_selection() {
+                assert_eq!(
+                    st.u.max_abs_diff(&mat.u),
+                    0.0,
+                    "{} tile={tile}: selection paths are pure gathers",
+                    kind.name()
+                );
+            }
+            assert_eq!(st.entries_observed, mat.entries_observed, "{}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn nystrom_and_prototype_streamed_match() {
+    let o = rbf_oracle(N, 3);
+    let p = spsd::uniform_p(N, 12, &mut Rng::new(4));
+    let ny = spsd::nystrom(&o, &p);
+    let proto = spsd::prototype(&o, &p);
+    for tile in TILES {
+        let ny_s = spsd::nystrom_streamed(&o, &p, StreamConfig::tiled(tile));
+        assert_eq!(ny_s.c.max_abs_diff(&ny.c), 0.0, "tile={tile}");
+        assert_eq!(ny_s.u.max_abs_diff(&ny.u), 0.0, "tile={tile}");
+        assert_eq!(ny_s.entries_observed, ny.entries_observed);
+
+        let proto_s = spsd::prototype_streamed(&o, &p, StreamConfig::tiled(tile));
+        assert_eq!(proto_s.c.max_abs_diff(&proto.c), 0.0, "tile={tile}");
+        let err = rel_fro(&proto_s.u, &proto.u);
+        assert!(err <= 1e-12, "prototype tile={tile}: rel err {err}");
+        assert_eq!(proto_s.entries_observed, proto.entries_observed);
+    }
+}
+
+#[test]
+fn dense_oracle_selection_paths_are_bit_identical() {
+    // On a DenseOracle the tiles are pure copies of K's rows, so even the
+    // kernel evaluation cannot introduce noise: everything gather-based
+    // must match to the bit.
+    let mut rng = Rng::new(5);
+    let g = Matrix::randn(97, 97, &mut rng);
+    let k = g.matmul_tr(&g);
+    let o = DenseOracle::new(k);
+    let p = spsd::uniform_p(97, 9, &mut Rng::new(6));
+    let mat = spsd::fast(&o, &p, FastConfig::uniform(27), &mut Rng::new(8));
+    for tile in [1usize, 13, 97] {
+        let st = spsd::fast_streamed(
+            &o,
+            &p,
+            FastConfig::uniform(27),
+            StreamConfig::tiled(tile),
+            &mut Rng::new(8),
+        );
+        assert_eq!(st.c.max_abs_diff(&mat.c), 0.0);
+        assert_eq!(st.u.max_abs_diff(&mat.u), 0.0);
+    }
+}
+
+#[test]
+fn cur_streamed_matches_materialized_across_tiles() {
+    let mut rng = Rng::new(9);
+    let a = Matrix::randn(106, 73, &mut rng); // no tile divides 106
+    for cfg in [FastCurConfig::uniform(25, 25), FastCurConfig::leverage(25, 25)] {
+        let mut r1 = Rng::new(11);
+        let cols = cur::select_uniform(73, 8, &mut r1);
+        let rows = cur::select_uniform(106, 8, &mut r1);
+        let mat = cur::cur_fast(&a, &cols, &rows, cfg, &mut Rng::new(13));
+        for tile in [1usize, 7, 64, 106] {
+            let st = cur::cur_fast_streamed(
+                &a,
+                &cols,
+                &rows,
+                cfg,
+                StreamConfig::tiled(tile),
+                &mut Rng::new(13),
+            );
+            assert_eq!(st.c.max_abs_diff(&mat.c), 0.0, "C tile={tile}");
+            assert_eq!(st.r.max_abs_diff(&mat.r), 0.0, "R tile={tile}");
+            assert_eq!(st.u.max_abs_diff(&mat.u), 0.0, "{} U tile={tile}", mat.method);
+        }
+    }
+}
+
+#[test]
+fn implicit_matvec_and_topk_match_materialized_approx() {
+    let o = rbf_oracle(120, 14);
+    let p = spsd::uniform_p(120, 10, &mut Rng::new(15));
+    let approx = spsd::fast(&o, &p, FastConfig::uniform(30), &mut Rng::new(16));
+    let dense = approx.materialize();
+
+    // matvec against the implicit C U C^T, re-streaming C from the oracle
+    let x: Vec<f64> = (0..120).map(|i| ((i * 3 % 17) as f64) - 8.0).collect();
+    let expect = dense.matvec(&x);
+    let src = stream::OracleColumnsSource::new(&o, &approx.p_indices);
+    let y = stream::matvec_cuc(&src, &approx.u, &x, StreamConfig::tiled(32));
+    let scale: f64 = expect.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+    for (a, b) in y.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-9 * scale);
+    }
+
+    // top-k Lanczos against the implicit operator vs the O(nc²) eig
+    let (vals, vecs) = stream::top_k_eigs(&src, &approx.u, 4, 21, StreamConfig::tiled(32));
+    let (vals_mat, _) = approx.eig_k(4);
+    assert_eq!((vecs.rows(), vecs.cols()), (120, 4));
+    for i in 0..4 {
+        assert!(
+            (vals[i] - vals_mat[i]).abs() < 1e-6 * vals_mat[0].abs().max(1e-12),
+            "eig {i}: {} vs {}",
+            vals[i],
+            vals_mat[i]
+        );
+    }
+}
+
+#[test]
+fn matrix_source_reassembles_through_every_tile_size() {
+    let mut rng = Rng::new(17);
+    let a = Matrix::randn(59, 8, &mut rng);
+    for tile in [1usize, 7, 59, 64] {
+        let src = MatrixSource::new(&a);
+        let mut collect = stream::CollectConsumer::new(59, 8);
+        stream::run_pipeline(&src, tile, 2, &mut [&mut collect]);
+        assert_eq!(collect.into_matrix().max_abs_diff(&a), 0.0, "tile={tile}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Asserts the streaming memory bound with the benchkit allocation gauge:
+//! the tile pipeline's peak *extra* allocation is `O(tile_rows·c + s²)`
+//! beyond the `C` output (prototype: `O(tile_rows·n)` instead of `O(n²)`),
+//! and — crucially — independent of `n`.
+//!
+//! Everything lives in ONE `#[test]`: the gauge counters are process-wide,
+//! so concurrent tests in the same binary would pollute each other's
+//! measurements (see `benchkit::alloc`). Each measured build runs once as
+//! a warmup first so grow-only thread-local GEMM pack buffers and pool
+//! threads are excluded from the gauged steady state.
+
+use fastspsd::benchkit::alloc::{self, AllocGauge, CountingAlloc};
+use fastspsd::coordinator::oracle::RbfOracle;
+use fastspsd::linalg::Matrix;
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::stream::StreamConfig;
+use fastspsd::util::Rng;
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const F: usize = 8; // bytes per f64
+const C: usize = 12;
+const S: usize = 36;
+const TILE: usize = 16;
+
+fn oracle(n: usize, seed: u64) -> RbfOracle {
+    let mut rng = Rng::new(seed);
+    let x = Arc::new(Matrix::randn(n, 6, &mut rng));
+    RbfOracle::cpu(x, 0.5)
+}
+
+/// Gauge one closure's peak extra allocation after a warmup run.
+fn gauge<R>(mut f: impl FnMut() -> R) -> usize {
+    let _warm = f();
+    let g = AllocGauge::start();
+    let _r = f();
+    g.peak_extra_bytes()
+}
+
+#[test]
+fn streamed_builds_respect_the_memory_bound() {
+    assert!(Vec::from([1u8, 2]).len() == 2);
+    assert!(alloc::installed(), "counting allocator must be the global allocator here");
+
+    // --- fast model (selection sketch): extra beyond the C output is
+    // O(tile_rows·c + s²), with a fixed slack for factorization scratch.
+    let n1 = 600;
+    let o1 = oracle(n1, 1);
+    let p1 = spsd::uniform_p(n1, C, &mut Rng::new(2));
+    let fast_extra_1 = gauge(|| {
+        spsd::fast_streamed(&o1, &p1, FastConfig::uniform(S), StreamConfig::tiled(TILE), &mut Rng::new(3))
+    });
+    let c_bytes_1 = n1 * C * F;
+    let bound_1 = c_bytes_1 + 24 * (TILE * C + S * S) * F + 256 * 1024;
+    assert!(
+        fast_extra_1 <= bound_1,
+        "fast streamed peak extra {fast_extra_1} B exceeds O(tile·c + s²) bound {bound_1} B"
+    );
+
+    // --- n-independence: tripling n must only grow the peak by ~the C
+    // output's growth — the transient working set does not scale with n.
+    let n2 = 1800;
+    let o2 = oracle(n2, 4);
+    let p2 = spsd::uniform_p(n2, C, &mut Rng::new(5));
+    let fast_extra_2 = gauge(|| {
+        spsd::fast_streamed(&o2, &p2, FastConfig::uniform(S), StreamConfig::tiled(TILE), &mut Rng::new(6))
+    });
+    let c_growth = (n2 - n1) * C * F;
+    assert!(
+        fast_extra_2 <= fast_extra_1 + c_growth + 128 * 1024,
+        "peak extra grew superlinearly with n: {fast_extra_1} B @ n={n1} vs {fast_extra_2} B @ n={n2} \
+         (C growth only accounts for {c_growth} B)"
+    );
+
+    // --- prototype: streamed tiles replace the n x n materialization.
+    let proto_streamed = gauge(|| spsd::prototype_streamed(&o1, &p1, StreamConfig::tiled(TILE)));
+    let proto_materialized = gauge(|| spsd::prototype(&o1, &p1));
+    let k_bytes = n1 * n1 * F;
+    assert!(
+        proto_materialized >= k_bytes,
+        "materialized prototype must allocate the full kernel ({k_bytes} B), saw {proto_materialized} B"
+    );
+    assert!(
+        proto_streamed < k_bytes / 2,
+        "streamed prototype peak {proto_streamed} B should be well below the n² kernel {k_bytes} B"
+    );
+
+    // --- and the streamed result is still the same model (sanity, so the
+    // gauge can't pass on a build that silently did nothing).
+    let a = spsd::prototype_streamed(&o1, &p1, StreamConfig::tiled(TILE));
+    let b = spsd::prototype(&o1, &p1);
+    let rel = a.u.sub(&b.u).fro_norm() / b.u.fro_norm().max(1e-300);
+    assert!(rel <= 1e-12, "streamed prototype diverged: {rel}");
+}
