@@ -14,7 +14,7 @@ use fastspsd::benchkit::{black_box, BenchSuite};
 use fastspsd::coordinator::oracle::RbfOracle;
 use fastspsd::cur::{self, FastCurConfig};
 use fastspsd::linalg::Matrix;
-use fastspsd::spsd::{self, FastConfig};
+use fastspsd::spsd::{self, FastConfig, LeverageBasis};
 use fastspsd::stream::StreamConfig;
 use fastspsd::util::Rng;
 use std::sync::Arc;
@@ -84,6 +84,40 @@ fn main() {
     ) {
         println!("    streamed/materialized at default tile: {:.3}x", st / mat);
     }
+
+    // ---- fast model, leverage family (streamed Gram scores) -------------
+    suite.bench(&format!("fast[leverage] materialized n={n}"), || {
+        black_box(spsd::fast(&oracle, &p, FastConfig::leverage(s), &mut Rng::new(5)));
+    });
+    let peak = gauged(|| spsd::fast(&oracle, &p, FastConfig::leverage(s), &mut Rng::new(5)));
+    println!("    peak extra: {}", fmt_mib(peak));
+    suite.bench(&format!("fast[leverage] streamed t={DEFAULT_TILE} n={n}"), || {
+        black_box(spsd::fast_streamed(
+            &oracle,
+            &p,
+            FastConfig::leverage(s),
+            StreamConfig::tiled(DEFAULT_TILE),
+            &mut Rng::new(5),
+        ));
+    });
+    let peak = gauged(|| {
+        spsd::fast_streamed(
+            &oracle,
+            &p,
+            FastConfig::leverage(s),
+            StreamConfig::tiled(DEFAULT_TILE),
+            &mut Rng::new(5),
+        )
+    });
+    println!("    peak extra: {}", fmt_mib(peak));
+    // reference: the historical resident-SVD scoring (O(n·c) scratch) —
+    // the memory delta against the Gram rows above is the tentpole win
+    let svd_cfg = FastConfig::leverage(s).with_basis(LeverageBasis::ExactSvd);
+    suite.bench(&format!("fast[leverage-svd] materialized n={n}"), || {
+        black_box(spsd::fast(&oracle, &p, svd_cfg, &mut Rng::new(5)));
+    });
+    let peak = gauged(|| spsd::fast(&oracle, &p, svd_cfg, &mut Rng::new(5)));
+    println!("    peak extra: {}", fmt_mib(peak));
 
     // ---- nystrom --------------------------------------------------------
     suite.bench(&format!("nystrom materialized n={n}"), || {

@@ -30,7 +30,12 @@ fn main() {
         SketchKind::Srht,
         SketchKind::CountSketch,
     ] {
-        let cfg = FastConfig { s, kind, force_p_in_s: kind.is_column_selection() };
+        let cfg = FastConfig {
+            s,
+            kind,
+            force_p_in_s: kind.is_column_selection(),
+            leverage_basis: spsd::LeverageBasis::Gram,
+        };
         let stats = suite.bench(kind.name(), || {
             let mut r = Rng::new(3);
             black_box(spsd::fast(&oracle, &p, cfg, &mut r));

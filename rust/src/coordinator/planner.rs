@@ -119,10 +119,15 @@ pub fn predicted_peak_bytes(
             // C + C† + U + live tiles of K rows
             Some(t) => ENTRY_BYTES * (2 * n * c + c * c + live_tiles() * t * n),
         },
-        MethodSpec::Fast { .. } => {
+        MethodSpec::Fast { kind, .. } => {
             // column-selection accounting (what the planner emits):
-            // C + C[S,:] + S^T C + S^T K S + U
-            let base = n * c + 2 * s * c + s * s + c * c;
+            // C + C[S,:] + S^T C + S^T K S + U. The leverage family adds
+            // its streamed score state — Gram + whitening factor, 2c² —
+            // and, now that scores come from the streamed estimator rather
+            // than an SVD of the resident panel, nothing n-dependent
+            // beyond the C output itself.
+            let lev = if matches!(kind, SketchKind::Leverage { .. }) { 2 * c * c } else { 0 };
+            let base = n * c + 2 * s * c + s * s + c * c + lev;
             ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * c))
         }
     }
@@ -423,6 +428,33 @@ mod tests {
         // and with both budgets impossible
         let p = plan(Goal { n: 5_000, k: 5, epsilon: 0.1, entry_budget: 1, memory_budget: 1 });
         assert!(p.predicted_entries > 1);
+    }
+
+    #[test]
+    fn leverage_fast_peak_adds_only_c2_state() {
+        // The streamed leverage estimator costs a fixed 2c² (Gram +
+        // whitening factor) over the uniform fast peak — crucially, the
+        // surcharge is n-independent (no resident-SVD n·c scratch), so
+        // tile_rows planning and service routing stay honest for the
+        // leverage family.
+        let (c, s) = (40usize, 160usize);
+        let uni = |n: usize, t: Option<usize>| {
+            predicted_peak_bytes(n, c, s, &MethodSpec::Fast { s, kind: SketchKind::Uniform }, t)
+        };
+        let lev = |n: usize, t: Option<usize>| {
+            predicted_peak_bytes(
+                n,
+                c,
+                s,
+                &MethodSpec::Fast { s, kind: SketchKind::Leverage { scaled: false } },
+                t,
+            )
+        };
+        let surcharge = (2 * c * c * 8) as u64;
+        for t in [None, Some(64), Some(1)] {
+            assert_eq!(lev(50_000, t) - uni(50_000, t), surcharge, "{t:?}");
+            assert_eq!(lev(500_000, t) - uni(500_000, t), surcharge, "n-independent {t:?}");
+        }
     }
 
     #[test]

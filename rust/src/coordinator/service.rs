@@ -11,7 +11,7 @@ use super::metrics::Metrics;
 use super::oracle::{KernelOracle, RbfOracle};
 use crate::pool::ThreadPool;
 use crate::sketch::SketchKind;
-use crate::spsd::{self, FastConfig};
+use crate::spsd::{self, FastConfig, LeverageBasis};
 use crate::stream::StreamConfig;
 use crate::util::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -158,7 +158,9 @@ fn run_request(
         MethodSpec::Fast { s, kind } => spsd::fast_streamed(
             oracle,
             &p,
-            FastConfig { s, kind, force_p_in_s: true },
+            // Gram basis: leverage requests stream with O(c²) score state,
+            // matching the peak the planner predicts for this route.
+            FastConfig { s, kind, force_p_in_s: true, leverage_basis: LeverageBasis::Gram },
             stream_cfg,
             &mut rng,
         ),
@@ -265,6 +267,7 @@ mod tests {
             MethodSpec::Nystrom,
             MethodSpec::Prototype,
             MethodSpec::Fast { s: 20, kind: SketchKind::Uniform },
+            MethodSpec::Fast { s: 20, kind: SketchKind::Leverage { scaled: false } },
         ];
         let mut id = 0u64;
         for m in methods {
@@ -280,7 +283,7 @@ mod tests {
         drop(tx);
         let mut resps: Vec<ApproxResponse> = rx.iter().collect();
         resps.sort_by_key(|r| r.id);
-        assert_eq!(resps.len(), 6);
+        assert_eq!(resps.len(), 8);
         for pair in resps.chunks(2) {
             let (mat, st) = (&pair[0], &pair[1]);
             assert_eq!(mat.entries, st.entries, "{}: entry accounting must not change", mat.method);

@@ -82,6 +82,19 @@ pub fn cur_drineas08(a: &Matrix, col_idx: &[usize], row_idx: &[usize]) -> CurDec
     }
 }
 
+/// How CUR's leverage configs compute the scores of the sampling basis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CurScoreBasis {
+    /// `O(c²)` Gram-based scores (the streamed leverage estimator —
+    /// default). Squares the basis's condition number: directions with
+    /// relative singular value between `√ε` and `ε` score at the Gram's
+    /// rounding floor.
+    Gram,
+    /// SVD of the resident basis (the historical behavior): `O(m·c)`
+    /// scratch, robust to ill-conditioned `C`/`R`.
+    ExactSvd,
+}
+
 /// Configuration for the fast CUR U matrix (eq. 9).
 #[derive(Debug, Clone, Copy)]
 pub struct FastCurConfig {
@@ -92,11 +105,19 @@ pub struct FastCurConfig {
     /// Force the selected rows to include `row_idx` and columns to include
     /// `col_idx` (the CUR analogue of Corollary 5; improves accuracy).
     pub force_overlap: bool,
+    /// Score estimator for `SketchKind::Leverage` (ignored otherwise).
+    pub score_basis: CurScoreBasis,
 }
 
 impl FastCurConfig {
     pub fn uniform(s_c: usize, s_r: usize) -> Self {
-        FastCurConfig { s_c, s_r, kind: SketchKind::Uniform, force_overlap: true }
+        FastCurConfig {
+            s_c,
+            s_r,
+            kind: SketchKind::Uniform,
+            force_overlap: true,
+            score_basis: CurScoreBasis::Gram,
+        }
     }
 
     pub fn leverage(s_c: usize, s_r: usize) -> Self {
@@ -105,7 +126,13 @@ impl FastCurConfig {
             s_r,
             kind: SketchKind::Leverage { scaled: false },
             force_overlap: true,
+            score_basis: CurScoreBasis::Gram,
         }
+    }
+
+    /// Leverage with SVD-based scores (the conditioning-robust reference).
+    pub fn leverage_svd(s_c: usize, s_r: usize) -> Self {
+        FastCurConfig { score_basis: CurScoreBasis::ExactSvd, ..Self::leverage(s_c, s_r) }
     }
 }
 
@@ -125,9 +152,9 @@ pub fn cur_fast(
     let r = a.select_rows(row_idx);
 
     // Row sketch S_C over [m] (samples rows), column sketch S_R over [n].
-    let sc_idx = build_indices(&c, cfg.kind, cfg.s_c, m, if cfg.force_overlap { row_idx } else { &[] }, rng);
+    let sc_idx = build_indices(&c, cfg.kind, cfg.score_basis, cfg.s_c, m, if cfg.force_overlap { row_idx } else { &[] }, rng);
     let rt = r.transpose();
-    let sr_idx = build_indices(&rt, cfg.kind, cfg.s_r, n, if cfg.force_overlap { col_idx } else { &[] }, rng);
+    let sr_idx = build_indices(&rt, cfg.kind, cfg.score_basis, cfg.s_r, n, if cfg.force_overlap { col_idx } else { &[] }, rng);
 
     let stc = c.select_rows(&sc_idx); // s_c x c
     let rsr = r.select_cols(&sr_idx); // r x s_r
@@ -171,8 +198,8 @@ pub fn cur_fast_streamed(
             // Indices first (basis is ignored for uniform sampling), then
             // one pass gathers C, R and the core together.
             let dummy = Matrix::zeros(0, 0);
-            let sc_idx = build_indices(&dummy, cfg.kind, cfg.s_c, m, forced_rows, rng);
-            let sr_idx = build_indices(&dummy, cfg.kind, cfg.s_r, n, forced_cols, rng);
+            let sc_idx = build_indices(&dummy, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
+            let sr_idx = build_indices(&dummy, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
             let src = MatrixSource::new(a);
             let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
             let mut r_gather = RowGather::new(row_idx.to_vec(), n);
@@ -208,9 +235,9 @@ pub fn cur_fast_streamed(
             );
             let c = c_collect.into_matrix();
             let r = r_gather.into_matrix();
-            let sc_idx = build_indices(&c, cfg.kind, cfg.s_c, m, forced_rows, rng);
+            let sc_idx = build_indices(&c, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
             let rt = r.transpose();
-            let sr_idx = build_indices(&rt, cfg.kind, cfg.s_r, n, forced_cols, rng);
+            let sr_idx = build_indices(&rt, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
             let core =
                 Matrix::from_fn(sc_idx.len(), sr_idx.len(), |i, j| a[(sc_idx[i], sr_idx[j])]);
             (c, r, sc_idx, sr_idx, core)
@@ -236,6 +263,7 @@ pub fn cur_fast_streamed(
 fn build_indices(
     basis: &Matrix,
     kind: SketchKind,
+    score_basis: CurScoreBasis,
     s: usize,
     n: usize,
     forced: &[usize],
@@ -245,7 +273,17 @@ fn build_indices(
     let mut idx: Vec<usize> = match kind {
         SketchKind::Uniform => rng.sample_without_replacement(n, extra.min(n)),
         SketchKind::Leverage { .. } => {
-            let scores = sketch::leverage_scores(basis);
+            // Default: Gram-based scores (the streamed leverage
+            // estimator) — O(c²) whitening state instead of an SVD of the
+            // full basis, same scores in exact arithmetic, and shared by
+            // `cur_fast` and `cur_fast_streamed` so the two stay
+            // bit-identical. ExactSvd is the conditioning-robust opt-out.
+            let scores = match score_basis {
+                CurScoreBasis::Gram => {
+                    sketch::approx_leverage_from_gram(&basis.gram_tn()).scores(basis)
+                }
+                CurScoreBasis::ExactSvd => sketch::leverage_scores(basis),
+            };
             let rank: f64 = scores.iter().sum();
             let mut out = Vec::new();
             for (i, &l) in scores.iter().enumerate() {
@@ -389,7 +427,11 @@ mod tests {
     fn streamed_cur_is_bit_identical_to_materialized() {
         let a = decaying_matrix(41, 33, 12); // awkward sizes vs tile heights
         for tile in [1usize, 7, 16, 41] {
-            for cfg in [FastCurConfig::uniform(18, 18), FastCurConfig::leverage(18, 18)] {
+            for cfg in [
+                FastCurConfig::uniform(18, 18),
+                FastCurConfig::leverage(18, 18),
+                FastCurConfig::leverage_svd(18, 18),
+            ] {
                 let mut r1 = Rng::new(77);
                 let mut r2 = Rng::new(77);
                 let cols = select_uniform(33, 5, &mut r1);
@@ -453,6 +495,7 @@ mod tests {
             s_r: 5,
             kind: SketchKind::Gaussian,
             force_overlap: false,
+            score_basis: CurScoreBasis::Gram,
         };
         cur_fast(&a, &[0, 1], &[0, 1], cfg, &mut rng);
     }

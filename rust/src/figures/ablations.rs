@@ -38,7 +38,12 @@ fn ablate_p_in_s(ctx: &Ctx, args: &Args) {
             for rep in 0..ctx.reps.max(5) {
                 let mut rng = Rng::new(ctx.seed + rep as u64);
                 let p = spsd::uniform_p(n, c, &mut rng);
-                let cfg = FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: force };
+                let cfg = FastConfig {
+                    s,
+                    kind: SketchKind::Uniform,
+                    force_p_in_s: force,
+                    leverage_basis: spsd::LeverageBasis::Gram,
+                };
                 let a = spsd::fast(&o, &p, cfg, &mut rng);
                 err += kmat.sub(&a.materialize()).fro_norm_sq() / kf;
             }
@@ -71,6 +76,7 @@ fn ablate_leverage_scaling(ctx: &Ctx, args: &Args) {
                     s,
                     kind: SketchKind::Leverage { scaled },
                     force_p_in_s: true,
+                    leverage_basis: spsd::LeverageBasis::Gram,
                 };
                 let a = spsd::fast(&o, &p, cfg, &mut rng);
                 let e = kmat.sub(&a.materialize()).fro_norm_sq() / kf;

@@ -61,7 +61,12 @@ pub fn run(ctx: &Ctx, args: &Args, k: usize) {
                     let a = spsd::fast(
                         oracle.as_ref(),
                         &p,
-                        FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: true },
+                        FastConfig {
+                            s,
+                            kind: SketchKind::Uniform,
+                            force_p_in_s: true,
+                            leverage_basis: spsd::LeverageBasis::Gram,
+                        },
                         &mut rng,
                     );
                     eval(&format!("fast_s{f}c"), s, a, sw.secs());

@@ -61,7 +61,12 @@ pub fn run(ctx: &Ctx, args: &Args) {
                     let a = spsd::fast(
                         oracle.as_ref(),
                         &p,
-                        FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: true },
+                        FastConfig {
+                            s,
+                            kind: SketchKind::Uniform,
+                            force_p_in_s: true,
+                            leverage_basis: spsd::LeverageBasis::Gram,
+                        },
                         &mut rng,
                     );
                     let m = kpca::kpca_from_approx(&a, k);

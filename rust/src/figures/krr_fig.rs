@@ -67,7 +67,12 @@ pub fn run(ctx: &Ctx, args: &Args) {
                 let fa = spsd::fast(
                     oracle.as_ref(),
                     &p,
-                    FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: true },
+                    FastConfig {
+                        s,
+                        kind: SketchKind::Uniform,
+                        force_p_in_s: true,
+                        leverage_basis: spsd::LeverageBasis::Gram,
+                    },
                     &mut rng,
                 );
                 eval(&format!("fast_s{f}c"), s, &fa, sw.secs());

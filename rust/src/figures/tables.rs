@@ -93,7 +93,12 @@ pub fn table4(ctx: &Ctx, args: &Args) {
         let p = spsd::uniform_p(n, c, &mut rng);
         for kind in kinds {
             oracle.reset_entries();
-            let cfg = FastConfig { s, kind, force_p_in_s: kind.is_column_selection() };
+            let cfg = FastConfig {
+                s,
+                kind,
+                force_p_in_s: kind.is_column_selection(),
+                leverage_basis: spsd::LeverageBasis::Gram,
+            };
             let fa = spsd::fast(&oracle, &p, cfg, &mut rng);
             csv.row(&format!(
                 "{n},{c},{s},{},{:.5},{},{:.4e}",

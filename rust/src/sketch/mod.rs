@@ -9,7 +9,7 @@
 
 pub mod srht;
 
-use crate::linalg::{svd_thin, Matrix};
+use crate::linalg::{eigh, svd_thin, Matrix};
 use crate::util::Rng;
 
 /// Which sketching family (and options) to use.
@@ -231,6 +231,68 @@ pub fn leverage_scores(c: &Matrix) -> Vec<f64> {
         .collect()
 }
 
+/// A whitening factor for (approximate) row-leverage scores, derived from a
+/// `c x c` Gram — or Gram surrogate — of `C` instead of an `n x c`
+/// orthogonal factor: with `G = C^T C = V Λ V^T` and
+/// `W = V_+ Λ_+^{-1/2}` (the numerically-positive part),
+/// `||C_i W||² = C_i G^+ C_i^T = l_i` — the row leverage scores, from
+/// `O(c²)` state. This is what makes the streamed leverage family possible:
+/// the Gram folds tile-by-tile while `C` streams
+/// ([`LeverageFold`](crate::stream::LeverageFold)), and scoring a row needs
+/// only that row plus `W` — never the `n x c` panel at once.
+#[derive(Debug, Clone)]
+pub struct LeverageEstimate {
+    /// `r x c` whitening factor, stored transposed (`W^T = Λ_+^{-1/2}
+    /// V_+^T`) so scoring walks both operands sequentially: each of the
+    /// `r` factor rows is a contiguous slice dotted against the (also
+    /// contiguous) input row — the per-row scoring pass is the streamed
+    /// leverage hot path.
+    pub whiten: Matrix,
+    /// Numerical rank of the Gram (= `Σ_i l_i` in exact arithmetic), the
+    /// normalizer for sampling probabilities.
+    pub rank: f64,
+}
+
+impl LeverageEstimate {
+    /// Leverage score of one row of `C`: `||W^T row||²`. Sequential slice
+    /// dot products, so the result depends only on the row and the factor
+    /// — not on how rows were grouped into tiles upstream.
+    pub fn row_score(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.whiten.cols(), "row width != factor width");
+        let mut total = 0.0;
+        for j in 0..self.whiten.rows() {
+            let mut dot = 0.0;
+            for (a, b) in row.iter().zip(self.whiten.row(j)) {
+                dot += a * b;
+            }
+            total += dot * dot;
+        }
+        total
+    }
+
+    /// Scores for every row of `c`.
+    pub fn scores(&self, c: &Matrix) -> Vec<f64> {
+        (0..c.rows()).map(|i| self.row_score(c.row(i))).collect()
+    }
+}
+
+/// Build the leverage whitening factor from a symmetric PSD `c x c` Gram —
+/// the exact `C^T C` or a sketched surrogate `C^T Ω Ω^T C`:
+/// eigendecompose, drop the numerically-zero part (same relative tolerance
+/// as the Woodbury solve), keep `W = V_+ Λ_+^{-1/2}`.
+pub fn approx_leverage_from_gram(gram: &Matrix) -> LeverageEstimate {
+    let c = gram.rows();
+    assert_eq!(c, gram.cols(), "gram must be square");
+    let e = eigh(gram);
+    let lmax = e.values.first().copied().unwrap_or(0.0).max(0.0);
+    let tol = lmax * c as f64 * f64::EPSILON;
+    let keep: Vec<usize> = (0..e.values.len()).filter(|&i| e.values[i] > tol).collect();
+    let whiten = Matrix::from_fn(keep.len(), c, |j, i| {
+        e.vectors[(i, keep[j])] / e.values[keep[j]].sqrt()
+    });
+    LeverageEstimate { whiten, rank: keep.len() as f64 }
+}
+
 /// Uniform column selection, `s` distinct indices, scales `sqrt(n/s)`
 /// (or 1.0 when `scaled` is false).
 pub fn uniform(n: usize, s: usize, scaled: bool, rng: &mut Rng) -> SketchOp {
@@ -299,8 +361,13 @@ pub fn gaussian(n: usize, s: usize, rng: &mut Rng) -> SketchOp {
 /// Subsampled randomized Hadamard transform.
 pub fn srht_sketch(n: usize, s: usize, rng: &mut Rng) -> SketchOp {
     let n_pad = n.next_power_of_two();
+    // More rows than the padded transform has cannot be sampled; the scale
+    // must use the clamped count too, or E[S S^T] = (n_pad/s)·I ≠ I and
+    // every downstream estimate (e.g. the sketched leverage surrogate) is
+    // uniformly biased by s/n_pad.
+    let s = s.min(n_pad);
     let signs: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
-    let rows = rng.sample_without_replacement(n_pad, s.min(n_pad));
+    let rows = rng.sample_without_replacement(n_pad, s);
     // S^T x = sqrt(n_pad/s) * P^T (H x / sqrt(n_pad)) with D folded in.
     let scale = (n_pad as f64 / s as f64).sqrt() / (n_pad as f64).sqrt();
     SketchOp::SrhtOp { n, n_pad, signs, rows, scale }
@@ -401,6 +468,95 @@ mod tests {
         }
     }
 
+    /// Dense `n x s` sketch built *by definition* from the op's fields —
+    /// independent of `apply_left` (unlike [`materialize`]) so a bug shared
+    /// by `apply_left` and `fold_rows` cannot self-certify. The SRHT arm
+    /// intentionally returns `None`: its independent reference is the FWHT
+    /// path inside `apply_left`, which `fold_rows`'s direct
+    /// Sylvester-Hadamard row evaluation never touches.
+    fn dense_by_definition(op: &SketchOp) -> Option<Matrix> {
+        match op {
+            SketchOp::Select { n, indices, scales } => Some(Matrix::from_fn(
+                *n,
+                indices.len(),
+                |i, j| if indices[j] == i { scales[j] } else { 0.0 },
+            )),
+            SketchOp::RowHash { n, s, cols, signs } => Some(Matrix::from_fn(
+                *n,
+                *s,
+                |i, j| if cols[i] == j { signs[i] } else { 0.0 },
+            )),
+            SketchOp::Dense(m) => Some(m.clone()),
+            SketchOp::SrhtOp { .. } => None,
+        }
+    }
+
+    #[test]
+    fn fold_rows_pinned_against_materialized_stc_every_family() {
+        // The PR-2 static review caught one operator-precedence bug in the
+        // SRHT fold; this pins every `fold_rows` family against an
+        // independently-materialized `S^T A` (by-definition dense S where
+        // possible, the FWHT path for SRHT) over single-row, ragged and
+        // whole-matrix partitions, with n both a power of two and not.
+        let mut rng = Rng::new(40);
+        for n in [32usize, 45] {
+            let a = Matrix::randn(n, 5, &mut rng);
+            for kind in [
+                SketchKind::Uniform,
+                SketchKind::Leverage { scaled: true },
+                SketchKind::Leverage { scaled: false },
+                SketchKind::Gaussian,
+                SketchKind::Srht,
+                SketchKind::CountSketch,
+            ] {
+                let basis = Matrix::randn(n, 3, &mut rng).matmul(&Matrix::randn(3, 6, &mut rng));
+                let op = build(kind, n, 10, Some(&basis), &mut rng);
+                let s_dense = match dense_by_definition(&op) {
+                    Some(s) => s,
+                    None => materialize(&op), // SRHT: FWHT reference
+                };
+                let expect = s_dense.tr_matmul(&a);
+                for tile in [1usize, 7, n] {
+                    let mut acc = Matrix::zeros(op.s(), 5);
+                    let mut r0 = 0;
+                    while r0 < n {
+                        let r1 = (r0 + tile).min(n);
+                        op.fold_rows(r0, &a.block(r0, r1, 0, 5), &mut acc);
+                        r0 = r1;
+                    }
+                    let tol = 1e-10 * expect.fro_norm().max(1.0);
+                    assert!(
+                        acc.max_abs_diff(&expect) <= tol,
+                        "{} n={n} tile={tile}: fold_rows != materialized S^T A",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_estimate_matches_exact_scores() {
+        // l_i = C_i (C^T C)^+ C_i^T must agree with the SVD definition.
+        let mut rng = Rng::new(41);
+        let c = Matrix::randn(50, 3, &mut rng).matmul(&Matrix::randn(3, 7, &mut rng));
+        let exact = leverage_scores(&c);
+        let est = approx_leverage_from_gram(&c.gram_tn());
+        assert!((est.rank - 3.0).abs() < 1e-6, "rank {} != 3", est.rank);
+        let approx = est.scores(&c);
+        for (i, (a, e)) in approx.iter().zip(&exact).enumerate() {
+            assert!((a - e).abs() < 1e-8, "row {i}: gram {a} vs svd {e}");
+        }
+    }
+
+    #[test]
+    fn gram_estimate_handles_zero_matrix() {
+        let est = approx_leverage_from_gram(&Matrix::zeros(4, 4));
+        assert_eq!(est.rank, 0.0);
+        assert_eq!(est.whiten.rows(), 0, "no kept directions");
+        assert_eq!(est.row_score(&[1.0, 2.0, 3.0, 4.0]), 0.0);
+    }
+
     #[test]
     fn conjugate_is_symmetric_for_symmetric_input() {
         let mut rng = Rng::new(1);
@@ -496,6 +652,24 @@ mod tests {
         }
         let expect = x.fro_norm_sq();
         assert!((acc / trials as f64 - expect).abs() / expect < 0.1);
+    }
+
+    #[test]
+    fn srht_oversubscribed_s_clamps_rows_and_scale_together() {
+        // s > n_pad: only n_pad rows exist, and the scale must reflect the
+        // clamped count — with all rows kept the transform is orthogonal,
+        // so S^T S (= C^T Ω Ω^T C at C = I) must be the identity, not
+        // (n_pad/s)·I.
+        let mut rng = Rng::new(30);
+        let n = 20; // pads to 32
+        let op = srht_sketch(n, 100, &mut rng);
+        assert_eq!(op.s(), 32, "row count clamps to n_pad");
+        let sta = op.apply_left(&Matrix::identity(n)); // 32 x 20 = S^T
+        let gram = sta.gram_tn(); // S S^T... = Σ_r S^T-rows outer = I_n
+        assert!(
+            gram.max_abs_diff(&Matrix::identity(n)) < 1e-10,
+            "full-row SRHT must be an exact isometry"
+        );
     }
 
     #[test]

@@ -17,8 +17,8 @@ use crate::coordinator::oracle::KernelOracle;
 use crate::linalg::{gemm, pinv, solve, Matrix};
 use crate::sketch::{self, SketchKind, SketchOp};
 use crate::stream::{
-    CollectConsumer, ConjugateFold, PrototypeUFold, RowGather, SketchFold, StreamConfig,
-    StreamingOracle,
+    CollectConsumer, ConjugateFold, LeverageFold, LeverageSampler, PrototypeUFold, RowGather,
+    SketchFold, StreamConfig, StreamingOracle, TileConsumer,
 };
 use crate::util::{Rng, Stopwatch};
 
@@ -173,6 +173,28 @@ pub fn prototype_streamed(
     }
 }
 
+/// How the leverage family estimates the row-leverage scores of `C`
+/// (Gittens & Mahoney 1303.1849 — leverage sampling is what closes the
+/// accuracy gap over uniform Nyström; the estimator decides what that
+/// accuracy costs in memory).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeverageBasis {
+    /// Exact scores from the `c x c` Gram `C^T C`, folded row-by-row while
+    /// the `C` tiles stream (default): `O(c²)` score state, bit-identical
+    /// results for every tile size.
+    Gram,
+    /// Sketched Gram surrogate `C^T Ω Ω^T C` from an SRHT `Ω` with `m`
+    /// rows, folded in the same pass (`m ≈ 4c` is a good default; `(1±ε)`
+    /// scores once `Ω` embeds col(C)). Deterministic per seed, but its
+    /// reductions regroup by tile, so streamed results match the
+    /// materialized path only to reduction-reordering tolerance.
+    Sketched { m: usize },
+    /// Reference path: SVD of the resident `C` — the historical behavior,
+    /// kept as the accuracy baseline. Needs `O(n·c)` scratch, which is
+    /// exactly what the streamed estimators exist to avoid.
+    ExactSvd,
+}
+
 /// Configuration for the fast model's sketching matrix S.
 #[derive(Debug, Clone, Copy)]
 pub struct FastConfig {
@@ -183,17 +205,35 @@ pub struct FastConfig {
     /// Enforce `P ⊂ S` (Corollary 5; on by default — it both improves
     /// accuracy and enables the (s-c)^2 entry count).
     pub force_p_in_s: bool,
+    /// Score estimator for `SketchKind::Leverage` (ignored otherwise).
+    pub leverage_basis: LeverageBasis,
 }
 
 impl FastConfig {
     pub fn uniform(s: usize) -> Self {
-        FastConfig { s, kind: SketchKind::Uniform, force_p_in_s: true }
+        FastConfig {
+            s,
+            kind: SketchKind::Uniform,
+            force_p_in_s: true,
+            leverage_basis: LeverageBasis::Gram,
+        }
     }
 
     pub fn leverage(s: usize) -> Self {
         // Unscaled by default: the paper (§4.5) reports scaling hurts
         // numerical stability in practice.
-        FastConfig { s, kind: SketchKind::Leverage { scaled: false }, force_p_in_s: true }
+        FastConfig {
+            s,
+            kind: SketchKind::Leverage { scaled: false },
+            force_p_in_s: true,
+            leverage_basis: LeverageBasis::Gram,
+        }
+    }
+
+    /// Override the leverage score estimator.
+    pub fn with_basis(mut self, basis: LeverageBasis) -> Self {
+        self.leverage_basis = basis;
+        self
     }
 }
 
@@ -207,13 +247,17 @@ pub fn fast(
     fast_streamed(oracle, p_idx, cfg, StreamConfig::whole(), rng)
 }
 
-/// The fast model through the tile pipeline. For column-selection sketches
-/// one streamed pass over `K[:, P]` collects `C` and gathers `C[S, :]`
+/// The fast model through the tile pipeline. For uniform selection one
+/// streamed pass over `K[:, P]` collects `C` and gathers `C[S, :]`
 /// (everything `S^T C` and `S^T K S` need besides the `(s-c)²` fresh
 /// oracle block), so peak extra memory beyond the `C` output is
-/// `O(tile_rows · c + s²)`. Projection sketches fold `S^T C` during the
-/// `C` pass and `S^T K S` over full-K row tiles — still observing `n²`
-/// entries (Table 4) but never storing them.
+/// `O(tile_rows · c + s²)`. Leverage selection (default
+/// [`LeverageBasis::Gram`]) folds its `O(c²)` score state in the same
+/// streamed pass and then scores/draws/gathers in one in-memory sweep —
+/// same envelope as uniform; see [`LeverageBasis`] for the variants.
+/// Projection sketches fold `S^T C` during the `C` pass and `S^T K S`
+/// over full-K row tiles — still observing `n²` entries (Table 4) but
+/// never storing them.
 ///
 /// With a whole-tile config this *is* the materialized path ([`fast`]
 /// delegates here); selection-sketch results are bit-identical across tile
@@ -241,17 +285,70 @@ pub fn fast_streamed(
             let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
             (c_mat, stc, sks)
         }
-        SketchKind::Leverage { .. } => {
-            // Leverage scores need all of C: one pass builds it, then S is
-            // drawn and its rows gathered from the in-memory panel.
-            let (c_mat, _) = build_c_panel(oracle, p_idx, stream_cfg, None);
-            let op = build_selection_sketch(Some(&c_mat), p_idx, cfg, n, rng);
-            let (indices, scales) = select_parts(&op);
-            let rows_s = c_mat.select_rows(&indices);
-            let stc = scale_rows(&rows_s, &scales);
-            let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
-            (c_mat, stc, sks)
-        }
+        SketchKind::Leverage { scaled } => match cfg.leverage_basis {
+            LeverageBasis::ExactSvd => {
+                // Reference path (the historical behavior): one pass builds
+                // C, then scores come from an SVD of the resident panel —
+                // `O(n·c)` scratch the streamed estimators avoid.
+                let (c_mat, _) = build_c_panel(oracle, p_idx, stream_cfg, None);
+                let op = build_selection_sketch(Some(&c_mat), p_idx, cfg, n, rng);
+                let (indices, scales) = select_parts(&op);
+                let rows_s = c_mat.select_rows(&indices);
+                let stc = scale_rows(&rows_s, &scales);
+                let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+                (c_mat, stc, sks)
+            }
+            basis => {
+                // Streamed two-pass plan. Pass 1: the O(c²) leverage state
+                // (row-ordered Gram, or the SRHT surrogate Ω^T C) folds
+                // while the C tiles stream — the score computation never
+                // needs the n x c panel at once, so beyond the C output the
+                // working set is O(tile_rows·c + c²). Pass 2: the sampler
+                // sweeps the panel in row order, scoring, drawing and
+                // gathering C[S, :] in one pass; here the panel is the
+                // build's own (resident) output, so the sweep costs no
+                // oracle entries.
+                let sk_op;
+                let mut collect = CollectConsumer::new(n, p_idx.len());
+                let mut fold = match basis {
+                    LeverageBasis::Sketched { m } => {
+                        sk_op = sketch::srht_sketch(n, m.max(p_idx.len()), rng);
+                        LeverageFold::sketched(&sk_op, p_idx.len())
+                    }
+                    _ => LeverageFold::exact(p_idx.len()),
+                };
+                let so = StreamingOracle::new(oracle, stream_cfg);
+                so.stream_columns(p_idx, &mut [&mut collect, &mut fold]);
+                let c_mat = collect.into_matrix();
+                let est = fold.into_estimate();
+
+                let s_extra = cfg
+                    .s
+                    .saturating_sub(if cfg.force_p_in_s { p_idx.len() } else { 0 })
+                    .max(1);
+                let forced = if cfg.force_p_in_s { p_idx.to_vec() } else { Vec::new() };
+                let mut sampler =
+                    LeverageSampler::new(&est, s_extra, scaled, forced, n, p_idx.len(), rng);
+                sampler.consume(0, &c_mat);
+                let (mut indices, mut scales, mut rows_s, sampled) = sampler.into_parts();
+                if sampled == 0 {
+                    // Degenerate draw (e.g. all-zero scores): one uniform
+                    // pick so S is non-empty even without forced indices,
+                    // mirroring sketch::leverage — which, like this, may
+                    // land inside P, in which case S == P and the build
+                    // legitimately degenerates to Nyström for this draw.
+                    let pick = rng.usize_below(n);
+                    if let Err(pos) = indices.binary_search(&pick) {
+                        indices.insert(pos, pick);
+                        scales.insert(pos, 1.0);
+                        rows_s = c_mat.select_rows(&indices);
+                    }
+                }
+                let stc = scale_rows(&rows_s, &scales);
+                let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+                (c_mat, stc, sks)
+            }
+        },
         _ => {
             // Projection sketches need every entry of K (Table 4 —
             // theoretical interest / benchmarking only).
@@ -512,7 +609,12 @@ mod tests {
         let o = spsd_oracle(30, 8, 7);
         let mut rng = Rng::new(8);
         let p = uniform_p(30, 6, &mut rng);
-        let cfg = FastConfig { s: 0, kind: SketchKind::Uniform, force_p_in_s: true };
+        let cfg = FastConfig {
+            s: 0,
+            kind: SketchKind::Uniform,
+            force_p_in_s: true,
+            leverage_basis: LeverageBasis::Gram,
+        };
         // s=0 extra → sketch falls back to >=1 extra uniform index; instead
         // emulate exactly S=P via a leverage config with zero extras:
         let mut rng2 = Rng::new(9);
@@ -552,6 +654,28 @@ mod tests {
     }
 
     #[test]
+    fn leverage_bases_all_recover_low_rank() {
+        // Theorem 6 holds for any S ⊇ P with rank(S^T C) = rank(C), so all
+        // three score estimators must recover a low-rank K exactly —
+        // including the sketched surrogate, whatever its score noise.
+        let n = 40;
+        let r = 5;
+        let o = spsd_oracle(n, r, 30);
+        let mut rng = Rng::new(31);
+        let p = uniform_p(n, 2 * r, &mut rng);
+        for basis in [
+            LeverageBasis::Gram,
+            LeverageBasis::Sketched { m: 40 },
+            LeverageBasis::ExactSvd,
+        ] {
+            let cfg = FastConfig::leverage(3 * r).with_basis(basis);
+            let a = fast(&o, &p, cfg, &mut rng);
+            let err = a.rel_fro_error(o.inner());
+            assert!(err < 1e-8, "{basis:?}: rel err {err}");
+        }
+    }
+
+    #[test]
     fn projection_sketches_work_and_observe_n2() {
         let n = 30;
         let o = spsd_oracle(n, 4, 12);
@@ -559,7 +683,12 @@ mod tests {
         let p = uniform_p(n, 8, &mut rng);
         for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::CountSketch] {
             o.reset_entries();
-            let cfg = FastConfig { s: 20, kind, force_p_in_s: false };
+            let cfg = FastConfig {
+                s: 20,
+                kind,
+                force_p_in_s: false,
+                leverage_basis: LeverageBasis::Gram,
+            };
             let a = fast(&o, &p, cfg, &mut rng);
             let err = a.rel_fro_error(o.inner());
             assert!(err < 1e-8, "{}: err {err}", kind.name());
@@ -610,7 +739,12 @@ mod tests {
         let o = spsd_oracle(n, 5, 22);
         let p = uniform_p(n, 7, &mut Rng::new(23));
         for kind in [SketchKind::Gaussian, SketchKind::CountSketch, SketchKind::Srht] {
-            let cfg = FastConfig { s: 18, kind, force_p_in_s: false };
+            let cfg = FastConfig {
+                s: 18,
+                kind,
+                force_p_in_s: false,
+                leverage_basis: LeverageBasis::Gram,
+            };
             let a = fast(&o, &p, cfg, &mut Rng::new(55));
             let b = fast_streamed(&o, &p, cfg, StreamConfig::tiled(9), &mut Rng::new(55));
             let k = o.inner();

@@ -12,7 +12,8 @@
 //! relative — asserted by `tests/stream_equiv.rs`).
 
 use crate::linalg::{gemm, Matrix};
-use crate::sketch::SketchOp;
+use crate::sketch::{self, SketchOp};
+use crate::util::Rng;
 
 /// Folds streamed row-tiles. `consume` is called once per tile, in
 /// ascending `r0` order, with `tile.rows()` rows starting at virtual row
@@ -188,6 +189,183 @@ impl TileConsumer for GramFold {
     fn consume(&mut self, _r0: usize, tile: &Matrix) {
         gemm::syrk_tn_into(tile, &mut self.scratch);
         self.acc.axpy(1.0, &self.scratch);
+    }
+}
+
+/// Pass-1 leverage fold (the streamed leverage estimator): accumulates the
+/// state approximate row-leverage scores of the streamed panel are computed
+/// from, in `O(c²)` (exact Gram `C^T C`) or `O(m·c)` (projection surrogate
+/// `Ω^T C`) memory — never the `n x c` panel.
+///
+/// The exact mode accumulates the Gram **row by row in ascending order**
+/// (not per-tile `syrk` like [`GramFold`]): every `G[i][j]` receives the
+/// same additions in the same order for every tile grouping, so the folded
+/// Gram — and every score, draw and index derived from it — is
+/// bit-identical across tile sizes. That determinism is what lets
+/// `tests/stream_equiv.rs` assert bit-equality for the streamed leverage
+/// family; the per-row rank-1 updates cost the same flops as `syrk`, just
+/// less blocked (fine at leverage-sized `c`). The sketched mode folds
+/// `Ω^T C` through [`SketchOp::fold_rows`]; its reductions regroup by
+/// tile, so results match only to reduction-reordering tolerance.
+pub struct LeverageFold<'a> {
+    acc: LevAcc<'a>,
+}
+
+enum LevAcc<'a> {
+    /// Upper triangle of `C^T C`, row-ordered accumulation.
+    Exact { gram: Matrix },
+    /// `Ω^T C` for a projection sketch `Ω` (surrogate `(Ω^T C)^T (Ω^T C)`).
+    Sketched { op: &'a SketchOp, acc: Matrix },
+}
+
+impl<'a> LeverageFold<'a> {
+    /// Exact `width x width` Gram fold.
+    pub fn exact(width: usize) -> Self {
+        LeverageFold { acc: LevAcc::Exact { gram: Matrix::zeros(width, width) } }
+    }
+
+    /// Sketched fold `Ω^T C`; the estimate comes from the Gram surrogate
+    /// `C^T Ω Ω^T C` (a subspace embedding makes it `(1±ε)`-accurate).
+    pub fn sketched(op: &'a SketchOp, width: usize) -> Self {
+        LeverageFold { acc: LevAcc::Sketched { op, acc: Matrix::zeros(op.s(), width) } }
+    }
+
+    /// Finish the fold: whitening factor + numerical rank.
+    pub fn into_estimate(self) -> sketch::LeverageEstimate {
+        match self.acc {
+            LevAcc::Exact { mut gram } => {
+                // mirror the accumulated upper triangle (exact copy, so the
+                // result stays deterministic)
+                for i in 0..gram.rows() {
+                    for j in (i + 1)..gram.cols() {
+                        gram[(j, i)] = gram[(i, j)];
+                    }
+                }
+                sketch::approx_leverage_from_gram(&gram)
+            }
+            LevAcc::Sketched { acc, .. } => sketch::approx_leverage_from_gram(&acc.gram_tn()),
+        }
+    }
+}
+
+impl TileConsumer for LeverageFold<'_> {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        match &mut self.acc {
+            LevAcc::Exact { gram } => {
+                let w = tile.cols();
+                debug_assert_eq!(w, gram.cols(), "tile width != gram size");
+                for r in 0..tile.rows() {
+                    let row = tile.row(r);
+                    for i in 0..w {
+                        let vi = row[i];
+                        let dst = gram.row_mut(i);
+                        for j in i..w {
+                            dst[j] += vi * row[j];
+                        }
+                    }
+                }
+            }
+            LevAcc::Sketched { op, acc } => op.fold_rows(r0, tile, acc),
+        }
+    }
+}
+
+/// Pass-2 leverage sampler: scores each streamed row of `C` against a
+/// [`LeverageEstimate`](sketch::LeverageEstimate), draws membership with
+/// `p_i = min(1, s·l_i/rank)` (Algorithm 2), and gathers the selected rows
+/// — scoring, drawing `S` and extracting `C[S, :]` in one sweep over the
+/// panel, with `O(|S|·c)` retained state. Forced indices (the `P ⊂ S`
+/// trick) are always kept, at scale 1.
+///
+/// Exactly one Bernoulli is drawn per row, in ascending row order, whether
+/// or not the row is forced: the rng stream is therefore independent of
+/// the tile grouping, which keeps the drawn `S` bit-identical across tile
+/// sizes (given a bit-identical estimate — see [`LeverageFold`]).
+pub struct LeverageSampler<'a> {
+    est: &'a sketch::LeverageEstimate,
+    /// Expected number of sampled (non-forced) rows.
+    s_target: usize,
+    /// Apply the `1/sqrt(p)` importance scaling (§4.5: off is the paper's
+    /// stability trick).
+    scaled: bool,
+    /// Sorted, deduplicated forced indices (`P`).
+    forced: Vec<usize>,
+    n: usize,
+    rng: &'a mut Rng,
+    indices: Vec<usize>,
+    scales: Vec<f64>,
+    /// Gathered rows, flattened row-major at `width` columns.
+    data: Vec<f64>,
+    width: usize,
+    /// Rows the Bernoulli draw hit — forced or not, exactly like the index
+    /// count `sketch::leverage` checks before its uniform-pick fallback
+    /// (callers use 0 to trigger the same fallback).
+    sampled: usize,
+}
+
+impl<'a> LeverageSampler<'a> {
+    pub fn new(
+        est: &'a sketch::LeverageEstimate,
+        s_target: usize,
+        scaled: bool,
+        mut forced: Vec<usize>,
+        n: usize,
+        width: usize,
+        rng: &'a mut Rng,
+    ) -> Self {
+        forced.sort_unstable();
+        forced.dedup();
+        LeverageSampler {
+            est,
+            s_target,
+            scaled,
+            forced,
+            n,
+            rng,
+            indices: Vec::new(),
+            scales: Vec::new(),
+            data: Vec::new(),
+            width,
+            sampled: 0,
+        }
+    }
+
+    /// `(indices, scales, gathered rows C[S, :], Bernoulli hit count)`.
+    /// Indices are ascending; rows are unscaled (scales are reported
+    /// separately, matching what `assemble_sks` expects).
+    pub fn into_parts(self) -> (Vec<usize>, Vec<f64>, Matrix, usize) {
+        let rows = Matrix::from_vec(self.indices.len(), self.width, self.data);
+        (self.indices, self.scales, rows, self.sampled)
+    }
+}
+
+impl TileConsumer for LeverageSampler<'_> {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        debug_assert_eq!(tile.cols(), self.width, "tile width != sampler width");
+        for r in 0..tile.rows() {
+            let i = r0 + r;
+            let row = tile.row(r);
+            let l = self.est.row_score(row);
+            let p = if self.est.rank > 0.0 {
+                (self.s_target as f64 * l / self.est.rank).min(1.0)
+            } else {
+                (self.s_target as f64 / self.n.max(1) as f64).min(1.0)
+            };
+            let hit = self.rng.bernoulli(p);
+            let is_forced = self.forced.binary_search(&i).is_ok();
+            if hit {
+                self.sampled += 1;
+            }
+            if hit || is_forced {
+                self.indices.push(i);
+                self.scales.push(if !is_forced && self.scaled && p > 0.0 {
+                    1.0 / p.sqrt()
+                } else {
+                    1.0
+                });
+                self.data.extend_from_slice(row);
+            }
+        }
     }
 }
 
@@ -414,6 +592,75 @@ mod tests {
                     kind.name()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn leverage_fold_estimate_is_bit_identical_across_tilings() {
+        let mut rng = Rng::new(7);
+        let c = Matrix::randn(53, 6, &mut rng);
+        let reference = {
+            let mut fold = LeverageFold::exact(6);
+            stream_all(&c, 53, &mut [&mut fold]);
+            fold.into_estimate()
+        };
+        // the exact scores must come out of the Gram factorization
+        let exact = sketch::leverage_scores(&c);
+        let got = reference.scores(&c);
+        for (g, e) in got.iter().zip(&exact) {
+            assert!((g - e).abs() < 1e-8, "gram score {g} vs svd {e}");
+        }
+        for tile in [1usize, 7, 16] {
+            let mut fold = LeverageFold::exact(6);
+            stream_all(&c, tile, &mut [&mut fold]);
+            let est = fold.into_estimate();
+            assert_eq!(est.rank, reference.rank, "tile={tile}");
+            assert_eq!(
+                est.whiten.max_abs_diff(&reference.whiten),
+                0.0,
+                "tile={tile}: row-ordered Gram must not depend on tiling"
+            );
+        }
+    }
+
+    #[test]
+    fn leverage_fold_sketched_surrogate_close_on_low_rank() {
+        let mut rng = Rng::new(8);
+        let c = Matrix::randn(48, 3, &mut rng).matmul(&Matrix::randn(3, 6, &mut rng));
+        // m = n_pad rows: the SRHT is orthogonal, surrogate == exact Gram
+        let op = sketch::srht_sketch(48, 64, &mut rng);
+        let mut fold = LeverageFold::sketched(&op, 6);
+        stream_all(&c, 10, &mut [&mut fold]);
+        let est = fold.into_estimate();
+        let exact = sketch::leverage_scores(&c);
+        for (i, (g, e)) in est.scores(&c).iter().zip(&exact).enumerate() {
+            assert!((g - e).abs() < 1e-8, "row {i}: surrogate {g} vs exact {e}");
+        }
+    }
+
+    #[test]
+    fn leverage_sampler_is_tile_invariant_and_keeps_forced() {
+        let mut rng = Rng::new(9);
+        let c = Matrix::randn(61, 5, &mut rng);
+        let est = sketch::approx_leverage_from_gram(&c.gram_tn());
+        let reference = {
+            let mut r = Rng::new(11);
+            let mut s = LeverageSampler::new(&est, 12, false, vec![40, 3, 3], 61, 5, &mut r);
+            stream_all(&c, 61, &mut [&mut s]);
+            s.into_parts()
+        };
+        let (ref_idx, ref_scales, ref_rows, _) = reference;
+        assert!(ref_idx.windows(2).all(|w| w[0] < w[1]), "ascending, unique");
+        assert!(ref_idx.contains(&3) && ref_idx.contains(&40), "forced kept");
+        assert!(ref_scales.iter().all(|&s| s == 1.0), "unscaled mode");
+        assert_eq!(ref_rows.max_abs_diff(&c.select_rows(&ref_idx)), 0.0);
+        for tile in [1usize, 9, 32] {
+            let mut r = Rng::new(11);
+            let mut s = LeverageSampler::new(&est, 12, false, vec![40, 3, 3], 61, 5, &mut r);
+            stream_all(&c, tile, &mut [&mut s]);
+            let (idx, _, rows, _) = s.into_parts();
+            assert_eq!(idx, ref_idx, "tile={tile}: drawn S must not depend on tiling");
+            assert_eq!(rows.max_abs_diff(&ref_rows), 0.0, "tile={tile}");
         }
     }
 

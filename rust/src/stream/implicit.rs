@@ -7,8 +7,18 @@
 //! which is the right trade exactly when `C` does not fit next to the rest
 //! of the workload. When `C` is resident, use
 //! [`SpsdApprox::eig_k`](crate::spsd::SpsdApprox::eig_k) instead.
+//!
+//! Between those extremes sits the opt-in cached-`C` mode
+//! ([`top_k_eigs_budgeted`] / [`solve_regularized_budgeted`], or wrapping
+//! any source in a [`CachingSource`] yourself): when the panel fits the
+//! caller's `memory_budget` (the planner's
+//! [`Goal::memory_budget`](crate::coordinator::planner::Goal) unit), the
+//! first pass materializes it and every later Lanczos matvec reads memory
+//! instead of re-streaming n kernel tiles per iteration.
 
-use super::{run_pipeline, GramFold, MatvecFold, StreamConfig, TileConsumer, TileSource};
+use super::{
+    run_pipeline, CachingSource, GramFold, MatvecFold, StreamConfig, TileConsumer, TileSource,
+};
 use crate::linalg::{eigh, lanczos, solve, Matrix};
 
 /// Second-pass consumer: `y[r0..r1] = tile · z`.
@@ -104,6 +114,39 @@ pub fn top_k_eigs(
     lanczos::lanczos_top_k_op(src.rows(), k, seed, |v| matvec_cuc(src, u, v, cfg))
 }
 
+/// [`top_k_eigs`] with the opt-in cached-`C` mode: when the full panel
+/// fits `memory_budget` bytes, the first Lanczos pass materializes it
+/// through a [`CachingSource`] and every later matvec reads memory instead
+/// of re-evaluating kernel tiles (the oracle is charged exactly one `n·c`
+/// observation). Over budget, behavior — and peak memory — is exactly
+/// [`top_k_eigs`].
+pub fn top_k_eigs_budgeted(
+    src: &dyn TileSource,
+    u: &Matrix,
+    k: usize,
+    seed: u64,
+    cfg: StreamConfig,
+    memory_budget: u64,
+) -> (Vec<f64>, Matrix) {
+    let cached = CachingSource::new(src, memory_budget);
+    top_k_eigs(&cached, u, k, seed, cfg)
+}
+
+/// [`solve_regularized`] with the opt-in cached-`C` mode (see
+/// [`top_k_eigs_budgeted`]): the emit pass reuses the tiles the fold pass
+/// cached when the budget allows.
+pub fn solve_regularized_budgeted(
+    src: &dyn TileSource,
+    u: &Matrix,
+    alpha: f64,
+    y: &[f64],
+    cfg: StreamConfig,
+    memory_budget: u64,
+) -> Vec<f64> {
+    let cached = CachingSource::new(src, memory_budget);
+    solve_regularized(&cached, u, alpha, y, cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +201,54 @@ mod tests {
         let w = solve_regularized(&src, &u1, 0.6, &y, StreamConfig::tiled(8));
         for (a, b) in w.iter().zip(&direct) {
             assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn budgeted_topk_matches_and_stops_restreaming() {
+        use crate::coordinator::oracle::{KernelOracle, RbfOracle};
+        use crate::stream::OracleColumnsSource;
+        use std::sync::Arc;
+        let mut rng = Rng::new(4);
+        let x = Arc::new(Matrix::randn(50, 5, &mut rng));
+        let o = RbfOracle::cpu(x, 0.6);
+        let cols = [2usize, 11, 23, 40];
+        let mut u = Matrix::randn(4, 4, &mut rng);
+        u.symmetrize();
+        let src = OracleColumnsSource::new(&o, &cols);
+        let cfg = StreamConfig::tiled(16);
+
+        o.reset_entries();
+        let (vals_plain, _) = top_k_eigs(&src, &u, 2, 9, cfg);
+        let entries_plain = o.entries_observed();
+
+        o.reset_entries();
+        let (vals_cached, _) = top_k_eigs_budgeted(&src, &u, 2, 9, cfg, u64::MAX);
+        let entries_cached = o.entries_observed();
+
+        // identical arithmetic (cached tiles are bit-identical), far fewer
+        // kernel evaluations: exactly one n·c observation instead of two
+        // per Lanczos step
+        for (a, b) in vals_plain.iter().zip(&vals_cached) {
+            assert_eq!(a, b, "cached Lanczos must be bit-identical");
+        }
+        assert_eq!(entries_cached, 50 * 4, "cache must charge exactly one pass");
+        assert!(entries_plain > entries_cached, "plain path must re-stream");
+
+        // zero budget: identical results, identical (re-streaming) cost
+        o.reset_entries();
+        let (vals_zero, _) = top_k_eigs_budgeted(&src, &u, 2, 9, cfg, 0);
+        assert_eq!(o.entries_observed(), entries_plain);
+        for (a, b) in vals_plain.iter().zip(&vals_zero) {
+            assert_eq!(a, b);
+        }
+
+        // and the budgeted solve agrees with the plain one
+        let y: Vec<f64> = (0..50).map(|i| (i as f64 * 0.7).cos()).collect();
+        let w_plain = solve_regularized(&src, &u.gram_nt(), 0.4, &y, cfg);
+        let w_cached = solve_regularized_budgeted(&src, &u.gram_nt(), 0.4, &y, cfg, u64::MAX);
+        for (a, b) in w_plain.iter().zip(&w_cached) {
+            assert_eq!(a, b);
         }
     }
 

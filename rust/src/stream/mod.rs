@@ -23,14 +23,17 @@ pub mod implicit;
 pub mod pipeline;
 
 pub use consumers::{
-    ColSubsetCollect, CollectConsumer, ConjugateFold, GramFold, MatvecFold, PrototypeUFold,
-    RowGather, SketchFold, TileConsumer,
+    ColSubsetCollect, CollectConsumer, ConjugateFold, GramFold, LeverageFold, LeverageSampler,
+    MatvecFold, PrototypeUFold, RowGather, SketchFold, TileConsumer,
 };
-pub use implicit::{matvec_cuc, solve_regularized, top_k_eigs};
+pub use implicit::{
+    matvec_cuc, solve_regularized, solve_regularized_budgeted, top_k_eigs, top_k_eigs_budgeted,
+};
 pub use pipeline::run_pipeline;
 
 use crate::coordinator::oracle::KernelOracle;
 use crate::linalg::Matrix;
+use std::sync::Mutex;
 
 /// How a build should traverse the kernel: one whole-matrix tile (the
 /// materialized path, bit-compatible with the historical code) or
@@ -177,6 +180,87 @@ impl TileSource for MatrixSource<'_> {
     }
 }
 
+/// Budget-gated cached-`C` wrapper for the re-streaming implicit ops
+/// (`stream::implicit` recomputes `C`'s kernel tiles on every Lanczos
+/// matvec): the first sequential pass stores tiles into a resident panel;
+/// once every row has been seen, later passes slice memory instead of
+/// recomputing kernel tiles. Caching engages only when the whole
+/// `rows x cols` panel fits within `memory_budget` bytes — the same unit
+/// as the planner's [`Goal::memory_budget`](crate::coordinator::planner::Goal)
+/// — otherwise `tile` is a pure passthrough and peak memory is unchanged.
+pub struct CachingSource<'a> {
+    inner: &'a dyn TileSource,
+    cache: Mutex<CacheState>,
+    enabled: bool,
+}
+
+struct CacheState {
+    buf: Matrix,
+    /// Rows `[0, filled)` of `buf` hold valid data. Pipeline passes visit
+    /// tiles as an ascending contiguous prefix, so one high-water mark
+    /// suffices; out-of-order requests simply bypass the fill.
+    filled: usize,
+}
+
+impl<'a> CachingSource<'a> {
+    pub fn new(inner: &'a dyn TileSource, memory_budget: u64) -> Self {
+        let bytes = (inner.rows() as u64)
+            .saturating_mul(inner.cols() as u64)
+            .saturating_mul(std::mem::size_of::<f64>() as u64);
+        let enabled = inner.rows() > 0 && bytes <= memory_budget;
+        let buf = if enabled {
+            Matrix::zeros(inner.rows(), inner.cols())
+        } else {
+            Matrix::zeros(0, 0)
+        };
+        CachingSource { inner, cache: Mutex::new(CacheState { buf, filled: 0 }), enabled }
+    }
+
+    /// Whether the budget admitted the cache at all.
+    pub fn cache_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// True once the whole panel is resident (subsequent passes are free).
+    pub fn fully_cached(&self) -> bool {
+        self.enabled && self.cache.lock().unwrap().filled == self.inner.rows()
+    }
+}
+
+impl TileSource for CachingSource<'_> {
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn tile(&self, r0: usize, r1: usize) -> Matrix {
+        if !self.enabled {
+            return self.inner.tile(r0, r1);
+        }
+        {
+            let st = self.cache.lock().unwrap();
+            if r1 <= st.filled {
+                let w = st.buf.cols();
+                return st.buf.block(r0, r1, 0, w);
+            }
+        }
+        // compute outside the lock — kernel tiles can be expensive
+        let t = self.inner.tile(r0, r1);
+        let mut st = self.cache.lock().unwrap();
+        if r0 <= st.filled && r1 > st.filled {
+            // extends the contiguous prefix: keep it
+            for i in st.filled.max(r0)..r1 {
+                st.buf.row_mut(i).copy_from_slice(t.row(i - r0));
+            }
+            st.filled = r1;
+        }
+        t
+    }
+}
+
 /// Adapter wrapping any [`KernelOracle`] with a stream configuration: the
 /// entry point the streamed model builders use. It is itself a
 /// [`KernelOracle`] (pure delegation), so it drops into every existing
@@ -293,6 +377,38 @@ mod tests {
         assert!(so.entries_observed() >= 17 * 4);
         so.reset_entries();
         assert_eq!(so.entries_observed(), 0);
+    }
+
+    #[test]
+    fn caching_source_serves_later_passes_from_memory() {
+        use crate::coordinator::oracle::RbfOracle;
+        use std::sync::Arc;
+        let mut rng = Rng::new(5);
+        let x = Arc::new(Matrix::randn(40, 4, &mut rng));
+        let o = RbfOracle::cpu(x, 0.5);
+        let cols = [1usize, 5, 9];
+        let src = OracleColumnsSource::new(&o, &cols);
+        let cached = CachingSource::new(&src, u64::MAX);
+        assert!(cached.cache_enabled());
+        let mut c1 = CollectConsumer::new(40, 3);
+        run_pipeline(&cached, 8, 2, &mut [&mut c1]);
+        let after_first = o.entries_observed();
+        assert!(cached.fully_cached(), "one full pass must fill the cache");
+        // second pass (different tile height): zero new kernel entries,
+        // bit-identical tiles
+        let mut c2 = CollectConsumer::new(40, 3);
+        run_pipeline(&cached, 13, 2, &mut [&mut c2]);
+        assert_eq!(o.entries_observed(), after_first, "cached pass re-observed the oracle");
+        assert_eq!(c1.into_matrix().max_abs_diff(&c2.into_matrix()), 0.0);
+
+        // budget below the panel: pure passthrough, entries keep accruing
+        let strict = CachingSource::new(&src, 39 * 3 * 8);
+        assert!(!strict.cache_enabled());
+        let before = o.entries_observed();
+        let mut c3 = CollectConsumer::new(40, 3);
+        run_pipeline(&strict, 8, 2, &mut [&mut c3]);
+        assert!(o.entries_observed() > before);
+        assert!(!strict.fully_cached());
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Leverage-score invariants and the streamed estimator: the exact SVD
+//! definition (`sketch::leverage_scores`), the Gram-based streamed
+//! estimator (`sketch::approx_leverage_from_gram` + `stream::LeverageFold`),
+//! and the sampler, pinned against each other on low-rank inputs with
+//! fixed RNG.
+
+use fastspsd::linalg::Matrix;
+use fastspsd::sketch;
+use fastspsd::stream::{run_pipeline, LeverageFold, LeverageSampler, MatrixSource};
+use fastspsd::util::Rng;
+
+fn low_rank(n: usize, d: usize, r: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::randn(n, r, &mut rng).matmul(&Matrix::randn(r, d, &mut rng))
+}
+
+#[test]
+fn exact_scores_invariants() {
+    // Non-negative, each ≤ 1, and summing to rank(C) — for full-rank and
+    // rank-deficient panels alike.
+    for (n, d, r, seed) in [(40usize, 6usize, 6usize, 1u64), (55, 8, 3, 2)] {
+        let c = low_rank(n, d, r, seed);
+        let l = sketch::leverage_scores(&c);
+        assert_eq!(l.len(), n);
+        let sum: f64 = l.iter().sum();
+        assert!((sum - r as f64).abs() < 1e-7, "sum {sum} != rank {r}");
+        for (i, &s) in l.iter().enumerate() {
+            assert!((-1e-12..=1.0 + 1e-9).contains(&s), "score[{i}] = {s} out of [0, 1]");
+        }
+    }
+}
+
+#[test]
+fn exact_scores_are_permutation_equivariant() {
+    // scores(P·C) must equal P·scores(C): leverage is a per-row property.
+    let c = low_rank(40, 6, 4, 3);
+    let scores = sketch::leverage_scores(&c);
+    let mut rng = Rng::new(4);
+    let mut perm: Vec<usize> = (0..40).collect();
+    rng.shuffle(&mut perm);
+    let cp = c.select_rows(&perm);
+    let sp = sketch::leverage_scores(&cp);
+    for (j, &i) in perm.iter().enumerate() {
+        assert!(
+            (sp[j] - scores[i]).abs() < 1e-8,
+            "permuted score {j} = {} vs original {i} = {}",
+            sp[j],
+            scores[i]
+        );
+    }
+}
+
+#[test]
+fn gram_estimator_is_permutation_equivariant_too() {
+    // The Gram is permutation-invariant, so the whitening factor — and
+    // therefore every score — must be exactly equivariant.
+    let c = low_rank(36, 5, 3, 5);
+    let est = sketch::approx_leverage_from_gram(&c.gram_tn());
+    let mut rng = Rng::new(6);
+    let mut perm: Vec<usize> = (0..36).collect();
+    rng.shuffle(&mut perm);
+    let scores = est.scores(&c);
+    let cp = c.select_rows(&perm);
+    let sp = est.scores(&cp);
+    for (j, &i) in perm.iter().enumerate() {
+        assert_eq!(sp[j], scores[i], "row_score depends only on the row");
+    }
+}
+
+#[test]
+fn exact_vs_approx_agree_on_low_rank_with_fixed_rng() {
+    // The streamed (Gram) estimator and the SVD definition must agree to
+    // fp accuracy on a low-rank panel, and folding the Gram through the
+    // tile pipeline must not change a bit of it.
+    let c = low_rank(60, 8, 3, 7);
+    let exact = sketch::leverage_scores(&c);
+    let direct = sketch::approx_leverage_from_gram(&c.gram_tn());
+    assert!((direct.rank - 3.0).abs() < 1e-6, "gram rank {}", direct.rank);
+
+    let src = MatrixSource::new(&c);
+    let mut fold = LeverageFold::exact(8);
+    run_pipeline(&src, 13, 2, &mut [&mut fold]);
+    let streamed = fold.into_estimate();
+    assert_eq!(streamed.rank, direct.rank);
+
+    for (i, (&e, (d, s))) in exact
+        .iter()
+        .zip(streamed.scores(&c).iter().zip(direct.scores(&c)))
+        .enumerate()
+    {
+        assert!((d - e).abs() < 1e-8, "row {i}: streamed {d} vs svd {e}");
+        assert!((s - e).abs() < 1e-8, "row {i}: direct {s} vs svd {e}");
+    }
+}
+
+#[test]
+fn sketched_surrogate_with_orthogonal_srht_is_exact() {
+    // With m = n_pad rows the SRHT is a (scaled) orthogonal transform, so
+    // the surrogate C^T Ω Ω^T C equals C^T C up to FWHT rounding and the
+    // scores must match the exact ones.
+    let n = 48; // pads to 64
+    let c = low_rank(n, 7, 4, 8);
+    let mut rng = Rng::new(9);
+    let op = sketch::srht_sketch(n, 64, &mut rng);
+    let src = MatrixSource::new(&c);
+    let mut fold = LeverageFold::sketched(&op, 7);
+    run_pipeline(&src, 11, 2, &mut [&mut fold]);
+    let est = fold.into_estimate();
+    let exact = sketch::leverage_scores(&c);
+    for (i, (g, e)) in est.scores(&c).iter().zip(&exact).enumerate() {
+        assert!((g - e).abs() < 1e-8, "row {i}: surrogate {g} vs exact {e}");
+    }
+}
+
+#[test]
+fn sketched_surrogate_statistical_sanity_at_small_m() {
+    // m ≈ 4c rows: no exactness guarantee, but scores must stay
+    // non-negative and their sum must land within a constant factor of the
+    // rank (the surrogate rank normalizer the sampler divides by).
+    let n = 64;
+    let r = 3;
+    let c = low_rank(n, 7, r, 10);
+    let mut rng = Rng::new(11);
+    let op = sketch::srht_sketch(n, 28, &mut rng);
+    let src = MatrixSource::new(&c);
+    let mut fold = LeverageFold::sketched(&op, 7);
+    run_pipeline(&src, 9, 2, &mut [&mut fold]);
+    let est = fold.into_estimate();
+    let scores = est.scores(&c);
+    assert!(scores.iter().all(|&s| s >= -1e-12), "negative surrogate score");
+    let sum: f64 = scores.iter().sum();
+    assert!(
+        sum > r as f64 / 2.0 && sum < r as f64 * 2.0,
+        "surrogate score mass {sum} far from rank {r}"
+    );
+}
+
+#[test]
+fn sampler_expected_size_tracks_target() {
+    // With exact scores and no cap saturation the expected |S \ P| is the
+    // target; check the empirical mean over seeds stays within ±50%.
+    let c = low_rank(200, 10, 8, 12);
+    let est = sketch::approx_leverage_from_gram(&c.gram_tn());
+    let target = 16usize;
+    let mut total = 0usize;
+    let trials = 30u64;
+    for t in 0..trials {
+        let mut rng = Rng::new(100 + t);
+        let mut s = LeverageSampler::new(&est, target, false, Vec::new(), 200, 10, &mut rng);
+        let src = MatrixSource::new(&c);
+        run_pipeline(&src, 32, 2, &mut [&mut s]);
+        let (idx, _, _, sampled) = s.into_parts();
+        assert_eq!(idx.len(), sampled, "no forced rows here");
+        total += sampled;
+    }
+    let mean = total as f64 / trials as f64;
+    assert!(
+        mean > target as f64 * 0.5 && mean < target as f64 * 1.5,
+        "mean |S| {mean} vs target {target}"
+    );
+}
+
+#[test]
+fn sampler_scaled_mode_uses_inverse_sqrt_p() {
+    let c = low_rank(45, 6, 4, 13);
+    let est = sketch::approx_leverage_from_gram(&c.gram_tn());
+    let mut rng = Rng::new(14);
+    let mut s = LeverageSampler::new(&est, 10, true, vec![7], 45, 6, &mut rng);
+    let src = MatrixSource::new(&c);
+    run_pipeline(&src, 45, 2, &mut [&mut s]);
+    let (idx, scales, _, _) = s.into_parts();
+    for (&i, &sc) in idx.iter().zip(&scales) {
+        if i == 7 {
+            assert_eq!(sc, 1.0, "forced rows are never rescaled");
+        } else {
+            let p = (10.0 * est.row_score(c.row(i)) / est.rank).min(1.0);
+            assert!(
+                (sc - 1.0 / p.sqrt()).abs() < 1e-12,
+                "row {i}: scale {sc} vs 1/sqrt(p) {}",
+                1.0 / p.sqrt()
+            );
+        }
+    }
+}

@@ -74,6 +74,42 @@ fn streamed_builds_respect_the_memory_bound() {
          (C growth only accounts for {c_growth} B)"
     );
 
+    // --- fast model (leverage family): the streamed Gram estimator keeps
+    // the score state at O(c²), so the peak extra obeys the SAME
+    // O(tile·c + s²) envelope as uniform — the acceptance criterion. The
+    // historical resident-SVD scoring would add an O(n·c) workspace here
+    // and blow the n-independence check below.
+    let lev_extra_1 = gauge(|| {
+        spsd::fast_streamed(
+            &o1,
+            &p1,
+            FastConfig::leverage(S),
+            StreamConfig::tiled(TILE),
+            &mut Rng::new(7),
+        )
+    });
+    assert!(
+        lev_extra_1 <= bound_1,
+        "leverage streamed peak extra {lev_extra_1} B exceeds O(tile·c + s²) bound {bound_1} B"
+    );
+
+    // n-independence for leverage: tripling n must only grow the peak by
+    // ~the C output's growth, exactly like the uniform family.
+    let lev_extra_2 = gauge(|| {
+        spsd::fast_streamed(
+            &o2,
+            &p2,
+            FastConfig::leverage(S),
+            StreamConfig::tiled(TILE),
+            &mut Rng::new(8),
+        )
+    });
+    assert!(
+        lev_extra_2 <= lev_extra_1 + c_growth + 128 * 1024,
+        "leverage peak extra grew superlinearly with n: {lev_extra_1} B @ n={n1} vs \
+         {lev_extra_2} B @ n={n2} (C growth only accounts for {c_growth} B)"
+    );
+
     // --- prototype: streamed tiles replace the n x n materialization.
     let proto_streamed = gauge(|| spsd::prototype_streamed(&o1, &p1, StreamConfig::tiled(TILE)));
     let proto_materialized = gauge(|| spsd::prototype(&o1, &p1));
