@@ -8,6 +8,11 @@
 #   make perf-check   — ci + quick hotpath/stream benches (perf gate):
 #                       leaves machine-readable results in
 #                       BENCH_hotpath.quick.json / BENCH_stream.quick.json.
+#   make bench-quick  — quick hotpath/stream benches written to the
+#                       canonical BENCH_hotpath.json / BENCH_stream.json
+#                       artifacts and committed (the tracked perf
+#                       trajectory; the JSONs carry "quick": true so the
+#                       budget is never ambiguous).
 #   make artifacts    — AOT-compile the PJRT kernel artifacts (needs the
 #                       python/jax toolchain; optional — everything falls
 #                       back to the pure-rust engine without them).
@@ -16,7 +21,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench ci perf-check artifacts toolchain-guard
+.PHONY: build test bench bench-quick ci perf-check artifacts toolchain-guard
 
 toolchain-guard:
 	@command -v $(CARGO) >/dev/null 2>&1 || { \
@@ -47,6 +52,15 @@ ci: toolchain-guard build test
 	  echo "clippy not installed — skipping lint"; \
 	fi
 	@echo "ci OK — build + test green$$($(CARGO) clippy --version >/dev/null 2>&1 && echo ' + clippy clean')"
+
+bench-quick: toolchain-guard
+	FASTSPSD_BENCH_QUICK=1 FASTSPSD_BENCH_COMMIT=1 $(CARGO) bench --bench hotpath
+	FASTSPSD_BENCH_QUICK=1 FASTSPSD_BENCH_COMMIT=1 $(CARGO) bench --bench stream
+	@git add BENCH_hotpath.json BENCH_stream.json && \
+	 (git diff --cached --quiet -- BENCH_hotpath.json BENCH_stream.json || \
+	  git commit -m "bench: refresh quick bench artifacts (make bench-quick)" \
+	    -- BENCH_hotpath.json BENCH_stream.json)
+	@echo "bench-quick OK — BENCH_hotpath.json / BENCH_stream.json refreshed"
 
 perf-check: ci
 	FASTSPSD_BENCH_QUICK=1 $(CARGO) bench --bench hotpath

@@ -105,13 +105,10 @@ fn main() {
     }
 
     // Quick smoke runs land in a separate file so they never clobber the
-    // full-budget perf trajectory.
-    let path = if fastspsd::benchkit::quick_mode() {
-        "BENCH_hotpath.quick.json"
-    } else {
-        "BENCH_hotpath.json"
-    };
-    if let Err(e) = suite.write_json(path) {
+    // full-budget perf trajectory — unless commit mode (`make bench-quick`)
+    // asks for the canonical artifact.
+    let path = fastspsd::benchkit::artifact_path("BENCH_hotpath");
+    if let Err(e) = suite.write_json(&path) {
         eprintln!("warn: could not write {path}: {e}");
     }
 }

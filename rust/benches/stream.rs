@@ -11,11 +11,11 @@
 
 use fastspsd::benchkit::alloc::{AllocGauge, CountingAlloc};
 use fastspsd::benchkit::{black_box, BenchSuite};
-use fastspsd::coordinator::oracle::RbfOracle;
+use fastspsd::coordinator::oracle::{KernelOracle, RbfOracle};
 use fastspsd::cur::{self, FastCurConfig};
 use fastspsd::linalg::Matrix;
 use fastspsd::spsd::{self, FastConfig, LeverageBasis};
-use fastspsd::stream::StreamConfig;
+use fastspsd::stream::{self, OracleColumnsSource, ResidencyConfig, StreamConfig};
 use fastspsd::util::Rng;
 use std::sync::Arc;
 
@@ -149,6 +149,46 @@ fn main() {
         gauged(|| spsd::prototype_streamed(&oracle_p, &pp, StreamConfig::tiled(DEFAULT_TILE)));
     println!("    peak extra: {}", fmt_mib(peak));
 
+    // ---- implicit ops: residency vs re-streaming Lanczos ----------------
+    // The headline of the residency layer: q Lanczos iterations against the
+    // implicit C·U·Cᵀ cost one n·c kernel observation instead of re-paying
+    // the oracle every pass — at any RAM budget once spill is on. Rows
+    // report oracle entries, cache hits and spilled bytes next to wall time.
+    let k_eigs = 4;
+    let u_id = Matrix::identity(c);
+    let src = OracleColumnsSource::new(&oracle, &p);
+    let icfg = StreamConfig::tiled(DEFAULT_TILE);
+    suite.bench(&format!("implicit top-k restream t={DEFAULT_TILE} n={n}"), || {
+        black_box(stream::top_k_eigs(&src, &u_id, k_eigs, 7, icfg));
+    });
+    oracle.reset_entries();
+    let _ = stream::top_k_eigs(&src, &u_id, k_eigs, 7, icfg);
+    let entries_restream = oracle.entries_observed();
+    println!(
+        "    oracle entries: {entries_restream} ({}x one n·c)",
+        entries_restream / (n as u64 * c as u64)
+    );
+    // resident[ram] is the all-RAM bound: ram_only, so no arena write-
+    // through pollutes the wall time. resident[spill] is the all-disk one.
+    for (label, rc) in [
+        ("resident[ram]", ResidencyConfig::unbounded().with_tile_rows(DEFAULT_TILE)),
+        ("resident[spill]", ResidencyConfig::new(0).with_tile_rows(DEFAULT_TILE)),
+    ] {
+        suite.bench(&format!("implicit top-k {label} t={DEFAULT_TILE} n={n}"), || {
+            black_box(stream::top_k_eigs_resident(&src, &u_id, k_eigs, 7, icfg, &rc));
+        });
+        oracle.reset_entries();
+        let (_, _, st) = stream::top_k_eigs_resident(&src, &u_id, k_eigs, 7, icfg, &rc);
+        println!(
+            "    oracle entries: {} (one n·c = {}), ram hits {}, spill hits {}, spilled {}",
+            oracle.entries_observed(),
+            n * c,
+            st.ram_hits,
+            st.spill_hits,
+            fmt_mib(st.spilled_bytes as usize)
+        );
+    }
+
     // ---- CUR over a dense matrix ---------------------------------------
     let (m_cur, n_cur) = if quick { (600, 450) } else { (2000, 1500) };
     let mut rng = Rng::new(3);
@@ -170,9 +210,10 @@ fn main() {
     });
 
     // Quick smoke runs land in a separate file so they never clobber the
-    // full-budget perf trajectory.
-    let path = if quick { "BENCH_stream.quick.json" } else { "BENCH_stream.json" };
-    if let Err(e) = suite.write_json(path) {
+    // full-budget perf trajectory — unless commit mode (`make bench-quick`)
+    // asks for the canonical artifact.
+    let path = fastspsd::benchkit::artifact_path("BENCH_stream");
+    if let Err(e) = suite.write_json(&path) {
         eprintln!("warn: could not write {path}: {e}");
     }
 }

@@ -89,6 +89,25 @@ pub fn quick_mode() -> bool {
     std::env::var("FASTSPSD_BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
 }
 
+/// True when `FASTSPSD_BENCH_COMMIT` pins results to the canonical
+/// `BENCH_*.json` artifacts even in quick mode (`make bench-quick` — the
+/// JSON's `"quick"` flag still records which budget produced the numbers,
+/// so smoke results are never mistaken for full-budget ones).
+pub fn commit_mode() -> bool {
+    std::env::var("FASTSPSD_BENCH_COMMIT").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// Where a bench should write its JSON: `<stem>.json` (the committed perf
+/// trajectory) normally and under commit mode, `<stem>.quick.json` for
+/// plain quick runs so smoke numbers never clobber the trajectory.
+pub fn artifact_path(stem: &str) -> String {
+    if quick_mode() && !commit_mode() {
+        format!("{stem}.quick.json")
+    } else {
+        format!("{stem}.json")
+    }
+}
+
 impl BenchSuite {
     pub fn new(title: &str) -> Self {
         let (warmup, budget) = if quick_mode() {
@@ -260,6 +279,30 @@ mod tests {
         assert!(j.matches('{').count() == j.matches('}').count());
         // trailing-comma discipline: one comma between the two results
         assert!(j.contains("}},\n") || j.contains("},\n"));
+    }
+
+    #[test]
+    fn artifact_path_routes_quick_runs_away_from_the_trajectory() {
+        // env-var driven modes can't be toggled safely in-process (tests
+        // share the environment), so pin the pure path logic instead: the
+        // canonical name is used exactly when quick mode is off or commit
+        // mode overrides it.
+        let path = |quick: bool, commit: bool, stem: &str| {
+            if quick && !commit {
+                format!("{stem}.quick.json")
+            } else {
+                format!("{stem}.json")
+            }
+        };
+        assert_eq!(path(false, false, "BENCH_x"), "BENCH_x.json");
+        assert_eq!(path(true, false, "BENCH_x"), "BENCH_x.quick.json");
+        assert_eq!(path(true, true, "BENCH_x"), "BENCH_x.json");
+        assert_eq!(path(false, true, "BENCH_x"), "BENCH_x.json");
+        // and the real function agrees with the current process state
+        assert_eq!(
+            artifact_path("BENCH_x"),
+            path(quick_mode(), commit_mode(), "BENCH_x")
+        );
     }
 
     #[test]

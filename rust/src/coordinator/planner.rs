@@ -19,7 +19,7 @@
 
 use super::service::MethodSpec;
 use crate::sketch::SketchKind;
-use crate::stream::DEFAULT_QUEUE_DEPTH;
+use crate::stream::{panel_bytes, DEFAULT_QUEUE_DEPTH, DEFAULT_RESIDENT_TILE_ROWS};
 
 /// What the caller wants.
 #[derive(Debug, Clone, Copy)]
@@ -130,6 +130,83 @@ pub fn predicted_peak_bytes(
             let base = n * c + 2 * s * c + s * s + c * c + lev;
             ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * c))
         }
+    }
+}
+
+/// Peak working set of a residency-backed implicit op (Lanczos / the
+/// regularized solve against the implicit `C U C^T`): pipeline live tiles
+/// + the `O(c²)` fold/Woodbury state + the hot-tile cache as a **separate
+/// term capped at its budget** — `min(cache_budget, n·c·8)`. The old
+/// cached-`C` accounting was all-or-nothing (`n·c` when the panel fit,
+/// zero otherwise); with the LRU + spill arena the cache occupies exactly
+/// its budget in the spilling regime, which makes this prediction
+/// n-independent there (the Krylov basis, an output of size `n·k`, is
+/// excluded as with every other output panel).
+pub fn predicted_implicit_peak_bytes(
+    n: usize,
+    c: usize,
+    tile_rows: usize,
+    cache_budget: u64,
+) -> u64 {
+    let (c64, t) = (c as u64, tile_rows.max(1) as u64);
+    let live = ENTRY_BYTES * live_tiles() * t * c64;
+    let state = ENTRY_BYTES * 2 * c64 * c64;
+    live + state + panel_bytes(n, c).min(cache_budget)
+}
+
+/// How an implicit op should split a memory budget between the pipeline's
+/// live tiles and the residency layer's hot-tile LRU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidencySplit {
+    /// Tile height for both the pipeline and the residency grid.
+    pub tile_rows: usize,
+    /// Bytes for the hot-tile LRU (the `ResidencyConfig::ram_budget`).
+    pub cache_budget: u64,
+    /// `min(1, cache_budget / panel)`: the fraction of the `n x c` panel
+    /// the cache can hold — the steady-state RAM hit rate of a cyclic
+    /// re-reading workload, which the residency layer's scan-resistant
+    /// admission actually realizes (a plain LRU would thrash to zero hits
+    /// on scans; see `ResidentSource::admit`).
+    pub predicted_hit_rate: f64,
+    /// Cold tiles must go to the spill arena (the cache cannot hold the
+    /// panel); without spill they would be recomputed.
+    pub spill: bool,
+    /// [`predicted_implicit_peak_bytes`] at this split.
+    pub predicted_peak_bytes: u64,
+}
+
+/// Pick the tile_rows / cache-budget split for a residency-backed implicit
+/// op under `memory_budget` bytes: the pipeline's live set gets at most a
+/// quarter of the budget (preferring the default 256-row tile, shrinking
+/// to fit, floor one row), the `O(c²)` state is reserved, and everything
+/// left goes to the hot-tile LRU — capped at the panel size, since a cache
+/// larger than the working set buys nothing. Never fails: a budget below
+/// the floor terms (one-row live tiles + the `c²` state) degrades to the
+/// most frugal split (tile_rows 1, empty cache, spill on) and the
+/// overshoot is visible in `predicted_peak_bytes` — the same graceful-
+/// degradation convention as [`plan`].
+pub fn plan_residency(n: usize, c: usize, memory_budget: u64) -> ResidencySplit {
+    let n = n.max(1);
+    let c = c.max(1);
+    let per_row = ENTRY_BYTES * live_tiles() * c as u64;
+    let tile_rows = ((memory_budget / 4) / per_row)
+        .clamp(1, DEFAULT_RESIDENT_TILE_ROWS as u64)
+        .min(n as u64) as usize;
+    let live = per_row * tile_rows as u64;
+    let state = ENTRY_BYTES * 2 * (c as u64) * (c as u64);
+    let panel = panel_bytes(n, c);
+    let cache_budget = memory_budget.saturating_sub(live + state).min(panel);
+    let predicted_hit_rate = if panel == 0 {
+        1.0
+    } else {
+        (cache_budget as f64 / panel as f64).min(1.0)
+    };
+    ResidencySplit {
+        tile_rows,
+        cache_budget,
+        predicted_hit_rate,
+        spill: cache_budget < panel,
+        predicted_peak_bytes: predicted_implicit_peak_bytes(n, c, tile_rows, cache_budget),
     }
 }
 
@@ -455,6 +532,74 @@ mod tests {
             assert_eq!(lev(50_000, t) - uni(50_000, t), surcharge, "{t:?}");
             assert_eq!(lev(500_000, t) - uni(500_000, t), surcharge, "n-independent {t:?}");
         }
+    }
+
+    #[test]
+    fn implicit_peak_charges_the_cache_as_a_capped_term() {
+        let (n, c, t) = (50_000usize, 40usize, 256usize);
+        let panel = panel_bytes(n, c);
+        let base = predicted_implicit_peak_bytes(n, c, t, 0);
+        // below the panel the surcharge is exactly the budget…
+        for budget in [1u64, 1 << 20, panel - 1] {
+            assert_eq!(predicted_implicit_peak_bytes(n, c, t, budget) - base, budget);
+        }
+        // …and above it the term caps at the panel (no all-or-nothing cliff)
+        for budget in [panel, panel + 1, u64::MAX] {
+            assert_eq!(predicted_implicit_peak_bytes(n, c, t, budget) - base, panel);
+        }
+    }
+
+    #[test]
+    fn implicit_peak_is_n_independent_in_the_spilling_regime() {
+        // With a fixed cache budget below the panel, growing n 100x must
+        // not change the predicted peak at all: live tiles are t-sized,
+        // state is c-sized, and the cache term is the budget — this is the
+        // bound that makes n-larger-than-RAM runs plannable.
+        let (c, t) = (32usize, 128usize);
+        let budget: u64 = 4 << 20; // 4 MiB, far below both panels
+        let small = predicted_implicit_peak_bytes(100_000, c, t, budget);
+        let large = predicted_implicit_peak_bytes(10_000_000, c, t, budget);
+        assert!(budget < panel_bytes(100_000, c));
+        assert_eq!(small, large);
+
+        // and plan_residency reproduces that: same split, same peak
+        let s1 = plan_residency(100_000, c, budget);
+        let s2 = plan_residency(10_000_000, c, budget);
+        assert_eq!(s1.tile_rows, s2.tile_rows);
+        assert_eq!(s1.cache_budget, s2.cache_budget);
+        assert_eq!(s1.predicted_peak_bytes, s2.predicted_peak_bytes);
+        assert!(s1.spill && s2.spill);
+        assert!(s2.predicted_hit_rate < s1.predicted_hit_rate);
+    }
+
+    #[test]
+    fn residency_split_shapes() {
+        let (n, c) = (100_000usize, 32usize);
+        // unconstrained: everything hot, no spill, full hit rate
+        let s = plan_residency(n, c, u64::MAX);
+        assert_eq!(s.cache_budget, panel_bytes(n, c), "cache caps at the panel");
+        assert!(!s.spill);
+        assert_eq!(s.predicted_hit_rate, 1.0);
+        assert_eq!(s.tile_rows, DEFAULT_RESIDENT_TILE_ROWS);
+
+        // zero budget: one-row tiles, empty cache, spill required
+        let s = plan_residency(n, c, 0);
+        assert_eq!(s.tile_rows, 1);
+        assert_eq!(s.cache_budget, 0);
+        assert!(s.spill);
+        assert_eq!(s.predicted_hit_rate, 0.0);
+
+        // cache budget grows monotonically with the memory budget
+        let mut prev = 0u64;
+        for budget in [1u64 << 16, 1 << 20, 1 << 24, 1 << 28] {
+            let s = plan_residency(n, c, budget);
+            assert!(s.cache_budget >= prev, "budget {budget}");
+            assert!(s.cache_budget <= panel_bytes(n, c));
+            prev = s.cache_budget;
+        }
+
+        // small n clamps the tile height
+        assert_eq!(plan_residency(10, c, u64::MAX).tile_rows, 10);
     }
 
     #[test]

@@ -9,11 +9,13 @@
 
 use super::metrics::Metrics;
 use super::oracle::{KernelOracle, RbfOracle};
+use super::planner;
 use crate::pool::ThreadPool;
 use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig, LeverageBasis};
-use crate::stream::StreamConfig;
+use crate::stream::{ResidencyConfig, ResidencyStats, StreamConfig};
 use crate::util::Rng;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -50,6 +52,13 @@ pub struct ApproxRequest {
     /// planner emits this when the memory budget demands it); `None`: the
     /// materialized path.
     pub tile_rows: Option<usize>,
+    /// `Some(bytes)`: route the build through the tile residency layer —
+    /// [`planner::plan_residency`] splits the bytes into a pipeline tile
+    /// height (unless `tile_rows` pins one) and a hot-tile LRU budget,
+    /// cold tiles spill to the service's spill directory, and the response
+    /// carries the hit/miss/spill counters. Supported for Nyström and the
+    /// column-selection fast models; other methods run the plain path.
+    pub residency_budget: Option<u64>,
 }
 
 /// Reply for one job.
@@ -65,19 +74,25 @@ pub struct ApproxResponse {
     pub compute_secs: f64,
     /// seconds from submit to completion.
     pub total_secs: f64,
+    /// Residency counters (hits, misses, spilled bytes) when the request
+    /// routed through the tile residency layer.
+    pub residency: Option<ResidencyStats>,
 }
 
 /// Service configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub workers: usize,
     /// max queued jobs before `submit` blocks (backpressure).
     pub queue_capacity: usize,
+    /// Directory for residency spill arenas (`None` = the system temp
+    /// dir). Arena files are per-request and removed when the build ends.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, queue_capacity: 64 }
+        ServiceConfig { workers: 4, queue_capacity: 64, spill_dir: None }
     }
 }
 
@@ -87,6 +102,7 @@ pub struct ApproxService {
     pool: ThreadPool,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
+    spill_dir: Option<PathBuf>,
 }
 
 impl ApproxService {
@@ -96,6 +112,7 @@ impl ApproxService {
             pool: ThreadPool::new(cfg.workers.max(1), cfg.queue_capacity.max(1)),
             metrics: Arc::new(Metrics::default()),
             inflight: Arc::new(AtomicU64::new(0)),
+            spill_dir: cfg.spill_dir,
         }
     }
 
@@ -115,11 +132,12 @@ impl ApproxService {
         let oracle = Arc::clone(&self.oracle);
         let metrics = Arc::clone(&self.metrics);
         let inflight = Arc::clone(&self.inflight);
+        let spill_dir = self.spill_dir.clone();
         let submitted = Instant::now();
         self.pool.submit(move || {
             let started = Instant::now();
             metrics.queue_wait.observe(started.duration_since(submitted));
-            let resp = run_request(oracle.as_ref(), &req, submitted);
+            let resp = run_request(oracle.as_ref(), &req, spill_dir.as_deref(), submitted);
             metrics.latency.observe(submitted.elapsed());
             match &resp {
                 Ok(_) => metrics.completed.inc(),
@@ -141,29 +159,72 @@ impl ApproxService {
 fn run_request(
     oracle: &RbfOracle,
     req: &ApproxRequest,
+    spill_dir: Option<&Path>,
     submitted: Instant,
 ) -> anyhow::Result<ApproxResponse> {
     let mut rng = Rng::new(req.seed);
     let n = oracle.n();
     let c = req.c.clamp(1, n);
     let p = spsd::uniform_p(n, c, &mut rng);
-    let stream_cfg = match req.tile_rows {
-        Some(t) => StreamConfig::tiled(t),
-        None => StreamConfig::whole(),
-    };
     let t0 = Instant::now();
-    let approx = match req.method {
-        MethodSpec::Nystrom => spsd::nystrom_streamed(oracle, &p, stream_cfg),
-        MethodSpec::Prototype => spsd::prototype_streamed(oracle, &p, stream_cfg),
-        MethodSpec::Fast { s, kind } => spsd::fast_streamed(
-            oracle,
-            &p,
-            // Gram basis: leverage requests stream with O(c²) score state,
-            // matching the peak the planner predicts for this route.
-            FastConfig { s, kind, force_p_in_s: true, leverage_basis: LeverageBasis::Gram },
-            stream_cfg,
-            &mut rng,
-        ),
+    // Residency routing: the planner splits the byte budget into a tile
+    // height + LRU budget; the request's explicit tile_rows (if any) wins.
+    let routed = req.residency_budget.and_then(|budget| {
+        let split = planner::plan_residency(n, c, budget);
+        let tile = req.tile_rows.unwrap_or(split.tile_rows);
+        let stream_cfg = StreamConfig::tiled(tile);
+        // Spill only when the planner says the cache can't hold the panel;
+        // otherwise a RAM-only layer avoids writing an arena nobody reads.
+        let mut rc = if split.spill {
+            ResidencyConfig::new(split.cache_budget)
+        } else {
+            ResidencyConfig::ram_only(split.cache_budget)
+        }
+        .with_tile_rows(tile);
+        if split.spill {
+            if let Some(dir) = spill_dir {
+                rc = rc.with_spill_dir(dir);
+            }
+        }
+        match req.method {
+            MethodSpec::Nystrom => Some(spsd::nystrom_resident(oracle, &p, stream_cfg, &rc)),
+            MethodSpec::Fast { s, kind } if kind.is_column_selection() => {
+                Some(spsd::fast_streamed_resident(
+                    oracle,
+                    &p,
+                    FastConfig { s, kind, force_p_in_s: true, leverage_basis: LeverageBasis::Gram },
+                    stream_cfg,
+                    &rc,
+                    &mut rng,
+                ))
+            }
+            // prototype / projection sketches stream the full K: no
+            // reloadable working set — run the plain path below
+            _ => None,
+        }
+    });
+    let (approx, residency) = match routed {
+        Some((approx, stats)) => (approx, Some(stats)),
+        None => {
+            let stream_cfg = match req.tile_rows {
+                Some(t) => StreamConfig::tiled(t),
+                None => StreamConfig::whole(),
+            };
+            let approx = match req.method {
+                MethodSpec::Nystrom => spsd::nystrom_streamed(oracle, &p, stream_cfg),
+                MethodSpec::Prototype => spsd::prototype_streamed(oracle, &p, stream_cfg),
+                MethodSpec::Fast { s, kind } => spsd::fast_streamed(
+                    oracle,
+                    &p,
+                    // Gram basis: leverage requests stream with O(c²) score
+                    // state, matching the peak the planner predicts here.
+                    FastConfig { s, kind, force_p_in_s: true, leverage_basis: LeverageBasis::Gram },
+                    stream_cfg,
+                    &mut rng,
+                ),
+            };
+            (approx, None)
+        }
     };
     let (eigvals, _vecs) = approx.eig_k(req.k.max(1));
     Ok(ApproxResponse {
@@ -173,6 +234,7 @@ fn run_request(
         entries: approx.entries_observed,
         compute_secs: t0.elapsed().as_secs_f64(),
         total_secs: submitted.elapsed().as_secs_f64(),
+        residency,
     })
 }
 
@@ -185,7 +247,7 @@ mod tests {
         let mut rng = Rng::new(0);
         let x = Arc::new(Matrix::randn(n, 6, &mut rng));
         let oracle = Arc::new(RbfOracle::cpu(x, 0.4));
-        ApproxService::new(oracle, ServiceConfig { workers, queue_capacity: cap })
+        ApproxService::new(oracle, ServiceConfig { workers, queue_capacity: cap, spill_dir: None })
     }
 
     #[test]
@@ -206,6 +268,7 @@ mod tests {
                     k: 3,
                     seed: i as u64,
                     tile_rows: None,
+                    residency_budget: None,
                 },
                 tx.clone(),
             );
@@ -242,6 +305,7 @@ mod tests {
                     k: 2,
                     seed: i,
                     tile_rows: None,
+                    residency_budget: None,
                 },
                 tx.clone(),
             );
@@ -273,7 +337,7 @@ mod tests {
         for m in methods {
             for tile_rows in [None, Some(13)] {
                 svc.submit(
-                    ApproxRequest { id, method: m, c: 7, k: 4, seed: 42, tile_rows },
+                    ApproxRequest { id, method: m, c: 7, k: 4, seed: 42, tile_rows, residency_budget: None },
                     tx.clone(),
                 );
                 id += 1;
@@ -294,6 +358,59 @@ mod tests {
                     "{}: streamed eig {b} vs materialized {a}",
                     mat.method
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn residency_requests_match_plain_and_report_stats() {
+        // The same (method, c, seed) with and without residency routing
+        // must agree bit-identically (the routed build replays the same
+        // rng sequence and gathers the same tiles), carry the same entry
+        // count, and attach hit/miss/spill counters. One worker for the
+        // same shared-counter reason as above.
+        let svc = service(70, 1, 16);
+        let (tx, rx) = mpsc::channel();
+        let methods = [
+            MethodSpec::Nystrom,
+            MethodSpec::Fast { s: 20, kind: SketchKind::Uniform },
+            MethodSpec::Fast { s: 20, kind: SketchKind::Leverage { scaled: false } },
+        ];
+        let mut id = 0u64;
+        for m in methods {
+            for residency_budget in [None, Some(0u64)] {
+                svc.submit(
+                    ApproxRequest {
+                        id,
+                        method: m,
+                        c: 7,
+                        k: 4,
+                        seed: 42,
+                        tile_rows: Some(13),
+                        residency_budget,
+                    },
+                    tx.clone(),
+                );
+                id += 1;
+            }
+        }
+        svc.drain();
+        drop(tx);
+        let mut resps: Vec<ApproxResponse> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 6);
+        for pair in resps.chunks(2) {
+            let (plain, routed) = (&pair[0], &pair[1]);
+            assert!(plain.residency.is_none());
+            let stats = routed.residency.expect("routed request must report stats");
+            assert_eq!(plain.entries, routed.entries, "{}", plain.method);
+            for (a, b) in plain.eigvals.iter().zip(&routed.eigvals) {
+                assert_eq!(a, b, "{}: residency must not change results", plain.method);
+            }
+            assert_eq!(stats.computes, 70u64.div_ceil(13), "one oracle pass per tile");
+            if routed.method.contains("leverage") {
+                // two-pass plan at a zero RAM budget: pass 2 reads the arena
+                assert_eq!(stats.spill_hits, stats.computes, "{}", routed.method);
             }
         }
     }

@@ -13,7 +13,10 @@ pub mod sparse_cur;
 
 use crate::linalg::{pinv, Matrix};
 use crate::sketch::{self, SketchKind};
-use crate::stream::{run_pipeline, ColSubsetCollect, MatrixSource, RowGather, StreamConfig};
+use crate::stream::{
+    run_pipeline, ColSubsetCollect, MatrixSource, ResidencyConfig, ResidencyStats,
+    ResidentSource, RowGather, StreamConfig,
+};
 use crate::util::{Rng, Stopwatch};
 
 /// A CUR decomposition `A ≈ C U R`.
@@ -258,6 +261,92 @@ pub fn cur_fast_streamed(
     }
 }
 
+/// [`cur_fast_streamed`] through the tile residency layer: `A`'s row
+/// tiles write through an LRU + disk spill arena on first read, and the
+/// leverage family's **pass 2** (the `S_C x S_R` core gather, which
+/// cannot run in pass 1 because the indices don't exist yet) re-streams
+/// through the residency layer instead of indexing the resident matrix —
+/// so a disk-backed `A` (the stand-in [`MatrixSource`] models) is read
+/// exactly once however many passes run. Results are bit-identical to
+/// [`cur_fast`] / [`cur_fast_streamed`] (same rng sequence, exact
+/// gathers); returns the residency counters alongside the decomposition.
+pub fn cur_fast_streamed_resident(
+    a: &Matrix,
+    col_idx: &[usize],
+    row_idx: &[usize],
+    cfg: FastCurConfig,
+    stream_cfg: StreamConfig,
+    residency: &ResidencyConfig,
+    rng: &mut Rng,
+) -> (CurDecomp, ResidencyStats) {
+    let sw = Stopwatch::start();
+    let (m, n) = (a.rows(), a.cols());
+    let forced_rows: &[usize] = if cfg.force_overlap { row_idx } else { &[] };
+    let forced_cols: &[usize] = if cfg.force_overlap { col_idx } else { &[] };
+    let src = MatrixSource::new(a);
+    let resident = ResidentSource::new(&src, residency);
+    let t = stream_cfg.effective_tile_rows(m);
+
+    let (c, r, sc_idx, sr_idx, core) = match cfg.kind {
+        SketchKind::Uniform => {
+            let dummy = Matrix::zeros(0, 0);
+            let sc_idx = build_indices(&dummy, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
+            let sr_idx = build_indices(&dummy, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
+            let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
+            let mut r_gather = RowGather::new(row_idx.to_vec(), n);
+            let mut core_gather = RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
+            run_pipeline(
+                &resident,
+                t,
+                stream_cfg.queue_depth,
+                &mut [&mut c_collect, &mut r_gather, &mut core_gather],
+            );
+            (
+                c_collect.into_matrix(),
+                r_gather.into_matrix(),
+                sc_idx,
+                sr_idx,
+                core_gather.into_matrix(),
+            )
+        }
+        SketchKind::Leverage { .. } => {
+            // Pass 1: C and R; every tile writes through the arena.
+            let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
+            let mut r_gather = RowGather::new(row_idx.to_vec(), n);
+            run_pipeline(
+                &resident,
+                t,
+                stream_cfg.queue_depth,
+                &mut [&mut c_collect, &mut r_gather],
+            );
+            let c = c_collect.into_matrix();
+            let r = r_gather.into_matrix();
+            let sc_idx = build_indices(&c, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
+            let rt = r.transpose();
+            let sr_idx = build_indices(&rt, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
+            // Pass 2: the core gather reloads tiles from residency — the
+            // backing store is never consulted again.
+            let mut core_gather = RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
+            run_pipeline(&resident, t, stream_cfg.queue_depth, &mut [&mut core_gather]);
+            (c, r, sc_idx, sr_idx, core_gather.into_matrix())
+        }
+        other => panic!("fast CUR supports column-selection sketches, not {}", other.name()),
+    };
+
+    let stc = c.select_rows(&sc_idx);
+    let rsr = r.select_cols(&sr_idx);
+    let u = pinv(&stc).matmul(&core).matmul(&pinv(&rsr));
+    let decomp = CurDecomp {
+        c,
+        u,
+        r,
+        method: format!("fast[{}]", cfg.kind.name()),
+        build_secs: sw.secs(),
+        entries_for_u: (sc_idx.len() * sr_idx.len()) as u64,
+    };
+    (decomp, resident.stats())
+}
+
 /// Sample `s` row indices of `basis` (uniform or by row leverage scores),
 /// unioned with `forced`.
 fn build_indices(
@@ -452,6 +541,44 @@ mod tests {
                 assert_eq!(mat.r.max_abs_diff(&st.r), 0.0, "R tile={tile}");
                 assert_eq!(mat.u.max_abs_diff(&st.u), 0.0, "{} U tile={tile}", mat.method);
                 assert_eq!(mat.entries_for_u, st.entries_for_u);
+            }
+        }
+    }
+
+    #[test]
+    fn resident_cur_is_bit_identical_and_reloads_pass_two() {
+        let a = decaying_matrix(41, 33, 12);
+        for (budget, tile) in [(0u64, 7usize), (u64::MAX, 7), (0, 16)] {
+            for cfg in [FastCurConfig::uniform(18, 18), FastCurConfig::leverage(18, 18)] {
+                let mut r1 = Rng::new(77);
+                let mut r2 = Rng::new(77);
+                let cols = select_uniform(33, 5, &mut r1);
+                let rows = select_uniform(41, 5, &mut r1);
+                let cols2 = select_uniform(33, 5, &mut r2);
+                let rows2 = select_uniform(41, 5, &mut r2);
+                let mat = cur_fast(&a, &cols, &rows, cfg, &mut r1);
+                let rc = ResidencyConfig::new(budget).with_tile_rows(tile);
+                let (st, stats) = cur_fast_streamed_resident(
+                    &a,
+                    &cols2,
+                    &rows2,
+                    cfg,
+                    StreamConfig::tiled(tile),
+                    &rc,
+                    &mut r2,
+                );
+                assert_eq!(mat.c.max_abs_diff(&st.c), 0.0, "C tile={tile}");
+                assert_eq!(mat.r.max_abs_diff(&st.r), 0.0, "R tile={tile}");
+                assert_eq!(mat.u.max_abs_diff(&st.u), 0.0, "{} U tile={tile}", mat.method);
+                let tiles = 41usize.div_ceil(tile) as u64;
+                assert_eq!(stats.computes, tiles, "source read once per tile");
+                if matches!(cfg.kind, SketchKind::Leverage { .. }) {
+                    // pass 2 (the core gather) must come back from residency
+                    assert_eq!(stats.hits(), tiles, "budget={budget} tile={tile}");
+                    if budget == 0 {
+                        assert_eq!(stats.spill_hits, tiles);
+                    }
+                }
             }
         }
     }

@@ -25,7 +25,7 @@ pub fn run(ctx: &Ctx, args: &Args) {
     ));
     let workers = args.get_usize("workers", 4);
     let capacity = args.get_usize("capacity", 16);
-    let svc = ApproxService::new(Arc::clone(&oracle), ServiceConfig { workers, queue_capacity: capacity });
+    let svc = ApproxService::new(Arc::clone(&oracle), ServiceConfig { workers, queue_capacity: capacity, spill_dir: None });
 
     let c = (n / 100).max(10);
     let requests = args.get_usize("requests", 48);
@@ -46,6 +46,7 @@ pub fn run(ctx: &Ctx, args: &Args) {
                 k: 5,
                 seed: ctx.seed + i as u64,
                 tile_rows: None,
+                residency_budget: None,
             },
             tx.clone(),
         );

@@ -17,8 +17,9 @@ use crate::coordinator::oracle::KernelOracle;
 use crate::linalg::{gemm, pinv, solve, Matrix};
 use crate::sketch::{self, SketchKind, SketchOp};
 use crate::stream::{
-    CollectConsumer, ConjugateFold, LeverageFold, LeverageSampler, PrototypeUFold, RowGather,
-    SketchFold, StreamConfig, StreamingOracle, TileConsumer,
+    run_pipeline, CollectConsumer, ConjugateFold, LeverageFold, LeverageSampler,
+    OracleColumnsSource, PrototypeUFold, ResidencyConfig, ResidencyStats, ResidentSource,
+    RowGather, SketchFold, StreamConfig, StreamingOracle, TileConsumer, TileSource,
 };
 use crate::util::{Rng, Stopwatch};
 
@@ -86,16 +87,31 @@ fn build_c_panel(
         let g = gather.map(|idx| c.select_rows(idx));
         return (c, g);
     }
-    let so = StreamingOracle::new(oracle, stream_cfg);
-    let mut collect = CollectConsumer::new(n, p_idx.len());
+    let src = OracleColumnsSource::new(oracle, p_idx);
+    collect_via(&src, stream_cfg, gather)
+}
+
+/// Pipeline-only variant of [`build_c_panel`] over an arbitrary source —
+/// the entry point the residency-routed builds share (the source is
+/// already a [`ResidentSource`] there, so the materialized `columns`
+/// shortcut must not bypass it).
+fn collect_via(
+    src: &dyn TileSource,
+    stream_cfg: StreamConfig,
+    gather: Option<&[usize]>,
+) -> (Matrix, Option<Matrix>) {
+    let n = src.rows();
+    let width = src.cols();
+    let t = stream_cfg.effective_tile_rows(n);
+    let mut collect = CollectConsumer::new(n, width);
     match gather {
         None => {
-            so.stream_columns(p_idx, &mut [&mut collect]);
+            run_pipeline(src, t, stream_cfg.queue_depth, &mut [&mut collect]);
             (collect.into_matrix(), None)
         }
         Some(idx) => {
-            let mut g = RowGather::new(idx.to_vec(), p_idx.len());
-            so.stream_columns(p_idx, &mut [&mut collect, &mut g]);
+            let mut g = RowGather::new(idx.to_vec(), width);
+            run_pipeline(src, t, stream_cfg.queue_depth, &mut [&mut collect, &mut g]);
             (collect.into_matrix(), Some(g.into_matrix()))
         }
     }
@@ -129,6 +145,36 @@ pub fn nystrom_streamed(
         entries_observed: oracle.entries_observed() - before,
         build_secs: sw.secs(),
     }
+}
+
+/// [`nystrom_streamed`] through the tile residency layer: the `C` pass
+/// writes every tile through the LRU/spill arena, so later consumers of
+/// the same panel (implicit ops, extra sketch folds) reload instead of
+/// re-paying the oracle. Results are bit-identical to [`nystrom`];
+/// returns the residency counters alongside the approximation.
+pub fn nystrom_resident(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    stream_cfg: StreamConfig,
+    residency: &ResidencyConfig,
+) -> (SpsdApprox, ResidencyStats) {
+    let sw = Stopwatch::start();
+    let before = oracle.entries_observed();
+    let src = OracleColumnsSource::new(oracle, p_idx);
+    let resident = ResidentSource::new(&src, residency);
+    let (c, w) = collect_via(&resident, stream_cfg, Some(p_idx));
+    let w = w.expect("gather requested");
+    let mut u = pinv(&w);
+    u.symmetrize();
+    let approx = SpsdApprox {
+        c,
+        u,
+        p_indices: p_idx.to_vec(),
+        method: "nystrom".into(),
+        entries_observed: oracle.entries_observed() - before,
+        build_secs: sw.secs(),
+    };
+    (approx, resident.stats())
 }
 
 /// The prototype model: `U* = C† K (C†)^T`. Observes all n^2 entries.
@@ -383,6 +429,116 @@ pub fn fast_streamed(
         entries_observed: oracle.entries_observed() - before,
         build_secs: sw.secs(),
     }
+}
+
+/// The fast model routed through the tile residency layer (column-selection
+/// sketches only — projection sketches stream the full `K`, which is not a
+/// reloadable working set). Two things change versus [`fast_streamed`]:
+///
+/// - every `C` tile goes through a [`ResidentSource`] (LRU + disk spill),
+///   so re-reads never re-pay the oracle, and
+/// - the leverage family becomes a genuine **two-pass plan over the
+///   source**: pass 1 folds only the `O(c²)` score state while tiles write
+///   through to the arena; pass 2 reloads tiles — RAM or disk, never the
+///   oracle — to collect `C`, score, draw and gather `C[S, :]` in one
+///   sweep. The oracle is charged exactly one `n·c` at any RAM budget.
+///
+/// The rng call sequence is identical to [`fast_streamed`] and the sampler
+/// is tile-order invariant, so results are **bit-identical** to the
+/// non-resident build (asserted in `tests/residency.rs`).
+pub fn fast_streamed_resident(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    cfg: FastConfig,
+    stream_cfg: StreamConfig,
+    residency: &ResidencyConfig,
+    rng: &mut Rng,
+) -> (SpsdApprox, ResidencyStats) {
+    let sw = Stopwatch::start();
+    let before = oracle.entries_observed();
+    let n = oracle.n();
+    let src = OracleColumnsSource::new(oracle, p_idx);
+    let resident = ResidentSource::new(&src, residency);
+    let t = stream_cfg.effective_tile_rows(n);
+
+    let (c_mat, stc, sks) = match cfg.kind {
+        SketchKind::Uniform => {
+            let op = build_selection_sketch(None, p_idx, cfg, n, rng);
+            let (indices, scales) = select_parts(&op);
+            let (c_mat, rows_s) = collect_via(&resident, stream_cfg, Some(&indices));
+            let rows_s = rows_s.expect("gather requested");
+            let stc = scale_rows(&rows_s, &scales);
+            let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+            (c_mat, stc, sks)
+        }
+        SketchKind::Leverage { scaled } => match cfg.leverage_basis {
+            LeverageBasis::ExactSvd => {
+                let (c_mat, _) = collect_via(&resident, stream_cfg, None);
+                let op = build_selection_sketch(Some(&c_mat), p_idx, cfg, n, rng);
+                let (indices, scales) = select_parts(&op);
+                let rows_s = c_mat.select_rows(&indices);
+                let stc = scale_rows(&rows_s, &scales);
+                let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+                (c_mat, stc, sks)
+            }
+            basis => {
+                // Pass 1: fold only the O(c²) leverage state; tiles write
+                // through the residency layer as a side effect.
+                let sk_op;
+                let mut fold = match basis {
+                    LeverageBasis::Sketched { m } => {
+                        sk_op = sketch::srht_sketch(n, m.max(p_idx.len()), rng);
+                        LeverageFold::sketched(&sk_op, p_idx.len())
+                    }
+                    _ => LeverageFold::exact(p_idx.len()),
+                };
+                run_pipeline(&resident, t, stream_cfg.queue_depth, &mut [&mut fold]);
+                let est = fold.into_estimate();
+
+                // Pass 2: reload tiles from residency to collect C and run
+                // the score/draw/gather sweep — zero new oracle entries.
+                let s_extra = cfg
+                    .s
+                    .saturating_sub(if cfg.force_p_in_s { p_idx.len() } else { 0 })
+                    .max(1);
+                let forced = if cfg.force_p_in_s { p_idx.to_vec() } else { Vec::new() };
+                let mut collect = CollectConsumer::new(n, p_idx.len());
+                let mut sampler =
+                    LeverageSampler::new(&est, s_extra, scaled, forced, n, p_idx.len(), rng);
+                run_pipeline(&resident, t, stream_cfg.queue_depth, &mut [&mut collect, &mut sampler]);
+                let c_mat = collect.into_matrix();
+                let (mut indices, mut scales, mut rows_s, sampled) = sampler.into_parts();
+                if sampled == 0 {
+                    // same degenerate-draw fallback as fast_streamed
+                    let pick = rng.usize_below(n);
+                    if let Err(pos) = indices.binary_search(&pick) {
+                        indices.insert(pos, pick);
+                        scales.insert(pos, 1.0);
+                        rows_s = c_mat.select_rows(&indices);
+                    }
+                }
+                let stc = scale_rows(&rows_s, &scales);
+                let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+                (c_mat, stc, sks)
+            }
+        },
+        other => panic!(
+            "residency routing needs a column-selection sketch, not {}",
+            other.name()
+        ),
+    };
+
+    let stc_pinv = pinv(&stc);
+    let u = gemm::symm_nt(&stc_pinv.matmul(&sks), &stc_pinv);
+    let approx = SpsdApprox {
+        c: c_mat,
+        u,
+        p_indices: p_idx.to_vec(),
+        method: format!("fast[{}]", cfg.kind.name()),
+        entries_observed: oracle.entries_observed() - before,
+        build_secs: sw.secs(),
+    };
+    (approx, resident.stats())
 }
 
 /// Clone out the index/scale arrays of a column-selection sketch.

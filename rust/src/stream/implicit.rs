@@ -8,16 +8,28 @@
 //! of the workload. When `C` is resident, use
 //! [`SpsdApprox::eig_k`](crate::spsd::SpsdApprox::eig_k) instead.
 //!
-//! Between those extremes sits the opt-in cached-`C` mode
-//! ([`top_k_eigs_budgeted`] / [`solve_regularized_budgeted`], or wrapping
-//! any source in a [`CachingSource`] yourself): when the panel fits the
-//! caller's `memory_budget` (the planner's
-//! [`Goal::memory_budget`](crate::coordinator::planner::Goal) unit), the
-//! first pass materializes it and every later Lanczos matvec reads memory
-//! instead of re-streaming n kernel tiles per iteration.
+//! Between those extremes sit two opt-in modes, both built on the tile
+//! residency layer ([`ResidentSource`](super::ResidentSource)):
+//!
+//! - the budget-gated cached-`C` mode ([`top_k_eigs_budgeted`] /
+//!   [`solve_regularized_budgeted`]): tiles stay hot in a RAM cache of at
+//!   most `memory_budget` bytes (the planner's
+//!   [`Goal::memory_budget`](crate::coordinator::planner::Goal) unit).
+//!   When the whole panel fits, later Lanczos matvecs read memory and the
+//!   oracle is charged exactly one `n·c` observation; a partial budget
+//!   keeps a stable hot prefix resident (scan-resistant admission), so
+//!   re-streaming shrinks in proportion to the budget — extra memory never
+//!   exceeds the budget, results stay bit-identical, and a zero budget is
+//!   exactly the plain path.
+//! - the spill mode ([`top_k_eigs_resident`] /
+//!   [`solve_regularized_resident`] with a spilling
+//!   [`ResidencyConfig`]): cold tiles are *reloaded* from the disk arena,
+//!   never *recomputed*, so the oracle is charged exactly one `n·c` at
+//!   **any** RAM budget — including zero — and `n` may exceed RAM.
 
 use super::{
-    run_pipeline, CachingSource, GramFold, MatvecFold, StreamConfig, TileConsumer, TileSource,
+    run_pipeline, GramFold, MatvecFold, ResidencyConfig, ResidencyStats, ResidentSource,
+    StreamConfig, TileConsumer, TileSource,
 };
 use crate::linalg::{eigh, lanczos, solve, Matrix};
 
@@ -114,12 +126,25 @@ pub fn top_k_eigs(
     lanczos::lanczos_top_k_op(src.rows(), k, seed, |v| matvec_cuc(src, u, v, cfg))
 }
 
-/// [`top_k_eigs`] with the opt-in cached-`C` mode: when the full panel
-/// fits `memory_budget` bytes, the first Lanczos pass materializes it
-/// through a [`CachingSource`] and every later matvec reads memory instead
-/// of re-evaluating kernel tiles (the oracle is charged exactly one `n·c`
-/// observation). Over budget, behavior — and peak memory — is exactly
-/// [`top_k_eigs`].
+/// RAM-only residency matching the budgeted ops' contract: the cache grid
+/// equals the pipeline tile height, so every request is one grid tile,
+/// extra memory is capped by `memory_budget`, and a zero budget reproduces
+/// the plain re-streaming path exactly (bits and entries).
+fn ram_residency(cfg: StreamConfig, n: usize, memory_budget: u64) -> ResidencyConfig {
+    ResidencyConfig::ram_only(memory_budget).with_tile_rows(cfg.effective_tile_rows(n))
+}
+
+/// [`top_k_eigs`] with the opt-in cached-`C` mode, routed through the
+/// residency layer: when the full panel fits `memory_budget` bytes the
+/// first Lanczos pass makes every tile hot and later matvecs read memory
+/// instead of re-evaluating kernel tiles (the oracle is charged exactly
+/// one `n·c` observation). A partial budget keeps a stable hot prefix
+/// resident — entries drop in proportion to the budget, extra memory
+/// never exceeds it ([`predicted_implicit_peak_bytes`]'s capped term),
+/// and results stay bit-identical. For one-`n·c` at *any* budget, use
+/// [`top_k_eigs_resident`] with a spilling config instead.
+///
+/// [`predicted_implicit_peak_bytes`]: crate::coordinator::planner::predicted_implicit_peak_bytes
 pub fn top_k_eigs_budgeted(
     src: &dyn TileSource,
     u: &Matrix,
@@ -128,13 +153,13 @@ pub fn top_k_eigs_budgeted(
     cfg: StreamConfig,
     memory_budget: u64,
 ) -> (Vec<f64>, Matrix) {
-    let cached = CachingSource::new(src, memory_budget);
-    top_k_eigs(&cached, u, k, seed, cfg)
+    let resident = ResidentSource::new(src, &ram_residency(cfg, src.rows(), memory_budget));
+    top_k_eigs(&resident, u, k, seed, cfg)
 }
 
 /// [`solve_regularized`] with the opt-in cached-`C` mode (see
 /// [`top_k_eigs_budgeted`]): the emit pass reuses the tiles the fold pass
-/// cached when the budget allows.
+/// made hot when the budget allows.
 pub fn solve_regularized_budgeted(
     src: &dyn TileSource,
     u: &Matrix,
@@ -143,8 +168,44 @@ pub fn solve_regularized_budgeted(
     cfg: StreamConfig,
     memory_budget: u64,
 ) -> Vec<f64> {
-    let cached = CachingSource::new(src, memory_budget);
-    solve_regularized(&cached, u, alpha, y, cfg)
+    let resident = ResidentSource::new(src, &ram_residency(cfg, src.rows(), memory_budget));
+    solve_regularized(&resident, u, alpha, y, cfg)
+}
+
+/// [`top_k_eigs`] through a caller-configured residency layer. With a
+/// spilling [`ResidencyConfig`] the oracle is charged exactly one `n·c`
+/// observation across all `q` Lanczos iterations at any RAM budget
+/// (including 0 — every re-read comes from the disk arena), and results
+/// are bit-identical to the uncached path. Returns the hit/miss/spill
+/// counters alongside the eigenpairs.
+pub fn top_k_eigs_resident(
+    src: &dyn TileSource,
+    u: &Matrix,
+    k: usize,
+    seed: u64,
+    cfg: StreamConfig,
+    residency: &ResidencyConfig,
+) -> (Vec<f64>, Matrix, ResidencyStats) {
+    let resident = ResidentSource::new(src, residency);
+    let (vals, vecs) = top_k_eigs(&resident, u, k, seed, cfg);
+    let stats = resident.stats();
+    (vals, vecs, stats)
+}
+
+/// [`solve_regularized`] through a caller-configured residency layer (see
+/// [`top_k_eigs_resident`]).
+pub fn solve_regularized_resident(
+    src: &dyn TileSource,
+    u: &Matrix,
+    alpha: f64,
+    y: &[f64],
+    cfg: StreamConfig,
+    residency: &ResidencyConfig,
+) -> (Vec<f64>, ResidencyStats) {
+    let resident = ResidentSource::new(src, residency);
+    let w = solve_regularized(&resident, u, alpha, y, cfg);
+    let stats = resident.stats();
+    (w, stats)
 }
 
 #[cfg(test)]
@@ -250,6 +311,49 @@ mod tests {
         for (a, b) in w_plain.iter().zip(&w_cached) {
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    fn resident_spill_charges_one_pass_at_zero_ram() {
+        use crate::coordinator::oracle::{KernelOracle, RbfOracle};
+        use crate::stream::OracleColumnsSource;
+        use std::sync::Arc;
+        let mut rng = Rng::new(8);
+        let x = Arc::new(Matrix::randn(45, 5, &mut rng));
+        let o = RbfOracle::cpu(x, 0.5);
+        let cols = [0usize, 7, 19, 31, 44];
+        let mut u = Matrix::randn(5, 5, &mut rng);
+        u.symmetrize();
+        let src = OracleColumnsSource::new(&o, &cols);
+        let cfg = StreamConfig::tiled(9);
+
+        o.reset_entries();
+        let (vals_plain, vecs_plain) = top_k_eigs(&src, &u, 3, 11, cfg);
+        let entries_plain = o.entries_observed();
+
+        // zero RAM budget + disk spill: identical bits, one n·c charge
+        o.reset_entries();
+        let rc = ResidencyConfig::new(0).with_tile_rows(9);
+        let (vals, vecs, stats) = top_k_eigs_resident(&src, &u, 3, 11, cfg, &rc);
+        assert_eq!(o.entries_observed(), 45 * 5, "spill must charge exactly one pass");
+        assert!(entries_plain > 45 * 5, "plain path must re-stream");
+        for (a, b) in vals_plain.iter().zip(&vals) {
+            assert_eq!(a, b, "resident Lanczos must be bit-identical");
+        }
+        assert_eq!(vecs_plain.max_abs_diff(&vecs), 0.0);
+        assert_eq!(stats.computes, 5, "45 rows / 9-row grid");
+        assert_eq!(stats.ram_hits, 0);
+        assert!(stats.spill_hits > 0, "re-reads must come from the arena");
+        assert_eq!(stats.spilled_bytes, 45 * 5 * 8);
+
+        // and the resident solve agrees with the plain one
+        let y: Vec<f64> = (0..45).map(|i| (i as f64 * 0.3).sin()).collect();
+        let w_plain = solve_regularized(&src, &u.gram_nt(), 0.7, &y, cfg);
+        let (w_res, st) = solve_regularized_resident(&src, &u.gram_nt(), 0.7, &y, cfg, &rc);
+        for (a, b) in w_plain.iter().zip(&w_res) {
+            assert_eq!(a, b);
+        }
+        assert!(st.spill_hits > 0);
     }
 
     #[test]

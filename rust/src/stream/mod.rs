@@ -17,19 +17,31 @@
 //! queue where the producer computes tile `i+1` on the global thread pool
 //! while the consumers fold tile `i` on the caller's thread, so at most
 //! `queue_depth + 2` tiles are ever live.
+//!
+//! [`residency`] is the layer between multi-pass plans and the oracle: a
+//! [`ResidentSource`] keeps hot tiles in a byte-budgeted LRU and writes
+//! every computed tile through to a disk spill arena, so repeated-access
+//! workloads (Lanczos matvecs in [`implicit`], the two-pass leverage plan,
+//! repeated sketch folds over the same `C`) pay the kernel oracle exactly
+//! once per tile — at any RAM budget, including zero.
 
 pub mod consumers;
 pub mod implicit;
 pub mod pipeline;
+pub mod residency;
 
 pub use consumers::{
     ColSubsetCollect, CollectConsumer, ConjugateFold, GramFold, LeverageFold, LeverageSampler,
     MatvecFold, PrototypeUFold, RowGather, SketchFold, TileConsumer,
 };
 pub use implicit::{
-    matvec_cuc, solve_regularized, solve_regularized_budgeted, top_k_eigs, top_k_eigs_budgeted,
+    matvec_cuc, solve_regularized, solve_regularized_budgeted, solve_regularized_resident,
+    top_k_eigs, top_k_eigs_budgeted, top_k_eigs_resident,
 };
 pub use pipeline::run_pipeline;
+pub use residency::{
+    ResidencyConfig, ResidencyStats, ResidentSource, DEFAULT_RESIDENT_TILE_ROWS,
+};
 
 use crate::coordinator::oracle::KernelOracle;
 use crate::linalg::Matrix;
@@ -67,12 +79,37 @@ impl StreamConfig {
     pub fn is_whole(&self, n: usize) -> bool {
         self.tile_rows >= n
     }
+
+    /// The concrete tile height an `n`-row pipeline pass will use (the
+    /// clamp [`run_pipeline`] applies) — also the grid the residency layer
+    /// should cache at so requests align with cached tiles.
+    pub fn effective_tile_rows(&self, n: usize) -> usize {
+        self.tile_rows.clamp(1, n.max(1))
+    }
 }
 
 impl Default for StreamConfig {
     fn default() -> Self {
         StreamConfig::whole()
     }
+}
+
+/// Bytes a `rows x cols` f64 panel occupies — the unit every budget gate
+/// in this module shares (the planner's `memory_budget`, the
+/// [`CachingSource`] whole-panel gate, the residency layer's LRU budget
+/// and per-tile admission).
+pub fn panel_bytes(rows: usize, cols: usize) -> u64 {
+    (rows as u64)
+        .saturating_mul(cols as u64)
+        .saturating_mul(std::mem::size_of::<f64>() as u64)
+}
+
+/// The one budget gate for cached-panel modes: a panel is admitted
+/// resident only when it fits `budget` whole. [`CachingSource`] and the
+/// budgeted implicit ops both go through here, so the gate can never
+/// drift between them.
+pub fn panel_fits_budget(rows: usize, cols: usize, budget: u64) -> bool {
+    rows > 0 && panel_bytes(rows, cols) <= budget
 }
 
 /// A virtual matrix that can be read in contiguous row-tiles. The streaming
@@ -204,10 +241,7 @@ struct CacheState {
 
 impl<'a> CachingSource<'a> {
     pub fn new(inner: &'a dyn TileSource, memory_budget: u64) -> Self {
-        let bytes = (inner.rows() as u64)
-            .saturating_mul(inner.cols() as u64)
-            .saturating_mul(std::mem::size_of::<f64>() as u64);
-        let enabled = inner.rows() > 0 && bytes <= memory_budget;
+        let enabled = panel_fits_budget(inner.rows(), inner.cols(), memory_budget);
         let buf = if enabled {
             Matrix::zeros(inner.rows(), inner.cols())
         } else {

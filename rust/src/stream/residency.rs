@@ -1,0 +1,660 @@
+//! Tile residency engine: an in-RAM **LRU of hot tiles** plus a **disk
+//! spill arena**, so cold tiles are *reloaded*, never *recomputed*.
+//!
+//! The implicit operators ([`implicit`](super::implicit)) and every
+//! multi-pass plan (two-pass leverage, repeated sketch folds over the same
+//! `C`) re-request the same kernel tiles; without a residency layer each
+//! pass re-charges the oracle, so `q` Lanczos iterations cost `q·n·c`
+//! kernel evaluations instead of one. [`ResidentSource`] wraps any
+//! [`TileSource`] with:
+//!
+//! - a **hot-tile LRU** holding at most `ram_budget` bytes of tiles (the
+//!   planner's [`Goal::memory_budget`] unit — see
+//!   [`plan_residency`](crate::coordinator::planner::plan_residency) for
+//!   picking the tile_rows/budget split). Admission is scan-resistant
+//!   (see `ResidentSource::admit`): cyclic multi-pass workloads keep a
+//!   stable hot set and hit at ≈ `ram_budget / panel` instead of
+//!   LRU-thrashing to zero, and
+//! - a **spill arena**: one append-only temp file of serialized tiles with
+//!   an offset index. Tiles are written through on first compute and read
+//!   back on a RAM miss, so the underlying source is consulted **exactly
+//!   once per tile** no matter how many passes run — with a 0-byte RAM
+//!   budget every re-read comes from disk, and `n` larger than RAM only
+//!   needs the arena to fit on disk.
+//!
+//! Tiles round-trip through the arena bit-exactly (`f64` ↔ little-endian
+//! bytes), so residency-served results are **bit-identical** to the
+//! recompute path. The arena file is removed by a guard object when the
+//! source is dropped — including during a panic unwind. If the filesystem
+//! fails (creation, write, or read), the layer degrades to
+//! recompute-on-miss instead of erroring: residency is a performance
+//! layer, never a correctness dependency.
+//!
+//! Requests do not need to align with the residency grid
+//! ([`ResidencyConfig::tile_rows`]): arbitrary `[r0, r1)` ranges are
+//! assembled from the grid tiles they overlap. Aligned requests (grid ==
+//! pipeline tile height, the default the wrappers pick) avoid computing
+//! rows outside the request on a cold miss.
+//!
+//! [`Goal::memory_budget`]: crate::coordinator::planner::Goal
+
+use super::{panel_bytes, TileSource};
+use crate::linalg::Matrix;
+use std::fs::File;
+use std::io::{Read as _, Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default residency grid height: matches the stream bench's default tile
+/// and the AOT kernel artifacts' 256-row blocks.
+pub const DEFAULT_RESIDENT_TILE_ROWS: usize = 256;
+
+/// How a [`ResidentSource`] caches and spills.
+#[derive(Debug, Clone)]
+pub struct ResidencyConfig {
+    /// Max bytes of tiles held hot in RAM (0 = every re-read hits disk).
+    pub ram_budget: u64,
+    /// Grid height of cached/spilled tiles. Wrappers set this to the
+    /// pipeline's tile height so requests align with the grid.
+    pub tile_rows: usize,
+    /// Write tiles through to a disk arena on first compute (on by
+    /// default — this is what makes re-reads free at any RAM budget).
+    pub spill: bool,
+    /// Directory for the arena file (`None` = the system temp dir).
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl ResidencyConfig {
+    /// LRU of `ram_budget` bytes + disk spill in the system temp dir.
+    pub fn new(ram_budget: u64) -> Self {
+        ResidencyConfig {
+            ram_budget,
+            tile_rows: DEFAULT_RESIDENT_TILE_ROWS,
+            spill: true,
+            spill_dir: None,
+        }
+    }
+
+    /// RAM-only residency: no arena, evicted tiles are recomputed. This is
+    /// the budget-gated cached-`C` semantics the `*_budgeted` implicit ops
+    /// keep (same gate as [`CachingSource`](super::CachingSource)).
+    pub fn ram_only(ram_budget: u64) -> Self {
+        ResidencyConfig { spill: false, ..ResidencyConfig::new(ram_budget) }
+    }
+
+    /// Everything stays hot (tests / panels known to fit).
+    pub fn unbounded() -> Self {
+        ResidencyConfig::ram_only(u64::MAX)
+    }
+
+    pub fn with_tile_rows(mut self, tile_rows: usize) -> Self {
+        self.tile_rows = tile_rows.max(1);
+        self
+    }
+
+    pub fn with_spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self.spill = true;
+        self
+    }
+}
+
+/// Counters a [`ResidentSource`] keeps (returned by
+/// [`ResidentSource::stats`], carried in service responses).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Grid-tile requests served from the RAM LRU.
+    pub ram_hits: u64,
+    /// Grid-tile requests served by reading the spill arena.
+    pub spill_hits: u64,
+    /// Grid tiles computed via the inner source (the oracle charges).
+    pub computes: u64,
+    /// Bytes appended to the spill arena.
+    pub spilled_bytes: u64,
+    /// Tiles dropped from the RAM LRU to respect the budget.
+    pub evictions: u64,
+}
+
+impl ResidencyStats {
+    /// Requests that avoided recomputing the inner source.
+    pub fn hits(&self) -> u64 {
+        self.ram_hits + self.spill_hits
+    }
+}
+
+/// Removes the arena file when dropped — a guard object, so the temp file
+/// is cleaned up even when a pipeline consumer panics and unwinds through
+/// the owning [`ResidentSource`].
+struct SpillGuard {
+    path: PathBuf,
+}
+
+impl Drop for SpillGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// The append-only tile arena. Field order matters: the handle closes
+/// before the guard unlinks the path.
+struct SpillArena {
+    file: File,
+    /// Next append offset.
+    next: u64,
+    guard: SpillGuard,
+}
+
+/// Process-wide arena name sequence (several sources may spill at once).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn create_arena(dir: Option<&Path>) -> Option<SpillArena> {
+    let dir = dir.map(Path::to_path_buf).unwrap_or_else(std::env::temp_dir);
+    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = dir.join(format!("fastspsd-spill-{}-{seq}.tiles", std::process::id()));
+    let file = File::options().read(true).write(true).create_new(true).open(&path).ok()?;
+    Some(SpillArena { file, next: 0, guard: SpillGuard { path } })
+}
+
+/// Append `m` (row-major little-endian f64s) to the arena; `None` = IO
+/// failure (the caller degrades to recompute-on-miss).
+fn write_tile(arena: &mut SpillArena, m: &Matrix) -> Option<u64> {
+    let off = arena.next;
+    arena.file.seek(SeekFrom::Start(off)).ok()?;
+    let mut buf = Vec::with_capacity(m.data().len() * 8);
+    for &v in m.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    arena.file.write_all(&buf).ok()?;
+    arena.next = off + buf.len() as u64;
+    Some(off)
+}
+
+/// Read a `rows x cols` tile back (bit-exact round trip).
+fn read_tile(arena: &mut SpillArena, off: u64, rows: usize, cols: usize) -> Option<Matrix> {
+    arena.file.seek(SeekFrom::Start(off)).ok()?;
+    let mut buf = vec![0u8; rows * cols * 8];
+    arena.file.read_exact(&mut buf).ok()?;
+    let data: Vec<f64> = buf
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    Some(Matrix::from_vec(rows, cols, data))
+}
+
+struct Slot {
+    ram: Option<Matrix>,
+    /// Last-use tick while resident (the LRU eviction key).
+    stamp: u64,
+    /// Lifetime access count (the admission key — see `ResidentSource::admit`).
+    uses: u64,
+    /// Byte offset in the arena once written through.
+    spill_off: Option<u64>,
+}
+
+struct ResState {
+    slots: Vec<Slot>,
+    tick: u64,
+    ram_bytes: u64,
+    arena: Option<SpillArena>,
+    stats: ResidencyStats,
+}
+
+/// A [`TileSource`] wrapper that makes repeated tile access pay the inner
+/// source exactly once per tile (see the module docs).
+pub struct ResidentSource<'a> {
+    inner: &'a dyn TileSource,
+    grid: usize,
+    ram_budget: u64,
+    state: Mutex<ResState>,
+}
+
+impl<'a> ResidentSource<'a> {
+    pub fn new(inner: &'a dyn TileSource, cfg: &ResidencyConfig) -> Self {
+        let n = inner.rows();
+        let grid = cfg.tile_rows.clamp(1, n.max(1));
+        let tiles = n.div_ceil(grid);
+        let arena = if cfg.spill && n > 0 {
+            create_arena(cfg.spill_dir.as_deref())
+        } else {
+            None
+        };
+        let slots = (0..tiles)
+            .map(|_| Slot { ram: None, stamp: 0, uses: 0, spill_off: None })
+            .collect();
+        ResidentSource {
+            inner,
+            grid,
+            ram_budget: cfg.ram_budget,
+            state: Mutex::new(ResState { slots, tick: 0, ram_bytes: 0, arena, stats: ResidencyStats::default() }),
+        }
+    }
+
+    /// Snapshot of the hit/miss/spill counters.
+    pub fn stats(&self) -> ResidencyStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// The residency grid height (requests are assembled from these tiles).
+    pub fn grid_rows(&self) -> usize {
+        self.grid
+    }
+
+    /// Whether a spill arena is live (requested AND the filesystem
+    /// cooperated so far).
+    pub fn spill_active(&self) -> bool {
+        self.state.lock().unwrap().arena.is_some()
+    }
+
+    /// Path of the arena file while it is live (tests assert cleanup).
+    pub fn spill_path(&self) -> Option<PathBuf> {
+        self.state
+            .lock()
+            .unwrap()
+            .arena
+            .as_ref()
+            .map(|a| a.guard.path.clone())
+    }
+
+    fn bounds(&self, g: usize) -> (usize, usize) {
+        let t0 = g * self.grid;
+        (t0, (t0 + self.grid).min(self.inner.rows()))
+    }
+
+    /// Serve grid tile `g` to `f`: RAM hit, spill read, or compute (in
+    /// that order), write-through + cache admission on the way.
+    fn with_grid_tile(&self, g: usize, f: impl FnOnce(&Matrix)) {
+        let (t0, t1) = self.bounds(g);
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        st.slots[g].uses += 1;
+        if st.slots[g].ram.is_some() {
+            st.slots[g].stamp = tick;
+            st.stats.ram_hits += 1;
+            f(st.slots[g].ram.as_ref().unwrap());
+            return;
+        }
+        let m = self.fetch_cold(&mut st, g, t0, t1);
+        let bytes = panel_bytes(m.rows(), m.cols());
+        if self.admit(&mut st, g, bytes) {
+            st.ram_bytes += bytes;
+            st.slots[g].ram = Some(m);
+            st.slots[g].stamp = tick;
+            f(st.slots[g].ram.as_ref().unwrap());
+        } else {
+            f(&m);
+        }
+    }
+
+    /// Owned variant of [`Self::with_grid_tile`] for requests that cover
+    /// exactly one grid tile (the common case — the wrappers align the
+    /// grid with the pipeline tile height): an unadmitted cold tile is
+    /// returned by move, so the zero-cache path costs no more copies than
+    /// a plain passthrough.
+    fn take_grid_tile(&self, g: usize) -> Matrix {
+        let (t0, t1) = self.bounds(g);
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        st.slots[g].uses += 1;
+        if st.slots[g].ram.is_some() {
+            let out = st.slots[g].ram.as_ref().unwrap().clone();
+            st.slots[g].stamp = tick;
+            st.stats.ram_hits += 1;
+            return out;
+        }
+        let m = self.fetch_cold(&mut st, g, t0, t1);
+        let bytes = panel_bytes(m.rows(), m.cols());
+        if self.admit(&mut st, g, bytes) {
+            st.ram_bytes += bytes;
+            st.slots[g].stamp = tick;
+            let out = m.clone();
+            st.slots[g].ram = Some(m);
+            out
+        } else {
+            m
+        }
+    }
+
+    /// Fetch a non-resident grid tile: spill read when the arena has it,
+    /// compute (+ write-through) otherwise. An unreadable arena is
+    /// dropped wholesale — every recorded offset becomes recompute.
+    fn fetch_cold(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Matrix {
+        let spilled = st.slots[g].spill_off.filter(|_| st.arena.is_some());
+        if let Some(off) = spilled {
+            if let Some(m) = read_tile(st.arena.as_mut().unwrap(), off, t1 - t0, self.inner.cols())
+            {
+                st.stats.spill_hits += 1;
+                return m;
+            }
+            st.arena = None;
+            for s in st.slots.iter_mut() {
+                s.spill_off = None;
+            }
+        }
+        self.compute_tile(st, g, t0, t1)
+    }
+
+    /// Compute grid tile `g` from the inner source and write it through to
+    /// the arena. Runs under the state lock: tile production is already
+    /// serialized per pipeline (one producer), and inner-source compute
+    /// parallelism lives below this layer (the oracle's GEMM pool).
+    fn compute_tile(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Matrix {
+        let m = self.inner.tile(t0, t1);
+        st.stats.computes += 1;
+        if st.slots[g].spill_off.is_none() {
+            if let Some(arena) = st.arena.as_mut() {
+                match write_tile(arena, &m) {
+                    Some(off) => {
+                        st.slots[g].spill_off = Some(off);
+                        st.stats.spilled_bytes += panel_bytes(m.rows(), m.cols());
+                    }
+                    None => {
+                        // arena write failed: degrade to recompute-on-miss
+                        st.arena = None;
+                        for s in st.slots.iter_mut() {
+                            s.spill_off = None;
+                        }
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Scan-resistant admission over the LRU: a tile is admitted while
+    /// free budget remains; once the cache is full it may only displace
+    /// least-recently-used victims it has strictly out-accessed
+    /// (TinyLFU-style frequency gate). Plain LRU admission would thrash
+    /// on the cyclic re-scans every consumer of this layer runs (the tile
+    /// about to be revisited is always the one just evicted — 0% hits at
+    /// any budget below the panel); with the gate, cyclic scans converge
+    /// on a stable hot set of the first tiles that fit, so the RAM hit
+    /// rate is ≈ `ram_budget / panel` — the model
+    /// [`plan_residency`](crate::coordinator::planner::plan_residency)
+    /// predicts — while genuinely hotter tiles still displace colder
+    /// ones. The O(slots) victim scan runs only on displacement, which
+    /// cyclic scans never trigger; spilled victims make eviction free
+    /// (the bytes are already on disk).
+    fn admit(&self, st: &mut ResState, g: usize, bytes: u64) -> bool {
+        if bytes > self.ram_budget {
+            return false; // can never fit, even alone
+        }
+        if st.ram_bytes + bytes <= self.ram_budget {
+            return true; // free budget remains, no displacement needed
+        }
+        // Plan the displacement before touching anything, so a rejected
+        // admission never shrinks the hot set: victims are taken
+        // coldest-first and every one must pass the frequency gate.
+        let uses_g = st.slots[g].uses;
+        let mut candidates: Vec<usize> = (0..st.slots.len())
+            .filter(|&i| st.slots[i].ram.is_some())
+            .collect();
+        candidates.sort_by_key(|&i| st.slots[i].stamp);
+        let mut freed = 0u64;
+        let mut victims = Vec::new();
+        for &i in &candidates {
+            if st.ram_bytes - freed + bytes <= self.ram_budget {
+                break;
+            }
+            if st.slots[i].uses >= uses_g {
+                return false; // would displace a tile at least as hot
+            }
+            freed += {
+                let m = st.slots[i].ram.as_ref().unwrap();
+                panel_bytes(m.rows(), m.cols())
+            };
+            victims.push(i);
+        }
+        if st.ram_bytes - freed + bytes > self.ram_budget {
+            return false; // even evicting every colder tile is not enough
+        }
+        for &v in &victims {
+            let m = st.slots[v].ram.take().unwrap();
+            st.ram_bytes -= panel_bytes(m.rows(), m.cols());
+            st.stats.evictions += 1;
+        }
+        true
+    }
+}
+
+impl TileSource for ResidentSource<'_> {
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn tile(&self, r0: usize, r1: usize) -> Matrix {
+        let n = self.inner.rows();
+        if r1 <= r0 || n == 0 {
+            return self.inner.tile(r0, r1);
+        }
+        debug_assert!(r1 <= n, "tile request past the source");
+        let cols = self.inner.cols();
+        let g0 = r0 / self.grid;
+        let g1 = (r1 - 1) / self.grid;
+        if g0 == g1 && (r0, r1) == self.bounds(g0) {
+            // grid-aligned request: hand the tile over whole
+            return self.take_grid_tile(g0);
+        }
+        let mut out = Matrix::zeros(r1 - r0, cols);
+        for g in g0..=g1 {
+            let (t0, t1) = self.bounds(g);
+            self.with_grid_tile(g, |tile| {
+                let lo = r0.max(t0);
+                let hi = r1.min(t1);
+                for i in lo..hi {
+                    out.row_mut(i - r0).copy_from_slice(tile.row(i - t0));
+                }
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{run_pipeline, CollectConsumer, MatrixSource, TileConsumer};
+    use crate::util::Rng;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Counts how many times each grid tile was computed.
+    struct CountingInner {
+        a: Matrix,
+        computes: AtomicUsize,
+    }
+
+    impl TileSource for CountingInner {
+        fn rows(&self) -> usize {
+            self.a.rows()
+        }
+        fn cols(&self) -> usize {
+            self.a.cols()
+        }
+        fn tile(&self, r0: usize, r1: usize) -> Matrix {
+            self.computes.fetch_add(1, Ordering::SeqCst);
+            self.a.block(r0, r1, 0, self.a.cols())
+        }
+    }
+
+    fn counting(n: usize, c: usize, seed: u64) -> CountingInner {
+        let mut rng = Rng::new(seed);
+        CountingInner { a: Matrix::randn(n, c, &mut rng), computes: AtomicUsize::new(0) }
+    }
+
+    #[test]
+    fn unaligned_requests_assemble_bit_exactly() {
+        let inner = counting(29, 3, 0);
+        for (ram, spill) in [(u64::MAX, false), (0, true), (29 * 3 * 8 / 2, true)] {
+            let mut cfg = ResidencyConfig::new(ram).with_tile_rows(8);
+            cfg.spill = spill;
+            let src = ResidentSource::new(&inner, &cfg);
+            // deliberately misaligned and overlapping ranges
+            for (r0, r1) in [(0usize, 29usize), (3, 11), (7, 8), (15, 29), (0, 1)] {
+                let got = src.tile(r0, r1);
+                assert_eq!(
+                    got.max_abs_diff(&inner.a.block(r0, r1, 0, 3)),
+                    0.0,
+                    "[{r0},{r1}) ram={ram} spill={spill}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spill_pays_the_source_exactly_once_at_zero_ram() {
+        let inner = counting(40, 4, 1);
+        let src = ResidentSource::new(&inner, &ResidencyConfig::new(0).with_tile_rows(8));
+        assert!(src.spill_active(), "temp-dir arena must come up");
+        let tiles = 40usize.div_ceil(8);
+        // three full passes at a different pipeline tile height each
+        for pass_tile in [8usize, 8, 8] {
+            let mut collect = CollectConsumer::new(40, 4);
+            run_pipeline(&src, pass_tile, 2, &mut [&mut collect]);
+            assert_eq!(collect.into_matrix().max_abs_diff(&inner.a), 0.0);
+        }
+        assert_eq!(inner.computes.load(Ordering::SeqCst), tiles, "source must be paid once per tile");
+        let st = src.stats();
+        assert_eq!(st.computes as usize, tiles);
+        assert_eq!(st.spill_hits as usize, 2 * tiles, "later passes read the arena");
+        assert_eq!(st.ram_hits, 0, "zero RAM budget keeps nothing hot");
+        assert_eq!(st.spilled_bytes, 40 * 4 * 8);
+    }
+
+    #[test]
+    fn admission_is_scan_resistant_and_frequency_displaces() {
+        let inner = counting(32, 2, 2);
+        // grid 8 → 4 tiles of 8*2*8 = 128 bytes; budget holds exactly two
+        let src = ResidentSource::new(
+            &inner,
+            &ResidencyConfig::ram_only(2 * 128).with_tile_rows(8),
+        );
+        let t = |g: usize| {
+            let _ = src.tile(g * 8, g * 8 + 8);
+        };
+        t(0); // admit {0}
+        t(1); // admit {0, 1}
+        t(2); // full, uses(2)=1 not > uses(0)=1: rejected, hot set stable
+        t(1); // RAM hit
+        t(3); // full, uses(3)=1 not > uses(0)=1: rejected
+        t(1); // RAM hit
+        t(2); // uses(2)=2 > uses(0)=1: displaces the LRU victim 0
+        let st = src.stats();
+        assert_eq!(st.ram_hits, 2);
+        assert_eq!(st.computes, 5, "rejected tiles recompute without spill");
+        assert_eq!(st.spill_hits, 0);
+        assert_eq!(st.evictions, 1, "only the frequency-justified displacement");
+        assert_eq!(inner.computes.load(Ordering::SeqCst), 5);
+        // tile 0 was displaced: re-reading it recomputes
+        t(0);
+        assert_eq!(inner.computes.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn cyclic_scans_hit_in_proportion_to_the_budget() {
+        // The planner's hit-rate model (`min(1, ram_budget / panel)`) must
+        // be realized by the cache on the workloads this layer serves:
+        // repeated full passes. Budget = half the panel → every pass after
+        // the first hits RAM on exactly half the tiles (the stable hot
+        // prefix) and the spill arena on the rest — never the source.
+        let inner = counting(64, 2, 7);
+        let tile_bytes = 8 * 2 * 8; // grid 8 → 8 tiles
+        let src = ResidentSource::new(
+            &inner,
+            &ResidencyConfig::new(4 * tile_bytes).with_tile_rows(8),
+        );
+        for _ in 0..3 {
+            let mut collect = CollectConsumer::new(64, 2);
+            run_pipeline(&src, 8, 2, &mut [&mut collect]);
+            assert_eq!(collect.into_matrix().max_abs_diff(&inner.a), 0.0);
+        }
+        let st = src.stats();
+        assert_eq!(inner.computes.load(Ordering::SeqCst), 8, "source paid once per tile");
+        assert_eq!(st.ram_hits, 2 * 4, "passes 2 and 3 hit RAM on the hot half");
+        assert_eq!(st.spill_hits, 2 * 4, "…and the arena on the cold half");
+        assert_eq!(st.evictions, 0, "cyclic scans never displace the hot set");
+    }
+
+    #[test]
+    fn ram_only_overflow_recomputes_instead_of_erroring() {
+        let inner = counting(20, 3, 3);
+        let src = ResidentSource::new(&inner, &ResidencyConfig::ram_only(0).with_tile_rows(5));
+        let mut c1 = CollectConsumer::new(20, 3);
+        run_pipeline(&src, 5, 2, &mut [&mut c1]);
+        let mut c2 = CollectConsumer::new(20, 3);
+        run_pipeline(&src, 5, 2, &mut [&mut c2]);
+        assert_eq!(c1.into_matrix().max_abs_diff(&c2.into_matrix()), 0.0);
+        assert_eq!(inner.computes.load(Ordering::SeqCst), 8, "both passes recompute");
+        assert_eq!(src.stats().hits(), 0);
+    }
+
+    #[test]
+    fn arena_file_is_removed_on_drop() {
+        let inner = counting(16, 2, 4);
+        let path = {
+            let src = ResidentSource::new(&inner, &ResidencyConfig::new(u64::MAX).with_tile_rows(4));
+            let _ = src.tile(0, 16);
+            let p = src.spill_path().expect("arena live");
+            assert!(p.exists(), "arena file must exist while the source lives");
+            p
+        };
+        assert!(!path.exists(), "arena file must be unlinked on drop");
+    }
+
+    #[test]
+    fn arena_file_is_removed_even_when_a_consumer_panics() {
+        let inner = counting(24, 2, 5);
+        let path = std::sync::Mutex::new(None::<PathBuf>);
+        struct Bomb;
+        impl TileConsumer for Bomb {
+            fn consume(&mut self, r0: usize, _tile: &Matrix) {
+                if r0 >= 8 {
+                    panic!("consumer bomb");
+                }
+            }
+        }
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let src = ResidentSource::new(&inner, &ResidencyConfig::new(0).with_tile_rows(4));
+            *path.lock().unwrap() = src.spill_path();
+            run_pipeline(&src, 4, 1, &mut [&mut Bomb]);
+        }));
+        assert!(result.is_err(), "panic must propagate");
+        let p = path.lock().unwrap().take().expect("arena was live");
+        assert!(!p.exists(), "guard must unlink the arena during unwind");
+    }
+
+    #[test]
+    fn matches_plain_source_through_the_pipeline() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(37, 5, &mut rng);
+        let plain = MatrixSource::new(&a);
+        for tile_rows in [1usize, 7, 37, 64] {
+            let cfg = ResidencyConfig::new(512).with_tile_rows(tile_rows.min(37));
+            let src = ResidentSource::new(&plain, &cfg);
+            for pass in 0..2 {
+                let mut collect = CollectConsumer::new(37, 5);
+                run_pipeline(&src, tile_rows, 2, &mut [&mut collect]);
+                assert_eq!(
+                    collect.into_matrix().max_abs_diff(&a),
+                    0.0,
+                    "tile={tile_rows} pass={pass}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_source_is_a_passthrough() {
+        let a = Matrix::zeros(0, 3);
+        let plain = MatrixSource::new(&a);
+        let src = ResidentSource::new(&plain, &ResidencyConfig::new(0));
+        assert_eq!(src.rows(), 0);
+        assert!(!src.spill_active(), "no arena for an empty source");
+        run_pipeline(&src, 4, 2, &mut []);
+    }
+}

@@ -115,7 +115,7 @@ fn service_over_pjrt_engine_if_available() {
         sigma::gamma_of_sigma(sig),
         Arc::clone(&engine),
     ));
-    let svc = ApproxService::new(oracle, ServiceConfig { workers: 3, queue_capacity: 8 });
+    let svc = ApproxService::new(oracle, ServiceConfig { workers: 3, queue_capacity: 8, spill_dir: None });
     let (tx, rx) = mpsc::channel();
     for i in 0..12u64 {
         svc.submit(
@@ -128,6 +128,7 @@ fn service_over_pjrt_engine_if_available() {
                 // alternate materialized / tile-pipeline builds: both must
                 // serve identical results through the same service
                 tile_rows: if i % 2 == 0 { None } else { Some(64) },
+                residency_budget: None,
             },
             tx.clone(),
         );

@@ -1,0 +1,228 @@
+//! Residency-layer acceptance tests (ISSUE 4): cached / spilled /
+//! uncached results must be **bit-identical** across tile sizes
+//! {1, 7, 64, n} and cache budgets {0, one-tile, half-panel, ∞}, and the
+//! oracle entry counter must prove kernel-eval elimination — across q ≥ 5
+//! Lanczos iterations the residency-backed path charges exactly one `n·c`
+//! observation at **any** RAM budget (including 0, where every re-read
+//! comes from the disk arena), versus `q·n·c`-style re-streaming without
+//! it.
+
+use fastspsd::coordinator::oracle::{KernelOracle, RbfOracle};
+use fastspsd::linalg::Matrix;
+use fastspsd::sketch::SketchKind;
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::stream::{
+    self, CollectConsumer, OracleColumnsSource, ResidencyConfig, ResidentSource, StreamConfig,
+};
+use fastspsd::util::Rng;
+use std::sync::Arc;
+
+const N: usize = 53; // prime: no tile height divides it
+const C: usize = 5;
+
+fn oracle() -> RbfOracle {
+    let mut rng = Rng::new(3);
+    RbfOracle::cpu(Arc::new(Matrix::randn(N, 6, &mut rng)), 0.5)
+}
+
+fn landmarks() -> Vec<usize> {
+    vec![2, 11, 23, 37, 50]
+}
+
+/// The budget sweep the issue names: zero (all-disk), one tile, half the
+/// panel, unbounded.
+fn budgets(tile: usize) -> [u64; 4] {
+    let one_tile = (tile.min(N) * C * 8) as u64;
+    let panel = (N * C * 8) as u64;
+    [0, one_tile, panel / 2, u64::MAX]
+}
+
+#[test]
+fn lanczos_is_bit_identical_across_tiles_and_budgets() {
+    let o = oracle();
+    let cols = landmarks();
+    let mut rng = Rng::new(4);
+    let mut u = Matrix::randn(C, C, &mut rng);
+    u.symmetrize();
+    let src = OracleColumnsSource::new(&o, &cols);
+
+    // uncached reference (whole-tile = the materialized path)
+    let (vals_ref, vecs_ref) = stream::top_k_eigs(&src, &u, 3, 7, StreamConfig::whole());
+
+    for tile in [1usize, 7, 64, N] {
+        let cfg = StreamConfig::tiled(tile);
+        // plain re-streaming at this tile height
+        let (vals_plain, vecs_plain) = stream::top_k_eigs(&src, &u, 3, 7, cfg);
+        assert_eq!(vals_ref, vals_plain, "tile={tile}: tiling must not change Lanczos");
+        assert_eq!(vecs_ref.max_abs_diff(&vecs_plain), 0.0);
+
+        for budget in budgets(tile) {
+            // spilled (LRU budget + disk arena)
+            let rc = ResidencyConfig::new(budget).with_tile_rows(tile);
+            o.reset_entries();
+            let (vals, vecs, stats) = stream::top_k_eigs_resident(&src, &u, 3, 7, cfg, &rc);
+            assert_eq!(vals_ref, vals, "tile={tile} budget={budget}");
+            assert_eq!(vecs_ref.max_abs_diff(&vecs), 0.0, "tile={tile} budget={budget}");
+            assert_eq!(
+                o.entries_observed(),
+                (N * C) as u64,
+                "tile={tile} budget={budget}: spill must charge exactly one n·c"
+            );
+            assert_eq!(stats.computes, N.div_ceil(tile.min(N)) as u64);
+            assert!(stats.hits() > 0, "Lanczos re-reads must hit the residency layer");
+
+            // cached (RAM-only budget gate, the *_budgeted contract)
+            o.reset_entries();
+            let (vals_b, vecs_b) = stream::top_k_eigs_budgeted(&src, &u, 3, 7, cfg, budget);
+            assert_eq!(vals_ref, vals_b, "tile={tile} budget={budget}");
+            assert_eq!(vecs_ref.max_abs_diff(&vecs_b), 0.0);
+            if budget == u64::MAX {
+                assert_eq!(o.entries_observed(), (N * C) as u64);
+            }
+        }
+    }
+}
+
+#[test]
+fn entry_counter_proves_kernel_eval_elimination() {
+    // The acceptance bar: q ≥ 5 Lanczos iterations cost one n·c with the
+    // cache+spill layer enabled (any budget, including 0 RAM) vs the
+    // re-streaming path's many-pass bill.
+    let o = oracle();
+    let cols = landmarks();
+    let u = Matrix::identity(C);
+    let src = OracleColumnsSource::new(&o, &cols);
+    let cfg = StreamConfig::tiled(7);
+    let k = 5; // ≥ 5 Lanczos iterations, 2 panel passes per matvec
+
+    o.reset_entries();
+    let (vals_plain, _) = stream::top_k_eigs(&src, &u, k, 9, cfg);
+    let entries_plain = o.entries_observed();
+    assert!(
+        entries_plain >= 5 * (N * C) as u64,
+        "re-streaming path must pay ≥ q·n·c, got {entries_plain}"
+    );
+
+    for budget in [0u64, u64::MAX] {
+        o.reset_entries();
+        let rc = ResidencyConfig::new(budget).with_tile_rows(7);
+        let (vals, _, stats) = stream::top_k_eigs_resident(&src, &u, k, 9, cfg, &rc);
+        assert_eq!(
+            o.entries_observed(),
+            (N * C) as u64,
+            "budget={budget}: exactly one n·c charge"
+        );
+        assert_eq!(vals_plain, vals, "budget={budget}: bit-identical to uncached");
+        if budget == 0 {
+            assert_eq!(stats.ram_hits, 0, "zero RAM keeps nothing hot");
+            assert_eq!(stats.spilled_bytes, (N * C * 8) as u64);
+            assert!(stats.spill_hits > 0);
+        } else {
+            assert_eq!(stats.spill_hits, 0, "unbounded RAM never touches the arena");
+        }
+    }
+}
+
+#[test]
+fn regularized_solve_round_trips_through_spill() {
+    let o = oracle();
+    let cols = landmarks();
+    let mut rng = Rng::new(5);
+    let g = Matrix::randn(C, C, &mut rng);
+    let u = g.matmul_tr(&g); // SPSD
+    let y: Vec<f64> = (0..N).map(|i| (i as f64 * 0.4).cos()).collect();
+    let src = OracleColumnsSource::new(&o, &cols);
+    let w_ref = stream::solve_regularized(&src, &u, 0.3, &y, StreamConfig::whole());
+    for tile in [1usize, 7, 64, N] {
+        let cfg = StreamConfig::tiled(tile);
+        for budget in budgets(tile) {
+            let rc = ResidencyConfig::new(budget).with_tile_rows(tile);
+            o.reset_entries();
+            let (w, _) = stream::solve_regularized_resident(&src, &u, 0.3, &y, cfg, &rc);
+            assert_eq!(w_ref, w, "tile={tile} budget={budget}");
+            assert_eq!(o.entries_observed(), (N * C) as u64);
+            let w_b = stream::solve_regularized_budgeted(&src, &u, 0.3, &y, cfg, budget);
+            assert_eq!(w_ref, w_b, "budgeted tile={tile} budget={budget}");
+        }
+    }
+}
+
+#[test]
+fn leverage_builds_are_bit_identical_through_residency() {
+    // The two-pass leverage plan routed through the residency layer (pass
+    // 1 folds scores, pass 2 reloads tiles to collect C and sample S) must
+    // reproduce the single-pass streamed build bit-for-bit, at every tile
+    // height and budget, with the same oracle bill.
+    let o = oracle();
+    let p = {
+        let mut rng = Rng::new(21);
+        spsd::uniform_p(N, C, &mut rng)
+    };
+    for tile in [1usize, 7, 64, N] {
+        for cfg in [FastConfig::uniform(20), FastConfig::leverage(20)] {
+            let mut r1 = Rng::new(99);
+            let a = spsd::fast_streamed(&o, &p, cfg, StreamConfig::tiled(tile), &mut r1);
+            for budget in budgets(tile) {
+                let mut r2 = Rng::new(99);
+                let rc = ResidencyConfig::new(budget).with_tile_rows(tile);
+                let (b, stats) = spsd::fast_streamed_resident(
+                    &o,
+                    &p,
+                    cfg,
+                    StreamConfig::tiled(tile),
+                    &rc,
+                    &mut r2,
+                );
+                assert_eq!(a.c.max_abs_diff(&b.c), 0.0, "{} C tile={tile} budget={budget}", a.method);
+                assert_eq!(a.u.max_abs_diff(&b.u), 0.0, "{} U tile={tile} budget={budget}", a.method);
+                assert_eq!(
+                    a.entries_observed, b.entries_observed,
+                    "{} tile={tile} budget={budget}: residency must not change the oracle bill",
+                    a.method
+                );
+                let tiles = N.div_ceil(tile.min(N)) as u64;
+                assert_eq!(stats.computes, tiles, "one oracle compute per grid tile");
+                if matches!(cfg.kind, SketchKind::Leverage { .. }) {
+                    // pass 2 re-reads the full panel from residency
+                    assert_eq!(stats.hits(), tiles, "{} tile={tile} budget={budget}", a.method);
+                    if budget == 0 {
+                        assert_eq!(stats.spill_hits, tiles);
+                    }
+                }
+            }
+        }
+        // Nyström through the same layer
+        let a = spsd::nystrom_streamed(&o, &p, StreamConfig::tiled(tile));
+        let rc = ResidencyConfig::new(0).with_tile_rows(tile);
+        let (b, _) = spsd::nystrom_resident(&o, &p, StreamConfig::tiled(tile), &rc);
+        assert_eq!(a.c.max_abs_diff(&b.c), 0.0);
+        assert_eq!(a.u.max_abs_diff(&b.u), 0.0);
+    }
+}
+
+#[test]
+fn residency_serves_misaligned_pass_tilings_from_one_grid() {
+    // One residency grid can back passes at other tile heights: the grid
+    // stays the unit of caching/spilling, requests are assembled from it,
+    // and the oracle is still charged exactly once per grid tile.
+    let o = oracle();
+    let cols = landmarks();
+    let src = OracleColumnsSource::new(&o, &cols);
+    let rc = ResidencyConfig::new(0).with_tile_rows(8);
+    let resident = ResidentSource::new(&src, &rc);
+    o.reset_entries();
+    let reference = o.columns(&cols);
+    let first = o.entries_observed();
+    o.reset_entries();
+    for pass_tile in [8usize, 13, 1, N] {
+        let mut collect = CollectConsumer::new(N, C);
+        stream::run_pipeline(&resident, pass_tile, 2, &mut [&mut collect]);
+        assert_eq!(
+            collect.into_matrix().max_abs_diff(&reference),
+            0.0,
+            "pass_tile={pass_tile}"
+        );
+    }
+    assert_eq!(o.entries_observed(), first, "grid tiles computed once, reused by every pass");
+    assert_eq!(resident.stats().computes, N.div_ceil(8) as u64);
+}
