@@ -1,6 +1,7 @@
 # fastspsd build/verify entry points.
 #
-#   make ci           — toolchain guard + build + test + clippy (if
+#   make ci           — toolchain guard + build + test + rustdoc gate
+#                       (RUSTDOCFLAGS=-D warnings) + clippy (if
 #                       installed). The guard FAILS FAST with a loud
 #                       message when no Rust toolchain is present, so
 #                       "authored but never compiled" cannot silently
@@ -21,7 +22,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-quick ci perf-check artifacts toolchain-guard
+.PHONY: build test bench bench-quick ci doc perf-check artifacts toolchain-guard
 
 toolchain-guard:
 	@command -v $(CARGO) >/dev/null 2>&1 || { \
@@ -45,13 +46,18 @@ bench: toolchain-guard
 	$(CARGO) bench --bench hotpath
 	$(CARGO) bench --bench stream
 
-ci: toolchain-guard build test
+ci: toolchain-guard build test doc
 	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
 	  $(CARGO) clippy --release -- -D warnings; \
 	else \
 	  echo "clippy not installed — skipping lint"; \
 	fi
-	@echo "ci OK — build + test green$$($(CARGO) clippy --version >/dev/null 2>&1 && echo ' + clippy clean')"
+	@echo "ci OK — build + test + doc green$$($(CARGO) clippy --version >/dev/null 2>&1 && echo ' + clippy clean')"
+
+# Rustdoc gate: the public surface (in particular the `exec` policy API)
+# must stay documented and its intra-doc links resolving.
+doc: toolchain-guard
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 bench-quick: toolchain-guard
 	FASTSPSD_BENCH_QUICK=1 FASTSPSD_BENCH_COMMIT=1 $(CARGO) bench --bench hotpath

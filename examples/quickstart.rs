@@ -6,6 +6,7 @@
 
 use fastspsd::coordinator::{oracle::KernelOracle, KernelEngine, RbfOracle};
 use fastspsd::data::{make_blobs, sigma};
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::spsd::{self, FastConfig};
 use fastspsd::util::Rng;
 use std::sync::Arc;
@@ -33,15 +34,16 @@ fn main() {
     let kfull = oracle.full(); // only for error reporting
     let kf = kfull.fro_norm_sq();
     println!("\n{:<22} {:>12} {:>14} {:>10}", "method", "rel error", "entries of K", "build s");
+    let pol = ExecPolicy::Materialized;
     for (name, approx) in [
-        ("nystrom", spsd::nystrom(&oracle, &p)),
+        ("nystrom", exec::nystrom(&oracle, &p, &pol).result),
         ("fast (s=8c, uniform)", {
             oracle.reset_entries();
-            spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut rng)
+            exec::fast(&oracle, &p, FastConfig::uniform(s), &pol, &mut rng).result
         }),
         ("prototype", {
             oracle.reset_entries();
-            spsd::prototype(&oracle, &p)
+            exec::prototype(&oracle, &p, &pol).result
         }),
     ] {
         let err = kfull.sub(&approx.materialize()).fro_norm_sq() / kf;
@@ -55,7 +57,7 @@ fn main() {
     //    a regularized solve, both O(n c^2).
     oracle.reset_entries();
     let mut rng2 = Rng::new(1);
-    let approx = spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut rng2);
+    let approx = exec::fast(&oracle, &p, FastConfig::uniform(s), &pol, &mut rng2).result;
     let (vals, _vecs) = approx.eig_k(5);
     println!("\ntop-5 eigenvalues via fast model: {vals:?}");
     let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();

@@ -12,10 +12,11 @@
 use fastspsd::benchkit::alloc::{AllocGauge, CountingAlloc};
 use fastspsd::benchkit::{black_box, BenchSuite};
 use fastspsd::coordinator::oracle::{KernelOracle, RbfOracle};
-use fastspsd::cur::{self, FastCurConfig};
+use fastspsd::cur::FastCurConfig;
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::spsd::{self, FastConfig, LeverageBasis};
-use fastspsd::stream::{self, OracleColumnsSource, ResidencyConfig, StreamConfig};
+use fastspsd::stream::OracleColumnsSource;
 use fastspsd::util::Rng;
 use std::sync::Arc;
 
@@ -52,30 +53,19 @@ fn main() {
     let oracle = RbfOracle::cpu(x, 0.4);
     let p = spsd::uniform_p(n, c, &mut rng);
 
+    let mat = ExecPolicy::Materialized;
     suite.bench(&format!("fast[uniform] materialized n={n}"), || {
-        black_box(spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut Rng::new(1)));
+        black_box(exec::fast(&oracle, &p, FastConfig::uniform(s), &mat, &mut Rng::new(1)));
     });
-    let peak = gauged(|| spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut Rng::new(1)));
+    let peak = gauged(|| exec::fast(&oracle, &p, FastConfig::uniform(s), &mat, &mut Rng::new(1)));
     println!("    peak extra: {}", fmt_mib(peak));
     for tile in [64usize, DEFAULT_TILE] {
+        let pol = ExecPolicy::streamed(tile);
         suite.bench(&format!("fast[uniform] streamed t={tile} n={n}"), || {
-            black_box(spsd::fast_streamed(
-                &oracle,
-                &p,
-                FastConfig::uniform(s),
-                StreamConfig::tiled(tile),
-                &mut Rng::new(1),
-            ));
+            black_box(exec::fast(&oracle, &p, FastConfig::uniform(s), &pol, &mut Rng::new(1)));
         });
-        let peak = gauged(|| {
-            spsd::fast_streamed(
-                &oracle,
-                &p,
-                FastConfig::uniform(s),
-                StreamConfig::tiled(tile),
-                &mut Rng::new(1),
-            )
-        });
+        let peak =
+            gauged(|| exec::fast(&oracle, &p, FastConfig::uniform(s), &pol, &mut Rng::new(1)));
         println!("    peak extra: {}", fmt_mib(peak));
     }
     if let (Some(mat), Some(st)) = (
@@ -87,48 +77,36 @@ fn main() {
 
     // ---- fast model, leverage family (streamed Gram scores) -------------
     suite.bench(&format!("fast[leverage] materialized n={n}"), || {
-        black_box(spsd::fast(&oracle, &p, FastConfig::leverage(s), &mut Rng::new(5)));
+        black_box(exec::fast(&oracle, &p, FastConfig::leverage(s), &mat, &mut Rng::new(5)));
     });
-    let peak = gauged(|| spsd::fast(&oracle, &p, FastConfig::leverage(s), &mut Rng::new(5)));
+    let peak = gauged(|| exec::fast(&oracle, &p, FastConfig::leverage(s), &mat, &mut Rng::new(5)));
     println!("    peak extra: {}", fmt_mib(peak));
+    let tiled = ExecPolicy::streamed(DEFAULT_TILE);
     suite.bench(&format!("fast[leverage] streamed t={DEFAULT_TILE} n={n}"), || {
-        black_box(spsd::fast_streamed(
-            &oracle,
-            &p,
-            FastConfig::leverage(s),
-            StreamConfig::tiled(DEFAULT_TILE),
-            &mut Rng::new(5),
-        ));
+        black_box(exec::fast(&oracle, &p, FastConfig::leverage(s), &tiled, &mut Rng::new(5)));
     });
-    let peak = gauged(|| {
-        spsd::fast_streamed(
-            &oracle,
-            &p,
-            FastConfig::leverage(s),
-            StreamConfig::tiled(DEFAULT_TILE),
-            &mut Rng::new(5),
-        )
-    });
+    let peak =
+        gauged(|| exec::fast(&oracle, &p, FastConfig::leverage(s), &tiled, &mut Rng::new(5)));
     println!("    peak extra: {}", fmt_mib(peak));
     // reference: the historical resident-SVD scoring (O(n·c) scratch) —
     // the memory delta against the Gram rows above is the tentpole win
     let svd_cfg = FastConfig::leverage(s).with_basis(LeverageBasis::ExactSvd);
     suite.bench(&format!("fast[leverage-svd] materialized n={n}"), || {
-        black_box(spsd::fast(&oracle, &p, svd_cfg, &mut Rng::new(5)));
+        black_box(exec::fast(&oracle, &p, svd_cfg, &mat, &mut Rng::new(5)));
     });
-    let peak = gauged(|| spsd::fast(&oracle, &p, svd_cfg, &mut Rng::new(5)));
+    let peak = gauged(|| exec::fast(&oracle, &p, svd_cfg, &mat, &mut Rng::new(5)));
     println!("    peak extra: {}", fmt_mib(peak));
 
     // ---- nystrom --------------------------------------------------------
     suite.bench(&format!("nystrom materialized n={n}"), || {
-        black_box(spsd::nystrom(&oracle, &p));
+        black_box(exec::nystrom(&oracle, &p, &mat));
     });
-    let peak = gauged(|| spsd::nystrom(&oracle, &p));
+    let peak = gauged(|| exec::nystrom(&oracle, &p, &mat));
     println!("    peak extra: {}", fmt_mib(peak));
     suite.bench(&format!("nystrom streamed t={DEFAULT_TILE} n={n}"), || {
-        black_box(spsd::nystrom_streamed(&oracle, &p, StreamConfig::tiled(DEFAULT_TILE)));
+        black_box(exec::nystrom(&oracle, &p, &tiled));
     });
-    let peak = gauged(|| spsd::nystrom_streamed(&oracle, &p, StreamConfig::tiled(DEFAULT_TILE)));
+    let peak = gauged(|| exec::nystrom(&oracle, &p, &tiled));
     println!("    peak extra: {}", fmt_mib(peak));
 
     // ---- prototype (the n² -> tile·n memory win) ------------------------
@@ -138,15 +116,14 @@ fn main() {
     let oracle_p = RbfOracle::cpu(xp, 0.4);
     let pp = spsd::uniform_p(np, c, &mut rng);
     suite.bench(&format!("prototype materialized n={np}"), || {
-        black_box(spsd::prototype(&oracle_p, &pp));
+        black_box(exec::prototype(&oracle_p, &pp, &mat));
     });
-    let peak = gauged(|| spsd::prototype(&oracle_p, &pp));
+    let peak = gauged(|| exec::prototype(&oracle_p, &pp, &mat));
     println!("    peak extra: {}", fmt_mib(peak));
     suite.bench(&format!("prototype streamed t={DEFAULT_TILE} n={np}"), || {
-        black_box(spsd::prototype_streamed(&oracle_p, &pp, StreamConfig::tiled(DEFAULT_TILE)));
+        black_box(exec::prototype(&oracle_p, &pp, &tiled));
     });
-    let peak =
-        gauged(|| spsd::prototype_streamed(&oracle_p, &pp, StreamConfig::tiled(DEFAULT_TILE)));
+    let peak = gauged(|| exec::prototype(&oracle_p, &pp, &tiled));
     println!("    peak extra: {}", fmt_mib(peak));
 
     // ---- implicit ops: residency vs re-streaming Lanczos ----------------
@@ -157,28 +134,30 @@ fn main() {
     let k_eigs = 4;
     let u_id = Matrix::identity(c);
     let src = OracleColumnsSource::new(&oracle, &p);
-    let icfg = StreamConfig::tiled(DEFAULT_TILE);
     suite.bench(&format!("implicit top-k restream t={DEFAULT_TILE} n={n}"), || {
-        black_box(stream::top_k_eigs(&src, &u_id, k_eigs, 7, icfg));
+        black_box(exec::top_k_eigs(&src, &u_id, k_eigs, 7, &tiled));
     });
     oracle.reset_entries();
-    let _ = stream::top_k_eigs(&src, &u_id, k_eigs, 7, icfg);
+    let _ = exec::top_k_eigs(&src, &u_id, k_eigs, 7, &tiled);
     let entries_restream = oracle.entries_observed();
     println!(
         "    oracle entries: {entries_restream} ({}x one n·c)",
         entries_restream / (n as u64 * c as u64)
     );
-    // resident[ram] is the all-RAM bound: ram_only, so no arena write-
+    // resident[ram] is the all-RAM bound: ram_cached, so no arena write-
     // through pollutes the wall time. resident[spill] is the all-disk one.
-    for (label, rc) in [
-        ("resident[ram]", ResidencyConfig::unbounded().with_tile_rows(DEFAULT_TILE)),
-        ("resident[spill]", ResidencyConfig::new(0).with_tile_rows(DEFAULT_TILE)),
+    for (label, pol) in [
+        ("resident[ram]", ExecPolicy::ram_cached(u64::MAX).with_tile_rows(DEFAULT_TILE)),
+        ("resident[spill]", ExecPolicy::resident(0).with_tile_rows(DEFAULT_TILE)),
     ] {
         suite.bench(&format!("implicit top-k {label} t={DEFAULT_TILE} n={n}"), || {
-            black_box(stream::top_k_eigs_resident(&src, &u_id, k_eigs, 7, icfg, &rc));
+            black_box(exec::top_k_eigs(&src, &u_id, k_eigs, 7, &pol));
         });
         oracle.reset_entries();
-        let (_, _, st) = stream::top_k_eigs_resident(&src, &u_id, k_eigs, 7, icfg, &rc);
+        let st = exec::top_k_eigs(&src, &u_id, k_eigs, 7, &pol)
+            .meta
+            .residency
+            .expect("resident policies report stats");
         println!(
             "    oracle entries: {} (one n·c = {}), ram hits {}, spill hits {}, spilled {}",
             oracle.entries_observed(),
@@ -193,18 +172,25 @@ fn main() {
     let (m_cur, n_cur) = if quick { (600, 450) } else { (2000, 1500) };
     let mut rng = Rng::new(3);
     let a = Matrix::randn(m_cur, n_cur, &mut rng);
-    let cols = cur::select_uniform(n_cur, 40, &mut rng);
-    let rows = cur::select_uniform(m_cur, 40, &mut rng);
+    let cols = fastspsd::cur::select_uniform(n_cur, 40, &mut rng);
+    let rows = fastspsd::cur::select_uniform(m_cur, 40, &mut rng);
     suite.bench(&format!("cur_fast materialized {m_cur}x{n_cur}"), || {
-        black_box(cur::cur_fast(&a, &cols, &rows, FastCurConfig::uniform(120, 120), &mut Rng::new(4)));
-    });
-    suite.bench(&format!("cur_fast streamed t={DEFAULT_TILE} {m_cur}x{n_cur}"), || {
-        black_box(cur::cur_fast_streamed(
+        black_box(exec::cur_fast(
             &a,
             &cols,
             &rows,
             FastCurConfig::uniform(120, 120),
-            StreamConfig::tiled(DEFAULT_TILE),
+            &mat,
+            &mut Rng::new(4),
+        ));
+    });
+    suite.bench(&format!("cur_fast streamed t={DEFAULT_TILE} {m_cur}x{n_cur}"), || {
+        black_box(exec::cur_fast(
+            &a,
+            &cols,
+            &rows,
+            FastCurConfig::uniform(120, 120),
+            &tiled,
             &mut Rng::new(4),
         ));
     });

@@ -6,6 +6,7 @@ use fastspsd::benchkit::{black_box, BenchSuite};
 use fastspsd::coordinator::oracle::{DenseOracle, KernelOracle};
 use fastspsd::coordinator::engine::rbf_cross_cpu;
 use fastspsd::data::{make_blobs, sigma};
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::spsd::{self, FastConfig};
 use fastspsd::util::Rng;
 
@@ -23,25 +24,25 @@ fn main() {
         let p = spsd::uniform_p(n, c, &mut rng);
 
         suite.bench(&format!("nystrom/n={n}/c={c}"), || {
-            black_box(spsd::nystrom(&oracle, &p));
+            black_box(exec::nystrom(&oracle, &p, &ExecPolicy::Materialized));
         });
         suite.bench(&format!("fast/n={n}/c={c}/s={s}"), || {
             let mut r = Rng::new(3);
-            black_box(spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut r));
+            black_box(exec::fast(&oracle, &p, FastConfig::uniform(s), &ExecPolicy::Materialized, &mut r));
         });
         suite.bench(&format!("prototype/n={n}/c={c}"), || {
-            black_box(spsd::prototype(&oracle, &p));
+            black_box(exec::prototype(&oracle, &p, &ExecPolicy::Materialized));
         });
         // entries accounting (printed once per n)
         oracle.reset_entries();
-        let _ = spsd::nystrom(&oracle, &p);
+        let _ = exec::nystrom(&oracle, &p, &ExecPolicy::Materialized);
         let e_ny = oracle.entries_observed();
         oracle.reset_entries();
         let mut r = Rng::new(3);
-        let _ = spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut r);
+        let _ = exec::fast(&oracle, &p, FastConfig::uniform(s), &ExecPolicy::Materialized, &mut r);
         let e_fast = oracle.entries_observed();
         oracle.reset_entries();
-        let _ = spsd::prototype(&oracle, &p);
+        let _ = exec::prototype(&oracle, &p, &ExecPolicy::Materialized);
         let e_proto = oracle.entries_observed();
         println!(
             "  #entries n={n}: nystrom={e_ny} (nc={}), fast={e_fast} (nc+(s-c)^2≈{}), prototype={e_proto} (n^2+nc={})",

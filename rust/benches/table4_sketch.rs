@@ -6,6 +6,7 @@ use fastspsd::coordinator::engine::rbf_cross_cpu;
 use fastspsd::coordinator::oracle::DenseOracle;
 use fastspsd::data::{make_blobs, sigma};
 use fastspsd::sketch::SketchKind;
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::spsd::{self, FastConfig};
 use fastspsd::util::Rng;
 
@@ -38,12 +39,12 @@ fn main() {
         };
         let stats = suite.bench(kind.name(), || {
             let mut r = Rng::new(3);
-            black_box(spsd::fast(&oracle, &p, cfg, &mut r));
+            black_box(exec::fast(&oracle, &p, cfg, &ExecPolicy::Materialized, &mut r));
         });
         let _ = stats;
         // quality alongside cost
         let mut r = Rng::new(3);
-        let a = spsd::fast(&oracle, &p, cfg, &mut r);
+        let a = exec::fast(&oracle, &p, cfg, &ExecPolicy::Materialized, &mut r).result;
         let err = k.sub(&a.materialize()).fro_norm_sq() / k.fro_norm_sq();
         println!("    rel_err[{}] = {err:.4e}", kind.name());
     }

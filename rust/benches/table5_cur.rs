@@ -3,6 +3,7 @@
 
 use fastspsd::benchkit::{black_box, BenchSuite};
 use fastspsd::cur::{self, FastCurConfig};
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::data::image;
 use fastspsd::util::Rng;
 
@@ -25,12 +26,12 @@ fn main() {
     for f in [2usize, 4, 8] {
         suite.bench(&format!("fast uniform s={f}x"), || {
             let mut rr = Rng::new(2);
-            black_box(cur::cur_fast(&a, &cols, &rows, FastCurConfig::uniform(f * r, f * c), &mut rr));
+            black_box(exec::cur_fast(&a, &cols, &rows, FastCurConfig::uniform(f * r, f * c), &ExecPolicy::Materialized, &mut rr));
         });
     }
     suite.bench("fast leverage s=4x", || {
         let mut rr = Rng::new(3);
-        black_box(cur::cur_fast(&a, &cols, &rows, FastCurConfig::leverage(4 * r, 4 * c), &mut rr));
+        black_box(exec::cur_fast(&a, &cols, &rows, FastCurConfig::leverage(4 * r, 4 * c), &ExecPolicy::Materialized, &mut rr));
     });
     // quality check rows
     for (label, dec) in [
@@ -38,7 +39,8 @@ fn main() {
         ("drineas08", cur::cur_drineas08(&a, &cols, &rows)),
         ("fast4x", {
             let mut rr = Rng::new(2);
-            cur::cur_fast(&a, &cols, &rows, FastCurConfig::uniform(4 * r, 4 * c), &mut rr)
+            exec::cur_fast(&a, &cols, &rows, FastCurConfig::uniform(4 * r, 4 * c), &ExecPolicy::Materialized, &mut rr)
+                .result
         }),
     ] {
         println!("    rel_err[{label}] = {:.4e} (entries for U: {})", dec.rel_fro_error(&a), dec.entries_for_u);

@@ -80,7 +80,8 @@ pub fn misalignment(exact: &Matrix, approx: &Matrix) -> f64 {
 mod tests {
     use super::*;
     use crate::coordinator::oracle::DenseOracle;
-    use crate::spsd::{fast, uniform_p, FastConfig};
+    use crate::exec::{self, ExecPolicy};
+    use crate::spsd::{uniform_p, FastConfig};
     use crate::testkit::gen;
     use crate::util::Rng;
 
@@ -117,7 +118,7 @@ mod tests {
         let kmat = gen::spsd(&mut rng, 40, 5);
         let o = DenseOracle::new(kmat.clone());
         let p = uniform_p(40, 10, &mut rng);
-        let a = fast(&o, &p, FastConfig::uniform(20), &mut rng);
+        let a = exec::fast(&o, &p, FastConfig::uniform(20), &ExecPolicy::Materialized, &mut rng).result;
         let approx = kpca_from_approx(&a, 3);
         let exact = exact_kpca(&kmat, 3);
         assert!(misalignment(&exact.v, &approx.v) < 1e-8);

@@ -92,7 +92,7 @@ mod tests {
 
         let mut rng = Rng::new(1);
         let p = spsd::uniform_p(250, 40, &mut rng);
-        let approx = spsd::fast(&oracle, &p, FastConfig::uniform(160), &mut rng);
+        let approx = crate::exec::fast(&oracle, &p, FastConfig::uniform(160), &crate::exec::ExecPolicy::Materialized, &mut rng).result;
         let fast_model = fit_approx(&approx, alpha, &ytr);
         let mse_fast = mse(&fast_model.predict(&kx), &yte);
         // exact should be good, approximate within a modest factor
@@ -114,9 +114,9 @@ mod tests {
         for t in 0..5u64 {
             let mut rng = Rng::new(10 + t);
             let p = spsd::uniform_p(200, 16, &mut rng);
-            let ny = spsd::nystrom(&oracle, &p);
+            let ny = crate::exec::nystrom(&oracle, &p, &crate::exec::ExecPolicy::Materialized).result;
             mse_ny += mse(&fit_approx(&ny, alpha, &ytr).predict(&kx), &yte);
-            let fa = spsd::fast(&oracle, &p, FastConfig::uniform(96), &mut rng);
+            let fa = crate::exec::fast(&oracle, &p, FastConfig::uniform(96), &crate::exec::ExecPolicy::Materialized, &mut rng).result;
             mse_fast += mse(&fit_approx(&fa, alpha, &ytr).predict(&kx), &yte);
         }
         assert!(

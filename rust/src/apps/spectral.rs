@@ -72,7 +72,8 @@ mod tests {
     use crate::apps::metrics::nmi;
     use crate::coordinator::engine::rbf_cross_cpu;
     use crate::coordinator::oracle::DenseOracle;
-    use crate::spsd::{fast, uniform_p, FastConfig};
+    use crate::exec::{self, ExecPolicy};
+    use crate::spsd::{uniform_p, FastConfig};
 
     /// Three well-separated 2-d blobs + their RBF kernel.
     fn blobs_kernel(n_per: usize, seed: u64) -> (Matrix, Vec<usize>) {
@@ -105,7 +106,7 @@ mod tests {
         let o = DenseOracle::new(k);
         let mut rng = Rng::new(3);
         let p = uniform_p(60, 12, &mut rng);
-        let a = fast(&o, &p, FastConfig::uniform(30), &mut rng);
+        let a = exec::fast(&o, &p, FastConfig::uniform(30), &ExecPolicy::Materialized, &mut rng).result;
         let pred = spectral_cluster_from_approx(&a, 3, &mut rng);
         assert!(nmi(&pred, &labels) > 0.9, "nmi={}", nmi(&pred, &labels));
     }

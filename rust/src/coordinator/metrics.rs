@@ -22,6 +22,47 @@ impl Counter {
     }
 }
 
+/// Up/down gauge (e.g. bytes of predicted working set currently
+/// in flight). `try_add_below` is the admission check-and-reserve the
+/// service's memory cap uses: it either reserves `v` atomically or
+/// refuses without changing the gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, v: u64) {
+        self.0.fetch_sub(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Atomically add `v` only if the result stays ≤ `cap`; returns
+    /// whether the reservation happened.
+    pub fn try_add_below(&self, v: u64, cap: u64) -> bool {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            if cur.saturating_add(v) > cap {
+                return false;
+            }
+            match self.0.compare_exchange_weak(
+                cur,
+                cur.saturating_add(v),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
 /// Latency histogram with exponential buckets from 1µs to ~17min.
 #[derive(Debug)]
 pub struct Histogram {
@@ -106,7 +147,12 @@ pub struct Metrics {
     pub requests: Counter,
     pub completed: Counter,
     pub failed: Counter,
+    /// Requests shed at submit (e.g. the memory cap — see
+    /// `ServiceConfig::memory_cap`).
     pub rejected: Counter,
+    /// Sum of `predicted_peak_bytes` across in-flight requests: the
+    /// service-level working-set meter the memory cap gates on.
+    pub mem_in_use: Gauge,
     pub latency: Histogram,
     pub queue_wait: Histogram,
 }
@@ -134,6 +180,19 @@ mod tests {
         assert!(h.mean() >= Duration::from_millis(20));
         assert_eq!(h.quantile(0.5), Duration::from_millis(3));
         assert!(h.summary().contains("n=5"));
+    }
+
+    #[test]
+    fn gauge_reserves_atomically_under_cap() {
+        let g = Gauge::default();
+        assert!(g.try_add_below(60, 100));
+        assert!(!g.try_add_below(50, 100), "60+50 must not fit a cap of 100");
+        assert_eq!(g.get(), 60, "a refused reservation must not move the gauge");
+        assert!(g.try_add_below(40, 100));
+        g.sub(100);
+        assert_eq!(g.get(), 0);
+        // u64::MAX cap never refuses (saturating add)
+        assert!(g.try_add_below(u64::MAX, u64::MAX));
     }
 
     #[test]

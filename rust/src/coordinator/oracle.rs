@@ -390,7 +390,7 @@ mod tests {
         let k = o.full();
         o.reset_entries();
         let p = crate::spsd::uniform_p(60, 12, &mut rng);
-        let a = crate::spsd::fast(&o, &p, crate::spsd::FastConfig::uniform(36), &mut rng);
+        let a = crate::exec::fast(&o, &p, crate::spsd::FastConfig::uniform(36), &crate::exec::ExecPolicy::Materialized, &mut rng).result;
         // degree-2 poly kernel over R^4 has rank <= C(4+2,2) = 15; c=12
         // columns get close; error must at least be small and entries few
         let err = a.rel_fro_error(&k);

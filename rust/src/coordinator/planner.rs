@@ -17,9 +17,35 @@
 //! pragmatically (c = 2k/ε, matching the paper's near-optimal column
 //! selection results).
 
-use super::service::MethodSpec;
+use crate::exec::ExecPolicy;
 use crate::sketch::SketchKind;
-use crate::stream::{panel_bytes, DEFAULT_QUEUE_DEPTH, DEFAULT_RESIDENT_TILE_ROWS};
+use crate::stream::{panel_bytes, StreamConfig, DEFAULT_QUEUE_DEPTH, DEFAULT_RESIDENT_TILE_ROWS};
+
+/// Which model to run. Lives here (with the entry/peak/flop models that
+/// price it) so that both the serving layer and the [`exec`](crate::exec)
+/// policy layer can name methods without depending on each other;
+/// [`service`](super::service) re-exports it for request construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MethodSpec {
+    Nystrom,
+    Prototype,
+    Fast { s: usize, kind: SketchKind },
+    /// Fast CUR of the kernel matrix itself (paper §5 / eq. 9): the
+    /// request's `c` picks the columns, `r` rows are drawn uniformly,
+    /// and `U` comes from uniform `s x s` sketches.
+    Cur { r: usize, s: usize },
+}
+
+impl MethodSpec {
+    pub fn name(&self) -> String {
+        match self {
+            MethodSpec::Nystrom => "nystrom".into(),
+            MethodSpec::Prototype => "prototype".into(),
+            MethodSpec::Fast { s, kind } => format!("fast[{},s={s}]", kind.name()),
+            MethodSpec::Cur { r, s } => format!("cur[fast,r={r},s={s}]"),
+        }
+    }
+}
 
 /// What the caller wants.
 #[derive(Debug, Clone, Copy)]
@@ -46,17 +72,40 @@ impl Goal {
 }
 
 /// A concrete plan.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Plan {
     pub method: MethodSpec,
     pub c: usize,
     /// predicted kernel entries observed
     pub predicted_entries: u64,
-    /// Row-tile height the build should stream with (`None` = run the
-    /// materialized path).
-    pub tile_rows: Option<usize>,
-    /// predicted peak working-set bytes at `tile_rows`
+    /// How the build should traverse the kernel — handed straight to the
+    /// `exec` entry points (replaces the old loose `tile_rows` field).
+    pub policy: ExecPolicy,
+    /// predicted peak working-set bytes under `policy`
     pub predicted_peak_bytes: u64,
+}
+
+impl Plan {
+    /// The streamed tile height of this plan (`None` = materialized), for
+    /// callers that only care about the tiling.
+    pub fn tile_rows(&self) -> Option<usize> {
+        match &self.policy {
+            ExecPolicy::Materialized => None,
+            ExecPolicy::Streamed(cfg) => Some(cfg.tile_rows),
+            ExecPolicy::Resident { tile_rows, .. } => {
+                Some(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS))
+            }
+        }
+    }
+}
+
+/// The policy a request runs under when it carries none: the materialized
+/// path — bit-compatible with the historical builds and right whenever
+/// the working set fits. Budget-constrained callers should instead derive
+/// a policy from [`plan`] (streaming) or [`plan_residency`] (residency
+/// splits).
+pub fn default_policy() -> ExecPolicy {
+    ExecPolicy::Materialized
 }
 
 /// Sketch sizes from the paper's theory with pragmatic constants.
@@ -72,7 +121,8 @@ pub fn nystrom_c_lower_bound(n: usize, k: usize, epsilon: f64) -> usize {
     ((n as f64 * k as f64 / epsilon).sqrt().ceil()) as usize
 }
 
-/// Predicted entries for each model (Table 3 right column).
+/// Predicted entries for each model (Table 3 right column; served CUR
+/// materializes the kernel, so it observes `n²`).
 pub fn predicted_entries(n: usize, c: usize, s: usize, method: &MethodSpec) -> u64 {
     match method {
         MethodSpec::Nystrom => (n * c) as u64,
@@ -81,6 +131,7 @@ pub fn predicted_entries(n: usize, c: usize, s: usize, method: &MethodSpec) -> u
             let extra = s.saturating_sub(c) as u64;
             (n * c) as u64 + extra * extra
         }
+        MethodSpec::Cur { .. } => (n as u64) * (n as u64),
     }
 }
 
@@ -130,6 +181,64 @@ pub fn predicted_peak_bytes(
             let base = n * c + 2 * s * c + s * s + c * c + lev;
             ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * c))
         }
+        MethodSpec::Cur { r, .. } => {
+            // Served CUR works on the materialized square kernel:
+            // K (n²) + C (n·c) + R (r·n) + core (s²) + the sketched
+            // row/column gathers (s·(c+r)) + U (c·r). The n² term is
+            // unconditional — the service materializes K under every
+            // policy and the pipeline then streams over the resident
+            // matrix — so tiling only adds its live row tiles on top.
+            let r = *r as u64;
+            let base = n * n + n * c + r * n + s * s + s * (c + r) + c * r;
+            ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * n))
+        }
+    }
+}
+
+/// Predicted peak working-set bytes for running `method` under an
+/// arbitrary [`ExecPolicy`] — the build-side peak model
+/// ([`predicted_peak_bytes`]) at the policy's tile height, plus the
+/// residency layer's hot-tile cache as a separate term capped at the
+/// panel it caches (`min(budget, n·c·8)`; the `K`-streaming methods have
+/// no reloadable panel, so the cap uses the `n x c` output panel every
+/// cacheable method shares). This is what [`exec`](crate::exec) reports
+/// in `RunMeta::predicted_peak_bytes` and what the service meters
+/// in-flight requests by.
+pub fn predicted_policy_peak_bytes(
+    n: usize,
+    c: usize,
+    method: &MethodSpec,
+    policy: &ExecPolicy,
+) -> u64 {
+    let s = method_s(method, c);
+    let base = predicted_peak_bytes(n, c, s, method, policy.planned_tile_rows(n));
+    // Only methods that actually route through the residency layer get the
+    // cache term — the full-K streamers (prototype, projection-sketch
+    // fast) strip a Resident policy down to plain streaming, so charging
+    // them a cache would shed requests for memory the run never allocates
+    // — and the cap is the panel that method's layer caches: the `n x c`
+    // column panel for Nyström / selection-sketch fast, but the full
+    // `n x n` kernel for served CUR (its tiles are rows of the
+    // materialized K).
+    let cache_panel = match method {
+        MethodSpec::Nystrom => Some(panel_bytes(n, c)),
+        MethodSpec::Fast { kind, .. } if kind.is_column_selection() => Some(panel_bytes(n, c)),
+        MethodSpec::Cur { .. } => Some(panel_bytes(n, n)),
+        _ => None,
+    };
+    match (policy, cache_panel) {
+        (ExecPolicy::Resident { budget, .. }, Some(panel)) => base + (*budget).min(panel),
+        _ => base,
+    }
+}
+
+/// The sketch size a method's peak/entry models should charge.
+fn method_s(method: &MethodSpec, c: usize) -> usize {
+    match method {
+        MethodSpec::Fast { s, .. } => *s,
+        MethodSpec::Cur { s, .. } => *s,
+        MethodSpec::Nystrom => c,
+        MethodSpec::Prototype => 0,
     }
 }
 
@@ -173,6 +282,20 @@ pub struct ResidencySplit {
     pub spill: bool,
     /// [`predicted_implicit_peak_bytes`] at this split.
     pub predicted_peak_bytes: u64,
+}
+
+impl ResidencySplit {
+    /// This split as an [`ExecPolicy`], ready to hand to the `exec` entry
+    /// points (the spill directory stays unset — the service fills in its
+    /// own).
+    pub fn policy(&self) -> ExecPolicy {
+        ExecPolicy::Resident {
+            budget: self.cache_budget,
+            spill: self.spill,
+            tile_rows: Some(self.tile_rows),
+            spill_dir: None,
+        }
+    }
 }
 
 /// Pick the tile_rows / cache-budget split for a residency-backed implicit
@@ -223,6 +346,10 @@ pub fn predicted_flops(n: usize, c: usize, s: usize, method: &MethodSpec) -> f64
         MethodSpec::Nystrom => cf.powi(3) + downstream,
         MethodSpec::Prototype => nf * nf * cf + downstream,
         MethodSpec::Fast { .. } => nf * cf * cf + sf * sf * cf + downstream,
+        MethodSpec::Cur { r, .. } => {
+            let rf = *r as f64;
+            nf * cf * cf + sf * sf * (cf + rf) + downstream
+        }
     }
 }
 
@@ -245,7 +372,7 @@ fn fit_memory(mut plan: Plan, n: usize, s: usize, memory_budget: u64) -> Option<
         return None; // even one-row tiles overshoot
     }
     let t = (((memory_budget - base) / per_tile_row) as usize).clamp(1, n);
-    plan.tile_rows = Some(t);
+    plan.policy = ExecPolicy::Streamed(StreamConfig::tiled(t));
     plan.predicted_peak_bytes = predicted_peak_bytes(n, plan.c, s, &plan.method, Some(t));
     Some(plan)
 }
@@ -272,7 +399,7 @@ pub fn plan(goal: Goal) -> Plan {
         method,
         c,
         predicted_entries: predicted_entries(n, c, s, &method),
-        tile_rows: None,
+        policy: ExecPolicy::Materialized,
         predicted_peak_bytes: predicted_peak_bytes(n, c, s, &method, None),
     };
     let mut candidates = [
@@ -286,25 +413,26 @@ pub fn plan(goal: Goal) -> Plan {
         let fb = predicted_flops(n, b.c, plan_s(b), &b.method);
         fa.partial_cmp(&fb).unwrap()
     });
-    for cand in candidates {
+    for cand in &candidates {
         if cand.predicted_entries > goal.entry_budget {
             continue;
         }
-        if let Some(fitted) = fit_memory(cand, n, plan_s(&cand), goal.memory_budget) {
+        if let Some(fitted) = fit_memory(cand.clone(), n, plan_s(cand), goal.memory_budget) {
             return fitted;
         }
     }
     // nothing fits both budgets: degrade gracefully to the fewest-entries
     // candidate, streamed as tightly as its method allows
-    let fallback = *candidates
+    let fallback = candidates
         .iter()
         .min_by_key(|p| p.predicted_entries)
-        .unwrap();
+        .unwrap()
+        .clone();
     let s = plan_s(&fallback);
-    fit_memory(fallback, n, s, goal.memory_budget).unwrap_or_else(|| {
+    fit_memory(fallback.clone(), n, s, goal.memory_budget).unwrap_or_else(|| {
         if matches!(fallback.method, MethodSpec::Prototype) {
             let mut p = fallback;
-            p.tile_rows = Some(1);
+            p.policy = ExecPolicy::Streamed(StreamConfig::tiled(1));
             p.predicted_peak_bytes = predicted_peak_bytes(n, p.c, s, &p.method, Some(1));
             p
         } else {
@@ -314,11 +442,7 @@ pub fn plan(goal: Goal) -> Plan {
 }
 
 fn plan_s(p: &Plan) -> usize {
-    match p.method {
-        MethodSpec::Fast { s, .. } => s,
-        MethodSpec::Nystrom => p.c,
-        MethodSpec::Prototype => 0,
-    }
+    method_s(&p.method, p.c)
 }
 
 #[cfg(test)]
@@ -335,7 +459,8 @@ mod tests {
         // and it stays far below n² observation
         let n2 = 100_000_000u64 as f64 * 100_000_000u64 as f64;
         assert!((p.predicted_entries as f64) < n2 / 1e3);
-        assert_eq!(p.tile_rows, None, "no memory pressure, no tiling");
+        assert_eq!(p.policy, ExecPolicy::Materialized, "no memory pressure, no tiling");
+        assert_eq!(p.tile_rows(), None);
     }
 
     #[test]
@@ -458,7 +583,7 @@ mod tests {
                 method: MethodSpec::Prototype,
                 c,
                 predicted_entries: predicted_entries(n, c, n, &MethodSpec::Prototype),
-                tile_rows: None,
+                policy: ExecPolicy::Materialized,
                 predicted_peak_bytes: mat,
             },
             n,
@@ -466,7 +591,7 @@ mod tests {
             budget,
         )
         .expect("a tile height must fit an n²/4 budget");
-        let t = fitted.tile_rows.expect("must stream");
+        let t = fitted.tile_rows().expect("must stream");
         assert!(t >= 1 && t < n);
         assert!(fitted.predicted_peak_bytes <= budget, "{fitted:?}");
 
@@ -478,7 +603,7 @@ mod tests {
                 method: MethodSpec::Prototype,
                 c,
                 predicted_entries: predicted_entries(n, c, n, &MethodSpec::Prototype),
-                tile_rows: None,
+                policy: ExecPolicy::Materialized,
                 predicted_peak_bytes: mat,
             },
             n,
@@ -486,7 +611,7 @@ mod tests {
             one_row,
         )
         .expect("budget at the one-row peak is feasible");
-        assert_eq!(fitted.tile_rows, Some(1));
+        assert_eq!(fitted.tile_rows(), Some(1));
         assert_eq!(fitted.predicted_peak_bytes, one_row);
 
         // and end-to-end: a plan under that memory budget never reports a
@@ -619,5 +744,75 @@ mod tests {
         assert!(theory_c(10, 0.1) > theory_c(5, 0.1));
         assert!(theory_c(5, 0.05) > theory_c(5, 0.1));
         assert!(theory_s(10_000, 20, 0.1) > theory_s(1_000, 20, 0.1));
+    }
+
+    #[test]
+    fn policy_peak_adds_the_capped_cache_term() {
+        let (n, c) = (50_000usize, 40usize);
+        let m = MethodSpec::Nystrom;
+        let mat = predicted_policy_peak_bytes(n, c, &m, &ExecPolicy::Materialized);
+        assert_eq!(mat, predicted_peak_bytes(n, c, c, &m, None));
+        let st = predicted_policy_peak_bytes(n, c, &m, &ExecPolicy::streamed(64));
+        assert_eq!(st, predicted_peak_bytes(n, c, c, &m, Some(64)));
+        // a whole-matrix "streamed" config is the materialized model
+        assert_eq!(
+            predicted_policy_peak_bytes(n, c, &m, &ExecPolicy::Streamed(StreamConfig::whole())),
+            mat
+        );
+        // residency charges its cache as a separate term, capped at the panel
+        let panel = panel_bytes(n, c);
+        let res = |b: u64| {
+            predicted_policy_peak_bytes(n, c, &m, &ExecPolicy::resident(b).with_tile_rows(64))
+        };
+        assert_eq!(res(1 << 20) - res(0), 1 << 20);
+        assert_eq!(res(u64::MAX) - res(0), panel);
+        // …but not for methods whose run strips residency (full-K
+        // streamers fall back to plain streaming): no phantom cache term
+        let proto = |b: u64| {
+            predicted_policy_peak_bytes(
+                n,
+                c,
+                &MethodSpec::Prototype,
+                &ExecPolicy::resident(b).with_tile_rows(64),
+            )
+        };
+        assert_eq!(proto(u64::MAX), proto(0), "prototype never allocates a cache");
+        let gauss = MethodSpec::Fast { s: 4 * c, kind: SketchKind::Gaussian };
+        assert_eq!(
+            predicted_policy_peak_bytes(n, c, &gauss, &ExecPolicy::resident(u64::MAX)),
+            predicted_policy_peak_bytes(n, c, &gauss, &ExecPolicy::resident(0)),
+            "projection sketches never allocate a cache"
+        );
+    }
+
+    #[test]
+    fn cur_models_are_plannable() {
+        let (n, c) = (4_000usize, 30usize);
+        let m = MethodSpec::Cur { r: 30, s: 120 };
+        // served CUR materializes the kernel: n² entries, n²-dominated peak
+        assert_eq!(predicted_entries(n, c, 120, &m), (n * n) as u64);
+        let mat = predicted_peak_bytes(n, c, 120, &m, None);
+        assert!(mat >= (n * n * 8) as u64);
+        // the n² term is unconditional (the service materializes K under
+        // every policy); tiling only adds its live row tiles on top
+        let st = predicted_peak_bytes(n, c, 120, &m, Some(64));
+        assert!(st >= (n * n * 8) as u64, "streamed CUR still holds K: {st}");
+        assert_eq!(st - mat, 8 * 4 * 64 * n as u64, "tiling adds only live tiles");
+        assert!(predicted_flops(n, c, 120, &m) > 0.0);
+    }
+
+    #[test]
+    fn residency_split_exports_its_policy() {
+        let s = plan_residency(100_000, 32, 4 << 20);
+        match s.policy() {
+            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir } => {
+                assert_eq!(budget, s.cache_budget);
+                assert_eq!(spill, s.spill);
+                assert_eq!(tile_rows, Some(s.tile_rows));
+                assert!(spill_dir.is_none());
+            }
+            other => panic!("expected a resident policy, got {other:?}"),
+        }
+        assert_eq!(default_policy(), ExecPolicy::Materialized);
     }
 }

@@ -1,42 +1,32 @@
 //! The approximation service: the Layer-3 request loop.
 //!
-//! Clients submit [`ApproxRequest`]s (which model, c, s, downstream task
-//! size k); the service routes them to a worker pool with a bounded queue
-//! (backpressure), each worker builds the approximation against the shared
-//! kernel oracle — kernel blocks flow through the PJRT engine — and replies
-//! with eigenvalues + timings. Latency and queue-wait histograms feed the
-//! serving-style end-to-end example.
+//! Clients submit [`ApproxRequest`]s (which model, c, downstream task
+//! size k, and optionally an [`ExecPolicy`] — the planner fills the
+//! default); the service routes them to a worker pool with a bounded
+//! queue (backpressure), each worker builds the approximation against the
+//! shared kernel oracle through the unified [`exec`](crate::exec)
+//! surface, and replies with eigenvalues plus the run's [`RunMeta`]
+//! accounting. The service also meters the **predicted working set of
+//! in-flight requests** (`Metrics::mem_in_use`, the sum of
+//! `predicted_peak_bytes`): with a [`ServiceConfig::memory_cap`] set,
+//! requests that would push the fleet past the cap are shed with an
+//! error reply instead of risking the box.
 
 use super::metrics::Metrics;
 use super::oracle::{KernelOracle, RbfOracle};
 use super::planner;
+use crate::cur::{self, FastCurConfig};
+use crate::exec::{self, ExecPolicy, RunMeta};
+use crate::linalg::svd_thin;
 use crate::pool::ThreadPool;
-use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig, LeverageBasis};
-use crate::stream::{ResidencyConfig, ResidencyStats, StreamConfig};
 use crate::util::Rng;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-/// Which model a request wants.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum MethodSpec {
-    Nystrom,
-    Prototype,
-    Fast { s: usize, kind: SketchKind },
-}
-
-impl MethodSpec {
-    pub fn name(&self) -> String {
-        match self {
-            MethodSpec::Nystrom => "nystrom".into(),
-            MethodSpec::Prototype => "prototype".into(),
-            MethodSpec::Fast { s, kind } => format!("fast[{},s={s}]", kind.name()),
-        }
-    }
-}
+pub use super::planner::MethodSpec;
 
 /// One approximation job.
 #[derive(Debug, Clone)]
@@ -48,17 +38,11 @@ pub struct ApproxRequest {
     /// downstream top-k eigenpairs to return.
     pub k: usize,
     pub seed: u64,
-    /// `Some(t)`: build through the tile pipeline in `t`-row tiles (the
-    /// planner emits this when the memory budget demands it); `None`: the
-    /// materialized path.
-    pub tile_rows: Option<usize>,
-    /// `Some(bytes)`: route the build through the tile residency layer —
-    /// [`planner::plan_residency`] splits the bytes into a pipeline tile
-    /// height (unless `tile_rows` pins one) and a hot-tile LRU budget,
-    /// cold tiles spill to the service's spill directory, and the response
-    /// carries the hit/miss/spill counters. Supported for Nyström and the
-    /// column-selection fast models; other methods run the plain path.
-    pub residency_budget: Option<u64>,
+    /// How to traverse the kernel (`None` = the planner's default,
+    /// [`planner::default_policy`]). Spilling
+    /// [`Resident`](ExecPolicy::Resident) policies inherit the service's
+    /// spill directory unless they pin their own.
+    pub policy: Option<ExecPolicy>,
 }
 
 /// Reply for one job.
@@ -66,17 +50,21 @@ pub struct ApproxRequest {
 pub struct ApproxResponse {
     pub id: u64,
     pub method: String,
-    /// top-k eigenvalues of C U C^T.
+    /// top-k eigenvalues of C U C^T (for `Cur`: top singular values of
+    /// the core U).
     pub eigvals: Vec<f64>,
-    /// kernel entries observed building this approximation.
-    pub entries: u64,
-    /// seconds spent computing (excl. queue wait).
-    pub compute_secs: f64,
+    /// `(rows, cols)` of the CUR core U (only for `Cur` requests).
+    pub core_dims: Option<(usize, usize)>,
     /// seconds from submit to completion.
     pub total_secs: f64,
-    /// Residency counters (hits, misses, spilled bytes) when the request
-    /// routed through the tile residency layer.
-    pub residency: Option<ResidencyStats>,
+    /// The run's uniform accounting (entries, compute seconds, residency
+    /// counters, predicted peak bytes). `None` only on shed requests.
+    /// `meta.entries` is a delta read off the oracle's single shared
+    /// counter, so with multiple workers a request's figure can absorb
+    /// entries from builds that overlap it (exact on a 1-worker service).
+    pub meta: Option<RunMeta>,
+    /// Why the request was not served (e.g. shed on the memory cap).
+    pub error: Option<String>,
 }
 
 /// Service configuration.
@@ -88,11 +76,16 @@ pub struct ServiceConfig {
     /// Directory for residency spill arenas (`None` = the system temp
     /// dir). Arena files are per-request and removed when the build ends.
     pub spill_dir: Option<PathBuf>,
+    /// Service-level memory cap in bytes: `submit` sheds (error-replies)
+    /// any request whose predicted peak, added to the in-flight sum
+    /// (`Metrics::mem_in_use`), would exceed it. `None` = meter but never
+    /// shed.
+    pub memory_cap: Option<u64>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, queue_capacity: 64, spill_dir: None }
+        ServiceConfig { workers: 4, queue_capacity: 64, spill_dir: None, memory_cap: None }
     }
 }
 
@@ -103,6 +96,7 @@ pub struct ApproxService {
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
     spill_dir: Option<PathBuf>,
+    memory_cap: Option<u64>,
 }
 
 impl ApproxService {
@@ -113,6 +107,7 @@ impl ApproxService {
             metrics: Arc::new(Metrics::default()),
             inflight: Arc::new(AtomicU64::new(0)),
             spill_dir: cfg.spill_dir,
+            memory_cap: cfg.memory_cap,
         }
     }
 
@@ -125,25 +120,62 @@ impl ApproxService {
     }
 
     /// Submit a job; the response is delivered on `reply`. Blocks when the
-    /// queue is full.
+    /// queue is full; sheds immediately (with an error reply) when the
+    /// predicted working set would exceed the memory cap.
     pub fn submit(&self, req: ApproxRequest, reply: mpsc::Sender<ApproxResponse>) {
         self.metrics.requests.inc();
+        let n = self.oracle.n();
+        let c = req.c.clamp(1, n.max(1));
+        let mut policy = req.policy.clone().unwrap_or_else(planner::default_policy);
+        if let ExecPolicy::Resident { spill: true, spill_dir, .. } = &mut policy {
+            if spill_dir.is_none() {
+                *spill_dir = self.spill_dir.clone();
+            }
+        }
+        let predicted = planner::predicted_policy_peak_bytes(n, c, &req.method, &policy);
+        let admitted = match self.memory_cap {
+            Some(cap) => self.metrics.mem_in_use.try_add_below(predicted, cap),
+            None => {
+                self.metrics.mem_in_use.add(predicted);
+                true
+            }
+        };
+        if !admitted {
+            self.metrics.rejected.inc();
+            let _ = reply.send(ApproxResponse {
+                id: req.id,
+                method: req.method.name(),
+                eigvals: Vec::new(),
+                core_dims: None,
+                total_secs: 0.0,
+                meta: None,
+                error: Some(format!(
+                    "shed: predicted working set {predicted} B over the {} B memory cap \
+                     ({} B already in flight)",
+                    self.memory_cap.unwrap_or(u64::MAX),
+                    self.metrics.mem_in_use.get()
+                )),
+            });
+            return;
+        }
         self.inflight.fetch_add(1, Ordering::Relaxed);
         let oracle = Arc::clone(&self.oracle);
         let metrics = Arc::clone(&self.metrics);
         let inflight = Arc::clone(&self.inflight);
-        let spill_dir = self.spill_dir.clone();
         let submitted = Instant::now();
         self.pool.submit(move || {
+            // Release the admission reservation on every exit path — the
+            // pool catches panicking jobs, and a skipped release would
+            // permanently shrink the cap's admissible capacity.
+            let _guard = ReservationGuard { metrics: &metrics, inflight: &inflight, predicted };
             let started = Instant::now();
             metrics.queue_wait.observe(started.duration_since(submitted));
-            let resp = run_request(oracle.as_ref(), &req, spill_dir.as_deref(), submitted);
+            let resp = run_request(oracle.as_ref(), &req, c, &policy, predicted, submitted);
             metrics.latency.observe(submitted.elapsed());
             match &resp {
                 Ok(_) => metrics.completed.inc(),
                 Err(_) => metrics.failed.inc(),
             }
-            inflight.fetch_sub(1, Ordering::Relaxed);
             if let Ok(r) = resp {
                 let _ = reply.send(r);
             }
@@ -156,85 +188,83 @@ impl ApproxService {
     }
 }
 
+/// Drops the in-flight accounting (memory reservation + inflight count)
+/// when a worker job ends — normally or by unwinding through the pool's
+/// panic catcher.
+struct ReservationGuard<'a> {
+    metrics: &'a Metrics,
+    inflight: &'a AtomicU64,
+    predicted: u64,
+}
+
+impl Drop for ReservationGuard<'_> {
+    fn drop(&mut self) {
+        self.metrics.mem_in_use.sub(self.predicted);
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 fn run_request(
     oracle: &RbfOracle,
     req: &ApproxRequest,
-    spill_dir: Option<&Path>,
+    c: usize,
+    policy: &ExecPolicy,
+    predicted: u64,
     submitted: Instant,
 ) -> anyhow::Result<ApproxResponse> {
     let mut rng = Rng::new(req.seed);
     let n = oracle.n();
-    let c = req.c.clamp(1, n);
     let p = spsd::uniform_p(n, c, &mut rng);
+    let k_top = req.k.max(1);
+    // The response's compute time covers the whole request — kernel
+    // materialization (Cur), the build, and the downstream eig/SVD — not
+    // just the exec entry point's slice of it.
     let t0 = Instant::now();
-    // Residency routing: the planner splits the byte budget into a tile
-    // height + LRU budget; the request's explicit tile_rows (if any) wins.
-    let routed = req.residency_budget.and_then(|budget| {
-        let split = planner::plan_residency(n, c, budget);
-        let tile = req.tile_rows.unwrap_or(split.tile_rows);
-        let stream_cfg = StreamConfig::tiled(tile);
-        // Spill only when the planner says the cache can't hold the panel;
-        // otherwise a RAM-only layer avoids writing an arena nobody reads.
-        let mut rc = if split.spill {
-            ResidencyConfig::new(split.cache_budget)
-        } else {
-            ResidencyConfig::ram_only(split.cache_budget)
+    let (eigvals, core_dims, mut meta) = match req.method {
+        MethodSpec::Nystrom => {
+            let rep = exec::nystrom(oracle, &p, policy);
+            (rep.result.eig_k(k_top).0, None, rep.meta)
         }
-        .with_tile_rows(tile);
-        if split.spill {
-            if let Some(dir) = spill_dir {
-                rc = rc.with_spill_dir(dir);
-            }
+        MethodSpec::Prototype => {
+            let rep = exec::prototype(oracle, &p, policy);
+            (rep.result.eig_k(k_top).0, None, rep.meta)
         }
-        match req.method {
-            MethodSpec::Nystrom => Some(spsd::nystrom_resident(oracle, &p, stream_cfg, &rc)),
-            MethodSpec::Fast { s, kind } if kind.is_column_selection() => {
-                Some(spsd::fast_streamed_resident(
-                    oracle,
-                    &p,
-                    FastConfig { s, kind, force_p_in_s: true, leverage_basis: LeverageBasis::Gram },
-                    stream_cfg,
-                    &rc,
-                    &mut rng,
-                ))
-            }
-            // prototype / projection sketches stream the full K: no
-            // reloadable working set — run the plain path below
-            _ => None,
+        MethodSpec::Fast { s, kind } => {
+            // Gram basis: leverage requests stream with O(c²) score
+            // state, matching the peak the planner predicts here.
+            let cfg =
+                FastConfig { s, kind, force_p_in_s: true, leverage_basis: LeverageBasis::Gram };
+            let rep = exec::fast(oracle, &p, cfg, policy, &mut rng);
+            (rep.result.eig_k(k_top).0, None, rep.meta)
         }
-    });
-    let (approx, residency) = match routed {
-        Some((approx, stats)) => (approx, Some(stats)),
-        None => {
-            let stream_cfg = match req.tile_rows {
-                Some(t) => StreamConfig::tiled(t),
-                None => StreamConfig::whole(),
-            };
-            let approx = match req.method {
-                MethodSpec::Nystrom => spsd::nystrom_streamed(oracle, &p, stream_cfg),
-                MethodSpec::Prototype => spsd::prototype_streamed(oracle, &p, stream_cfg),
-                MethodSpec::Fast { s, kind } => spsd::fast_streamed(
-                    oracle,
-                    &p,
-                    // Gram basis: leverage requests stream with O(c²) score
-                    // state, matching the peak the planner predicts here.
-                    FastConfig { s, kind, force_p_in_s: true, leverage_basis: LeverageBasis::Gram },
-                    stream_cfg,
-                    &mut rng,
-                ),
-            };
-            (approx, None)
+        MethodSpec::Cur { r, s } => {
+            // CUR of the kernel matrix itself: `p` picks the columns, a
+            // second uniform draw the rows. Serving materializes K — the
+            // n² cost the planner's Cur model predicts and the memory
+            // meter charges.
+            let before = oracle.entries_observed();
+            let kmat = oracle.full();
+            let rows = cur::select_uniform(n, r.clamp(1, n), &mut rng);
+            let rep =
+                exec::cur_fast(&kmat, &p, &rows, FastCurConfig::uniform(s, s), policy, &mut rng);
+            let dims = (rep.result.u.rows(), rep.result.u.cols());
+            let mut sv = svd_thin(&rep.result.u).s;
+            sv.truncate(k_top);
+            let mut meta = rep.meta;
+            meta.entries = Some(oracle.entries_observed() - before);
+            (sv, Some(dims), meta)
         }
     };
-    let (eigvals, _vecs) = approx.eig_k(req.k.max(1));
+    meta.compute_secs = t0.elapsed().as_secs_f64();
+    meta.predicted_peak_bytes = Some(predicted);
     Ok(ApproxResponse {
         id: req.id,
         method: req.method.name(),
         eigvals,
-        entries: approx.entries_observed,
-        compute_secs: t0.elapsed().as_secs_f64(),
+        core_dims,
         total_secs: submitted.elapsed().as_secs_f64(),
-        residency,
+        meta: Some(meta),
+        error: None,
     })
 }
 
@@ -242,53 +272,65 @@ fn run_request(
 mod tests {
     use super::*;
     use crate::linalg::Matrix;
+    use crate::sketch::SketchKind;
 
     fn service(n: usize, workers: usize, cap: usize) -> ApproxService {
+        service_cfg(n, ServiceConfig { workers, queue_capacity: cap, ..Default::default() })
+    }
+
+    fn service_cfg(n: usize, cfg: ServiceConfig) -> ApproxService {
         let mut rng = Rng::new(0);
         let x = Arc::new(Matrix::randn(n, 6, &mut rng));
         let oracle = Arc::new(RbfOracle::cpu(x, 0.4));
-        ApproxService::new(oracle, ServiceConfig { workers, queue_capacity: cap, spill_dir: None })
+        ApproxService::new(oracle, cfg)
+    }
+
+    fn req(id: u64, method: MethodSpec, seed: u64, policy: Option<ExecPolicy>) -> ApproxRequest {
+        ApproxRequest { id, method, c: 8, k: 3, seed, policy }
+    }
+
+    fn entries_of(r: &ApproxResponse) -> u64 {
+        r.meta.as_ref().unwrap().entries.unwrap()
     }
 
     #[test]
     fn serves_all_methods() {
-        let svc = service(80, 2, 16);
+        // One worker: the per-request entry delta is read off a single
+        // shared oracle counter, so overlapping builds would misattribute
+        // entries and make the ordering assertions below flaky.
+        let svc = service(80, 1, 16);
         let (tx, rx) = mpsc::channel();
         let methods = [
             MethodSpec::Nystrom,
             MethodSpec::Prototype,
             MethodSpec::Fast { s: 24, kind: SketchKind::Uniform },
+            MethodSpec::Cur { r: 8, s: 24 },
         ];
         for (i, m) in methods.iter().enumerate() {
-            svc.submit(
-                ApproxRequest {
-                    id: i as u64,
-                    method: *m,
-                    c: 8,
-                    k: 3,
-                    seed: i as u64,
-                    tile_rows: None,
-                    residency_budget: None,
-                },
-                tx.clone(),
-            );
+            svc.submit(req(i as u64, *m, i as u64, None), tx.clone());
         }
         svc.drain();
         drop(tx);
         let mut resps: Vec<ApproxResponse> = rx.iter().collect();
         resps.sort_by_key(|r| r.id);
-        assert_eq!(resps.len(), 3);
+        assert_eq!(resps.len(), 4);
         for r in &resps {
-            assert_eq!(r.eigvals.len(), 3);
+            assert_eq!(r.eigvals.len(), 3, "{}", r.method);
             assert!(r.eigvals[0] >= r.eigvals[1]);
-            assert!(r.compute_secs <= r.total_secs + 1e-9);
+            assert!(r.error.is_none());
+            let meta = r.meta.as_ref().expect("served responses carry meta");
+            assert!(meta.compute_secs <= r.total_secs + 1e-9);
+            assert!(meta.predicted_peak_bytes.unwrap() > 0);
         }
-        // prototype sees the most entries, nystrom the fewest
-        assert!(resps[1].entries > resps[2].entries);
-        assert!(resps[2].entries > resps[0].entries);
-        assert_eq!(svc.metrics().completed.get(), 3);
+        // prototype and CUR observe n² + extras; nystrom the fewest
+        assert!(entries_of(&resps[1]) > entries_of(&resps[2]));
+        assert!(entries_of(&resps[2]) > entries_of(&resps[0]));
+        assert!(entries_of(&resps[3]) >= 80 * 80, "served CUR materializes K");
+        assert_eq!(resps[3].core_dims, Some((8, 8)), "c x r core");
+        assert_eq!(svc.metrics().completed.get(), 4);
         assert_eq!(svc.metrics().failed.get(), 0);
-        assert_eq!(svc.metrics().latency.count(), 3);
+        assert_eq!(svc.metrics().latency.count(), 4);
+        assert_eq!(svc.metrics().mem_in_use.get(), 0, "meter must drain to zero");
     }
 
     #[test]
@@ -298,15 +340,7 @@ mod tests {
         let total = 30u64;
         for i in 0..total {
             svc.submit(
-                ApproxRequest {
-                    id: i,
-                    method: MethodSpec::Fast { s: 16, kind: SketchKind::Uniform },
-                    c: 6,
-                    k: 2,
-                    seed: i,
-                    tile_rows: None,
-                    residency_budget: None,
-                },
+                req(i, MethodSpec::Fast { s: 16, kind: SketchKind::Uniform }, i, None),
                 tx.clone(),
             );
         }
@@ -315,6 +349,7 @@ mod tests {
         assert_eq!(rx.iter().count() as u64, total);
         assert_eq!(svc.metrics().requests.get(), total);
         assert_eq!(svc.inflight(), 0);
+        assert_eq!(svc.metrics().mem_in_use.get(), 0);
     }
 
     #[test]
@@ -332,14 +367,12 @@ mod tests {
             MethodSpec::Prototype,
             MethodSpec::Fast { s: 20, kind: SketchKind::Uniform },
             MethodSpec::Fast { s: 20, kind: SketchKind::Leverage { scaled: false } },
+            MethodSpec::Cur { r: 7, s: 20 },
         ];
         let mut id = 0u64;
         for m in methods {
-            for tile_rows in [None, Some(13)] {
-                svc.submit(
-                    ApproxRequest { id, method: m, c: 7, k: 4, seed: 42, tile_rows, residency_budget: None },
-                    tx.clone(),
-                );
+            for policy in [None, Some(ExecPolicy::streamed(13))] {
+                svc.submit(req(id, m, 42, policy), tx.clone());
                 id += 1;
             }
         }
@@ -347,10 +380,15 @@ mod tests {
         drop(tx);
         let mut resps: Vec<ApproxResponse> = rx.iter().collect();
         resps.sort_by_key(|r| r.id);
-        assert_eq!(resps.len(), 8);
+        assert_eq!(resps.len(), 10);
         for pair in resps.chunks(2) {
             let (mat, st) = (&pair[0], &pair[1]);
-            assert_eq!(mat.entries, st.entries, "{}: entry accounting must not change", mat.method);
+            assert_eq!(
+                entries_of(mat),
+                entries_of(st),
+                "{}: entry accounting must not change",
+                mat.method
+            );
             for (a, b) in mat.eigvals.iter().zip(&st.eigvals) {
                 let scale = mat.eigvals[0].abs().max(1e-12);
                 assert!(
@@ -378,19 +416,11 @@ mod tests {
         ];
         let mut id = 0u64;
         for m in methods {
-            for residency_budget in [None, Some(0u64)] {
-                svc.submit(
-                    ApproxRequest {
-                        id,
-                        method: m,
-                        c: 7,
-                        k: 4,
-                        seed: 42,
-                        tile_rows: Some(13),
-                        residency_budget,
-                    },
-                    tx.clone(),
-                );
+            for policy in [
+                Some(ExecPolicy::streamed(13)),
+                Some(ExecPolicy::resident(0).with_tile_rows(13)),
+            ] {
+                svc.submit(req(id, m, 42, policy), tx.clone());
                 id += 1;
             }
         }
@@ -401,9 +431,14 @@ mod tests {
         assert_eq!(resps.len(), 6);
         for pair in resps.chunks(2) {
             let (plain, routed) = (&pair[0], &pair[1]);
-            assert!(plain.residency.is_none());
-            let stats = routed.residency.expect("routed request must report stats");
-            assert_eq!(plain.entries, routed.entries, "{}", plain.method);
+            assert!(plain.meta.as_ref().unwrap().residency.is_none());
+            let stats = routed
+                .meta
+                .as_ref()
+                .unwrap()
+                .residency
+                .expect("routed request must report stats");
+            assert_eq!(entries_of(plain), entries_of(routed), "{}", plain.method);
             for (a, b) in plain.eigvals.iter().zip(&routed.eigvals) {
                 assert_eq!(a, b, "{}: residency must not change results", plain.method);
             }
@@ -413,5 +448,74 @@ mod tests {
                 assert_eq!(stats.spill_hits, stats.computes, "{}", routed.method);
             }
         }
+    }
+
+    #[test]
+    fn memory_cap_sheds_over_budget_requests() {
+        let n = 80;
+        // Cap sized for exactly one materialized nystrom request.
+        let one = planner::predicted_policy_peak_bytes(
+            n,
+            8,
+            &MethodSpec::Nystrom,
+            &ExecPolicy::Materialized,
+        );
+        let svc = service_cfg(
+            n,
+            ServiceConfig {
+                workers: 1,
+                queue_capacity: 16,
+                spill_dir: None,
+                memory_cap: Some(one),
+            },
+        );
+        // Deterministic shed: prototype's predicted peak (≥ n²·8) can
+        // never fit a cap sized for one nystrom — shed at submit with an
+        // error reply, nothing reserved, nothing queued.
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(0, MethodSpec::Prototype, 1, None), tx.clone());
+        drop(tx);
+        let shed: Vec<ApproxResponse> = rx.iter().collect();
+        assert_eq!(shed.len(), 1, "shed requests still get a reply");
+        let err = shed[0].error.as_ref().expect("over-cap request must be shed");
+        assert!(err.contains("shed"), "{err}");
+        assert!(shed[0].meta.is_none() && shed[0].eigvals.is_empty());
+        assert_eq!(svc.metrics().rejected.get(), 1);
+        assert_eq!(svc.metrics().mem_in_use.get(), 0, "a shed reserves nothing");
+
+        // A burst of fitting requests: admission is first-come with the
+        // in-flight sum, so every reply is either served (meta) or shed
+        // (error), the accounting balances, and the meter drains to zero.
+        let (tx, rx) = mpsc::channel();
+        let total = 10u64;
+        for i in 0..total {
+            svc.submit(req(i, MethodSpec::Nystrom, i, None), tx.clone());
+        }
+        svc.drain();
+        drop(tx);
+        let resps: Vec<ApproxResponse> = rx.iter().collect();
+        assert_eq!(resps.len(), total as usize);
+        for r in &resps {
+            assert!(
+                r.error.is_some() ^ r.meta.is_some(),
+                "{}: exactly one of error/meta",
+                r.id
+            );
+        }
+        let served = resps.iter().filter(|r| r.meta.is_some()).count() as u64;
+        assert!(served >= 1, "the first request always fits an empty meter");
+        assert_eq!(svc.metrics().completed.get(), served);
+        assert_eq!(svc.metrics().rejected.get(), 1 + (total - served));
+        assert_eq!(svc.metrics().mem_in_use.get(), 0);
+        assert_eq!(svc.inflight(), 0);
+
+        // Uncapped services meter without shedding.
+        let svc = service(40, 1, 8);
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(0, MethodSpec::Prototype, 1, None), tx);
+        svc.drain();
+        assert!(rx.iter().next().unwrap().error.is_none());
+        assert_eq!(svc.metrics().rejected.get(), 0);
+        assert_eq!(svc.metrics().mem_in_use.get(), 0);
     }
 }

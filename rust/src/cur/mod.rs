@@ -3,8 +3,10 @@
 //! - [`cur_optimal`] — `U* = C† A R†` (eq. 8, cost O(mn·min{c,r})),
 //! - [`cur_drineas08`] — `U = (P_R^T A P_C)†` (the cheap 2008 baseline the
 //!   paper's Fig. 2(c) shows is poor),
-//! - [`cur_fast`] — `Ũ = (S_C^T C)† (S_C^T A S_R) (R S_R)†` (eq. 9,
-//!   Theorem 9) with uniform or leverage-score `S_C`, `S_R`,
+//! - fast CUR — `Ũ = (S_C^T C)† (S_C^T A S_R) (R S_R)†` (eq. 9,
+//!   Theorem 9) with uniform or leverage-score `S_C`, `S_R` — served by
+//!   [`exec::cur_fast`](crate::exec::cur_fast) under any
+//!   [`ExecPolicy`](crate::exec::ExecPolicy),
 //! - [`adaptive_sample`] / [`uniform_adaptive2`] — residual-based column
 //!   selection (Wang et al. 2016) used to build better `C` (paper Fig. 4
 //!   and Theorem 8's near-optimal selection).
@@ -139,202 +141,153 @@ impl FastCurConfig {
     }
 }
 
-/// Fast CUR: `Ũ = (S_C^T C)† (S_C^T A S_R) (R S_R)†`, column-selection
-/// sketches only (the linear-time regime the paper recommends; projection
-/// sketches would need all of A).
-pub fn cur_fast(
+/// Unified fast-CUR builder: `Ũ = (S_C^T C)† (S_C^T A S_R) (R S_R)†`,
+/// column-selection sketches only (the linear-time regime the paper
+/// recommends; projection sketches would need all of A). The
+/// non-deprecated entry point is
+/// [`exec::cur_fast`](crate::exec::cur_fast).
+///
+/// - `stream_cfg = None` — the materialized path: direct gathers from the
+///   resident `A` (the historical `cur_fast`).
+/// - `Some(cfg)` — `A` flows by in row tiles and the consumers pick out
+///   `C = A[:, P_C]`, `R = A[P_R, :]` and (for uniform sketches, whose
+///   indices don't depend on `C`/`R`) the `S_C x S_R` core in the same
+///   single pass; leverage sketches draw their indices after the `C`/`R`
+///   pass and gather the core from the resident matrix. Peak extra memory
+///   beyond the `C`/`R`/`U` outputs is `O(tile_rows · n + s_c · s_r)`.
+/// - `residency = Some(rc)` — every tile additionally writes through the
+///   LRU + spill arena, and the leverage family's core gather re-streams
+///   through the residency layer instead of indexing the resident `A`, so
+///   a disk-backed `A` is read exactly once however many passes run.
+///
+/// The rng sequence is shared by all paths (uniform indices are drawn up
+/// front; leverage draws happen after the `C`/`R` pass in every path), so
+/// results are **bit-identical** across policies.
+pub(crate) fn run_cur_fast(
     a: &Matrix,
     col_idx: &[usize],
     row_idx: &[usize],
     cfg: FastCurConfig,
+    stream_cfg: Option<StreamConfig>,
+    residency: Option<&ResidencyConfig>,
     rng: &mut Rng,
-) -> CurDecomp {
-    let sw = Stopwatch::start();
-    let (m, n) = (a.rows(), a.cols());
-    let c = a.select_cols(col_idx);
-    let r = a.select_rows(row_idx);
-
-    // Row sketch S_C over [m] (samples rows), column sketch S_R over [n].
-    let sc_idx = build_indices(&c, cfg.kind, cfg.score_basis, cfg.s_c, m, if cfg.force_overlap { row_idx } else { &[] }, rng);
-    let rt = r.transpose();
-    let sr_idx = build_indices(&rt, cfg.kind, cfg.score_basis, cfg.s_r, n, if cfg.force_overlap { col_idx } else { &[] }, rng);
-
-    let stc = c.select_rows(&sc_idx); // s_c x c
-    let rsr = r.select_cols(&sr_idx); // r x s_r
-    let core = a.select_rows(&sc_idx).select_cols(&sr_idx); // s_c x s_r
-    let u = pinv(&stc).matmul(&core).matmul(&pinv(&rsr));
-    CurDecomp {
-        c,
-        u,
-        r,
-        method: format!("fast[{}]", cfg.kind.name()),
-        build_secs: sw.secs(),
-        entries_for_u: (sc_idx.len() * sr_idx.len()) as u64,
-    }
-}
-
-/// Fast CUR through the tile pipeline: `A` flows by in `tile_rows`-high
-/// row tiles and the consumers pick out everything the decomposition
-/// needs — `C = A[:, P_C]` (column-subset collect), `R = A[P_R, :]` (row
-/// gather), and for uniform sketches the `S_C x S_R` core in the same
-/// single pass (the indices don't depend on `C`/`R`, so they are drawn up
-/// front with the same rng sequence as [`cur_fast`] — results are
-/// bit-identical). Leverage sketches need `C`/`R` first, so they pay a
-/// second column-restricted pass for the core. Peak extra memory beyond
-/// the `C`/`R`/`U` outputs is `O(tile_rows · n + s_c · s_r)` — the tile
-/// interface is what a dataset-on-disk source would implement.
-pub fn cur_fast_streamed(
-    a: &Matrix,
-    col_idx: &[usize],
-    row_idx: &[usize],
-    cfg: FastCurConfig,
-    stream_cfg: StreamConfig,
-    rng: &mut Rng,
-) -> CurDecomp {
+) -> (CurDecomp, Option<ResidencyStats>) {
     let sw = Stopwatch::start();
     let (m, n) = (a.rows(), a.cols());
     let forced_rows: &[usize] = if cfg.force_overlap { row_idx } else { &[] };
     let forced_cols: &[usize] = if cfg.force_overlap { col_idx } else { &[] };
+    assert!(
+        cfg.kind.is_column_selection(),
+        "fast CUR supports column-selection sketches, not {}",
+        cfg.kind.name()
+    );
 
-    let (c, r, sc_idx, sr_idx, core) = match cfg.kind {
-        SketchKind::Uniform => {
-            // Indices first (basis is ignored for uniform sampling), then
-            // one pass gathers C, R and the core together.
-            let dummy = Matrix::zeros(0, 0);
-            let sc_idx = build_indices(&dummy, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
-            let sr_idx = build_indices(&dummy, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
-            let src = MatrixSource::new(a);
-            let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
-            let mut r_gather = RowGather::new(row_idx.to_vec(), n);
-            let mut core_gather = RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
-            run_pipeline(
-                &src,
-                stream_cfg.tile_rows,
-                stream_cfg.queue_depth,
-                &mut [&mut c_collect, &mut r_gather, &mut core_gather],
-            );
-            (
-                c_collect.into_matrix(),
-                r_gather.into_matrix(),
-                sc_idx,
-                sr_idx,
-                core_gather.into_matrix(),
-            )
-        }
-        SketchKind::Leverage { .. } => {
-            // Pass 1: C and R. Then draw the leverage indices exactly as
-            // cur_fast does; the s_c x s_r core is a direct gather from
-            // the resident `a` (it cannot be folded in pass 1 — the
-            // indices don't exist yet — and re-streaming all m rows to
-            // keep s_c of them would be pure overhead).
-            let src = MatrixSource::new(a);
-            let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
-            let mut r_gather = RowGather::new(row_idx.to_vec(), n);
-            run_pipeline(
-                &src,
-                stream_cfg.tile_rows,
-                stream_cfg.queue_depth,
-                &mut [&mut c_collect, &mut r_gather],
-            );
-            let c = c_collect.into_matrix();
-            let r = r_gather.into_matrix();
-            let sc_idx = build_indices(&c, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
+    let src = MatrixSource::new(a);
+    let resident = residency.map(|rc| ResidentSource::new(&src, rc));
+    // The pipeline paths: residency implies streaming (grid height from
+    // the stream config, which the exec layer aligns with the grid).
+    let piped = match (&resident, stream_cfg) {
+        (Some(_), cfg) => Some(cfg.unwrap_or_default()),
+        (None, cfg) => cfg,
+    };
+
+    let (c, r, sc_idx, sr_idx, core) = match piped {
+        None => {
+            // Materialized: direct gathers from the resident A.
+            let c = a.select_cols(col_idx);
+            let r = a.select_rows(row_idx);
+            let sc_idx =
+                build_indices(&c, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
             let rt = r.transpose();
-            let sr_idx = build_indices(&rt, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
-            let core =
-                Matrix::from_fn(sc_idx.len(), sr_idx.len(), |i, j| a[(sc_idx[i], sr_idx[j])]);
+            let sr_idx =
+                build_indices(&rt, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
+            let core = a.select_rows(&sc_idx).select_cols(&sr_idx); // s_c x s_r
             (c, r, sc_idx, sr_idx, core)
         }
-        other => panic!("fast CUR supports column-selection sketches, not {}", other.name()),
+        Some(stream_cfg) => {
+            let t = stream_cfg.effective_tile_rows(m);
+            let source: &dyn crate::stream::TileSource = match &resident {
+                Some(res) => res,
+                None => &src,
+            };
+            let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
+            let mut r_gather = RowGather::new(row_idx.to_vec(), n);
+            match cfg.kind {
+                SketchKind::Uniform => {
+                    // Indices first (the basis is ignored for uniform
+                    // sampling), then one pass gathers C, R and the core
+                    // together.
+                    let dummy = Matrix::zeros(0, 0);
+                    let sc_idx = build_indices(
+                        &dummy, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng,
+                    );
+                    let sr_idx = build_indices(
+                        &dummy, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng,
+                    );
+                    let mut core_gather = RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
+                    run_pipeline(
+                        source,
+                        t,
+                        stream_cfg.queue_depth,
+                        &mut [&mut c_collect, &mut r_gather, &mut core_gather],
+                    );
+                    (
+                        c_collect.into_matrix(),
+                        r_gather.into_matrix(),
+                        sc_idx,
+                        sr_idx,
+                        core_gather.into_matrix(),
+                    )
+                }
+                _ => {
+                    // Leverage. Pass 1: C and R. Then draw the leverage
+                    // indices exactly as the materialized path does. The
+                    // s_c x s_r core cannot be folded in pass 1 (the
+                    // indices don't exist yet): without residency it is a
+                    // direct gather from the resident `a` (re-streaming
+                    // all m rows to keep s_c of them would be pure
+                    // overhead); with residency pass 2 reloads tiles from
+                    // the LRU/arena — the backing store is never consulted
+                    // again.
+                    run_pipeline(
+                        source,
+                        t,
+                        stream_cfg.queue_depth,
+                        &mut [&mut c_collect, &mut r_gather],
+                    );
+                    let c = c_collect.into_matrix();
+                    let r = r_gather.into_matrix();
+                    let sc_idx = build_indices(
+                        &c, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng,
+                    );
+                    let rt = r.transpose();
+                    let sr_idx = build_indices(
+                        &rt, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng,
+                    );
+                    let core = match &resident {
+                        Some(res) => {
+                            let mut core_gather =
+                                RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
+                            run_pipeline(
+                                res,
+                                t,
+                                stream_cfg.queue_depth,
+                                &mut [&mut core_gather],
+                            );
+                            core_gather.into_matrix()
+                        }
+                        None => Matrix::from_fn(sc_idx.len(), sr_idx.len(), |i, j| {
+                            a[(sc_idx[i], sr_idx[j])]
+                        }),
+                    };
+                    (c, r, sc_idx, sr_idx, core)
+                }
+            }
+        }
     };
 
     let stc = c.select_rows(&sc_idx); // s_c x c
     let rsr = r.select_cols(&sr_idx); // r x s_r
-    let u = pinv(&stc).matmul(&core).matmul(&pinv(&rsr));
-    CurDecomp {
-        c,
-        u,
-        r,
-        method: format!("fast[{}]", cfg.kind.name()),
-        build_secs: sw.secs(),
-        entries_for_u: (sc_idx.len() * sr_idx.len()) as u64,
-    }
-}
-
-/// [`cur_fast_streamed`] through the tile residency layer: `A`'s row
-/// tiles write through an LRU + disk spill arena on first read, and the
-/// leverage family's **pass 2** (the `S_C x S_R` core gather, which
-/// cannot run in pass 1 because the indices don't exist yet) re-streams
-/// through the residency layer instead of indexing the resident matrix —
-/// so a disk-backed `A` (the stand-in [`MatrixSource`] models) is read
-/// exactly once however many passes run. Results are bit-identical to
-/// [`cur_fast`] / [`cur_fast_streamed`] (same rng sequence, exact
-/// gathers); returns the residency counters alongside the decomposition.
-pub fn cur_fast_streamed_resident(
-    a: &Matrix,
-    col_idx: &[usize],
-    row_idx: &[usize],
-    cfg: FastCurConfig,
-    stream_cfg: StreamConfig,
-    residency: &ResidencyConfig,
-    rng: &mut Rng,
-) -> (CurDecomp, ResidencyStats) {
-    let sw = Stopwatch::start();
-    let (m, n) = (a.rows(), a.cols());
-    let forced_rows: &[usize] = if cfg.force_overlap { row_idx } else { &[] };
-    let forced_cols: &[usize] = if cfg.force_overlap { col_idx } else { &[] };
-    let src = MatrixSource::new(a);
-    let resident = ResidentSource::new(&src, residency);
-    let t = stream_cfg.effective_tile_rows(m);
-
-    let (c, r, sc_idx, sr_idx, core) = match cfg.kind {
-        SketchKind::Uniform => {
-            let dummy = Matrix::zeros(0, 0);
-            let sc_idx = build_indices(&dummy, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
-            let sr_idx = build_indices(&dummy, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
-            let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
-            let mut r_gather = RowGather::new(row_idx.to_vec(), n);
-            let mut core_gather = RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
-            run_pipeline(
-                &resident,
-                t,
-                stream_cfg.queue_depth,
-                &mut [&mut c_collect, &mut r_gather, &mut core_gather],
-            );
-            (
-                c_collect.into_matrix(),
-                r_gather.into_matrix(),
-                sc_idx,
-                sr_idx,
-                core_gather.into_matrix(),
-            )
-        }
-        SketchKind::Leverage { .. } => {
-            // Pass 1: C and R; every tile writes through the arena.
-            let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
-            let mut r_gather = RowGather::new(row_idx.to_vec(), n);
-            run_pipeline(
-                &resident,
-                t,
-                stream_cfg.queue_depth,
-                &mut [&mut c_collect, &mut r_gather],
-            );
-            let c = c_collect.into_matrix();
-            let r = r_gather.into_matrix();
-            let sc_idx = build_indices(&c, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
-            let rt = r.transpose();
-            let sr_idx = build_indices(&rt, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
-            // Pass 2: the core gather reloads tiles from residency — the
-            // backing store is never consulted again.
-            let mut core_gather = RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
-            run_pipeline(&resident, t, stream_cfg.queue_depth, &mut [&mut core_gather]);
-            (c, r, sc_idx, sr_idx, core_gather.into_matrix())
-        }
-        other => panic!("fast CUR supports column-selection sketches, not {}", other.name()),
-    };
-
-    let stc = c.select_rows(&sc_idx);
-    let rsr = r.select_cols(&sr_idx);
     let u = pinv(&stc).matmul(&core).matmul(&pinv(&rsr));
     let decomp = CurDecomp {
         c,
@@ -344,7 +297,53 @@ pub fn cur_fast_streamed_resident(
         build_secs: sw.secs(),
         entries_for_u: (sc_idx.len() * sr_idx.len()) as u64,
     };
-    (decomp, resident.stats())
+    let stats = resident.map(|res| res.stats());
+    (decomp, stats)
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated per-policy shims over the unified builder (`exec::cur_fast`
+// is the policy-carrying surface).
+// ---------------------------------------------------------------------------
+
+/// Fast CUR on the materialized path.
+#[deprecated(note = "use `exec::cur_fast` with `ExecPolicy::Materialized`")]
+pub fn cur_fast(
+    a: &Matrix,
+    col_idx: &[usize],
+    row_idx: &[usize],
+    cfg: FastCurConfig,
+    rng: &mut Rng,
+) -> CurDecomp {
+    run_cur_fast(a, col_idx, row_idx, cfg, None, None, rng).0
+}
+
+/// Fast CUR through the tile pipeline.
+#[deprecated(note = "use `exec::cur_fast` with `ExecPolicy::Streamed`")]
+pub fn cur_fast_streamed(
+    a: &Matrix,
+    col_idx: &[usize],
+    row_idx: &[usize],
+    cfg: FastCurConfig,
+    stream_cfg: StreamConfig,
+    rng: &mut Rng,
+) -> CurDecomp {
+    run_cur_fast(a, col_idx, row_idx, cfg, Some(stream_cfg), None, rng).0
+}
+
+/// Fast CUR through the tile residency layer.
+#[deprecated(note = "use `exec::cur_fast` with `ExecPolicy::Resident`")]
+pub fn cur_fast_streamed_resident(
+    a: &Matrix,
+    col_idx: &[usize],
+    row_idx: &[usize],
+    cfg: FastCurConfig,
+    stream_cfg: StreamConfig,
+    residency: &ResidencyConfig,
+    rng: &mut Rng,
+) -> (CurDecomp, ResidencyStats) {
+    let (d, s) = run_cur_fast(a, col_idx, row_idx, cfg, Some(stream_cfg), Some(residency), rng);
+    (d, s.expect("residency stats"))
 }
 
 /// Sample `s` row indices of `basis` (uniform or by row leverage scores),
@@ -365,8 +364,9 @@ fn build_indices(
             // Default: Gram-based scores (the streamed leverage
             // estimator) — O(c²) whitening state instead of an SVD of the
             // full basis, same scores in exact arithmetic, and shared by
-            // `cur_fast` and `cur_fast_streamed` so the two stay
-            // bit-identical. ExactSvd is the conditioning-robust opt-out.
+            // every execution policy so materialized and streamed builds
+            // stay bit-identical. ExactSvd is the conditioning-robust
+            // opt-out.
             let scores = match score_basis {
                 CurScoreBasis::Gram => {
                     sketch::approx_leverage_from_gram(&basis.gram_tn()).scores(basis)
@@ -447,6 +447,7 @@ pub fn uniform_adaptive2(a: &Matrix, c: usize, rng: &mut Rng) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::{self, ExecPolicy};
     use crate::testkit::gen;
 
     fn decaying_matrix(m: usize, n: usize, seed: u64) -> Matrix {
@@ -458,6 +459,16 @@ mod tests {
         ud.matmul_tr(&v)
     }
 
+    fn fast_m(
+        a: &Matrix,
+        cols: &[usize],
+        rows: &[usize],
+        cfg: FastCurConfig,
+        rng: &mut Rng,
+    ) -> CurDecomp {
+        exec::cur_fast(a, cols, rows, cfg, &ExecPolicy::Materialized, rng).result
+    }
+
     #[test]
     fn optimal_is_best_for_fixed_c_r() {
         let a = decaying_matrix(40, 30, 0);
@@ -466,7 +477,7 @@ mod tests {
         let rows = select_uniform(40, 6, &mut rng);
         let opt = cur_optimal(&a, &cols, &rows);
         let dri = cur_drineas08(&a, &cols, &rows);
-        let fast = cur_fast(&a, &cols, &rows, FastCurConfig::uniform(24, 24), &mut rng);
+        let fast = fast_m(&a, &cols, &rows, FastCurConfig::uniform(24, 24), &mut rng);
         let (e_opt, e_dri, e_fast) =
             (opt.rel_fro_error(&a), dri.rel_fro_error(&a), fast.rel_fro_error(&a));
         assert!(e_opt <= e_fast + 1e-9, "optimal {e_opt} vs fast {e_fast}");
@@ -481,7 +492,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let cols = select_uniform(45, 5, &mut rng);
         let rows = select_uniform(50, 5, &mut rng);
-        let f = cur_fast(&a, &cols, &rows, FastCurConfig::uniform(20, 20), &mut rng);
+        let f = fast_m(&a, &cols, &rows, FastCurConfig::uniform(20, 20), &mut rng);
         assert!(f.entries_for_u <= 25 * 25);
         let o = cur_optimal(&a, &cols, &rows);
         assert_eq!(o.entries_for_u, 50 * 45);
@@ -496,7 +507,7 @@ mod tests {
         let rows = select_uniform(30, 5, &mut rng);
         let opt = cur_optimal(&a, &cols, &rows);
         assert!(opt.rel_fro_error(&a) < 1e-10);
-        let fast = cur_fast(&a, &cols, &rows, FastCurConfig::uniform(15, 15), &mut rng);
+        let fast = fast_m(&a, &cols, &rows, FastCurConfig::uniform(15, 15), &mut rng);
         assert!(fast.rel_fro_error(&a) < 1e-9, "err={}", fast.rel_fro_error(&a));
     }
 
@@ -506,7 +517,7 @@ mod tests {
         let mut rng = Rng::new(6);
         let cols = select_uniform(30, 5, &mut rng);
         let rows = select_uniform(35, 5, &mut rng);
-        let f = cur_fast(&a, &cols, &rows, FastCurConfig::leverage(20, 20), &mut rng);
+        let f = fast_m(&a, &cols, &rows, FastCurConfig::leverage(20, 20), &mut rng);
         let e = f.rel_fro_error(&a);
         let e_opt = cur_optimal(&a, &cols, &rows).rel_fro_error(&a);
         assert!(e <= 3.0 * e_opt + 1e-6, "leverage fast {e} vs opt {e_opt}");
@@ -528,15 +539,9 @@ mod tests {
                 let cols2 = select_uniform(33, 5, &mut r2);
                 let rows2 = select_uniform(41, 5, &mut r2);
                 assert_eq!(cols, cols2);
-                let mat = cur_fast(&a, &cols, &rows, cfg, &mut r1);
-                let st = cur_fast_streamed(
-                    &a,
-                    &cols2,
-                    &rows2,
-                    cfg,
-                    crate::stream::StreamConfig::tiled(tile),
-                    &mut r2,
-                );
+                let mat = fast_m(&a, &cols, &rows, cfg, &mut r1);
+                let st = exec::cur_fast(&a, &cols2, &rows2, cfg, &ExecPolicy::streamed(tile), &mut r2)
+                    .result;
                 assert_eq!(mat.c.max_abs_diff(&st.c), 0.0, "C tile={tile}");
                 assert_eq!(mat.r.max_abs_diff(&st.r), 0.0, "R tile={tile}");
                 assert_eq!(mat.u.max_abs_diff(&st.u), 0.0, "{} U tile={tile}", mat.method);
@@ -556,17 +561,10 @@ mod tests {
                 let rows = select_uniform(41, 5, &mut r1);
                 let cols2 = select_uniform(33, 5, &mut r2);
                 let rows2 = select_uniform(41, 5, &mut r2);
-                let mat = cur_fast(&a, &cols, &rows, cfg, &mut r1);
-                let rc = ResidencyConfig::new(budget).with_tile_rows(tile);
-                let (st, stats) = cur_fast_streamed_resident(
-                    &a,
-                    &cols2,
-                    &rows2,
-                    cfg,
-                    StreamConfig::tiled(tile),
-                    &rc,
-                    &mut r2,
-                );
+                let mat = fast_m(&a, &cols, &rows, cfg, &mut r1);
+                let policy = ExecPolicy::resident(budget).with_tile_rows(tile);
+                let rep = exec::cur_fast(&a, &cols2, &rows2, cfg, &policy, &mut r2);
+                let (st, stats) = (rep.result, rep.meta.residency.expect("stats"));
                 assert_eq!(mat.c.max_abs_diff(&st.c), 0.0, "C tile={tile}");
                 assert_eq!(mat.r.max_abs_diff(&st.r), 0.0, "R tile={tile}");
                 assert_eq!(mat.u.max_abs_diff(&st.u), 0.0, "{} U tile={tile}", mat.method);
@@ -624,6 +622,6 @@ mod tests {
             force_overlap: false,
             score_basis: CurScoreBasis::Gram,
         };
-        cur_fast(&a, &[0, 1], &[0, 1], cfg, &mut rng);
+        fast_m(&a, &[0, 1], &[0, 1], cfg, &mut rng);
     }
 }

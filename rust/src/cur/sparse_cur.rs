@@ -122,13 +122,15 @@ mod tests {
         let cols = select_uniform(45, 10, &mut rng);
         let rows = select_uniform(50, 10, &mut rng);
         let dec_sparse = sparse_cur_fast(&a, &cols, &rows, FastCurConfig::uniform(30, 30), &mut rng);
-        let dec_dense = crate::cur::cur_fast(
+        let dec_dense = crate::exec::cur_fast(
             &a.to_dense(),
             &cols,
             &rows,
             FastCurConfig::uniform(30, 30),
+            &crate::exec::ExecPolicy::Materialized,
             &mut rng,
-        );
+        )
+        .result;
         let es = dec_sparse.rel_fro_error(&a);
         let ed = dec_dense.rel_fro_error(&a.to_dense());
         assert!(es < 1e-8 && ed < 1e-8, "sparse {es} dense {ed}");

@@ -1,0 +1,220 @@
+//! One execution-policy API for every algorithm family.
+//!
+//! Gittens & Mahoney style sketch-and-solve makes Nyström, the prototype
+//! model, the fast model, fast CUR, and the implicit operators instances
+//! of one template; what used to distinguish `nystrom` /
+//! `nystrom_streamed` / `nystrom_resident` (and the `_budgeted` /
+//! `_resident` implicit ops) was never the algorithm — only the
+//! *execution policy*. This module is that policy surface:
+//!
+//! - [`ExecPolicy`] picks the traversal: [`Materialized`]
+//!   (whole-matrix tiles), [`Streamed`] (the bounded tile pipeline), or
+//!   [`Resident`] (the pipeline behind the hot-tile LRU + disk-spill
+//!   residency layer).
+//! - one public entry per algorithm family — [`nystrom`], [`prototype`],
+//!   [`fast`], [`cur_fast`], [`top_k_eigs`], [`solve_regularized`] — each
+//!   `(source-or-oracle, algo-config, &ExecPolicy, rng) → RunReport`.
+//! - [`RunReport`] carries the result plus uniform accounting
+//!   ([`RunMeta`]): source entries observed, compute seconds, residency
+//!   counters, and predicted-vs-actual peak bytes.
+//!
+//! Policy changes never change *what* is computed: selection/gather paths
+//! are bit-identical across every policy, reduction-regrouped paths
+//! (prototype, projection sketches) agree to ≤1e-12 relative error
+//! (`tests/exec_api.rs` asserts the full method × policy matrix). The old
+//! suffixed entry points in [`spsd`](crate::spsd), [`cur`](crate::cur)
+//! and [`stream::implicit`](crate::stream::implicit) remain as deprecated
+//! shims over this module.
+//!
+//! A GPU/PJRT tile backend (ROADMAP) lands here as one more [`ExecPolicy`]
+//! variant — no per-algorithm suffix required.
+//!
+//! [`Materialized`]: ExecPolicy::Materialized
+//! [`Streamed`]: ExecPolicy::Streamed
+//! [`Resident`]: ExecPolicy::Resident
+
+pub mod policy;
+
+pub use policy::{ExecPolicy, RunMeta, RunReport};
+
+use crate::benchkit::alloc::{self, AllocGauge};
+use crate::coordinator::oracle::KernelOracle;
+use crate::coordinator::planner::{self, MethodSpec};
+use crate::cur::{self, CurDecomp, FastCurConfig};
+use crate::linalg::Matrix;
+use crate::spsd::{self, FastConfig, SpsdApprox};
+use crate::stream::{self, TileSource};
+use crate::util::{Rng, Stopwatch};
+
+/// Wall clock + (optional) allocation gauge for one run.
+struct Scope {
+    sw: Stopwatch,
+    gauge: AllocGauge,
+}
+
+impl Scope {
+    fn start() -> Self {
+        Scope { sw: Stopwatch::start(), gauge: AllocGauge::start() }
+    }
+
+    fn finish(
+        self,
+        entries: Option<u64>,
+        residency: Option<stream::ResidencyStats>,
+        predicted_peak_bytes: Option<u64>,
+    ) -> RunMeta {
+        let actual = alloc::installed().then(|| self.gauge.peak_extra_bytes() as u64);
+        RunMeta {
+            entries,
+            compute_secs: self.sw.secs(),
+            residency,
+            predicted_peak_bytes,
+            actual_peak_bytes: actual,
+        }
+    }
+}
+
+/// The Nyström method (`U = W†`, paper eq. 3) under `policy`.
+/// Bit-identical results across every policy (pure gathers).
+pub fn nystrom(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    policy: &ExecPolicy,
+) -> RunReport<SpsdApprox> {
+    let scope = Scope::start();
+    let n = oracle.n();
+    let rc = policy.residency_config();
+    let (approx, stats) =
+        spsd::run_nystrom(oracle, p_idx, policy.stream_config(), rc.as_ref());
+    let predicted =
+        planner::predicted_policy_peak_bytes(n, p_idx.len(), &MethodSpec::Nystrom, policy);
+    let entries = Some(approx.entries_observed);
+    RunReport { result: approx, meta: scope.finish(entries, stats, Some(predicted)) }
+}
+
+/// The prototype model (`U* = C† K (C†)ᵀ`, paper eq. 2) under `policy`.
+///
+/// The prototype streams the full `K` — not a reloadable working set — so
+/// a [`Resident`](ExecPolicy::Resident) policy degrades to the streamed
+/// pipeline at the policy's tile height (`residency` stays `None` in the
+/// report). Streamed results match materialized ones up to reduction
+/// reordering (≤1e-12 relative).
+pub fn prototype(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    policy: &ExecPolicy,
+) -> RunReport<SpsdApprox> {
+    let scope = Scope::start();
+    let n = oracle.n();
+    let approx = spsd::run_prototype(oracle, p_idx, policy.stream_config());
+    let predicted =
+        planner::predicted_policy_peak_bytes(n, p_idx.len(), &MethodSpec::Prototype, policy);
+    let entries = Some(approx.entries_observed);
+    RunReport { result: approx, meta: scope.finish(entries, None, Some(predicted)) }
+}
+
+/// The fast SPSD model (paper Algorithm 1) under `policy`.
+///
+/// Selection sketches (uniform / leverage) are bit-identical across every
+/// policy; projection sketches regroup reductions when tiled (≤1e-12) and
+/// — like the prototype — stream the full `K`, so for them a
+/// [`Resident`](ExecPolicy::Resident) policy degrades to plain streaming
+/// (`residency` stays `None` in the report).
+pub fn fast(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    cfg: FastConfig,
+    policy: &ExecPolicy,
+    rng: &mut Rng,
+) -> RunReport<SpsdApprox> {
+    let scope = Scope::start();
+    let n = oracle.n();
+    let rc = if cfg.kind.is_column_selection() { policy.residency_config() } else { None };
+    let (approx, stats) =
+        spsd::run_fast(oracle, p_idx, cfg, policy.stream_config(), rc.as_ref(), rng);
+    let method = MethodSpec::Fast { s: cfg.s, kind: cfg.kind };
+    let predicted = planner::predicted_policy_peak_bytes(n, p_idx.len(), &method, policy);
+    let entries = Some(approx.entries_observed);
+    RunReport { result: approx, meta: scope.finish(entries, stats, Some(predicted)) }
+}
+
+/// Fast CUR (`Ũ = (S_Cᵀ C)† (S_Cᵀ A S_R) (R S_R)†`, paper eq. 9) under
+/// `policy`. Bit-identical across every policy (pure gathers);
+/// `meta.entries` reports the decomposition's `entries_for_u` (the entries
+/// read to compute `U` — `C`/`R` are shared by every method). No peak
+/// prediction exists for rectangular `A` (`predicted_peak_bytes` is
+/// `None`); the service's square-kernel CUR is predicted by
+/// [`planner::predicted_policy_peak_bytes`].
+pub fn cur_fast(
+    a: &Matrix,
+    col_idx: &[usize],
+    row_idx: &[usize],
+    cfg: FastCurConfig,
+    policy: &ExecPolicy,
+    rng: &mut Rng,
+) -> RunReport<CurDecomp> {
+    let scope = Scope::start();
+    let stream_cfg = match policy {
+        ExecPolicy::Materialized => None,
+        _ => Some(policy.stream_config()),
+    };
+    let rc = policy.residency_config();
+    let (decomp, stats) =
+        cur::run_cur_fast(a, col_idx, row_idx, cfg, stream_cfg, rc.as_ref(), rng);
+    let entries = Some(decomp.entries_for_u);
+    RunReport { result: decomp, meta: scope.finish(entries, stats, None) }
+}
+
+/// Top-k eigenpairs (descending) of the implicit `C U Cᵀ` via Lanczos
+/// over the streamed matvec, under `policy`. A
+/// [`Resident`](ExecPolicy::Resident) policy charges the underlying
+/// source exactly once per tile across all Lanczos iterations (with
+/// `spill`, at any RAM budget including 0); results are bit-identical
+/// across every policy.
+pub fn top_k_eigs(
+    src: &dyn TileSource,
+    u: &Matrix,
+    k: usize,
+    seed: u64,
+    policy: &ExecPolicy,
+) -> RunReport<(Vec<f64>, Matrix)> {
+    let scope = Scope::start();
+    let cfg = policy.stream_config();
+    let rc = policy.residency_config();
+    let (result, stats) = stream::implicit::run_top_k_eigs(src, u, k, seed, cfg, rc.as_ref());
+    let predicted = implicit_predicted(src, cfg, policy);
+    RunReport { result, meta: scope.finish(None, stats, Some(predicted)) }
+}
+
+/// Solve `(C U Cᵀ + alpha I) w = y` against the implicit approximation
+/// (streamed Woodbury, paper Lemma 11) under `policy`. Same policy
+/// semantics as [`top_k_eigs`].
+pub fn solve_regularized(
+    src: &dyn TileSource,
+    u: &Matrix,
+    alpha: f64,
+    y: &[f64],
+    policy: &ExecPolicy,
+) -> RunReport<Vec<f64>> {
+    let scope = Scope::start();
+    let cfg = policy.stream_config();
+    let rc = policy.residency_config();
+    let (result, stats) =
+        stream::implicit::run_solve_regularized(src, u, alpha, y, cfg, rc.as_ref());
+    let predicted = implicit_predicted(src, cfg, policy);
+    RunReport { result, meta: scope.finish(None, stats, Some(predicted)) }
+}
+
+fn implicit_predicted(
+    src: &dyn TileSource,
+    cfg: stream::StreamConfig,
+    policy: &ExecPolicy,
+) -> u64 {
+    let n = src.rows();
+    planner::predicted_implicit_peak_bytes(
+        n,
+        src.cols(),
+        cfg.effective_tile_rows(n),
+        policy.cache_budget(),
+    )
+}

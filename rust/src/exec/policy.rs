@@ -1,0 +1,235 @@
+//! The execution-policy vocabulary: *what to run* (the algorithm configs
+//! in [`spsd`](crate::spsd) / [`cur`](crate::cur)) is separated from *how
+//! to run it* ([`ExecPolicy`]) and from *what happened*
+//! ([`RunReport`] / [`RunMeta`]).
+
+use crate::stream::{
+    ResidencyConfig, ResidencyStats, StreamConfig, DEFAULT_RESIDENT_TILE_ROWS,
+};
+use std::path::PathBuf;
+
+/// How a build or implicit operation should traverse its source.
+///
+/// Every algorithm entry point in [`exec`](crate::exec) takes one of
+/// these; the paper's models themselves never change, only the traversal:
+///
+/// - [`Materialized`](ExecPolicy::Materialized) — whole-matrix tiles, the
+///   historical in-memory path (bit-compatible with the pre-policy code).
+/// - [`Streamed`](ExecPolicy::Streamed) — the bounded double-buffered tile
+///   pipeline of [`stream`](crate::stream): peak extra memory
+///   `O(tile_rows · c + s²)` instead of resident panels.
+/// - [`Resident`](ExecPolicy::Resident) — the streamed pipeline behind the
+///   tile residency layer ([`ResidentSource`]): a `budget`-byte hot-tile
+///   LRU, optionally backed by a disk spill arena, so multi-pass plans pay
+///   the underlying source exactly once per tile.
+///
+/// A device (GPU / PJRT) tile backend slots in here as another variant —
+/// callers match on nothing, they just hand the policy down.
+///
+/// [`ResidentSource`]: crate::stream::ResidentSource
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecPolicy {
+    /// One whole-matrix tile: the materialized path.
+    Materialized,
+    /// Fixed-height row tiles through the double-buffered pipeline.
+    Streamed(StreamConfig),
+    /// Streamed through the tile residency layer.
+    Resident {
+        /// Max bytes of tiles held hot in the RAM LRU (0 = nothing stays
+        /// hot; with `spill` every re-read then comes from disk).
+        budget: u64,
+        /// Write cold tiles through to a disk arena so they are reloaded,
+        /// never recomputed (`false` = the budget-gated cached-`C`
+        /// semantics: evicted tiles are recomputed).
+        spill: bool,
+        /// Pipeline *and* residency-grid tile height (`None` =
+        /// [`DEFAULT_RESIDENT_TILE_ROWS`]). One value for both keeps every
+        /// pipeline request aligned with the cache grid.
+        tile_rows: Option<usize>,
+        /// Directory for the spill arena (`None` = the system temp dir).
+        /// Ignored unless `spill` is set.
+        spill_dir: Option<PathBuf>,
+    },
+}
+
+impl ExecPolicy {
+    /// Stream in `tile_rows`-high tiles with the default queue depth.
+    pub fn streamed(tile_rows: usize) -> Self {
+        ExecPolicy::Streamed(StreamConfig::tiled(tile_rows))
+    }
+
+    /// Residency with a RAM budget and disk spill (one source read per
+    /// tile at any budget, including 0).
+    pub fn resident(budget: u64) -> Self {
+        ExecPolicy::Resident { budget, spill: true, tile_rows: None, spill_dir: None }
+    }
+
+    /// RAM-only residency: the budget-gated cached-panel mode the old
+    /// `*_budgeted` entry points implemented (no arena; evicted tiles are
+    /// recomputed, a zero budget reproduces plain re-streaming exactly).
+    pub fn ram_cached(budget: u64) -> Self {
+        ExecPolicy::Resident { budget, spill: false, tile_rows: None, spill_dir: None }
+    }
+
+    /// Pin the tile height of a [`Resident`](ExecPolicy::Resident) policy
+    /// (no-op for the other variants — use [`ExecPolicy::streamed`] to
+    /// pick a streamed tile height).
+    pub fn with_tile_rows(mut self, t: usize) -> Self {
+        if let ExecPolicy::Resident { tile_rows, .. } = &mut self {
+            *tile_rows = Some(t.max(1));
+        }
+        self
+    }
+
+    /// Point a spilling [`Resident`](ExecPolicy::Resident) policy at a
+    /// directory (no-op for the other variants and for `spill: false`).
+    pub fn with_spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        if let ExecPolicy::Resident { spill: true, spill_dir, .. } = &mut self {
+            *spill_dir = Some(dir.into());
+        }
+        self
+    }
+
+    /// The pipeline configuration this policy runs with.
+    pub(crate) fn stream_config(&self) -> StreamConfig {
+        match self {
+            ExecPolicy::Materialized => StreamConfig::whole(),
+            ExecPolicy::Streamed(cfg) => *cfg,
+            ExecPolicy::Resident { tile_rows, .. } => {
+                StreamConfig::tiled(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS))
+            }
+        }
+    }
+
+    /// The residency layer this policy asks for (`None` for the
+    /// non-resident variants). The grid height always equals
+    /// [`ExecPolicy::stream_config`]'s tile height, so pipeline requests
+    /// align with cached tiles.
+    pub(crate) fn residency_config(&self) -> Option<ResidencyConfig> {
+        match self {
+            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir } => {
+                let mut rc = if *spill {
+                    ResidencyConfig::new(*budget)
+                } else {
+                    ResidencyConfig::ram_only(*budget)
+                }
+                .with_tile_rows(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS));
+                if *spill {
+                    if let Some(dir) = spill_dir {
+                        rc = rc.with_spill_dir(dir.clone());
+                    }
+                }
+                Some(rc)
+            }
+            _ => None,
+        }
+    }
+
+    /// The RAM cache budget this policy grants (0 for non-resident
+    /// policies) — the planner's capped cache term.
+    pub(crate) fn cache_budget(&self) -> u64 {
+        match self {
+            ExecPolicy::Resident { budget, .. } => *budget,
+            _ => 0,
+        }
+    }
+
+    /// The tile height the planner's peak-bytes model should charge
+    /// (`None` = the materialized path).
+    pub(crate) fn planned_tile_rows(&self, n: usize) -> Option<usize> {
+        match self {
+            ExecPolicy::Materialized => None,
+            ExecPolicy::Streamed(cfg) if cfg.is_whole(n) => None,
+            ExecPolicy::Streamed(cfg) => Some(cfg.effective_tile_rows(n)),
+            ExecPolicy::Resident { tile_rows, .. } => {
+                Some(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS).clamp(1, n.max(1)))
+            }
+        }
+    }
+}
+
+impl Default for ExecPolicy {
+    fn default() -> Self {
+        ExecPolicy::Materialized
+    }
+}
+
+/// What a run cost — the policy-independent half of every
+/// [`RunReport`], and the block service responses embed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunMeta {
+    /// Source entries observed during the run (`None` when the source has
+    /// no entry counter — e.g. the implicit ops over a bare
+    /// [`TileSource`](crate::stream::TileSource), or CUR's in-memory
+    /// matrix, which reports only its `entries_for_u`).
+    pub entries: Option<u64>,
+    /// Wall-clock seconds inside the `exec` entry point.
+    pub compute_secs: f64,
+    /// Hit/miss/spill counters when the run went through the tile
+    /// residency layer (`None` otherwise, including when a
+    /// [`Resident`](ExecPolicy::Resident) policy had to fall back —
+    /// projection sketches and the prototype model stream the full `K`,
+    /// which is not a reloadable working set).
+    pub residency: Option<ResidencyStats>,
+    /// Planner-predicted peak working-set bytes under this policy
+    /// (`None` where no prediction model exists, e.g. rectangular CUR).
+    pub predicted_peak_bytes: Option<u64>,
+    /// Measured peak extra allocation, when the benchkit counting
+    /// allocator is installed as the global allocator (`None` otherwise).
+    /// Process-global: only meaningful for single-threaded runs.
+    pub actual_peak_bytes: Option<u64>,
+}
+
+/// The uniform return of every `exec` entry point: the algorithm's result
+/// plus the [`RunMeta`] accounting.
+#[derive(Debug, Clone)]
+pub struct RunReport<T> {
+    pub result: T,
+    pub meta: RunMeta,
+}
+
+impl<T> RunReport<T> {
+    /// Keep the accounting, transform the result.
+    pub fn map<U>(self, f: impl FnOnce(T) -> U) -> RunReport<U> {
+        RunReport { result: f(self.result), meta: self.meta }
+    }
+
+    /// Drop the accounting.
+    pub fn into_result(self) -> T {
+        self.result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_resolution_round_trips() {
+        assert_eq!(ExecPolicy::Materialized.stream_config(), StreamConfig::whole());
+        assert!(ExecPolicy::Materialized.residency_config().is_none());
+
+        let st = ExecPolicy::streamed(64);
+        assert_eq!(st.stream_config(), StreamConfig::tiled(64));
+        assert!(st.residency_config().is_none());
+        assert_eq!(st.planned_tile_rows(1000), Some(64));
+        assert_eq!(ExecPolicy::streamed(2000).planned_tile_rows(1000), None);
+
+        let r = ExecPolicy::resident(1 << 20).with_tile_rows(32);
+        let rc = r.residency_config().expect("resident policy must configure residency");
+        assert_eq!(rc.ram_budget, 1 << 20);
+        assert_eq!(rc.tile_rows, 32);
+        assert!(rc.spill);
+        assert_eq!(r.stream_config(), StreamConfig::tiled(32));
+        assert_eq!(r.cache_budget(), 1 << 20);
+
+        let ram = ExecPolicy::ram_cached(0);
+        let rc = ram.residency_config().unwrap();
+        assert!(!rc.spill);
+        assert_eq!(rc.tile_rows, DEFAULT_RESIDENT_TILE_ROWS);
+
+        // spill_dir must not silently enable spill on a ram-only policy
+        let ram = ExecPolicy::ram_cached(0).with_spill_dir("/tmp");
+        assert!(!ram.residency_config().unwrap().spill);
+    }
+}

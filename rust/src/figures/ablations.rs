@@ -10,6 +10,7 @@ use crate::cli::Args;
 use crate::coordinator::engine::rbf_cross_cpu;
 use crate::coordinator::oracle::DenseOracle;
 use crate::data::{make_blobs, sigma};
+use crate::exec::{self, ExecPolicy};
 use crate::linalg::Matrix;
 use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig};
@@ -44,7 +45,7 @@ fn ablate_p_in_s(ctx: &Ctx, args: &Args) {
                     force_p_in_s: force,
                     leverage_basis: spsd::LeverageBasis::Gram,
                 };
-                let a = spsd::fast(&o, &p, cfg, &mut rng);
+                let a = exec::fast(&o, &p, cfg, &ExecPolicy::Materialized, &mut rng).result;
                 err += kmat.sub(&a.materialize()).fro_norm_sq() / kf;
             }
             err /= ctx.reps.max(5) as f64;
@@ -78,7 +79,7 @@ fn ablate_leverage_scaling(ctx: &Ctx, args: &Args) {
                     force_p_in_s: true,
                     leverage_basis: spsd::LeverageBasis::Gram,
                 };
-                let a = spsd::fast(&o, &p, cfg, &mut rng);
+                let a = exec::fast(&o, &p, cfg, &ExecPolicy::Materialized, &mut rng).result;
                 let e = kmat.sub(&a.materialize()).fro_norm_sq() / kf;
                 mean += e;
                 worst = worst.max(e);

@@ -6,6 +6,7 @@ use super::Ctx;
 use crate::cli::Args;
 use crate::cur::{self, FastCurConfig};
 use crate::data::image;
+use crate::exec::{self, ExecPolicy};
 use crate::util::Rng;
 
 pub fn fig2(ctx: &Ctx, args: &Args) {
@@ -43,7 +44,7 @@ pub fn fig2(ctx: &Ctx, args: &Args) {
     let mut last_fast = f64::INFINITY;
     for f in [2usize, 4] {
         let cfg = FastCurConfig::uniform(f * r, f * c);
-        let fast = cur::cur_fast(&a, &col_idx, &row_idx, cfg, &mut rng);
+        let fast = exec::cur_fast(&a, &col_idx, &row_idx, cfg, &ExecPolicy::Materialized, &mut rng).result;
         last_fast = emit(&format!("fast_s{f}x"), &fast, f * r, f * c);
     }
     if args.flag("pgm") {

@@ -8,6 +8,7 @@ use super::Ctx;
 use crate::cli::Args;
 use crate::coordinator::{ApproxRequest, ApproxService, MethodSpec, ServiceConfig};
 use crate::data::{self, sigma};
+use crate::exec::ExecPolicy;
 use crate::sketch::SketchKind;
 use crate::util::Stopwatch;
 use std::sync::{mpsc, Arc};
@@ -25,10 +26,22 @@ pub fn run(ctx: &Ctx, args: &Args) {
     ));
     let workers = args.get_usize("workers", 4);
     let capacity = args.get_usize("capacity", 16);
-    let svc = ApproxService::new(Arc::clone(&oracle), ServiceConfig { workers, queue_capacity: capacity, spill_dir: None });
+    // Optional service-level memory cap (bytes): over-cap requests are
+    // shed with an error reply instead of risking the box.
+    let memory_cap = match args.get_u64("memory-cap", 0) {
+        0 => None,
+        cap => Some(cap),
+    };
+    let svc = ApproxService::new(
+        Arc::clone(&oracle),
+        ServiceConfig { workers, queue_capacity: capacity, spill_dir: None, memory_cap },
+    );
 
     let c = (n / 100).max(10);
     let requests = args.get_usize("requests", 48);
+    // Mixed execution policies: the service default (materialized) and
+    // the streamed pipeline — same unified exec surface either way.
+    let tile = args.get_usize("tile", 0);
     println!("# e2e: dataset={} n={n} c={c} workers={workers} capacity={capacity}", spec.name);
     let (tx, rx) = mpsc::channel();
     let sw = Stopwatch::start();
@@ -38,16 +51,9 @@ pub fn run(ctx: &Ctx, args: &Args) {
             1 => MethodSpec::Fast { s: 4 * c, kind: SketchKind::Uniform },
             _ => MethodSpec::Fast { s: 8 * c, kind: SketchKind::Uniform },
         };
+        let policy = (tile > 0).then(|| ExecPolicy::streamed(tile));
         svc.submit(
-            ApproxRequest {
-                id: i as u64,
-                method,
-                c,
-                k: 5,
-                seed: ctx.seed + i as u64,
-                tile_rows: None,
-                residency_budget: None,
-            },
+            ApproxRequest { id: i as u64, method, c, k: 5, seed: ctx.seed + i as u64, policy },
             tx.clone(),
         );
     }
@@ -55,19 +61,32 @@ pub fn run(ctx: &Ctx, args: &Args) {
     let wall = sw.secs();
     drop(tx);
     let resps: Vec<_> = rx.iter().collect();
-    assert_eq!(resps.len(), requests, "all requests must complete");
+    assert_eq!(resps.len(), requests, "all requests must be answered");
 
-    let mut csv = ctx.csv("e2e.csv", "id,method,entries,compute_secs,total_secs");
+    let mut csv = ctx.csv("e2e.csv", "id,method,entries,compute_secs,total_secs,predicted_peak_bytes");
     for r in &resps {
+        let (entries, compute, predicted) = match &r.meta {
+            Some(m) => (
+                m.entries.unwrap_or(0),
+                m.compute_secs,
+                m.predicted_peak_bytes.unwrap_or(0),
+            ),
+            None => (0, 0.0, 0),
+        };
         csv.row(&format!(
-            "{},{},{},{:.4},{:.4}",
-            r.id, r.method, r.entries, r.compute_secs, r.total_secs
+            "{},{},{},{:.4},{:.4},{}",
+            r.id, r.method, entries, compute, r.total_secs, predicted
         ));
     }
     csv.finish();
 
     let m = svc.metrics();
-    println!("# completed={} failed={}", m.completed.get(), m.failed.get());
+    println!(
+        "# completed={} failed={} shed={}",
+        m.completed.get(),
+        m.failed.get(),
+        m.rejected.get()
+    );
     println!("# latency: {}", m.latency.summary());
     println!("# queue-wait: {}", m.queue_wait.summary());
     println!("# throughput: {:.2} req/s ({} requests in {:.2}s)", requests as f64 / wall, requests, wall);

@@ -10,10 +10,12 @@ use crate::cli::Args;
 use crate::coordinator::oracle::KernelOracle;
 use crate::cur;
 use crate::data::TABLE6;
+use crate::exec::{self, ExecPolicy};
 use crate::spsd::{self, FastConfig};
 use crate::util::Rng;
 
 pub fn run(ctx: &Ctx, args: &Args, adaptive_c: bool) {
+    let pol = ExecPolicy::Materialized;
     let fig = if adaptive_c { "fig4" } else { "fig3" };
     let etas = [0.9, 0.99];
     let mut csv = ctx.csv(
@@ -47,8 +49,8 @@ pub fn run(ctx: &Ctx, args: &Args, adaptive_c: bool) {
                 };
                 // baselines
                 for (name, approx) in [
-                    ("nystrom", spsd::nystrom(oracle.as_ref(), &p)),
-                    ("prototype", spsd::prototype(oracle.as_ref(), &p)),
+                    ("nystrom", exec::nystrom(oracle.as_ref(), &p, &pol).result),
+                    ("prototype", exec::prototype(oracle.as_ref(), &p, &pol).result),
                 ] {
                     let err = kfull.sub(&approx.materialize()).fro_norm_sq() / kf_sq;
                     csv.row(&format!(
@@ -65,7 +67,7 @@ pub fn run(ctx: &Ctx, args: &Args, adaptive_c: bool) {
                     let s = (f * c).min(n);
                     for cfg in [FastConfig::uniform(s), FastConfig::leverage(s)] {
                         oracle.reset_entries();
-                        let approx = spsd::fast(oracle.as_ref(), &p, cfg, &mut rng);
+                        let approx = exec::fast(oracle.as_ref(), &p, cfg, &pol, &mut rng).result;
                         let err = kfull.sub(&approx.materialize()).fro_norm_sq() / kf_sq;
                         csv.row(&format!(
                             "{},{eta},{n},{c},{s},{:.4},{},{err:.6e},{},{:.4}",

@@ -7,12 +7,14 @@ use crate::apps::{knn_classify, kpca, metrics::error_rate};
 use crate::cli::Args;
 use crate::coordinator::RbfOracle;
 use crate::data::{self, sigma, TABLE7};
+use crate::exec::{self, ExecPolicy};
 use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig};
 use crate::util::{Rng, Stopwatch};
 use std::sync::Arc;
 
 pub fn run(ctx: &Ctx, args: &Args, k: usize) {
+    let pol = ExecPolicy::Materialized;
     let fig = if k == 3 { "fig7_8" } else { "fig9_10" };
     let datasets = ["PenDigit", "USPS", "Mushrooms", "DNA"];
     let only = args.get("dataset").map(|s| s.to_lowercase());
@@ -53,12 +55,12 @@ pub fn run(ctx: &Ctx, args: &Args, k: usize) {
                     csv.row(&format!("{name},{n1},{k},{c},{method},{s},{err:.4},{secs:.4}"));
                 };
                 let sw = Stopwatch::start();
-                let a = spsd::nystrom(oracle.as_ref(), &p);
+                let a = exec::nystrom(oracle.as_ref(), &p, &pol).result;
                 eval("nystrom", c, a, sw.secs());
                 for f in [4usize, 8] {
                     let s = (f * c).min(n1);
                     let sw = Stopwatch::start();
-                    let a = spsd::fast(
+                    let a = exec::fast(
                         oracle.as_ref(),
                         &p,
                         FastConfig {
@@ -67,12 +69,14 @@ pub fn run(ctx: &Ctx, args: &Args, k: usize) {
                             force_p_in_s: true,
                             leverage_basis: spsd::LeverageBasis::Gram,
                         },
+                        &pol,
                         &mut rng,
-                    );
+                    )
+                    .result;
                     eval(&format!("fast_s{f}c"), s, a, sw.secs());
                 }
                 let sw = Stopwatch::start();
-                let a = spsd::prototype(oracle.as_ref(), &p);
+                let a = exec::prototype(oracle.as_ref(), &p, &pol).result;
                 eval("prototype", n1, a, sw.secs());
             }
         }

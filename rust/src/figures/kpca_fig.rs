@@ -6,11 +6,13 @@ use super::Ctx;
 use crate::apps::kpca;
 use crate::cli::Args;
 use crate::coordinator::oracle::KernelOracle;
+use crate::exec::{self, ExecPolicy};
 use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig};
 use crate::util::{Rng, Stopwatch};
 
 pub fn run(ctx: &Ctx, args: &Args) {
+    let pol = ExecPolicy::Materialized;
     let k = args.get_usize("k", 3);
     let datasets = ["PenDigit", "USPS", "Mushrooms", "DNA"];
     let only = args.get("dataset").map(|s| s.to_lowercase());
@@ -44,7 +46,7 @@ pub fn run(ctx: &Ctx, args: &Args) {
                 {
                     oracle.reset_entries();
                     let sw = Stopwatch::start();
-                    let a = spsd::nystrom(oracle.as_ref(), &p);
+                    let a = exec::nystrom(oracle.as_ref(), &p, &pol).result;
                     let m = kpca::kpca_from_approx(&a, k);
                     runs.push((
                         "nystrom".into(),
@@ -58,7 +60,7 @@ pub fn run(ctx: &Ctx, args: &Args) {
                     let s = (f * c).min(n);
                     oracle.reset_entries();
                     let sw = Stopwatch::start();
-                    let a = spsd::fast(
+                    let a = exec::fast(
                         oracle.as_ref(),
                         &p,
                         FastConfig {
@@ -67,8 +69,10 @@ pub fn run(ctx: &Ctx, args: &Args) {
                             force_p_in_s: true,
                             leverage_basis: spsd::LeverageBasis::Gram,
                         },
+                        &pol,
                         &mut rng,
-                    );
+                    )
+                    .result;
                     let m = kpca::kpca_from_approx(&a, k);
                     runs.push((
                         format!("fast_s{f}c"),
@@ -81,7 +85,7 @@ pub fn run(ctx: &Ctx, args: &Args) {
                 {
                     oracle.reset_entries();
                     let sw = Stopwatch::start();
-                    let a = spsd::prototype(oracle.as_ref(), &p);
+                    let a = exec::prototype(oracle.as_ref(), &p, &pol).result;
                     let m = kpca::kpca_from_approx(&a, k);
                     runs.push((
                         "prototype".into(),

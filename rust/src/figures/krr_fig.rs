@@ -8,12 +8,14 @@ use crate::cli::Args;
 use crate::coordinator::oracle::KernelOracle;
 use crate::coordinator::RbfOracle;
 use crate::data::{self, sigma};
+use crate::exec::{self, ExecPolicy};
 use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig};
 use crate::util::{Rng, Stopwatch};
 use std::sync::Arc;
 
 pub fn run(ctx: &Ctx, args: &Args) {
+    let pol = ExecPolicy::Materialized;
     let spec = data::find_spec(args.get_str("dataset", "Cpusmall")).expect("unknown dataset");
     let ds = spec.generate(ctx.scale, ctx.seed);
     let mut rng0 = Rng::new(ctx.seed ^ 0x44AA);
@@ -59,12 +61,12 @@ pub fn run(ctx: &Ctx, args: &Args) {
                 ));
             };
             let sw = Stopwatch::start();
-            let ny = spsd::nystrom(oracle.as_ref(), &p);
+            let ny = exec::nystrom(oracle.as_ref(), &p, &pol).result;
             eval("nystrom", c, &ny, sw.secs());
             for f in [4usize, 8] {
                 let s = (f * c).min(n1);
                 let sw = Stopwatch::start();
-                let fa = spsd::fast(
+                let fa = exec::fast(
                     oracle.as_ref(),
                     &p,
                     FastConfig {
@@ -73,12 +75,14 @@ pub fn run(ctx: &Ctx, args: &Args) {
                         force_p_in_s: true,
                         leverage_basis: spsd::LeverageBasis::Gram,
                     },
+                    &pol,
                     &mut rng,
-                );
+                )
+                .result;
                 eval(&format!("fast_s{f}c"), s, &fa, sw.secs());
             }
             let sw = Stopwatch::start();
-            let pr = spsd::prototype(oracle.as_ref(), &p);
+            let pr = exec::prototype(oracle.as_ref(), &p, &pol).result;
             eval("prototype", n1, &pr, sw.secs());
         }
     }

@@ -5,11 +5,13 @@ use super::Ctx;
 use crate::apps::{metrics::nmi, spectral};
 use crate::cli::Args;
 use crate::data;
+use crate::exec::{self, ExecPolicy};
 use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig};
 use crate::util::{Rng, Stopwatch};
 
 pub fn run(ctx: &Ctx, args: &Args) {
+    let pol = ExecPolicy::Materialized;
     let datasets = ["PenDigit", "USPS", "Mushrooms", "DNA"];
     let only = args.get("dataset").map(|s| s.to_lowercase());
     let mut csv = ctx.csv("fig11_12.csv", "dataset,n,k,c,method,s,nmi,secs");
@@ -40,12 +42,12 @@ pub fn run(ctx: &Ctx, args: &Args) {
                         ));
                     };
                 let sw = Stopwatch::start();
-                let a = spsd::nystrom(oracle.as_ref(), &p);
+                let a = exec::nystrom(oracle.as_ref(), &p, &pol).result;
                 eval("nystrom", c, &a, sw.secs(), &mut rng);
                 for f in [4usize, 8] {
                     let s = (f * c).min(n);
                     let sw = Stopwatch::start();
-                    let a = spsd::fast(
+                    let a = exec::fast(
                         oracle.as_ref(),
                         &p,
                         FastConfig {
@@ -54,12 +56,14 @@ pub fn run(ctx: &Ctx, args: &Args) {
                             force_p_in_s: true,
                             leverage_basis: spsd::LeverageBasis::Gram,
                         },
+                        &pol,
                         &mut rng,
-                    );
+                    )
+                    .result;
                     eval(&format!("fast_s{f}c"), s, &a, sw.secs(), &mut rng);
                 }
                 let sw = Stopwatch::start();
-                let a = spsd::prototype(oracle.as_ref(), &p);
+                let a = exec::prototype(oracle.as_ref(), &p, &pol).result;
                 eval("prototype", n, &a, sw.secs(), &mut rng);
             }
         }

@@ -7,6 +7,7 @@ use crate::cli::Args;
 use crate::coordinator::oracle::{DenseOracle, KernelOracle};
 use crate::cur::{self, FastCurConfig};
 use crate::data;
+use crate::exec::{self, ExecPolicy};
 use crate::sketch::SketchKind;
 use crate::spsd::{self, FastConfig};
 use crate::util::{Rng, Stopwatch};
@@ -15,6 +16,7 @@ use crate::util::{Rng, Stopwatch};
 /// measured version of {Nyström O(c³), prototype O(nnz(K)c + nc²),
 /// fast O(nc² + s²c)} and {nc, n², nc + (s−c)²} entries.
 pub fn table3(ctx: &Ctx, args: &Args) {
+    let pol = ExecPolicy::Materialized;
     let ns = args.get_usize_list("ns", &[512, 1024, 2048]);
     let mut csv = ctx.csv("table3.csv", "n,c,s,method,u_secs,entries,rel_err");
     for &n in &ns {
@@ -35,7 +37,7 @@ pub fn table3(ctx: &Ctx, args: &Args) {
             let mut rng = Rng::new(ctx.seed + rep as u64);
             let p = spsd::uniform_p(n, c, &mut rng);
             oracle.reset_entries();
-            let ny = spsd::nystrom(&oracle, &p);
+            let ny = exec::nystrom(&oracle, &p, &pol).result;
             csv.row(&format!(
                 "{n},{c},{c},nystrom,{:.5},{},{:.4e}",
                 ny.build_secs,
@@ -43,7 +45,7 @@ pub fn table3(ctx: &Ctx, args: &Args) {
                 kfull.sub(&ny.materialize()).fro_norm_sq() / kf
             ));
             oracle.reset_entries();
-            let pr = spsd::prototype(&oracle, &p);
+            let pr = exec::prototype(&oracle, &p, &pol).result;
             csv.row(&format!(
                 "{n},{c},{n},prototype,{:.5},{},{:.4e}",
                 pr.build_secs,
@@ -51,7 +53,7 @@ pub fn table3(ctx: &Ctx, args: &Args) {
                 kfull.sub(&pr.materialize()).fro_norm_sq() / kf
             ));
             oracle.reset_entries();
-            let fa = spsd::fast(&oracle, &p, FastConfig::uniform(s), &mut rng);
+            let fa = exec::fast(&oracle, &p, FastConfig::uniform(s), &pol, &mut rng).result;
             csv.row(&format!(
                 "{n},{c},{s},fast,{:.5},{},{:.4e}",
                 fa.build_secs,
@@ -99,7 +101,7 @@ pub fn table4(ctx: &Ctx, args: &Args) {
                 force_p_in_s: kind.is_column_selection(),
                 leverage_basis: spsd::LeverageBasis::Gram,
             };
-            let fa = spsd::fast(&oracle, &p, cfg, &mut rng);
+            let fa = exec::fast(&oracle, &p, cfg, &ExecPolicy::Materialized, &mut rng).result;
             csv.row(&format!(
                 "{n},{c},{s},{},{:.5},{},{:.4e}",
                 kind.name(),
@@ -144,7 +146,7 @@ pub fn table5(ctx: &Ctx, args: &Args) {
                 FastCurConfig::uniform(f * r, f * c),
                 FastCurConfig::leverage(f * r, f * c),
             ] {
-                let fast = cur::cur_fast(&a, &cols, &rows, cfg, &mut rng);
+                let fast = exec::cur_fast(&a, &cols, &rows, cfg, &ExecPolicy::Materialized, &mut rng).result;
                 csv.row(&format!(
                     "{m},{n},{c},{r},{},{},{},{:.5},{},{:.4e}",
                     fast.method,

@@ -11,6 +11,12 @@
 //!   a worker pool, and assembles sketches without materializing `K`.
 //! - [`spsd`] / [`cur`] implement the paper's models (Nyström, prototype,
 //!   fast; CUR with optimal and fast `U`).
+//! - [`exec`] is the execution-policy surface: one public entry per
+//!   algorithm family, each taking an [`ExecPolicy`]
+//!   (materialized / streamed / resident) and returning a [`RunReport`]
+//!   with uniform accounting. The per-policy `_streamed`/`_budgeted`/
+//!   `_resident` functions in [`spsd`], [`cur`] and `stream::implicit`
+//!   are deprecated shims over it.
 //! - [`stream`] is the tiled producer/consumer pipeline between the oracle
 //!   and the models: row-tiles of `K` flow through fused consumers with a
 //!   bounded double-buffered queue, so builds run with peak extra memory
@@ -31,6 +37,7 @@ pub mod figures;
 pub mod cli;
 pub mod coordinator;
 pub mod cur;
+pub mod exec;
 pub mod data;
 pub mod linalg;
 pub mod pool;
@@ -40,3 +47,5 @@ pub mod spsd;
 pub mod stream;
 pub mod testkit;
 pub mod util;
+
+pub use exec::{ExecPolicy, RunMeta, RunReport};

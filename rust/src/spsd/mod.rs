@@ -1,14 +1,23 @@
 //! SPSD matrix approximation models (paper §3.2 and §4):
 //!
-//! - [`nystrom`] — `U = W† = (P^T K P)†` (eq. 3),
-//! - [`prototype`] — `U* = C† K (C†)^T` (eq. 2, requires all of K),
-//! - [`fast`] — `U^fast = (S^T C)† (S^T K S) (C^T S)†` (eq. 5, Algorithm 1).
+//! - Nyström — `U = W† = (P^T K P)†` (eq. 3),
+//! - prototype — `U* = C† K (C†)^T` (eq. 2, requires all of K),
+//! - fast — `U^fast = (S^T C)† (S^T K S) (C^T S)†` (eq. 5, Algorithm 1).
 //!
 //! The fast model with a column-selection `S` and the `P ⊂ S` trick
 //! (Corollary 5) assembles `S^T K S` from the rows of `C` it already has
 //! plus one `(s-c) x (s-c)` oracle block — exactly the paper's Table 3
 //! "#entries = nc + (s-c)^2" accounting, which the tests verify through the
 //! oracle's entry counter.
+//!
+//! This module owns the model *math* (the algorithm configs and the
+//! unified builders); **how** a build traverses the kernel — materialized,
+//! streamed, or through the tile residency layer — is an
+//! [`ExecPolicy`](crate::exec::ExecPolicy), and the public entry points
+//! live in [`exec`](crate::exec) ([`exec::nystrom`](crate::exec::nystrom),
+//! [`exec::prototype`](crate::exec::prototype),
+//! [`exec::fast`](crate::exec::fast)). The per-policy functions that used
+//! to live here remain as deprecated shims.
 
 pub mod adversarial;
 pub mod shift;
@@ -117,52 +126,38 @@ fn collect_via(
     }
 }
 
-/// The Nyström method: `U = (P^T C)† = W†`. Observes only the `n x c`
-/// column block.
-pub fn nystrom(oracle: &dyn KernelOracle, p_idx: &[usize]) -> SpsdApprox {
-    nystrom_streamed(oracle, p_idx, StreamConfig::whole())
-}
-
-/// Nyström through the tile pipeline: `C` is collected and `W = C[P, :]`
-/// gathered in one streamed pass. Bit-identical to [`nystrom`] for every
-/// tile size (pure gathers).
-pub fn nystrom_streamed(
+/// The `C`-panel pass of a build: either straight off the oracle (with
+/// the whole-tile materialized shortcut) or through a [`ResidentSource`]
+/// so later passes reload tiles instead of re-paying the oracle.
+fn collect_c(
     oracle: &dyn KernelOracle,
     p_idx: &[usize],
     stream_cfg: StreamConfig,
-) -> SpsdApprox {
-    let sw = Stopwatch::start();
-    let before = oracle.entries_observed();
-    let (c, w) = build_c_panel(oracle, p_idx, stream_cfg, Some(p_idx));
-    let w = w.expect("gather requested");
-    let mut u = pinv(&w);
-    u.symmetrize();
-    SpsdApprox {
-        c,
-        u,
-        p_indices: p_idx.to_vec(),
-        method: "nystrom".into(),
-        entries_observed: oracle.entries_observed() - before,
-        build_secs: sw.secs(),
+    resident: Option<&ResidentSource<'_>>,
+    gather: Option<&[usize]>,
+) -> (Matrix, Option<Matrix>) {
+    match resident {
+        Some(r) => collect_via(r, stream_cfg, gather),
+        None => build_c_panel(oracle, p_idx, stream_cfg, gather),
     }
 }
 
-/// [`nystrom_streamed`] through the tile residency layer: the `C` pass
-/// writes every tile through the LRU/spill arena, so later consumers of
-/// the same panel (implicit ops, extra sketch folds) reload instead of
-/// re-paying the oracle. Results are bit-identical to [`nystrom`];
-/// returns the residency counters alongside the approximation.
-pub fn nystrom_resident(
+/// Unified Nyström builder: `U = (P^T C)† = W†`, observing only the
+/// `n x c` column block. `C` is collected and `W = C[P, :]` gathered in
+/// one pass — materialized, streamed, or resident, the results are
+/// bit-identical (pure gathers). The non-deprecated entry point is
+/// [`exec::nystrom`](crate::exec::nystrom).
+pub(crate) fn run_nystrom(
     oracle: &dyn KernelOracle,
     p_idx: &[usize],
     stream_cfg: StreamConfig,
-    residency: &ResidencyConfig,
-) -> (SpsdApprox, ResidencyStats) {
+    residency: Option<&ResidencyConfig>,
+) -> (SpsdApprox, Option<ResidencyStats>) {
     let sw = Stopwatch::start();
     let before = oracle.entries_observed();
     let src = OracleColumnsSource::new(oracle, p_idx);
-    let resident = ResidentSource::new(&src, residency);
-    let (c, w) = collect_via(&resident, stream_cfg, Some(p_idx));
+    let resident = residency.map(|rc| ResidentSource::new(&src, rc));
+    let (c, w) = collect_c(oracle, p_idx, stream_cfg, resident.as_ref(), Some(p_idx));
     let w = w.expect("gather requested");
     let mut u = pinv(&w);
     u.symmetrize();
@@ -174,21 +169,19 @@ pub fn nystrom_resident(
         entries_observed: oracle.entries_observed() - before,
         build_secs: sw.secs(),
     };
-    (approx, resident.stats())
+    let stats = resident.map(|r| r.stats());
+    (approx, stats)
 }
 
-/// The prototype model: `U* = C† K (C†)^T`. Observes all n^2 entries.
-pub fn prototype(oracle: &dyn KernelOracle, p_idx: &[usize]) -> SpsdApprox {
-    prototype_streamed(oracle, p_idx, StreamConfig::whole())
-}
-
-/// Prototype model through the tile pipeline: the `n x n` kernel flows
-/// through `U = Σ_t C†[:, t] (K_t (C†)^T)` one row-tile at a time, so peak
-/// extra memory is `O(tile_rows · n + c²)` instead of `O(n²)` — still
-/// observing all `n²` entries (that is the model's defining cost), just
-/// never storing them. Matches [`prototype`] up to reduction reordering
-/// (≤1e-12 relative).
-pub fn prototype_streamed(
+/// Unified prototype builder: `U* = C† K (C†)^T`, observing all `n²`
+/// entries (the model's defining cost). With a whole-tile config this is
+/// the historical materialized path; tiled configs fold
+/// `U = Σ_t C†[:, t] (K_t (C†)^T)` one row-tile at a time — peak extra
+/// memory `O(tile_rows · n + c²)` instead of `O(n²)`, matching the
+/// materialized result up to reduction reordering (≤1e-12 relative).
+/// The non-deprecated entry point is
+/// [`exec::prototype`](crate::exec::prototype).
+pub(crate) fn run_prototype(
     oracle: &dyn KernelOracle,
     p_idx: &[usize],
     stream_cfg: StreamConfig,
@@ -283,41 +276,41 @@ impl FastConfig {
     }
 }
 
-/// The fast SPSD approximation model (Algorithm 1).
-pub fn fast(
-    oracle: &dyn KernelOracle,
-    p_idx: &[usize],
-    cfg: FastConfig,
-    rng: &mut Rng,
-) -> SpsdApprox {
-    fast_streamed(oracle, p_idx, cfg, StreamConfig::whole(), rng)
-}
-
-/// The fast model through the tile pipeline. For uniform selection one
-/// streamed pass over `K[:, P]` collects `C` and gathers `C[S, :]`
-/// (everything `S^T C` and `S^T K S` need besides the `(s-c)²` fresh
-/// oracle block), so peak extra memory beyond the `C` output is
+/// Unified fast-model builder (Algorithm 1) — the one body behind every
+/// execution policy; the non-deprecated entry point is
+/// [`exec::fast`](crate::exec::fast).
+///
+/// For uniform selection one pass over `K[:, P]` collects `C` and gathers
+/// `C[S, :]` (everything `S^T C` and `S^T K S` need besides the `(s-c)²`
+/// fresh oracle block), so peak extra memory beyond the `C` output is
 /// `O(tile_rows · c + s²)`. Leverage selection (default
-/// [`LeverageBasis::Gram`]) folds its `O(c²)` score state in the same
-/// streamed pass and then scores/draws/gathers in one in-memory sweep —
-/// same envelope as uniform; see [`LeverageBasis`] for the variants.
+/// [`LeverageBasis::Gram`]) folds its `O(c²)` score state while the tiles
+/// stream; without residency the same pass also collects `C` and the
+/// sampler then sweeps the resident panel, while **with** residency the
+/// build becomes a genuine two-pass plan over the source — pass 1 folds
+/// only the score state while tiles write through the LRU/spill arena,
+/// pass 2 reloads tiles (never the oracle) to collect `C`, score, draw
+/// and gather `C[S, :]` in one sweep, so the oracle is charged exactly
+/// one `n·c` at any RAM budget. The rng call sequence is identical either
+/// way and the sampler is tile-order invariant, so results are
+/// **bit-identical** across policies (asserted in `tests/exec_api.rs`).
 /// Projection sketches fold `S^T C` during the `C` pass and `S^T K S`
 /// over full-K row tiles — still observing `n²` entries (Table 4) but
-/// never storing them.
-///
-/// With a whole-tile config this *is* the materialized path ([`fast`]
-/// delegates here); selection-sketch results are bit-identical across tile
-/// sizes, projection sketches match up to reduction reordering.
-pub fn fast_streamed(
+/// never storing them; they have no reloadable working set, so `residency`
+/// must be `None` for them (the exec layer strips it).
+pub(crate) fn run_fast(
     oracle: &dyn KernelOracle,
     p_idx: &[usize],
     cfg: FastConfig,
     stream_cfg: StreamConfig,
+    residency: Option<&ResidencyConfig>,
     rng: &mut Rng,
-) -> SpsdApprox {
+) -> (SpsdApprox, Option<ResidencyStats>) {
     let sw = Stopwatch::start();
     let before = oracle.entries_observed();
     let n = oracle.n();
+    let src = OracleColumnsSource::new(oracle, p_idx);
+    let resident = residency.map(|rc| ResidentSource::new(&src, rc));
 
     let (c_mat, stc, sks) = match cfg.kind {
         SketchKind::Uniform => {
@@ -325,7 +318,8 @@ pub fn fast_streamed(
             // gathered in the same pass that builds C.
             let op = build_selection_sketch(None, p_idx, cfg, n, rng);
             let (indices, scales) = select_parts(&op);
-            let (c_mat, rows_s) = build_c_panel(oracle, p_idx, stream_cfg, Some(&indices));
+            let (c_mat, rows_s) =
+                collect_c(oracle, p_idx, stream_cfg, resident.as_ref(), Some(&indices));
             let rows_s = rows_s.expect("gather requested");
             let stc = scale_rows(&rows_s, &scales);
             let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
@@ -336,7 +330,8 @@ pub fn fast_streamed(
                 // Reference path (the historical behavior): one pass builds
                 // C, then scores come from an SVD of the resident panel —
                 // `O(n·c)` scratch the streamed estimators avoid.
-                let (c_mat, _) = build_c_panel(oracle, p_idx, stream_cfg, None);
+                let (c_mat, _) =
+                    collect_c(oracle, p_idx, stream_cfg, resident.as_ref(), None);
                 let op = build_selection_sketch(Some(&c_mat), p_idx, cfg, n, rng);
                 let (indices, scales) = select_parts(&op);
                 let rows_s = c_mat.select_rows(&indices);
@@ -345,17 +340,12 @@ pub fn fast_streamed(
                 (c_mat, stc, sks)
             }
             basis => {
-                // Streamed two-pass plan. Pass 1: the O(c²) leverage state
+                // Streamed score estimators: the O(c²) leverage state
                 // (row-ordered Gram, or the SRHT surrogate Ω^T C) folds
-                // while the C tiles stream — the score computation never
-                // needs the n x c panel at once, so beyond the C output the
-                // working set is O(tile_rows·c + c²). Pass 2: the sampler
-                // sweeps the panel in row order, scoring, drawing and
-                // gathering C[S, :] in one pass; here the panel is the
-                // build's own (resident) output, so the sweep costs no
-                // oracle entries.
+                // while the C tiles stream, so the score computation never
+                // needs the n x c panel at once.
+                let t = stream_cfg.effective_tile_rows(n);
                 let sk_op;
-                let mut collect = CollectConsumer::new(n, p_idx.len());
                 let mut fold = match basis {
                     LeverageBasis::Sketched { m } => {
                         sk_op = sketch::srht_sketch(n, m.max(p_idx.len()), rng);
@@ -363,9 +353,22 @@ pub fn fast_streamed(
                     }
                     _ => LeverageFold::exact(p_idx.len()),
                 };
-                let so = StreamingOracle::new(oracle, stream_cfg);
-                so.stream_columns(p_idx, &mut [&mut collect, &mut fold]);
-                let c_mat = collect.into_matrix();
+                // Pass 1. Without residency, collect C in the same pass;
+                // with residency, fold only — tiles write through the
+                // LRU/spill arena as a side effect, and pass 2 reloads
+                // them for free.
+                let collected = match resident.as_ref() {
+                    None => {
+                        let mut collect = CollectConsumer::new(n, p_idx.len());
+                        let so = StreamingOracle::new(oracle, stream_cfg);
+                        so.stream_columns(p_idx, &mut [&mut collect, &mut fold]);
+                        Some(collect.into_matrix())
+                    }
+                    Some(r) => {
+                        run_pipeline(r, t, stream_cfg.queue_depth, &mut [&mut fold]);
+                        None
+                    }
+                };
                 let est = fold.into_estimate();
 
                 let s_extra = cfg
@@ -375,7 +378,26 @@ pub fn fast_streamed(
                 let forced = if cfg.force_p_in_s { p_idx.to_vec() } else { Vec::new() };
                 let mut sampler =
                     LeverageSampler::new(&est, s_extra, scaled, forced, n, p_idx.len(), rng);
-                sampler.consume(0, &c_mat);
+                // Pass 2: score, draw and gather C[S, :] in one row-order
+                // sweep — over the in-memory panel, or over tiles reloaded
+                // from residency (zero new oracle entries either way).
+                let c_mat = match (resident.as_ref(), collected) {
+                    (None, Some(c_mat)) => {
+                        sampler.consume(0, &c_mat);
+                        c_mat
+                    }
+                    (Some(r), _) => {
+                        let mut collect = CollectConsumer::new(n, p_idx.len());
+                        run_pipeline(
+                            r,
+                            t,
+                            stream_cfg.queue_depth,
+                            &mut [&mut collect, &mut sampler],
+                        );
+                        collect.into_matrix()
+                    }
+                    (None, None) => unreachable!("pass 1 collects when not resident"),
+                };
                 let (mut indices, mut scales, mut rows_s, sampled) = sampler.into_parts();
                 if sampled == 0 {
                     // Degenerate draw (e.g. all-zero scores): one uniform
@@ -398,6 +420,11 @@ pub fn fast_streamed(
         _ => {
             // Projection sketches need every entry of K (Table 4 —
             // theoretical interest / benchmarking only).
+            assert!(
+                residency.is_none(),
+                "residency routing needs a column-selection sketch, not {}",
+                cfg.kind.name()
+            );
             let op = sketch::build(cfg.kind, n, cfg.s, None, rng);
             if stream_cfg.is_whole(n) {
                 let c_mat = oracle.columns(p_idx);
@@ -421,115 +448,6 @@ pub fn fast_streamed(
     let stc_pinv = pinv(&stc); // c x s
     // (S^T C)† (S^T K S) ((S^T C)†)^T is symmetric since S^T K S is.
     let u = gemm::symm_nt(&stc_pinv.matmul(&sks), &stc_pinv);
-    SpsdApprox {
-        c: c_mat,
-        u,
-        p_indices: p_idx.to_vec(),
-        method: format!("fast[{}]", cfg.kind.name()),
-        entries_observed: oracle.entries_observed() - before,
-        build_secs: sw.secs(),
-    }
-}
-
-/// The fast model routed through the tile residency layer (column-selection
-/// sketches only — projection sketches stream the full `K`, which is not a
-/// reloadable working set). Two things change versus [`fast_streamed`]:
-///
-/// - every `C` tile goes through a [`ResidentSource`] (LRU + disk spill),
-///   so re-reads never re-pay the oracle, and
-/// - the leverage family becomes a genuine **two-pass plan over the
-///   source**: pass 1 folds only the `O(c²)` score state while tiles write
-///   through to the arena; pass 2 reloads tiles — RAM or disk, never the
-///   oracle — to collect `C`, score, draw and gather `C[S, :]` in one
-///   sweep. The oracle is charged exactly one `n·c` at any RAM budget.
-///
-/// The rng call sequence is identical to [`fast_streamed`] and the sampler
-/// is tile-order invariant, so results are **bit-identical** to the
-/// non-resident build (asserted in `tests/residency.rs`).
-pub fn fast_streamed_resident(
-    oracle: &dyn KernelOracle,
-    p_idx: &[usize],
-    cfg: FastConfig,
-    stream_cfg: StreamConfig,
-    residency: &ResidencyConfig,
-    rng: &mut Rng,
-) -> (SpsdApprox, ResidencyStats) {
-    let sw = Stopwatch::start();
-    let before = oracle.entries_observed();
-    let n = oracle.n();
-    let src = OracleColumnsSource::new(oracle, p_idx);
-    let resident = ResidentSource::new(&src, residency);
-    let t = stream_cfg.effective_tile_rows(n);
-
-    let (c_mat, stc, sks) = match cfg.kind {
-        SketchKind::Uniform => {
-            let op = build_selection_sketch(None, p_idx, cfg, n, rng);
-            let (indices, scales) = select_parts(&op);
-            let (c_mat, rows_s) = collect_via(&resident, stream_cfg, Some(&indices));
-            let rows_s = rows_s.expect("gather requested");
-            let stc = scale_rows(&rows_s, &scales);
-            let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
-            (c_mat, stc, sks)
-        }
-        SketchKind::Leverage { scaled } => match cfg.leverage_basis {
-            LeverageBasis::ExactSvd => {
-                let (c_mat, _) = collect_via(&resident, stream_cfg, None);
-                let op = build_selection_sketch(Some(&c_mat), p_idx, cfg, n, rng);
-                let (indices, scales) = select_parts(&op);
-                let rows_s = c_mat.select_rows(&indices);
-                let stc = scale_rows(&rows_s, &scales);
-                let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
-                (c_mat, stc, sks)
-            }
-            basis => {
-                // Pass 1: fold only the O(c²) leverage state; tiles write
-                // through the residency layer as a side effect.
-                let sk_op;
-                let mut fold = match basis {
-                    LeverageBasis::Sketched { m } => {
-                        sk_op = sketch::srht_sketch(n, m.max(p_idx.len()), rng);
-                        LeverageFold::sketched(&sk_op, p_idx.len())
-                    }
-                    _ => LeverageFold::exact(p_idx.len()),
-                };
-                run_pipeline(&resident, t, stream_cfg.queue_depth, &mut [&mut fold]);
-                let est = fold.into_estimate();
-
-                // Pass 2: reload tiles from residency to collect C and run
-                // the score/draw/gather sweep — zero new oracle entries.
-                let s_extra = cfg
-                    .s
-                    .saturating_sub(if cfg.force_p_in_s { p_idx.len() } else { 0 })
-                    .max(1);
-                let forced = if cfg.force_p_in_s { p_idx.to_vec() } else { Vec::new() };
-                let mut collect = CollectConsumer::new(n, p_idx.len());
-                let mut sampler =
-                    LeverageSampler::new(&est, s_extra, scaled, forced, n, p_idx.len(), rng);
-                run_pipeline(&resident, t, stream_cfg.queue_depth, &mut [&mut collect, &mut sampler]);
-                let c_mat = collect.into_matrix();
-                let (mut indices, mut scales, mut rows_s, sampled) = sampler.into_parts();
-                if sampled == 0 {
-                    // same degenerate-draw fallback as fast_streamed
-                    let pick = rng.usize_below(n);
-                    if let Err(pos) = indices.binary_search(&pick) {
-                        indices.insert(pos, pick);
-                        scales.insert(pos, 1.0);
-                        rows_s = c_mat.select_rows(&indices);
-                    }
-                }
-                let stc = scale_rows(&rows_s, &scales);
-                let sks = assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
-                (c_mat, stc, sks)
-            }
-        },
-        other => panic!(
-            "residency routing needs a column-selection sketch, not {}",
-            other.name()
-        ),
-    };
-
-    let stc_pinv = pinv(&stc);
-    let u = gemm::symm_nt(&stc_pinv.matmul(&sks), &stc_pinv);
     let approx = SpsdApprox {
         c: c_mat,
         u,
@@ -538,7 +456,95 @@ pub fn fast_streamed_resident(
         entries_observed: oracle.entries_observed() - before,
         build_secs: sw.secs(),
     };
-    (approx, resident.stats())
+    let stats = resident.map(|r| r.stats());
+    (approx, stats)
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated per-policy shims. The one policy-carrying surface is
+// `exec`; these forward to the unified builders and will be removed.
+// ---------------------------------------------------------------------------
+
+/// The Nyström method on the materialized path.
+#[deprecated(note = "use `exec::nystrom` with `ExecPolicy::Materialized`")]
+pub fn nystrom(oracle: &dyn KernelOracle, p_idx: &[usize]) -> SpsdApprox {
+    run_nystrom(oracle, p_idx, StreamConfig::whole(), None).0
+}
+
+/// Nyström through the tile pipeline.
+#[deprecated(note = "use `exec::nystrom` with `ExecPolicy::Streamed`")]
+pub fn nystrom_streamed(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    stream_cfg: StreamConfig,
+) -> SpsdApprox {
+    run_nystrom(oracle, p_idx, stream_cfg, None).0
+}
+
+/// Nyström through the tile residency layer.
+#[deprecated(note = "use `exec::nystrom` with `ExecPolicy::Resident`")]
+pub fn nystrom_resident(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    stream_cfg: StreamConfig,
+    residency: &ResidencyConfig,
+) -> (SpsdApprox, ResidencyStats) {
+    let (approx, stats) = run_nystrom(oracle, p_idx, stream_cfg, Some(residency));
+    (approx, stats.expect("residency stats"))
+}
+
+/// The prototype model on the materialized path.
+#[deprecated(note = "use `exec::prototype` with `ExecPolicy::Materialized`")]
+pub fn prototype(oracle: &dyn KernelOracle, p_idx: &[usize]) -> SpsdApprox {
+    run_prototype(oracle, p_idx, StreamConfig::whole())
+}
+
+/// Prototype model through the tile pipeline.
+#[deprecated(note = "use `exec::prototype` with `ExecPolicy::Streamed`")]
+pub fn prototype_streamed(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    stream_cfg: StreamConfig,
+) -> SpsdApprox {
+    run_prototype(oracle, p_idx, stream_cfg)
+}
+
+/// The fast SPSD approximation model on the materialized path.
+#[deprecated(note = "use `exec::fast` with `ExecPolicy::Materialized`")]
+pub fn fast(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    cfg: FastConfig,
+    rng: &mut Rng,
+) -> SpsdApprox {
+    run_fast(oracle, p_idx, cfg, StreamConfig::whole(), None, rng).0
+}
+
+/// The fast model through the tile pipeline.
+#[deprecated(note = "use `exec::fast` with `ExecPolicy::Streamed`")]
+pub fn fast_streamed(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    cfg: FastConfig,
+    stream_cfg: StreamConfig,
+    rng: &mut Rng,
+) -> SpsdApprox {
+    run_fast(oracle, p_idx, cfg, stream_cfg, None, rng).0
+}
+
+/// The fast model through the tile residency layer (column-selection
+/// sketches only).
+#[deprecated(note = "use `exec::fast` with `ExecPolicy::Resident`")]
+pub fn fast_streamed_resident(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    cfg: FastConfig,
+    stream_cfg: StreamConfig,
+    residency: &ResidencyConfig,
+    rng: &mut Rng,
+) -> (SpsdApprox, ResidencyStats) {
+    let (approx, stats) = run_fast(oracle, p_idx, cfg, stream_cfg, Some(residency), rng);
+    (approx, stats.expect("residency stats"))
 }
 
 /// Clone out the index/scale arrays of a column-selection sketch.
@@ -673,6 +679,7 @@ pub fn optimal_objective(k: &Matrix, c: &Matrix) -> f64 {
 mod tests {
     use super::*;
     use crate::coordinator::oracle::DenseOracle;
+    use crate::exec::{self, ExecPolicy};
     use crate::testkit::gen;
 
     fn spsd_oracle(n: usize, rank: usize, seed: u64) -> DenseOracle {
@@ -680,15 +687,40 @@ mod tests {
         DenseOracle::new(gen::spsd(&mut rng, n, rank))
     }
 
+    // Materialized-policy helpers: the figures-style call shape.
+    fn nystrom_m(o: &dyn KernelOracle, p: &[usize]) -> SpsdApprox {
+        exec::nystrom(o, p, &ExecPolicy::Materialized).result
+    }
+
+    fn prototype_m(o: &dyn KernelOracle, p: &[usize]) -> SpsdApprox {
+        exec::prototype(o, p, &ExecPolicy::Materialized).result
+    }
+
+    fn fast_m(o: &dyn KernelOracle, p: &[usize], cfg: FastConfig, rng: &mut Rng) -> SpsdApprox {
+        exec::fast(o, p, cfg, &ExecPolicy::Materialized, rng).result
+    }
+
     #[test]
     fn nystrom_entries_and_shape() {
         let o = spsd_oracle(30, 30, 0);
         let mut rng = Rng::new(1);
         let p = uniform_p(30, 6, &mut rng);
-        let a = nystrom(&o, &p);
+        let a = nystrom_m(&o, &p);
         assert_eq!((a.c.rows(), a.c.cols()), (30, 6));
         assert_eq!((a.u.rows(), a.u.cols()), (6, 6));
         assert_eq!(a.entries_observed, 30 * 6);
+    }
+
+    #[test]
+    fn nystrom_report_carries_uniform_accounting() {
+        let o = spsd_oracle(30, 30, 0);
+        let mut rng = Rng::new(1);
+        let p = uniform_p(30, 6, &mut rng);
+        let rep = exec::nystrom(&o, &p, &ExecPolicy::Materialized);
+        assert_eq!(rep.meta.entries, Some(rep.result.entries_observed));
+        assert!(rep.meta.residency.is_none());
+        assert!(rep.meta.predicted_peak_bytes.unwrap() >= (30 * 6 * 8) as u64);
+        assert!(rep.meta.compute_secs >= 0.0);
     }
 
     #[test]
@@ -696,7 +728,7 @@ mod tests {
         let o = spsd_oracle(25, 25, 2);
         let mut rng = Rng::new(3);
         let p = uniform_p(25, 5, &mut rng);
-        let a = prototype(&o, &p);
+        let a = prototype_m(&o, &p);
         assert_eq!(a.entries_observed, 25 * 25 + 25 * 5);
         // prototype attains min_U objective
         let err = o.inner().sub(&a.materialize()).fro_norm_sq();
@@ -711,7 +743,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let c = 5;
         let p = uniform_p(n, c, &mut rng);
-        let a = fast(&o, &p, FastConfig::uniform(15), &mut rng);
+        let a = fast_m(&o, &p, FastConfig::uniform(15), &mut rng);
         // entries = n*c (columns) + (s'-c)^2 (fresh block), s' = |S|
         let s_len = {
             // recover |S| from U's construction: entries formula inversion
@@ -745,9 +777,9 @@ mod tests {
         for t in 0..trials {
             let mut r = Rng::new(100 + t);
             let p = uniform_p(n, c, &mut r);
-            err_ny += nystrom(&o, &p).rel_fro_error(&k);
-            err_fast += fast(&o, &p, FastConfig::uniform(4 * c), &mut r).rel_fro_error(&k);
-            err_proto += prototype(&o, &p).rel_fro_error(&k);
+            err_ny += nystrom_m(&o, &p).rel_fro_error(&k);
+            err_fast += fast_m(&o, &p, FastConfig::uniform(4 * c), &mut r).rel_fro_error(&k);
+            err_proto += prototype_m(&o, &p).rel_fro_error(&k);
         }
         err_ny /= trials as f64;
         err_fast /= trials as f64;
@@ -765,22 +797,9 @@ mod tests {
         let o = spsd_oracle(30, 8, 7);
         let mut rng = Rng::new(8);
         let p = uniform_p(30, 6, &mut rng);
-        let cfg = FastConfig {
-            s: 0,
-            kind: SketchKind::Uniform,
-            force_p_in_s: true,
-            leverage_basis: LeverageBasis::Gram,
-        };
-        // s=0 extra → sketch falls back to >=1 extra uniform index; instead
-        // emulate exactly S=P via a leverage config with zero extras:
         let mut rng2 = Rng::new(9);
-        let a_fast = {
-            // build with force_p and extra=1, then compare against nystrom
-            // only through the optimal-recovery property below instead.
-            let _ = cfg;
-            fast(&o, &p, FastConfig::uniform(p.len()), &mut rng2)
-        };
-        let a_ny = nystrom(&o, &p);
+        let a_fast = fast_m(&o, &p, FastConfig::uniform(p.len()), &mut rng2);
+        let a_ny = nystrom_m(&o, &p);
         // rank(K)=8 > c=6 so neither is exact, but on the shared subspace
         // both satisfy the same fixed-point equation; check shapes + rough
         // agreement of errors.
@@ -800,13 +819,13 @@ mod tests {
         // c > r columns uniformly: C almost surely has rank r = rank(K)
         let p = uniform_p(n, 2 * r, &mut rng);
         for cfg in [FastConfig::uniform(3 * r), FastConfig::leverage(3 * r)] {
-            let a = fast(&o, &p, cfg, &mut rng);
+            let a = fast_m(&o, &p, cfg, &mut rng);
             let err = a.rel_fro_error(o.inner());
             assert!(err < 1e-10, "{}: rel err {err}", a.method);
         }
         // Nyström and prototype also recover exactly (known property)
-        assert!(nystrom(&o, &p).rel_fro_error(o.inner()) < 1e-10);
-        assert!(prototype(&o, &p).rel_fro_error(o.inner()) < 1e-10);
+        assert!(nystrom_m(&o, &p).rel_fro_error(o.inner()) < 1e-10);
+        assert!(prototype_m(&o, &p).rel_fro_error(o.inner()) < 1e-10);
     }
 
     #[test]
@@ -825,7 +844,7 @@ mod tests {
             LeverageBasis::ExactSvd,
         ] {
             let cfg = FastConfig::leverage(3 * r).with_basis(basis);
-            let a = fast(&o, &p, cfg, &mut rng);
+            let a = fast_m(&o, &p, cfg, &mut rng);
             let err = a.rel_fro_error(o.inner());
             assert!(err < 1e-8, "{basis:?}: rel err {err}");
         }
@@ -845,7 +864,7 @@ mod tests {
                 force_p_in_s: false,
                 leverage_basis: LeverageBasis::Gram,
             };
-            let a = fast(&o, &p, cfg, &mut rng);
+            let a = fast_m(&o, &p, cfg, &mut rng);
             let err = a.rel_fro_error(o.inner());
             assert!(err < 1e-8, "{}: err {err}", kind.name());
             assert!(a.entries_observed >= (n * n) as u64, "{} needs full K", kind.name());
@@ -862,23 +881,24 @@ mod tests {
         let mut rng = Rng::new(21);
         let p = uniform_p(n, 8, &mut rng);
         for tile in [1usize, 7, 16, n] {
+            let policy = ExecPolicy::streamed(tile);
             let cfgs = [FastConfig::uniform(20), FastConfig::leverage(20)];
             for cfg in cfgs {
                 let mut r1 = Rng::new(99);
                 let mut r2 = Rng::new(99);
-                let a = fast(&o, &p, cfg, &mut r1);
-                let b = fast_streamed(&o, &p, cfg, StreamConfig::tiled(tile), &mut r2);
+                let a = fast_m(&o, &p, cfg, &mut r1);
+                let b = exec::fast(&o, &p, cfg, &policy, &mut r2).result;
                 assert_eq!(a.c.max_abs_diff(&b.c), 0.0, "{} C tile={tile}", a.method);
                 assert_eq!(a.u.max_abs_diff(&b.u), 0.0, "{} U tile={tile}", a.method);
                 assert_eq!(a.entries_observed, b.entries_observed, "{} entries", a.method);
             }
-            let a = nystrom(&o, &p);
-            let b = nystrom_streamed(&o, &p, StreamConfig::tiled(tile));
+            let a = nystrom_m(&o, &p);
+            let b = exec::nystrom(&o, &p, &policy).result;
             assert_eq!(a.c.max_abs_diff(&b.c), 0.0);
             assert_eq!(a.u.max_abs_diff(&b.u), 0.0);
 
-            let a = prototype(&o, &p);
-            let b = prototype_streamed(&o, &p, StreamConfig::tiled(tile));
+            let a = prototype_m(&o, &p);
+            let b = exec::prototype(&o, &p, &policy).result;
             assert_eq!(a.c.max_abs_diff(&b.c), 0.0);
             let scale = a.u.fro_norm().max(1e-12);
             assert!(
@@ -901,8 +921,8 @@ mod tests {
                 force_p_in_s: false,
                 leverage_basis: LeverageBasis::Gram,
             };
-            let a = fast(&o, &p, cfg, &mut Rng::new(55));
-            let b = fast_streamed(&o, &p, cfg, StreamConfig::tiled(9), &mut Rng::new(55));
+            let a = fast_m(&o, &p, cfg, &mut Rng::new(55));
+            let b = exec::fast(&o, &p, cfg, &ExecPolicy::streamed(9), &mut Rng::new(55)).result;
             let k = o.inner();
             let diff = a.materialize().sub(&b.materialize()).fro_norm() / k.fro_norm();
             assert!(diff < 1e-10, "{}: {diff}", kind.name());
@@ -911,11 +931,30 @@ mod tests {
     }
 
     #[test]
+    fn resident_projection_sketch_falls_back_without_stats() {
+        // Projection sketches stream the full K — no reloadable working
+        // set. A Resident policy must degrade to plain streaming (no
+        // panic), with `residency: None` in the report.
+        let o = spsd_oracle(30, 4, 12);
+        let p = uniform_p(30, 6, &mut Rng::new(1));
+        let cfg = FastConfig {
+            s: 15,
+            kind: SketchKind::Gaussian,
+            force_p_in_s: false,
+            leverage_basis: LeverageBasis::Gram,
+        };
+        let rep = exec::fast(&o, &p, cfg, &ExecPolicy::resident(0).with_tile_rows(8), &mut Rng::new(2));
+        assert!(rep.meta.residency.is_none());
+        let plain = exec::fast(&o, &p, cfg, &ExecPolicy::streamed(8), &mut Rng::new(2)).result;
+        assert_eq!(rep.result.u.max_abs_diff(&plain.u), 0.0);
+    }
+
+    #[test]
     fn eig_k_and_solve_work_through_approx() {
         let o = spsd_oracle(35, 6, 14);
         let mut rng = Rng::new(15);
         let p = uniform_p(35, 12, &mut rng);
-        let a = fast(&o, &p, FastConfig::uniform(24), &mut rng);
+        let a = fast_m(&o, &p, FastConfig::uniform(24), &mut rng);
         let (vals, vecs) = a.eig_k(3);
         assert_eq!(vals.len(), 3);
         assert_eq!((vecs.rows(), vecs.cols()), (35, 3));

@@ -73,7 +73,8 @@ impl ShiftedApprox {
 mod tests {
     use super::*;
     use crate::coordinator::oracle::{DenseOracle, KernelOracle};
-    use crate::spsd::{fast, nystrom, uniform_p, FastConfig};
+    use crate::exec::{self, ExecPolicy};
+    use crate::spsd::{uniform_p, FastConfig};
     use crate::testkit::gen;
     use crate::util::Rng;
 
@@ -97,7 +98,7 @@ mod tests {
         let o = DenseOracle::new(k.clone());
         let mut rng = Rng::new(1);
         let p = uniform_p(n, 10, &mut rng);
-        let base = fast(&o, &p, FastConfig::uniform(40), &mut rng);
+        let base = exec::fast(&o, &p, FastConfig::uniform(40), &ExecPolicy::Materialized, &mut rng).result;
         let e_base = base.rel_fro_error(&k);
         let shifted = spectral_shift(base, k.trace());
         let e_shift = shifted.rel_fro_error(&k);
@@ -115,7 +116,7 @@ mod tests {
         let k = gen::spsd(&mut rng, 50, 4);
         let o = DenseOracle::new(k.clone());
         let p = uniform_p(50, 8, &mut rng);
-        let base = nystrom(&o, &p);
+        let base = exec::nystrom(&o, &p, &ExecPolicy::Materialized).result;
         let shifted = spectral_shift(base, k.trace());
         assert!(shifted.delta.abs() < 1e-8, "delta={}", shifted.delta);
         assert!(shifted.rel_fro_error(&k) < 1e-9);
@@ -128,7 +129,7 @@ mod tests {
         let k = gen::spsd(&mut rng, 30, 30);
         let o = DenseOracle::new(k.clone());
         let p = uniform_p(30, 5, &mut rng);
-        let base = nystrom(&o, &p);
+        let base = exec::nystrom(&o, &p, &ExecPolicy::Materialized).result;
         let shifted = spectral_shift(base, 0.0); // impossible trace
         assert_eq!(shifted.delta, 0.0);
     }
@@ -140,7 +141,7 @@ mod tests {
         let o = DenseOracle::new(k.clone());
         let mut rng = Rng::new(5);
         let p = uniform_p(n, 8, &mut rng);
-        let base = fast(&o, &p, FastConfig::uniform(30), &mut rng);
+        let base = exec::fast(&o, &p, FastConfig::uniform(30), &ExecPolicy::Materialized, &mut rng).result;
         let shifted = spectral_shift(base, k.trace());
         let (vals, vecs) = shifted.eig_k(8);
         assert_eq!(vecs.cols(), 8.min(vecs.cols()));

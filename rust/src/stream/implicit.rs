@@ -1,31 +1,30 @@
 //! Streaming operations against the *implicit* approximation `C U C^T`:
-//! matvec and top-k Lanczos that never hold `C` (let alone `C U C^T`) in
-//! memory — `C` is re-streamed from its [`TileSource`] on every pass.
+//! matvec, top-k Lanczos and a regularized solve that never hold `C` (let
+//! alone `C U C^T`) in memory — `C` is re-streamed from its
+//! [`TileSource`] on every pass.
 //!
-//! This trades kernel recomputation for memory: each matvec re-observes
-//! the `n x c` panel (the oracle's entry counter keeps charging for it),
-//! which is the right trade exactly when `C` does not fit next to the rest
-//! of the workload. When `C` is resident, use
-//! [`SpsdApprox::eig_k`](crate::spsd::SpsdApprox::eig_k) instead.
+//! How the panel is traversed is an execution policy, and the public
+//! entry points live in [`exec`](crate::exec)
+//! ([`exec::top_k_eigs`](crate::exec::top_k_eigs),
+//! [`exec::solve_regularized`](crate::exec::solve_regularized)):
 //!
-//! Between those extremes sit two opt-in modes, both built on the tile
-//! residency layer ([`ResidentSource`](super::ResidentSource)):
+//! - `ExecPolicy::Materialized` / `Streamed` — each pass re-observes the
+//!   `n x c` panel (the oracle's entry counter keeps charging for it):
+//!   the right trade exactly when `C` does not fit next to the rest of
+//!   the workload. When `C` is resident, use
+//!   [`SpsdApprox::eig_k`](crate::spsd::SpsdApprox::eig_k) instead.
+//! - `ExecPolicy::Resident { spill: false, .. }` — the budget-gated
+//!   cached-`C` mode (the old `*_budgeted` functions): tiles stay hot in
+//!   a RAM LRU of at most `budget` bytes; when the whole panel fits, the
+//!   oracle is charged exactly one `n·c` observation, a partial budget
+//!   keeps a stable hot prefix resident (scan-resistant admission), and a
+//!   zero budget is exactly the plain path.
+//! - `ExecPolicy::Resident { spill: true, .. }` — cold tiles are
+//!   *reloaded* from the disk arena, never *recomputed*: exactly one
+//!   `n·c` at **any** RAM budget — including zero — and `n` may exceed
+//!   RAM.
 //!
-//! - the budget-gated cached-`C` mode ([`top_k_eigs_budgeted`] /
-//!   [`solve_regularized_budgeted`]): tiles stay hot in a RAM cache of at
-//!   most `memory_budget` bytes (the planner's
-//!   [`Goal::memory_budget`](crate::coordinator::planner::Goal) unit).
-//!   When the whole panel fits, later Lanczos matvecs read memory and the
-//!   oracle is charged exactly one `n·c` observation; a partial budget
-//!   keeps a stable hot prefix resident (scan-resistant admission), so
-//!   re-streaming shrinks in proportion to the budget — extra memory never
-//!   exceeds the budget, results stay bit-identical, and a zero budget is
-//!   exactly the plain path.
-//! - the spill mode ([`top_k_eigs_resident`] /
-//!   [`solve_regularized_resident`] with a spilling
-//!   [`ResidencyConfig`]): cold tiles are *reloaded* from the disk arena,
-//!   never *recomputed*, so the oracle is charged exactly one `n·c` at
-//!   **any** RAM budget — including zero — and `n` may exceed RAM.
+//! Results are bit-identical across all of these (`tests/exec_api.rs`).
 
 use super::{
     run_pipeline, GramFold, MatvecFold, ResidencyConfig, ResidencyStats, ResidentSource,
@@ -62,14 +61,14 @@ pub fn matvec_cuc(src: &dyn TileSource, u: &Matrix, x: &[f64], cfg: StreamConfig
     out.y
 }
 
-/// Solve `(C U C^T + alpha I) w = y` against the implicit approximation
-/// (the streamed form of Lemma 11 / `woodbury_solve`): one pass over `C`
-/// folds the Gram `C^T C` ([`GramFold`]) and `C^T y` ([`MatvecFold`])
-/// together, the Woodbury inner system `alpha I + G^T (C^T C) G` (with
-/// `U = G G^T`) is solved at `c x c` scale, and a second pass emits
+/// The streamed Woodbury solve body (see
+/// [`exec::solve_regularized`](crate::exec::solve_regularized)): one pass
+/// over `C` folds the Gram `C^T C` ([`GramFold`]) and `C^T y`
+/// ([`MatvecFold`]) together, the inner system `alpha I + G^T (C^T C) G`
+/// (with `U = G G^T`) is solved at `c x c` scale, and a second pass emits
 /// `C (G z)`. Peak extra memory `O(tile_rows · c + c²)` — `C` is never
 /// resident.
-pub fn solve_regularized(
+fn solve_impl(
     src: &dyn TileSource,
     u: &Matrix,
     alpha: f64,
@@ -113,10 +112,10 @@ pub fn solve_regularized(
         .collect()
 }
 
-/// Top-k eigenpairs (descending) of the implicit `C U C^T` via Lanczos
-/// over the streamed matvec. Memory stays `O(tile_rows · c + n · iters)`
-/// (the Krylov basis); each Lanczos step re-streams `C` twice.
-pub fn top_k_eigs(
+/// Top-k Lanczos body over the streamed matvec. Memory stays
+/// `O(tile_rows · c + n · iters)` (the Krylov basis); each Lanczos step
+/// re-streams `src` twice — residency is what makes that free.
+fn top_k_impl(
     src: &dyn TileSource,
     u: &Matrix,
     k: usize,
@@ -126,25 +125,79 @@ pub fn top_k_eigs(
     lanczos::lanczos_top_k_op(src.rows(), k, seed, |v| matvec_cuc(src, u, v, cfg))
 }
 
-/// RAM-only residency matching the budgeted ops' contract: the cache grid
-/// equals the pipeline tile height, so every request is one grid tile,
-/// extra memory is capped by `memory_budget`, and a zero budget reproduces
-/// the plain re-streaming path exactly (bits and entries).
+/// Unified top-k driver behind
+/// [`exec::top_k_eigs`](crate::exec::top_k_eigs): plain re-streaming when
+/// `residency` is `None`, otherwise every pass goes through a
+/// [`ResidentSource`] and the hit/miss/spill counters come back with the
+/// eigenpairs.
+pub(crate) fn run_top_k_eigs(
+    src: &dyn TileSource,
+    u: &Matrix,
+    k: usize,
+    seed: u64,
+    cfg: StreamConfig,
+    residency: Option<&ResidencyConfig>,
+) -> ((Vec<f64>, Matrix), Option<ResidencyStats>) {
+    match residency {
+        None => (top_k_impl(src, u, k, seed, cfg), None),
+        Some(rc) => {
+            let resident = ResidentSource::new(src, rc);
+            let out = top_k_impl(&resident, u, k, seed, cfg);
+            let stats = resident.stats();
+            (out, Some(stats))
+        }
+    }
+}
+
+/// Unified solve driver behind
+/// [`exec::solve_regularized`](crate::exec::solve_regularized); see
+/// [`run_top_k_eigs`] for the residency contract.
+pub(crate) fn run_solve_regularized(
+    src: &dyn TileSource,
+    u: &Matrix,
+    alpha: f64,
+    y: &[f64],
+    cfg: StreamConfig,
+    residency: Option<&ResidencyConfig>,
+) -> (Vec<f64>, Option<ResidencyStats>) {
+    match residency {
+        None => (solve_impl(src, u, alpha, y, cfg), None),
+        Some(rc) => {
+            let resident = ResidentSource::new(src, rc);
+            let w = solve_impl(&resident, u, alpha, y, cfg);
+            let stats = resident.stats();
+            (w, Some(stats))
+        }
+    }
+}
+
+/// RAM-only residency matching the old budgeted ops' contract: the cache
+/// grid equals the pipeline tile height, so every request is one grid
+/// tile, extra memory is capped by `memory_budget`, and a zero budget
+/// reproduces the plain re-streaming path exactly (bits and entries).
 fn ram_residency(cfg: StreamConfig, n: usize, memory_budget: u64) -> ResidencyConfig {
     ResidencyConfig::ram_only(memory_budget).with_tile_rows(cfg.effective_tile_rows(n))
 }
 
-/// [`top_k_eigs`] with the opt-in cached-`C` mode, routed through the
-/// residency layer: when the full panel fits `memory_budget` bytes the
-/// first Lanczos pass makes every tile hot and later matvecs read memory
-/// instead of re-evaluating kernel tiles (the oracle is charged exactly
-/// one `n·c` observation). A partial budget keeps a stable hot prefix
-/// resident — entries drop in proportion to the budget, extra memory
-/// never exceeds it ([`predicted_implicit_peak_bytes`]'s capped term),
-/// and results stay bit-identical. For one-`n·c` at *any* budget, use
-/// [`top_k_eigs_resident`] with a spilling config instead.
-///
-/// [`predicted_implicit_peak_bytes`]: crate::coordinator::planner::predicted_implicit_peak_bytes
+// ---------------------------------------------------------------------------
+// Deprecated per-policy shims over the unified drivers (`exec` is the
+// policy-carrying surface).
+// ---------------------------------------------------------------------------
+
+/// Top-k eigenpairs of the implicit `C U C^T`, re-streaming every pass.
+#[deprecated(note = "use `exec::top_k_eigs` with `ExecPolicy::Streamed`")]
+pub fn top_k_eigs(
+    src: &dyn TileSource,
+    u: &Matrix,
+    k: usize,
+    seed: u64,
+    cfg: StreamConfig,
+) -> (Vec<f64>, Matrix) {
+    run_top_k_eigs(src, u, k, seed, cfg, None).0
+}
+
+/// Top-k with the budget-gated cached-`C` mode.
+#[deprecated(note = "use `exec::top_k_eigs` with `ExecPolicy::ram_cached`")]
 pub fn top_k_eigs_budgeted(
     src: &dyn TileSource,
     u: &Matrix,
@@ -153,31 +206,12 @@ pub fn top_k_eigs_budgeted(
     cfg: StreamConfig,
     memory_budget: u64,
 ) -> (Vec<f64>, Matrix) {
-    let resident = ResidentSource::new(src, &ram_residency(cfg, src.rows(), memory_budget));
-    top_k_eigs(&resident, u, k, seed, cfg)
+    let rc = ram_residency(cfg, src.rows(), memory_budget);
+    run_top_k_eigs(src, u, k, seed, cfg, Some(&rc)).0
 }
 
-/// [`solve_regularized`] with the opt-in cached-`C` mode (see
-/// [`top_k_eigs_budgeted`]): the emit pass reuses the tiles the fold pass
-/// made hot when the budget allows.
-pub fn solve_regularized_budgeted(
-    src: &dyn TileSource,
-    u: &Matrix,
-    alpha: f64,
-    y: &[f64],
-    cfg: StreamConfig,
-    memory_budget: u64,
-) -> Vec<f64> {
-    let resident = ResidentSource::new(src, &ram_residency(cfg, src.rows(), memory_budget));
-    solve_regularized(&resident, u, alpha, y, cfg)
-}
-
-/// [`top_k_eigs`] through a caller-configured residency layer. With a
-/// spilling [`ResidencyConfig`] the oracle is charged exactly one `n·c`
-/// observation across all `q` Lanczos iterations at any RAM budget
-/// (including 0 — every re-read comes from the disk arena), and results
-/// are bit-identical to the uncached path. Returns the hit/miss/spill
-/// counters alongside the eigenpairs.
+/// Top-k through a caller-configured residency layer.
+#[deprecated(note = "use `exec::top_k_eigs` with `ExecPolicy::Resident`")]
 pub fn top_k_eigs_resident(
     src: &dyn TileSource,
     u: &Matrix,
@@ -186,14 +220,38 @@ pub fn top_k_eigs_resident(
     cfg: StreamConfig,
     residency: &ResidencyConfig,
 ) -> (Vec<f64>, Matrix, ResidencyStats) {
-    let resident = ResidentSource::new(src, residency);
-    let (vals, vecs) = top_k_eigs(&resident, u, k, seed, cfg);
-    let stats = resident.stats();
-    (vals, vecs, stats)
+    let ((vals, vecs), stats) = run_top_k_eigs(src, u, k, seed, cfg, Some(residency));
+    (vals, vecs, stats.expect("residency stats"))
 }
 
-/// [`solve_regularized`] through a caller-configured residency layer (see
-/// [`top_k_eigs_resident`]).
+/// Regularized solve against the implicit `C U C^T`, re-streaming.
+#[deprecated(note = "use `exec::solve_regularized` with `ExecPolicy::Streamed`")]
+pub fn solve_regularized(
+    src: &dyn TileSource,
+    u: &Matrix,
+    alpha: f64,
+    y: &[f64],
+    cfg: StreamConfig,
+) -> Vec<f64> {
+    run_solve_regularized(src, u, alpha, y, cfg, None).0
+}
+
+/// Regularized solve with the budget-gated cached-`C` mode.
+#[deprecated(note = "use `exec::solve_regularized` with `ExecPolicy::ram_cached`")]
+pub fn solve_regularized_budgeted(
+    src: &dyn TileSource,
+    u: &Matrix,
+    alpha: f64,
+    y: &[f64],
+    cfg: StreamConfig,
+    memory_budget: u64,
+) -> Vec<f64> {
+    let rc = ram_residency(cfg, src.rows(), memory_budget);
+    run_solve_regularized(src, u, alpha, y, cfg, Some(&rc)).0
+}
+
+/// Regularized solve through a caller-configured residency layer.
+#[deprecated(note = "use `exec::solve_regularized` with `ExecPolicy::Resident`")]
 pub fn solve_regularized_resident(
     src: &dyn TileSource,
     u: &Matrix,
@@ -202,15 +260,14 @@ pub fn solve_regularized_resident(
     cfg: StreamConfig,
     residency: &ResidencyConfig,
 ) -> (Vec<f64>, ResidencyStats) {
-    let resident = ResidentSource::new(src, residency);
-    let w = solve_regularized(&resident, u, alpha, y, cfg);
-    let stats = resident.stats();
-    (w, stats)
+    let (w, stats) = run_solve_regularized(src, u, alpha, y, cfg, Some(residency));
+    (w, stats.expect("residency stats"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::{self, ExecPolicy};
     use crate::stream::MatrixSource;
     use crate::util::Rng;
 
@@ -248,7 +305,7 @@ mod tests {
         let direct = crate::linalg::solve::woodbury_solve(&cmat, &u, 0.6, &y);
         for tile in [1usize, 8, 33] {
             let src = MatrixSource::new(&cmat);
-            let w = solve_regularized(&src, &u, 0.6, &y, StreamConfig::tiled(tile));
+            let w = exec::solve_regularized(&src, &u, 0.6, &y, &ExecPolicy::streamed(tile)).result;
             let scale: f64 = direct.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
             for (a, b) in w.iter().zip(&direct) {
                 assert!((a - b).abs() < 1e-8 * scale, "tile={tile}: {a} vs {b}");
@@ -259,14 +316,14 @@ mod tests {
         let u1 = g1.matmul_tr(&g1);
         let direct = crate::linalg::solve::woodbury_solve(&cmat, &u1, 0.6, &y);
         let src = MatrixSource::new(&cmat);
-        let w = solve_regularized(&src, &u1, 0.6, &y, StreamConfig::tiled(8));
+        let w = exec::solve_regularized(&src, &u1, 0.6, &y, &ExecPolicy::streamed(8)).result;
         for (a, b) in w.iter().zip(&direct) {
             assert!((a - b).abs() < 1e-8);
         }
     }
 
     #[test]
-    fn budgeted_topk_matches_and_stops_restreaming() {
+    fn cached_topk_matches_and_stops_restreaming() {
         use crate::coordinator::oracle::{KernelOracle, RbfOracle};
         use crate::stream::OracleColumnsSource;
         use std::sync::Arc;
@@ -277,14 +334,15 @@ mod tests {
         let mut u = Matrix::randn(4, 4, &mut rng);
         u.symmetrize();
         let src = OracleColumnsSource::new(&o, &cols);
-        let cfg = StreamConfig::tiled(16);
+        let streamed = ExecPolicy::streamed(16);
+        let cached = |budget| ExecPolicy::ram_cached(budget).with_tile_rows(16);
 
         o.reset_entries();
-        let (vals_plain, _) = top_k_eigs(&src, &u, 2, 9, cfg);
+        let (vals_plain, _) = exec::top_k_eigs(&src, &u, 2, 9, &streamed).result;
         let entries_plain = o.entries_observed();
 
         o.reset_entries();
-        let (vals_cached, _) = top_k_eigs_budgeted(&src, &u, 2, 9, cfg, u64::MAX);
+        let (vals_cached, _) = exec::top_k_eigs(&src, &u, 2, 9, &cached(u64::MAX)).result;
         let entries_cached = o.entries_observed();
 
         // identical arithmetic (cached tiles are bit-identical), far fewer
@@ -298,16 +356,17 @@ mod tests {
 
         // zero budget: identical results, identical (re-streaming) cost
         o.reset_entries();
-        let (vals_zero, _) = top_k_eigs_budgeted(&src, &u, 2, 9, cfg, 0);
+        let (vals_zero, _) = exec::top_k_eigs(&src, &u, 2, 9, &cached(0)).result;
         assert_eq!(o.entries_observed(), entries_plain);
         for (a, b) in vals_plain.iter().zip(&vals_zero) {
             assert_eq!(a, b);
         }
 
-        // and the budgeted solve agrees with the plain one
+        // and the cached solve agrees with the plain one
         let y: Vec<f64> = (0..50).map(|i| (i as f64 * 0.7).cos()).collect();
-        let w_plain = solve_regularized(&src, &u.gram_nt(), 0.4, &y, cfg);
-        let w_cached = solve_regularized_budgeted(&src, &u.gram_nt(), 0.4, &y, cfg, u64::MAX);
+        let w_plain = exec::solve_regularized(&src, &u.gram_nt(), 0.4, &y, &streamed).result;
+        let w_cached =
+            exec::solve_regularized(&src, &u.gram_nt(), 0.4, &y, &cached(u64::MAX)).result;
         for (a, b) in w_plain.iter().zip(&w_cached) {
             assert_eq!(a, b);
         }
@@ -325,16 +384,18 @@ mod tests {
         let mut u = Matrix::randn(5, 5, &mut rng);
         u.symmetrize();
         let src = OracleColumnsSource::new(&o, &cols);
-        let cfg = StreamConfig::tiled(9);
+        let streamed = ExecPolicy::streamed(9);
 
         o.reset_entries();
-        let (vals_plain, vecs_plain) = top_k_eigs(&src, &u, 3, 11, cfg);
+        let (vals_plain, vecs_plain) = exec::top_k_eigs(&src, &u, 3, 11, &streamed).result;
         let entries_plain = o.entries_observed();
 
         // zero RAM budget + disk spill: identical bits, one n·c charge
         o.reset_entries();
-        let rc = ResidencyConfig::new(0).with_tile_rows(9);
-        let (vals, vecs, stats) = top_k_eigs_resident(&src, &u, 3, 11, cfg, &rc);
+        let spilled = ExecPolicy::resident(0).with_tile_rows(9);
+        let rep = exec::top_k_eigs(&src, &u, 3, 11, &spilled);
+        let (vals, vecs) = rep.result;
+        let stats = rep.meta.residency.expect("resident policy must report stats");
         assert_eq!(o.entries_observed(), 45 * 5, "spill must charge exactly one pass");
         assert!(entries_plain > 45 * 5, "plain path must re-stream");
         for (a, b) in vals_plain.iter().zip(&vals) {
@@ -348,12 +409,12 @@ mod tests {
 
         // and the resident solve agrees with the plain one
         let y: Vec<f64> = (0..45).map(|i| (i as f64 * 0.3).sin()).collect();
-        let w_plain = solve_regularized(&src, &u.gram_nt(), 0.7, &y, cfg);
-        let (w_res, st) = solve_regularized_resident(&src, &u.gram_nt(), 0.7, &y, cfg, &rc);
-        for (a, b) in w_plain.iter().zip(&w_res) {
+        let w_plain = exec::solve_regularized(&src, &u.gram_nt(), 0.7, &y, &streamed).result;
+        let rep = exec::solve_regularized(&src, &u.gram_nt(), 0.7, &y, &spilled);
+        for (a, b) in w_plain.iter().zip(&rep.result) {
             assert_eq!(a, b);
         }
-        assert!(st.spill_hits > 0);
+        assert!(rep.meta.residency.expect("stats").spill_hits > 0);
     }
 
     #[test]
@@ -364,7 +425,7 @@ mod tests {
         let cmat = Matrix::randn(40, 4, &mut rng);
         let u = Matrix::identity(4);
         let src = MatrixSource::new(&cmat);
-        let (vals, vecs) = top_k_eigs(&src, &u, 3, 7, StreamConfig::tiled(9));
+        let (vals, vecs) = exec::top_k_eigs(&src, &u, 3, 7, &ExecPolicy::streamed(9)).result;
         assert_eq!(vals.len(), 3);
         assert_eq!((vecs.rows(), vecs.cols()), (40, 3));
         let dense = cmat.matmul_tr(&cmat);

@@ -34,9 +34,13 @@ pub use consumers::{
     ColSubsetCollect, CollectConsumer, ConjugateFold, GramFold, LeverageFold, LeverageSampler,
     MatvecFold, PrototypeUFold, RowGather, SketchFold, TileConsumer,
 };
+pub use implicit::matvec_cuc;
+// Deprecated per-policy shims, re-exported for compatibility — the
+// policy-carrying surface is `exec::{top_k_eigs, solve_regularized}`.
+#[allow(deprecated)]
 pub use implicit::{
-    matvec_cuc, solve_regularized, solve_regularized_budgeted, solve_regularized_resident,
-    top_k_eigs, top_k_eigs_budgeted, top_k_eigs_resident,
+    solve_regularized, solve_regularized_budgeted, solve_regularized_resident, top_k_eigs,
+    top_k_eigs_budgeted, top_k_eigs_resident,
 };
 pub use pipeline::run_pipeline;
 pub use residency::{

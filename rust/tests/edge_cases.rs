@@ -5,6 +5,7 @@ use fastspsd::apps::{kmeans, knn_classify, kpca};
 use fastspsd::coordinator::oracle::{DenseOracle, KernelOracle};
 use fastspsd::cur;
 use fastspsd::data;
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::{eigh, pinv, svd_thin, Matrix};
 use fastspsd::sketch;
 use fastspsd::spsd::{self, FastConfig};
@@ -111,7 +112,7 @@ fn nystrom_with_single_column() {
     let mut rng = Rng::new(4);
     let k = gen::spsd(&mut rng, 15, 15);
     let o = DenseOracle::new(k.clone());
-    let a = spsd::nystrom(&o, &[7]);
+    let a = exec::nystrom(&o, &[7], &ExecPolicy::Materialized).result;
     assert_eq!((a.u.rows(), a.u.cols()), (1, 1));
     // rank-1 approximation error is bounded by ||K||
     assert!(a.rel_fro_error(&k) <= 1.0 + 1e-9);
@@ -123,7 +124,7 @@ fn fast_with_s_exceeding_n() {
     let k = gen::spsd(&mut rng, 20, 4);
     let o = DenseOracle::new(k.clone());
     let p = spsd::uniform_p(20, 6, &mut rng);
-    let a = spsd::fast(&o, &p, FastConfig::uniform(100), &mut rng);
+    let a = exec::fast(&o, &p, FastConfig::uniform(100), &ExecPolicy::Materialized, &mut rng).result;
     // covers all indices → equals prototype objective; rank(K)=4<6 → exact
     assert!(a.rel_fro_error(&k) < 1e-9);
 }
@@ -143,10 +144,11 @@ fn models_preserve_spsd_structure() {
     let k = gen::spsd(&mut rng, 30, 10);
     let o = DenseOracle::new(k);
     let p = spsd::uniform_p(30, 6, &mut rng);
+    let pol = ExecPolicy::Materialized;
     for a in [
-        spsd::nystrom(&o, &p),
-        spsd::fast(&o, &p, FastConfig::uniform(15), &mut rng),
-        spsd::prototype(&o, &p),
+        exec::nystrom(&o, &p, &pol).result,
+        exec::fast(&o, &p, FastConfig::uniform(15), &pol, &mut rng).result,
+        exec::prototype(&o, &p, &pol).result,
     ] {
         assert!(a.u.max_abs_diff(&a.u.transpose()) < 1e-10, "{}", a.method);
         let m = a.materialize();
@@ -191,7 +193,7 @@ fn kpca_k_exceeding_rank_clamps() {
     let k = gen::spsd(&mut rng, 20, 3);
     let o = DenseOracle::new(k);
     let p = spsd::uniform_p(20, 6, &mut rng);
-    let a = spsd::fast(&o, &p, FastConfig::uniform(12), &mut rng);
+    let a = exec::fast(&o, &p, FastConfig::uniform(12), &ExecPolicy::Materialized, &mut rng).result;
     let model = kpca::kpca_from_approx(&a, 10);
     // eig_k_of_cuc truncates at rank(C) <= 6
     assert!(model.k() <= 6);

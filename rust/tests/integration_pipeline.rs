@@ -7,6 +7,7 @@ use fastspsd::apps::{knn_classify, kpca, metrics, spectral};
 use fastspsd::coordinator::oracle::KernelOracle;
 use fastspsd::coordinator::{ApproxRequest, ApproxService, KernelEngine, MethodSpec, RbfOracle, ServiceConfig};
 use fastspsd::data::{self, sigma};
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::sketch::SketchKind;
 use fastspsd::spsd::{self, FastConfig};
@@ -34,18 +35,18 @@ fn fig1_observed_entries_accounting() {
     let p = spsd::uniform_p(n, c, &mut rng);
 
     oracle.reset_entries();
-    let _ = spsd::nystrom(oracle.as_ref(), &p);
+    let _ = exec::nystrom(oracle.as_ref(), &p, &ExecPolicy::Materialized).result;
     assert_eq!(oracle.entries_observed(), (n * c) as u64);
 
     oracle.reset_entries();
-    let fast = spsd::fast(oracle.as_ref(), &p, FastConfig::uniform(4 * c), &mut rng);
+    let fast = exec::fast(oracle.as_ref(), &p, FastConfig::uniform(4 * c), &ExecPolicy::Materialized, &mut rng).result;
     let fresh = fast.entries_observed - (n * c) as u64;
     let s_minus_c = (fresh as f64).sqrt();
     assert!((s_minus_c.round() * s_minus_c.round() - fresh as f64).abs() < 1e-9);
     assert!(fast.entries_observed < (n * n) as u64 / 2);
 
     oracle.reset_entries();
-    let _ = spsd::prototype(oracle.as_ref(), &p);
+    let _ = exec::prototype(oracle.as_ref(), &p, &ExecPolicy::Materialized).result;
     assert!(oracle.entries_observed() >= (n * n) as u64);
 }
 
@@ -60,10 +61,11 @@ fn kpca_pipeline_fast_beats_nystrom_misalignment() {
     for t in 0..5u64 {
         let mut rng = Rng::new(10 + t);
         let p = spsd::uniform_p(300, c, &mut rng);
-        let ny = kpca::kpca_from_approx(&spsd::nystrom(oracle.as_ref(), &p), 3);
+        let ny = kpca::kpca_from_approx(&exec::nystrom(oracle.as_ref(), &p, &ExecPolicy::Materialized).result, 3);
         mis_ny += kpca::misalignment(&exact.v, &ny.v);
         let fa = kpca::kpca_from_approx(
-            &spsd::fast(oracle.as_ref(), &p, FastConfig::uniform(8 * c), &mut rng),
+            &exec::fast(oracle.as_ref(), &p, FastConfig::uniform(8 * c), &ExecPolicy::Materialized, &mut rng)
+                .result,
             3,
         );
         mis_fast += kpca::misalignment(&exact.v, &fa.v);
@@ -82,7 +84,7 @@ fn classification_pipeline_end_to_end() {
     let sig = sigma::calibrate_sigma(&train.x, 0.9, 300, 5);
     let oracle = RbfOracle::cpu(Arc::new(train.x.clone()), sigma::gamma_of_sigma(sig));
     let p = spsd::uniform_p(train.x.rows(), 16, &mut rng);
-    let approx = spsd::fast(&oracle, &p, FastConfig::uniform(64), &mut rng);
+    let approx = exec::fast(&oracle, &p, FastConfig::uniform(64), &ExecPolicy::Materialized, &mut rng).result;
     let model = kpca::kpca_from_approx(&approx, 3);
     let kx = oracle.cross(&test.x);
     let ftr = model.train_features();
@@ -99,7 +101,7 @@ fn spectral_pipeline_end_to_end() {
     let oracle = RbfOracle::cpu(Arc::new(ds.x.clone()), sigma::gamma_of_sigma(sig));
     let mut rng = Rng::new(8);
     let p = spsd::uniform_p(240, 12, &mut rng);
-    let approx = spsd::fast(&oracle, &p, FastConfig::uniform(48), &mut rng);
+    let approx = exec::fast(&oracle, &p, FastConfig::uniform(48), &ExecPolicy::Materialized, &mut rng).result;
     let pred = spectral::spectral_cluster_from_approx(&approx, 3, &mut rng);
     let score = metrics::nmi(&pred, &ds.labels);
     assert!(score > 0.8, "nmi={score}");
@@ -115,7 +117,10 @@ fn service_over_pjrt_engine_if_available() {
         sigma::gamma_of_sigma(sig),
         Arc::clone(&engine),
     ));
-    let svc = ApproxService::new(oracle, ServiceConfig { workers: 3, queue_capacity: 8, spill_dir: None });
+    let svc = ApproxService::new(
+        oracle,
+        ServiceConfig { workers: 3, queue_capacity: 8, ..Default::default() },
+    );
     let (tx, rx) = mpsc::channel();
     for i in 0..12u64 {
         svc.submit(
@@ -125,10 +130,9 @@ fn service_over_pjrt_engine_if_available() {
                 c: 12,
                 k: 4,
                 seed: i,
-                // alternate materialized / tile-pipeline builds: both must
-                // serve identical results through the same service
-                tile_rows: if i % 2 == 0 { None } else { Some(64) },
-                residency_budget: None,
+                // alternate materialized / tile-pipeline policies: both
+                // must serve identical results through the same service
+                policy: if i % 2 == 0 { None } else { Some(ExecPolicy::streamed(64)) },
             },
             tx.clone(),
         );
@@ -158,10 +162,11 @@ fn regularized_solve_via_all_three_models() {
     let mut rng = Rng::new(12);
     let p = spsd::uniform_p(150, 20, &mut rng);
     let y: Vec<f64> = (0..150).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+    let pol = ExecPolicy::Materialized;
     for approx in [
-        spsd::nystrom(oracle.as_ref(), &p),
-        spsd::fast(oracle.as_ref(), &p, FastConfig::uniform(60), &mut rng),
-        spsd::prototype(oracle.as_ref(), &p),
+        exec::nystrom(oracle.as_ref(), &p, &pol).result,
+        exec::fast(oracle.as_ref(), &p, FastConfig::uniform(60), &pol, &mut rng).result,
+        exec::prototype(oracle.as_ref(), &p, &pol).result,
     ] {
         let w = approx.solve_regularized(0.8, &y);
         let mut kk = approx.materialize();

@@ -2,6 +2,7 @@
 //! the linear-algebra invariants they rest on.
 
 use fastspsd::coordinator::oracle::DenseOracle;
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::{eigh, pinv, svd_thin, Matrix};
 use fastspsd::sketch;
 use fastspsd::spsd::{self, adversarial, FastConfig};
@@ -70,7 +71,7 @@ fn prop_theorem6_exact_recovery_iff_rank_match() {
         // c >= r columns: rank(C) = rank(K) almost surely
         let c = r + gen::int(rng, 1, 4);
         let p = spsd::uniform_p(n, c, rng);
-        let a = spsd::fast(&o, &p, FastConfig::uniform(2 * c + 2), rng);
+        let a = exec::fast(&o, &p, FastConfig::uniform(2 * c + 2), &ExecPolicy::Materialized, rng).result;
         let err = a.rel_fro_error(&k);
         if err > 1e-8 {
             return Err(format!("rank-match case: err {err}"));
@@ -78,7 +79,7 @@ fn prop_theorem6_exact_recovery_iff_rank_match() {
         // c < r columns: rank(C) < rank(K) → cannot be exact
         if r >= 3 {
             let p2 = spsd::uniform_p(n, r - 1, rng);
-            let a2 = spsd::fast(&o, &p2, FastConfig::uniform(3 * r), rng);
+            let a2 = exec::fast(&o, &p2, FastConfig::uniform(3 * r), &ExecPolicy::Materialized, rng).result;
             let err2 = a2.rel_fro_error(&k);
             if err2 < 1e-12 {
                 return Err("deficient C recovered exactly?!".into());
@@ -104,12 +105,12 @@ fn prop_theorem3_fast_near_optimal_objective() {
         let opt = spsd::optimal_objective(&k, &o.inner().select_cols(&p));
         // s = n + c makes the union S = sample ∪ P cover every index, so
         // the fast model coincides with the prototype (S^T = I up to perm).
-        let a = spsd::fast(&o, &p, FastConfig::uniform(n + c), rng);
+        let a = exec::fast(&o, &p, FastConfig::uniform(n + c), &ExecPolicy::Materialized, rng).result;
         let obj = k.sub(&a.materialize()).fro_norm_sq();
         if obj > opt * (1.0 + 1e-6) + 1e-12 {
             return Err(format!("s=n should be optimal: {obj} vs {opt}"));
         }
-        let a2 = spsd::fast(&o, &p, FastConfig::uniform(n / 2), rng);
+        let a2 = exec::fast(&o, &p, FastConfig::uniform(n / 2), &ExecPolicy::Materialized, rng).result;
         let obj2 = k.sub(&a2.materialize()).fro_norm_sq();
         if obj2 > opt * 3.0 + 1e-12 {
             return Err(format!("s=n/2 too far from optimal: {obj2} vs {opt}"));
@@ -136,7 +137,7 @@ fn theorem7_lower_bound_holds_on_adversarial_matrix() {
         for t in 0..6 {
             let mut r = Rng::new(t);
             let p = spsd::uniform_p(n, c, &mut r);
-            let a = spsd::fast(&o, &p, FastConfig::uniform(s), &mut rng);
+            let a = exec::fast(&o, &p, FastConfig::uniform(s), &ExecPolicy::Materialized, &mut rng).result;
             let err = kmat.sub(&a.materialize()).fro_norm_sq();
             worst_ratio = worst_ratio.min(err / best_k);
         }

@@ -8,13 +8,24 @@
 //! it.
 
 use fastspsd::coordinator::oracle::{KernelOracle, RbfOracle};
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::sketch::SketchKind;
-use fastspsd::spsd::{self, FastConfig};
+use fastspsd::spsd::FastConfig;
 use fastspsd::stream::{
-    self, CollectConsumer, OracleColumnsSource, ResidencyConfig, ResidentSource, StreamConfig,
+    self, CollectConsumer, OracleColumnsSource, ResidencyConfig, ResidentSource,
 };
 use fastspsd::util::Rng;
+
+/// Spilling residency at `budget` bytes, grid = pipeline tile = `tile`.
+fn spilled(budget: u64, tile: usize) -> ExecPolicy {
+    ExecPolicy::resident(budget).with_tile_rows(tile)
+}
+
+/// RAM-only cached-panel policy (the old `*_budgeted` contract).
+fn cached(budget: u64, tile: usize) -> ExecPolicy {
+    ExecPolicy::ram_cached(budget).with_tile_rows(tile)
+}
 use std::sync::Arc;
 
 const N: usize = 53; // prime: no tile height divides it
@@ -47,20 +58,22 @@ fn lanczos_is_bit_identical_across_tiles_and_budgets() {
     let src = OracleColumnsSource::new(&o, &cols);
 
     // uncached reference (whole-tile = the materialized path)
-    let (vals_ref, vecs_ref) = stream::top_k_eigs(&src, &u, 3, 7, StreamConfig::whole());
+    let (vals_ref, vecs_ref) =
+        exec::top_k_eigs(&src, &u, 3, 7, &ExecPolicy::Materialized).result;
 
     for tile in [1usize, 7, 64, N] {
-        let cfg = StreamConfig::tiled(tile);
         // plain re-streaming at this tile height
-        let (vals_plain, vecs_plain) = stream::top_k_eigs(&src, &u, 3, 7, cfg);
+        let (vals_plain, vecs_plain) =
+            exec::top_k_eigs(&src, &u, 3, 7, &ExecPolicy::streamed(tile)).result;
         assert_eq!(vals_ref, vals_plain, "tile={tile}: tiling must not change Lanczos");
         assert_eq!(vecs_ref.max_abs_diff(&vecs_plain), 0.0);
 
         for budget in budgets(tile) {
             // spilled (LRU budget + disk arena)
-            let rc = ResidencyConfig::new(budget).with_tile_rows(tile);
             o.reset_entries();
-            let (vals, vecs, stats) = stream::top_k_eigs_resident(&src, &u, 3, 7, cfg, &rc);
+            let rep = exec::top_k_eigs(&src, &u, 3, 7, &spilled(budget, tile));
+            let (vals, vecs) = rep.result;
+            let stats = rep.meta.residency.expect("stats");
             assert_eq!(vals_ref, vals, "tile={tile} budget={budget}");
             assert_eq!(vecs_ref.max_abs_diff(&vecs), 0.0, "tile={tile} budget={budget}");
             assert_eq!(
@@ -71,9 +84,10 @@ fn lanczos_is_bit_identical_across_tiles_and_budgets() {
             assert_eq!(stats.computes, N.div_ceil(tile.min(N)) as u64);
             assert!(stats.hits() > 0, "Lanczos re-reads must hit the residency layer");
 
-            // cached (RAM-only budget gate, the *_budgeted contract)
+            // cached (RAM-only budget gate, the old *_budgeted contract)
             o.reset_entries();
-            let (vals_b, vecs_b) = stream::top_k_eigs_budgeted(&src, &u, 3, 7, cfg, budget);
+            let (vals_b, vecs_b) =
+                exec::top_k_eigs(&src, &u, 3, 7, &cached(budget, tile)).result;
             assert_eq!(vals_ref, vals_b, "tile={tile} budget={budget}");
             assert_eq!(vecs_ref.max_abs_diff(&vecs_b), 0.0);
             if budget == u64::MAX {
@@ -92,11 +106,10 @@ fn entry_counter_proves_kernel_eval_elimination() {
     let cols = landmarks();
     let u = Matrix::identity(C);
     let src = OracleColumnsSource::new(&o, &cols);
-    let cfg = StreamConfig::tiled(7);
     let k = 5; // ≥ 5 Lanczos iterations, 2 panel passes per matvec
 
     o.reset_entries();
-    let (vals_plain, _) = stream::top_k_eigs(&src, &u, k, 9, cfg);
+    let (vals_plain, _) = exec::top_k_eigs(&src, &u, k, 9, &ExecPolicy::streamed(7)).result;
     let entries_plain = o.entries_observed();
     assert!(
         entries_plain >= 5 * (N * C) as u64,
@@ -105,8 +118,9 @@ fn entry_counter_proves_kernel_eval_elimination() {
 
     for budget in [0u64, u64::MAX] {
         o.reset_entries();
-        let rc = ResidencyConfig::new(budget).with_tile_rows(7);
-        let (vals, _, stats) = stream::top_k_eigs_resident(&src, &u, k, 9, cfg, &rc);
+        let rep = exec::top_k_eigs(&src, &u, k, 9, &spilled(budget, 7));
+        let (vals, _) = rep.result;
+        let stats = rep.meta.residency.expect("stats");
         assert_eq!(
             o.entries_observed(),
             (N * C) as u64,
@@ -132,17 +146,16 @@ fn regularized_solve_round_trips_through_spill() {
     let u = g.matmul_tr(&g); // SPSD
     let y: Vec<f64> = (0..N).map(|i| (i as f64 * 0.4).cos()).collect();
     let src = OracleColumnsSource::new(&o, &cols);
-    let w_ref = stream::solve_regularized(&src, &u, 0.3, &y, StreamConfig::whole());
+    let w_ref = exec::solve_regularized(&src, &u, 0.3, &y, &ExecPolicy::Materialized).result;
     for tile in [1usize, 7, 64, N] {
-        let cfg = StreamConfig::tiled(tile);
         for budget in budgets(tile) {
-            let rc = ResidencyConfig::new(budget).with_tile_rows(tile);
             o.reset_entries();
-            let (w, _) = stream::solve_regularized_resident(&src, &u, 0.3, &y, cfg, &rc);
+            let w = exec::solve_regularized(&src, &u, 0.3, &y, &spilled(budget, tile)).result;
             assert_eq!(w_ref, w, "tile={tile} budget={budget}");
             assert_eq!(o.entries_observed(), (N * C) as u64);
-            let w_b = stream::solve_regularized_budgeted(&src, &u, 0.3, &y, cfg, budget);
-            assert_eq!(w_ref, w_b, "budgeted tile={tile} budget={budget}");
+            let w_b =
+                exec::solve_regularized(&src, &u, 0.3, &y, &cached(budget, tile)).result;
+            assert_eq!(w_ref, w_b, "cached tile={tile} budget={budget}");
         }
     }
 }
@@ -156,23 +169,16 @@ fn leverage_builds_are_bit_identical_through_residency() {
     let o = oracle();
     let p = {
         let mut rng = Rng::new(21);
-        spsd::uniform_p(N, C, &mut rng)
+        fastspsd::spsd::uniform_p(N, C, &mut rng)
     };
     for tile in [1usize, 7, 64, N] {
         for cfg in [FastConfig::uniform(20), FastConfig::leverage(20)] {
             let mut r1 = Rng::new(99);
-            let a = spsd::fast_streamed(&o, &p, cfg, StreamConfig::tiled(tile), &mut r1);
+            let a = exec::fast(&o, &p, cfg, &ExecPolicy::streamed(tile), &mut r1).result;
             for budget in budgets(tile) {
                 let mut r2 = Rng::new(99);
-                let rc = ResidencyConfig::new(budget).with_tile_rows(tile);
-                let (b, stats) = spsd::fast_streamed_resident(
-                    &o,
-                    &p,
-                    cfg,
-                    StreamConfig::tiled(tile),
-                    &rc,
-                    &mut r2,
-                );
+                let rep = exec::fast(&o, &p, cfg, &spilled(budget, tile), &mut r2);
+                let (b, stats) = (rep.result, rep.meta.residency.expect("stats"));
                 assert_eq!(a.c.max_abs_diff(&b.c), 0.0, "{} C tile={tile} budget={budget}", a.method);
                 assert_eq!(a.u.max_abs_diff(&b.u), 0.0, "{} U tile={tile} budget={budget}", a.method);
                 assert_eq!(
@@ -192,9 +198,8 @@ fn leverage_builds_are_bit_identical_through_residency() {
             }
         }
         // Nyström through the same layer
-        let a = spsd::nystrom_streamed(&o, &p, StreamConfig::tiled(tile));
-        let rc = ResidencyConfig::new(0).with_tile_rows(tile);
-        let (b, _) = spsd::nystrom_resident(&o, &p, StreamConfig::tiled(tile), &rc);
+        let a = exec::nystrom(&o, &p, &ExecPolicy::streamed(tile)).result;
+        let b = exec::nystrom(&o, &p, &spilled(0, tile)).result;
         assert_eq!(a.c.max_abs_diff(&b.c), 0.0);
         assert_eq!(a.u.max_abs_diff(&b.u), 0.0);
     }

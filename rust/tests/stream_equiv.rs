@@ -8,11 +8,14 @@
 
 use fastspsd::coordinator::oracle::{DenseOracle, KernelOracle, RbfOracle};
 use fastspsd::cur::{self, FastCurConfig};
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::sketch::SketchKind;
 use fastspsd::spsd::{self, FastConfig, LeverageBasis};
 use fastspsd::stream::{self, MatrixSource, StreamConfig};
 use fastspsd::util::Rng;
+
+const MAT: ExecPolicy = ExecPolicy::Materialized;
 use std::sync::Arc;
 
 const N: usize = 151; // prime: no tile size divides it
@@ -49,10 +52,10 @@ fn fast_streamed_matches_materialized_for_every_sketch_family() {
             force_p_in_s: force_p,
             leverage_basis: LeverageBasis::Gram,
         };
-        let mat = spsd::fast(&o, &p, cfg, &mut Rng::new(7));
+        let mat = exec::fast(&o, &p, cfg, &MAT, &mut Rng::new(7)).result;
         let mat_full = mat.materialize();
         for tile in TILES {
-            let st = spsd::fast_streamed(&o, &p, cfg, StreamConfig::tiled(tile), &mut Rng::new(7));
+            let st = exec::fast(&o, &p, cfg, &ExecPolicy::streamed(tile), &mut Rng::new(7)).result;
             assert_eq!(
                 st.c.max_abs_diff(&mat.c),
                 0.0,
@@ -87,19 +90,22 @@ fn approx_leverage_error_within_1p5x_of_materialized_svd_leverage() {
     let mut e_svd = 0.0;
     for seed in 0..5u64 {
         let p = spsd::uniform_p(N, 10, &mut Rng::new(40 + seed));
-        let a = spsd::fast_streamed(
+        let a = exec::fast(
             &o,
             &p,
             FastConfig::leverage(30),
-            StreamConfig::tiled(32),
+            &ExecPolicy::streamed(32),
             &mut Rng::new(70 + seed),
-        );
-        let b = spsd::fast(
+        )
+        .result;
+        let b = exec::fast(
             &o,
             &p,
             FastConfig::leverage(30).with_basis(LeverageBasis::ExactSvd),
+            &MAT,
             &mut Rng::new(70 + seed),
-        );
+        )
+        .result;
         e_gram += k.sub(&a.materialize()).fro_norm_sq() / kf;
         e_svd += k.sub(&b.materialize()).fro_norm_sq() / kf;
     }
@@ -121,12 +127,19 @@ fn sketched_leverage_basis_streams_within_tolerance() {
     let o = rbf_oracle(N, 33);
     let k = o.full();
     let cfg = FastConfig::leverage(30).with_basis(LeverageBasis::Sketched { m: 64 });
-    let whole = spsd::fast_streamed(&o, &spsd::uniform_p(N, 10, &mut Rng::new(50)), cfg, StreamConfig::whole(), &mut Rng::new(51));
+    let whole = exec::fast(
+        &o,
+        &spsd::uniform_p(N, 10, &mut Rng::new(50)),
+        cfg,
+        &ExecPolicy::Streamed(StreamConfig::whole()),
+        &mut Rng::new(51),
+    )
+    .result;
     let e_whole = k.sub(&whole.materialize()).fro_norm_sq() / k.fro_norm_sq();
     assert!(e_whole.is_finite() && e_whole < 1.0, "sketched basis err {e_whole}");
     for tile in [7usize, 64] {
         let p = spsd::uniform_p(N, 10, &mut Rng::new(50));
-        let st = spsd::fast_streamed(&o, &p, cfg, StreamConfig::tiled(tile), &mut Rng::new(51));
+        let st = exec::fast(&o, &p, cfg, &ExecPolicy::streamed(tile), &mut Rng::new(51)).result;
         assert_eq!(st.c.max_abs_diff(&whole.c), 0.0, "C is a pure gather (tile={tile})");
         let e_st = k.sub(&st.materialize()).fro_norm_sq() / k.fro_norm_sq();
         assert!(
@@ -140,15 +153,15 @@ fn sketched_leverage_basis_streams_within_tolerance() {
 fn nystrom_and_prototype_streamed_match() {
     let o = rbf_oracle(N, 3);
     let p = spsd::uniform_p(N, 12, &mut Rng::new(4));
-    let ny = spsd::nystrom(&o, &p);
-    let proto = spsd::prototype(&o, &p);
+    let ny = exec::nystrom(&o, &p, &MAT).result;
+    let proto = exec::prototype(&o, &p, &MAT).result;
     for tile in TILES {
-        let ny_s = spsd::nystrom_streamed(&o, &p, StreamConfig::tiled(tile));
+        let ny_s = exec::nystrom(&o, &p, &ExecPolicy::streamed(tile)).result;
         assert_eq!(ny_s.c.max_abs_diff(&ny.c), 0.0, "tile={tile}");
         assert_eq!(ny_s.u.max_abs_diff(&ny.u), 0.0, "tile={tile}");
         assert_eq!(ny_s.entries_observed, ny.entries_observed);
 
-        let proto_s = spsd::prototype_streamed(&o, &p, StreamConfig::tiled(tile));
+        let proto_s = exec::prototype(&o, &p, &ExecPolicy::streamed(tile)).result;
         assert_eq!(proto_s.c.max_abs_diff(&proto.c), 0.0, "tile={tile}");
         let err = rel_fro(&proto_s.u, &proto.u);
         assert!(err <= 1e-12, "prototype tile={tile}: rel err {err}");
@@ -166,15 +179,11 @@ fn dense_oracle_selection_paths_are_bit_identical() {
     let k = g.matmul_tr(&g);
     let o = DenseOracle::new(k);
     let p = spsd::uniform_p(97, 9, &mut Rng::new(6));
-    let mat = spsd::fast(&o, &p, FastConfig::uniform(27), &mut Rng::new(8));
+    let mat = exec::fast(&o, &p, FastConfig::uniform(27), &MAT, &mut Rng::new(8)).result;
     for tile in [1usize, 13, 97] {
-        let st = spsd::fast_streamed(
-            &o,
-            &p,
-            FastConfig::uniform(27),
-            StreamConfig::tiled(tile),
-            &mut Rng::new(8),
-        );
+        let st =
+            exec::fast(&o, &p, FastConfig::uniform(27), &ExecPolicy::streamed(tile), &mut Rng::new(8))
+                .result;
         assert_eq!(st.c.max_abs_diff(&mat.c), 0.0);
         assert_eq!(st.u.max_abs_diff(&mat.u), 0.0);
     }
@@ -192,16 +201,11 @@ fn cur_streamed_matches_materialized_across_tiles() {
         let mut r1 = Rng::new(11);
         let cols = cur::select_uniform(73, 8, &mut r1);
         let rows = cur::select_uniform(106, 8, &mut r1);
-        let mat = cur::cur_fast(&a, &cols, &rows, cfg, &mut Rng::new(13));
+        let mat = exec::cur_fast(&a, &cols, &rows, cfg, &MAT, &mut Rng::new(13)).result;
         for tile in [1usize, 7, 64, 106] {
-            let st = cur::cur_fast_streamed(
-                &a,
-                &cols,
-                &rows,
-                cfg,
-                StreamConfig::tiled(tile),
-                &mut Rng::new(13),
-            );
+            let st =
+                exec::cur_fast(&a, &cols, &rows, cfg, &ExecPolicy::streamed(tile), &mut Rng::new(13))
+                    .result;
             assert_eq!(st.c.max_abs_diff(&mat.c), 0.0, "C tile={tile}");
             assert_eq!(st.r.max_abs_diff(&mat.r), 0.0, "R tile={tile}");
             assert_eq!(st.u.max_abs_diff(&mat.u), 0.0, "{} U tile={tile}", mat.method);
@@ -213,7 +217,7 @@ fn cur_streamed_matches_materialized_across_tiles() {
 fn implicit_matvec_and_topk_match_materialized_approx() {
     let o = rbf_oracle(120, 14);
     let p = spsd::uniform_p(120, 10, &mut Rng::new(15));
-    let approx = spsd::fast(&o, &p, FastConfig::uniform(30), &mut Rng::new(16));
+    let approx = exec::fast(&o, &p, FastConfig::uniform(30), &MAT, &mut Rng::new(16)).result;
     let dense = approx.materialize();
 
     // matvec against the implicit C U C^T, re-streaming C from the oracle
@@ -227,7 +231,7 @@ fn implicit_matvec_and_topk_match_materialized_approx() {
     }
 
     // top-k Lanczos against the implicit operator vs the O(nc²) eig
-    let (vals, vecs) = stream::top_k_eigs(&src, &approx.u, 4, 21, StreamConfig::tiled(32));
+    let (vals, vecs) = exec::top_k_eigs(&src, &approx.u, 4, 21, &ExecPolicy::streamed(32)).result;
     let (vals_mat, _) = approx.eig_k(4);
     assert_eq!((vecs.rows(), vecs.cols()), (120, 4));
     for i in 0..4 {

@@ -11,9 +11,9 @@
 
 use fastspsd::benchkit::alloc::{self, AllocGauge, CountingAlloc};
 use fastspsd::coordinator::oracle::RbfOracle;
+use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::spsd::{self, FastConfig};
-use fastspsd::stream::StreamConfig;
 use fastspsd::util::Rng;
 use std::sync::Arc;
 
@@ -49,8 +49,9 @@ fn streamed_builds_respect_the_memory_bound() {
     let n1 = 600;
     let o1 = oracle(n1, 1);
     let p1 = spsd::uniform_p(n1, C, &mut Rng::new(2));
+    let tiled = ExecPolicy::streamed(TILE);
     let fast_extra_1 = gauge(|| {
-        spsd::fast_streamed(&o1, &p1, FastConfig::uniform(S), StreamConfig::tiled(TILE), &mut Rng::new(3))
+        exec::fast(&o1, &p1, FastConfig::uniform(S), &tiled, &mut Rng::new(3)).result
     });
     let c_bytes_1 = n1 * C * F;
     let bound_1 = c_bytes_1 + 24 * (TILE * C + S * S) * F + 256 * 1024;
@@ -65,7 +66,7 @@ fn streamed_builds_respect_the_memory_bound() {
     let o2 = oracle(n2, 4);
     let p2 = spsd::uniform_p(n2, C, &mut Rng::new(5));
     let fast_extra_2 = gauge(|| {
-        spsd::fast_streamed(&o2, &p2, FastConfig::uniform(S), StreamConfig::tiled(TILE), &mut Rng::new(6))
+        exec::fast(&o2, &p2, FastConfig::uniform(S), &tiled, &mut Rng::new(6)).result
     });
     let c_growth = (n2 - n1) * C * F;
     assert!(
@@ -80,13 +81,7 @@ fn streamed_builds_respect_the_memory_bound() {
     // historical resident-SVD scoring would add an O(n·c) workspace here
     // and blow the n-independence check below.
     let lev_extra_1 = gauge(|| {
-        spsd::fast_streamed(
-            &o1,
-            &p1,
-            FastConfig::leverage(S),
-            StreamConfig::tiled(TILE),
-            &mut Rng::new(7),
-        )
+        exec::fast(&o1, &p1, FastConfig::leverage(S), &tiled, &mut Rng::new(7)).result
     });
     assert!(
         lev_extra_1 <= bound_1,
@@ -96,13 +91,7 @@ fn streamed_builds_respect_the_memory_bound() {
     // n-independence for leverage: tripling n must only grow the peak by
     // ~the C output's growth, exactly like the uniform family.
     let lev_extra_2 = gauge(|| {
-        spsd::fast_streamed(
-            &o2,
-            &p2,
-            FastConfig::leverage(S),
-            StreamConfig::tiled(TILE),
-            &mut Rng::new(8),
-        )
+        exec::fast(&o2, &p2, FastConfig::leverage(S), &tiled, &mut Rng::new(8)).result
     });
     assert!(
         lev_extra_2 <= lev_extra_1 + c_growth + 128 * 1024,
@@ -111,8 +100,8 @@ fn streamed_builds_respect_the_memory_bound() {
     );
 
     // --- prototype: streamed tiles replace the n x n materialization.
-    let proto_streamed = gauge(|| spsd::prototype_streamed(&o1, &p1, StreamConfig::tiled(TILE)));
-    let proto_materialized = gauge(|| spsd::prototype(&o1, &p1));
+    let proto_streamed = gauge(|| exec::prototype(&o1, &p1, &tiled).result);
+    let proto_materialized = gauge(|| exec::prototype(&o1, &p1, &ExecPolicy::Materialized).result);
     let k_bytes = n1 * n1 * F;
     assert!(
         proto_materialized >= k_bytes,
@@ -125,8 +114,8 @@ fn streamed_builds_respect_the_memory_bound() {
 
     // --- and the streamed result is still the same model (sanity, so the
     // gauge can't pass on a build that silently did nothing).
-    let a = spsd::prototype_streamed(&o1, &p1, StreamConfig::tiled(TILE));
-    let b = spsd::prototype(&o1, &p1);
+    let a = exec::prototype(&o1, &p1, &tiled).result;
+    let b = exec::prototype(&o1, &p1, &ExecPolicy::Materialized).result;
     let rel = a.u.sub(&b.u).fro_norm() / b.u.fro_norm().max(1e-300);
     assert!(rel <= 1e-12, "streamed prototype diverged: {rel}");
 }
