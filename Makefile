@@ -17,12 +17,21 @@
 #   make artifacts    — AOT-compile the PJRT kernel artifacts (needs the
 #                       python/jax toolchain; optional — everything falls
 #                       back to the pure-rust engine without them).
+#   make chaos        — the deterministic fault-injection matrix
+#                       (rust/tests/chaos.rs) over the pinned seed set:
+#                       {spill write, spill read, oracle tile, consumer
+#                       fold} × {transient, persistent} must end typed or
+#                       degraded, never hung. Part of `make ci`.
 #   make test / build — the tier-1 pieces individually.
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-quick ci doc perf-check artifacts toolchain-guard
+# The pinned chaos seed set: deterministic, replayed by `make chaos` and
+# overridable for exploration (FASTSPSD_CHAOS_SEEDS="1 2 3" make chaos).
+FASTSPSD_CHAOS_SEEDS ?= 11 23 47
+
+.PHONY: build test bench bench-quick chaos ci doc perf-check artifacts toolchain-guard
 
 toolchain-guard:
 	@command -v $(CARGO) >/dev/null 2>&1 || { \
@@ -46,7 +55,10 @@ bench: toolchain-guard
 	$(CARGO) bench --bench hotpath
 	$(CARGO) bench --bench stream
 
-ci: toolchain-guard build test doc
+chaos: toolchain-guard
+	FASTSPSD_CHAOS_SEEDS="$(FASTSPSD_CHAOS_SEEDS)" $(CARGO) test -q --test chaos
+
+ci: toolchain-guard build test chaos doc
 	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
 	  $(CARGO) clippy --release -- -D warnings; \
 	else \

@@ -195,6 +195,93 @@ fn main() {
         ));
     });
 
+    // ---- robustness: degrade-don't-die service under a memory cap -------
+    // A burst against a cap sized for one uniform-fast request: nystrom
+    // requests queue and complete as the meter drains; leverage requests
+    // can never fit as asked and are served down the degrade ladder
+    // (leverage → uniform). The counters land in BENCH_stream.json so the
+    // queue/degrade/reject trajectory is tracked like the timings.
+    {
+        use fastspsd::coordinator::{
+            planner, ApproxRequest, ApproxService, MethodSpec, ServiceConfig,
+        };
+        use fastspsd::sketch::SketchKind;
+        let n_svc = if quick { 400 } else { 800 };
+        let (c_svc, s_svc) = (16, 48);
+        let mut rng = Rng::new(9);
+        let svc_oracle: Arc<dyn KernelOracle + Send + Sync> =
+            Arc::new(RbfOracle::cpu(Arc::new(Matrix::randn(n_svc, 16, &mut rng)), 0.4));
+        let uni = MethodSpec::Fast { s: s_svc, kind: SketchKind::Uniform };
+        let lev = MethodSpec::Fast { s: s_svc, kind: SketchKind::Leverage { scaled: false } };
+        let cap = planner::predicted_policy_peak_bytes(
+            n_svc,
+            c_svc,
+            &uni,
+            &ExecPolicy::Materialized,
+        );
+        let svc = ApproxService::new(
+            Arc::clone(&svc_oracle),
+            ServiceConfig { workers: 2, memory_cap: Some(cap), ..Default::default() },
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let burst = 12u64;
+        let sw = std::time::Instant::now();
+        for i in 0..burst {
+            let method = if i % 6 == 5 { lev } else { MethodSpec::Nystrom };
+            svc.submit(
+                ApproxRequest {
+                    id: i,
+                    method,
+                    c: c_svc,
+                    k: 4,
+                    seed: i,
+                    policy: None,
+                    deadline: None,
+                },
+                tx.clone(),
+            );
+        }
+        svc.drain();
+        drop(tx);
+        let resps: Vec<_> = rx.iter().collect();
+        println!(
+            "  capped service burst: {} requests in {:.3} s (cap = one uniform-fast)",
+            resps.len(),
+            sw.elapsed().as_secs_f64()
+        );
+        let m = svc.metrics();
+        suite.counter("service.requests", m.requests.get() as f64);
+        suite.counter("service.completed", m.completed.get() as f64);
+        suite.counter("service.queued", m.queued.get() as f64);
+        suite.counter("service.degraded", m.degraded.get() as f64);
+        suite.counter("service.rejected_overload", m.rejected_overload.get() as f64);
+        suite.counter("service.expired_deadline", m.expired_deadline.get() as f64);
+        suite.counter("service.faulted", m.faulted.get() as f64);
+        suite.counter("service.queue_wait_p95_secs", m.queue_wait.quantile(0.95).as_secs_f64());
+        suite.counter("service.mem_in_use_after", m.mem_in_use.get() as f64);
+    }
+
+    // ---- robustness: transient spill IO fault absorbed by retries -------
+    {
+        use fastspsd::testkit::faults::{self, FaultPlan, FaultPoint, FaultSpec};
+        let plan = std::sync::Arc::new(
+            FaultPlan::none().fail(FaultPoint::SpillWrite, FaultSpec::transient(1)),
+        );
+        let spill = ExecPolicy::resident(0).with_tile_rows(DEFAULT_TILE);
+        let armed = faults::arm(std::sync::Arc::clone(&plan));
+        let st = exec::top_k_eigs(&src, &u_id, k_eigs, 7, &spill)
+            .meta
+            .residency
+            .expect("resident policies report stats");
+        drop(armed);
+        println!(
+            "  transient spill-write fault: {} retries absorbed, {} spill hits",
+            st.io_retries, st.spill_hits
+        );
+        suite.counter("residency.io_retries", st.io_retries as f64);
+        suite.counter("residency.spill_hits_after_fault", st.spill_hits as f64);
+    }
+
     // Quick smoke runs land in a separate file so they never clobber the
     // full-budget perf trajectory — unless commit mode (`make bench-quick`)
     // asks for the canonical artifact.

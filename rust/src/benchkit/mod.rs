@@ -82,6 +82,10 @@ pub struct BenchSuite {
     /// JSON so smoke numbers are never mistaken for full-budget ones).
     pub quick: bool,
     pub results: Vec<Stats>,
+    /// Named scalar counters recorded alongside the timings (service
+    /// robustness counters — queue waits, degraded serves, IO retries —
+    /// land here and in the JSON's `"counters"` object).
+    pub counters: Vec<(String, f64)>,
 }
 
 /// True when `FASTSPSD_BENCH_QUICK` requests a fast smoke run.
@@ -122,6 +126,7 @@ impl BenchSuite {
             min_iters: 3,
             quick: quick_mode(),
             results: Vec::new(),
+            counters: Vec::new(),
         }
     }
 
@@ -170,6 +175,18 @@ impl BenchSuite {
         println!("\n== {} ==", self.title);
     }
 
+    /// Record (and print) a named scalar counter. Later values under the
+    /// same name overwrite earlier ones, so a suite can update a counter
+    /// as sections refine it.
+    pub fn counter(&mut self, name: &str, value: f64) {
+        println!("  {name:<44} {value}");
+        if let Some(slot) = self.counters.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = value;
+        } else {
+            self.counters.push((name.to_string(), value));
+        }
+    }
+
     /// Mean of the named result, if present (for speedup summaries).
     pub fn mean_of(&self, name: &str) -> Option<f64> {
         self.results.iter().find(|s| s.name == name).map(|s| s.mean_secs())
@@ -196,7 +213,17 @@ impl BenchSuite {
                 if i + 1 < self.results.len() { "," } else { "" },
             ));
         }
-        out.push_str("  ]\n}\n");
+        out.push_str("  ],\n");
+        out.push_str("  \"counters\": {");
+        for (i, (name, value)) in self.counters.iter().enumerate() {
+            out.push_str(&format!(
+                "{}\"{}\": {}",
+                if i == 0 { "" } else { ", " },
+                escape(name),
+                if value.is_finite() { format!("{value}") } else { "null".into() },
+            ));
+        }
+        out.push_str("}\n}\n");
         out
     }
 
@@ -271,11 +298,15 @@ mod tests {
         suite.bench_flops("with flops", 1e9, || {
             black_box(2);
         });
+        suite.counter("service.queued", 3.0);
+        suite.counter("service.queued", 4.0); // overwrites
+        suite.counter("service.degraded", 0.0);
         let j = suite.to_json();
         assert!(j.contains("\"suite\": \"json \\\"suite\\\"\""));
         assert!(j.contains("\"quick\": "));
         assert!(j.contains("\"name\": \"plain\""));
         assert!(j.contains("\"gflops\": null"));
+        assert!(j.contains("\"counters\": {\"service.queued\": 4, \"service.degraded\": 0}"));
         assert!(j.matches('{').count() == j.matches('}').count());
         // trailing-comma discipline: one comma between the two results
         assert!(j.contains("}},\n") || j.contains("},\n"));

@@ -142,14 +142,32 @@ impl Histogram {
 }
 
 /// All service-level metrics.
+///
+/// The old conflated `rejected` shed counter is split into its three
+/// failure modes (`rejected_overload` / `expired_deadline` / `faulted`),
+/// and the degrade-don't-die admission path adds `queued` and `degraded`.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests: Counter,
     pub completed: Counter,
+    /// Requests whose algorithm returned a typed error (`Err`, not a
+    /// panic — those are `faulted`).
     pub failed: Counter,
-    /// Requests shed at submit (e.g. the memory cap — see
-    /// `ServiceConfig::memory_cap`).
-    pub rejected: Counter,
+    /// Requests refused with `Overloaded` at submit: the admission queue
+    /// was full, or no rung of the degrade ladder fits the memory cap.
+    pub rejected_overload: Counter,
+    /// Queued requests reaped after their deadline passed without the
+    /// gauge ever opening enough headroom.
+    pub expired_deadline: Counter,
+    /// Requests whose worker panicked (isolated: the panic is caught, the
+    /// reservation released, and a typed `Faulted` reply sent).
+    pub faulted: Counter,
+    /// Requests that waited in the admission queue (instead of being
+    /// shed) before being served or reaped.
+    pub queued: Counter,
+    /// Requests served by a rung of the degrade ladder rather than
+    /// exactly as requested.
+    pub degraded: Counter,
     /// Sum of `predicted_peak_bytes` across in-flight requests: the
     /// service-level working-set meter the memory cap gates on.
     pub mem_in_use: Gauge,

@@ -9,7 +9,9 @@
 //!   into fixed 256x256 AOT shapes, pads rows/features with zeros, batches
 //!   the tiles to the PJRT runtime thread, and crops + assembles results.
 //! - [`service`] — the request loop: bounded-queue approximation service
-//!   with worker routing, per-request timing, and metrics.
+//!   with worker routing, per-request timing, metrics, and the
+//!   degrade-don't-die admission path (bounded deadline-reaped queue +
+//!   [`planner::degrade_ladder`] serving under memory pressure).
 //! - [`metrics`] — counters + latency histograms.
 
 pub mod engine;
@@ -20,4 +22,7 @@ pub mod service;
 
 pub use engine::KernelEngine;
 pub use oracle::{DenseOracle, KernelOracle, PolyOracle, RbfOracle};
-pub use service::{ApproxRequest, ApproxResponse, ApproxService, MethodSpec, ServiceConfig};
+pub use planner::{degrade_ladder, DegradeStep};
+pub use service::{
+    ApproxRequest, ApproxResponse, ApproxService, MethodSpec, ServiceConfig, ServiceError,
+};

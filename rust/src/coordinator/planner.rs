@@ -17,7 +17,7 @@
 //! pragmatically (c = 2k/ε, matching the paper's near-optimal column
 //! selection results).
 
-use crate::exec::ExecPolicy;
+use crate::exec::{DegradeAction, DegradeInfo, ExecPolicy};
 use crate::sketch::SketchKind;
 use crate::stream::{panel_bytes, StreamConfig, DEFAULT_QUEUE_DEPTH, DEFAULT_RESIDENT_TILE_ROWS};
 
@@ -445,6 +445,162 @@ fn plan_s(p: &Plan) -> usize {
     method_s(&p.method, p.c)
 }
 
+// ---------------------------------------------------------------------
+// The degrade-don't-die ladder (ISSUE 6)
+// ---------------------------------------------------------------------
+
+/// One rung of the degrade ladder: a cheaper way to serve the same
+/// request, priced by the peak model, with the accuracy trade recorded in
+/// `info` so responses can report it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeStep {
+    pub method: MethodSpec,
+    pub c: usize,
+    pub policy: ExecPolicy,
+    pub predicted_peak_bytes: u64,
+    pub info: DegradeInfo,
+}
+
+/// The ladder a loaded service walks instead of shedding: each rung costs
+/// strictly fewer predicted peak bytes than the one before, ordered by
+/// accuracy price —
+///
+/// 1. **Policy tightened** (free): a traversal with a smaller working set
+///    for the *same* computation — prototype materialized → streamed,
+///    resident cache budget → 0, streamed column-selection gathers →
+///    materialized (drops the live-tile term).
+/// 2. **Sampling relaxed** (mild): leverage → uniform column selection,
+///    dropping the `2c²` score state and the extra pass; the uniform
+///    bound is weaker but still holds (Gittens–Mahoney, arXiv 1303.1849).
+/// 3. **Sketch shrunk** (graceful): `c` halves toward the rank floor
+///    `max(k+1, 2)`, with `s` (and CUR's `r`) halved alongside — the
+///    error bound degrades continuously in `c`, which is exactly the
+///    lever the theory says to pull before refusing service.
+///
+/// Returns every rung below the requested configuration, best first. An
+/// empty ladder means the request is already at the floor.
+pub fn degrade_ladder(
+    n: usize,
+    k: usize,
+    method: &MethodSpec,
+    c: usize,
+    policy: &ExecPolicy,
+) -> Vec<DegradeStep> {
+    let n = n.max(1);
+    let mut rungs: Vec<DegradeStep> = Vec::new();
+    let mut m = *method;
+    let mut cc = c.clamp(1, n);
+    let mut pol = policy.clone();
+    let mut actions: Vec<DegradeAction> = Vec::new();
+    let mut predicted = predicted_policy_peak_bytes(n, cc, &m, &pol);
+
+    let mut push = |rungs: &mut Vec<DegradeStep>,
+                    m: MethodSpec,
+                    cc: usize,
+                    pol: &ExecPolicy,
+                    predicted: u64,
+                    actions: &[DegradeAction]| {
+        rungs.push(DegradeStep {
+            method: m,
+            c: cc,
+            policy: pol.clone(),
+            predicted_peak_bytes: predicted,
+            info: DegradeInfo {
+                rung: rungs.len() + 1,
+                requested_c: c,
+                c: cc,
+                actions: actions.to_vec(),
+            },
+        });
+    };
+
+    // Rung: tighten the execution policy — zero accuracy cost, taken only
+    // when the peak model says it actually helps.
+    if let Some(tight) = tightened_policy(n, &m, &pol) {
+        let p2 = predicted_policy_peak_bytes(n, cc, &m, &tight);
+        if p2 < predicted {
+            pol = tight;
+            predicted = p2;
+            actions.push(DegradeAction::PolicyTightened);
+            push(&mut rungs, m, cc, &pol, predicted, &actions);
+        }
+    }
+
+    // Rung: leverage → uniform sampling.
+    if let MethodSpec::Fast { s, kind } = m {
+        if matches!(kind, SketchKind::Leverage { .. }) {
+            m = MethodSpec::Fast { s, kind: SketchKind::Uniform };
+            predicted = predicted_policy_peak_bytes(n, cc, &m, &pol);
+            actions.push(DegradeAction::SamplingRelaxed);
+            push(&mut rungs, m, cc, &pol, predicted, &actions);
+        }
+    }
+
+    // Rungs: halve the sketch sizes toward the rank floor.
+    let floor = (k + 1).clamp(2, cc.max(2));
+    loop {
+        let next_c = (cc / 2).clamp(floor.min(cc), cc);
+        let shrunk = shrink_method(&m, next_c, n);
+        if next_c == cc && shrunk == m {
+            break;
+        }
+        cc = next_c;
+        m = shrunk;
+        let p2 = predicted_policy_peak_bytes(n, cc, &m, &pol);
+        // halving can only shrink the model; keep the rung ordering honest
+        predicted = p2.min(predicted);
+        actions.push(DegradeAction::SketchShrunk);
+        push(&mut rungs, m, cc, &pol, p2, &actions);
+    }
+
+    rungs
+}
+
+/// A traversal of the same computation with a strictly smaller modeled
+/// working set, when one exists.
+fn tightened_policy(n: usize, method: &MethodSpec, policy: &ExecPolicy) -> Option<ExecPolicy> {
+    match (method, policy) {
+        // The prototype's materialized path holds the full n x n tile;
+        // streaming it caps live tiles at the pipeline depth.
+        (MethodSpec::Prototype, p) if p.planned_tile_rows(n).is_none() => {
+            Some(ExecPolicy::Streamed(StreamConfig::tiled((n / 8).max(1))))
+        }
+        // A resident cache budget is pure working-set headroom; dropping
+        // it to 0 keeps results bit-identical (spill still dedups reads).
+        (_, ExecPolicy::Resident { budget, spill, tile_rows, spill_dir }) if *budget > 0 => {
+            Some(ExecPolicy::Resident {
+                budget: 0,
+                spill: *spill,
+                tile_rows: *tile_rows,
+                spill_dir: spill_dir.clone(),
+            })
+        }
+        // Streamed column gathers pay live-tile bytes on top of the panel
+        // they assemble anyway; the materialized gather drops that term.
+        (MethodSpec::Nystrom, ExecPolicy::Streamed(_)) => Some(ExecPolicy::Materialized),
+        (MethodSpec::Fast { kind, .. }, ExecPolicy::Streamed(_))
+            if kind.is_column_selection() =>
+        {
+            Some(ExecPolicy::Materialized)
+        }
+        _ => None,
+    }
+}
+
+/// Halve a method's own sketch sizes consistently with a new `c`.
+fn shrink_method(m: &MethodSpec, new_c: usize, n: usize) -> MethodSpec {
+    match *m {
+        MethodSpec::Nystrom | MethodSpec::Prototype => *m,
+        MethodSpec::Fast { s, kind } => {
+            MethodSpec::Fast { s: (s / 2).max(2 * new_c).min(s).min(n), kind }
+        }
+        MethodSpec::Cur { r, s } => MethodSpec::Cur {
+            r: (r / 2).max(2).min(r),
+            s: (s / 2).max(2 * new_c).min(s).min(n),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -814,5 +970,70 @@ mod tests {
             other => panic!("expected a resident policy, got {other:?}"),
         }
         assert_eq!(default_policy(), ExecPolicy::Materialized);
+    }
+
+    #[test]
+    fn degrade_ladder_is_monotone_and_floored() {
+        let (n, k) = (5_000usize, 5usize);
+        let m = MethodSpec::Fast { s: 256, kind: SketchKind::Leverage { scaled: true } };
+        let ladder = degrade_ladder(n, k, &m, 64, &ExecPolicy::streamed(64));
+        assert!(!ladder.is_empty());
+        let rung0 = predicted_policy_peak_bytes(n, 64, &m, &ExecPolicy::streamed(64));
+        let mut prev = rung0;
+        for (i, step) in ladder.iter().enumerate() {
+            assert_eq!(step.info.rung, i + 1);
+            assert_eq!(step.info.requested_c, 64);
+            assert!(
+                step.predicted_peak_bytes <= prev,
+                "rung {}: {} > {}",
+                i + 1,
+                step.predicted_peak_bytes,
+                prev
+            );
+            assert!(step.c >= k + 1, "c never shrinks below the rank floor");
+            assert_eq!(step.info.c, step.c);
+            prev = step.predicted_peak_bytes;
+        }
+        // the ladder must end at the floor with uniform sampling
+        let last = ladder.last().unwrap();
+        assert_eq!(last.c, k + 1);
+        assert!(matches!(last.method, MethodSpec::Fast { kind: SketchKind::Uniform, .. }));
+        assert!(last.info.actions.contains(&DegradeAction::SamplingRelaxed));
+        assert!(last.info.actions.contains(&DegradeAction::SketchShrunk));
+        assert!(last.predicted_peak_bytes < rung0);
+    }
+
+    #[test]
+    fn degrade_ladder_tightens_prototype_and_respects_floor() {
+        // Materialized prototype: first rung streams it (free), then c
+        // halves. Every rung's prediction must strictly improve on rung 0.
+        let (n, k) = (2_000usize, 3usize);
+        let ladder =
+            degrade_ladder(n, k, &MethodSpec::Prototype, 32, &ExecPolicy::Materialized);
+        assert!(!ladder.is_empty());
+        assert_eq!(ladder[0].info.actions, vec![DegradeAction::PolicyTightened]);
+        assert!(matches!(ladder[0].policy, ExecPolicy::Streamed(_)));
+        let rung0 =
+            predicted_policy_peak_bytes(n, 32, &MethodSpec::Prototype, &ExecPolicy::Materialized);
+        assert!(ladder[0].predicted_peak_bytes < rung0, "streaming must beat n² residency");
+
+        // already at the floor → empty ladder for a floor-c Nyström
+        let flat = degrade_ladder(n, k, &MethodSpec::Nystrom, k + 1, &ExecPolicy::Materialized);
+        assert!(flat.is_empty(), "{flat:?}");
+    }
+
+    #[test]
+    fn degrade_ladder_shrinks_cur_consistently() {
+        let (n, k) = (1_000usize, 4usize);
+        let m = MethodSpec::Cur { r: 64, s: 256 };
+        let ladder = degrade_ladder(n, k, &m, 64, &ExecPolicy::Materialized);
+        assert!(!ladder.is_empty());
+        for step in &ladder {
+            if let MethodSpec::Cur { r, s } = step.method {
+                assert!(r >= 2 && s >= 2 * step.c, "r={r} s={s} c={}", step.c);
+            } else {
+                panic!("CUR must stay CUR down the ladder");
+            }
+        }
     }
 }

@@ -1,4 +1,5 @@
-//! The approximation service: the Layer-3 request loop.
+//! The approximation service: the Layer-3 request loop, now with a
+//! degrade-don't-die admission path.
 //!
 //! Clients submit [`ApproxRequest`]s (which model, c, downstream task
 //! size k, and optionally an [`ExecPolicy`] — the planner fills the
@@ -6,25 +7,58 @@
 //! queue (backpressure), each worker builds the approximation against the
 //! shared kernel oracle through the unified [`exec`](crate::exec)
 //! surface, and replies with eigenvalues plus the run's [`RunMeta`]
-//! accounting. The service also meters the **predicted working set of
-//! in-flight requests** (`Metrics::mem_in_use`, the sum of
-//! `predicted_peak_bytes`): with a [`ServiceConfig::memory_cap`] set,
-//! requests that would push the fleet past the cap are shed with an
-//! error reply instead of risking the box.
+//! accounting.
+//!
+//! ## Admission under a memory cap
+//!
+//! The service meters the **predicted working set of in-flight requests**
+//! (`Metrics::mem_in_use`, the sum of `predicted_peak_bytes`). With a
+//! [`ServiceConfig::memory_cap`] set, an over-cap request is no longer
+//! shed — it takes the degrade-don't-die path:
+//!
+//! 1. **Queue**: requests that fit the cap but not the current headroom
+//!    wait in a bounded FIFO ([`ServiceConfig::admission_capacity`]) with
+//!    a per-request deadline; a reaper thread admits from the head as
+//!    in-flight reservations drain and expires entries whose deadline
+//!    passes with a typed [`ServiceError::Overloaded`] reply carrying a
+//!    `retry_after` hint.
+//! 2. **Degrade**: under pressure (queue depth ≥
+//!    [`ServiceConfig::degrade_queue_depth`], half the deadline burnt, or
+//!    a request that can never fit the cap as asked) admission walks the
+//!    request's [`planner::degrade_ladder`] — cheaper policy, uniform
+//!    instead of leverage sampling, smaller `c`/`s` — and serves the
+//!    first rung that fits. The response records the rung in
+//!    [`ApproxResponse::degraded`] (mirrored in `meta.degraded`), so
+//!    accuracy is traded *visibly*, never silently.
+//! 3. **Reject**: only when the queue is full or no rung of the ladder
+//!    can ever fit the cap does the service reply `Overloaded`.
+//!
+//! ## Fault isolation
+//!
+//! Worker jobs run under `catch_unwind`: a panicking build (a poisoned
+//! request, an injected oracle fault) is isolated — the reply is a typed
+//! [`ServiceError::Faulted`], the memory reservation is released, spill
+//! arenas are cleaned by their guards, and the worker keeps serving.
+//! Shutdown replies [`ServiceError::Stopping`] to everything still
+//! queued instead of dropping reply channels.
 
 use super::metrics::Metrics;
-use super::oracle::{KernelOracle, RbfOracle};
+use super::oracle::KernelOracle;
 use super::planner;
 use crate::cur::{self, FastCurConfig};
-use crate::exec::{self, ExecPolicy, RunMeta};
+use crate::exec::{self, DegradeInfo, ExecPolicy, RunMeta};
 use crate::linalg::svd_thin;
 use crate::pool::ThreadPool;
 use crate::spsd::{self, FastConfig, LeverageBasis};
 use crate::util::Rng;
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 pub use super::planner::MethodSpec;
 
@@ -43,12 +77,45 @@ pub struct ApproxRequest {
     /// [`Resident`](ExecPolicy::Resident) policies inherit the service's
     /// spill directory unless they pin their own.
     pub policy: Option<ExecPolicy>,
+    /// How long this request may wait in the admission queue before the
+    /// reaper expires it (`None` = [`ServiceConfig::default_deadline`]).
+    pub deadline: Option<Duration>,
+}
+
+/// Why a request was not served.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The service is over capacity: the admission queue was full, the
+    /// request's deadline expired while queued, or no rung of the degrade
+    /// ladder fits the memory cap. `retry_after` is the service's current
+    /// mean latency — a reasonable backoff hint.
+    Overloaded { retry_after: Duration },
+    /// The service is shutting down; queued requests are flushed with
+    /// this reply instead of having their channels dropped.
+    Stopping,
+    /// The build failed or panicked; the worker survived, the reservation
+    /// was released, and this request alone failed.
+    Faulted(String),
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::Overloaded { retry_after } => {
+                write!(f, "overloaded (retry after {retry_after:?})")
+            }
+            ServiceError::Stopping => write!(f, "service stopping"),
+            ServiceError::Faulted(msg) => write!(f, "faulted: {msg}"),
+        }
+    }
 }
 
 /// Reply for one job.
 #[derive(Debug, Clone)]
 pub struct ApproxResponse {
     pub id: u64,
+    /// The method that actually served the request (differs from the
+    /// requested one when the degrade ladder relaxed it).
     pub method: String,
     /// top-k eigenvalues of C U C^T (for `Cur`: top singular values of
     /// the core U).
@@ -58,13 +125,16 @@ pub struct ApproxResponse {
     /// seconds from submit to completion.
     pub total_secs: f64,
     /// The run's uniform accounting (entries, compute seconds, residency
-    /// counters, predicted peak bytes). `None` only on shed requests.
+    /// counters, predicted peak bytes). `None` only on unserved requests.
     /// `meta.entries` is a delta read off the oracle's single shared
     /// counter, so with multiple workers a request's figure can absorb
     /// entries from builds that overlap it (exact on a 1-worker service).
     pub meta: Option<RunMeta>,
-    /// Why the request was not served (e.g. shed on the memory cap).
-    pub error: Option<String>,
+    /// Which rung of the degrade ladder served this request (`None` =
+    /// served exactly as asked). Also present in `meta.degraded`.
+    pub degraded: Option<DegradeInfo>,
+    /// Why the request was not served (`None` on success).
+    pub error: Option<ServiceError>,
 }
 
 /// Service configuration.
@@ -76,151 +146,447 @@ pub struct ServiceConfig {
     /// Directory for residency spill arenas (`None` = the system temp
     /// dir). Arena files are per-request and removed when the build ends.
     pub spill_dir: Option<PathBuf>,
-    /// Service-level memory cap in bytes: `submit` sheds (error-replies)
-    /// any request whose predicted peak, added to the in-flight sum
-    /// (`Metrics::mem_in_use`), would exceed it. `None` = meter but never
-    /// shed.
+    /// Service-level memory cap in bytes: requests whose predicted peak
+    /// does not fit the in-flight sum (`Metrics::mem_in_use`) wait in the
+    /// admission queue and may be served degraded; only requests no
+    /// ladder rung can ever fit — or that find the queue full — are
+    /// rejected. `None` = meter but always admit.
     pub memory_cap: Option<u64>,
+    /// Bound of the admission FIFO (`Overloaded` beyond it).
+    pub admission_capacity: usize,
+    /// Deadline for queued requests that carry none of their own.
+    pub default_deadline: Duration,
+    /// Queue depth at (or above) which admission starts walking the
+    /// degrade ladder for requests that would otherwise keep waiting.
+    pub degrade_queue_depth: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, queue_capacity: 64, spill_dir: None, memory_cap: None }
+        ServiceConfig {
+            workers: 4,
+            queue_capacity: 64,
+            spill_dir: None,
+            memory_cap: None,
+            admission_capacity: 64,
+            default_deadline: Duration::from_secs(30),
+            degrade_queue_depth: 4,
+        }
     }
 }
 
-/// The running service.
-pub struct ApproxService {
-    oracle: Arc<RbfOracle>,
+/// How an admitted request will actually run: the (possibly degraded)
+/// method/size/policy plus the reservation it holds.
+#[derive(Clone)]
+struct ServeAs {
+    method: MethodSpec,
+    c: usize,
+    policy: ExecPolicy,
+    predicted: u64,
+    degraded: Option<DegradeInfo>,
+}
+
+/// A request waiting in the admission FIFO.
+struct QueuedJob {
+    req: ApproxRequest,
+    rung0: ServeAs,
+    /// Precomputed degrade ladder (best rung first).
+    ladder: Vec<ServeAs>,
+    /// Whether rung 0 fits the cap on an empty meter (a request that can
+    /// never fit as asked goes straight to the ladder).
+    fits_alone: bool,
+    reply: mpsc::Sender<ApproxResponse>,
+    enqueued: Instant,
+    deadline: Instant,
+}
+
+/// State shared by the service handle, the reaper thread, and workers.
+struct Shared {
+    oracle: Arc<dyn KernelOracle + Send + Sync>,
     pool: ThreadPool,
     metrics: Arc<Metrics>,
-    inflight: Arc<AtomicU64>,
+    inflight: AtomicU64,
     spill_dir: Option<PathBuf>,
     memory_cap: Option<u64>,
+    admission_capacity: usize,
+    default_deadline: Duration,
+    degrade_queue_depth: usize,
+    stopping: AtomicBool,
+    queue: Mutex<VecDeque<QueuedJob>>,
+    /// Woken when headroom opens (a reservation drops), when a job is
+    /// enqueued, and on shutdown. The reaper also polls every 50ms as a
+    /// backstop, so a missed wakeup only delays admission.
+    queue_cv: Condvar,
+    /// Jobs popped from the queue but not yet handed to the pool (drain
+    /// must not declare idle while one is in this window).
+    dispatching: AtomicU64,
+}
+
+/// The running service. Dropping it shuts down: queued requests get
+/// [`ServiceError::Stopping`] replies, in-flight work completes, and the
+/// reaper thread is joined.
+pub struct ApproxService {
+    shared: Arc<Shared>,
+    reaper: Option<JoinHandle<()>>,
 }
 
 impl ApproxService {
-    pub fn new(oracle: Arc<RbfOracle>, cfg: ServiceConfig) -> Self {
-        ApproxService {
+    pub fn new(oracle: Arc<dyn KernelOracle + Send + Sync>, cfg: ServiceConfig) -> Self {
+        let shared = Arc::new(Shared {
             oracle,
             pool: ThreadPool::new(cfg.workers.max(1), cfg.queue_capacity.max(1)),
             metrics: Arc::new(Metrics::default()),
-            inflight: Arc::new(AtomicU64::new(0)),
+            inflight: AtomicU64::new(0),
             spill_dir: cfg.spill_dir,
             memory_cap: cfg.memory_cap,
-        }
+            admission_capacity: cfg.admission_capacity.max(1),
+            default_deadline: cfg.default_deadline,
+            degrade_queue_depth: cfg.degrade_queue_depth.max(1),
+            stopping: AtomicBool::new(false),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            dispatching: AtomicU64::new(0),
+        });
+        let for_reaper = Arc::clone(&shared);
+        let reaper = std::thread::Builder::new()
+            .name("fastspsd-reaper".into())
+            .spawn(move || reaper_loop(for_reaper))
+            .ok();
+        ApproxService { shared, reaper }
     }
 
     pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+        &self.shared.metrics
     }
 
     pub fn inflight(&self) -> u64 {
-        self.inflight.load(Ordering::Relaxed)
+        self.shared.inflight.load(Ordering::SeqCst)
     }
 
-    /// Submit a job; the response is delivered on `reply`. Blocks when the
-    /// queue is full; sheds immediately (with an error reply) when the
-    /// predicted working set would exceed the memory cap.
+    /// Submit a job; the response is delivered on `reply`.
+    ///
+    /// Requests that fit the meter dispatch immediately (blocking only on
+    /// worker-queue backpressure). Over-headroom requests queue (FIFO,
+    /// bounded, deadline-reaped) and may be served down the degrade
+    /// ladder; see the module docs for the full admission contract.
     pub fn submit(&self, req: ApproxRequest, reply: mpsc::Sender<ApproxResponse>) {
-        self.metrics.requests.inc();
-        let n = self.oracle.n();
+        let s = &self.shared;
+        s.metrics.requests.inc();
+        if s.stopping.load(Ordering::SeqCst) {
+            let _ = reply.send(error_response(req.id, req.method.name(), ServiceError::Stopping));
+            return;
+        }
+        let n = s.oracle.n();
         let c = req.c.clamp(1, n.max(1));
         let mut policy = req.policy.clone().unwrap_or_else(planner::default_policy);
         if let ExecPolicy::Resident { spill: true, spill_dir, .. } = &mut policy {
             if spill_dir.is_none() {
-                *spill_dir = self.spill_dir.clone();
+                *spill_dir = s.spill_dir.clone();
             }
         }
         let predicted = planner::predicted_policy_peak_bytes(n, c, &req.method, &policy);
-        let admitted = match self.memory_cap {
-            Some(cap) => self.metrics.mem_in_use.try_add_below(predicted, cap),
-            None => {
-                self.metrics.mem_in_use.add(predicted);
-                true
+        let rung0 =
+            ServeAs { method: req.method, c, policy: policy.clone(), predicted, degraded: None };
+        let ladder: Vec<ServeAs> = planner::degrade_ladder(n, req.k, &req.method, c, &policy)
+            .into_iter()
+            .map(|d| ServeAs {
+                method: d.method,
+                c: d.c,
+                policy: d.policy,
+                predicted: d.predicted_peak_bytes,
+                degraded: Some(d.info),
+            })
+            .collect();
+        let fits_alone = s.memory_cap.map_or(true, |cap| predicted <= cap);
+        let admissible_ever = fits_alone
+            || s.memory_cap.map_or(true, |cap| ladder.iter().any(|r| r.predicted <= cap));
+        let now = Instant::now();
+        let deadline = now + req.deadline.unwrap_or(s.default_deadline);
+        let job = QueuedJob { req, rung0, ladder, fits_alone, reply, enqueued: now, deadline };
+
+        let mut q = s.queue.lock().unwrap();
+        if q.is_empty() {
+            // Fast path: nothing is waiting, so FIFO order allows serving
+            // this request right now if a reservation succeeds (walking
+            // the ladder immediately only when it can never fit as asked).
+            if let Some(serve) = try_admit(s, &job, false) {
+                drop(q);
+                dispatch(s, job, serve);
+                return;
             }
-        };
-        if !admitted {
-            self.metrics.rejected.inc();
-            let _ = reply.send(ApproxResponse {
-                id: req.id,
-                method: req.method.name(),
-                eigvals: Vec::new(),
-                core_dims: None,
-                total_secs: 0.0,
-                meta: None,
-                error: Some(format!(
-                    "shed: predicted working set {predicted} B over the {} B memory cap \
-                     ({} B already in flight)",
-                    self.memory_cap.unwrap_or(u64::MAX),
-                    self.metrics.mem_in_use.get()
-                )),
-            });
+            if !admissible_ever {
+                drop(q);
+                s.metrics.rejected_overload.inc();
+                let err = ServiceError::Overloaded { retry_after: retry_hint(s) };
+                let _ = job.reply.send(error_response(job.req.id, job.req.method.name(), err));
+                return;
+            }
+        }
+        if q.len() >= s.admission_capacity {
+            drop(q);
+            s.metrics.rejected_overload.inc();
+            let err = ServiceError::Overloaded { retry_after: retry_hint(s) };
+            let _ = job.reply.send(error_response(job.req.id, job.req.method.name(), err));
             return;
         }
-        self.inflight.fetch_add(1, Ordering::Relaxed);
-        let oracle = Arc::clone(&self.oracle);
-        let metrics = Arc::clone(&self.metrics);
-        let inflight = Arc::clone(&self.inflight);
-        let submitted = Instant::now();
-        self.pool.submit(move || {
-            // Release the admission reservation on every exit path — the
-            // pool catches panicking jobs, and a skipped release would
-            // permanently shrink the cap's admissible capacity.
-            let _guard = ReservationGuard { metrics: &metrics, inflight: &inflight, predicted };
-            let started = Instant::now();
-            metrics.queue_wait.observe(started.duration_since(submitted));
-            let resp = run_request(oracle.as_ref(), &req, c, &policy, predicted, submitted);
-            metrics.latency.observe(submitted.elapsed());
-            match &resp {
-                Ok(_) => metrics.completed.inc(),
-                Err(_) => metrics.failed.inc(),
-            }
-            if let Ok(r) = resp {
-                let _ = reply.send(r);
-            }
-        });
+        s.metrics.queued.inc();
+        q.push_back(job);
+        drop(q);
+        s.queue_cv.notify_all();
     }
 
-    /// Wait for every submitted job to finish.
+    /// Wait until every submitted request has been resolved: the
+    /// admission queue is empty (served, degraded, or reaped) and all
+    /// dispatched work has finished.
     pub fn drain(&self) {
-        self.pool.wait_idle();
+        let s = &self.shared;
+        loop {
+            {
+                let mut q = s.queue.lock().unwrap();
+                while !q.is_empty() {
+                    q = s.queue_cv.wait_timeout(q, Duration::from_millis(20)).unwrap().0;
+                }
+            }
+            while s.dispatching.load(Ordering::SeqCst) > 0 {
+                std::thread::yield_now();
+            }
+            s.pool.wait_idle();
+            // A finishing job may have let the reaper admit more work
+            // between our checks; only an all-clear snapshot ends drain.
+            let q = s.queue.lock().unwrap();
+            if q.is_empty()
+                && s.dispatching.load(Ordering::SeqCst) == 0
+                && s.inflight.load(Ordering::SeqCst) == 0
+            {
+                return;
+            }
+        }
+    }
+
+    /// Stop admitting: flush the queue with [`ServiceError::Stopping`]
+    /// replies, then wait for in-flight work to finish. Idempotent; also
+    /// runs on drop.
+    pub fn shutdown(&self) {
+        let s = &self.shared;
+        s.stopping.store(true, Ordering::SeqCst);
+        {
+            let mut q = s.queue.lock().unwrap();
+            while let Some(job) = q.pop_front() {
+                let _ = job
+                    .reply
+                    .send(error_response(job.req.id, job.req.method.name(), ServiceError::Stopping));
+            }
+        }
+        s.queue_cv.notify_all();
+        while s.dispatching.load(Ordering::SeqCst) > 0 {
+            std::thread::yield_now();
+        }
+        s.pool.wait_idle();
+    }
+}
+
+impl Drop for ApproxService {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.reaper.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Try to reserve memory for `job`: rung 0 first; the degrade ladder only
+/// under `pressure` or when rung 0 can never fit the cap.
+fn try_admit(s: &Shared, job: &QueuedJob, pressure: bool) -> Option<ServeAs> {
+    if reserve(s, job.rung0.predicted) {
+        return Some(job.rung0.clone());
+    }
+    let walk_ladder = pressure || !job.fits_alone;
+    if !walk_ladder {
+        return None;
+    }
+    for rung in &job.ladder {
+        if reserve(s, rung.predicted) {
+            return Some(rung.clone());
+        }
+    }
+    None
+}
+
+/// Check-and-reserve against the memory cap (always succeeds uncapped —
+/// the gauge still meters).
+fn reserve(s: &Shared, predicted: u64) -> bool {
+    match s.memory_cap {
+        Some(cap) => s.metrics.mem_in_use.try_add_below(predicted, cap),
+        None => {
+            s.metrics.mem_in_use.add(predicted);
+            true
+        }
+    }
+}
+
+/// Backoff hint for `Overloaded` replies: the observed mean latency, or
+/// 100ms before any request has completed.
+fn retry_hint(s: &Shared) -> Duration {
+    let m = s.metrics.latency.mean();
+    if m.is_zero() {
+        Duration::from_millis(100)
+    } else {
+        m
+    }
+}
+
+fn error_response(id: u64, method: String, error: ServiceError) -> ApproxResponse {
+    ApproxResponse {
+        id,
+        method,
+        eigvals: Vec::new(),
+        core_dims: None,
+        total_secs: 0.0,
+        meta: None,
+        degraded: None,
+        error: Some(error),
+    }
+}
+
+/// The admission reaper: expires queued requests past their deadline and
+/// admits from the head (FIFO — no skipping) as headroom opens. The only
+/// thread that dispatches queued work, so a reservation-guard drop never
+/// recursively runs a build.
+fn reaper_loop(s: Arc<Shared>) {
+    let mut q = s.queue.lock().unwrap();
+    loop {
+        if s.stopping.load(Ordering::SeqCst) {
+            return; // shutdown flushes the queue itself
+        }
+        let now = Instant::now();
+        // 1) expire timed-out entries (anywhere in the queue)
+        let mut i = 0;
+        while i < q.len() {
+            if q[i].deadline <= now {
+                let job = q.remove(i).unwrap();
+                s.metrics.expired_deadline.inc();
+                let err = ServiceError::Overloaded { retry_after: retry_hint(&s) };
+                let _ = job.reply.send(error_response(job.req.id, job.req.method.name(), err));
+            } else {
+                i += 1;
+            }
+        }
+        // 2) admit from the head while reservations succeed
+        while let Some(head) = q.front() {
+            let depth_pressure = q.len() >= s.degrade_queue_depth;
+            let waited = now.saturating_duration_since(head.enqueued);
+            let budget = head.deadline.saturating_duration_since(head.enqueued);
+            let wait_pressure = waited * 2 >= budget;
+            match try_admit(&s, head, depth_pressure || wait_pressure) {
+                Some(serve) => {
+                    let job = q.pop_front().unwrap();
+                    s.dispatching.fetch_add(1, Ordering::SeqCst);
+                    drop(q); // pool.submit may block on backpressure
+                    dispatch(&s, job, serve);
+                    s.dispatching.fetch_sub(1, Ordering::SeqCst);
+                    s.queue_cv.notify_all(); // drain() watches the queue
+                    q = s.queue.lock().unwrap();
+                }
+                None => break, // head blocked: keep FIFO, wait for headroom
+            }
+        }
+        // 3) sleep until the next deadline, a notify, or the poll backstop
+        let poll = Duration::from_millis(50);
+        let timeout = q
+            .iter()
+            .map(|j| j.deadline.saturating_duration_since(Instant::now()))
+            .min()
+            .unwrap_or(poll)
+            .clamp(Duration::from_millis(1), poll);
+        q = s.queue_cv.wait_timeout(q, timeout).unwrap().0;
+    }
+}
+
+/// Hand an admitted job (holding its reservation) to the worker pool.
+fn dispatch(s: &Arc<Shared>, job: QueuedJob, serve: ServeAs) {
+    s.inflight.fetch_add(1, Ordering::SeqCst);
+    let shared = Arc::clone(s);
+    let QueuedJob { req, reply, enqueued: submitted, .. } = job;
+    s.pool.submit(move || {
+        // Release the admission reservation on every exit path — including
+        // the catch_unwind's — and wake the reaper so queued work can take
+        // the freed headroom.
+        let _guard = ReservationGuard { shared: Arc::clone(&shared), predicted: serve.predicted };
+        let started = Instant::now();
+        shared.metrics.queue_wait.observe(started.duration_since(submitted));
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| run_request(shared.oracle.as_ref(), &req, &serve, submitted)));
+        let resp = match outcome {
+            Ok(Ok(r)) => {
+                shared.metrics.completed.inc();
+                if serve.degraded.is_some() {
+                    shared.metrics.degraded.inc();
+                }
+                r
+            }
+            Ok(Err(e)) => {
+                shared.metrics.failed.inc();
+                error_response(req.id, serve.method.name(), ServiceError::Faulted(e.to_string()))
+            }
+            Err(payload) => {
+                // Panic isolation: the request fails alone; the worker,
+                // the pool, and every other request keep going.
+                shared.metrics.faulted.inc();
+                let msg = panic_message(payload.as_ref());
+                error_response(req.id, serve.method.name(), ServiceError::Faulted(msg))
+            }
+        };
+        shared.metrics.latency.observe(submitted.elapsed());
+        let _ = reply.send(resp);
+    });
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: (non-string payload)".into()
     }
 }
 
 /// Drops the in-flight accounting (memory reservation + inflight count)
-/// when a worker job ends — normally or by unwinding through the pool's
-/// panic catcher.
-struct ReservationGuard<'a> {
-    metrics: &'a Metrics,
-    inflight: &'a AtomicU64,
+/// when a worker job ends — normally or by unwinding — and wakes the
+/// reaper so the freed headroom admits queued work.
+struct ReservationGuard {
+    shared: Arc<Shared>,
     predicted: u64,
 }
 
-impl Drop for ReservationGuard<'_> {
+impl Drop for ReservationGuard {
     fn drop(&mut self) {
-        self.metrics.mem_in_use.sub(self.predicted);
-        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.shared.metrics.mem_in_use.sub(self.predicted);
+        self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        // Lock-then-notify so the wakeup cannot race a reaper that is
+        // between its headroom check and its condvar wait.
+        drop(self.shared.queue.lock().unwrap());
+        self.shared.queue_cv.notify_all();
     }
 }
 
 fn run_request(
-    oracle: &RbfOracle,
+    oracle: &dyn KernelOracle,
     req: &ApproxRequest,
-    c: usize,
-    policy: &ExecPolicy,
-    predicted: u64,
+    serve: &ServeAs,
     submitted: Instant,
 ) -> anyhow::Result<ApproxResponse> {
     let mut rng = Rng::new(req.seed);
     let n = oracle.n();
+    let c = serve.c;
+    let policy = &serve.policy;
     let p = spsd::uniform_p(n, c, &mut rng);
     let k_top = req.k.max(1);
     // The response's compute time covers the whole request — kernel
     // materialization (Cur), the build, and the downstream eig/SVD — not
     // just the exec entry point's slice of it.
     let t0 = Instant::now();
-    let (eigvals, core_dims, mut meta) = match req.method {
+    let (eigvals, core_dims, mut meta) = match serve.method {
         MethodSpec::Nystrom => {
             let rep = exec::nystrom(oracle, &p, policy);
             (rep.result.eig_k(k_top).0, None, rep.meta)
@@ -256,14 +622,16 @@ fn run_request(
         }
     };
     meta.compute_secs = t0.elapsed().as_secs_f64();
-    meta.predicted_peak_bytes = Some(predicted);
+    meta.predicted_peak_bytes = Some(serve.predicted);
+    meta.degraded = serve.degraded.clone();
     Ok(ApproxResponse {
         id: req.id,
-        method: req.method.name(),
+        method: serve.method.name(),
         eigvals,
         core_dims,
         total_secs: submitted.elapsed().as_secs_f64(),
         meta: Some(meta),
+        degraded: serve.degraded.clone(),
         error: None,
     })
 }
@@ -271,6 +639,7 @@ fn run_request(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::oracle::RbfOracle;
     use crate::linalg::Matrix;
     use crate::sketch::SketchKind;
 
@@ -286,7 +655,7 @@ mod tests {
     }
 
     fn req(id: u64, method: MethodSpec, seed: u64, policy: Option<ExecPolicy>) -> ApproxRequest {
-        ApproxRequest { id, method, c: 8, k: 3, seed, policy }
+        ApproxRequest { id, method, c: 8, k: 3, seed, policy, deadline: None }
     }
 
     fn entries_of(r: &ApproxResponse) -> u64 {
@@ -318,9 +687,11 @@ mod tests {
             assert_eq!(r.eigvals.len(), 3, "{}", r.method);
             assert!(r.eigvals[0] >= r.eigvals[1]);
             assert!(r.error.is_none());
+            assert!(r.degraded.is_none(), "uncapped service never degrades");
             let meta = r.meta.as_ref().expect("served responses carry meta");
             assert!(meta.compute_secs <= r.total_secs + 1e-9);
             assert!(meta.predicted_peak_bytes.unwrap() > 0);
+            assert!(meta.degraded.is_none());
         }
         // prototype and CUR observe n² + extras; nystrom the fewest
         assert!(entries_of(&resps[1]) > entries_of(&resps[2]));
@@ -329,6 +700,7 @@ mod tests {
         assert_eq!(resps[3].core_dims, Some((8, 8)), "c x r core");
         assert_eq!(svc.metrics().completed.get(), 4);
         assert_eq!(svc.metrics().failed.get(), 0);
+        assert_eq!(svc.metrics().faulted.get(), 0);
         assert_eq!(svc.metrics().latency.count(), 4);
         assert_eq!(svc.metrics().mem_in_use.get(), 0, "meter must drain to zero");
     }
@@ -451,7 +823,7 @@ mod tests {
     }
 
     #[test]
-    fn memory_cap_sheds_over_budget_requests() {
+    fn never_fitting_requests_get_typed_overload_replies() {
         let n = 80;
         // Cap sized for exactly one materialized nystrom request.
         let one = planner::predicted_policy_peak_bytes(
@@ -460,32 +832,44 @@ mod tests {
             &MethodSpec::Nystrom,
             &ExecPolicy::Materialized,
         );
-        let svc = service_cfg(
-            n,
-            ServiceConfig {
-                workers: 1,
-                queue_capacity: 16,
-                spill_dir: None,
-                memory_cap: Some(one),
-            },
-        );
-        // Deterministic shed: prototype's predicted peak (≥ n²·8) can
-        // never fit a cap sized for one nystrom — shed at submit with an
-        // error reply, nothing reserved, nothing queued.
+        let svc = service_cfg(n, ServiceConfig { memory_cap: Some(one), ..Default::default() });
+        // Prototype's predicted peak can never fit a cap sized for one
+        // nystrom — not even at the bottom of its degrade ladder — so the
+        // reply is an immediate typed Overloaded, nothing reserved.
         let (tx, rx) = mpsc::channel();
         svc.submit(req(0, MethodSpec::Prototype, 1, None), tx.clone());
         drop(tx);
-        let shed: Vec<ApproxResponse> = rx.iter().collect();
-        assert_eq!(shed.len(), 1, "shed requests still get a reply");
-        let err = shed[0].error.as_ref().expect("over-cap request must be shed");
-        assert!(err.contains("shed"), "{err}");
-        assert!(shed[0].meta.is_none() && shed[0].eigvals.is_empty());
-        assert_eq!(svc.metrics().rejected.get(), 1);
-        assert_eq!(svc.metrics().mem_in_use.get(), 0, "a shed reserves nothing");
+        let resps: Vec<ApproxResponse> = rx.iter().collect();
+        assert_eq!(resps.len(), 1, "rejected requests still get a reply");
+        match resps[0].error.as_ref() {
+            Some(ServiceError::Overloaded { retry_after }) => {
+                assert!(*retry_after > Duration::ZERO);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert!(resps[0].meta.is_none() && resps[0].eigvals.is_empty());
+        assert_eq!(svc.metrics().rejected_overload.get(), 1);
+        assert_eq!(svc.metrics().queued.get(), 0, "never-fits must not occupy the queue");
+        assert_eq!(svc.metrics().mem_in_use.get(), 0, "a reject reserves nothing");
+    }
 
-        // A burst of fitting requests: admission is first-come with the
-        // in-flight sum, so every reply is either served (meta) or shed
-        // (error), the accounting balances, and the meter drains to zero.
+    #[test]
+    fn over_cap_requests_queue_and_complete_instead_of_shedding() {
+        let n = 80;
+        let one = planner::predicted_policy_peak_bytes(
+            n,
+            8,
+            &MethodSpec::Nystrom,
+            &ExecPolicy::Materialized,
+        );
+        let svc = service_cfg(
+            n,
+            ServiceConfig { workers: 1, memory_cap: Some(one), ..Default::default() },
+        );
+        // A burst sized for one request at a time: everything beyond the
+        // in-flight one waits in the admission queue and is served as the
+        // gauge drains — nothing is shed, nothing degrades (the headroom
+        // is all-or-nothing at this cap).
         let (tx, rx) = mpsc::channel();
         let total = 10u64;
         for i in 0..total {
@@ -496,26 +880,59 @@ mod tests {
         let resps: Vec<ApproxResponse> = rx.iter().collect();
         assert_eq!(resps.len(), total as usize);
         for r in &resps {
-            assert!(
-                r.error.is_some() ^ r.meta.is_some(),
-                "{}: exactly one of error/meta",
-                r.id
-            );
+            assert!(r.error.is_none(), "{}: queued requests complete: {:?}", r.id, r.error);
+            assert!(r.meta.is_some());
         }
-        let served = resps.iter().filter(|r| r.meta.is_some()).count() as u64;
-        assert!(served >= 1, "the first request always fits an empty meter");
-        assert_eq!(svc.metrics().completed.get(), served);
-        assert_eq!(svc.metrics().rejected.get(), 1 + (total - served));
-        assert_eq!(svc.metrics().mem_in_use.get(), 0);
+        let m = svc.metrics();
+        assert_eq!(m.completed.get(), total);
+        assert_eq!(m.rejected_overload.get(), 0, "queueing replaces shedding");
+        assert_eq!(m.expired_deadline.get(), 0);
+        assert!(m.queued.get() >= 1, "the burst must actually exercise the queue");
+        assert_eq!(m.mem_in_use.get(), 0);
         assert_eq!(svc.inflight(), 0);
 
-        // Uncapped services meter without shedding.
+        // Uncapped services meter without queueing or shedding.
         let svc = service(40, 1, 8);
         let (tx, rx) = mpsc::channel();
         svc.submit(req(0, MethodSpec::Prototype, 1, None), tx);
         svc.drain();
         assert!(rx.iter().next().unwrap().error.is_none());
-        assert_eq!(svc.metrics().rejected.get(), 0);
+        assert_eq!(svc.metrics().rejected_overload.get(), 0);
         assert_eq!(svc.metrics().mem_in_use.get(), 0);
+    }
+
+    #[test]
+    fn ladder_serves_degraded_when_request_can_never_fit() {
+        let n = 80;
+        // Cap = exactly the uniform-sampling rung of a leverage request:
+        // the leverage rung 0 (which additionally carries its 2c² score
+        // state) can never fit, so admission walks the ladder and serves
+        // the SamplingRelaxed rung — synchronously, visibly degraded.
+        let lev = MethodSpec::Fast { s: 24, kind: SketchKind::Leverage { scaled: false } };
+        let uni = MethodSpec::Fast { s: 24, kind: SketchKind::Uniform };
+        let cap =
+            planner::predicted_policy_peak_bytes(n, 8, &uni, &ExecPolicy::Materialized);
+        assert!(
+            planner::predicted_policy_peak_bytes(n, 8, &lev, &ExecPolicy::Materialized) > cap,
+            "test premise: leverage rung 0 must exceed the cap"
+        );
+        let svc = service_cfg(n, ServiceConfig { memory_cap: Some(cap), ..Default::default() });
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(7, lev, 3, None), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let info = r.degraded.as_ref().expect("ladder service must be visible");
+        assert_eq!(info.rung, 1);
+        assert_eq!(info.requested_c, 8);
+        assert_eq!(info.c, 8, "first rung only relaxes the sampling");
+        assert_eq!(info.actions, vec![crate::exec::DegradeAction::SamplingRelaxed]);
+        assert_eq!(r.meta.as_ref().unwrap().degraded.as_ref(), Some(info));
+        assert!(r.method.contains("uniform"), "served method is the degraded one: {}", r.method);
+        assert_eq!(r.eigvals.len(), 3);
+        let m = svc.metrics();
+        assert_eq!(m.degraded.get(), 1);
+        assert_eq!(m.completed.get(), 1);
+        assert_eq!(m.mem_in_use.get(), 0);
     }
 }

@@ -35,7 +35,7 @@
 
 pub mod policy;
 
-pub use policy::{ExecPolicy, RunMeta, RunReport};
+pub use policy::{DegradeAction, DegradeInfo, ExecPolicy, RunMeta, RunReport};
 
 use crate::benchkit::alloc::{self, AllocGauge};
 use crate::coordinator::oracle::KernelOracle;
@@ -70,6 +70,7 @@ impl Scope {
             residency,
             predicted_peak_bytes,
             actual_peak_bytes: actual,
+            degraded: None,
         }
     }
 }

@@ -154,6 +154,42 @@ impl Default for ExecPolicy {
     }
 }
 
+/// One step the degrade-don't-die ladder took on a request.
+///
+/// The ladder trades accuracy for working-set bytes in the order the
+/// theory prices it: free policy changes first, then the sampling scheme,
+/// then the sketch size `c`/`s` (whose error bound degrades gracefully —
+/// Gittens–Mahoney, arXiv 1303.1849).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradeAction {
+    /// Execution policy swapped for a cheaper traversal of the same
+    /// computation (bit-identical result, smaller predicted peak).
+    PolicyTightened,
+    /// Leverage-score sampling relaxed to uniform (drops the score state
+    /// and the extra pass; weaker but still bounded error).
+    SamplingRelaxed,
+    /// Sketch sizes halved toward the rank floor (`c`, and `s`/`r` where
+    /// the method has them).
+    SketchShrunk,
+}
+
+/// How a degraded request was actually served: which rung of the ladder,
+/// what `c` it ran with versus what was asked, and every action taken to
+/// get there. Present in [`RunMeta::degraded`] and mirrored on
+/// `ApproxResponse` so callers always see that accuracy was traded.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DegradeInfo {
+    /// 1-based rung index on the request's ladder (rung 0 = undegraded is
+    /// never recorded).
+    pub rung: usize,
+    /// The sketch size the caller asked for.
+    pub requested_c: usize,
+    /// The sketch size the request was served with.
+    pub c: usize,
+    /// Every action applied, in ladder order (cumulative up to this rung).
+    pub actions: Vec<DegradeAction>,
+}
+
 /// What a run cost — the policy-independent half of every
 /// [`RunReport`], and the block service responses embed.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -178,6 +214,10 @@ pub struct RunMeta {
     /// allocator is installed as the global allocator (`None` otherwise).
     /// Process-global: only meaningful for single-threaded runs.
     pub actual_peak_bytes: Option<u64>,
+    /// Which rung of the degrade ladder served this run (`None` = served
+    /// exactly as requested). Set by the service admission path; the bare
+    /// `exec` entry points always run what they are handed.
+    pub degraded: Option<DegradeInfo>,
 }
 
 /// The uniform return of every `exec` entry point: the algorithm's result

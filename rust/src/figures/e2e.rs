@@ -26,15 +26,21 @@ pub fn run(ctx: &Ctx, args: &Args) {
     ));
     let workers = args.get_usize("workers", 4);
     let capacity = args.get_usize("capacity", 16);
-    // Optional service-level memory cap (bytes): over-cap requests are
-    // shed with an error reply instead of risking the box.
+    // Optional service-level memory cap (bytes): over-cap requests queue
+    // in the admission FIFO and may be served down the degrade ladder
+    // instead of being shed.
     let memory_cap = match args.get_u64("memory-cap", 0) {
         0 => None,
         cap => Some(cap),
     };
     let svc = ApproxService::new(
-        Arc::clone(&oracle),
-        ServiceConfig { workers, queue_capacity: capacity, spill_dir: None, memory_cap },
+        Arc::clone(&oracle) as Arc<dyn crate::coordinator::KernelOracle + Send + Sync>,
+        ServiceConfig {
+            workers,
+            queue_capacity: capacity,
+            memory_cap,
+            ..Default::default()
+        },
     );
 
     let c = (n / 100).max(10);
@@ -53,7 +59,15 @@ pub fn run(ctx: &Ctx, args: &Args) {
         };
         let policy = (tile > 0).then(|| ExecPolicy::streamed(tile));
         svc.submit(
-            ApproxRequest { id: i as u64, method, c, k: 5, seed: ctx.seed + i as u64, policy },
+            ApproxRequest {
+                id: i as u64,
+                method,
+                c,
+                k: 5,
+                seed: ctx.seed + i as u64,
+                policy,
+                deadline: None,
+            },
             tx.clone(),
         );
     }
@@ -82,10 +96,14 @@ pub fn run(ctx: &Ctx, args: &Args) {
 
     let m = svc.metrics();
     println!(
-        "# completed={} failed={} shed={}",
+        "# completed={} failed={} rejected={} expired={} faulted={} queued={} degraded={}",
         m.completed.get(),
         m.failed.get(),
-        m.rejected.get()
+        m.rejected_overload.get(),
+        m.expired_deadline.get(),
+        m.faulted.get(),
+        m.queued.get(),
+        m.degraded.get()
     );
     println!("# latency: {}", m.latency.summary());
     println!("# queue-wait: {}", m.queue_wait.summary());

@@ -48,4 +48,4 @@ pub mod stream;
 pub mod testkit;
 pub mod util;
 
-pub use exec::{ExecPolicy, RunMeta, RunReport};
+pub use exec::{DegradeAction, DegradeInfo, ExecPolicy, RunMeta, RunReport};

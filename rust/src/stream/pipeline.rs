@@ -16,6 +16,7 @@
 use super::{TileConsumer, TileSource};
 use crate::linalg::Matrix;
 use crate::pool;
+use crate::testkit::faults::{self, FaultPlan, FaultPoint};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
@@ -131,9 +132,13 @@ pub fn run_pipeline(
     if n == 0 {
         return;
     }
+    // Chaos seam: a globally armed FaultPlan can schedule a panic before
+    // the fold of the Nth tile (captured once per pipeline run).
+    let faults = faults::current();
     let t = tile_rows.clamp(1, n);
     if t >= n {
         let tile = src.tile(0, n);
+        trip_fold_fault(&faults, 0);
         for c in consumers.iter_mut() {
             c.consume(0, &tile);
         }
@@ -155,11 +160,23 @@ pub fn run_pipeline(
         });
         let _guard = RxGuard(chan_ref);
         while let Some((r0, tile)) = chan_ref.pop() {
+            trip_fold_fault(&faults, r0);
             for c in consumers.iter_mut() {
                 c.consume(r0, &tile);
             }
         }
     });
+}
+
+/// Panic on the fold the armed plan scheduled (counted once per tile, on
+/// the consumer thread, so the unwind exercises the RxGuard exactly like
+/// a real consumer bug would).
+fn trip_fold_fault(faults: &Option<std::sync::Arc<FaultPlan>>, r0: usize) {
+    if let Some(plan) = faults {
+        if plan.should_fail(FaultPoint::ConsumerFold) {
+            panic!("injected fault: consumer fold at r0={r0}");
+        }
+    }
 }
 
 #[cfg(test)]

@@ -26,9 +26,14 @@
 //! bytes), so residency-served results are **bit-identical** to the
 //! recompute path. The arena file is removed by a guard object when the
 //! source is dropped — including during a panic unwind. If the filesystem
-//! fails (creation, write, or read), the layer degrades to
-//! recompute-on-miss instead of erroring: residency is a performance
-//! layer, never a correctness dependency.
+//! fails, writes and reads are first retried with a short exponential
+//! backoff (transient IO errors recover invisibly —
+//! [`ResidencyStats::io_retries`] counts them); a persistently failing
+//! arena is then dropped and the layer degrades to recompute-on-miss
+//! instead of erroring: residency is a performance layer, never a
+//! correctness dependency. The chaos harness
+//! ([`testkit::faults`](crate::testkit::faults)) injects failures into
+//! exactly these seams.
 //!
 //! Requests do not need to align with the residency grid
 //! ([`ResidencyConfig::tile_rows`]): arbitrary `[r0, r1)` ranges are
@@ -40,11 +45,12 @@
 
 use super::{panel_bytes, TileSource};
 use crate::linalg::Matrix;
+use crate::testkit::faults::{self, FaultPlan, FaultPoint};
 use std::fs::File;
 use std::io::{Read as _, Seek, SeekFrom, Write as _};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Default residency grid height: matches the stream bench's default tile
 /// and the AOT kernel artifacts' 256-row blocks.
@@ -114,6 +120,9 @@ pub struct ResidencyStats {
     pub spilled_bytes: u64,
     /// Tiles dropped from the RAM LRU to respect the budget.
     pub evictions: u64,
+    /// Spill IO operations retried after a transient failure (each retry
+    /// that was attempted counts once, whether or not it succeeded).
+    pub io_retries: u64,
 }
 
 impl ResidencyStats {
@@ -143,6 +152,9 @@ struct SpillArena {
     /// Next append offset.
     next: u64,
     guard: SpillGuard,
+    /// Fault plan captured at creation (the chaos harness's injection
+    /// seam); `None` in normal runs.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Process-wide arena name sequence (several sources may spill at once).
@@ -153,12 +165,17 @@ fn create_arena(dir: Option<&Path>) -> Option<SpillArena> {
     let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
     let path = dir.join(format!("fastspsd-spill-{}-{seq}.tiles", std::process::id()));
     let file = File::options().read(true).write(true).create_new(true).open(&path).ok()?;
-    Some(SpillArena { file, next: 0, guard: SpillGuard { path } })
+    Some(SpillArena { file, next: 0, guard: SpillGuard { path }, faults: faults::current() })
 }
 
 /// Append `m` (row-major little-endian f64s) to the arena; `None` = IO
-/// failure (the caller degrades to recompute-on-miss).
+/// failure (the caller retries, then degrades to recompute-on-miss).
 fn write_tile(arena: &mut SpillArena, m: &Matrix) -> Option<u64> {
+    if let Some(plan) = &arena.faults {
+        if plan.should_fail(FaultPoint::SpillWrite) {
+            return None; // injected ENOSPC-style write failure
+        }
+    }
     let off = arena.next;
     arena.file.seek(SeekFrom::Start(off)).ok()?;
     let mut buf = Vec::with_capacity(m.data().len() * 8);
@@ -172,6 +189,11 @@ fn write_tile(arena: &mut SpillArena, m: &Matrix) -> Option<u64> {
 
 /// Read a `rows x cols` tile back (bit-exact round trip).
 fn read_tile(arena: &mut SpillArena, off: u64, rows: usize, cols: usize) -> Option<Matrix> {
+    if let Some(plan) = &arena.faults {
+        if plan.should_fail(FaultPoint::SpillRead) {
+            return None; // injected short read / IO error
+        }
+    }
     arena.file.seek(SeekFrom::Start(off)).ok()?;
     let mut buf = vec![0u8; rows * cols * 8];
     arena.file.read_exact(&mut buf).ok()?;
@@ -180,6 +202,52 @@ fn read_tile(arena: &mut SpillArena, off: u64, rows: usize, cols: usize) -> Opti
         .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
         .collect();
     Some(Matrix::from_vec(rows, cols, data))
+}
+
+/// Spill IO attempts per operation: one try + up to two retries with a
+/// short exponential backoff. Transient failures (one bad write or read)
+/// recover invisibly; persistent ones exhaust the attempts and fall into
+/// the existing degrade-to-recompute path.
+const SPILL_IO_ATTEMPTS: u32 = 3;
+
+fn backoff(attempt: u32) {
+    std::thread::sleep(std::time::Duration::from_micros(50 << (attempt - 1)));
+}
+
+/// [`write_tile`] with retries; returns the offset (if any) and how many
+/// retries were taken (for [`ResidencyStats::io_retries`]).
+fn write_tile_retrying(arena: &mut SpillArena, m: &Matrix) -> (Option<u64>, u64) {
+    let mut retries = 0;
+    for attempt in 0..SPILL_IO_ATTEMPTS {
+        if attempt > 0 {
+            retries += 1;
+            backoff(attempt);
+        }
+        if let Some(off) = write_tile(arena, m) {
+            return (Some(off), retries);
+        }
+    }
+    (None, retries)
+}
+
+/// [`read_tile`] with retries; same contract as [`write_tile_retrying`].
+fn read_tile_retrying(
+    arena: &mut SpillArena,
+    off: u64,
+    rows: usize,
+    cols: usize,
+) -> (Option<Matrix>, u64) {
+    let mut retries = 0;
+    for attempt in 0..SPILL_IO_ATTEMPTS {
+        if attempt > 0 {
+            retries += 1;
+            backoff(attempt);
+        }
+        if let Some(m) = read_tile(arena, off, rows, cols) {
+            return (Some(m), retries);
+        }
+    }
+    (None, retries)
 }
 
 struct Slot {
@@ -318,13 +386,16 @@ impl<'a> ResidentSource<'a> {
     }
 
     /// Fetch a non-resident grid tile: spill read when the arena has it,
-    /// compute (+ write-through) otherwise. An unreadable arena is
-    /// dropped wholesale — every recorded offset becomes recompute.
+    /// compute (+ write-through) otherwise. Reads are retried with backoff
+    /// first; an arena that still fails is dropped wholesale — every
+    /// recorded offset becomes recompute.
     fn fetch_cold(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Matrix {
         let spilled = st.slots[g].spill_off.filter(|_| st.arena.is_some());
         if let Some(off) = spilled {
-            if let Some(m) = read_tile(st.arena.as_mut().unwrap(), off, t1 - t0, self.inner.cols())
-            {
+            let (m, retries) =
+                read_tile_retrying(st.arena.as_mut().unwrap(), off, t1 - t0, self.inner.cols());
+            st.stats.io_retries += retries;
+            if let Some(m) = m {
                 st.stats.spill_hits += 1;
                 return m;
             }
@@ -345,13 +416,16 @@ impl<'a> ResidentSource<'a> {
         st.stats.computes += 1;
         if st.slots[g].spill_off.is_none() {
             if let Some(arena) = st.arena.as_mut() {
-                match write_tile(arena, &m) {
+                let (wrote, retries) = write_tile_retrying(arena, &m);
+                st.stats.io_retries += retries;
+                match wrote {
                     Some(off) => {
                         st.slots[g].spill_off = Some(off);
                         st.stats.spilled_bytes += panel_bytes(m.rows(), m.cols());
                     }
                     None => {
-                        // arena write failed: degrade to recompute-on-miss
+                        // write failed even after retries: degrade to
+                        // recompute-on-miss
                         st.arena = None;
                         for s in st.slots.iter_mut() {
                             s.spill_off = None;

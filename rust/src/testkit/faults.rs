@@ -1,0 +1,328 @@
+//! Deterministic fault injection for the exec/service stack.
+//!
+//! A [`FaultPlan`] arms up to one fault per [`FaultPoint`]: the spill
+//! arena's write and read paths (`stream::residency`), the kernel oracle's
+//! tile production (via [`FaultyOracle`]), and the consumer fold inside
+//! `stream::run_pipeline` (globally armed, or per-consumer via
+//! [`FaultyConsumer`]). Faults are counted in *operations at that point*:
+//! `at = N` trips on the Nth operation, `persistent` keeps tripping from
+//! the Nth on, `at = 0` never trips. Everything is driven by explicit
+//! numbers or a seed ([`FaultPlan::seeded`]), so every chaos run replays
+//! bit-for-bit.
+//!
+//! Plans reach library seams through a process-global arm slot:
+//! [`arm`] installs a plan and returns a guard that restores the previous
+//! plan on drop; [`current`] is what `residency`/`pipeline` consult. Tests
+//! that arm a plan must serialize (the slot is process-wide) — the chaos
+//! suite does this with a single mutex.
+
+use crate::coordinator::oracle::KernelOracle;
+use crate::linalg::Matrix;
+use crate::stream::TileConsumer;
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// A spill-arena tile write fails (ENOSPC-style: the write returns
+    /// nothing and the tile is not persisted).
+    SpillWrite,
+    /// A spill-arena tile read fails (short read / IO error).
+    SpillRead,
+    /// The kernel oracle panics while producing a tile.
+    OracleTile,
+    /// A consumer fold panics mid-pipeline.
+    ConsumerFold,
+}
+
+/// Every fault point, in index order.
+pub const FAULT_POINTS: [FaultPoint; 4] = [
+    FaultPoint::SpillWrite,
+    FaultPoint::SpillRead,
+    FaultPoint::OracleTile,
+    FaultPoint::ConsumerFold,
+];
+
+impl FaultPoint {
+    fn idx(self) -> usize {
+        match self {
+            FaultPoint::SpillWrite => 0,
+            FaultPoint::SpillRead => 1,
+            FaultPoint::OracleTile => 2,
+            FaultPoint::ConsumerFold => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::SpillWrite => "spill write",
+            FaultPoint::SpillRead => "spill read",
+            FaultPoint::OracleTile => "oracle tile",
+            FaultPoint::ConsumerFold => "consumer fold",
+        }
+    }
+}
+
+/// When a fault point trips: on the `at`-th operation (1-based), once
+/// (`persistent = false`) or on every operation from the `at`-th on.
+/// `at = 0` disarms the point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub at: u64,
+    pub persistent: bool,
+}
+
+impl FaultSpec {
+    pub fn never() -> Self {
+        FaultSpec { at: 0, persistent: false }
+    }
+
+    /// Fail exactly the `at`-th operation, then recover.
+    pub fn transient(at: u64) -> Self {
+        FaultSpec { at, persistent: false }
+    }
+
+    /// Fail every operation from the `at`-th on.
+    pub fn persistent(at: u64) -> Self {
+        FaultSpec { at, persistent: true }
+    }
+
+    fn trips(&self, op: u64) -> bool {
+        self.at != 0 && (op == self.at || (self.persistent && op > self.at))
+    }
+}
+
+/// A deterministic fault schedule over the four [`FaultPoint`]s, with
+/// per-point operation and injection counters for post-mortem assertions.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    specs: [FaultSpec; 4],
+    ops: [AtomicU64; 4],
+    injected: [AtomicU64; 4],
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::never()
+    }
+}
+
+impl FaultPlan {
+    /// A plan with every point disarmed (all counters still tick).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Builder: arm `point` with `spec`.
+    pub fn fail(mut self, point: FaultPoint, spec: FaultSpec) -> Self {
+        self.specs[point.idx()] = spec;
+        self
+    }
+
+    /// A seed-driven plan: each point is independently armed with a small
+    /// `at` and a random persistence bit; at least one point is always
+    /// armed so a seeded plan is never a no-op.
+    pub fn seeded(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut plan = FaultPlan::none();
+        for i in 0..plan.specs.len() {
+            if rng.usize_below(2) == 1 {
+                plan.specs[i] = FaultSpec {
+                    at: 1 + rng.usize_below(3) as u64,
+                    persistent: rng.usize_below(2) == 1,
+                };
+            }
+        }
+        if plan.specs.iter().all(|s| s.at == 0) {
+            plan.specs[rng.usize_below(plan.specs.len())] = FaultSpec::transient(1);
+        }
+        plan
+    }
+
+    /// Count one operation at `point`; true when this operation must fail.
+    pub fn should_fail(&self, point: FaultPoint) -> bool {
+        let i = point.idx();
+        let op = self.ops[i].fetch_add(1, Ordering::SeqCst) + 1;
+        let trip = self.specs[i].trips(op);
+        if trip {
+            self.injected[i].fetch_add(1, Ordering::SeqCst);
+        }
+        trip
+    }
+
+    /// Operations observed at `point` so far.
+    pub fn ops(&self, point: FaultPoint) -> u64 {
+        self.ops[point.idx()].load(Ordering::SeqCst)
+    }
+
+    /// Faults actually injected at `point` so far.
+    pub fn injected(&self, point: FaultPoint) -> u64 {
+        self.injected[point.idx()].load(Ordering::SeqCst)
+    }
+
+    /// The armed spec at `point`.
+    pub fn spec(&self, point: FaultPoint) -> FaultSpec {
+        self.specs[point.idx()]
+    }
+}
+
+fn armed() -> &'static Mutex<Option<Arc<FaultPlan>>> {
+    static ARMED: OnceLock<Mutex<Option<Arc<FaultPlan>>>> = OnceLock::new();
+    ARMED.get_or_init(|| Mutex::new(None))
+}
+
+/// The globally armed plan, if any. Library seams (spill arena, pipeline
+/// fold) call this once per operation scope; it is `None` in normal runs.
+pub fn current() -> Option<Arc<FaultPlan>> {
+    armed().lock().unwrap().clone()
+}
+
+/// Install `plan` as the process-global fault plan until the returned
+/// guard drops (which restores whatever was armed before).
+#[must_use = "dropping the guard immediately disarms the plan"]
+pub fn arm(plan: Arc<FaultPlan>) -> ArmedGuard {
+    ArmedGuard { prev: armed().lock().unwrap().replace(plan) }
+}
+
+/// Disarms (or restores the previous plan) on drop.
+pub struct ArmedGuard {
+    prev: Option<Arc<FaultPlan>>,
+}
+
+impl Drop for ArmedGuard {
+    fn drop(&mut self) {
+        *armed().lock().unwrap() = self.prev.take();
+    }
+}
+
+/// A [`KernelOracle`] wrapper that panics on the scheduled tile-producing
+/// call (`block`, `row_block`, or `full_rows` each count as one
+/// [`FaultPoint::OracleTile`] operation).
+pub struct FaultyOracle {
+    inner: Arc<dyn KernelOracle + Send + Sync>,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultyOracle {
+    pub fn new(inner: Arc<dyn KernelOracle + Send + Sync>, plan: Arc<FaultPlan>) -> Self {
+        FaultyOracle { inner, plan }
+    }
+
+    fn trip(&self) {
+        if self.plan.should_fail(FaultPoint::OracleTile) {
+            panic!(
+                "injected fault: oracle tile (op {})",
+                self.plan.ops(FaultPoint::OracleTile)
+            );
+        }
+    }
+}
+
+impl KernelOracle for FaultyOracle {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        self.trip();
+        self.inner.block(rows, cols)
+    }
+
+    fn row_block(&self, r0: usize, r1: usize, cols: &[usize]) -> Matrix {
+        self.trip();
+        self.inner.row_block(r0, r1, cols)
+    }
+
+    fn full_rows(&self, r0: usize, r1: usize) -> Matrix {
+        self.trip();
+        self.inner.full_rows(r0, r1)
+    }
+
+    fn entries_observed(&self) -> u64 {
+        self.inner.entries_observed()
+    }
+
+    fn reset_entries(&self) {
+        self.inner.reset_entries();
+    }
+}
+
+/// A [`TileConsumer`] that panics on the scheduled fold (counts its own
+/// folds against the plan's [`FaultPoint::ConsumerFold`] spec — no global
+/// arming needed).
+pub struct FaultyConsumer {
+    plan: Arc<FaultPlan>,
+    pub folds: u64,
+}
+
+impl FaultyConsumer {
+    pub fn new(plan: Arc<FaultPlan>) -> Self {
+        FaultyConsumer { plan, folds: 0 }
+    }
+}
+
+impl TileConsumer for FaultyConsumer {
+    fn consume(&mut self, r0: usize, _tile: &Matrix) {
+        self.folds += 1;
+        if self.plan.should_fail(FaultPoint::ConsumerFold) {
+            panic!("injected fault: consumer fold at r0={r0}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_trips_exactly_once() {
+        let p = FaultPlan::none().fail(FaultPoint::SpillWrite, FaultSpec::transient(2));
+        let hits: Vec<bool> = (0..5).map(|_| p.should_fail(FaultPoint::SpillWrite)).collect();
+        assert_eq!(hits, [false, true, false, false, false]);
+        assert_eq!(p.ops(FaultPoint::SpillWrite), 5);
+        assert_eq!(p.injected(FaultPoint::SpillWrite), 1);
+        // other points untouched
+        assert!(!p.should_fail(FaultPoint::SpillRead));
+    }
+
+    #[test]
+    fn persistent_trips_from_at_onward() {
+        let p = FaultPlan::none().fail(FaultPoint::SpillRead, FaultSpec::persistent(3));
+        let hits: Vec<bool> = (0..5).map(|_| p.should_fail(FaultPoint::SpillRead)).collect();
+        assert_eq!(hits, [false, false, true, true, true]);
+        assert_eq!(p.injected(FaultPoint::SpillRead), 3);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_armed() {
+        for seed in [0u64, 11, 23, 47, 0xDEAD] {
+            let a = FaultPlan::seeded(seed);
+            let b = FaultPlan::seeded(seed);
+            for pt in FAULT_POINTS {
+                assert_eq!(a.spec(pt), b.spec(pt), "seed {seed} must replay");
+            }
+            assert!(
+                FAULT_POINTS.iter().any(|&pt| a.spec(pt).at != 0),
+                "seed {seed}: at least one point armed"
+            );
+        }
+    }
+
+    #[test]
+    fn arm_guard_restores_previous_plan() {
+        // Runs in the lib test binary; no other lib test arms plans.
+        let outer = Arc::new(FaultPlan::none().fail(FaultPoint::OracleTile, FaultSpec::transient(1)));
+        let g1 = arm(Arc::clone(&outer));
+        assert_eq!(current().unwrap().spec(FaultPoint::OracleTile), FaultSpec::transient(1));
+        {
+            let inner = Arc::new(FaultPlan::none());
+            let _g2 = arm(inner);
+            assert_eq!(current().unwrap().spec(FaultPoint::OracleTile), FaultSpec::never());
+        }
+        assert_eq!(current().unwrap().spec(FaultPoint::OracleTile), FaultSpec::transient(1));
+        drop(g1);
+        assert!(current().is_none());
+    }
+}

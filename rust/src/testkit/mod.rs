@@ -7,6 +7,8 @@
 use crate::linalg::Matrix;
 use crate::util::Rng;
 
+pub mod faults;
+
 /// Configuration for a property run.
 pub struct Prop {
     pub cases: usize,

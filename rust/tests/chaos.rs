@@ -1,0 +1,453 @@
+//! Chaos acceptance matrix (ISSUE 6): deterministic fault injection over
+//! {spill write, spill read, oracle tile, consumer fold} ×
+//! {transient, persistent}. Every cell must end in a typed error or a
+//! correct (possibly degraded) result — never a hang, never a poisoned
+//! worker — with the memory meter back at zero and no spill temp files
+//! left behind.
+//!
+//! Tests that arm the process-global fault plan serialize on
+//! `CHAOS_LOCK` (the arm slot is process-wide). The seeded matrix at the
+//! bottom replays the fixed seed set from `FASTSPSD_CHAOS_SEEDS`
+//! (default "11 23 47" — the `make chaos` pin).
+
+use fastspsd::coordinator::oracle::{KernelOracle, RbfOracle};
+use fastspsd::coordinator::{
+    ApproxRequest, ApproxService, MethodSpec, ServiceConfig, ServiceError,
+};
+use fastspsd::exec::{self, ExecPolicy};
+use fastspsd::linalg::Matrix;
+use fastspsd::sketch::SketchKind;
+use fastspsd::testkit::faults::{
+    self, FaultPlan, FaultPoint, FaultSpec, FaultyOracle,
+};
+use fastspsd::util::Rng;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Serializes tests that touch the process-global fault-plan slot.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn chaos_guard() -> std::sync::MutexGuard<'static, ()> {
+    // A previous test's assert must not wedge the rest of the suite.
+    CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const N: usize = 53;
+const C: usize = 5;
+
+fn oracle() -> RbfOracle {
+    let mut rng = Rng::new(3);
+    RbfOracle::cpu(Arc::new(Matrix::randn(N, 6, &mut rng)), 0.5)
+}
+
+fn landmarks() -> Vec<usize> {
+    vec![2, 11, 23, 37, 50]
+}
+
+/// Fresh per-test spill directory under the system temp dir; asserting it
+/// is empty afterwards is the "no leftover temp files" acceptance check.
+fn spill_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastspsd-chaos-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_no_spill_files(dir: &PathBuf) {
+    let leftover: Vec<_> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    assert!(leftover.is_empty(), "leftover spill files: {leftover:?}");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The multi-pass build the spill faults target: q Lanczos iterations at a
+/// zero RAM budget, so every re-read goes through the arena.
+fn lanczos_under(
+    o: &RbfOracle,
+    cols: &[usize],
+    policy: &ExecPolicy,
+) -> (Vec<f64>, Matrix, fastspsd::stream::ResidencyStats) {
+    let src = fastspsd::stream::OracleColumnsSource::new(o, cols);
+    let u = Matrix::identity(C);
+    let rep = exec::top_k_eigs(&src, &u, 3, 7, policy);
+    let (vals, vecs) = rep.result;
+    (vals, vecs, rep.meta.residency.expect("resident policy carries stats"))
+}
+
+fn spilled_in(dir: &PathBuf) -> ExecPolicy {
+    ExecPolicy::resident(0).with_tile_rows(8).with_spill_dir(dir.clone())
+}
+
+#[test]
+fn spill_write_faults_recover_or_degrade_bit_identically() {
+    let _g = chaos_guard();
+    let o = oracle();
+    let cols = landmarks();
+    let dir = spill_dir("spill-write");
+    let (vals_ref, vecs_ref, _) = lanczos_under(&o, &cols, &spilled_in(&dir));
+
+    // transient: the 2nd tile write fails once; the retry-with-backoff
+    // path absorbs it invisibly (counted in io_retries).
+    let plan = Arc::new(FaultPlan::none().fail(FaultPoint::SpillWrite, FaultSpec::transient(2)));
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let (vals, vecs, stats) = lanczos_under(&o, &cols, &spilled_in(&dir));
+        assert_eq!(vals_ref, vals, "transient write fault must not change results");
+        assert_eq!(vecs_ref.max_abs_diff(&vecs), 0.0);
+        assert!(stats.io_retries >= 1, "the retry must be visible in stats");
+        assert!(stats.spill_hits > 0, "the arena survives a transient fault");
+    }
+    assert_eq!(plan.injected(FaultPoint::SpillWrite), 1);
+
+    // persistent: every write fails; after the retry budget the arena is
+    // dropped wholesale and the layer degrades to recompute-on-miss —
+    // still bit-identical, never an error.
+    let plan =
+        Arc::new(FaultPlan::none().fail(FaultPoint::SpillWrite, FaultSpec::persistent(1)));
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let (vals, vecs, stats) = lanczos_under(&o, &cols, &spilled_in(&dir));
+        assert_eq!(vals_ref, vals, "persistent write fault must degrade, not corrupt");
+        assert_eq!(vecs_ref.max_abs_diff(&vecs), 0.0);
+        assert_eq!(stats.spill_hits, 0, "a dead arena serves nothing");
+        assert!(stats.computes > (N.div_ceil(8)) as u64, "degraded = recompute on miss");
+    }
+    assert!(plan.injected(FaultPoint::SpillWrite) >= 3, "one write, all attempts failed");
+    assert_no_spill_files(&dir);
+}
+
+#[test]
+fn spill_read_faults_recover_or_degrade_bit_identically() {
+    let _g = chaos_guard();
+    let o = oracle();
+    let cols = landmarks();
+    let dir = spill_dir("spill-read");
+    let (vals_ref, vecs_ref, stats_ref) = lanczos_under(&o, &cols, &spilled_in(&dir));
+    assert!(stats_ref.spill_hits > 0, "premise: the clean run re-reads the arena");
+
+    // transient: the 1st arena read fails once, the retry serves it.
+    let plan = Arc::new(FaultPlan::none().fail(FaultPoint::SpillRead, FaultSpec::transient(1)));
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let (vals, vecs, stats) = lanczos_under(&o, &cols, &spilled_in(&dir));
+        assert_eq!(vals_ref, vals, "transient read fault must not change results");
+        assert_eq!(vecs_ref.max_abs_diff(&vecs), 0.0);
+        assert!(stats.io_retries >= 1);
+        assert_eq!(stats.spill_hits, stats_ref.spill_hits, "all re-reads still served");
+    }
+
+    // persistent: reads keep failing; the arena is dropped and every
+    // former spill hit becomes a recompute.
+    let plan =
+        Arc::new(FaultPlan::none().fail(FaultPoint::SpillRead, FaultSpec::persistent(1)));
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let (vals, vecs, stats) = lanczos_under(&o, &cols, &spilled_in(&dir));
+        assert_eq!(vals_ref, vals, "persistent read fault must degrade, not corrupt");
+        assert_eq!(vecs_ref.max_abs_diff(&vecs), 0.0);
+        assert_eq!(stats.spill_hits, 0);
+        assert!(stats.computes > stats_ref.computes, "degraded = recompute on miss");
+    }
+    assert_no_spill_files(&dir);
+}
+
+/// Service over a fault-wrapped oracle: worker panics must be isolated.
+fn faulty_service(plan: Arc<FaultPlan>, workers: usize) -> ApproxService {
+    let inner: Arc<dyn KernelOracle + Send + Sync> = Arc::new(oracle());
+    let faulty = Arc::new(FaultyOracle::new(inner, plan));
+    ApproxService::new(faulty, ServiceConfig { workers, ..Default::default() })
+}
+
+fn req(id: u64, policy: Option<ExecPolicy>) -> ApproxRequest {
+    ApproxRequest {
+        id,
+        method: MethodSpec::Fast { s: 20, kind: SketchKind::Uniform },
+        c: 8,
+        k: 3,
+        seed: id,
+        policy,
+        deadline: None,
+    }
+}
+
+#[test]
+fn oracle_tile_panic_is_isolated_and_the_service_keeps_serving() {
+    // No global arming (the plan rides inside FaultyOracle), so no lock.
+    for (spec, faulted_requests) in [
+        (FaultSpec::transient(2), 1u64),   // one tile panic, one dead request
+        (FaultSpec::persistent(1), 2u64),  // every tile panics until disarmed... it never is
+    ] {
+        let plan = Arc::new(FaultPlan::none().fail(FaultPoint::OracleTile, spec));
+        let svc = faulty_service(Arc::clone(&plan), 2);
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(0, None), tx.clone());
+        svc.submit(req(1, None), tx.clone());
+        svc.drain();
+        drop(tx);
+        let mut resps: Vec<_> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 2, "{spec:?}: panicking builds still reply");
+        let faulted = resps
+            .iter()
+            .filter(|r| matches!(r.error, Some(ServiceError::Faulted(_))))
+            .count() as u64;
+        assert_eq!(faulted, faulted_requests, "{spec:?}");
+        for r in &resps {
+            match &r.error {
+                None => assert_eq!(r.eigvals.len(), 3),
+                Some(ServiceError::Faulted(msg)) => {
+                    assert!(msg.contains("injected fault: oracle tile"), "{msg}");
+                }
+                other => panic!("{spec:?}: unexpected error {other:?}"),
+            }
+        }
+        let m = svc.metrics();
+        assert_eq!(m.faulted.get(), faulted_requests);
+        assert_eq!(m.completed.get(), 2 - faulted_requests);
+        assert_eq!(m.mem_in_use.get(), 0, "{spec:?}: reservations released on panic");
+        assert_eq!(svc.inflight(), 0);
+
+        // The worker that caught the panic is still alive: with the fault
+        // schedule exhausted (transient) the same service serves clean.
+        if !spec.persistent {
+            let (tx, rx) = mpsc::channel();
+            svc.submit(req(2, None), tx);
+            svc.drain();
+            let r = rx.iter().next().unwrap();
+            assert!(r.error.is_none(), "worker must survive the earlier panic: {:?}", r.error);
+            assert_eq!(m.completed.get(), 2);
+        }
+    }
+}
+
+#[test]
+fn consumer_fold_panic_is_isolated_and_the_service_keeps_serving() {
+    let _g = chaos_guard();
+    let dir = spill_dir("consumer-fold");
+    for spec in [FaultSpec::transient(2), FaultSpec::persistent(2)] {
+        let svc = ApproxService::new(
+            Arc::new(oracle()) as Arc<dyn KernelOracle + Send + Sync>,
+            ServiceConfig {
+                workers: 1,
+                spill_dir: Some(dir.clone()),
+                ..Default::default()
+            },
+        );
+        let plan = Arc::new(FaultPlan::none().fail(FaultPoint::ConsumerFold, spec));
+        {
+            let _armed = faults::arm(Arc::clone(&plan));
+            // resident streamed build → spill arena + pipeline folds
+            let (tx, rx) = mpsc::channel();
+            svc.submit(req(0, Some(ExecPolicy::resident(0).with_tile_rows(8))), tx);
+            svc.drain();
+            let r = rx.iter().next().unwrap();
+            match &r.error {
+                Some(ServiceError::Faulted(msg)) => {
+                    assert!(msg.contains("injected fault: consumer fold"), "{msg}");
+                }
+                other => panic!("{spec:?}: expected Faulted, got {other:?}"),
+            }
+            assert!(r.meta.is_none() && r.eigvals.is_empty());
+        }
+        assert!(plan.injected(FaultPoint::ConsumerFold) >= 1, "{spec:?}");
+        let m = svc.metrics();
+        assert_eq!(m.faulted.get(), 1);
+        assert_eq!(m.mem_in_use.get(), 0, "{spec:?}: reservation released through the unwind");
+        assert_eq!(svc.inflight(), 0);
+
+        // Disarmed, the same service (same worker thread) serves clean and
+        // the panicked build's spill arena was cleaned by its guard.
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(1, Some(ExecPolicy::resident(0).with_tile_rows(8))), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "{spec:?}: worker must survive: {:?}", r.error);
+        assert!(r.meta.unwrap().residency.unwrap().computes > 0);
+    }
+    assert_no_spill_files(&dir);
+}
+
+/// A [`KernelOracle`] whose tile production blocks until released —
+/// deterministic "slow request" for queue/deadline/shutdown tests.
+struct GateOracle {
+    inner: Arc<dyn KernelOracle + Send + Sync>,
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl GateOracle {
+    fn new(inner: Arc<dyn KernelOracle + Send + Sync>) -> Self {
+        GateOracle { inner, open: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait_open(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+impl KernelOracle for GateOracle {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        self.wait_open();
+        self.inner.block(rows, cols)
+    }
+
+    fn row_block(&self, r0: usize, r1: usize, cols: &[usize]) -> Matrix {
+        self.wait_open();
+        self.inner.row_block(r0, r1, cols)
+    }
+
+    fn full_rows(&self, r0: usize, r1: usize) -> Matrix {
+        self.wait_open();
+        self.inner.full_rows(r0, r1)
+    }
+
+    fn entries_observed(&self) -> u64 {
+        self.inner.entries_observed()
+    }
+
+    fn reset_entries(&self) {
+        self.inner.reset_entries();
+    }
+}
+
+fn gated_service(workers: usize) -> (Arc<GateOracle>, ApproxService) {
+    let gate = Arc::new(GateOracle::new(Arc::new(oracle())));
+    let n = gate.n();
+    let cap = fastspsd::coordinator::planner::predicted_policy_peak_bytes(
+        n,
+        8,
+        &MethodSpec::Fast { s: 20, kind: SketchKind::Uniform },
+        &ExecPolicy::Materialized,
+    );
+    let svc = ApproxService::new(
+        Arc::clone(&gate) as Arc<dyn KernelOracle + Send + Sync>,
+        ServiceConfig { workers, memory_cap: Some(cap), ..Default::default() },
+    );
+    (gate, svc)
+}
+
+#[test]
+fn queued_request_past_its_deadline_is_reaped_with_a_typed_reply() {
+    // A holds the whole cap behind the gate; B (deadline 0) must queue and
+    // then be expired by the reaper — typed Overloaded, not a hang, and
+    // the queue drains so A still completes untouched.
+    let (gate, svc) = gated_service(1);
+    let (tx_a, rx_a) = mpsc::channel();
+    svc.submit(req(0, None), tx_a);
+    let (tx_b, rx_b) = mpsc::channel();
+    let mut b = req(1, None);
+    b.deadline = Some(Duration::ZERO);
+    svc.submit(b, tx_b);
+    let rb = rx_b
+        .recv_timeout(Duration::from_secs(10))
+        .expect("the reaper must expire B, not leave it hanging");
+    match rb.error {
+        Some(ServiceError::Overloaded { retry_after }) => {
+            assert!(retry_after > Duration::ZERO);
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    gate.release();
+    svc.drain();
+    let ra = rx_a.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(ra.error.is_none(), "{:?}", ra.error);
+    let m = svc.metrics();
+    assert_eq!(m.expired_deadline.get(), 1);
+    assert_eq!(m.queued.get(), 1);
+    assert_eq!(m.completed.get(), 1);
+    assert_eq!(m.rejected_overload.get(), 0);
+    assert_eq!(m.mem_in_use.get(), 0);
+}
+
+#[test]
+fn shutdown_flushes_the_admission_queue_with_stopping_replies() {
+    let (gate, svc) = gated_service(1);
+    let (tx_a, rx_a) = mpsc::channel();
+    svc.submit(req(0, None), tx_a);
+    let (tx_b, rx_b) = mpsc::channel();
+    svc.submit(req(1, None), tx_b); // queues: A holds the whole cap
+    std::thread::scope(|s| {
+        let h = s.spawn(|| svc.shutdown());
+        // B's reply proves the flush happened while A was still in flight.
+        let rb = rx_b
+            .recv_timeout(Duration::from_secs(10))
+            .expect("shutdown must flush the queue, not drop reply channels");
+        assert_eq!(rb.error, Some(ServiceError::Stopping));
+        gate.release();
+        h.join().unwrap();
+    });
+    let ra = rx_a.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(ra.error.is_none(), "in-flight work completes through shutdown: {:?}", ra.error);
+    // Post-shutdown submissions are refused up front.
+    let (tx_c, rx_c) = mpsc::channel();
+    svc.submit(req(2, None), tx_c);
+    assert_eq!(rx_c.iter().next().unwrap().error, Some(ServiceError::Stopping));
+    assert_eq!(svc.metrics().completed.get(), 1);
+    assert_eq!(svc.metrics().mem_in_use.get(), 0);
+}
+
+/// The fixed seed set (`make chaos` pins FASTSPSD_CHAOS_SEEDS="11 23 47").
+fn chaos_seeds() -> Vec<u64> {
+    std::env::var("FASTSPSD_CHAOS_SEEDS")
+        .unwrap_or_else(|_| "11 23 47".into())
+        .split_whitespace()
+        .map(|t| t.parse().expect("FASTSPSD_CHAOS_SEEDS must be u64s"))
+        .collect()
+}
+
+#[test]
+fn seeded_chaos_matrix_never_hangs_never_leaks_never_corrupts() {
+    let _g = chaos_guard();
+    let o = oracle();
+    let cols = landmarks();
+    let dir = spill_dir("seeded");
+    let (vals_ref, vecs_ref, _) = lanczos_under(&o, &cols, &spilled_in(&dir));
+    for seed in chaos_seeds() {
+        let plan = Arc::new(FaultPlan::seeded(seed));
+        {
+            let _armed = faults::arm(Arc::clone(&plan));
+            // Whatever the seed armed: the run must either complete
+            // bit-identically (spill faults retry or degrade) or panic in
+            // a contained, propagated way (consumer-fold faults) — never
+            // hang, never return silently wrong numbers.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                lanczos_under(&o, &cols, &spilled_in(&dir))
+            }));
+            match outcome {
+                Ok((vals, vecs, _)) => {
+                    assert_eq!(vals_ref, vals, "seed {seed}: degraded ≠ corrupted");
+                    assert_eq!(vecs_ref.max_abs_diff(&vecs), 0.0, "seed {seed}");
+                }
+                Err(_) => {
+                    assert!(
+                        plan.injected(FaultPoint::ConsumerFold) > 0,
+                        "seed {seed}: only a fold fault may panic this build"
+                    );
+                }
+            }
+        }
+        // After every cell: the arena guard ran (no files) whether the
+        // build finished or unwound.
+        let leftover: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert!(leftover.is_empty(), "seed {seed}: leftover spill files {leftover:?}");
+    }
+    assert_no_spill_files(&dir);
+}

@@ -15,6 +15,7 @@ use fastspsd::spsd::FastConfig;
 use fastspsd::stream::{
     self, CollectConsumer, OracleColumnsSource, ResidencyConfig, ResidentSource,
 };
+use fastspsd::testkit::faults::{FaultPlan, FaultPoint, FaultSpec, FaultyConsumer, FaultyOracle};
 use fastspsd::util::Rng;
 
 /// Spilling residency at `budget` bytes, grid = pipeline tile = `tile`.
@@ -230,4 +231,70 @@ fn residency_serves_misaligned_pass_tilings_from_one_grid() {
     }
     assert_eq!(o.entries_observed(), first, "grid tiles computed once, reused by every pass");
     assert_eq!(resident.stats().computes, N.div_ceil(8) as u64);
+}
+
+#[test]
+fn consumer_panic_mid_fold_cleans_spill_and_leaves_pool_healthy() {
+    // A consumer panicking on the Kth tile must surface as an error (not a
+    // hang), unlink the spill arena during unwind, and leave the global
+    // pool able to run the next pipeline.
+    let o = oracle();
+    let cols = landmarks();
+    let plan =
+        Arc::new(FaultPlan::none().fail(FaultPoint::ConsumerFold, FaultSpec::transient(3)));
+    let src = OracleColumnsSource::new(&o, &cols);
+    let rc = ResidencyConfig::new(0).with_tile_rows(8);
+    let path = {
+        let resident = ResidentSource::new(&src, &rc);
+        let path = resident.spill_path().expect("arena live");
+        assert!(path.exists());
+        let mut bomb = FaultyConsumer::new(Arc::clone(&plan));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            stream::run_pipeline(&resident, 8, 2, &mut [&mut bomb]);
+        }));
+        assert!(result.is_err(), "consumer fault must propagate, not hang or vanish");
+        path
+    };
+    assert!(!path.exists(), "arena must be unlinked by the unwind");
+    assert_eq!(plan.injected(FaultPoint::ConsumerFold), 1, "exactly the scheduled fault");
+
+    // The pool survives: an identical pipeline right after serves cleanly.
+    let resident = ResidentSource::new(&src, &rc);
+    let mut collect = CollectConsumer::new(N, C);
+    stream::run_pipeline(&resident, 8, 2, &mut [&mut collect]);
+    assert_eq!(collect.into_matrix().max_abs_diff(&o.columns(&cols)), 0.0);
+}
+
+#[test]
+fn source_panic_mid_tile_cleans_spill_and_leaves_pool_healthy() {
+    // The dual fault: the oracle (tile *producer*, running on a pool
+    // worker) panics on the Kth tile. `ThreadPool::scoped` must re-raise
+    // it on the consumer thread, the spill guard must still unlink the
+    // arena, and the worker thread must survive for the next run.
+    let o = oracle();
+    let cols = landmarks();
+    let plan =
+        Arc::new(FaultPlan::none().fail(FaultPoint::OracleTile, FaultSpec::transient(3)));
+    let faulty = FaultyOracle::new(Arc::new(oracle()), Arc::clone(&plan));
+    let src = OracleColumnsSource::new(&faulty, &cols);
+    let rc = ResidencyConfig::new(0).with_tile_rows(8);
+    let path = {
+        let resident = ResidentSource::new(&src, &rc);
+        let path = resident.spill_path().expect("arena live");
+        let mut collect = CollectConsumer::new(N, C);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            stream::run_pipeline(&resident, 8, 2, &mut [&mut collect]);
+        }));
+        assert!(result.is_err(), "source fault must propagate, not hang or vanish");
+        path
+    };
+    assert!(!path.exists(), "arena must be unlinked by the unwind");
+    assert_eq!(plan.injected(FaultPoint::OracleTile), 1);
+
+    // Same wrapped source, fault spent: the retryed pipeline completes and
+    // matches the unwrapped oracle bit-for-bit.
+    let resident = ResidentSource::new(&src, &rc);
+    let mut collect = CollectConsumer::new(N, C);
+    stream::run_pipeline(&resident, 8, 2, &mut [&mut collect]);
+    assert_eq!(collect.into_matrix().max_abs_diff(&o.columns(&cols)), 0.0);
 }
