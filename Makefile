@@ -22,6 +22,11 @@
 #                       {spill write, spill read, oracle tile, consumer
 #                       fold} × {transient, persistent} must end typed or
 #                       degraded, never hung. Part of `make ci`.
+#   make trace-smoke  — serve one streamed and one resident-with-spill
+#                       request with tracing on and validate the emitted
+#                       Chrome trace_event JSON covers the mandatory
+#                       stages (rust/tests/trace_smoke.rs, pure Rust).
+#                       Part of `make ci`.
 #   make test / build — the tier-1 pieces individually.
 
 CARGO ?= cargo
@@ -31,7 +36,7 @@ PYTHON ?= python3
 # overridable for exploration (FASTSPSD_CHAOS_SEEDS="1 2 3" make chaos).
 FASTSPSD_CHAOS_SEEDS ?= 11 23 47
 
-.PHONY: build test bench bench-quick chaos ci doc perf-check artifacts toolchain-guard
+.PHONY: build test bench bench-quick chaos trace-smoke ci doc perf-check artifacts toolchain-guard
 
 toolchain-guard:
 	@command -v $(CARGO) >/dev/null 2>&1 || { \
@@ -58,7 +63,10 @@ bench: toolchain-guard
 chaos: toolchain-guard
 	FASTSPSD_CHAOS_SEEDS="$(FASTSPSD_CHAOS_SEEDS)" $(CARGO) test -q --test chaos
 
-ci: toolchain-guard build test chaos doc
+trace-smoke: toolchain-guard
+	$(CARGO) test -q --test trace_smoke
+
+ci: toolchain-guard build test chaos trace-smoke doc
 	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
 	  $(CARGO) clippy --release -- -D warnings; \
 	else \

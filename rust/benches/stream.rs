@@ -282,6 +282,31 @@ fn main() {
         suite.counter("residency.spill_hits_after_fault", st.spill_hits as f64);
     }
 
+    // ---- observability: per-stage profile + pipeline stall fractions ----
+    // Installed LAST so every timed section above ran with the recorder
+    // disabled (the spans cost one atomic load there). One traced streamed
+    // build answers "is this pipeline oracle-bound or fold-bound" and
+    // lands per-stage seconds + stall fractions in BENCH_stream.json.
+    {
+        fastspsd::obs::ensure_installed();
+        let rep = exec::fast(&oracle, &p, FastConfig::uniform(s), &tiled, &mut Rng::new(1));
+        let profile = rep.meta.stage_profile.expect("recorder is installed");
+        println!("  span-traced fast[uniform] streamed t={DEFAULT_TILE} n={n}:");
+        for line in profile.summary_lines() {
+            println!("    {line}");
+        }
+        for agg in &profile.stages {
+            suite.counter(&format!("stage.{}.total_secs", agg.stage.name()), agg.total_secs);
+            suite.counter(&format!("stage.{}.count", agg.stage.name()), agg.count as f64);
+        }
+        if let Some(f) = profile.producer_stall_fraction() {
+            suite.counter("pipeline.producer_stall_fraction", f);
+        }
+        if let Some(f) = profile.consumer_stall_fraction() {
+            suite.counter("pipeline.consumer_stall_fraction", f);
+        }
+    }
+
     // Quick smoke runs land in a separate file so they never clobber the
     // full-budget perf trajectory — unless commit mode (`make bench-quick`)
     // asks for the canonical artifact.

@@ -118,9 +118,11 @@ impl Histogram {
         Duration::from_nanos(self.max_nanos.load(Ordering::Relaxed))
     }
 
-    /// Exact quantile from retained samples (q in [0, 1]).
+    /// Exact quantile from retained samples (q in [0, 1]). Sorts the
+    /// sample store in place — no clone; reordering is invisible to the
+    /// bucket counters and later `observe`s just append unsorted again.
     pub fn quantile(&self, q: f64) -> Duration {
-        let mut s = self.samples.lock().unwrap().clone();
+        let mut s = self.samples.lock().unwrap();
         if s.is_empty() {
             return Duration::ZERO;
         }
@@ -129,16 +131,43 @@ impl Histogram {
         Duration::from_nanos(s[idx])
     }
 
+    /// Every summary statistic from one lock and one sort — use this
+    /// instead of separate `quantile` calls when reporting more than one.
+    pub fn stats(&self) -> HistogramSummary {
+        let count = self.count();
+        let mean = self.mean();
+        let max = self.max();
+        let mut s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return HistogramSummary { count, mean, p50: Duration::ZERO, p95: Duration::ZERO, max };
+        }
+        s.sort_unstable();
+        let at = |q: f64| {
+            let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+            Duration::from_nanos(s[idx])
+        };
+        HistogramSummary { count, mean, p50: at(0.5), p95: at(0.95), max }
+    }
+
     pub fn summary(&self) -> String {
+        let st = self.stats();
         format!(
             "n={} mean={:?} p50={:?} p95={:?} max={:?}",
-            self.count(),
-            self.mean(),
-            self.quantile(0.5),
-            self.quantile(0.95),
-            self.max()
+            st.count, st.mean, st.p50, st.p95, st.max
         )
     }
+}
+
+/// Point-in-time statistics of one [`Histogram`]: a single pass under a
+/// single lock, instead of a clone-and-sort of the sample store per
+/// quantile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub max: Duration,
 }
 
 /// All service-level metrics.
@@ -173,6 +202,46 @@ pub struct Metrics {
     pub mem_in_use: Gauge,
     pub latency: Histogram,
     pub queue_wait: Histogram,
+}
+
+impl Metrics {
+    /// One coherent read of every counter plus both histogram summaries.
+    /// Callers that report or compare several fields (figures, e2e, the
+    /// service's own logging) should read this instead of the live
+    /// atomics one by one mid-run.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.get(),
+            completed: self.completed.get(),
+            failed: self.failed.get(),
+            rejected_overload: self.rejected_overload.get(),
+            expired_deadline: self.expired_deadline.get(),
+            faulted: self.faulted.get(),
+            queued: self.queued.get(),
+            degraded: self.degraded.get(),
+            mem_in_use: self.mem_in_use.get(),
+            latency: self.latency.stats(),
+            queue_wait: self.queue_wait.stats(),
+        }
+    }
+}
+
+/// A point-in-time copy of [`Metrics`] — plain integers and
+/// [`HistogramSummary`]s, safe to hold across formatting without
+/// torn reads from concurrently advancing counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected_overload: u64,
+    pub expired_deadline: u64,
+    pub faulted: u64,
+    pub queued: u64,
+    pub degraded: u64,
+    pub mem_in_use: u64,
+    pub latency: HistogramSummary,
+    pub queue_wait: HistogramSummary,
 }
 
 #[cfg(test)]
@@ -218,5 +287,30 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.quantile(0.9), Duration::ZERO);
+        let st = h.stats();
+        assert_eq!(st.count, 0);
+        assert_eq!(st.p95, Duration::ZERO);
+    }
+
+    #[test]
+    fn stats_and_snapshot_agree_with_live_reads() {
+        let m = Metrics::default();
+        m.requests.inc();
+        m.completed.inc();
+        m.mem_in_use.add(42);
+        for ms in [1u64, 2, 3] {
+            m.latency.observe(Duration::from_millis(ms));
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.mem_in_use, 42);
+        assert_eq!(snap.latency.count, 3);
+        assert_eq!(snap.latency.p50, Duration::from_millis(2));
+        assert_eq!(snap.latency.max, Duration::from_millis(3));
+        // the in-place sort inside stats() is invisible to later reads
+        m.latency.observe(Duration::from_millis(1));
+        assert_eq!(m.latency.quantile(1.0), Duration::from_millis(3));
+        assert_eq!(m.latency.stats().count, 4);
     }
 }

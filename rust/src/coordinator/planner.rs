@@ -18,6 +18,7 @@
 //! selection results).
 
 use crate::exec::{DegradeAction, DegradeInfo, ExecPolicy};
+use crate::obs::{self, Stage};
 use crate::sketch::SketchKind;
 use crate::stream::{panel_bytes, StreamConfig, DEFAULT_QUEUE_DEPTH, DEFAULT_RESIDENT_TILE_ROWS};
 
@@ -382,6 +383,7 @@ fn fit_memory(mut plan: Plan, n: usize, s: usize, memory_budget: u64) -> Option<
 /// degrades to the fewest-entries candidate in its most memory-frugal form
 /// (the caller sees the overshoot in the plan's predicted fields).
 pub fn plan(goal: Goal) -> Plan {
+    let _s = obs::span(Stage::Plan);
     let n = goal.n.max(2);
     let eps = goal.epsilon.clamp(1e-6, 1.0);
     // Fast model at theory sizes.
@@ -486,6 +488,7 @@ pub fn degrade_ladder(
     c: usize,
     policy: &ExecPolicy,
 ) -> Vec<DegradeStep> {
+    let _s = obs::span(Stage::Plan);
     let n = n.max(1);
     let mut rungs: Vec<DegradeStep> = Vec::new();
     let mut m = *method;

@@ -48,9 +48,11 @@ use super::planner;
 use crate::cur::{self, FastCurConfig};
 use crate::exec::{self, DegradeInfo, ExecPolicy, RunMeta};
 use crate::linalg::svd_thin;
+use crate::obs::{self, sink, Stage, StageProfile};
 use crate::pool::ThreadPool;
 use crate::spsd::{self, FastConfig, LeverageBasis};
 use crate::util::Rng;
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -133,6 +135,12 @@ pub struct ApproxResponse {
     /// Which rung of the degrade ladder served this request (`None` =
     /// served exactly as asked). Also present in `meta.degraded`.
     pub degraded: Option<DegradeInfo>,
+    /// Seconds this request waited in the admission queue before a
+    /// worker picked it up (0 for requests never dispatched).
+    pub queue_wait_secs: f64,
+    /// Seconds admission spent walking this request's degrade ladder,
+    /// summed over every attempt (0 when rung 0 reserved directly).
+    pub ladder_secs: f64,
     /// Why the request was not served (`None` on success).
     pub error: Option<ServiceError>,
 }
@@ -159,6 +167,13 @@ pub struct ServiceConfig {
     /// Queue depth at (or above) which admission starts walking the
     /// degrade ladder for requests that would otherwise keep waiting.
     pub degrade_queue_depth: usize,
+    /// Directory to write one Chrome `trace_event` JSON file per served
+    /// request into (`trace-req-<id>.json`, loadable in `about:tracing`
+    /// or Perfetto). Setting it installs the span recorder
+    /// ([`obs::ensure_installed`]). `Default` reads the `FASTSPSD_TRACE`
+    /// environment variable; `None` = no trace files (spans still feed
+    /// `RunMeta::stage_profile` whenever the recorder is installed).
+    pub trace_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -171,6 +186,9 @@ impl Default for ServiceConfig {
             admission_capacity: 64,
             default_deadline: Duration::from_secs(30),
             degrade_queue_depth: 4,
+            trace_dir: std::env::var_os("FASTSPSD_TRACE")
+                .filter(|v| !v.is_empty())
+                .map(PathBuf::from),
         }
     }
 }
@@ -198,6 +216,15 @@ struct QueuedJob {
     reply: mpsc::Sender<ApproxResponse>,
     enqueued: Instant,
     deadline: Instant,
+    /// Raw [`obs`] trace id for this request (0 = recorder off).
+    trace: u64,
+    /// Enqueue time on the trace clock, for the manual
+    /// `admission.queue` span (0 when untraced).
+    enqueue_ns: u64,
+    /// Nanoseconds spent walking the degrade ladder for this job,
+    /// accumulated across admission attempts (reaper + submit threads,
+    /// serialized by the queue lock).
+    ladder_ns: Cell<u64>,
 }
 
 /// State shared by the service handle, the reaper thread, and workers.
@@ -211,6 +238,7 @@ struct Shared {
     admission_capacity: usize,
     default_deadline: Duration,
     degrade_queue_depth: usize,
+    trace_dir: Option<PathBuf>,
     stopping: AtomicBool,
     queue: Mutex<VecDeque<QueuedJob>>,
     /// Woken when headroom opens (a reservation drops), when a job is
@@ -232,6 +260,10 @@ pub struct ApproxService {
 
 impl ApproxService {
     pub fn new(oracle: Arc<dyn KernelOracle + Send + Sync>, cfg: ServiceConfig) -> Self {
+        if let Some(dir) = &cfg.trace_dir {
+            obs::ensure_installed();
+            let _ = std::fs::create_dir_all(dir);
+        }
         let shared = Arc::new(Shared {
             oracle,
             pool: ThreadPool::new(cfg.workers.max(1), cfg.queue_capacity.max(1)),
@@ -242,6 +274,7 @@ impl ApproxService {
             admission_capacity: cfg.admission_capacity.max(1),
             default_deadline: cfg.default_deadline,
             degrade_queue_depth: cfg.degrade_queue_depth.max(1),
+            trace_dir: cfg.trace_dir,
             stopping: AtomicBool::new(false),
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
@@ -276,6 +309,10 @@ impl ApproxService {
             let _ = reply.send(error_response(req.id, req.method.name(), ServiceError::Stopping));
             return;
         }
+        // One trace per request: planning below is tagged through the
+        // scope; the worker re-establishes the id on its own thread.
+        let trace = if obs::installed() { obs::TraceId::mint().raw() } else { 0 };
+        let _tscope = obs::trace_scope(trace);
         let n = s.oracle.n();
         let c = req.c.clamp(1, n.max(1));
         let mut policy = req.policy.clone().unwrap_or_else(planner::default_policy);
@@ -302,7 +339,18 @@ impl ApproxService {
             || s.memory_cap.map_or(true, |cap| ladder.iter().any(|r| r.predicted <= cap));
         let now = Instant::now();
         let deadline = now + req.deadline.unwrap_or(s.default_deadline);
-        let job = QueuedJob { req, rung0, ladder, fits_alone, reply, enqueued: now, deadline };
+        let job = QueuedJob {
+            req,
+            rung0,
+            ladder,
+            fits_alone,
+            reply,
+            enqueued: now,
+            deadline,
+            trace,
+            enqueue_ns: if trace != 0 { obs::now_ns() } else { 0 },
+            ladder_ns: Cell::new(0),
+        };
 
         let mut q = s.queue.lock().unwrap();
         if q.is_empty() {
@@ -319,6 +367,7 @@ impl ApproxService {
                 s.metrics.rejected_overload.inc();
                 let err = ServiceError::Overloaded { retry_after: retry_hint(s) };
                 let _ = job.reply.send(error_response(job.req.id, job.req.method.name(), err));
+                discard_trace(job.trace);
                 return;
             }
         }
@@ -327,6 +376,7 @@ impl ApproxService {
             s.metrics.rejected_overload.inc();
             let err = ServiceError::Overloaded { retry_after: retry_hint(s) };
             let _ = job.reply.send(error_response(job.req.id, job.req.method.name(), err));
+            discard_trace(job.trace);
             return;
         }
         s.metrics.queued.inc();
@@ -375,6 +425,7 @@ impl ApproxService {
                 let _ = job
                     .reply
                     .send(error_response(job.req.id, job.req.method.name(), ServiceError::Stopping));
+                discard_trace(job.trace);
             }
         }
         s.queue_cv.notify_all();
@@ -395,7 +446,10 @@ impl Drop for ApproxService {
 }
 
 /// Try to reserve memory for `job`: rung 0 first; the degrade ladder only
-/// under `pressure` or when rung 0 can never fit the cap.
+/// under `pressure` or when rung 0 can never fit the cap. Ladder walks
+/// are recorded as `degrade.ladder` spans on the job's trace and
+/// accumulated into its `ladder_ns` (reported as
+/// [`ApproxResponse::ladder_secs`]).
 fn try_admit(s: &Shared, job: &QueuedJob, pressure: bool) -> Option<ServeAs> {
     if reserve(s, job.rung0.predicted) {
         return Some(job.rung0.clone());
@@ -404,12 +458,29 @@ fn try_admit(s: &Shared, job: &QueuedJob, pressure: bool) -> Option<ServeAs> {
     if !walk_ladder {
         return None;
     }
+    let t0 = (job.trace != 0).then(obs::now_ns);
+    let mut admitted = None;
     for rung in &job.ladder {
         if reserve(s, rung.predicted) {
-            return Some(rung.clone());
+            admitted = Some(rung.clone());
+            break;
         }
     }
-    None
+    if let Some(t0) = t0 {
+        let dur = obs::now_ns().saturating_sub(t0);
+        job.ladder_ns.set(job.ladder_ns.get() + dur);
+        obs::record_manual(Stage::DegradeLadder, job.trace, t0, dur);
+    }
+    admitted
+}
+
+/// Drop the spans of a trace that will never reach a worker (rejected,
+/// expired, or flushed at shutdown) so the central store cannot
+/// accumulate orphaned records.
+fn discard_trace(trace: u64) {
+    if trace != 0 {
+        let _ = obs::drain_trace(trace);
+    }
 }
 
 /// Check-and-reserve against the memory cap (always succeeds uncapped —
@@ -444,6 +515,8 @@ fn error_response(id: u64, method: String, error: ServiceError) -> ApproxRespons
         total_secs: 0.0,
         meta: None,
         degraded: None,
+        queue_wait_secs: 0.0,
+        ladder_secs: 0.0,
         error: Some(error),
     }
 }
@@ -467,6 +540,7 @@ fn reaper_loop(s: Arc<Shared>) {
                 s.metrics.expired_deadline.inc();
                 let err = ServiceError::Overloaded { retry_after: retry_hint(&s) };
                 let _ = job.reply.send(error_response(job.req.id, job.req.method.name(), err));
+                discard_trace(job.trace);
             } else {
                 i += 1;
             }
@@ -506,17 +580,27 @@ fn reaper_loop(s: Arc<Shared>) {
 fn dispatch(s: &Arc<Shared>, job: QueuedJob, serve: ServeAs) {
     s.inflight.fetch_add(1, Ordering::SeqCst);
     let shared = Arc::clone(s);
-    let QueuedJob { req, reply, enqueued: submitted, .. } = job;
+    let QueuedJob { req, reply, enqueued: submitted, trace, enqueue_ns, ladder_ns, .. } = job;
+    let ladder_ns = ladder_ns.get();
     s.pool.submit(move || {
         // Release the admission reservation on every exit path — including
         // the catch_unwind's — and wake the reaper so queued work can take
         // the freed headroom.
         let _guard = ReservationGuard { shared: Arc::clone(&shared), predicted: serve.predicted };
         let started = Instant::now();
-        shared.metrics.queue_wait.observe(started.duration_since(submitted));
+        let queue_wait = started.duration_since(submitted);
+        shared.metrics.queue_wait.observe(queue_wait);
+        // Re-establish the request's trace on this worker and backfill
+        // the queue wait as a manual span (no thread held a guard open
+        // across the submit → dispatch hop).
+        let _tscope = obs::trace_scope(trace);
+        if trace != 0 {
+            let waited = obs::now_ns().saturating_sub(enqueue_ns);
+            obs::record_manual(Stage::AdmissionQueue, trace, enqueue_ns, waited);
+        }
         let outcome =
             catch_unwind(AssertUnwindSafe(|| run_request(shared.oracle.as_ref(), &req, &serve, submitted)));
-        let resp = match outcome {
+        let mut resp = match outcome {
             Ok(Ok(r)) => {
                 shared.metrics.completed.inc();
                 if serve.degraded.is_some() {
@@ -536,6 +620,23 @@ fn dispatch(s: &Arc<Shared>, job: QueuedJob, serve: ServeAs) {
                 error_response(req.id, serve.method.name(), ServiceError::Faulted(msg))
             }
         };
+        resp.queue_wait_secs = queue_wait.as_secs_f64();
+        resp.ladder_secs = ladder_ns as f64 / 1e9;
+        if trace != 0 {
+            // Reassemble the request's full timeline — plan + ladder +
+            // queue + every exec/stream span from any thread — exactly
+            // once, on every outcome (success, error, or panic), so the
+            // central store never accumulates finished traces.
+            let records = obs::drain_trace(trace);
+            if let Some(meta) = resp.meta.as_mut() {
+                meta.stage_profile =
+                    Some(StageProfile::from_records(&records, obs::current_thread_id()));
+            }
+            if let Some(dir) = &shared.trace_dir {
+                let path = dir.join(format!("trace-req-{}.json", req.id));
+                let _ = sink::write_chrome_json(&path, &records);
+            }
+        }
         shared.metrics.latency.observe(submitted.elapsed());
         let _ = reply.send(resp);
     });
@@ -586,14 +687,21 @@ fn run_request(
     // materialization (Cur), the build, and the downstream eig/SVD — not
     // just the exec entry point's slice of it.
     let t0 = Instant::now();
+    // The downstream eig/SVD is span-tagged here (depth 0 on the worker,
+    // outside the exec.run umbrella) so the request's stage profile
+    // covers the whole compute_secs window, not just the build.
+    let eig_k = |a: &spsd::SpsdApprox| {
+        let _s = obs::span(Stage::SolveEig);
+        a.eig_k(k_top).0
+    };
     let (eigvals, core_dims, mut meta) = match serve.method {
         MethodSpec::Nystrom => {
             let rep = exec::nystrom(oracle, &p, policy);
-            (rep.result.eig_k(k_top).0, None, rep.meta)
+            (eig_k(&rep.result), None, rep.meta)
         }
         MethodSpec::Prototype => {
             let rep = exec::prototype(oracle, &p, policy);
-            (rep.result.eig_k(k_top).0, None, rep.meta)
+            (eig_k(&rep.result), None, rep.meta)
         }
         MethodSpec::Fast { s, kind } => {
             // Gram basis: leverage requests stream with O(c²) score
@@ -601,7 +709,7 @@ fn run_request(
             let cfg =
                 FastConfig { s, kind, force_p_in_s: true, leverage_basis: LeverageBasis::Gram };
             let rep = exec::fast(oracle, &p, cfg, policy, &mut rng);
-            (rep.result.eig_k(k_top).0, None, rep.meta)
+            (eig_k(&rep.result), None, rep.meta)
         }
         MethodSpec::Cur { r, s } => {
             // CUR of the kernel matrix itself: `p` picks the columns, a
@@ -609,12 +717,18 @@ fn run_request(
             // n² cost the planner's Cur model predicts and the memory
             // meter charges.
             let before = oracle.entries_observed();
-            let kmat = oracle.full();
+            let kmat = {
+                let _s = obs::span(Stage::OracleTile);
+                oracle.full()
+            };
             let rows = cur::select_uniform(n, r.clamp(1, n), &mut rng);
             let rep =
                 exec::cur_fast(&kmat, &p, &rows, FastCurConfig::uniform(s, s), policy, &mut rng);
             let dims = (rep.result.u.rows(), rep.result.u.cols());
-            let mut sv = svd_thin(&rep.result.u).s;
+            let mut sv = {
+                let _s = obs::span(Stage::SolveSvd);
+                svd_thin(&rep.result.u).s
+            };
             sv.truncate(k_top);
             let mut meta = rep.meta;
             meta.entries = Some(oracle.entries_observed() - before);
@@ -632,6 +746,8 @@ fn run_request(
         total_secs: submitted.elapsed().as_secs_f64(),
         meta: Some(meta),
         degraded: serve.degraded.clone(),
+        queue_wait_secs: 0.0, // filled by dispatch, which owns the clock
+        ladder_secs: 0.0,
         error: None,
     })
 }

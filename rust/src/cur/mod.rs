@@ -14,6 +14,7 @@
 pub mod sparse_cur;
 
 use crate::linalg::{pinv, Matrix};
+use crate::obs::{self, Stage};
 use crate::sketch::{self, SketchKind};
 use crate::stream::{
     run_pipeline, ColSubsetCollect, MatrixSource, ResidencyConfig, ResidencyStats,
@@ -288,7 +289,10 @@ pub(crate) fn run_cur_fast(
 
     let stc = c.select_rows(&sc_idx); // s_c x c
     let rsr = r.select_cols(&sr_idx); // r x s_r
-    let u = pinv(&stc).matmul(&core).matmul(&pinv(&rsr));
+    let u = {
+        let _s = obs::span(Stage::SolveSvd);
+        pinv(&stc).matmul(&core).matmul(&pinv(&rsr))
+    };
     let decomp = CurDecomp {
         c,
         u,

@@ -42,35 +42,77 @@ use crate::coordinator::oracle::KernelOracle;
 use crate::coordinator::planner::{self, MethodSpec};
 use crate::cur::{self, CurDecomp, FastCurConfig};
 use crate::linalg::Matrix;
+use crate::obs::{self, Stage, StageProfile};
 use crate::spsd::{self, FastConfig, SpsdApprox};
 use crate::stream::{self, TileSource};
 use crate::util::{Rng, Stopwatch};
 
-/// Wall clock + (optional) allocation gauge for one run.
+/// Wall clock + (optional) allocation gauge + span trace for one run.
+///
+/// With the recorder installed the scope opens an `exec.run` umbrella
+/// span, and either borrows the caller's trace (the service path — the
+/// profile is then a snapshot, the service drains at reply time) or mints
+/// its own (bare `exec` calls — the profile drains, leaving nothing in
+/// the central store).
 struct Scope {
     sw: Stopwatch,
     gauge: AllocGauge,
+    /// Raw trace id this run records under (0 = recorder off).
+    trace: u64,
+    /// True when the scope minted the trace itself and owns draining it.
+    owned: bool,
+    /// Keeps a minted trace current for the run's duration.
+    tscope: Option<obs::TraceScope>,
+    /// The `exec.run` umbrella span, closed in `finish`.
+    span: Option<obs::SpanGuard>,
 }
 
 impl Scope {
     fn start() -> Self {
-        Scope { sw: Stopwatch::start(), gauge: AllocGauge::start() }
+        let (trace, owned, tscope) = if obs::installed() {
+            let cur = obs::current_trace_raw();
+            if cur == 0 {
+                let t = obs::TraceId::mint().raw();
+                (t, true, Some(obs::trace_scope(t)))
+            } else {
+                (cur, false, None)
+            }
+        } else {
+            (0, false, None)
+        };
+        // Open the umbrella only after the trace tag is in place.
+        let span = (trace != 0).then(|| obs::span(Stage::ExecRun));
+        Scope { sw: Stopwatch::start(), gauge: AllocGauge::start(), trace, owned, tscope, span }
     }
 
     fn finish(
-        self,
+        mut self,
         entries: Option<u64>,
         residency: Option<stream::ResidencyStats>,
         predicted_peak_bytes: Option<u64>,
     ) -> RunMeta {
         let actual = alloc::installed().then(|| self.gauge.peak_extra_bytes() as u64);
+        let compute_secs = self.sw.secs();
+        // Close the umbrella before collecting, so exec.run itself is in
+        // the profile; then release the trace tag.
+        drop(self.span.take());
+        drop(self.tscope.take());
+        let stage_profile = (self.trace != 0).then(|| {
+            let records = if self.owned {
+                obs::drain_trace(self.trace)
+            } else {
+                obs::snapshot_trace(self.trace)
+            };
+            StageProfile::from_records(&records, obs::current_thread_id())
+        });
         RunMeta {
             entries,
-            compute_secs: self.sw.secs(),
+            compute_secs,
             residency,
             predicted_peak_bytes,
             actual_peak_bytes: actual,
             degraded: None,
+            stage_profile,
         }
     }
 }

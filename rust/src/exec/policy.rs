@@ -3,6 +3,7 @@
 //! to run it* ([`ExecPolicy`]) and from *what happened*
 //! ([`RunReport`] / [`RunMeta`]).
 
+use crate::obs::StageProfile;
 use crate::stream::{
     ResidencyConfig, ResidencyStats, StreamConfig, DEFAULT_RESIDENT_TILE_ROWS,
 };
@@ -218,6 +219,11 @@ pub struct RunMeta {
     /// exactly as requested). Set by the service admission path; the bare
     /// `exec` entry points always run what they are handed.
     pub degraded: Option<DegradeInfo>,
+    /// Per-stage span aggregates for this run, when the span recorder is
+    /// installed ([`obs::ensure_installed`](crate::obs::ensure_installed));
+    /// `None` with the recorder disabled — tracing off means no bit of the
+    /// report changes.
+    pub stage_profile: Option<StageProfile>,
 }
 
 /// The uniform return of every `exec` entry point: the algorithm's result

@@ -77,7 +77,10 @@ pub fn run(ctx: &Ctx, args: &Args) {
     let resps: Vec<_> = rx.iter().collect();
     assert_eq!(resps.len(), requests, "all requests must be answered");
 
-    let mut csv = ctx.csv("e2e.csv", "id,method,entries,compute_secs,total_secs,predicted_peak_bytes");
+    let mut csv = ctx.csv(
+        "e2e.csv",
+        "id,method,entries,compute_secs,total_secs,queue_wait_secs,ladder_secs,predicted_peak_bytes",
+    );
     for r in &resps {
         let (entries, compute, predicted) = match &r.meta {
             Some(m) => (
@@ -88,25 +91,38 @@ pub fn run(ctx: &Ctx, args: &Args) {
             None => (0, 0.0, 0),
         };
         csv.row(&format!(
-            "{},{},{},{:.4},{:.4},{}",
-            r.id, r.method, entries, compute, r.total_secs, predicted
+            "{},{},{},{:.4},{:.4},{:.4},{:.4},{}",
+            r.id, r.method, entries, compute, r.total_secs, r.queue_wait_secs, r.ladder_secs,
+            predicted
         ));
     }
     csv.finish();
 
-    let m = svc.metrics();
+    // One coherent read of every counter — the per-field .get() reads
+    // this replaces could interleave with concurrently finishing work.
+    let m = svc.metrics().snapshot();
     println!(
         "# completed={} failed={} rejected={} expired={} faulted={} queued={} degraded={}",
-        m.completed.get(),
-        m.failed.get(),
-        m.rejected_overload.get(),
-        m.expired_deadline.get(),
-        m.faulted.get(),
-        m.queued.get(),
-        m.degraded.get()
+        m.completed, m.failed, m.rejected_overload, m.expired_deadline, m.faulted, m.queued,
+        m.degraded
     );
-    println!("# latency: {}", m.latency.summary());
-    println!("# queue-wait: {}", m.queue_wait.summary());
+    println!(
+        "# latency: n={} mean={:?} p50={:?} p95={:?} max={:?}",
+        m.latency.count, m.latency.mean, m.latency.p50, m.latency.p95, m.latency.max
+    );
+    println!(
+        "# queue-wait: n={} mean={:?} p50={:?} p95={:?} max={:?}",
+        m.queue_wait.count, m.queue_wait.mean, m.queue_wait.p50, m.queue_wait.p95, m.queue_wait.max
+    );
+    let served_wait: f64 = resps.iter().map(|r| r.queue_wait_secs).sum();
+    let ladder: f64 = resps.iter().map(|r| r.ladder_secs).sum();
+    println!("# admission: queue_wait_total={served_wait:.4}s ladder_total={ladder:.6}s");
+    if let Some(profile) = resps.iter().filter_map(|r| r.meta.as_ref()).find_map(|m| m.stage_profile.as_ref()) {
+        println!("# stage profile (first served request):");
+        for line in profile.summary_lines() {
+            println!("#   {line}");
+        }
+    }
     println!("# throughput: {:.2} req/s ({} requests in {:.2}s)", requests as f64 / wall, requests, wall);
     if ctx.engine.is_pjrt() {
         let (batches, execs, secs) = oracle_stats(&ctx.engine);

@@ -23,6 +23,11 @@
 //!   `O(tile_rows·c + s²)` instead of materializing `n x c` (or `n x n`)
 //!   panels.
 //! - [`sketch`] implements the five sketching matrices of Lemma 2 / Table 4.
+//! - [`obs`] is the always-on span tracer: per-request trace ids, a
+//!   stable stage taxonomy over the hot seams (oracle tiles, pipeline
+//!   produce/fold + stalls, residency hits/spills, solves), per-stage
+//!   [`StageProfile`]s on every [`RunMeta`], and Chrome-trace export
+//!   (EXPERIMENTS.md §Observability).
 //! - [`linalg`], [`pool`], [`cli`], [`benchkit`], [`testkit`], [`util`] are
 //!   substrates built from scratch (the image has no tokio/clap/criterion/
 //!   proptest — see DESIGN.md §3).
@@ -40,6 +45,7 @@ pub mod cur;
 pub mod exec;
 pub mod data;
 pub mod linalg;
+pub mod obs;
 pub mod pool;
 pub mod runtime;
 pub mod sketch;
@@ -49,3 +55,4 @@ pub mod testkit;
 pub mod util;
 
 pub use exec::{DegradeAction, DegradeInfo, ExecPolicy, RunMeta, RunReport};
+pub use obs::StageProfile;

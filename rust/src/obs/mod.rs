@@ -1,0 +1,546 @@
+//! Always-available span tracer: per-request trace ids, RAII span guards
+//! over a stable stage taxonomy, and near-zero cost when disabled.
+//!
+//! The recorder is process-global but **off by default**: until
+//! [`ensure_installed`] runs, [`span`] is one relaxed atomic load and
+//! returns an inert guard — cheap enough to leave in every hot seam
+//! (verified by `tests/obs_overhead.rs`). When enabled, each thread
+//! accumulates closed spans in a thread-local buffer (no locks on the
+//! span path) that drains into a bounded central store whenever the
+//! thread's span stack empties or the buffer fills.
+//!
+//! Spans carry the [`TraceId`] that was current on their thread when they
+//! opened. The service mints one id per request ([`TraceId::mint`]) and
+//! re-establishes it on the worker via [`trace_scope`]; `run_pipeline`
+//! forwards it into the producer thread the same way, so one request's
+//! timeline is reassembled across threads by [`drain_trace`]. Aggregation
+//! lives in [`profile::StageProfile`]; Chrome `trace_event` export in
+//! [`sink`].
+
+pub mod profile;
+pub mod sink;
+
+pub use profile::{StageAgg, StageProfile};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// The stable stage taxonomy every span is tagged with. Names (the
+/// `name()` strings) are the public contract: they key `StageProfile`
+/// rows, Chrome-trace event names, and the per-stage `BENCH_stream.json`
+/// counters, so renaming one is a breaking change to the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Time a request sat in the service admission queue (recorded
+    /// manually from the enqueue/dispatch timestamps, not via a guard).
+    AdmissionQueue,
+    /// Planner work: policy resolution + degrade-ladder construction.
+    Plan,
+    /// Walking the precomputed degrade ladder looking for a rung that
+    /// fits the current memory pressure.
+    DegradeLadder,
+    /// Umbrella span over one `exec` entry point's whole body. Every
+    /// other same-thread stage nests inside it, so the sum of
+    /// main-thread self times equals this span's duration — the
+    /// invariant `StageProfile::covered_secs` is built on.
+    ExecRun,
+    /// A kernel-oracle tile materialization (`row_block` / `full_rows`).
+    OracleTile,
+    /// Producer side of the double-buffered pipeline building one tile.
+    PipelineProduce,
+    /// Producer blocked pushing into the bounded channel (consumer-bound
+    /// pipeline when large).
+    PipelineProduceStall,
+    /// Consumer side folding one tile through the consumer stack.
+    PipelineFold,
+    /// Consumer blocked waiting for the next tile (producer-bound
+    /// pipeline when large).
+    PipelineFoldStall,
+    /// Residency cache served a tile from RAM.
+    ResidencyRamHit,
+    /// Residency cache reloaded a tile from the spill arena (one span
+    /// per IO attempt, so fault-injected retries are visible).
+    ResidencySpillRead,
+    /// Residency cache wrote a tile through to the spill arena (one span
+    /// per IO attempt).
+    ResidencySpillWrite,
+    /// Residency cache re-derived a tile from the underlying source.
+    ResidencyRecompute,
+    /// A sketch-application fold (`S^T A` accumulation).
+    SketchFold,
+    /// A Gram/accumulation fold (`A^T A`, leverage state, prototype U).
+    GramFold,
+    /// Dense symmetric eigendecomposition.
+    SolveEig,
+    /// Woodbury/LU solve of the small regularized system.
+    SolveWoodbury,
+    /// SVD-backed pseudoinverse.
+    SolveSvd,
+}
+
+impl Stage {
+    /// Every stage, in taxonomy order (profile rows use this order).
+    pub const ALL: [Stage; 18] = [
+        Stage::AdmissionQueue,
+        Stage::Plan,
+        Stage::DegradeLadder,
+        Stage::ExecRun,
+        Stage::OracleTile,
+        Stage::PipelineProduce,
+        Stage::PipelineProduceStall,
+        Stage::PipelineFold,
+        Stage::PipelineFoldStall,
+        Stage::ResidencyRamHit,
+        Stage::ResidencySpillRead,
+        Stage::ResidencySpillWrite,
+        Stage::ResidencyRecompute,
+        Stage::SketchFold,
+        Stage::GramFold,
+        Stage::SolveEig,
+        Stage::SolveWoodbury,
+        Stage::SolveSvd,
+    ];
+
+    /// The stable dotted name (artifact contract — see type docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::AdmissionQueue => "admission.queue",
+            Stage::Plan => "plan",
+            Stage::DegradeLadder => "degrade.ladder",
+            Stage::ExecRun => "exec.run",
+            Stage::OracleTile => "oracle.tile",
+            Stage::PipelineProduce => "pipeline.produce",
+            Stage::PipelineProduceStall => "pipeline.produce.stall",
+            Stage::PipelineFold => "pipeline.fold",
+            Stage::PipelineFoldStall => "pipeline.fold.stall",
+            Stage::ResidencyRamHit => "residency.ram_hit",
+            Stage::ResidencySpillRead => "residency.spill_read",
+            Stage::ResidencySpillWrite => "residency.spill_write",
+            Stage::ResidencyRecompute => "residency.recompute",
+            Stage::SketchFold => "sketch.fold",
+            Stage::GramFold => "gram.fold",
+            Stage::SolveEig => "solve.eig",
+            Stage::SolveWoodbury => "solve.woodbury",
+            Stage::SolveSvd => "solve.svd",
+        }
+    }
+}
+
+/// One closed span. `self_ns` is `dur_ns` minus the summed durations of
+/// same-thread child spans — the double-count-free quantity stage totals
+/// are safe to sum over.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanRecord {
+    /// Stage taxonomy tag.
+    pub stage: Stage,
+    /// Raw trace id current on the recording thread (0 = untraced).
+    pub trace: u64,
+    /// Recorder-assigned id of the recording thread.
+    pub thread: u32,
+    /// Nesting depth on the recording thread when the span closed.
+    pub depth: u16,
+    /// Start, nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    /// Wall-clock duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Duration minus same-thread child span durations.
+    pub self_ns: u64,
+}
+
+/// Per-request trace identity, minted from a process-global counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceId(u64);
+
+impl TraceId {
+    /// Mint a fresh, process-unique id (never 0).
+    pub fn mint() -> TraceId {
+        TraceId(NEXT_TRACE.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// The raw id, as carried by [`SpanRecord::trace`].
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+static NEXT_THREAD: AtomicU32 = AtomicU32::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static CENTRAL: OnceLock<Mutex<Vec<SpanRecord>>> = OnceLock::new();
+
+/// Flush the thread-local buffer whenever it reaches this many records
+/// even if spans are still open (bounds per-thread memory).
+const LOCAL_CAP: usize = 4096;
+/// Drop (and count) records beyond this many in the central store — a
+/// backstop against a run that never drains.
+const CENTRAL_CAP: usize = 1 << 20;
+
+fn central() -> &'static Mutex<Vec<SpanRecord>> {
+    CENTRAL.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (the clock all span
+/// timestamps share).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+struct OpenFrame {
+    stage: Stage,
+    trace: u64,
+    start_ns: u64,
+    /// Summed durations of already-closed direct children.
+    child_ns: u64,
+}
+
+struct Local {
+    stack: Vec<OpenFrame>,
+    buf: Vec<SpanRecord>,
+    thread: u32,
+    /// Trace id applied to spans opened on this thread (0 = untraced).
+    trace: u64,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Local> = RefCell::new(Local {
+        stack: Vec::new(),
+        buf: Vec::new(),
+        thread: NEXT_THREAD.fetch_add(1, Ordering::Relaxed),
+        trace: 0,
+    });
+}
+
+/// Turn the recorder on for the rest of the process. Idempotent; there is
+/// deliberately no way to turn it off (tests that need the disabled mode
+/// run in their own process — see `tests/obs_overhead.rs`).
+pub fn ensure_installed() {
+    central();
+    // fix the epoch before any span reads it, so timestamps are
+    // monotone from here on
+    epoch();
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Whether the recorder is collecting spans.
+#[inline]
+pub fn installed() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Open a span for `stage`; it closes (and records) when the returned
+/// guard drops. When the recorder is not installed this is one atomic
+/// load and the guard is inert.
+#[inline]
+pub fn span(stage: Stage) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard { active: false };
+    }
+    let start_ns = now_ns();
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let trace = l.trace;
+        l.stack.push(OpenFrame { stage, trace, start_ns, child_ns: 0 });
+    });
+    SpanGuard { active: true }
+}
+
+/// RAII guard returned by [`span`]; records the span on drop.
+#[must_use = "a span measures the scope holding its guard"]
+pub struct SpanGuard {
+    active: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end_ns = now_ns();
+        LOCAL.with(|l| {
+            let mut l = l.borrow_mut();
+            let Some(f) = l.stack.pop() else { return };
+            let dur_ns = end_ns.saturating_sub(f.start_ns);
+            if let Some(parent) = l.stack.last_mut() {
+                parent.child_ns += dur_ns;
+            }
+            let rec = SpanRecord {
+                stage: f.stage,
+                trace: f.trace,
+                thread: l.thread,
+                depth: l.stack.len() as u16,
+                start_ns: f.start_ns,
+                dur_ns,
+                self_ns: dur_ns.saturating_sub(f.child_ns),
+            };
+            l.buf.push(rec);
+            if l.stack.is_empty() || l.buf.len() >= LOCAL_CAP {
+                flush_buf(&mut l.buf);
+            }
+        });
+    }
+}
+
+fn flush_buf(buf: &mut Vec<SpanRecord>) {
+    if buf.is_empty() {
+        return;
+    }
+    let mut c = central().lock().unwrap();
+    let room = CENTRAL_CAP.saturating_sub(c.len());
+    if room < buf.len() {
+        DROPPED.fetch_add((buf.len() - room) as u64, Ordering::Relaxed);
+        buf.truncate(room);
+    }
+    c.append(buf);
+}
+
+/// Push any closed-but-unflushed spans of the calling thread to the
+/// central store (drains call this; also useful before reading
+/// [`dropped`]).
+pub fn flush_current_thread() {
+    if !installed() {
+        return;
+    }
+    LOCAL.with(|l| flush_buf(&mut l.borrow_mut().buf));
+}
+
+/// Records discarded because the central store hit its cap.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// The recorder-assigned id of the calling thread (what
+/// [`SpanRecord::thread`] holds for spans recorded here).
+pub fn current_thread_id() -> u32 {
+    LOCAL.with(|l| l.borrow().thread)
+}
+
+/// The raw trace id spans opened on this thread are currently tagged
+/// with (0 when untraced or the recorder is off).
+pub fn current_trace_raw() -> u64 {
+    if !installed() {
+        return 0;
+    }
+    LOCAL.with(|l| l.borrow().trace)
+}
+
+/// Tag spans opened on this thread with `raw` until the returned guard
+/// drops (restores the previous tag). `raw = 0` or a disabled recorder
+/// makes this a no-op — callers can always forward
+/// [`current_trace_raw`] across a thread hop unconditionally.
+pub fn trace_scope(raw: u64) -> TraceScope {
+    if !installed() || raw == 0 {
+        return TraceScope { prev: 0, active: false };
+    }
+    let prev = LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        std::mem::replace(&mut l.trace, raw)
+    });
+    TraceScope { prev, active: true }
+}
+
+/// RAII guard from [`trace_scope`]; restores the previous trace tag.
+#[must_use = "the trace tag reverts when this guard drops"]
+pub struct TraceScope {
+    prev: u64,
+    active: bool,
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        if self.active {
+            let prev = self.prev;
+            LOCAL.with(|l| l.borrow_mut().trace = prev);
+        }
+    }
+}
+
+/// Record a span from explicit timestamps (for intervals that cross
+/// threads, like queue wait, where no single scope holds the guard).
+pub fn record_manual(stage: Stage, trace: u64, start_ns: u64, dur_ns: u64) {
+    if !installed() {
+        return;
+    }
+    let rec = SpanRecord {
+        stage,
+        trace,
+        thread: current_thread_id(),
+        depth: 0,
+        start_ns,
+        dur_ns,
+        self_ns: dur_ns,
+    };
+    let mut c = central().lock().unwrap();
+    if c.len() < CENTRAL_CAP {
+        c.push(rec);
+    } else {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Remove and return every record of `trace`, sorted by start time.
+/// Threads that finished their top-level spans (e.g. a joined pipeline
+/// producer) are fully captured; the calling thread is flushed first.
+pub fn drain_trace(trace: u64) -> Vec<SpanRecord> {
+    flush_current_thread();
+    if !installed() {
+        return Vec::new();
+    }
+    let mut c = central().lock().unwrap();
+    let mut out = Vec::new();
+    c.retain(|r| {
+        if r.trace == trace {
+            out.push(*r);
+            false
+        } else {
+            true
+        }
+    });
+    drop(c);
+    out.sort_by_key(|r| r.start_ns);
+    out
+}
+
+/// Copy (without removing) every record of `trace`, sorted by start
+/// time — for mid-request consumers like `exec` when the service owns
+/// the trace and will drain it at reply time.
+pub fn snapshot_trace(trace: u64) -> Vec<SpanRecord> {
+    flush_current_thread();
+    if !installed() {
+        return Vec::new();
+    }
+    let c = central().lock().unwrap();
+    let mut out: Vec<SpanRecord> = c.iter().filter(|r| r.trace == trace).copied().collect();
+    drop(c);
+    out.sort_by_key(|r| r.start_ns);
+    out
+}
+
+/// Remove and return everything in the central store, sorted by start
+/// time (bench/figure runs that trace without per-request ids).
+pub fn drain_all() -> Vec<SpanRecord> {
+    flush_current_thread();
+    if !installed() {
+        return Vec::new();
+    }
+    let mut c = central().lock().unwrap();
+    let mut out = std::mem::take(&mut *c);
+    drop(c);
+    out.sort_by_key(|r| r.start_ns);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Every test here must install the recorder (process-global, never
+    // uninstalled); the disabled path is covered by the dedicated
+    // single-test binary `tests/obs_overhead.rs`.
+
+    #[test]
+    fn spans_nest_and_partition_self_time() {
+        ensure_installed();
+        let t = TraceId::mint().raw();
+        let _ts = trace_scope(t);
+        {
+            let _outer = span(Stage::ExecRun);
+            {
+                let _inner = span(Stage::SolveEig);
+                std::hint::black_box((0..2000).sum::<u64>());
+            }
+            {
+                let _inner = span(Stage::SolveSvd);
+                std::hint::black_box((0..2000).sum::<u64>());
+            }
+        }
+        let recs = drain_trace(t);
+        assert_eq!(recs.len(), 3);
+        let outer = recs.iter().find(|r| r.stage == Stage::ExecRun).unwrap();
+        let kids: u64 = recs
+            .iter()
+            .filter(|r| r.stage != Stage::ExecRun)
+            .map(|r| r.dur_ns)
+            .sum();
+        assert_eq!(outer.depth, 0);
+        assert!(recs.iter().filter(|r| r.stage != Stage::ExecRun).all(|r| r.depth == 1));
+        // self + children == total, exactly (same-thread accounting)
+        assert_eq!(outer.self_ns + kids, outer.dur_ns);
+        // children fall inside the parent interval
+        for r in &recs {
+            assert!(r.start_ns >= outer.start_ns);
+            assert!(r.start_ns + r.dur_ns <= outer.start_ns + outer.dur_ns);
+        }
+    }
+
+    #[test]
+    fn trace_scope_restores_and_untraced_spans_stay_out() {
+        ensure_installed();
+        let a = TraceId::mint().raw();
+        let b = TraceId::mint().raw();
+        {
+            let _ta = trace_scope(a);
+            assert_eq!(current_trace_raw(), a);
+            {
+                let _tb = trace_scope(b);
+                assert_eq!(current_trace_raw(), b);
+                let _s = span(Stage::Plan);
+            }
+            assert_eq!(current_trace_raw(), a);
+            let _s = span(Stage::Plan);
+        }
+        assert_eq!(drain_trace(a).len(), 1);
+        assert_eq!(drain_trace(b).len(), 1);
+        // spans opened with no trace never leak into a drain-by-id
+        {
+            let _s = span(Stage::Plan);
+        }
+        assert!(drain_trace(a).is_empty());
+    }
+
+    #[test]
+    fn snapshot_keeps_records_for_the_final_drain() {
+        ensure_installed();
+        let t = TraceId::mint().raw();
+        {
+            let _ts = trace_scope(t);
+            let _s = span(Stage::GramFold);
+        }
+        assert_eq!(snapshot_trace(t).len(), 1);
+        assert_eq!(snapshot_trace(t).len(), 1, "snapshot must not consume");
+        assert_eq!(drain_trace(t).len(), 1);
+        assert!(drain_trace(t).is_empty(), "drain must consume");
+    }
+
+    #[test]
+    fn manual_records_and_mint_are_distinct() {
+        ensure_installed();
+        let t = TraceId::mint().raw();
+        assert_ne!(t, TraceId::mint().raw());
+        record_manual(Stage::AdmissionQueue, t, 100, 50);
+        let recs = drain_trace(t);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].stage, Stage::AdmissionQueue);
+        assert_eq!(recs[0].dur_ns, 50);
+        assert_eq!(recs[0].self_ns, 50);
+    }
+
+    #[test]
+    fn stage_names_are_stable_and_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in Stage::ALL {
+            assert!(seen.insert(s.name()), "duplicate stage name {}", s.name());
+        }
+        assert_eq!(seen.len(), Stage::ALL.len());
+        assert_eq!(Stage::AdmissionQueue.name(), "admission.queue");
+        assert_eq!(Stage::ResidencySpillRead.name(), "residency.spill_read");
+        assert_eq!(Stage::PipelineProduceStall.name(), "pipeline.produce.stall");
+    }
+}

@@ -1,0 +1,203 @@
+//! Per-stage aggregation of one trace's span records into the
+//! [`StageProfile`] carried by `RunMeta` — the "where did this request's
+//! time go" answer, cheap enough to attach to every reply.
+
+use super::{SpanRecord, Stage};
+
+/// Aggregated statistics for one stage across a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageAgg {
+    /// Which stage this row aggregates.
+    pub stage: Stage,
+    /// Number of spans.
+    pub count: u64,
+    /// Summed wall-clock duration over all threads, seconds.
+    pub total_secs: f64,
+    /// Longest single span, seconds.
+    pub max_secs: f64,
+    /// Summed self time (duration minus same-thread children) of the
+    /// spans recorded on the trace's main thread — these partition the
+    /// main thread's wall-clock without double counting, so they are
+    /// the safe quantity to sum across stages.
+    pub main_self_secs: f64,
+}
+
+/// Per-stage totals/counts/maxima plus pipeline stall fractions for one
+/// trace. Built by [`StageProfile::from_records`] from a drained trace;
+/// rows appear in taxonomy order and only for stages that occurred.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageProfile {
+    /// One row per stage that occurred, in [`Stage::ALL`] order.
+    pub stages: Vec<StageAgg>,
+}
+
+const NS: f64 = 1e-9;
+
+impl StageProfile {
+    /// Aggregate `records` (one drained trace). `main_thread` is the
+    /// recorder thread id of the thread that ran the traced body (the
+    /// one `compute_secs` was measured on) — its self times feed
+    /// [`covered_secs`](Self::covered_secs).
+    pub fn from_records(records: &[SpanRecord], main_thread: u32) -> StageProfile {
+        let mut stages = Vec::new();
+        for stage in Stage::ALL {
+            let mut count = 0u64;
+            let mut total_ns = 0u64;
+            let mut max_ns = 0u64;
+            let mut main_self_ns = 0u64;
+            for r in records.iter().filter(|r| r.stage == stage) {
+                count += 1;
+                total_ns += r.dur_ns;
+                max_ns = max_ns.max(r.dur_ns);
+                if r.thread == main_thread {
+                    main_self_ns += r.self_ns;
+                }
+            }
+            if count > 0 {
+                stages.push(StageAgg {
+                    stage,
+                    count,
+                    total_secs: total_ns as f64 * NS,
+                    max_secs: max_ns as f64 * NS,
+                    main_self_secs: main_self_ns as f64 * NS,
+                });
+            }
+        }
+        StageProfile { stages }
+    }
+
+    /// The row for `stage`, if it occurred.
+    pub fn get(&self, stage: Stage) -> Option<&StageAgg> {
+        self.stages.iter().find(|a| a.stage == stage)
+    }
+
+    /// Summed duration of `stage` over all threads, seconds (0 when the
+    /// stage did not occur).
+    pub fn total_secs(&self, stage: Stage) -> f64 {
+        self.get(stage).map_or(0.0, |a| a.total_secs)
+    }
+
+    /// Main-thread compute accounted for by spans: the sum of main-thread
+    /// self times over every stage except [`Stage::AdmissionQueue`]
+    /// (queue wait precedes compute). Because `exec.run` umbrellas the
+    /// whole body and same-thread self times partition it exactly, this
+    /// sums to the traced body's duration — within a few percent of
+    /// `RunMeta::compute_secs` on any real run.
+    pub fn covered_secs(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|a| a.stage != Stage::AdmissionQueue)
+            .map(|a| a.main_self_secs)
+            .sum()
+    }
+
+    /// Fraction of producer-side pipeline time spent blocked pushing
+    /// into the bounded channel: `stall / (produce + stall)`. High means
+    /// the pipeline is consumer-(fold-)bound. `None` when no pipeline
+    /// producer ran in this trace.
+    pub fn producer_stall_fraction(&self) -> Option<f64> {
+        let work = self.total_secs(Stage::PipelineProduce);
+        let stall = self.total_secs(Stage::PipelineProduceStall);
+        if work + stall > 0.0 {
+            Some(stall / (work + stall))
+        } else {
+            None
+        }
+    }
+
+    /// Fraction of consumer-side pipeline time spent blocked waiting for
+    /// a tile: `stall / (fold + stall)`. High means the pipeline is
+    /// producer-(oracle-)bound. `None` when no pipeline consumer ran.
+    pub fn consumer_stall_fraction(&self) -> Option<f64> {
+        let work = self.total_secs(Stage::PipelineFold);
+        let stall = self.total_secs(Stage::PipelineFoldStall);
+        if work + stall > 0.0 {
+            Some(stall / (work + stall))
+        } else {
+            None
+        }
+    }
+
+    /// Human-readable per-stage lines (figures/CLI reporting):
+    /// `name  total  count  max`.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .stages
+            .iter()
+            .map(|a| {
+                format!(
+                    "{:<24} total {:>10.3} ms  count {:>6}  max {:>10.3} ms",
+                    a.stage.name(),
+                    a.total_secs * 1e3,
+                    a.count,
+                    a.max_secs * 1e3,
+                )
+            })
+            .collect();
+        if let Some(f) = self.producer_stall_fraction() {
+            out.push(format!("pipeline producer stall fraction: {f:.3}"));
+        }
+        if let Some(f) = self.consumer_stall_fraction() {
+            out.push(format!("pipeline consumer stall fraction: {f:.3}"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(stage: Stage, thread: u32, start: u64, dur: u64, self_ns: u64) -> SpanRecord {
+        SpanRecord { stage, trace: 1, thread, depth: 0, start_ns: start, dur_ns: dur, self_ns }
+    }
+
+    #[test]
+    fn aggregates_per_stage_in_taxonomy_order() {
+        let recs = vec![
+            rec(Stage::SolveEig, 1, 50, 10, 10),
+            rec(Stage::OracleTile, 2, 0, 30, 30),
+            rec(Stage::OracleTile, 2, 40, 50, 50),
+            rec(Stage::ExecRun, 1, 0, 100, 40),
+        ];
+        let p = StageProfile::from_records(&recs, 1);
+        let names: Vec<&str> = p.stages.iter().map(|a| a.stage.name()).collect();
+        assert_eq!(names, vec!["exec.run", "oracle.tile", "solve.eig"]);
+        let ot = p.get(Stage::OracleTile).unwrap();
+        assert_eq!(ot.count, 2);
+        assert!((ot.total_secs - 80e-9).abs() < 1e-15);
+        assert!((ot.max_secs - 50e-9).abs() < 1e-15);
+        assert_eq!(ot.main_self_secs, 0.0, "thread 2 is not main");
+        // covered = main-thread selves: exec.run(40) + solve.eig(10)
+        assert!((p.covered_secs() - 50e-9).abs() < 1e-15);
+        assert_eq!(p.total_secs(Stage::GramFold), 0.0);
+        assert!(p.get(Stage::GramFold).is_none());
+    }
+
+    #[test]
+    fn stall_fractions_from_stage_totals() {
+        let recs = vec![
+            rec(Stage::PipelineProduce, 2, 0, 75, 75),
+            rec(Stage::PipelineProduceStall, 2, 75, 25, 25),
+            rec(Stage::PipelineFold, 1, 0, 40, 40),
+            rec(Stage::PipelineFoldStall, 1, 40, 60, 60),
+        ];
+        let p = StageProfile::from_records(&recs, 1);
+        assert!((p.producer_stall_fraction().unwrap() - 0.25).abs() < 1e-12);
+        assert!((p.consumer_stall_fraction().unwrap() - 0.60).abs() < 1e-12);
+        let none = StageProfile::from_records(&[rec(Stage::Plan, 1, 0, 5, 5)], 1);
+        assert!(none.producer_stall_fraction().is_none());
+        assert!(none.consumer_stall_fraction().is_none());
+        assert_eq!(none.summary_lines().len(), 1);
+    }
+
+    #[test]
+    fn admission_queue_excluded_from_covered() {
+        let recs = vec![
+            rec(Stage::AdmissionQueue, 1, 0, 1_000_000, 1_000_000),
+            rec(Stage::ExecRun, 1, 1_000_000, 100, 100),
+        ];
+        let p = StageProfile::from_records(&recs, 1);
+        assert!((p.covered_secs() - 100e-9).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,115 @@
+//! Chrome `trace_event` export: serialize a drained trace as the JSON
+//! array format `about:tracing` / Perfetto load directly, plus a
+//! pure-Rust validator (over [`runtime::json`](crate::runtime::json))
+//! the smoke tests use to keep the artifact well-formed without new
+//! dependencies.
+
+use super::SpanRecord;
+use crate::runtime::json::Json;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// Serialize records as a Chrome trace: one complete (`"ph": "X"`) event
+/// per span, microsecond timestamps, `pid` = trace id (one lane per
+/// request), `tid` = recorder thread id. Load the file in
+/// `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn chrome_json(records: &[SpanRecord]) -> String {
+    let mut out = String::with_capacity(64 + records.len() * 96);
+    out.push_str("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "{{\"name\": \"{}\", \"cat\": \"stage\", \"ph\": \"X\", \"ts\": {:.3}, \"dur\": {:.3}, \"pid\": {}, \"tid\": {}}}{}\n",
+            r.stage.name(),
+            r.start_ns as f64 / 1e3,
+            r.dur_ns as f64 / 1e3,
+            r.trace,
+            r.thread,
+            if i + 1 < records.len() { "," } else { "" },
+        ));
+    }
+    out.push(']');
+    out
+}
+
+/// Write [`chrome_json`] to `path`.
+pub fn write_chrome_json(path: &Path, records: &[SpanRecord]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_json(records))
+}
+
+/// Parse a Chrome-trace JSON string and return the set of stage names it
+/// contains, or an error describing how it is malformed (missing/mistyped
+/// event fields included). The smoke tests assert mandatory stages
+/// against the returned set.
+pub fn validate_chrome_json(text: &str) -> Result<BTreeSet<String>, String> {
+    let parsed = Json::parse(text)?;
+    let events = parsed.as_arr().ok_or("trace root must be a JSON array")?;
+    let mut names = BTreeSet::new();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing string \"name\""))?;
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing string \"ph\""))?;
+        if ph != "X" {
+            return Err(format!("event {i}: expected complete event \"X\", got {ph:?}"));
+        }
+        for key in ["ts", "dur", "pid", "tid"] {
+            let v = ev
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("event {i}: missing numeric \"{key}\""))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("event {i}: non-finite or negative \"{key}\""));
+            }
+        }
+        names.insert(name.to_string());
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Stage;
+
+    fn rec(stage: Stage, trace: u64, start: u64, dur: u64) -> SpanRecord {
+        SpanRecord { stage, trace, thread: 3, depth: 0, start_ns: start, dur_ns: dur, self_ns: dur }
+    }
+
+    #[test]
+    fn chrome_json_round_trips_through_the_validator() {
+        let recs = vec![
+            rec(Stage::Plan, 7, 1_500, 2_000),
+            rec(Stage::OracleTile, 7, 4_000, 10_500),
+            rec(Stage::SolveEig, 7, 20_000, 1),
+        ];
+        let text = chrome_json(&recs);
+        let names = validate_chrome_json(&text).unwrap();
+        assert_eq!(
+            names.into_iter().collect::<Vec<_>>(),
+            vec!["oracle.tile", "plan", "solve.eig"]
+        );
+        // microsecond conversion: 1500 ns -> 1.5 us
+        assert!(text.contains("\"ts\": 1.500"));
+    }
+
+    #[test]
+    fn empty_trace_is_a_valid_empty_array() {
+        let text = chrome_json(&[]);
+        assert_eq!(validate_chrome_json(&text).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        assert!(validate_chrome_json("{\"not\": \"an array\"}").is_err());
+        assert!(validate_chrome_json("[{\"name\": \"x\"}]").is_err());
+        assert!(validate_chrome_json(
+            "[{\"name\": \"x\", \"ph\": \"B\", \"ts\": 0, \"dur\": 0, \"pid\": 1, \"tid\": 1}]"
+        )
+        .is_err());
+        assert!(validate_chrome_json("[").is_err());
+    }
+}

@@ -24,6 +24,7 @@ pub mod shift;
 
 use crate::coordinator::oracle::KernelOracle;
 use crate::linalg::{gemm, pinv, solve, Matrix};
+use crate::obs::{self, Stage};
 use crate::sketch::{self, SketchKind, SketchOp};
 use crate::stream::{
     run_pipeline, CollectConsumer, ConjugateFold, LeverageFold, LeverageSampler,
@@ -159,7 +160,10 @@ pub(crate) fn run_nystrom(
     let resident = residency.map(|rc| ResidentSource::new(&src, rc));
     let (c, w) = collect_c(oracle, p_idx, stream_cfg, resident.as_ref(), Some(p_idx));
     let w = w.expect("gather requested");
-    let mut u = pinv(&w);
+    let mut u = {
+        let _s = obs::span(Stage::SolveSvd);
+        pinv(&w)
+    };
     u.symmetrize();
     let approx = SpsdApprox {
         c,
@@ -190,7 +194,10 @@ pub(crate) fn run_prototype(
     let before = oracle.entries_observed();
     let n = oracle.n();
     let (c, _) = build_c_panel(oracle, p_idx, stream_cfg, None);
-    let cp = pinv(&c); // c x n
+    let cp = {
+        let _s = obs::span(Stage::SolveSvd);
+        pinv(&c) // c x n
+    };
     let u = if stream_cfg.is_whole(n) {
         let k = oracle.full();
         // (C† K)(C†)^T is symmetric (K is): triangular product + mirror
@@ -445,7 +452,10 @@ pub(crate) fn run_fast(
         }
     };
 
-    let stc_pinv = pinv(&stc); // c x s
+    let stc_pinv = {
+        let _s = obs::span(Stage::SolveSvd);
+        pinv(&stc) // c x s
+    };
     // (S^T C)† (S^T K S) ((S^T C)†)^T is symmetric since S^T K S is.
     let u = gemm::symm_nt(&stc_pinv.matmul(&sks), &stc_pinv);
     let approx = SpsdApprox {
@@ -639,7 +649,10 @@ fn assemble_sks(
     // (b) the fresh block needs the oracle
     if !fresh.is_empty() {
         let fresh_idx: Vec<usize> = fresh.iter().map(|&j| indices[j]).collect();
-        let block = oracle.block(&fresh_idx, &fresh_idx);
+        let block = {
+            let _s = obs::span(Stage::OracleTile);
+            oracle.block(&fresh_idx, &fresh_idx)
+        };
         for (bi, &r) in fresh.iter().enumerate() {
             for (bj, &cc) in fresh.iter().enumerate() {
                 out[(r, cc)] = block[(bi, bj)];

@@ -12,6 +12,7 @@
 //! relative — asserted by `tests/stream_equiv.rs`).
 
 use crate::linalg::{gemm, Matrix};
+use crate::obs::{self, Stage};
 use crate::sketch::{self, SketchOp};
 use crate::util::Rng;
 
@@ -156,6 +157,7 @@ impl<'a> SketchFold<'a> {
 
 impl TileConsumer for SketchFold<'_> {
     fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let _s = obs::span(Stage::SketchFold);
         if let SketchOp::Dense(s_mat) = self.op {
             // acc += S[r0..r1, :]^T · tile (same product as fold_rows's
             // Dense branch, through the reused scratch)
@@ -187,6 +189,7 @@ impl GramFold {
 
 impl TileConsumer for GramFold {
     fn consume(&mut self, _r0: usize, tile: &Matrix) {
+        let _s = obs::span(Stage::GramFold);
         gemm::syrk_tn_into(tile, &mut self.scratch);
         self.acc.axpy(1.0, &self.scratch);
     }
@@ -250,6 +253,7 @@ impl<'a> LeverageFold<'a> {
 
 impl TileConsumer for LeverageFold<'_> {
     fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let _s = obs::span(Stage::GramFold);
         match &mut self.acc {
             LevAcc::Exact { gram } => {
                 let w = tile.cols();
@@ -431,6 +435,7 @@ impl<'a> PrototypeUFold<'a> {
 
 impl TileConsumer for PrototypeUFold<'_> {
     fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let _s = obs::span(Stage::GramFold);
         let t = tile.rows();
         let c = self.cp.rows();
         if self.tmp.rows() != t {
@@ -472,6 +477,7 @@ impl<'a> ConjugateFold<'a> {
 
 impl TileConsumer for ConjugateFold<'_> {
     fn consume(&mut self, r0: usize, tile: &Matrix) {
+        let _s = obs::span(Stage::SketchFold);
         let kts = self.op.apply_left(&tile.transpose()).transpose(); // t x s
         self.op.fold_rows(r0, &kts, &mut self.acc);
     }

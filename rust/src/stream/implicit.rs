@@ -31,6 +31,7 @@ use super::{
     StreamConfig, TileConsumer, TileSource,
 };
 use crate::linalg::{eigh, lanczos, solve, Matrix};
+use crate::obs::{self, Stage};
 
 /// Second-pass consumer: `y[r0..r1] = tile · z`.
 struct OutMatvec {
@@ -82,7 +83,10 @@ fn solve_impl(
     assert_eq!((u.rows(), u.cols()), (c, c), "solve_regularized: U must be c x c");
     // U = G G^T via its eigendecomposition, dropping the numerically-zero
     // part (same factorization as linalg::solve::woodbury_solve).
-    let e = eigh(u);
+    let e = {
+        let _s = obs::span(Stage::SolveEig);
+        eigh(u)
+    };
     let lmax = e.values.first().copied().unwrap_or(0.0).max(0.0);
     let tol = lmax * c as f64 * f64::EPSILON;
     let keep: Vec<usize> = (0..e.values.len()).filter(|&i| e.values[i] > tol).collect();
@@ -101,7 +105,10 @@ fn solve_impl(
     let mut inner = crate::linalg::gemm::symm_nt(&ctc.matmul(&g).transpose(), &g.transpose());
     inner.add_diag(alpha);
     let bty = g.tr_matvec(&cty.into_vec());
-    let z = solve::lu_solve(&inner, &bty).expect("alpha I + B^T B is SPD");
+    let z = {
+        let _s = obs::span(Stage::SolveWoodbury);
+        solve::lu_solve(&inner, &bty).expect("alpha I + B^T B is SPD")
+    };
     // Second pass: B z = C (G z).
     let gz = g.matvec(&z);
     let mut out = OutMatvec { z: gz, y: vec![0.0; n] };
@@ -122,6 +129,7 @@ fn top_k_impl(
     seed: u64,
     cfg: StreamConfig,
 ) -> (Vec<f64>, Matrix) {
+    let _s = obs::span(Stage::SolveEig);
     lanczos::lanczos_top_k_op(src.rows(), k, seed, |v| matvec_cuc(src, u, v, cfg))
 }
 

@@ -49,6 +49,7 @@ pub use residency::{
 
 use crate::coordinator::oracle::KernelOracle;
 use crate::linalg::Matrix;
+use crate::obs::{self, Stage};
 use std::sync::Mutex;
 
 /// How a build should traverse the kernel: one whole-matrix tile (the
@@ -152,6 +153,7 @@ impl TileSource for OracleColumnsSource<'_> {
     }
 
     fn tile(&self, r0: usize, r1: usize) -> Matrix {
+        let _s = obs::span(Stage::OracleTile);
         self.oracle.row_block(r0, r1, self.cols)
     }
 }
@@ -179,6 +181,7 @@ impl TileSource for OracleFullSource<'_> {
     }
 
     fn tile(&self, r0: usize, r1: usize) -> Matrix {
+        let _s = obs::span(Stage::OracleTile);
         self.oracle.full_rows(r0, r1)
     }
 }

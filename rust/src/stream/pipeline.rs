@@ -12,9 +12,16 @@
 //! Consumption order is deterministic (ascending `r0`), so gather-style
 //! consumers are bit-identical to the materialized path and
 //! accumulation-style consumers differ only by reduction grouping.
+//!
+//! Both sides are span-traced ([`obs`]): tile builds as
+//! `pipeline.produce`, folds as `pipeline.fold`, and the time each side
+//! spends blocked on the bounded channel as `pipeline.produce.stall` /
+//! `pipeline.fold.stall` — the stall fractions that answer whether a run
+//! is oracle-bound or fold-bound (EXPERIMENTS.md §Observability).
 
 use super::{TileConsumer, TileSource};
 use crate::linalg::Matrix;
+use crate::obs::{self, Stage};
 use crate::pool;
 use crate::testkit::faults::{self, FaultPlan, FaultPoint};
 use std::collections::VecDeque;
@@ -137,30 +144,52 @@ pub fn run_pipeline(
     let faults = faults::current();
     let t = tile_rows.clamp(1, n);
     if t >= n {
-        let tile = src.tile(0, n);
+        let tile = {
+            let _s = obs::span(Stage::PipelineProduce);
+            src.tile(0, n)
+        };
         trip_fold_fault(&faults, 0);
+        let _s = obs::span(Stage::PipelineFold);
         for c in consumers.iter_mut() {
             c.consume(0, &tile);
         }
         return;
     }
+    // Forward the caller's trace id into the pool-spawned producer so
+    // both sides of the pipeline land in the same request timeline.
+    let trace = obs::current_trace_raw();
     let chan = Chan::new(queue_depth.max(1));
     let chan_ref = &chan;
     pool::global().scoped(|scope| {
         scope.spawn(move || {
+            let _trace = obs::trace_scope(trace);
             let _done = TxGuard(chan_ref);
             let mut r0 = 0;
             while r0 < n {
                 let r1 = (r0 + t).min(n);
-                if !chan_ref.push((r0, src.tile(r0, r1))) {
+                let tile = {
+                    let _s = obs::span(Stage::PipelineProduce);
+                    src.tile(r0, r1)
+                };
+                let pushed = {
+                    let _s = obs::span(Stage::PipelineProduceStall);
+                    chan_ref.push((r0, tile))
+                };
+                if !pushed {
                     return; // receiver gone — stop producing
                 }
                 r0 = r1;
             }
         });
         let _guard = RxGuard(chan_ref);
-        while let Some((r0, tile)) = chan_ref.pop() {
+        loop {
+            let item = {
+                let _s = obs::span(Stage::PipelineFoldStall);
+                chan_ref.pop()
+            };
+            let Some((r0, tile)) = item else { break };
             trip_fold_fault(&faults, r0);
+            let _s = obs::span(Stage::PipelineFold);
             for c in consumers.iter_mut() {
                 c.consume(r0, &tile);
             }

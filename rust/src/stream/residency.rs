@@ -45,6 +45,7 @@
 
 use super::{panel_bytes, TileSource};
 use crate::linalg::Matrix;
+use crate::obs::{self, Stage};
 use crate::testkit::faults::{self, FaultPlan, FaultPoint};
 use std::fs::File;
 use std::io::{Read as _, Seek, SeekFrom, Write as _};
@@ -223,6 +224,9 @@ fn write_tile_retrying(arena: &mut SpillArena, m: &Matrix) -> (Option<u64>, u64)
             retries += 1;
             backoff(attempt);
         }
+        // one span per attempt, so injected-fault retries show up as
+        // repeated residency.spill_write events in the trace
+        let _s = obs::span(Stage::ResidencySpillWrite);
         if let Some(off) = write_tile(arena, m) {
             return (Some(off), retries);
         }
@@ -243,6 +247,7 @@ fn read_tile_retrying(
             retries += 1;
             backoff(attempt);
         }
+        let _s = obs::span(Stage::ResidencySpillRead);
         if let Some(m) = read_tile(arena, off, rows, cols) {
             return (Some(m), retries);
         }
@@ -338,6 +343,7 @@ impl<'a> ResidentSource<'a> {
         let tick = st.tick;
         st.slots[g].uses += 1;
         if st.slots[g].ram.is_some() {
+            let _s = obs::span(Stage::ResidencyRamHit);
             st.slots[g].stamp = tick;
             st.stats.ram_hits += 1;
             f(st.slots[g].ram.as_ref().unwrap());
@@ -367,6 +373,7 @@ impl<'a> ResidentSource<'a> {
         let tick = st.tick;
         st.slots[g].uses += 1;
         if st.slots[g].ram.is_some() {
+            let _s = obs::span(Stage::ResidencyRamHit);
             let out = st.slots[g].ram.as_ref().unwrap().clone();
             st.slots[g].stamp = tick;
             st.stats.ram_hits += 1;
@@ -412,7 +419,10 @@ impl<'a> ResidentSource<'a> {
     /// serialized per pipeline (one producer), and inner-source compute
     /// parallelism lives below this layer (the oracle's GEMM pool).
     fn compute_tile(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Matrix {
-        let m = self.inner.tile(t0, t1);
+        let m = {
+            let _s = obs::span(Stage::ResidencyRecompute);
+            self.inner.tile(t0, t1)
+        };
         st.stats.computes += 1;
         if st.slots[g].spill_off.is_none() {
             if let Some(arena) = st.arena.as_mut() {

@@ -16,6 +16,7 @@ use fastspsd::coordinator::{
 };
 use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
+use fastspsd::obs::{self, sink, Stage};
 use fastspsd::sketch::SketchKind;
 use fastspsd::testkit::faults::{
     self, FaultPlan, FaultPoint, FaultSpec, FaultyOracle,
@@ -151,6 +152,41 @@ fn spill_read_faults_recover_or_degrade_bit_identically() {
         assert_eq!(stats.spill_hits, 0);
         assert!(stats.computes > stats_ref.computes, "degraded = recompute on miss");
     }
+    assert_no_spill_files(&dir);
+}
+
+/// Chaos must stay visible in traces (ISSUE 7): the residency layer
+/// records one `residency.spill_write` span per IO *attempt*, so an
+/// injected transient fault shows up as an extra span over the tile
+/// count — and the whole trace still renders as well-formed Chrome
+/// `trace_event` JSON.
+#[test]
+fn injected_spill_retries_are_visible_in_the_chrome_trace() {
+    let _g = chaos_guard();
+    obs::ensure_installed();
+    let o = oracle();
+    let cols = landmarks();
+    let dir = spill_dir("trace");
+    let trace = obs::TraceId::mint().raw();
+    let plan = Arc::new(FaultPlan::none().fail(FaultPoint::SpillWrite, FaultSpec::transient(2)));
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let _scope = obs::trace_scope(trace);
+        let (_, _, stats) = lanczos_under(&o, &cols, &spilled_in(&dir));
+        assert!(stats.io_retries >= 1, "premise: the transient fault forced a retry");
+    }
+    let records = obs::drain_trace(trace);
+    let writes =
+        records.iter().filter(|r| r.stage == Stage::ResidencySpillWrite).count() as u64;
+    let tiles = N.div_ceil(8) as u64;
+    assert!(
+        writes > tiles,
+        "per-attempt spans must make the retry visible: {writes} write spans, {tiles} tiles"
+    );
+    let stages = sink::validate_chrome_json(&sink::chrome_json(&records))
+        .expect("a chaos run still emits well-formed trace JSON");
+    assert!(stages.contains("residency.spill_write"), "{stages:?}");
+    assert!(stages.contains("residency.spill_read"), "{stages:?}");
     assert_no_spill_files(&dir);
 }
 

@@ -1,0 +1,71 @@
+//! Disabled-mode cost of the span recorder (ISSUE 7). One `#[test]` in
+//! its own binary on purpose: installing the recorder is process-global
+//! and irreversible, so this is the only integration binary in which
+//! `obs::ensure_installed` must never run — every span site below takes
+//! the one-atomic-load fast path.
+
+use fastspsd::coordinator::oracle::RbfOracle;
+use fastspsd::exec::{self, ExecPolicy};
+use fastspsd::linalg::Matrix;
+use fastspsd::obs::{self, Stage};
+use fastspsd::spsd::{self, FastConfig};
+use fastspsd::util::Rng;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+const N: usize = 192;
+const TILE: usize = 16;
+
+fn build(o: &RbfOracle, seed: u64) -> exec::RunReport<spsd::SpsdApprox> {
+    let mut rng = Rng::new(seed);
+    let p = spsd::uniform_p(N, 8, &mut rng);
+    exec::fast(o, &p, FastConfig::uniform(24), &ExecPolicy::streamed(TILE), &mut rng)
+}
+
+#[test]
+fn disabled_recorder_is_bit_invisible_and_costs_under_one_percent() {
+    assert!(!obs::installed(), "this binary must never install the recorder");
+
+    let mut rng = Rng::new(3);
+    let o = RbfOracle::cpu(Arc::new(Matrix::randn(N, 6, &mut rng)), 0.5);
+
+    // Bit-equality: two identical builds through the fully instrumented
+    // streamed path give identical numbers, and no profile is attached.
+    let a = build(&o, 9);
+    let b = build(&o, 9);
+    assert!(a.meta.stage_profile.is_none(), "no recorder, no profile");
+    assert!(b.meta.stage_profile.is_none());
+    assert_eq!(a.result.c.max_abs_diff(&b.result.c), 0.0);
+    assert_eq!(a.result.u.max_abs_diff(&b.result.u), 0.0);
+    assert_eq!(a.result.p_indices, b.result.p_indices);
+
+    // Wall time of one build (the instrumented code, spans disabled).
+    let reps = 5;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        black_box(build(&o, 9));
+    }
+    let build_secs = t0.elapsed().as_secs_f64() / reps as f64;
+
+    // Direct cost of one disabled span: open + drop, which is a single
+    // relaxed atomic load and an inert guard.
+    let iters = 1_000_000u32;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let g = obs::span(Stage::PipelineFold);
+        black_box(&g);
+    }
+    let per_span = t0.elapsed().as_secs_f64() / f64::from(iters);
+    assert!(per_span < 2e-7, "disabled span cost {per_span}s is not one atomic load");
+
+    // <1% overhead: even a generous over-count of the span sites this
+    // build passes through (per-tile produce/stall/fold/consumer spans
+    // plus the fixed solve/exec spans) stays under 1% of the build.
+    let spans = 32.0 * N.div_ceil(TILE) as f64 + 256.0;
+    let overhead = per_span * spans;
+    assert!(
+        overhead < 0.01 * build_secs,
+        "estimated disabled-span overhead {overhead}s vs build {build_secs}s"
+    );
+}

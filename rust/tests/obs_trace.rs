@@ -1,0 +1,190 @@
+//! Trace invariants for the span recorder (ISSUE 7): spans nest and
+//! partition self time per thread, trace ids propagate across the
+//! pipeline's producer thread, an exec entry point that mints its own
+//! trace annotates its `RunMeta`, and a served Resident+spill+leverage
+//! request yields a stage profile whose durations account for the whole
+//! compute window plus a loadable Chrome trace file.
+//!
+//! Every test uses per-trace drains (`drain_trace`), never `drain_all`,
+//! so the tests stay independent under the parallel test runner.
+
+use fastspsd::coordinator::oracle::RbfOracle;
+use fastspsd::coordinator::{
+    ApproxRequest, ApproxService, KernelOracle, MethodSpec, ServiceConfig,
+};
+use fastspsd::exec::{self, ExecPolicy};
+use fastspsd::linalg::Matrix;
+use fastspsd::obs::{self, sink, Stage};
+use fastspsd::sketch::SketchKind;
+use fastspsd::spsd::FastConfig;
+use fastspsd::util::Rng;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+fn oracle(n: usize) -> RbfOracle {
+    let mut rng = Rng::new(3);
+    RbfOracle::cpu(Arc::new(Matrix::randn(n, 6, &mut rng)), 0.5)
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastspsd-obs-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn count(profile: &fastspsd::StageProfile, stage: Stage) -> u64 {
+    profile.get(stage).map_or(0, |a| a.count)
+}
+
+#[test]
+fn spans_nest_and_partition_self_time_per_thread() {
+    obs::ensure_installed();
+    let trace = obs::TraceId::mint().raw();
+    let _scope = obs::trace_scope(trace);
+    {
+        let _outer = obs::span(Stage::GramFold);
+        std::thread::sleep(Duration::from_millis(4));
+        {
+            let _inner = obs::span(Stage::SolveEig);
+            std::thread::sleep(Duration::from_millis(4));
+        }
+    }
+    let records = obs::drain_trace(trace);
+    assert_eq!(records.len(), 2);
+    let outer = records.iter().find(|r| r.stage == Stage::GramFold).unwrap();
+    let inner = records.iter().find(|r| r.stage == Stage::SolveEig).unwrap();
+    assert_eq!(outer.depth, 0);
+    assert_eq!(inner.depth, 1);
+    assert_eq!(outer.thread, inner.thread);
+    assert!(inner.start_ns >= outer.start_ns, "child starts inside its parent");
+    assert!(inner.start_ns + inner.dur_ns <= outer.start_ns + outer.dur_ns);
+    // Self time partitions exactly: parent self = parent dur − child dur.
+    assert_eq!(outer.self_ns, outer.dur_ns - inner.dur_ns);
+    assert_eq!(inner.self_ns, inner.dur_ns, "a leaf owns its whole duration");
+    assert!(obs::drain_trace(trace).is_empty(), "a drain consumes the trace");
+}
+
+#[test]
+fn exec_mints_a_trace_and_the_profile_accounts_for_compute() {
+    obs::ensure_installed();
+    let n = 96;
+    let o = oracle(n);
+    let mut rng = Rng::new(11);
+    let p = fastspsd::spsd::uniform_p(n, 8, &mut rng);
+    let rep =
+        exec::fast(&o, &p, FastConfig::uniform(24), &ExecPolicy::streamed(16), &mut rng);
+    let profile = rep.meta.stage_profile.expect("installed recorder annotates RunMeta");
+    assert_eq!(count(&profile, Stage::ExecRun), 1, "one umbrella span per entry point");
+    // The umbrella nests every same-thread stage, so main-thread self
+    // times must sum back to (within measurement slack of) compute_secs.
+    let covered = profile.covered_secs();
+    let compute = rep.meta.compute_secs;
+    assert!(
+        (covered - compute).abs() <= 0.05 * compute + 1e-3,
+        "covered {covered}s vs compute {compute}s"
+    );
+}
+
+#[test]
+fn trace_propagates_to_the_pipeline_producer_thread() {
+    obs::ensure_installed();
+    let n = 96;
+    let tile = 16;
+    let o = oracle(n);
+    let mut rng = Rng::new(5);
+    let p = fastspsd::spsd::uniform_p(n, 8, &mut rng);
+    let rep =
+        exec::fast(&o, &p, FastConfig::uniform(24), &ExecPolicy::streamed(tile), &mut rng);
+    let profile = rep.meta.stage_profile.expect("installed recorder annotates RunMeta");
+    // Producer-side spans only reach this profile if the pool-spawned
+    // producer inherited the caller's trace id across the thread hop.
+    let produce = profile.get(Stage::PipelineProduce).expect("producer spans in the trace");
+    assert!(produce.count >= (n / tile) as u64, "one produce span per tile");
+    assert!(produce.total_secs > 0.0);
+    assert_eq!(
+        produce.main_self_secs, 0.0,
+        "tiles are built on the pool thread, not the consumer thread"
+    );
+    // Both stall sides were measured, so the stall fractions exist.
+    assert!(profile.producer_stall_fraction().is_some());
+    assert!(profile.consumer_stall_fraction().is_some());
+}
+
+/// The ISSUE 7 acceptance path: a served Resident+spill+leverage request
+/// carries a stage profile whose durations sum to the compute window
+/// (±5%), and the service writes a loadable Chrome trace showing
+/// admission → plan → pipeline → solve with residency tiles.
+#[test]
+fn served_resident_spill_leverage_request_is_fully_profiled() {
+    let n = 96;
+    let spill = fresh_dir("svc-spill");
+    let traces = fresh_dir("svc-traces");
+    let svc = ApproxService::new(
+        Arc::new(oracle(n)) as Arc<dyn KernelOracle + Send + Sync>,
+        ServiceConfig {
+            workers: 1,
+            spill_dir: Some(spill.clone()),
+            trace_dir: Some(traces.clone()),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = mpsc::channel();
+    svc.submit(
+        ApproxRequest {
+            id: 7,
+            method: MethodSpec::Fast { s: 24, kind: SketchKind::Leverage { scaled: false } },
+            c: 8,
+            k: 3,
+            seed: 7,
+            policy: Some(ExecPolicy::resident(0).with_tile_rows(16)),
+            deadline: None,
+        },
+        tx,
+    );
+    svc.drain();
+    let r = rx.iter().next().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert!(r.queue_wait_secs >= 0.0 && r.ladder_secs >= 0.0);
+    let meta = r.meta.as_ref().unwrap();
+    let profile = meta.stage_profile.as_ref().expect("traced service annotates RunMeta");
+
+    // Lifecycle stages: queued, planned, executed, solved.
+    assert_eq!(count(profile, Stage::AdmissionQueue), 1);
+    assert!(count(profile, Stage::Plan) >= 1, "submit-side planning rides the trace");
+    assert_eq!(count(profile, Stage::ExecRun), 1);
+    assert!(count(profile, Stage::SolveEig) >= 1, "downstream eig is span-tagged");
+    // Residency tiles: a zero RAM budget writes every tile through the
+    // arena on pass 1 and reloads it from disk on pass 2 (leverage is
+    // the two-pass sketch).
+    assert!(count(profile, Stage::ResidencySpillWrite) > 0);
+    assert!(count(profile, Stage::ResidencySpillRead) > 0);
+
+    // The profile accounts for the whole compute window, not just a slice.
+    let covered = profile.covered_secs();
+    let compute = meta.compute_secs;
+    assert!(
+        (covered - compute).abs() <= 0.05 * compute + 1e-3,
+        "covered {covered}s vs compute {compute}s"
+    );
+
+    // And the same records landed on disk as a loadable Chrome trace.
+    let path = traces.join("trace-req-7.json");
+    let text = std::fs::read_to_string(&path).expect("trace file written at reply time");
+    let stages = sink::validate_chrome_json(&text).expect("well-formed trace_event JSON");
+    for name in [
+        "admission.queue",
+        "plan",
+        "exec.run",
+        "pipeline.produce",
+        "pipeline.fold",
+        "residency.spill_write",
+        "residency.spill_read",
+        "solve.eig",
+    ] {
+        assert!(stages.contains(name), "chrome trace is missing {name}: {stages:?}");
+    }
+    let _ = std::fs::remove_dir_all(&spill);
+    let _ = std::fs::remove_dir_all(&traces);
+}

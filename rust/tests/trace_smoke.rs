@@ -1,0 +1,146 @@
+//! Pure-Rust trace smoke test (the `make trace-smoke` target, ISSUE 7):
+//! serve one streamed and one resident-with-spill request through a
+//! service configured with a `trace_dir`, then validate that the emitted
+//! Chrome `trace_event` JSON parses and covers the mandatory stages —
+//! the same check a human would do by loading the file in
+//! `about:tracing`, minus the browser.
+//!
+//! One `#[test]` on purpose: trace ids are minted from a process-global
+//! counter, and the leak check at the bottom relies on this process
+//! minting sequentially.
+
+use fastspsd::coordinator::oracle::RbfOracle;
+use fastspsd::coordinator::{
+    ApproxRequest, ApproxService, KernelOracle, MethodSpec, ServiceConfig,
+};
+use fastspsd::exec::ExecPolicy;
+use fastspsd::linalg::Matrix;
+use fastspsd::obs::{self, sink};
+use fastspsd::sketch::SketchKind;
+use fastspsd::util::Rng;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastspsd-smoke-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn serve_one(svc: &ApproxService, req: ApproxRequest) {
+    let (tx, rx) = mpsc::channel();
+    svc.submit(req, tx);
+    svc.drain();
+    let r = rx.iter().next().unwrap();
+    assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+    assert!(r.meta.unwrap().stage_profile.is_some(), "traced service annotates RunMeta");
+}
+
+fn stages_of(dir: &std::path::Path, id: u64) -> BTreeSet<String> {
+    let path = dir.join(format!("trace-req-{id}.json"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing trace file {path:?}: {e}"));
+    sink::validate_chrome_json(&text)
+        .unwrap_or_else(|e| panic!("malformed chrome trace {path:?}: {e}"))
+}
+
+fn assert_covers(stages: &BTreeSet<String>, mandatory: &[&str], what: &str) {
+    for name in mandatory {
+        assert!(stages.contains(*name), "{what}: trace is missing stage {name}: {stages:?}");
+    }
+}
+
+#[test]
+fn traced_requests_emit_wellformed_chrome_json_covering_mandatory_stages() {
+    let n = 96;
+    let mut rng = Rng::new(3);
+    let spill = fresh_dir("spill");
+    let traces = fresh_dir("traces");
+    let svc = ApproxService::new(
+        Arc::new(RbfOracle::cpu(Arc::new(Matrix::randn(n, 6, &mut rng)), 0.5))
+            as Arc<dyn KernelOracle + Send + Sync>,
+        ServiceConfig {
+            workers: 1,
+            spill_dir: Some(spill.clone()),
+            trace_dir: Some(traces.clone()),
+            ..Default::default()
+        },
+    );
+
+    // Request 0: the bounded double-buffered pipeline (streamed policy).
+    serve_one(
+        &svc,
+        ApproxRequest {
+            id: 0,
+            method: MethodSpec::Fast { s: 24, kind: SketchKind::Uniform },
+            c: 8,
+            k: 3,
+            seed: 1,
+            policy: Some(ExecPolicy::streamed(16)),
+            deadline: None,
+        },
+    );
+    let streamed = stages_of(&traces, 0);
+    assert_covers(
+        &streamed,
+        &["admission.queue", "plan", "exec.run", "pipeline.produce", "pipeline.fold",
+          "solve.svd", "solve.eig"],
+        "streamed request",
+    );
+
+    // Request 1: residency at a zero RAM budget — two-pass leverage, so
+    // every tile writes through the spill arena and reloads from it.
+    serve_one(
+        &svc,
+        ApproxRequest {
+            id: 1,
+            method: MethodSpec::Fast { s: 24, kind: SketchKind::Leverage { scaled: false } },
+            c: 8,
+            k: 3,
+            seed: 2,
+            policy: Some(ExecPolicy::resident(0).with_tile_rows(16)),
+            deadline: None,
+        },
+    );
+    let resident = stages_of(&traces, 1);
+    assert_covers(
+        &resident,
+        &["admission.queue", "plan", "exec.run", "pipeline.produce", "pipeline.fold",
+          "residency.spill_write", "residency.spill_read", "solve.eig"],
+        "resident request",
+    );
+
+    // Unserved requests must not leak their spans into the central store.
+    // Minting is sequential in this process, so the next submit's trace
+    // id is exactly `probe + 1`.
+    let capped = ApproxService::new(
+        Arc::new(RbfOracle::cpu(Arc::new(Matrix::randn(n, 6, &mut Rng::new(4))), 0.5))
+            as Arc<dyn KernelOracle + Send + Sync>,
+        ServiceConfig { workers: 1, memory_cap: Some(1), ..Default::default() },
+    );
+    let probe = obs::TraceId::mint().raw();
+    let (tx, rx) = mpsc::channel();
+    capped.submit(
+        ApproxRequest {
+            id: 2,
+            method: MethodSpec::Fast { s: 16, kind: SketchKind::Uniform },
+            c: 8,
+            k: 3,
+            seed: 5,
+            policy: None,
+            deadline: None,
+        },
+        tx,
+    );
+    let r = rx.iter().next().unwrap();
+    assert!(r.error.is_some(), "a 1-byte cap must reject every rung");
+    assert!(
+        obs::drain_trace(probe + 1).is_empty(),
+        "the rejected request's planning spans must be discarded, not leaked"
+    );
+
+    let _ = std::fs::remove_dir_all(&spill);
+    let _ = std::fs::remove_dir_all(&traces);
+}
