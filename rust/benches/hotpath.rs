@@ -7,7 +7,9 @@
 //! runs it in quick mode (`FASTSPSD_BENCH_QUICK=1`).
 
 use fastspsd::benchkit::{black_box, BenchSuite};
-use fastspsd::coordinator::engine::{rbf_cross_cpu, rbf_gram_cpu, KernelEngine};
+use fastspsd::coordinator::engine::{
+    rbf_cross_cpu, rbf_cross_cpu_f32, rbf_gram_cpu, KernelEngine,
+};
 use fastspsd::data::sigma;
 use fastspsd::linalg::{gemm, pinv, svd_thin, Matrix};
 use fastspsd::util::Rng;
@@ -57,6 +59,34 @@ fn main() {
         }
     }
 
+    // Mixed-precision tile plane: the f32-stored panel kernels (f32 packs,
+    // f64 accumulation) against their f64 twins at the same nominal flop
+    // count, so the GFLOP/s column shows what the narrower packs/stores buy.
+    {
+        let a = Matrix::randn(512, 512, &mut rng);
+        let b = Matrix::randn(512, 512, &mut rng);
+        let flops = 2.0 * 512f64.powi(3);
+        let id = |_: usize, _: usize, v: f64| v;
+        suite.bench_flops("gemm_nt_map f64 512x512", flops, || {
+            black_box(gemm::gemm_nt_map(&a, &b, &id));
+        });
+        suite.bench_flops("gemm_nt_map f32 512x512", flops, || {
+            black_box(gemm::gemm_nt_map_f32(&a, &b, &id));
+        });
+        suite.bench_flops("syrk_nt_map f64 512x512", flops, || {
+            black_box(gemm::syrk_nt_map(&a, &id));
+        });
+        suite.bench_flops("syrk_nt_map f32 512x512", flops, || {
+            black_box(gemm::syrk_nt_map_f32(&a, &id));
+        });
+        if let (Some(wide), Some(narrow)) = (
+            suite.mean_of("gemm_nt_map f64 512x512"),
+            suite.mean_of("gemm_nt_map f32 512x512"),
+        ) {
+            println!("    f32 speedup over f64 gemm_nt_map: {:.2}x", wide / narrow);
+        }
+    }
+
     // factorizations at algorithm-relevant sizes
     let c128 = Matrix::randn(1024, 64, &mut rng);
     suite.bench("svd_thin 1024x64", || {
@@ -78,6 +108,10 @@ fn main() {
     });
     suite.bench("rbf_gram_cpu 512x512x16", || {
         black_box(rbf_gram_cpu(&x, 0.5));
+    });
+    // the oracle's f32 tile path: same fused epilogue, f32 tile out
+    suite.bench("rbf_cross_cpu_f32 512x512x16", || {
+        black_box(rbf_cross_cpu_f32(&x, &y, 0.5));
     });
 
     // σ-calibration: the bisection loop re-exponentiates one precomputed

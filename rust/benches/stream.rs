@@ -16,7 +16,7 @@ use fastspsd::cur::FastCurConfig;
 use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::spsd::{self, FastConfig, LeverageBasis};
-use fastspsd::stream::OracleColumnsSource;
+use fastspsd::stream::{OracleColumnsSource, Precision};
 use fastspsd::util::Rng;
 use std::sync::Arc;
 
@@ -73,6 +73,24 @@ fn main() {
         suite.mean_of(&format!("fast[uniform] streamed t={DEFAULT_TILE} n={n}")),
     ) {
         println!("    streamed/materialized at default tile: {:.3}x", st / mat);
+    }
+    // f32 tile plane: the same streamed build with half-width tiles (outputs
+    // and fold state stay f64) — the wall-time and peak-extra deltas against
+    // the f64 row above are what the narrow plane buys end to end.
+    {
+        let pol32 = ExecPolicy::streamed(DEFAULT_TILE).with_precision(Precision::F32);
+        suite.bench(&format!("fast[uniform] streamed f32 t={DEFAULT_TILE} n={n}"), || {
+            black_box(exec::fast(&oracle, &p, FastConfig::uniform(s), &pol32, &mut Rng::new(1)));
+        });
+        let peak32 =
+            gauged(|| exec::fast(&oracle, &p, FastConfig::uniform(s), &pol32, &mut Rng::new(1)));
+        println!("    peak extra: {}", fmt_mib(peak32));
+        if let (Some(wide), Some(narrow)) = (
+            suite.mean_of(&format!("fast[uniform] streamed t={DEFAULT_TILE} n={n}")),
+            suite.mean_of(&format!("fast[uniform] streamed f32 t={DEFAULT_TILE} n={n}")),
+        ) {
+            println!("    f32/f64 streamed wall time: {:.3}x", narrow / wide);
+        }
     }
 
     // ---- fast model, leverage family (streamed Gram scores) -------------
@@ -166,6 +184,29 @@ fn main() {
             st.spill_hits,
             fmt_mib(st.spilled_bytes as usize)
         );
+        if label == "resident[spill]" {
+            suite.counter("residency.spilled_bytes_f64", st.spilled_bytes as f64);
+        }
+    }
+    // f32 residency: the same spill-everything policy at half element width —
+    // spilled bytes halve (the arena's accounting is payload-only), while the
+    // eigenvalues still come out of f64 fold state. The counter pair above/
+    // below lands in BENCH_stream.json so the halving is tracked like timings.
+    {
+        let pol32 =
+            ExecPolicy::resident(0).with_tile_rows(DEFAULT_TILE).with_precision(Precision::F32);
+        suite.bench(&format!("implicit top-k resident[spill] f32 t={DEFAULT_TILE} n={n}"), || {
+            black_box(exec::top_k_eigs(&src, &u_id, k_eigs, 7, &pol32));
+        });
+        let st32 = exec::top_k_eigs(&src, &u_id, k_eigs, 7, &pol32)
+            .meta
+            .residency
+            .expect("resident policies report stats");
+        println!(
+            "    spilled {} (exactly half the f64 row's bytes)",
+            fmt_mib(st32.spilled_bytes as usize)
+        );
+        suite.counter("residency.spilled_bytes_f32", st32.spilled_bytes as f64);
     }
 
     // ---- CUR over a dense matrix ---------------------------------------
@@ -236,6 +277,7 @@ fn main() {
                     k: 4,
                     seed: i,
                     policy: None,
+                    precision: fastspsd::stream::Precision::F64,
                     deadline: None,
                 },
                 tx.clone(),

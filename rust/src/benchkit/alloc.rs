@@ -20,6 +20,12 @@
 //! start and reports how far the high-water rose above it. Measurements
 //! are process-global, so run one gauged region at a time (the memory
 //! tests live in a single `#[test]` for this reason).
+//!
+//! The gauge counts raw `Layout` bytes and is element-width-agnostic: an
+//! f32 tile registers exactly half the bytes of its f64 twin, so the
+//! mixed-precision plane's footprint saving shows up directly in
+//! `peak_extra_bytes` with no unit conversion (compare the f32/f64 rows
+//! in `benches/stream.rs`).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

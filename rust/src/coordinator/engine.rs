@@ -17,7 +17,7 @@
 //! 256x256 would waste 99% of the FLOPs. The crossover is tunable and
 //! benchmarked in `hotpath` (EXPERIMENTS.md §Perf).
 
-use crate::linalg::{gemm, Matrix};
+use crate::linalg::{gemm, Matrix, MatrixF32};
 use crate::runtime::{ExecRequest, RuntimeHandle};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -327,6 +327,43 @@ pub fn poly_cross_cpu(x: &Matrix, y: &Matrix, gamma: f64, coef0: f64, degree: f6
     gemm::gemm_nt_map(x, y, &|_, _, dot| (gamma * dot + coef0).powf(degree))
 }
 
+// -------------------------------------------------------- f32 tile kernels
+//
+// Native narrow-tile kernel blocks: the dot products run on the f32 packed
+// plane (f64 accumulation), the row norms and the exp/pow epilogue stay in
+// f64, and only the final kernel value is rounded to f32 — NOT a
+// compute-f64-then-demote shim, so the 2× bandwidth is real.
+
+/// [`rbf_cross_cpu`] producing an f32 tile.
+pub fn rbf_cross_cpu_f32(x: &Matrix, y: &Matrix, gamma: f64) -> MatrixF32 {
+    if std::ptr::eq(x, y) {
+        return rbf_gram_cpu_f32(x, gamma);
+    }
+    let xn = x.row_sq_norms();
+    let yn = y.row_sq_norms();
+    gemm::gemm_nt_map_f32(x, y, &|i, j, dot| {
+        let d2 = (xn[i] + yn[j] - 2.0 * dot).max(0.0);
+        (-gamma * d2).exp()
+    })
+}
+
+/// [`rbf_gram_cpu`] producing an f32 tile (triangular + mirror).
+pub fn rbf_gram_cpu_f32(x: &Matrix, gamma: f64) -> MatrixF32 {
+    let xn = x.row_sq_norms();
+    gemm::syrk_nt_map_f32(x, &|i, j, dot| {
+        let d2 = (xn[i] + xn[j] - 2.0 * dot).max(0.0);
+        (-gamma * d2).exp()
+    })
+}
+
+/// [`poly_cross_cpu`] producing an f32 tile.
+pub fn poly_cross_cpu_f32(x: &Matrix, y: &Matrix, gamma: f64, coef0: f64, degree: f64) -> MatrixF32 {
+    if std::ptr::eq(x, y) {
+        return gemm::syrk_nt_map_f32(x, &|_, _, dot| (gamma * dot + coef0).powf(degree));
+    }
+    gemm::gemm_nt_map_f32(x, y, &|_, _, dot| (gamma * dot + coef0).powf(degree))
+}
+
 /// Pad `m` to `rows_to x cols_to` with zeros and flatten to f32 row-major.
 fn pad_rows_cols_f32(m: &Matrix, rows_to: usize, cols_to: usize) -> Vec<f32> {
     assert!(rows_to >= m.rows() && cols_to >= m.cols());
@@ -460,5 +497,34 @@ mod tests {
         let y = Matrix::zeros(4, 3);
         let k = e.rbf_cross(&x, &y, 1.0);
         assert_eq!((k.rows(), k.cols()), (0, 4));
+    }
+
+    #[test]
+    fn f32_kernel_blocks_track_f64_within_rounding() {
+        let mut rng = Rng::new(21);
+        let x = Matrix::randn(23, 4, &mut rng);
+        let y = Matrix::randn(9, 4, &mut rng);
+        let k64 = rbf_cross_cpu(&x, &y, 0.7);
+        let k32 = rbf_cross_cpu_f32(&x, &y, 0.7);
+        for i in 0..23 {
+            for j in 0..9 {
+                assert!((k64[(i, j)] - k32.row(i)[j] as f64).abs() < 1e-4, "rbf ({i},{j})");
+            }
+        }
+        let g32 = rbf_gram_cpu_f32(&x, 0.7);
+        for i in 0..23 {
+            assert!((g32.row(i)[i] - 1.0).abs() < 1e-6);
+            for j in 0..23 {
+                assert_eq!(g32.row(i)[j].to_bits(), g32.row(j)[i].to_bits());
+            }
+        }
+        let p64 = poly_cross_cpu(&x, &y, 0.5, 1.0, 2.0);
+        let p32 = poly_cross_cpu_f32(&x, &y, 0.5, 1.0, 2.0);
+        for i in 0..23 {
+            for j in 0..9 {
+                let rel = (p64[(i, j)] - p32.row(i)[j] as f64).abs() / p64[(i, j)].abs().max(1.0);
+                assert!(rel < 1e-4, "poly ({i},{j})");
+            }
+        }
     }
 }

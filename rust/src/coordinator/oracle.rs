@@ -6,7 +6,7 @@
 //! `nc + (s-c)^2` entries while the prototype model sees `n^2`.
 
 use super::engine::KernelEngine;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, MatrixF32, Precision, Tile};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -56,6 +56,36 @@ pub trait KernelOracle: Sync {
     fn full_rows(&self, r0: usize, r1: usize) -> Matrix {
         let all: Vec<usize> = (0..self.n()).collect();
         self.row_block(r0, r1, &all)
+    }
+
+    /// [`row_block`](Self::row_block) at f32 tile width. The default
+    /// computes in f64 and demotes (always correct); the analytic oracles
+    /// override it with a native narrow-tile kernel evaluation so an f32
+    /// run actually buys the bandwidth it asks for.
+    fn row_block_f32(&self, r0: usize, r1: usize, cols: &[usize]) -> MatrixF32 {
+        self.row_block(r0, r1, cols).demote()
+    }
+
+    /// [`full_rows`](Self::full_rows) at f32 tile width (default: demote).
+    fn full_rows_f32(&self, r0: usize, r1: usize) -> MatrixF32 {
+        self.full_rows(r0, r1).demote()
+    }
+
+    /// Width-dispatched column block: the typed-tile entry the streaming
+    /// sources sit on.
+    fn row_block_elem(&self, r0: usize, r1: usize, cols: &[usize], prec: Precision) -> Tile {
+        match prec {
+            Precision::F64 => Tile::F64(self.row_block(r0, r1, cols)),
+            Precision::F32 => Tile::F32(self.row_block_f32(r0, r1, cols)),
+        }
+    }
+
+    /// Width-dispatched full-row block.
+    fn full_rows_elem(&self, r0: usize, r1: usize, prec: Precision) -> Tile {
+        match prec {
+            Precision::F64 => Tile::F64(self.full_rows(r0, r1)),
+            Precision::F32 => Tile::F32(self.full_rows_f32(r0, r1)),
+        }
     }
 
     /// Entries served so far (for the #entries accounting).
@@ -207,6 +237,24 @@ impl KernelOracle for RbfOracle {
         self.engine.rbf_cross(&xr, &self.x, self.gamma)
     }
 
+    fn row_block_f32(&self, r0: usize, r1: usize, cols: &[usize]) -> MatrixF32 {
+        self.entries
+            .fetch_add(((r1 - r0) * cols.len()) as u64, Ordering::Relaxed);
+        let xr = self.x.block(r0, r1, 0, self.x.cols());
+        let xc = LandmarkCache::lookup(&self.landmarks, &self.x, cols);
+        super::engine::rbf_cross_cpu_f32(&xr, &xc, self.gamma)
+    }
+
+    fn full_rows_f32(&self, r0: usize, r1: usize) -> MatrixF32 {
+        self.entries
+            .fetch_add(((r1 - r0) * self.n()) as u64, Ordering::Relaxed);
+        if r0 == 0 && r1 == self.n() {
+            return super::engine::rbf_gram_cpu_f32(&self.x, self.gamma);
+        }
+        let xr = self.x.block(r0, r1, 0, self.x.cols());
+        super::engine::rbf_cross_cpu_f32(&xr, &self.x, self.gamma)
+    }
+
     fn entries_observed(&self) -> u64 {
         self.entries.load(Ordering::Relaxed)
     }
@@ -286,6 +334,26 @@ impl KernelOracle for PolyOracle {
         let xr = self.x.block(r0, r1, 0, self.x.cols());
         self.engine
             .poly_cross(&xr, &self.x, self.gamma, self.coef0, self.degree)
+    }
+
+    fn row_block_f32(&self, r0: usize, r1: usize, cols: &[usize]) -> MatrixF32 {
+        self.entries
+            .fetch_add(((r1 - r0) * cols.len()) as u64, Ordering::Relaxed);
+        let xr = self.x.block(r0, r1, 0, self.x.cols());
+        let xc = LandmarkCache::lookup(&self.landmarks, &self.x, cols);
+        super::engine::poly_cross_cpu_f32(&xr, &xc, self.gamma, self.coef0, self.degree)
+    }
+
+    fn full_rows_f32(&self, r0: usize, r1: usize) -> MatrixF32 {
+        self.entries
+            .fetch_add(((r1 - r0) * self.n()) as u64, Ordering::Relaxed);
+        if r0 == 0 && r1 == self.n() {
+            return super::engine::poly_cross_cpu_f32(
+                &self.x, &self.x, self.gamma, self.coef0, self.degree,
+            );
+        }
+        let xr = self.x.block(r0, r1, 0, self.x.cols());
+        super::engine::poly_cross_cpu_f32(&xr, &self.x, self.gamma, self.coef0, self.degree)
     }
 
     fn entries_observed(&self) -> u64 {
@@ -396,6 +464,49 @@ mod tests {
         let err = a.rel_fro_error(&k);
         assert!(err < 0.05, "err={err}");
         assert!(a.entries_observed < 60 * 60);
+    }
+
+    #[test]
+    fn f32_tiles_match_f64_and_count_entries() {
+        let mut rng = crate::util::Rng::new(5);
+        let x = Arc::new(Matrix::randn(18, 3, &mut rng));
+        let cols = [0usize, 4, 9, 17];
+        for oracle in [
+            Box::new(RbfOracle::cpu(Arc::clone(&x), 0.6)) as Box<dyn KernelOracle>,
+            Box::new(PolyOracle::cpu(Arc::clone(&x), 0.4, 1.0, 2.0)),
+        ] {
+            oracle.reset_entries();
+            let narrow = oracle.row_block_f32(2, 11, &cols);
+            assert_eq!(oracle.entries_observed(), 9 * 4);
+            let wide = oracle.row_block(2, 11, &cols);
+            for i in 0..9 {
+                for j in 0..4 {
+                    assert!((wide[(i, j)] - narrow.row(i)[j] as f64).abs() < 1e-4);
+                }
+            }
+            // typed dispatch agrees with the direct calls
+            match oracle.row_block_elem(2, 11, &cols, Precision::F32) {
+                Tile::F32(t) => assert_eq!(t.data(), narrow.data()),
+                Tile::F64(_) => panic!("wrong width"),
+            }
+            let whole = oracle.full_rows_f32(0, 18);
+            assert_eq!((whole.rows(), whole.cols()), (18, 18));
+            // symmetric whole-gram path
+            for i in 0..18 {
+                for j in 0..18 {
+                    assert_eq!(whole.row(i)[j].to_bits(), whole.row(j)[i].to_bits());
+                }
+            }
+        }
+        // DenseOracle exercises the default demote path
+        let d = DenseOracle::new(toy_kernel());
+        let narrow = d.row_block_f32(0, 5, &[1, 3]);
+        let wide = d.row_block(0, 5, &[1, 3]);
+        for i in 0..5 {
+            for j in 0..2 {
+                assert_eq!(narrow.row(i)[j], wide[(i, j)] as f32);
+            }
+        }
     }
 
     #[test]

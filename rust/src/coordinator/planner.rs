@@ -20,7 +20,10 @@
 use crate::exec::{DegradeAction, DegradeInfo, ExecPolicy};
 use crate::obs::{self, Stage};
 use crate::sketch::SketchKind;
-use crate::stream::{panel_bytes, StreamConfig, DEFAULT_QUEUE_DEPTH, DEFAULT_RESIDENT_TILE_ROWS};
+use crate::stream::{
+    panel_bytes, panel_bytes_prec, Precision, StreamConfig, DEFAULT_QUEUE_DEPTH,
+    DEFAULT_RESIDENT_TILE_ROWS,
+};
 
 /// Which model to run. Lives here (with the entry/peak/flop models that
 /// price it) so that both the serving layer and the [`exec`](crate::exec)
@@ -158,18 +161,38 @@ pub fn predicted_peak_bytes(
     method: &MethodSpec,
     tile_rows: Option<usize>,
 ) -> u64 {
+    predicted_peak_bytes_prec(n, c, s, method, tile_rows, Precision::F64)
+}
+
+/// [`predicted_peak_bytes`] at an explicit tile element width: the
+/// streamed **live-tile** term is charged at `prec` (that is the memory
+/// f32 tiles actually halve), while outputs, solves, and sketch state stay
+/// at [`ENTRY_BYTES`] — folds accumulate into f64 no matter the tile type,
+/// and the collected `C`/`U` panels are promoted f64.
+pub fn predicted_peak_bytes_prec(
+    n: usize,
+    c: usize,
+    s: usize,
+    method: &MethodSpec,
+    tile_rows: Option<usize>,
+    prec: Precision,
+) -> u64 {
     let (n, c, s) = (n as u64, c as u64, s as u64);
     let t = tile_rows.map(|t| t as u64);
+    let tile_bytes = prec.bytes() as u64;
     match method {
         MethodSpec::Nystrom => {
             let base = n * c + 2 * c * c;
-            ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * c))
+            ENTRY_BYTES * base + tile_bytes * t.map_or(0, |t| live_tiles() * t * c)
         }
         MethodSpec::Prototype => match t {
-            // C + K + C† + U
+            // C + K + C† + U (the materialized whole tile is always f64 —
+            // the bit-compat reference path has no narrow plane)
             None => ENTRY_BYTES * (n * n + 2 * n * c + c * c),
             // C + C† + U + live tiles of K rows
-            Some(t) => ENTRY_BYTES * (2 * n * c + c * c + live_tiles() * t * n),
+            Some(t) => {
+                ENTRY_BYTES * (2 * n * c + c * c) + tile_bytes * live_tiles() * t * n
+            }
         },
         MethodSpec::Fast { kind, .. } => {
             // column-selection accounting (what the planner emits):
@@ -180,7 +203,7 @@ pub fn predicted_peak_bytes(
             // beyond the C output itself.
             let lev = if matches!(kind, SketchKind::Leverage { .. }) { 2 * c * c } else { 0 };
             let base = n * c + 2 * s * c + s * s + c * c + lev;
-            ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * c))
+            ENTRY_BYTES * base + tile_bytes * t.map_or(0, |t| live_tiles() * t * c)
         }
         MethodSpec::Cur { r, .. } => {
             // Served CUR works on the materialized square kernel:
@@ -191,7 +214,7 @@ pub fn predicted_peak_bytes(
             // matrix — so tiling only adds its live row tiles on top.
             let r = *r as u64;
             let base = n * n + n * c + r * n + s * s + s * (c + r) + c * r;
-            ENTRY_BYTES * (base + t.map_or(0, |t| live_tiles() * t * n))
+            ENTRY_BYTES * base + tile_bytes * t.map_or(0, |t| live_tiles() * t * n)
         }
     }
 }
@@ -212,7 +235,8 @@ pub fn predicted_policy_peak_bytes(
     policy: &ExecPolicy,
 ) -> u64 {
     let s = method_s(method, c);
-    let base = predicted_peak_bytes(n, c, s, method, policy.planned_tile_rows(n));
+    let prec = policy.precision();
+    let base = predicted_peak_bytes_prec(n, c, s, method, policy.planned_tile_rows(n), prec);
     // Only methods that actually route through the residency layer get the
     // cache term — the full-K streamers (prototype, projection-sketch
     // fast) strip a Resident policy down to plain streaming, so charging
@@ -221,10 +245,14 @@ pub fn predicted_policy_peak_bytes(
     // column panel for Nyström / selection-sketch fast, but the full
     // `n x n` kernel for served CUR (its tiles are rows of the
     // materialized K).
+    // Cached tiles live at the policy's element width, so the cap halves
+    // with the rest of the tile plane under an f32 policy.
     let cache_panel = match method {
-        MethodSpec::Nystrom => Some(panel_bytes(n, c)),
-        MethodSpec::Fast { kind, .. } if kind.is_column_selection() => Some(panel_bytes(n, c)),
-        MethodSpec::Cur { .. } => Some(panel_bytes(n, n)),
+        MethodSpec::Nystrom => Some(panel_bytes_prec(n, c, prec)),
+        MethodSpec::Fast { kind, .. } if kind.is_column_selection() => {
+            Some(panel_bytes_prec(n, c, prec))
+        }
+        MethodSpec::Cur { .. } => Some(panel_bytes_prec(n, n, prec)),
         _ => None,
     };
     match (policy, cache_panel) {
@@ -258,10 +286,24 @@ pub fn predicted_implicit_peak_bytes(
     tile_rows: usize,
     cache_budget: u64,
 ) -> u64 {
+    predicted_implicit_peak_bytes_prec(n, c, tile_rows, cache_budget, Precision::F64)
+}
+
+/// [`predicted_implicit_peak_bytes`] at an explicit tile element width:
+/// live tiles and the cached panel are charged at `prec`, the `O(c²)`
+/// fold/Woodbury state stays f64 (it is accumulated at full width whatever
+/// the tiles are).
+pub fn predicted_implicit_peak_bytes_prec(
+    n: usize,
+    c: usize,
+    tile_rows: usize,
+    cache_budget: u64,
+    prec: Precision,
+) -> u64 {
     let (c64, t) = (c as u64, tile_rows.max(1) as u64);
-    let live = ENTRY_BYTES * live_tiles() * t * c64;
+    let live = (prec.bytes() as u64) * live_tiles() * t * c64;
     let state = ENTRY_BYTES * 2 * c64 * c64;
-    live + state + panel_bytes(n, c).min(cache_budget)
+    live + state + panel_bytes_prec(n, c, prec).min(cache_budget)
 }
 
 /// How an implicit op should split a memory budget between the pipeline's
@@ -295,6 +337,7 @@ impl ResidencySplit {
             spill: self.spill,
             tile_rows: Some(self.tile_rows),
             spill_dir: None,
+            precision: Precision::F64,
         }
     }
 }
@@ -539,6 +582,22 @@ pub fn degrade_ladder(
         }
     }
 
+    // Rung: lower the tile element width f64 → f32 — halves the live-tile
+    // and cached-panel terms at a tile-rounding accuracy cost (≈1e-7
+    // relative, far below the sampling error), so it sits before any
+    // sketch shrink. Skipped when the policy is already narrow or is
+    // Materialized (whose whole-matrix path has no tile plane to narrow).
+    if pol.precision() == Precision::F64 && !matches!(pol, ExecPolicy::Materialized) {
+        let narrow = pol.clone().with_precision(Precision::F32);
+        let p2 = predicted_policy_peak_bytes(n, cc, &m, &narrow);
+        if p2 < predicted {
+            pol = narrow;
+            predicted = p2;
+            actions.push(DegradeAction::PrecisionLowered);
+            push(&mut rungs, m, cc, &pol, predicted, &actions);
+        }
+    }
+
     // Rungs: halve the sketch sizes toward the rank floor.
     let floor = (k + 1).clamp(2, cc.max(2));
     loop {
@@ -570,12 +629,15 @@ fn tightened_policy(n: usize, method: &MethodSpec, policy: &ExecPolicy) -> Optio
         }
         // A resident cache budget is pure working-set headroom; dropping
         // it to 0 keeps results bit-identical (spill still dedups reads).
-        (_, ExecPolicy::Resident { budget, spill, tile_rows, spill_dir }) if *budget > 0 => {
+        (_, ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision })
+            if *budget > 0 =>
+        {
             Some(ExecPolicy::Resident {
                 budget: 0,
                 spill: *spill,
                 tile_rows: *tile_rows,
                 spill_dir: spill_dir.clone(),
+                precision: *precision,
             })
         }
         // Streamed column gathers pay live-tile bytes on top of the panel
@@ -964,15 +1026,107 @@ mod tests {
     fn residency_split_exports_its_policy() {
         let s = plan_residency(100_000, 32, 4 << 20);
         match s.policy() {
-            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir } => {
+            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision } => {
                 assert_eq!(budget, s.cache_budget);
                 assert_eq!(spill, s.spill);
                 assert_eq!(tile_rows, Some(s.tile_rows));
                 assert!(spill_dir.is_none());
+                assert_eq!(precision, Precision::F64, "splits default to the wide plane");
             }
             other => panic!("expected a resident policy, got {other:?}"),
         }
         assert_eq!(default_policy(), ExecPolicy::Materialized);
+    }
+
+    #[test]
+    fn f32_halves_the_live_tile_and_cache_terms() {
+        let (n, c) = (50_000usize, 40usize);
+        let m = MethodSpec::Nystrom;
+        // the streamed live-tile term halves; the f64 base does not move
+        let base = predicted_peak_bytes_prec(n, c, c, &m, None, Precision::F32);
+        assert_eq!(base, predicted_peak_bytes(n, c, c, &m, None), "no tiles, no change");
+        let wide = predicted_peak_bytes(n, c, c, &m, Some(64));
+        let narrow = predicted_peak_bytes_prec(n, c, c, &m, Some(64), Precision::F32);
+        let wide_tiles = wide - base;
+        assert_eq!(narrow - base, wide_tiles / 2, "tile term halves exactly");
+
+        // the policy-level model agrees through the precision knob…
+        let st32 = ExecPolicy::streamed(64).with_precision(Precision::F32);
+        assert_eq!(predicted_policy_peak_bytes(n, c, &m, &st32), narrow);
+        // …and an f32 resident cache caps at the halved panel
+        let res = |p: Precision| {
+            predicted_policy_peak_bytes(
+                n,
+                c,
+                &m,
+                &ExecPolicy::resident(u64::MAX).with_tile_rows(64).with_precision(p),
+            )
+        };
+        let cap64 = res(Precision::F64)
+            - predicted_policy_peak_bytes(
+                n,
+                c,
+                &m,
+                &ExecPolicy::resident(0).with_tile_rows(64),
+            );
+        assert_eq!(cap64, panel_bytes(n, c));
+        let cap32 = res(Precision::F32)
+            - predicted_policy_peak_bytes(
+                n,
+                c,
+                &m,
+                &ExecPolicy::resident(0).with_tile_rows(64).with_precision(Precision::F32),
+            );
+        assert_eq!(cap32, panel_bytes_prec(n, c, Precision::F32));
+        assert_eq!(cap32 * 2, cap64);
+
+        // implicit ops: same halving for live tiles + cached panel
+        let imp64 = predicted_implicit_peak_bytes(n, c, 256, u64::MAX);
+        let imp32 =
+            predicted_implicit_peak_bytes_prec(n, c, 256, u64::MAX, Precision::F32);
+        let state = ENTRY_BYTES * 2 * (c as u64) * (c as u64);
+        assert_eq!(imp32 - state, (imp64 - state) / 2);
+    }
+
+    #[test]
+    fn degrade_ladder_lowers_precision_before_shrinking_sketches() {
+        // Resident policy, uniform fast: no sampling rung applies, so the
+        // first accuracy-costing rung must be the precision drop — before
+        // any SketchShrunk — and it must narrow the policy it carries.
+        let (n, k) = (50_000usize, 5usize);
+        let m = MethodSpec::Fast { s: 256, kind: SketchKind::Uniform };
+        let pol = ExecPolicy::resident(0).with_tile_rows(64);
+        let ladder = degrade_ladder(n, k, &m, 64, &pol);
+        assert!(!ladder.is_empty());
+        let prec_rung = ladder
+            .iter()
+            .find(|s| s.info.actions.contains(&DegradeAction::PrecisionLowered))
+            .expect("an f64 tiled policy must offer a precision rung");
+        assert_eq!(
+            prec_rung.info.actions.last(),
+            Some(&DegradeAction::PrecisionLowered),
+            "precision drop precedes every sketch shrink"
+        );
+        assert!(!prec_rung.info.actions.contains(&DegradeAction::SketchShrunk));
+        assert_eq!(prec_rung.policy.precision(), Precision::F32);
+        assert_eq!(prec_rung.c, 64, "precision rung keeps the requested c");
+        // later rungs keep the narrowed policy
+        let last = ladder.last().unwrap();
+        assert_eq!(last.policy.precision(), Precision::F32);
+        assert!(last.info.actions.contains(&DegradeAction::SketchShrunk));
+
+        // an already-narrow policy gets no second precision rung
+        let ladder32 =
+            degrade_ladder(n, k, &m, 64, &pol.clone().with_precision(Precision::F32));
+        assert!(ladder32
+            .iter()
+            .all(|s| !s.info.actions.contains(&DegradeAction::PrecisionLowered)));
+
+        // Materialized never narrows (it is the f64 reference path)
+        let mat = degrade_ladder(n, k, &MethodSpec::Nystrom, 64, &ExecPolicy::Materialized);
+        assert!(mat
+            .iter()
+            .all(|s| !s.info.actions.contains(&DegradeAction::PrecisionLowered)));
     }
 
     #[test]

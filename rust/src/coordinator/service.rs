@@ -51,6 +51,7 @@ use crate::linalg::svd_thin;
 use crate::obs::{self, sink, Stage, StageProfile};
 use crate::pool::ThreadPool;
 use crate::spsd::{self, FastConfig, LeverageBasis};
+use crate::stream::Precision;
 use crate::util::Rng;
 use std::cell::Cell;
 use std::collections::VecDeque;
@@ -79,6 +80,12 @@ pub struct ApproxRequest {
     /// [`Resident`](ExecPolicy::Resident) policies inherit the service's
     /// spill directory unless they pin their own.
     pub policy: Option<ExecPolicy>,
+    /// Element width the build streams its tiles at. The default `F64` is
+    /// bit-compatible with every pre-precision client; `F32` halves the
+    /// streamed/spilled tile bytes (outputs, solves, and fold state stay
+    /// f64). Applied on top of `policy` — a policy that already narrowed
+    /// itself via [`ExecPolicy::with_precision`] is left alone.
+    pub precision: Precision,
     /// How long this request may wait in the admission queue before the
     /// reaper expires it (`None` = [`ServiceConfig::default_deadline`]).
     pub deadline: Option<Duration>,
@@ -135,6 +142,12 @@ pub struct ApproxResponse {
     /// Which rung of the degrade ladder served this request (`None` =
     /// served exactly as asked). Also present in `meta.degraded`.
     pub degraded: Option<DegradeInfo>,
+    /// Element width the build actually streamed at (mirrors
+    /// `meta.precision`; `F64` on unserved requests). Differs from the
+    /// requested width only when the degrade ladder lowered it — which
+    /// `degraded` then records as
+    /// [`DegradeAction::PrecisionLowered`](crate::exec::DegradeAction::PrecisionLowered).
+    pub precision: Precision,
     /// Seconds this request waited in the admission queue before a
     /// worker picked it up (0 for requests never dispatched).
     pub queue_wait_secs: f64,
@@ -320,6 +333,9 @@ impl ApproxService {
             if spill_dir.is_none() {
                 *spill_dir = s.spill_dir.clone();
             }
+        }
+        if req.precision == Precision::F32 {
+            policy = policy.with_precision(Precision::F32);
         }
         let predicted = planner::predicted_policy_peak_bytes(n, c, &req.method, &policy);
         let rung0 =
@@ -515,6 +531,7 @@ fn error_response(id: u64, method: String, error: ServiceError) -> ApproxRespons
         total_secs: 0.0,
         meta: None,
         degraded: None,
+        precision: Precision::F64,
         queue_wait_secs: 0.0,
         ladder_secs: 0.0,
         error: Some(error),
@@ -738,6 +755,7 @@ fn run_request(
     meta.compute_secs = t0.elapsed().as_secs_f64();
     meta.predicted_peak_bytes = Some(serve.predicted);
     meta.degraded = serve.degraded.clone();
+    let precision = meta.precision;
     Ok(ApproxResponse {
         id: req.id,
         method: serve.method.name(),
@@ -746,6 +764,7 @@ fn run_request(
         total_secs: submitted.elapsed().as_secs_f64(),
         meta: Some(meta),
         degraded: serve.degraded.clone(),
+        precision,
         queue_wait_secs: 0.0, // filled by dispatch, which owns the clock
         ladder_secs: 0.0,
         error: None,
@@ -771,7 +790,16 @@ mod tests {
     }
 
     fn req(id: u64, method: MethodSpec, seed: u64, policy: Option<ExecPolicy>) -> ApproxRequest {
-        ApproxRequest { id, method, c: 8, k: 3, seed, policy, deadline: None }
+        ApproxRequest {
+            id,
+            method,
+            c: 8,
+            k: 3,
+            seed,
+            policy,
+            precision: Precision::F64,
+            deadline: None,
+        }
     }
 
     fn entries_of(r: &ApproxResponse) -> u64 {
@@ -1050,5 +1078,45 @@ mod tests {
         assert_eq!(m.degraded.get(), 1);
         assert_eq!(m.completed.get(), 1);
         assert_eq!(m.mem_in_use.get(), 0);
+    }
+
+    #[test]
+    fn ladder_lowers_precision_visibly_when_that_is_what_fits() {
+        use crate::exec::DegradeAction;
+        let n = 80;
+        let m = MethodSpec::Fast { s: 24, kind: SketchKind::Uniform };
+        let policy = ExecPolicy::resident(0).with_tile_rows(13);
+        // Cap = exactly the ladder's f32 rung: rung 0 as asked and every
+        // rung before the precision one are strictly larger, so admission
+        // walks down to the narrowed policy and serves it — synchronously,
+        // and the trade is recorded, never silent.
+        let ladder = planner::degrade_ladder(n, 3, &m, 8, &policy);
+        let rung = ladder
+            .iter()
+            .find(|d| d.info.actions.last() == Some(&DegradeAction::PrecisionLowered))
+            .expect("resident ladder must carry a precision rung");
+        let svc = service_cfg(
+            n,
+            ServiceConfig { memory_cap: Some(rung.predicted_peak_bytes), ..Default::default() },
+        );
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(11, m, 5, Some(policy)), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let info = r.degraded.as_ref().expect("precision trade must be visible");
+        assert!(
+            info.actions.contains(&DegradeAction::PrecisionLowered),
+            "actions: {:?}",
+            info.actions
+        );
+        assert_eq!(r.precision, Precision::F32, "response surfaces the served width");
+        let meta = r.meta.as_ref().unwrap();
+        assert_eq!(meta.precision, Precision::F32);
+        assert_eq!(r.eigvals.len(), 3);
+        let metrics = svc.metrics();
+        assert_eq!(metrics.degraded.get(), 1);
+        assert_eq!(metrics.completed.get(), 1);
+        assert_eq!(metrics.mem_in_use.get(), 0);
     }
 }

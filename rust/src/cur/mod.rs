@@ -17,7 +17,7 @@ use crate::linalg::{pinv, Matrix};
 use crate::obs::{self, Stage};
 use crate::sketch::{self, SketchKind};
 use crate::stream::{
-    run_pipeline, ColSubsetCollect, MatrixSource, ResidencyConfig, ResidencyStats,
+    run_pipeline_prec, ColSubsetCollect, MatrixSource, ResidencyConfig, ResidencyStats,
     ResidentSource, RowGather, StreamConfig,
 };
 use crate::util::{Rng, Stopwatch};
@@ -226,10 +226,11 @@ pub(crate) fn run_cur_fast(
                         &dummy, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng,
                     );
                     let mut core_gather = RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
-                    run_pipeline(
+                    run_pipeline_prec(
                         source,
                         t,
                         stream_cfg.queue_depth,
+                        stream_cfg.precision,
                         &mut [&mut c_collect, &mut r_gather, &mut core_gather],
                     );
                     (
@@ -250,10 +251,11 @@ pub(crate) fn run_cur_fast(
                     // overhead); with residency pass 2 reloads tiles from
                     // the LRU/arena — the backing store is never consulted
                     // again.
-                    run_pipeline(
+                    run_pipeline_prec(
                         source,
                         t,
                         stream_cfg.queue_depth,
+                        stream_cfg.precision,
                         &mut [&mut c_collect, &mut r_gather],
                     );
                     let c = c_collect.into_matrix();
@@ -269,10 +271,11 @@ pub(crate) fn run_cur_fast(
                         Some(res) => {
                             let mut core_gather =
                                 RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
-                            run_pipeline(
+                            run_pipeline_prec(
                                 res,
                                 t,
                                 stream_cfg.queue_depth,
+                                stream_cfg.precision,
                                 &mut [&mut core_gather],
                             );
                             core_gather.into_matrix()

@@ -90,6 +90,7 @@ impl Scope {
         entries: Option<u64>,
         residency: Option<stream::ResidencyStats>,
         predicted_peak_bytes: Option<u64>,
+        precision: stream::Precision,
     ) -> RunMeta {
         let actual = alloc::installed().then(|| self.gauge.peak_extra_bytes() as u64);
         let compute_secs = self.sw.secs();
@@ -112,6 +113,7 @@ impl Scope {
             predicted_peak_bytes,
             actual_peak_bytes: actual,
             degraded: None,
+            precision,
             stage_profile,
         }
     }
@@ -132,7 +134,7 @@ pub fn nystrom(
     let predicted =
         planner::predicted_policy_peak_bytes(n, p_idx.len(), &MethodSpec::Nystrom, policy);
     let entries = Some(approx.entries_observed);
-    RunReport { result: approx, meta: scope.finish(entries, stats, Some(predicted)) }
+    RunReport { result: approx, meta: scope.finish(entries, stats, Some(predicted), policy.precision()) }
 }
 
 /// The prototype model (`U* = C† K (C†)ᵀ`, paper eq. 2) under `policy`.
@@ -153,7 +155,7 @@ pub fn prototype(
     let predicted =
         planner::predicted_policy_peak_bytes(n, p_idx.len(), &MethodSpec::Prototype, policy);
     let entries = Some(approx.entries_observed);
-    RunReport { result: approx, meta: scope.finish(entries, None, Some(predicted)) }
+    RunReport { result: approx, meta: scope.finish(entries, None, Some(predicted), policy.precision()) }
 }
 
 /// The fast SPSD model (paper Algorithm 1) under `policy`.
@@ -178,7 +180,7 @@ pub fn fast(
     let method = MethodSpec::Fast { s: cfg.s, kind: cfg.kind };
     let predicted = planner::predicted_policy_peak_bytes(n, p_idx.len(), &method, policy);
     let entries = Some(approx.entries_observed);
-    RunReport { result: approx, meta: scope.finish(entries, stats, Some(predicted)) }
+    RunReport { result: approx, meta: scope.finish(entries, stats, Some(predicted), policy.precision()) }
 }
 
 /// Fast CUR (`Ũ = (S_Cᵀ C)† (S_Cᵀ A S_R) (R S_R)†`, paper eq. 9) under
@@ -205,7 +207,7 @@ pub fn cur_fast(
     let (decomp, stats) =
         cur::run_cur_fast(a, col_idx, row_idx, cfg, stream_cfg, rc.as_ref(), rng);
     let entries = Some(decomp.entries_for_u);
-    RunReport { result: decomp, meta: scope.finish(entries, stats, None) }
+    RunReport { result: decomp, meta: scope.finish(entries, stats, None, policy.precision()) }
 }
 
 /// Top-k eigenpairs (descending) of the implicit `C U Cᵀ` via Lanczos
@@ -226,7 +228,7 @@ pub fn top_k_eigs(
     let rc = policy.residency_config();
     let (result, stats) = stream::implicit::run_top_k_eigs(src, u, k, seed, cfg, rc.as_ref());
     let predicted = implicit_predicted(src, cfg, policy);
-    RunReport { result, meta: scope.finish(None, stats, Some(predicted)) }
+    RunReport { result, meta: scope.finish(None, stats, Some(predicted), policy.precision()) }
 }
 
 /// Solve `(C U Cᵀ + alpha I) w = y` against the implicit approximation
@@ -245,7 +247,7 @@ pub fn solve_regularized(
     let (result, stats) =
         stream::implicit::run_solve_regularized(src, u, alpha, y, cfg, rc.as_ref());
     let predicted = implicit_predicted(src, cfg, policy);
-    RunReport { result, meta: scope.finish(None, stats, Some(predicted)) }
+    RunReport { result, meta: scope.finish(None, stats, Some(predicted), policy.precision()) }
 }
 
 fn implicit_predicted(
@@ -254,10 +256,11 @@ fn implicit_predicted(
     policy: &ExecPolicy,
 ) -> u64 {
     let n = src.rows();
-    planner::predicted_implicit_peak_bytes(
+    planner::predicted_implicit_peak_bytes_prec(
         n,
         src.cols(),
         cfg.effective_tile_rows(n),
         policy.cache_budget(),
+        policy.precision(),
     )
 }

@@ -5,7 +5,7 @@
 
 use crate::obs::StageProfile;
 use crate::stream::{
-    ResidencyConfig, ResidencyStats, StreamConfig, DEFAULT_RESIDENT_TILE_ROWS,
+    Precision, ResidencyConfig, ResidencyStats, StreamConfig, DEFAULT_RESIDENT_TILE_ROWS,
 };
 use std::path::PathBuf;
 
@@ -50,6 +50,9 @@ pub enum ExecPolicy {
         /// Directory for the spill arena (`None` = the system temp dir).
         /// Ignored unless `spill` is set.
         spill_dir: Option<PathBuf>,
+        /// Element width tiles are computed, cached, and spilled at
+        /// (`F32` halves cache/spill bytes; folds still accumulate f64).
+        precision: Precision,
     },
 }
 
@@ -62,14 +65,26 @@ impl ExecPolicy {
     /// Residency with a RAM budget and disk spill (one source read per
     /// tile at any budget, including 0).
     pub fn resident(budget: u64) -> Self {
-        ExecPolicy::Resident { budget, spill: true, tile_rows: None, spill_dir: None }
+        ExecPolicy::Resident {
+            budget,
+            spill: true,
+            tile_rows: None,
+            spill_dir: None,
+            precision: Precision::F64,
+        }
     }
 
     /// RAM-only residency: the budget-gated cached-panel mode the old
     /// `*_budgeted` entry points implemented (no arena; evicted tiles are
     /// recomputed, a zero budget reproduces plain re-streaming exactly).
     pub fn ram_cached(budget: u64) -> Self {
-        ExecPolicy::Resident { budget, spill: false, tile_rows: None, spill_dir: None }
+        ExecPolicy::Resident {
+            budget,
+            spill: false,
+            tile_rows: None,
+            spill_dir: None,
+            precision: Precision::F64,
+        }
     }
 
     /// Pin the tile height of a [`Resident`](ExecPolicy::Resident) policy
@@ -91,13 +106,38 @@ impl ExecPolicy {
         self
     }
 
+    /// Pick the tile element width. Takes effect on the
+    /// [`Streamed`](ExecPolicy::Streamed) and
+    /// [`Resident`](ExecPolicy::Resident) variants; a deliberate no-op on
+    /// [`Materialized`](ExecPolicy::Materialized), whose whole-matrix path
+    /// is the f64 bit-compat reference and has no tile plane to narrow.
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        match &mut self {
+            ExecPolicy::Materialized => {}
+            ExecPolicy::Streamed(cfg) => cfg.precision = p,
+            ExecPolicy::Resident { precision, .. } => *precision = p,
+        }
+        self
+    }
+
+    /// The tile element width this policy runs at ([`Precision::F64`] for
+    /// [`Materialized`](ExecPolicy::Materialized)).
+    pub fn precision(&self) -> Precision {
+        match self {
+            ExecPolicy::Materialized => Precision::F64,
+            ExecPolicy::Streamed(cfg) => cfg.precision,
+            ExecPolicy::Resident { precision, .. } => *precision,
+        }
+    }
+
     /// The pipeline configuration this policy runs with.
     pub(crate) fn stream_config(&self) -> StreamConfig {
         match self {
             ExecPolicy::Materialized => StreamConfig::whole(),
             ExecPolicy::Streamed(cfg) => *cfg,
-            ExecPolicy::Resident { tile_rows, .. } => {
+            ExecPolicy::Resident { tile_rows, precision, .. } => {
                 StreamConfig::tiled(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS))
+                    .with_precision(*precision)
             }
         }
     }
@@ -108,13 +148,14 @@ impl ExecPolicy {
     /// align with cached tiles.
     pub(crate) fn residency_config(&self) -> Option<ResidencyConfig> {
         match self {
-            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir } => {
+            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision } => {
                 let mut rc = if *spill {
                     ResidencyConfig::new(*budget)
                 } else {
                     ResidencyConfig::ram_only(*budget)
                 }
-                .with_tile_rows(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS));
+                .with_tile_rows(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS))
+                .with_precision(*precision);
                 if *spill {
                     if let Some(dir) = spill_dir {
                         rc = rc.with_spill_dir(dir.clone());
@@ -169,6 +210,11 @@ pub enum DegradeAction {
     /// Leverage-score sampling relaxed to uniform (drops the score state
     /// and the extra pass; weaker but still bounded error).
     SamplingRelaxed,
+    /// Tile element width lowered f64 → f32: tile, live-tile, and
+    /// panel-cache bytes halve while folds keep f64 accumulators. Costs
+    /// only tile rounding (≈1e-7 relative), far below the sampling error —
+    /// which is why it sits before the sketch shrink rungs.
+    PrecisionLowered,
     /// Sketch sizes halved toward the rank floor (`c`, and `s`/`r` where
     /// the method has them).
     SketchShrunk,
@@ -219,6 +265,9 @@ pub struct RunMeta {
     /// exactly as requested). Set by the service admission path; the bare
     /// `exec` entry points always run what they are handed.
     pub degraded: Option<DegradeInfo>,
+    /// Tile element width the run executed at (the policy's
+    /// [`ExecPolicy::precision`]; [`Precision::F64`] unless narrowed).
+    pub precision: Precision,
     /// Per-stage span aggregates for this run, when the span recorder is
     /// installed ([`obs::ensure_installed`](crate::obs::ensure_installed));
     /// `None` with the recorder disabled — tracing off means no bit of the
@@ -277,5 +326,26 @@ mod tests {
         // spill_dir must not silently enable spill on a ram-only policy
         let ram = ExecPolicy::ram_cached(0).with_spill_dir("/tmp");
         assert!(!ram.residency_config().unwrap().spill);
+    }
+
+    #[test]
+    fn precision_threads_through_policy_resolution() {
+        // default everywhere is f64
+        assert_eq!(ExecPolicy::Materialized.precision(), Precision::F64);
+        assert_eq!(ExecPolicy::streamed(64).precision(), Precision::F64);
+        assert_eq!(ExecPolicy::resident(1 << 20).precision(), Precision::F64);
+
+        let st = ExecPolicy::streamed(64).with_precision(Precision::F32);
+        assert_eq!(st.precision(), Precision::F32);
+        assert_eq!(st.stream_config().precision, Precision::F32);
+
+        let r = ExecPolicy::resident(1 << 20).with_precision(Precision::F32);
+        assert_eq!(r.precision(), Precision::F32);
+        assert_eq!(r.stream_config().precision, Precision::F32);
+        assert_eq!(r.residency_config().unwrap().precision, Precision::F32);
+
+        // Materialized is the f64 reference path: narrowing is a no-op
+        let m = ExecPolicy::Materialized.with_precision(Precision::F32);
+        assert_eq!(m.precision(), Precision::F64);
     }
 }

@@ -66,6 +66,7 @@ pub fn run(ctx: &Ctx, args: &Args) {
                 k: 5,
                 seed: ctx.seed + i as u64,
                 policy,
+                precision: crate::stream::Precision::F64,
                 deadline: None,
             },
             tx.clone(),

@@ -30,7 +30,15 @@
 //!   ~2x fewer FLOPs for Gram-shaped products (`A A^T`, `A^T A`,
 //!   `C† K (C†)^T`, ...).
 
-use super::Matrix;
+//! **Mixed precision.** The f32 tile plane ([`gemm_nt_map_f32`] /
+//! [`syrk_nt_map_f32`]) packs narrow panels and accumulates in f64. Every
+//! `f32 -> f64` conversion is exact and each f32×f32 product fits a 48-bit
+//! mantissa (≤ the 53 f64 carries), so a fused multiply-add performs the
+//! same single rounding as mul-then-add — the AVX2/NEON kernels are
+//! bit-identical to the scalar fallback, and runtime feature detection
+//! cannot change results.
+
+use super::{Matrix, MatrixF32};
 use crate::pool;
 use std::cell::Cell;
 
@@ -47,6 +55,9 @@ const KC: usize = 256;
 const IB: usize = 8;
 /// Extra f64 slots reserved so pack panels can start 64-byte aligned.
 const ALIGN_F64: usize = 8;
+/// Extra f32 slots for the same 64-byte alignment (half the element width,
+/// twice the element slack).
+const ALIGN_F32: usize = 16;
 
 // ------------------------------------------------------------- public API
 
@@ -164,32 +175,66 @@ pub fn symm_nt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
+// ---------------------------------------------------------- f32 tile API
+
+/// `C[i, j] = epi(i, j, (A B^T)[i, j]) as f32` over f32 panels with f64
+/// accumulation — the narrow-tile twin of [`gemm_nt_map`]. Operands are
+/// demoted once at pack time; the dot product reaching `epi` is the exact
+/// f64 sum of the rounded f32 factors, so the only f32 rounding on the
+/// whole path is one per input element and one per output element.
+pub fn gemm_nt_map_f32<E>(a: &Matrix, b: &Matrix, epi: &E) -> MatrixF32
+where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    assert_eq!(a.cols(), b.cols(), "gemm_nt dims");
+    let (m, n) = (a.rows(), b.rows());
+    let mut c = MatrixF32::zeros(m, n);
+    gemm_driver_f32(a, b, c.data_mut(), m, n, usize::MAX, epi);
+    c
+}
+
+/// `C[i, j] = epi(i, j, (A A^T)[i, j]) as f32` over the upper triangle,
+/// mirrored — the narrow-tile twin of [`syrk_nt_map`]. `epi` must be
+/// symmetric in (i, j).
+pub fn syrk_nt_map_f32<E>(a: &Matrix, epi: &E) -> MatrixF32
+where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let mut c = MatrixF32::zeros(a.rows(), a.rows());
+    symm_driver_f32(a, a, &mut c, usize::MAX, epi);
+    c
+}
+
 // -------------------------------------------------------- pack workspaces
 
 thread_local! {
     // Grow-only pack buffers: one A panel per executing thread, one B panel
-    // per calling thread. Taken/put back around each use so nested calls
-    // degrade to a fresh allocation instead of aliasing.
+    // per calling thread, one pair per element width. Taken/put back around
+    // each use so nested calls degrade to a fresh allocation instead of
+    // aliasing.
     static A_PACK: Cell<Vec<f64>> = const { Cell::new(Vec::new()) };
     static B_PACK: Cell<Vec<f64>> = const { Cell::new(Vec::new()) };
+    static A_PACK_F32: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+    static B_PACK_F32: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
 }
 
-/// Largest workspace kept cached per thread slot (f64 elements, 32 MiB).
-/// Bigger panels are freed after use so one huge product doesn't pin its
-/// high-water footprint for the life of the process.
-const MAX_CACHED_WORKSPACE: usize = 1 << 22;
+/// Largest workspace kept cached per thread slot, in **bytes** so the cap
+/// means the same footprint at every element width (4M f64 or 8M f32
+/// elements). Bigger panels are freed after use so one huge product
+/// doesn't pin its high-water footprint for the life of the process.
+const MAX_CACHED_WORKSPACE_BYTES: usize = 32 << 20;
 
-fn with_buf<R>(
-    slot: &'static std::thread::LocalKey<Cell<Vec<f64>>>,
+fn with_buf<T: Copy + Default, R>(
+    slot: &'static std::thread::LocalKey<Cell<Vec<T>>>,
     len: usize,
-    f: impl FnOnce(&mut [f64]) -> R,
+    f: impl FnOnce(&mut [T]) -> R,
 ) -> R {
     let mut buf = slot.with(|c| c.take());
     if buf.len() < len {
-        buf.resize(len, 0.0);
+        buf.resize(len, T::default());
     }
     let r = f(&mut buf[..len]);
-    if buf.len() > MAX_CACHED_WORKSPACE {
+    if std::mem::size_of_val(buf.as_slice()) > MAX_CACHED_WORKSPACE_BYTES {
         buf = Vec::new();
     }
     slot.with(|c| c.set(buf));
@@ -197,8 +242,8 @@ fn with_buf<R>(
 }
 
 /// First 64-byte-aligned window of `len` elements inside `buf`
-/// (`buf.len() >= len + ALIGN_F64`).
-fn align64(buf: &mut [f64], len: usize) -> &mut [f64] {
+/// (`buf.len() >= len + ALIGN_F64` / `ALIGN_F32` per width).
+fn align64<T>(buf: &mut [T], len: usize) -> &mut [T] {
     let off = buf.as_ptr().align_offset(64);
     let off = if off == usize::MAX { 0 } else { off };
     &mut buf[off..off + len]
@@ -283,6 +328,62 @@ fn pack_a_block(a: &Matrix, a_trans: bool, i0: usize, live_rows: usize, k: usize
     }
 }
 
+/// [`pack_b`] at f32 width: logical-B columns demoted once while packing,
+/// so the micro-kernel streams narrow panels at double the elements per
+/// cache line.
+fn pack_b_f32(b: &Matrix, b_rowmajor_is_bt: bool, k: usize, n: usize, dst: &mut [f32]) {
+    let nsliv = n.div_ceil(NR);
+    debug_assert_eq!(dst.len(), nsliv * k * NR);
+    if !b_rowmajor_is_bt {
+        for t in 0..k {
+            let row = b.row(t);
+            for js in 0..nsliv {
+                let j0 = js * NR;
+                let live = NR.min(n - j0);
+                let d = &mut dst[js * k * NR + t * NR..js * k * NR + t * NR + NR];
+                for (dv, &v) in d[..live].iter_mut().zip(&row[j0..j0 + live]) {
+                    *dv = v as f32;
+                }
+                for v in &mut d[live..] {
+                    *v = 0.0;
+                }
+            }
+        }
+    } else {
+        if n % NR != 0 {
+            for v in dst[(nsliv - 1) * k * NR..].iter_mut() {
+                *v = 0.0;
+            }
+        }
+        for j in 0..n {
+            let row = b.row(j);
+            let base = (j / NR) * k * NR + (j % NR);
+            for (t, &v) in row.iter().enumerate() {
+                dst[base + t * NR] = v as f32;
+            }
+        }
+    }
+}
+
+/// [`pack_a_block`] at f32 width (logical rows only — the f32 drivers
+/// always pack from row-major storage).
+fn pack_a_block_f32(a: &Matrix, i0: usize, live_rows: usize, k: usize, dst: &mut [f32]) {
+    let ns = live_rows.div_ceil(MR);
+    debug_assert_eq!(dst.len(), ns * k * MR);
+    if live_rows % MR != 0 {
+        for v in dst[(ns - 1) * k * MR..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+    for r in 0..live_rows {
+        let row = a.row(i0 + r);
+        let base = (r / MR) * k * MR + (r % MR);
+        for (t, &v) in row.iter().enumerate() {
+            dst[base + t * MR] = v as f32;
+        }
+    }
+}
+
 // ----------------------------------------------------------- micro-kernel
 
 /// MR x NR register-blocked inner product over packed slivers: the
@@ -300,6 +401,106 @@ fn microkernel(ap: &[f64], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
             }
         }
     }
+}
+
+// ------------------------------------------------- f32 micro-kernel plane
+//
+// All three variants compute, per element, the identical sequence
+//   acc[r][c] = round(acc[r][c] + (a[r] as f64) * (b[c] as f64))
+// over ascending t. The f32→f64 conversion is exact and the product of two
+// converted f32s carries at most 48 mantissa bits (≤ 53), so it is exact
+// too; a fused multiply-add's single rounding therefore equals the scalar
+// mul-then-add. Kernel choice is a pure speed knob — never a results knob.
+
+/// Uniform signature for the runtime-selected f32 inner kernel. `unsafe`
+/// only because the SIMD variants require their target features; the
+/// selector guarantees that before handing the pointer out.
+type MicroF32 = unsafe fn(&[f32], &[f32], &mut [[f64; NR]; MR]);
+
+/// Scalar fallback — the semantic reference for the SIMD variants.
+#[inline(always)]
+fn microkernel_f32_scalar(ap: &[f32], bp: &[f32], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let ar = a[r] as f64;
+            let accr = &mut acc[r];
+            for c in 0..NR {
+                accr[c] += ar * (b[c] as f64);
+            }
+        }
+    }
+}
+
+unsafe fn microkernel_f32_scalar_erased(ap: &[f32], bp: &[f32], acc: &mut [[f64; NR]; MR]) {
+    microkernel_f32_scalar(ap, bp, acc);
+}
+
+/// AVX2+FMA: one 256-bit f64 accumulator per tile row (NR = 4 lanes), the
+/// B sliver widened with `cvtps_pd` once per t.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn microkernel_f32_avx2(ap: &[f32], bp: &[f32], acc: &mut [[f64; NR]; MR]) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+    let mut accv = [_mm256_setzero_pd(); MR];
+    for (r, v) in accv.iter_mut().enumerate() {
+        *v = _mm256_loadu_pd(acc[r].as_ptr());
+    }
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let bv = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr()));
+        for (r, v) in accv.iter_mut().enumerate() {
+            let ar = _mm256_set1_pd(a[r] as f64);
+            *v = _mm256_fmadd_pd(ar, bv, *v);
+        }
+    }
+    for (r, v) in accv.iter().enumerate() {
+        _mm256_storeu_pd(acc[r].as_mut_ptr(), *v);
+    }
+}
+
+/// NEON (aarch64 baseline): two 128-bit f64 accumulators per tile row,
+/// the B sliver widened with `vcvt_f64_f32` per t.
+#[cfg(target_arch = "aarch64")]
+unsafe fn microkernel_f32_neon(ap: &[f32], bp: &[f32], acc: &mut [[f64; NR]; MR]) {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+    let mut lo = [vdupq_n_f64(0.0); MR];
+    let mut hi = [vdupq_n_f64(0.0); MR];
+    for r in 0..MR {
+        lo[r] = vld1q_f64(acc[r].as_ptr());
+        hi[r] = vld1q_f64(acc[r].as_ptr().add(2));
+    }
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let b32 = vld1q_f32(b.as_ptr());
+        let blo = vcvt_f64_f32(vget_low_f32(b32));
+        let bhi = vcvt_high_f64_f32(b32);
+        for r in 0..MR {
+            let ar = vdupq_n_f64(a[r] as f64);
+            lo[r] = vfmaq_f64(lo[r], ar, blo);
+            hi[r] = vfmaq_f64(hi[r], ar, bhi);
+        }
+    }
+    for r in 0..MR {
+        vst1q_f64(acc[r].as_mut_ptr(), lo[r]);
+        vst1q_f64(acc[r].as_mut_ptr().add(2), hi[r]);
+    }
+}
+
+/// Pick the widest available f32 inner kernel once per driver call.
+#[allow(unreachable_code)]
+fn select_microkernel_f32() -> MicroF32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return microkernel_f32_avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return microkernel_f32_neon;
+    }
+    microkernel_f32_scalar_erased
 }
 
 // -------------------------------------------------------- general driver
@@ -438,6 +639,136 @@ fn compute_span<E>(
     });
 }
 
+// ------------------------------------------------------------ f32 driver
+
+/// f32 twin of [`gemm_driver`] for the `A B^T` form the kernel engines
+/// use (both operands row-major, `b`'s rows are the logical columns).
+/// Panels are packed narrow, accumulators are f64, and the epilogue result
+/// is rounded once to f32 at store time. Span split and per-element
+/// summation order mirror the f64 driver, so results are bit-identical
+/// across thread widths and kernel variants alike.
+fn gemm_driver_f32<E>(
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    max_width: usize,
+    epi: &E,
+) where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let k = a.cols();
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        for i in 0..m {
+            for (j, v) in out[i * n..(i + 1) * n].iter_mut().enumerate() {
+                *v = epi(i, j, 0.0) as f32;
+            }
+        }
+        return;
+    }
+    let kern = select_microkernel_f32();
+    let nsliv_i = m.div_ceil(MR);
+    let nsliv_j = n.div_ceil(NR);
+    let width = workers_for(2 * m * n * k).min(nsliv_i).min(max_width).max(1);
+    with_buf(&B_PACK_F32, nsliv_j * k * NR + ALIGN_F32, |bbuf| {
+        let bp = align64(bbuf, nsliv_j * k * NR);
+        pack_b_f32(b, true, k, n, bp);
+        let bp: &[f32] = bp;
+        if width == 1 {
+            compute_span_f32(a, bp, out, 0, nsliv_i, m, n, k, kern, epi);
+            return;
+        }
+        let span = nsliv_i.div_ceil(width);
+        let mut spans: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(width);
+        let mut rest = out;
+        let mut s0 = 0;
+        while s0 < nsliv_i {
+            let s1 = (s0 + span).min(nsliv_i);
+            let rows = (s1 * MR).min(m) - s0 * MR;
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+            spans.push((s0, s1, head));
+            rest = tail;
+            s0 = s1;
+        }
+        let mut iter = spans.into_iter();
+        let first = iter.next().expect("at least one span");
+        pool::global().scoped(|scope| {
+            for (lo, hi, cspan) in iter {
+                scope.spawn(move || compute_span_f32(a, bp, cspan, lo, hi, m, n, k, kern, epi));
+            }
+            let (lo, hi, cspan) = first;
+            compute_span_f32(a, bp, cspan, lo, hi, m, n, k, kern, epi);
+        });
+    });
+}
+
+/// f32 twin of [`compute_span`]: same KC/IB blocking, same ascending-t
+/// per-element order, f64 accumulator tiles, narrow packed streams.
+#[allow(clippy::too_many_arguments)]
+fn compute_span_f32<E>(
+    a: &Matrix,
+    bp: &[f32],
+    cspan: &mut [f32],
+    s0: usize,
+    s1: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    kern: MicroF32,
+    epi: &E,
+) where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let live_rows = (s1 * MR).min(m) - s0 * MR;
+    let ns = s1 - s0;
+    debug_assert_eq!(cspan.len(), live_rows * n);
+    with_buf(&A_PACK_F32, ns * k * MR + ALIGN_F32, |abuf| {
+        let ap_all = align64(abuf, ns * k * MR);
+        pack_a_block_f32(a, s0 * MR, live_rows, k, ap_all);
+        let nsliv_j = n.div_ceil(NR);
+        let mut sb = 0;
+        while sb < ns {
+            let se = (sb + IB).min(ns);
+            for js in 0..nsliv_j {
+                let j0 = js * NR;
+                let tile_cols = NR.min(n - j0);
+                let mut accs = [[[0.0f64; NR]; MR]; IB];
+                let mut t0 = 0;
+                while t0 < k {
+                    let t1 = (t0 + KC).min(k);
+                    let bsl = &bp[js * k * NR + t0 * NR..js * k * NR + t1 * NR];
+                    for s in sb..se {
+                        let ap = &ap_all[s * k * MR + t0 * MR..s * k * MR + t1 * MR];
+                        // SAFETY: `kern` was vetted by select_microkernel_f32
+                        // against the running CPU's features.
+                        unsafe { kern(ap, bsl, &mut accs[s - sb]) };
+                    }
+                    t0 = t1;
+                }
+                for s in sb..se {
+                    let i0 = (s0 + s) * MR;
+                    let tile_rows = MR.min(m - i0);
+                    let row_base = s * MR * n;
+                    let acc = &accs[s - sb];
+                    for r in 0..tile_rows {
+                        let dst = &mut cspan[row_base + r * n + j0..row_base + r * n + j0 + tile_cols];
+                        let arow = &acc[r];
+                        for (cc, v) in dst.iter_mut().enumerate() {
+                            *v = epi(i0 + r, j0 + cc, arow[cc]) as f32;
+                        }
+                    }
+                }
+            }
+            sb = se;
+        }
+    });
+}
+
 // ------------------------------------------------------ symmetric driver
 
 /// Raw output pointer shared across sliver tasks. Each task writes a
@@ -446,6 +777,12 @@ fn compute_span<E>(
 struct SendPtr(*mut f64);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
+
+/// [`SendPtr`] at f32 width.
+#[derive(Clone, Copy)]
+struct SendPtrF32(*mut f32);
+unsafe impl Send for SendPtrF32 {}
+unsafe impl Sync for SendPtrF32 {}
 
 /// Compute `out[i, j] = epi(i, j, sum_t A[i, t] * B[j, t])` for a product
 /// known to be symmetric: only tiles intersecting the upper triangle are
@@ -587,6 +924,146 @@ fn mirror_lower_from_upper(out: &mut Matrix) {
     const B: usize = 64;
     let nblk = n.div_ceil(B);
     let ptr = SendPtr(out.data_mut().as_mut_ptr());
+    pool::parallel_for(nblk, pool::configured_threads(), |bi| {
+        let r0 = bi * B;
+        let r1 = (r0 + B).min(n);
+        for cb in 0..=bi {
+            let c0 = cb * B;
+            for i in r0.max(1)..r1 {
+                let c1 = (c0 + B).min(i);
+                if c0 >= c1 {
+                    continue;
+                }
+                // SAFETY: row block `bi` is owned by this task; reads are
+                // from strictly-upper elements no task writes.
+                let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * n + c0), c1 - c0) };
+                for (off, v) in row.iter_mut().enumerate() {
+                    let j = c0 + off;
+                    *v = unsafe { *ptr.0.add(j * n + i) };
+                }
+            }
+        }
+    });
+}
+
+/// f32 twin of [`symm_driver`] for the `A B^T` symmetric form (both
+/// operands row-major, same column count): upper-triangle tiles only,
+/// zigzag balance, mirror pass — bit-identical across widths and kernels.
+fn symm_driver_f32<E>(
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut MatrixF32,
+    max_width: usize,
+    epi: &E,
+) where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let (m, k) = (a.rows(), a.cols());
+    assert_eq!(m, b.rows(), "symm: operands must produce a square result");
+    assert_eq!(k, b.cols(), "symm dims");
+    assert_eq!((out.rows(), out.cols()), (m, m), "symm: bad output shape");
+    if m == 0 {
+        return;
+    }
+    let n = m;
+    if k == 0 {
+        for i in 0..m {
+            for j in i..n {
+                out.row_mut(i)[j] = epi(i, j, 0.0) as f32;
+            }
+        }
+        mirror_lower_from_upper_f32(out);
+        return;
+    }
+    let kern = select_microkernel_f32();
+    let nsliv_i = m.div_ceil(MR);
+    let nsliv_j = n.div_ceil(NR);
+    let width = workers_for(m * n * k).min(nsliv_i).min(max_width).max(1);
+    with_buf(&B_PACK_F32, nsliv_j * k * NR + ALIGN_F32, |bbuf| {
+        let bp = align64(bbuf, nsliv_j * k * NR);
+        // b is stored m x k: its rows are the right operand's columns
+        pack_b_f32(b, true, k, n, bp);
+        let bp: &[f32] = bp;
+        let cptr = SendPtrF32(out.data_mut().as_mut_ptr());
+        if width == 1 {
+            for s in 0..nsliv_i {
+                symm_sliver_f32(a, bp, cptr, s, m, n, k, kern, epi);
+            }
+        } else {
+            let chunk = nsliv_i.div_ceil(width);
+            pool::global().scoped(|scope| {
+                for t in 1..width {
+                    let lo = t * chunk;
+                    let hi = ((t + 1) * chunk).min(nsliv_i);
+                    if lo >= hi {
+                        break;
+                    }
+                    scope.spawn(move || {
+                        for idx in lo..hi {
+                            symm_sliver_f32(a, bp, cptr, zigzag(idx, nsliv_i), m, n, k, kern, epi);
+                        }
+                    });
+                }
+                for idx in 0..chunk.min(nsliv_i) {
+                    symm_sliver_f32(a, bp, cptr, zigzag(idx, nsliv_i), m, n, k, kern, epi);
+                }
+            });
+        }
+    });
+    mirror_lower_from_upper_f32(out);
+}
+
+/// One MR-row sliver of the f32 symmetric product (cf. [`symm_sliver`]).
+#[allow(clippy::too_many_arguments)]
+fn symm_sliver_f32<E>(
+    a: &Matrix,
+    bp: &[f32],
+    c: SendPtrF32,
+    s: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    kern: MicroF32,
+    epi: &E,
+) where
+    E: Fn(usize, usize, f64) -> f64 + Sync,
+{
+    let i0 = s * MR;
+    let tile_rows = MR.min(m - i0);
+    with_buf(&A_PACK_F32, k * MR + ALIGN_F32, |abuf| {
+        let ap = align64(abuf, k * MR);
+        pack_a_block_f32(a, i0, tile_rows, k, ap);
+        let nsliv_j = n.div_ceil(NR);
+        for js in (i0 / NR)..nsliv_j {
+            let j0 = js * NR;
+            let tile_cols = NR.min(n - j0);
+            let bsl = &bp[js * k * NR..(js + 1) * k * NR];
+            let mut acc = [[0.0f64; NR]; MR];
+            // SAFETY: `kern` was vetted by select_microkernel_f32.
+            unsafe { kern(ap, bsl, &mut acc) };
+            for r in 0..tile_rows {
+                let i = i0 + r;
+                // SAFETY: slivers partition the rows; row `i` is written
+                // only by this call, and no other task reads it.
+                let dst = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * n + j0), tile_cols) };
+                let arow = &acc[r];
+                for (cc, v) in dst.iter_mut().enumerate() {
+                    *v = epi(i, j0 + cc, arow[cc]) as f32;
+                }
+            }
+        }
+    });
+}
+
+/// [`mirror_lower_from_upper`] at f32 width.
+fn mirror_lower_from_upper_f32(out: &mut MatrixF32) {
+    let n = out.rows();
+    if n < 2 {
+        return;
+    }
+    const B: usize = 64;
+    let nblk = n.div_ceil(B);
+    let ptr = SendPtrF32(out.data_mut().as_mut_ptr());
     pool::parallel_for(nblk, pool::configured_threads(), |bi| {
         let r0 = bi * B;
         let r1 = (r0 + B).min(n);
@@ -821,6 +1298,110 @@ mod tests {
                 let z = zigzag(idx, n);
                 assert!(z < n && !seen[z], "n={n} idx={idx}");
                 seen[z] = true;
+            }
+        }
+    }
+
+    // ------------------------------------------------------ f32 plane
+
+    /// Reference: demote inputs, accumulate the dot in f64, round once.
+    fn naive_nt_f32(a: &Matrix, b: &Matrix) -> Vec<f32> {
+        let mut out = vec![0.0f32; a.rows() * b.rows()];
+        for i in 0..a.rows() {
+            for j in 0..b.rows() {
+                let mut s = 0.0f64;
+                for t in 0..a.cols() {
+                    s += (a[(i, t)] as f32 as f64) * (b[(j, t)] as f32 as f64);
+                }
+                out[i * b.rows() + j] = s as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn f32_nt_matches_f64_accumulated_reference_bitwise() {
+        let mut rng = Rng::new(12);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (7, 4, 9), (33, 17, 29)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(n, k, &mut rng);
+            let c = gemm_nt_map_f32(&a, &b, &|_, _, v| v);
+            let r = naive_nt_f32(&a, &b);
+            for (x, y) in c.data().iter().zip(&r) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_simd_kernel_bit_identical_to_scalar() {
+        // Whatever kernel the CPU selects must reproduce the scalar
+        // fallback bit for bit (exact products, single rounding per add).
+        let mut rng = Rng::new(13);
+        let kern = select_microkernel_f32();
+        for kk in [1usize, 3, 17, 256, 301] {
+            let ap: Vec<f32> = (0..kk * MR).map(|_| rng.gaussian() as f32).collect();
+            let bp: Vec<f32> = (0..kk * NR).map(|_| rng.gaussian() as f32).collect();
+            let mut a0 = [[0.5f64; NR]; MR];
+            let mut a1 = [[0.5f64; NR]; MR];
+            microkernel_f32_scalar(&ap, &bp, &mut a0);
+            unsafe { kern(&ap, &bp, &mut a1) };
+            for r in 0..MR {
+                for c in 0..NR {
+                    assert_eq!(a0[r][c].to_bits(), a1[r][c].to_bits(), "k={kk} ({r},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(14);
+        let a = Matrix::randn(200, 150, &mut rng);
+        let b = Matrix::randn(180, 150, &mut rng);
+        let mut reference = MatrixF32::zeros(200, 180);
+        gemm_driver_f32(&a, &b, reference.data_mut(), 200, 180, 1, &|_, _, v| v);
+        for threads in [2, 3, 8] {
+            let mut c = MatrixF32::zeros(200, 180);
+            gemm_driver_f32(&a, &b, c.data_mut(), 200, 180, threads, &|_, _, v| v);
+            for (x, y) in reference.data().iter().zip(c.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "width {threads} changed bits");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_syrk_map_is_exactly_symmetric_and_close_to_f64() {
+        let mut rng = Rng::new(15);
+        let x = Matrix::randn(47, 9, &mut rng);
+        let g32 = syrk_nt_map_f32(&x, &|_, _, d| (-0.5 * d).exp());
+        let g64 = syrk_nt_map(&x, &|_, _, d| (-0.5 * d).exp());
+        for i in 0..47 {
+            for j in 0..47 {
+                assert_eq!(
+                    g32.row(i)[j].to_bits(),
+                    g32.row(j)[i].to_bits(),
+                    "asymmetry at ({i},{j})"
+                );
+                assert!(
+                    (g32.row(i)[j] as f64 - g64[(i, j)]).abs() < 1e-4,
+                    "f32 drifted at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_symm_bit_identical_across_widths() {
+        let mut rng = Rng::new(16);
+        let x = Matrix::randn(210, 60, &mut rng);
+        let mut reference = MatrixF32::zeros(210, 210);
+        symm_driver_f32(&x, &x, &mut reference, 1, &|_, _, v| v);
+        for threads in [2, 5, 8] {
+            let mut c = MatrixF32::zeros(210, 210);
+            symm_driver_f32(&x, &x, &mut c, threads, &|_, _, v| v);
+            for (p, q) in reference.data().iter().zip(c.data()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "width {threads} changed bits");
             }
         }
     }

@@ -15,6 +15,7 @@ pub mod svd;
 
 pub use eig::{eigh, Eigh};
 pub use gemm::{gemm_into, gemm_nt_into, gemm_tn_into, symm_nt, syrk_nt, syrk_tn, syrk_tn_into};
+pub use gemm::{gemm_nt_map_f32, syrk_nt_map_f32};
 pub use lanczos::{lanczos_top_k, lanczos_top_k_op};
 pub use pinv::pinv;
 pub use qr::{qr_thin, QrThin};
@@ -22,6 +23,41 @@ pub use svd::{svd_thin, SvdThin};
 
 use crate::util::Rng;
 use std::fmt;
+
+/// Element width of a tile buffer. The tile plane (gemm panels, oracle
+/// blocks, stream tiles, residency spill) can run in either width; the
+/// small `c×c`/`s×s` solves and every fold accumulator stay `f64`
+/// regardless. Sampling error dwarfs f32 rounding on the tile path
+/// (EXPERIMENTS.md §Precision), so `F32` buys 2× bandwidth and spill
+/// density at unchanged approximation quality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// 32-bit tiles, 64-bit accumulation.
+    F32,
+    /// Full 64-bit tiles — the bit-compat reference path.
+    #[default]
+    F64,
+}
+
+impl Precision {
+    /// Bytes per element at this width.
+    #[inline]
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F64 => 8,
+        }
+    }
+
+    /// Stable lowercase name for logs / bench rows / service replies.
+    #[inline]
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+}
 
 /// Dense row-major matrix of `f64`.
 #[derive(Clone, PartialEq)]
@@ -392,6 +428,124 @@ impl Matrix {
             data: data.iter().map(|&v| v as f64).collect(),
         }
     }
+
+    /// Demote to an f32 tile (round-to-nearest per element).
+    pub fn demote(&self) -> MatrixF32 {
+        MatrixF32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+}
+
+/// Dense row-major `f32` tile buffer — the narrow half of the tile plane.
+///
+/// Deliberately minimal: tiles are produced (oracle/gemm), streamed,
+/// spilled, and promoted into `f64` fold state; all algebra beyond the
+/// tile product stays on [`Matrix`]. f32→f64 promotion is exact, so a
+/// consumer that promotes-then-folds accumulates identically to a native
+/// f64 fold over the same (rounded) tile values.
+#[derive(Clone, PartialEq)]
+pub struct MatrixF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for MatrixF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "MatrixF32({}x{})", self.rows, self.cols)
+    }
+}
+
+impl MatrixF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatrixF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        MatrixF32 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Promote to f64 (exact — every f32 is representable).
+    pub fn promote(&self) -> Matrix {
+        Matrix::from_f32(self.rows, self.cols, &self.data)
+    }
+}
+
+/// A tile in either element width. Enum-tagged rather than generic so the
+/// streaming channel, residency slots, and consumer dispatch stay
+/// monomorphic — one pipeline, two payload widths.
+#[derive(Clone, Debug)]
+pub enum Tile {
+    F64(Matrix),
+    F32(MatrixF32),
+}
+
+impl Tile {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Tile::F64(m) => m.rows(),
+            Tile::F32(m) => m.rows(),
+        }
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Tile::F64(m) => m.cols(),
+            Tile::F32(m) => m.cols(),
+        }
+    }
+
+    /// Element width of this tile.
+    #[inline]
+    pub fn precision(&self) -> Precision {
+        match self {
+            Tile::F64(_) => Precision::F64,
+            Tile::F32(_) => Precision::F32,
+        }
+    }
+
+    /// Bytes of payload this tile occupies (header excluded).
+    #[inline]
+    pub fn payload_bytes(&self) -> u64 {
+        (self.rows() * self.cols() * self.precision().bytes()) as u64
+    }
 }
 
 #[cfg(test)]
@@ -513,6 +667,37 @@ mod tests {
         let f = m.to_f32();
         let back = Matrix::from_f32(2, 3, &f);
         assert!(m.max_abs_diff(&back) < 1e-6);
+    }
+
+    #[test]
+    fn precision_bytes_and_names() {
+        assert_eq!(Precision::F32.bytes(), 4);
+        assert_eq!(Precision::F64.bytes(), 8);
+        assert_eq!(Precision::default(), Precision::F64);
+        assert_eq!(Precision::F32.name(), "f32");
+    }
+
+    #[test]
+    fn demote_promote_is_exact_for_f32_representable() {
+        // Small integers are exactly representable in f32, so
+        // demote → promote must be bit-exact for them.
+        let m = small();
+        let narrow = m.demote();
+        assert_eq!(narrow.rows(), 2);
+        assert_eq!(narrow.row(1), &[4.0f32, 5.0, 6.0]);
+        let wide = narrow.promote();
+        assert_eq!(wide, m);
+    }
+
+    #[test]
+    fn tile_reports_width_and_payload() {
+        let t64 = Tile::F64(Matrix::zeros(3, 5));
+        let t32 = Tile::F32(MatrixF32::zeros(3, 5));
+        assert_eq!(t64.precision(), Precision::F64);
+        assert_eq!(t32.precision(), Precision::F32);
+        assert_eq!((t64.rows(), t64.cols()), (3, 5));
+        assert_eq!(t64.payload_bytes(), 3 * 5 * 8);
+        assert_eq!(t32.payload_bytes(), 3 * 5 * 4);
     }
 
     #[test]

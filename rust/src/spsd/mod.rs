@@ -27,9 +27,10 @@ use crate::linalg::{gemm, pinv, solve, Matrix};
 use crate::obs::{self, Stage};
 use crate::sketch::{self, SketchKind, SketchOp};
 use crate::stream::{
-    run_pipeline, CollectConsumer, ConjugateFold, LeverageFold, LeverageSampler,
-    OracleColumnsSource, PrototypeUFold, ResidencyConfig, ResidencyStats, ResidentSource,
-    RowGather, SketchFold, StreamConfig, StreamingOracle, TileConsumer, TileSource,
+    run_pipeline_prec, CollectConsumer, ConjugateFold, LeverageFold, LeverageSampler,
+    OracleColumnsSource, Precision, PrototypeUFold, ResidencyConfig, ResidencyStats,
+    ResidentSource, RowGather, SketchFold, StreamConfig, StreamingOracle, TileConsumer,
+    TileSource,
 };
 use crate::util::{Rng, Stopwatch};
 
@@ -92,7 +93,7 @@ fn build_c_panel(
     gather: Option<&[usize]>,
 ) -> (Matrix, Option<Matrix>) {
     let n = oracle.n();
-    if stream_cfg.is_whole(n) {
+    if stream_cfg.is_whole(n) && stream_cfg.precision == Precision::F64 {
         let c = oracle.columns(p_idx);
         let g = gather.map(|idx| c.select_rows(idx));
         return (c, g);
@@ -116,12 +117,24 @@ fn collect_via(
     let mut collect = CollectConsumer::new(n, width);
     match gather {
         None => {
-            run_pipeline(src, t, stream_cfg.queue_depth, &mut [&mut collect]);
+            run_pipeline_prec(
+                src,
+                t,
+                stream_cfg.queue_depth,
+                stream_cfg.precision,
+                &mut [&mut collect],
+            );
             (collect.into_matrix(), None)
         }
         Some(idx) => {
             let mut g = RowGather::new(idx.to_vec(), width);
-            run_pipeline(src, t, stream_cfg.queue_depth, &mut [&mut collect, &mut g]);
+            run_pipeline_prec(
+                src,
+                t,
+                stream_cfg.queue_depth,
+                stream_cfg.precision,
+                &mut [&mut collect, &mut g],
+            );
             (collect.into_matrix(), Some(g.into_matrix()))
         }
     }
@@ -198,7 +211,7 @@ pub(crate) fn run_prototype(
         let _s = obs::span(Stage::SolveSvd);
         pinv(&c) // c x n
     };
-    let u = if stream_cfg.is_whole(n) {
+    let u = if stream_cfg.is_whole(n) && stream_cfg.precision == Precision::F64 {
         let k = oracle.full();
         // (C† K)(C†)^T is symmetric (K is): triangular product + mirror
         // gives an exactly symmetric U at ~half the flops of the full gemm.
@@ -372,7 +385,13 @@ pub(crate) fn run_fast(
                         Some(collect.into_matrix())
                     }
                     Some(r) => {
-                        run_pipeline(r, t, stream_cfg.queue_depth, &mut [&mut fold]);
+                        run_pipeline_prec(
+                            r,
+                            t,
+                            stream_cfg.queue_depth,
+                            stream_cfg.precision,
+                            &mut [&mut fold],
+                        );
                         None
                     }
                 };
@@ -395,10 +414,11 @@ pub(crate) fn run_fast(
                     }
                     (Some(r), _) => {
                         let mut collect = CollectConsumer::new(n, p_idx.len());
-                        run_pipeline(
+                        run_pipeline_prec(
                             r,
                             t,
                             stream_cfg.queue_depth,
+                            stream_cfg.precision,
                             &mut [&mut collect, &mut sampler],
                         );
                         collect.into_matrix()
@@ -433,7 +453,7 @@ pub(crate) fn run_fast(
                 cfg.kind.name()
             );
             let op = sketch::build(cfg.kind, n, cfg.s, None, rng);
-            if stream_cfg.is_whole(n) {
+            if stream_cfg.is_whole(n) && stream_cfg.precision == Precision::F64 {
                 let c_mat = oracle.columns(p_idx);
                 let k = oracle.full();
                 let stc = op.apply_left(&c_mat);

@@ -11,7 +11,7 @@
 //! match the materialized path only up to reduction reordering (≤1e-12
 //! relative — asserted by `tests/stream_equiv.rs`).
 
-use crate::linalg::{gemm, Matrix};
+use crate::linalg::{gemm, Matrix, MatrixF32, Tile};
 use crate::obs::{self, Stage};
 use crate::sketch::{self, SketchOp};
 use crate::util::Rng;
@@ -19,8 +19,30 @@ use crate::util::Rng;
 /// Folds streamed row-tiles. `consume` is called once per tile, in
 /// ascending `r0` order, with `tile.rows()` rows starting at virtual row
 /// `r0`.
+///
+/// Mixed precision: the pipeline hands each consumer a typed [`Tile`]
+/// through `consume_tile`. The default `consume_f32` promotes the tile to
+/// f64 (`f32 -> f64` is exact, so promotion changes no bits of the tile
+/// data) and reuses `consume` — every fold therefore accumulates into f64
+/// state regardless of the tile element type, and the row-ordered
+/// bit-compat contract documented above holds *within* each precision.
 pub trait TileConsumer {
     fn consume(&mut self, r0: usize, tile: &Matrix);
+
+    /// Fold an f32 tile. The default promotes (exactly) and delegates to
+    /// the f64 fold; consumers with a profitable native narrow path may
+    /// override.
+    fn consume_f32(&mut self, r0: usize, tile: &MatrixF32) {
+        self.consume(r0, &tile.promote());
+    }
+
+    /// Typed dispatch used by `run_pipeline_prec`.
+    fn consume_tile(&mut self, r0: usize, tile: &Tile) {
+        match tile {
+            Tile::F64(m) => self.consume(r0, m),
+            Tile::F32(m) => self.consume_f32(r0, m),
+        }
+    }
 }
 
 /// Reassembles the streamed matrix (used when the full panel *is* the
@@ -668,6 +690,23 @@ mod tests {
             assert_eq!(idx, ref_idx, "tile={tile}: drawn S must not depend on tiling");
             assert_eq!(rows.max_abs_diff(&ref_rows), 0.0, "tile={tile}");
         }
+    }
+
+    #[test]
+    fn consume_tile_dispatch_promotes_f32_exactly() {
+        let mut rng = Rng::new(12);
+        let a = Matrix::randn(14, 4, &mut rng);
+        let narrow = a.demote();
+        let mut c64 = CollectConsumer::new(14, 4);
+        c64.consume_tile(0, &Tile::F64(a.clone()));
+        assert_eq!(c64.into_matrix().max_abs_diff(&a), 0.0);
+        let mut c32 = CollectConsumer::new(14, 4);
+        c32.consume_tile(0, &Tile::F32(narrow.clone()));
+        assert_eq!(
+            c32.into_matrix().max_abs_diff(&narrow.promote()),
+            0.0,
+            "default f32 path must equal exact promotion"
+        );
     }
 
     #[test]

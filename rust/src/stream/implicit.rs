@@ -27,7 +27,7 @@
 //! Results are bit-identical across all of these (`tests/exec_api.rs`).
 
 use super::{
-    run_pipeline, GramFold, MatvecFold, ResidencyConfig, ResidencyStats, ResidentSource,
+    run_pipeline_prec, GramFold, MatvecFold, ResidencyConfig, ResidencyStats, ResidentSource,
     StreamConfig, TileConsumer, TileSource,
 };
 use crate::linalg::{eigh, lanczos, solve, Matrix};
@@ -55,10 +55,10 @@ pub fn matvec_cuc(src: &dyn TileSource, u: &Matrix, x: &[f64], cfg: StreamConfig
     assert_eq!(x.len(), n, "matvec_cuc: x must have n entries");
     assert_eq!((u.rows(), u.cols()), (c, c), "matvec_cuc: U must be c x c");
     let mut fold = MatvecFold::new(x, c);
-    run_pipeline(src, cfg.tile_rows, cfg.queue_depth, &mut [&mut fold]);
+    run_pipeline_prec(src, cfg.tile_rows, cfg.queue_depth, cfg.precision, &mut [&mut fold]);
     let z = u.matvec(&fold.into_vec());
     let mut out = OutMatvec { z, y: vec![0.0; n] };
-    run_pipeline(src, cfg.tile_rows, cfg.queue_depth, &mut [&mut out]);
+    run_pipeline_prec(src, cfg.tile_rows, cfg.queue_depth, cfg.precision, &mut [&mut out]);
     out.y
 }
 
@@ -99,7 +99,13 @@ fn solve_impl(
     // One pass: C^T C and C^T y together.
     let mut gram = GramFold::new(c);
     let mut cty = MatvecFold::new(y, c);
-    run_pipeline(src, cfg.tile_rows, cfg.queue_depth, &mut [&mut gram, &mut cty]);
+    run_pipeline_prec(
+        src,
+        cfg.tile_rows,
+        cfg.queue_depth,
+        cfg.precision,
+        &mut [&mut gram, &mut cty],
+    );
     // inner = alpha I + G^T (C^T C) G  (= alpha I + B^T B for B = C G)
     let ctc = gram.into_matrix();
     let mut inner = crate::linalg::gemm::symm_nt(&ctc.matmul(&g).transpose(), &g.transpose());
@@ -112,7 +118,7 @@ fn solve_impl(
     // Second pass: B z = C (G z).
     let gz = g.matvec(&z);
     let mut out = OutMatvec { z: gz, y: vec![0.0; n] };
-    run_pipeline(src, cfg.tile_rows, cfg.queue_depth, &mut [&mut out]);
+    run_pipeline_prec(src, cfg.tile_rows, cfg.queue_depth, cfg.precision, &mut [&mut out]);
     y.iter()
         .zip(&out.y)
         .map(|(&yi, &bi)| (yi - bi) / alpha)

@@ -42,13 +42,14 @@ pub use implicit::{
     solve_regularized, solve_regularized_budgeted, solve_regularized_resident, top_k_eigs,
     top_k_eigs_budgeted, top_k_eigs_resident,
 };
-pub use pipeline::run_pipeline;
+pub use pipeline::{run_pipeline, run_pipeline_prec};
 pub use residency::{
     ResidencyConfig, ResidencyStats, ResidentSource, DEFAULT_RESIDENT_TILE_ROWS,
 };
 
 use crate::coordinator::oracle::KernelOracle;
 use crate::linalg::Matrix;
+pub use crate::linalg::{MatrixF32, Precision, Tile};
 use crate::obs::{self, Stage};
 use std::sync::Mutex;
 
@@ -63,6 +64,10 @@ pub struct StreamConfig {
     /// Bounded producer queue depth: tiles computed ahead of the consumer.
     /// Depth 2 double-buffers (compute tile i+1 while folding tile i).
     pub queue_depth: usize,
+    /// Element width of the tiles the pipeline carries. Fold state stays
+    /// f64 either way; `F32` halves tile bytes (queue, spill, panel cache)
+    /// and runs the narrow gemm/oracle plane.
+    pub precision: Precision,
 }
 
 /// Default queue depth for tiled streams (double buffering + one in hand).
@@ -71,12 +76,22 @@ pub const DEFAULT_QUEUE_DEPTH: usize = 2;
 impl StreamConfig {
     /// Stream in `tile_rows`-high tiles with the default queue depth.
     pub fn tiled(tile_rows: usize) -> Self {
-        StreamConfig { tile_rows: tile_rows.max(1), queue_depth: DEFAULT_QUEUE_DEPTH }
+        StreamConfig {
+            tile_rows: tile_rows.max(1),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            precision: Precision::F64,
+        }
     }
 
     /// One tile covering every row — the materialized path.
     pub fn whole() -> Self {
-        StreamConfig { tile_rows: usize::MAX, queue_depth: 1 }
+        StreamConfig { tile_rows: usize::MAX, queue_depth: 1, precision: Precision::F64 }
+    }
+
+    /// Same traversal, tiles carried at `precision`.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
     }
 
     /// True when this config degenerates to the materialized path for an
@@ -102,11 +117,19 @@ impl Default for StreamConfig {
 /// Bytes a `rows x cols` f64 panel occupies — the unit every budget gate
 /// in this module shares (the planner's `memory_budget`, the
 /// [`CachingSource`] whole-panel gate, the residency layer's LRU budget
-/// and per-tile admission).
+/// and per-tile admission). Budgets are denominated in this f64 unit;
+/// narrow tiles charge against them via [`panel_bytes_prec`].
 pub fn panel_bytes(rows: usize, cols: usize) -> u64 {
+    panel_bytes_prec(rows, cols, Precision::F64)
+}
+
+/// Bytes a `rows x cols` panel occupies at the given element width — the
+/// width-aware sibling of [`panel_bytes`] used wherever f32 tiles earn
+/// their halved footprint (residency admission/spill, planner peak).
+pub fn panel_bytes_prec(rows: usize, cols: usize, prec: Precision) -> u64 {
     (rows as u64)
         .saturating_mul(cols as u64)
-        .saturating_mul(std::mem::size_of::<f64>() as u64)
+        .saturating_mul(prec.bytes() as u64)
 }
 
 /// The one budget gate for cached-panel modes: a panel is admitted
@@ -128,6 +151,21 @@ pub trait TileSource: Sync {
 
     /// Rows `[r0, r1)` as a dense `(r1-r0) x cols` tile.
     fn tile(&self, r0: usize, r1: usize) -> Matrix;
+
+    /// Rows `[r0, r1)` at f32 width. The default computes the f64 tile and
+    /// demotes — always correct, never faster; sources backed by a kernel
+    /// oracle override it to compute natively narrow.
+    fn tile_f32(&self, r0: usize, r1: usize) -> MatrixF32 {
+        self.tile(r0, r1).demote()
+    }
+
+    /// Width-dispatched tile — what [`run_pipeline_prec`] calls.
+    fn tile_elem(&self, r0: usize, r1: usize, prec: Precision) -> Tile {
+        match prec {
+            Precision::F64 => Tile::F64(self.tile(r0, r1)),
+            Precision::F32 => Tile::F32(self.tile_f32(r0, r1)),
+        }
+    }
 }
 
 /// `K[:, cols]` served tile-wise by a [`KernelOracle`] (the `C` panel of
@@ -156,6 +194,11 @@ impl TileSource for OracleColumnsSource<'_> {
         let _s = obs::span(Stage::OracleTile);
         self.oracle.row_block(r0, r1, self.cols)
     }
+
+    fn tile_f32(&self, r0: usize, r1: usize) -> MatrixF32 {
+        let _s = obs::span(Stage::OracleTile);
+        self.oracle.row_block_f32(r0, r1, self.cols)
+    }
 }
 
 /// The full `K[:, :]` served tile-wise (prototype model / projection
@@ -183,6 +226,11 @@ impl TileSource for OracleFullSource<'_> {
     fn tile(&self, r0: usize, r1: usize) -> Matrix {
         let _s = obs::span(Stage::OracleTile);
         self.oracle.full_rows(r0, r1)
+    }
+
+    fn tile_f32(&self, r0: usize, r1: usize) -> MatrixF32 {
+        let _s = obs::span(Stage::OracleTile);
+        self.oracle.full_rows_f32(r0, r1)
     }
 }
 
@@ -317,16 +365,29 @@ impl<'a> StreamingOracle<'a> {
     }
 
     /// Stream `K[:, cols]` through `consumers` (in tile order, each tile
-    /// fed to every consumer before the next arrives).
+    /// fed to every consumer before the next arrives) at the configured
+    /// element width.
     pub fn stream_columns(&self, cols: &[usize], consumers: &mut [&mut dyn TileConsumer]) {
         let src = OracleColumnsSource::new(self.oracle, cols);
-        run_pipeline(&src, self.cfg.tile_rows, self.cfg.queue_depth, consumers);
+        run_pipeline_prec(
+            &src,
+            self.cfg.tile_rows,
+            self.cfg.queue_depth,
+            self.cfg.precision,
+            consumers,
+        );
     }
 
-    /// Stream the full `K` through `consumers`.
+    /// Stream the full `K` through `consumers` at the configured width.
     pub fn stream_full(&self, consumers: &mut [&mut dyn TileConsumer]) {
         let src = OracleFullSource::new(self.oracle);
-        run_pipeline(&src, self.cfg.tile_rows, self.cfg.queue_depth, consumers);
+        run_pipeline_prec(
+            &src,
+            self.cfg.tile_rows,
+            self.cfg.queue_depth,
+            self.cfg.precision,
+            consumers,
+        );
     }
 }
 
@@ -459,5 +520,42 @@ mod tests {
         assert!(StreamConfig::tiled(11).is_whole(10));
         assert!(!StreamConfig::tiled(9).is_whole(10));
         assert_eq!(StreamConfig::tiled(0).tile_rows, 1);
+    }
+
+    #[test]
+    fn precision_knob_and_width_aware_panel_bytes() {
+        // Constructors default to the bit-compat f64 plane.
+        assert_eq!(StreamConfig::tiled(8).precision, Precision::F64);
+        assert_eq!(StreamConfig::whole().precision, Precision::F64);
+        let cfg = StreamConfig::tiled(8).with_precision(Precision::F32);
+        assert_eq!(cfg.precision, Precision::F32);
+        assert_eq!(cfg.tile_rows, 8);
+        // f32 panels charge exactly half the f64 unit.
+        assert_eq!(panel_bytes(100, 7), 100 * 7 * 8);
+        assert_eq!(panel_bytes_prec(100, 7, Precision::F32), 100 * 7 * 4);
+        assert_eq!(panel_bytes_prec(100, 7, Precision::F64), panel_bytes(100, 7));
+    }
+
+    #[test]
+    fn oracle_sources_serve_native_f32_tiles() {
+        use crate::coordinator::oracle::RbfOracle;
+        use std::sync::Arc;
+        let mut rng = Rng::new(6);
+        let x = Arc::new(Matrix::randn(21, 3, &mut rng));
+        let o = RbfOracle::cpu(x, 0.5);
+        let cols = [0usize, 7, 20];
+        let src = OracleColumnsSource::new(&o, &cols);
+        let narrow = src.tile_f32(3, 12);
+        let wide = src.tile(3, 12);
+        assert_eq!((narrow.rows(), narrow.cols()), (9, 3));
+        for i in 0..9 {
+            for j in 0..3 {
+                assert!((wide[(i, j)] - narrow.row(i)[j] as f64).abs() < 1e-4);
+            }
+        }
+        match src.tile_elem(3, 12, Precision::F32) {
+            Tile::F32(t) => assert_eq!(t.data(), narrow.data()),
+            Tile::F64(_) => panic!("wrong width"),
+        }
     }
 }

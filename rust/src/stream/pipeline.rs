@@ -20,7 +20,7 @@
 //! is oracle-bound or fold-bound (EXPERIMENTS.md §Observability).
 
 use super::{TileConsumer, TileSource};
-use crate::linalg::Matrix;
+use crate::linalg::{Precision, Tile};
 use crate::obs::{self, Stage};
 use crate::pool;
 use crate::testkit::faults::{self, FaultPlan, FaultPoint};
@@ -28,7 +28,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
 struct ChanState {
-    buf: VecDeque<(usize, Matrix)>,
+    buf: VecDeque<(usize, Tile)>,
     /// Producer finished pushing every tile.
     tx_done: bool,
     /// Consumer stopped (normally or by unwinding); producer must bail out
@@ -60,7 +60,7 @@ impl Chan {
 
     /// Blocks while the queue is full. Returns false when the receiver is
     /// gone (the producer should stop computing tiles).
-    fn push(&self, item: (usize, Matrix)) -> bool {
+    fn push(&self, item: (usize, Tile)) -> bool {
         let mut st = self.state.lock().unwrap();
         while st.buf.len() >= self.capacity && !st.rx_dead {
             st = self.nonfull.wait(st).unwrap();
@@ -86,7 +86,7 @@ impl Chan {
 
     /// Blocks until a tile is available; `None` once the producer is done
     /// and the queue is drained.
-    fn pop(&self) -> Option<(usize, Matrix)> {
+    fn pop(&self) -> Option<(usize, Tile)> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(item) = st.buf.pop_front() {
@@ -123,16 +123,34 @@ impl Drop for TxGuard<'_> {
     }
 }
 
-/// Stream `src` through `consumers` in `tile_rows`-high tiles.
-///
-/// When one tile covers every row the pipeline is skipped entirely: the
-/// tile is computed inline and fed once (the materialized fallback). A
-/// `queue_depth` of 1 still overlaps producer and consumer; 2 (the
-/// default) double-buffers.
+/// Stream `src` through `consumers` in `tile_rows`-high f64 tiles — the
+/// historical surface, an exact alias of
+/// [`run_pipeline_prec`]`(.., Precision::F64, ..)`; every seam it crosses
+/// is bit-identical to the pre-typed-tile pipeline.
 pub fn run_pipeline(
     src: &dyn TileSource,
     tile_rows: usize,
     queue_depth: usize,
+    consumers: &mut [&mut dyn TileConsumer],
+) {
+    run_pipeline_prec(src, tile_rows, queue_depth, Precision::F64, consumers);
+}
+
+/// Stream `src` through `consumers` in `tile_rows`-high tiles of the
+/// requested element width.
+///
+/// When one tile covers every row the pipeline is skipped entirely: the
+/// tile is computed inline and fed once (the materialized fallback). A
+/// `queue_depth` of 1 still overlaps producer and consumer; 2 (the
+/// default) double-buffers. The width changes only what the channel
+/// carries: consumption order, fault seams, and span accounting are
+/// identical in both precisions, and every consumer folds into f64 state
+/// regardless of the tile type.
+pub fn run_pipeline_prec(
+    src: &dyn TileSource,
+    tile_rows: usize,
+    queue_depth: usize,
+    precision: Precision,
     consumers: &mut [&mut dyn TileConsumer],
 ) {
     let n = src.rows();
@@ -146,12 +164,12 @@ pub fn run_pipeline(
     if t >= n {
         let tile = {
             let _s = obs::span(Stage::PipelineProduce);
-            src.tile(0, n)
+            src.tile_elem(0, n, precision)
         };
         trip_fold_fault(&faults, 0);
         let _s = obs::span(Stage::PipelineFold);
         for c in consumers.iter_mut() {
-            c.consume(0, &tile);
+            c.consume_tile(0, &tile);
         }
         return;
     }
@@ -169,7 +187,7 @@ pub fn run_pipeline(
                 let r1 = (r0 + t).min(n);
                 let tile = {
                     let _s = obs::span(Stage::PipelineProduce);
-                    src.tile(r0, r1)
+                    src.tile_elem(r0, r1, precision)
                 };
                 let pushed = {
                     let _s = obs::span(Stage::PipelineProduceStall);
@@ -191,7 +209,7 @@ pub fn run_pipeline(
             trip_fold_fault(&faults, r0);
             let _s = obs::span(Stage::PipelineFold);
             for c in consumers.iter_mut() {
-                c.consume(r0, &tile);
+                c.consume_tile(r0, &tile);
             }
         }
     });
@@ -211,6 +229,7 @@ fn trip_fold_fault(faults: &Option<std::sync::Arc<FaultPlan>>, r0: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::stream::{CollectConsumer, MatrixSource, TileSource};
     use crate::util::Rng;
     use std::sync::atomic::{AtomicUsize, Ordering};
@@ -282,6 +301,24 @@ mod tests {
                 "depth {depth}: {} tiles outstanding",
                 cons.max_outstanding
             );
+        }
+    }
+
+    #[test]
+    fn f32_stream_is_tile_size_invariant_for_gathers() {
+        // Collect-style consumers see the same demoted values whatever the
+        // tiling: the per-row demotion is independent of tile boundaries.
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(29, 3, &mut rng);
+        let src = MatrixSource::new(&a);
+        let mut reference = CollectConsumer::new(29, 3);
+        run_pipeline_prec(&src, 29, 2, Precision::F32, &mut [&mut reference]);
+        let reference = reference.into_matrix();
+        assert_eq!(reference.max_abs_diff(&a.demote().promote()), 0.0);
+        for tile in [1usize, 2, 7, 13, 28] {
+            let mut collect = CollectConsumer::new(29, 3);
+            run_pipeline_prec(&src, tile, 2, Precision::F32, &mut [&mut collect]);
+            assert_eq!(collect.into_matrix().max_abs_diff(&reference), 0.0, "tile={tile}");
         }
     }
 

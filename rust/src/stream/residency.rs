@@ -22,9 +22,14 @@
 //!   budget every re-read comes from disk, and `n` larger than RAM only
 //!   needs the arena to fit on disk.
 //!
-//! Tiles round-trip through the arena bit-exactly (`f64` ↔ little-endian
-//! bytes), so residency-served results are **bit-identical** to the
-//! recompute path. The arena file is removed by a guard object when the
+//! Tiles round-trip through the arena bit-exactly in either element width
+//! (`f64`/`f32` ↔ little-endian bytes; each arena record carries a 1-byte
+//! width header), so residency-served results are **bit-identical** to the
+//! recompute path. An f32-configured layer ([`ResidencyConfig::precision`])
+//! caches and spills tiles at half the bytes per entry — the same panel
+//! fits twice over in the same `ram_budget`, and
+//! [`ResidencyStats::spilled_bytes`] (payload bytes, headers excluded)
+//! halves. The arena file is removed by a guard object when the
 //! source is dropped — including during a panic unwind. If the filesystem
 //! fails, writes and reads are first retried with a short exponential
 //! backoff (transient IO errors recover invisibly —
@@ -43,8 +48,8 @@
 //!
 //! [`Goal::memory_budget`]: crate::coordinator::planner::Goal
 
-use super::{panel_bytes, TileSource};
-use crate::linalg::Matrix;
+use super::TileSource;
+use crate::linalg::{Matrix, MatrixF32, Precision, Tile};
 use crate::obs::{self, Stage};
 use crate::testkit::faults::{self, FaultPlan, FaultPoint};
 use std::fs::File;
@@ -70,6 +75,10 @@ pub struct ResidencyConfig {
     pub spill: bool,
     /// Directory for the arena file (`None` = the system temp dir).
     pub spill_dir: Option<PathBuf>,
+    /// Element width tiles are cached and spilled at. `F32` halves the
+    /// bytes per entry in both the RAM LRU and the arena; `F64` (the
+    /// default) is byte-for-byte the pre-precision behavior.
+    pub precision: Precision,
 }
 
 impl ResidencyConfig {
@@ -80,6 +89,7 @@ impl ResidencyConfig {
             tile_rows: DEFAULT_RESIDENT_TILE_ROWS,
             spill: true,
             spill_dir: None,
+            precision: Precision::F64,
         }
     }
 
@@ -103,6 +113,11 @@ impl ResidencyConfig {
     pub fn with_spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.spill_dir = Some(dir.into());
         self.spill = true;
+        self
+    }
+
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 }
@@ -169,9 +184,10 @@ fn create_arena(dir: Option<&Path>) -> Option<SpillArena> {
     Some(SpillArena { file, next: 0, guard: SpillGuard { path }, faults: faults::current() })
 }
 
-/// Append `m` (row-major little-endian f64s) to the arena; `None` = IO
-/// failure (the caller retries, then degrades to recompute-on-miss).
-fn write_tile(arena: &mut SpillArena, m: &Matrix) -> Option<u64> {
+/// Append `t` to the arena as a 1-byte element-width header followed by
+/// the row-major little-endian payload; `None` = IO failure (the caller
+/// retries, then degrades to recompute-on-miss).
+fn write_tile(arena: &mut SpillArena, t: &Tile) -> Option<u64> {
     if let Some(plan) = &arena.faults {
         if plan.should_fail(FaultPoint::SpillWrite) {
             return None; // injected ENOSPC-style write failure
@@ -179,30 +195,65 @@ fn write_tile(arena: &mut SpillArena, m: &Matrix) -> Option<u64> {
     }
     let off = arena.next;
     arena.file.seek(SeekFrom::Start(off)).ok()?;
-    let mut buf = Vec::with_capacity(m.data().len() * 8);
-    for &v in m.data() {
-        buf.extend_from_slice(&v.to_le_bytes());
+    let mut buf = Vec::with_capacity(1 + t.payload_bytes() as usize);
+    buf.push(t.precision().bytes() as u8);
+    match t {
+        Tile::F64(m) => {
+            for &v in m.data() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Tile::F32(m) => {
+            for &v in m.data() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
     }
     arena.file.write_all(&buf).ok()?;
     arena.next = off + buf.len() as u64;
     Some(off)
 }
 
-/// Read a `rows x cols` tile back (bit-exact round trip).
-fn read_tile(arena: &mut SpillArena, off: u64, rows: usize, cols: usize) -> Option<Matrix> {
+/// Read a `rows x cols` tile back (bit-exact round trip per element
+/// width). A header byte that disagrees with `prec` is treated as an IO
+/// failure — the layer then degrades to recompute rather than
+/// misinterpreting bytes.
+fn read_tile(
+    arena: &mut SpillArena,
+    off: u64,
+    rows: usize,
+    cols: usize,
+    prec: Precision,
+) -> Option<Tile> {
     if let Some(plan) = &arena.faults {
         if plan.should_fail(FaultPoint::SpillRead) {
             return None; // injected short read / IO error
         }
     }
     arena.file.seek(SeekFrom::Start(off)).ok()?;
-    let mut buf = vec![0u8; rows * cols * 8];
+    let mut tag = [0u8; 1];
+    arena.file.read_exact(&mut tag).ok()?;
+    if tag[0] as usize != prec.bytes() {
+        return None; // width mismatch: never reinterpret payload bytes
+    }
+    let mut buf = vec![0u8; rows * cols * prec.bytes()];
     arena.file.read_exact(&mut buf).ok()?;
-    let data: Vec<f64> = buf
-        .chunks_exact(8)
-        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
-        .collect();
-    Some(Matrix::from_vec(rows, cols, data))
+    Some(match prec {
+        Precision::F64 => {
+            let data: Vec<f64> = buf
+                .chunks_exact(8)
+                .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Tile::F64(Matrix::from_vec(rows, cols, data))
+        }
+        Precision::F32 => {
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Tile::F32(MatrixF32::from_vec(rows, cols, data))
+        }
+    })
 }
 
 /// Spill IO attempts per operation: one try + up to two retries with a
@@ -217,7 +268,7 @@ fn backoff(attempt: u32) {
 
 /// [`write_tile`] with retries; returns the offset (if any) and how many
 /// retries were taken (for [`ResidencyStats::io_retries`]).
-fn write_tile_retrying(arena: &mut SpillArena, m: &Matrix) -> (Option<u64>, u64) {
+fn write_tile_retrying(arena: &mut SpillArena, m: &Tile) -> (Option<u64>, u64) {
     let mut retries = 0;
     for attempt in 0..SPILL_IO_ATTEMPTS {
         if attempt > 0 {
@@ -240,7 +291,8 @@ fn read_tile_retrying(
     off: u64,
     rows: usize,
     cols: usize,
-) -> (Option<Matrix>, u64) {
+    prec: Precision,
+) -> (Option<Tile>, u64) {
     let mut retries = 0;
     for attempt in 0..SPILL_IO_ATTEMPTS {
         if attempt > 0 {
@@ -248,7 +300,7 @@ fn read_tile_retrying(
             backoff(attempt);
         }
         let _s = obs::span(Stage::ResidencySpillRead);
-        if let Some(m) = read_tile(arena, off, rows, cols) {
+        if let Some(m) = read_tile(arena, off, rows, cols, prec) {
             return (Some(m), retries);
         }
     }
@@ -256,7 +308,7 @@ fn read_tile_retrying(
 }
 
 struct Slot {
-    ram: Option<Matrix>,
+    ram: Option<Tile>,
     /// Last-use tick while resident (the LRU eviction key).
     stamp: u64,
     /// Lifetime access count (the admission key — see `ResidentSource::admit`).
@@ -279,6 +331,7 @@ pub struct ResidentSource<'a> {
     inner: &'a dyn TileSource,
     grid: usize,
     ram_budget: u64,
+    precision: Precision,
     state: Mutex<ResState>,
 }
 
@@ -299,8 +352,14 @@ impl<'a> ResidentSource<'a> {
             inner,
             grid,
             ram_budget: cfg.ram_budget,
+            precision: cfg.precision,
             state: Mutex::new(ResState { slots, tick: 0, ram_bytes: 0, arena, stats: ResidencyStats::default() }),
         }
+    }
+
+    /// Element width this layer caches and spills at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Snapshot of the hit/miss/spill counters.
@@ -336,7 +395,7 @@ impl<'a> ResidentSource<'a> {
 
     /// Serve grid tile `g` to `f`: RAM hit, spill read, or compute (in
     /// that order), write-through + cache admission on the way.
-    fn with_grid_tile(&self, g: usize, f: impl FnOnce(&Matrix)) {
+    fn with_grid_tile(&self, g: usize, f: impl FnOnce(&Tile)) {
         let (t0, t1) = self.bounds(g);
         let mut st = self.state.lock().unwrap();
         st.tick += 1;
@@ -350,7 +409,7 @@ impl<'a> ResidentSource<'a> {
             return;
         }
         let m = self.fetch_cold(&mut st, g, t0, t1);
-        let bytes = panel_bytes(m.rows(), m.cols());
+        let bytes = m.payload_bytes();
         if self.admit(&mut st, g, bytes) {
             st.ram_bytes += bytes;
             st.slots[g].ram = Some(m);
@@ -366,7 +425,7 @@ impl<'a> ResidentSource<'a> {
     /// grid with the pipeline tile height): an unadmitted cold tile is
     /// returned by move, so the zero-cache path costs no more copies than
     /// a plain passthrough.
-    fn take_grid_tile(&self, g: usize) -> Matrix {
+    fn take_grid_tile(&self, g: usize) -> Tile {
         let (t0, t1) = self.bounds(g);
         let mut st = self.state.lock().unwrap();
         st.tick += 1;
@@ -380,7 +439,7 @@ impl<'a> ResidentSource<'a> {
             return out;
         }
         let m = self.fetch_cold(&mut st, g, t0, t1);
-        let bytes = panel_bytes(m.rows(), m.cols());
+        let bytes = m.payload_bytes();
         if self.admit(&mut st, g, bytes) {
             st.ram_bytes += bytes;
             st.slots[g].stamp = tick;
@@ -396,11 +455,16 @@ impl<'a> ResidentSource<'a> {
     /// compute (+ write-through) otherwise. Reads are retried with backoff
     /// first; an arena that still fails is dropped wholesale — every
     /// recorded offset becomes recompute.
-    fn fetch_cold(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Matrix {
+    fn fetch_cold(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Tile {
         let spilled = st.slots[g].spill_off.filter(|_| st.arena.is_some());
         if let Some(off) = spilled {
-            let (m, retries) =
-                read_tile_retrying(st.arena.as_mut().unwrap(), off, t1 - t0, self.inner.cols());
+            let (m, retries) = read_tile_retrying(
+                st.arena.as_mut().unwrap(),
+                off,
+                t1 - t0,
+                self.inner.cols(),
+                self.precision,
+            );
             st.stats.io_retries += retries;
             if let Some(m) = m {
                 st.stats.spill_hits += 1;
@@ -418,10 +482,10 @@ impl<'a> ResidentSource<'a> {
     /// the arena. Runs under the state lock: tile production is already
     /// serialized per pipeline (one producer), and inner-source compute
     /// parallelism lives below this layer (the oracle's GEMM pool).
-    fn compute_tile(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Matrix {
+    fn compute_tile(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Tile {
         let m = {
             let _s = obs::span(Stage::ResidencyRecompute);
-            self.inner.tile(t0, t1)
+            self.inner.tile_elem(t0, t1, self.precision)
         };
         st.stats.computes += 1;
         if st.slots[g].spill_off.is_none() {
@@ -431,7 +495,7 @@ impl<'a> ResidentSource<'a> {
                 match wrote {
                     Some(off) => {
                         st.slots[g].spill_off = Some(off);
-                        st.stats.spilled_bytes += panel_bytes(m.rows(), m.cols());
+                        st.stats.spilled_bytes += m.payload_bytes();
                     }
                     None => {
                         // write failed even after retries: degrade to
@@ -485,10 +549,7 @@ impl<'a> ResidentSource<'a> {
             if st.slots[i].uses >= uses_g {
                 return false; // would displace a tile at least as hot
             }
-            freed += {
-                let m = st.slots[i].ram.as_ref().unwrap();
-                panel_bytes(m.rows(), m.cols())
-            };
+            freed += st.slots[i].ram.as_ref().unwrap().payload_bytes();
             victims.push(i);
         }
         if st.ram_bytes - freed + bytes > self.ram_budget {
@@ -496,10 +557,54 @@ impl<'a> ResidentSource<'a> {
         }
         for &v in &victims {
             let m = st.slots[v].ram.take().unwrap();
-            st.ram_bytes -= panel_bytes(m.rows(), m.cols());
+            st.ram_bytes -= m.payload_bytes();
             st.stats.evictions += 1;
         }
         true
+    }
+}
+
+impl ResidentSource<'_> {
+    /// Serve `[r0, r1)` at the layer's configured precision (the cache is
+    /// homogeneous — every slot and arena record holds one element width).
+    fn tile_native(&self, r0: usize, r1: usize) -> Tile {
+        let n = self.inner.rows();
+        if r1 <= r0 || n == 0 {
+            return self.inner.tile_elem(r0, r1, self.precision);
+        }
+        debug_assert!(r1 <= n, "tile request past the source");
+        let cols = self.inner.cols();
+        let g0 = r0 / self.grid;
+        let g1 = (r1 - 1) / self.grid;
+        if g0 == g1 && (r0, r1) == self.bounds(g0) {
+            // grid-aligned request: hand the tile over whole
+            return self.take_grid_tile(g0);
+        }
+        let mut out = match self.precision {
+            Precision::F64 => Tile::F64(Matrix::zeros(r1 - r0, cols)),
+            Precision::F32 => Tile::F32(MatrixF32::zeros(r1 - r0, cols)),
+        };
+        for g in g0..=g1 {
+            let (t0, t1) = self.bounds(g);
+            self.with_grid_tile(g, |tile| {
+                let lo = r0.max(t0);
+                let hi = r1.min(t1);
+                match (&mut out, tile) {
+                    (Tile::F64(o), Tile::F64(m)) => {
+                        for i in lo..hi {
+                            o.row_mut(i - r0).copy_from_slice(m.row(i - t0));
+                        }
+                    }
+                    (Tile::F32(o), Tile::F32(m)) => {
+                        for i in lo..hi {
+                            o.row_mut(i - r0).copy_from_slice(m.row(i - t0));
+                        }
+                    }
+                    _ => unreachable!("residency cache is width-homogeneous"),
+                }
+            });
+        }
+        out
     }
 }
 
@@ -513,30 +618,26 @@ impl TileSource for ResidentSource<'_> {
     }
 
     fn tile(&self, r0: usize, r1: usize) -> Matrix {
-        let n = self.inner.rows();
-        if r1 <= r0 || n == 0 {
-            return self.inner.tile(r0, r1);
+        match self.tile_native(r0, r1) {
+            Tile::F64(m) => m,
+            // exact, so an f32-resident layer still serves f64 callers
+            Tile::F32(m) => m.promote(),
         }
-        debug_assert!(r1 <= n, "tile request past the source");
-        let cols = self.inner.cols();
-        let g0 = r0 / self.grid;
-        let g1 = (r1 - 1) / self.grid;
-        if g0 == g1 && (r0, r1) == self.bounds(g0) {
-            // grid-aligned request: hand the tile over whole
-            return self.take_grid_tile(g0);
+    }
+
+    fn tile_f32(&self, r0: usize, r1: usize) -> MatrixF32 {
+        match self.tile_native(r0, r1) {
+            Tile::F32(m) => m,
+            Tile::F64(m) => m.demote(),
         }
-        let mut out = Matrix::zeros(r1 - r0, cols);
-        for g in g0..=g1 {
-            let (t0, t1) = self.bounds(g);
-            self.with_grid_tile(g, |tile| {
-                let lo = r0.max(t0);
-                let hi = r1.min(t1);
-                for i in lo..hi {
-                    out.row_mut(i - r0).copy_from_slice(tile.row(i - t0));
-                }
-            });
+    }
+
+    fn tile_elem(&self, r0: usize, r1: usize, prec: Precision) -> Tile {
+        match (prec, self.tile_native(r0, r1)) {
+            (Precision::F64, Tile::F32(m)) => Tile::F64(m.promote()),
+            (Precision::F32, Tile::F64(m)) => Tile::F32(m.demote()),
+            (_, t) => t,
         }
-        out
     }
 }
 
@@ -608,6 +709,51 @@ mod tests {
         assert_eq!(st.spill_hits as usize, 2 * tiles, "later passes read the arena");
         assert_eq!(st.ram_hits, 0, "zero RAM budget keeps nothing hot");
         assert_eq!(st.spilled_bytes, 40 * 4 * 8);
+    }
+
+    #[test]
+    fn f32_residency_halves_spill_bytes_and_round_trips_bit_exactly() {
+        let inner = counting(40, 4, 21);
+        let cfg = ResidencyConfig::new(0)
+            .with_tile_rows(8)
+            .with_precision(Precision::F32);
+        let src = ResidentSource::new(&inner, &cfg);
+        assert_eq!(src.precision(), Precision::F32);
+        let tiles = 40usize.div_ceil(8);
+        // the rounded-once tile values every pass must serve bit-exactly
+        let narrow = inner.a.demote().promote();
+        for _ in 0..2 {
+            let mut collect = CollectConsumer::new(40, 4);
+            run_pipeline(&src, 8, 2, &mut [&mut collect]);
+            assert_eq!(collect.into_matrix().max_abs_diff(&narrow), 0.0);
+        }
+        let st = src.stats();
+        assert_eq!(st.spilled_bytes, 40 * 4 * 4, "f32 spills half the f64 bytes");
+        assert_eq!(st.spill_hits as usize, tiles, "pass 2 reads the arena");
+        assert_eq!(inner.computes.load(Ordering::SeqCst), tiles, "source paid once per tile");
+    }
+
+    #[test]
+    fn f32_unaligned_requests_assemble_bit_exactly() {
+        let inner = counting(29, 3, 22);
+        let cfg = ResidencyConfig::new(29 * 3 * 4 / 2)
+            .with_tile_rows(8)
+            .with_precision(Precision::F32);
+        let src = ResidentSource::new(&inner, &cfg);
+        let narrow = inner.a.demote().promote();
+        for (r0, r1) in [(0usize, 29usize), (3, 11), (7, 8), (15, 29), (0, 1)] {
+            let got = src.tile(r0, r1);
+            assert_eq!(
+                got.max_abs_diff(&narrow.block(r0, r1, 0, 3)),
+                0.0,
+                "[{r0},{r1})"
+            );
+            if let Tile::F32(m) = src.tile_elem(r0, r1, Precision::F32) {
+                assert_eq!(m.promote().max_abs_diff(&got), 0.0, "typed path agrees");
+            } else {
+                panic!("f32-resident layer must serve native f32 tiles");
+            }
+        }
     }
 
     #[test]

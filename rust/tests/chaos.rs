@@ -205,6 +205,7 @@ fn req(id: u64, policy: Option<ExecPolicy>) -> ApproxRequest {
         k: 3,
         seed: id,
         policy,
+        precision: fastspsd::stream::Precision::F64,
         deadline: None,
     }
 }

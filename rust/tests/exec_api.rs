@@ -18,7 +18,7 @@ use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::sketch::SketchKind;
 use fastspsd::spsd::{FastConfig, LeverageBasis, SpsdApprox};
-use fastspsd::stream::{OracleColumnsSource, StreamConfig};
+use fastspsd::stream::{OracleColumnsSource, Precision, StreamConfig};
 use fastspsd::util::Rng;
 use std::sync::Arc;
 
@@ -314,6 +314,85 @@ fn deprecated_shims_forward_exactly() {
     let w2 = exec::solve_regularized(&src, &uspd, 0.3, &y, &ExecPolicy::resident(0).with_tile_rows(7))
         .result;
     assert_eq!(w1, w2, "shim solve_regularized_resident");
+}
+
+/// The mixed-precision acceptance sweep (ISSUE 8): every method × policy
+/// cell re-run with the policy narrowed to f32 must approximate the exact
+/// kernel within 10× the f64 cell's error — the ~1e-7 relative tile
+/// rounding has to disappear under the sampling error — and the report
+/// must surface the width it ran at.
+#[test]
+fn f32_matrix_stays_within_10x_of_f64_error() {
+    let o = oracle();
+    let p = landmarks();
+    let k = o.full();
+    let build = |m: usize, pol: &ExecPolicy| -> SpsdApprox {
+        match m {
+            0 => exec::nystrom(&o, &p, pol).result,
+            1 => exec::fast(&o, &p, FastConfig::uniform(20), pol, &mut Rng::new(99)).result,
+            2 => exec::fast(&o, &p, FastConfig::leverage(20), pol, &mut Rng::new(99)).result,
+            _ => exec::prototype(&o, &p, pol).result,
+        }
+    };
+    for m in 0..4usize {
+        for (label, pol) in policies() {
+            let narrow = pol.clone().with_precision(Precision::F32);
+            let a64 = build(m, &pol);
+            let a32 = build(m, &narrow);
+            let e64 = a64.rel_fro_error(&k);
+            let e32 = a32.rel_fro_error(&k);
+            assert!(
+                e32 <= 10.0 * e64 + 1e-12,
+                "{} {label}: f32 err {e32} vs f64 err {e64}",
+                a64.method
+            );
+        }
+    }
+    // The report records the served width for both cells.
+    let rep64 = exec::nystrom(&o, &p, &ExecPolicy::streamed(7));
+    let rep32 = exec::nystrom(&o, &p, &ExecPolicy::streamed(7).with_precision(Precision::F32));
+    assert_eq!(rep64.meta.precision, Precision::F64);
+    assert_eq!(rep32.meta.precision, Precision::F32);
+}
+
+/// f32 selection paths are tile-size invariant: tiles are converted (or
+/// natively computed) row-by-row, so conversion commutes with tiling and
+/// gathers, the leverage fold, and the sampler see the same bits at any
+/// tile height — streamed or reloaded through the f32 spill arena.
+#[test]
+fn f32_selection_paths_are_tile_invariant() {
+    let o = oracle();
+    let p = landmarks();
+    let build = |m: usize, pol: &ExecPolicy| -> SpsdApprox {
+        match m {
+            0 => exec::nystrom(&o, &p, pol).result,
+            1 => exec::fast(&o, &p, FastConfig::uniform(20), pol, &mut Rng::new(99)).result,
+            _ => exec::fast(&o, &p, FastConfig::leverage(20), pol, &mut Rng::new(99)).result,
+        }
+    };
+    for m in 0..3usize {
+        let reference = build(m, &ExecPolicy::streamed(1).with_precision(Precision::F32));
+        for t in [7usize, 64, N] {
+            let b = build(m, &ExecPolicy::streamed(t).with_precision(Precision::F32));
+            assert_eq!(reference.c.max_abs_diff(&b.c), 0.0, "method {m} tile={t}: f32 C bits");
+            assert_eq!(reference.u.max_abs_diff(&b.u), 0.0, "method {m} tile={t}: f32 U bits");
+        }
+        for budget in [0u64, u64::MAX] {
+            let pol =
+                ExecPolicy::resident(budget).with_tile_rows(7).with_precision(Precision::F32);
+            let r = build(m, &pol);
+            assert_eq!(
+                reference.c.max_abs_diff(&r.c),
+                0.0,
+                "method {m} resident[{budget}]: f32 C bits"
+            );
+            assert_eq!(
+                reference.u.max_abs_diff(&r.u),
+                0.0,
+                "method {m} resident[{budget}]: f32 U bits"
+            );
+        }
+    }
 }
 
 /// RunReport accounting invariants that hold for every policy.

@@ -133,6 +133,7 @@ fn service_over_pjrt_engine_if_available() {
                 // alternate materialized / tile-pipeline policies: both
                 // must serve identical results through the same service
                 policy: if i % 2 == 0 { None } else { Some(ExecPolicy::streamed(64)) },
+                precision: fastspsd::stream::Precision::F64,
                 deadline: None,
             },
             tx.clone(),

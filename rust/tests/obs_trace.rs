@@ -139,6 +139,7 @@ fn served_resident_spill_leverage_request_is_fully_profiled() {
             k: 3,
             seed: 7,
             policy: Some(ExecPolicy::resident(0).with_tile_rows(16)),
+            precision: fastspsd::stream::Precision::F64,
             deadline: None,
         },
         tx,

@@ -79,6 +79,7 @@ fn traced_requests_emit_wellformed_chrome_json_covering_mandatory_stages() {
             k: 3,
             seed: 1,
             policy: Some(ExecPolicy::streamed(16)),
+            precision: fastspsd::stream::Precision::F64,
             deadline: None,
         },
     );
@@ -101,6 +102,7 @@ fn traced_requests_emit_wellformed_chrome_json_covering_mandatory_stages() {
             k: 3,
             seed: 2,
             policy: Some(ExecPolicy::resident(0).with_tile_rows(16)),
+            precision: fastspsd::stream::Precision::F64,
             deadline: None,
         },
     );
@@ -130,6 +132,7 @@ fn traced_requests_emit_wellformed_chrome_json_covering_mandatory_stages() {
             k: 3,
             seed: 5,
             policy: None,
+            precision: fastspsd::stream::Precision::F64,
             deadline: None,
         },
         tx,
