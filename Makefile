@@ -20,8 +20,13 @@
 #   make chaos        — the deterministic fault-injection matrix
 #                       (rust/tests/chaos.rs) over the pinned seed set:
 #                       {spill write, spill read, oracle tile, consumer
-#                       fold} × {transient, persistent} must end typed or
-#                       degraded, never hung. Part of `make ci`.
+#                       fold, spill corrupt, poisoned tile} × {transient,
+#                       persistent} must end typed or degraded — never
+#                       silently wrong bits, never hung. Corrupt spill
+#                       records are caught by the per-record checksum and
+#                       recomputed bit-identically; poisoned tiles fail
+#                       typed under ValidateMode before any fold sees
+#                       them. Part of `make ci`.
 #   make trace-smoke  — serve one streamed and one resident-with-spill
 #                       request with tracing on and validate the emitted
 #                       Chrome trace_event JSON covers the mandatory

@@ -11,12 +11,12 @@
 
 use fastspsd::benchkit::alloc::{AllocGauge, CountingAlloc};
 use fastspsd::benchkit::{black_box, BenchSuite};
-use fastspsd::coordinator::oracle::{KernelOracle, RbfOracle};
+use fastspsd::coordinator::oracle::{DenseOracle, KernelOracle, RbfOracle};
 use fastspsd::cur::FastCurConfig;
 use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::spsd::{self, FastConfig, LeverageBasis};
-use fastspsd::stream::{OracleColumnsSource, Precision};
+use fastspsd::stream::{OracleColumnsSource, Precision, ValidateMode};
 use fastspsd::util::Rng;
 use std::sync::Arc;
 
@@ -322,6 +322,93 @@ fn main() {
         );
         suite.counter("residency.io_retries", st.io_retries as f64);
         suite.counter("residency.spill_hits_after_fault", st.spill_hits as f64);
+    }
+
+    // ---- integrity: checksum catches, quarantine, guarded solves --------
+    // The three integrity counters of EXPERIMENTS.md §Integrity land in
+    // BENCH_stream.json so regressions in the detect-and-recover machinery
+    // (silently passing corrupt bytes, validation not engaging, guards not
+    // escalating on degenerate cores) show up in the artifact trajectory.
+    {
+        use fastspsd::coordinator::{ApproxRequest, ApproxService, MethodSpec, ServiceConfig};
+        use fastspsd::testkit::faults::{self, FaultPlan, FaultPoint, FaultSpec};
+
+        // A corrupted spill record is detected by its checksum on read-back
+        // and transparently recomputed: the run succeeds, the catch counts.
+        let plan = std::sync::Arc::new(
+            FaultPlan::none().fail(FaultPoint::SpillCorrupt, FaultSpec::transient(1)),
+        );
+        let spill = ExecPolicy::resident(0).with_tile_rows(DEFAULT_TILE);
+        let armed = faults::arm(std::sync::Arc::clone(&plan));
+        let rep = exec::top_k_eigs(&src, &u_id, k_eigs, 7, &spill);
+        drop(armed);
+        let st = rep.meta.residency.expect("resident policies report stats");
+        println!(
+            "  corrupt spill record: {} checksum catches, recomputed (health mirrors: {})",
+            st.corrupt_reads, rep.meta.numeric_health.corrupt_reads
+        );
+        suite.counter("residency.corrupt_reads", st.corrupt_reads as f64);
+
+        // A poisoned tile under NonFinite validation faults the first
+        // attempt; retry_faulted serves the request clean on the second and
+        // the reply carries the quarantine count from the failed attempt.
+        let n_q = if quick { 300 } else { 600 };
+        let mut rng = Rng::new(23);
+        let q_oracle: std::sync::Arc<dyn KernelOracle + Send + Sync> =
+            std::sync::Arc::new(RbfOracle::cpu(Arc::new(Matrix::randn(n_q, 8, &mut rng)), 0.4));
+        let svc = ApproxService::new(
+            std::sync::Arc::clone(&q_oracle),
+            ServiceConfig { workers: 1, retry_faulted: 1, ..Default::default() },
+        );
+        let plan = std::sync::Arc::new(
+            FaultPlan::none().fail(FaultPoint::PoisonTile, FaultSpec::transient(1)),
+        );
+        let armed = faults::arm(std::sync::Arc::clone(&plan));
+        let (tx, rx) = std::sync::mpsc::channel();
+        svc.submit(
+            ApproxRequest {
+                id: 0,
+                method: MethodSpec::Nystrom,
+                c: 16,
+                k: 4,
+                seed: 7,
+                policy: Some(ExecPolicy::streamed(64).with_validate(ValidateMode::NonFinite)),
+                precision: Precision::F64,
+                deadline: None,
+            },
+            tx.clone(),
+        );
+        svc.drain();
+        drop(armed);
+        drop(tx);
+        let r = rx.recv().expect("request answered");
+        let quarantined = r.numeric_health.map_or(0, |h| h.quarantined_tiles);
+        println!(
+            "  poisoned tile + retry: error={:?}, {} tiles quarantined across attempts",
+            r.error.is_some(),
+            quarantined
+        );
+        suite.counter("pipeline.quarantined_tiles", quarantined as f64);
+
+        // A rank-deficient core (rank-2 Gram, 16 landmarks) forces the
+        // guarded W⁺ through the regularization ladder.
+        let n_low = if quick { 300 } else { 600 };
+        let mut rng = Rng::new(29);
+        let g_low = Matrix::randn(n_low, 2, &mut rng);
+        let o_low = DenseOracle::new(g_low.matmul_tr(&g_low));
+        let p_low = spsd::uniform_p(n_low, 16, &mut rng);
+        suite.bench(&format!("nystrom guarded rank-deficient n={n_low}"), || {
+            black_box(exec::nystrom(&o_low, &p_low, &mat));
+        });
+        let h = exec::nystrom(&o_low, &p_low, &mat).meta.numeric_health;
+        println!(
+            "    guard: cond est {:.3e}, {} after {} ladder rungs",
+            h.core_cond_est,
+            h.regularization.name(),
+            h.escalations
+        );
+        suite.counter("solve.regularization_escalations", h.escalations as f64);
+        suite.counter("solve.core_cond_est", h.core_cond_est.min(1e300));
     }
 
     // ---- observability: per-stage profile + pipeline stall fractions ----

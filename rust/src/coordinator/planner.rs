@@ -21,7 +21,7 @@ use crate::exec::{DegradeAction, DegradeInfo, ExecPolicy};
 use crate::obs::{self, Stage};
 use crate::sketch::SketchKind;
 use crate::stream::{
-    panel_bytes, panel_bytes_prec, Precision, StreamConfig, DEFAULT_QUEUE_DEPTH,
+    panel_bytes, panel_bytes_prec, Precision, StreamConfig, ValidateMode, DEFAULT_QUEUE_DEPTH,
     DEFAULT_RESIDENT_TILE_ROWS,
 };
 
@@ -338,6 +338,7 @@ impl ResidencySplit {
             tile_rows: Some(self.tile_rows),
             spill_dir: None,
             precision: Precision::F64,
+            validate: ValidateMode::Off,
         }
     }
 }
@@ -629,7 +630,7 @@ fn tightened_policy(n: usize, method: &MethodSpec, policy: &ExecPolicy) -> Optio
         }
         // A resident cache budget is pure working-set headroom; dropping
         // it to 0 keeps results bit-identical (spill still dedups reads).
-        (_, ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision })
+        (_, ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision, validate })
             if *budget > 0 =>
         {
             Some(ExecPolicy::Resident {
@@ -638,6 +639,7 @@ fn tightened_policy(n: usize, method: &MethodSpec, policy: &ExecPolicy) -> Optio
                 tile_rows: *tile_rows,
                 spill_dir: spill_dir.clone(),
                 precision: *precision,
+                validate: *validate,
             })
         }
         // Streamed column gathers pay live-tile bytes on top of the panel
@@ -1026,12 +1028,13 @@ mod tests {
     fn residency_split_exports_its_policy() {
         let s = plan_residency(100_000, 32, 4 << 20);
         match s.policy() {
-            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision } => {
+            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision, validate } => {
                 assert_eq!(budget, s.cache_budget);
                 assert_eq!(spill, s.spill);
                 assert_eq!(tile_rows, Some(s.tile_rows));
                 assert!(spill_dir.is_none());
                 assert_eq!(precision, Precision::F64, "splits default to the wide plane");
+                assert_eq!(validate, ValidateMode::Off, "splits default to free streaming");
             }
             other => panic!("expected a resident policy, got {other:?}"),
         }

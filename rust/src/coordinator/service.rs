@@ -47,11 +47,11 @@ use super::oracle::KernelOracle;
 use super::planner;
 use crate::cur::{self, FastCurConfig};
 use crate::exec::{self, DegradeInfo, ExecPolicy, RunMeta};
-use crate::linalg::svd_thin;
+use crate::linalg::{guard, svd_thin, NumericHealth};
 use crate::obs::{self, sink, Stage, StageProfile};
 use crate::pool::ThreadPool;
 use crate::spsd::{self, FastConfig, LeverageBasis};
-use crate::stream::Precision;
+use crate::stream::{checkpoint, CheckpointConfig, Precision};
 use crate::util::Rng;
 use std::cell::Cell;
 use std::collections::VecDeque;
@@ -154,6 +154,14 @@ pub struct ApproxResponse {
     /// Seconds admission spent walking this request's degrade ladder,
     /// summed over every attempt (0 when rung 0 reserved directly).
     pub ladder_secs: f64,
+    /// Numeric integrity of the served build (mirrors
+    /// `meta.numeric_health`, folding in health observed by failed
+    /// attempts of a retried request): worst core condition estimate,
+    /// strongest regularization, quarantined tiles, corrupt spill reads.
+    /// A finally-Faulted reply still carries what its attempts observed;
+    /// `None` when no build ran (rejected/expired/stopping) or a failed
+    /// build observed nothing noteworthy.
+    pub numeric_health: Option<NumericHealth>,
     /// Why the request was not served (`None` on success).
     pub error: Option<ServiceError>,
 }
@@ -187,6 +195,19 @@ pub struct ServiceConfig {
     /// environment variable; `None` = no trace files (spans still feed
     /// `RunMeta::stage_profile` whenever the recorder is installed).
     pub trace_dir: Option<PathBuf>,
+    /// Extra worker-side attempts for a build that panics or fails
+    /// (default 0 = fail fast, the pre-retry behavior). With retries
+    /// enabled each request gets a private checkpoint directory under
+    /// `spill_dir` (or the system temp dir): streaming folds persist
+    /// their state every [`checkpoint::DEFAULT_CKPT_EVERY`] tiles
+    /// (`FASTSPSD_CKPT_EVERY` overrides), and a retried attempt resumes
+    /// from the last checkpoint instead of re-charging the oracle for
+    /// tiles already folded — bit-identically. `metrics.faulted` /
+    /// `metrics.failed` count per *attempt*; a request that recovers on
+    /// a retry still counts once in `metrics.completed`, and the health
+    /// its failed attempts observed is merged into the reply's
+    /// [`ApproxResponse::numeric_health`].
+    pub retry_faulted: usize,
 }
 
 impl Default for ServiceConfig {
@@ -202,6 +223,7 @@ impl Default for ServiceConfig {
             trace_dir: std::env::var_os("FASTSPSD_TRACE")
                 .filter(|v| !v.is_empty())
                 .map(PathBuf::from),
+            retry_faulted: 0,
         }
     }
 }
@@ -252,6 +274,7 @@ struct Shared {
     default_deadline: Duration,
     degrade_queue_depth: usize,
     trace_dir: Option<PathBuf>,
+    retry_faulted: usize,
     stopping: AtomicBool,
     queue: Mutex<VecDeque<QueuedJob>>,
     /// Woken when headroom opens (a reservation drops), when a job is
@@ -288,6 +311,7 @@ impl ApproxService {
             default_deadline: cfg.default_deadline,
             degrade_queue_depth: cfg.degrade_queue_depth.max(1),
             trace_dir: cfg.trace_dir,
+            retry_faulted: cfg.retry_faulted,
             stopping: AtomicBool::new(false),
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
@@ -534,6 +558,7 @@ fn error_response(id: u64, method: String, error: ServiceError) -> ApproxRespons
         precision: Precision::F64,
         queue_wait_secs: 0.0,
         ladder_secs: 0.0,
+        numeric_health: None,
         error: Some(error),
     }
 }
@@ -615,28 +640,77 @@ fn dispatch(s: &Arc<Shared>, job: QueuedJob, serve: ServeAs) {
             let waited = obs::now_ns().saturating_sub(enqueue_ns);
             obs::record_manual(Stage::AdmissionQueue, trace, enqueue_ns, waited);
         }
-        let outcome =
-            catch_unwind(AssertUnwindSafe(|| run_request(shared.oracle.as_ref(), &req, &serve, submitted)));
-        let mut resp = match outcome {
-            Ok(Ok(r)) => {
-                shared.metrics.completed.inc();
-                if serve.degraded.is_some() {
-                    shared.metrics.degraded.inc();
+        // With retries enabled, arm per-request checkpointing: every
+        // attempt (first included) runs under the same private directory,
+        // so a retried attempt's pass k restores the fold state attempt
+        // k-1 persisted and re-charges the oracle only for tiles after
+        // the checkpoint. Health observed by failed attempts (quarantined
+        // tiles, escalations the aborted Scope never drained) is carried
+        // into the final reply rather than lost.
+        let ckpt_dir = (shared.retry_faulted > 0).then(|| {
+            shared
+                .spill_dir
+                .clone()
+                .unwrap_or_else(std::env::temp_dir)
+                .join(format!("fastspsd-ckpt-req-{}", req.id))
+        });
+        let mut carried = NumericHealth::default();
+        let mut attempt = 0usize;
+        let mut resp = loop {
+            let _ckpt = ckpt_dir.as_ref().map(|d| {
+                let _ = std::fs::create_dir_all(d);
+                checkpoint::arm(&CheckpointConfig::new(d))
+            });
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                run_request(shared.oracle.as_ref(), &req, &serve, submitted)
+            }));
+            match outcome {
+                Ok(Ok(r)) => {
+                    shared.metrics.completed.inc();
+                    if serve.degraded.is_some() {
+                        shared.metrics.degraded.inc();
+                    }
+                    break r;
                 }
-                r
-            }
-            Ok(Err(e)) => {
-                shared.metrics.failed.inc();
-                error_response(req.id, serve.method.name(), ServiceError::Faulted(e.to_string()))
-            }
-            Err(payload) => {
-                // Panic isolation: the request fails alone; the worker,
-                // the pool, and every other request keep going.
-                shared.metrics.faulted.inc();
-                let msg = panic_message(payload.as_ref());
-                error_response(req.id, serve.method.name(), ServiceError::Faulted(msg))
+                Ok(Err(e)) => {
+                    shared.metrics.failed.inc();
+                    carried.merge(&guard::take_health());
+                    if attempt < shared.retry_faulted {
+                        attempt += 1;
+                        continue;
+                    }
+                    break error_response(
+                        req.id,
+                        serve.method.name(),
+                        ServiceError::Faulted(e.to_string()),
+                    );
+                }
+                Err(payload) => {
+                    // Panic isolation: the request fails alone; the
+                    // worker, the pool, and every other request keep
+                    // going (and may retry, resuming from checkpoints).
+                    shared.metrics.faulted.inc();
+                    carried.merge(&guard::take_health());
+                    if attempt < shared.retry_faulted {
+                        attempt += 1;
+                        continue;
+                    }
+                    let msg = panic_message(payload.as_ref());
+                    break error_response(req.id, serve.method.name(), ServiceError::Faulted(msg));
+                }
             }
         };
+        if let Some(d) = &ckpt_dir {
+            let _ = std::fs::remove_dir_all(d);
+        }
+        if let Some(meta) = resp.meta.as_mut() {
+            meta.numeric_health.merge(&carried);
+            resp.numeric_health = Some(meta.numeric_health);
+        } else if carried != NumericHealth::default() {
+            // Even a finally-Faulted reply reports what its attempts saw
+            // (quarantined tiles, escalations) — failures stay diagnosable.
+            resp.numeric_health = Some(carried);
+        }
         resp.queue_wait_secs = queue_wait.as_secs_f64();
         resp.ladder_secs = ladder_ns as f64 / 1e9;
         if trace != 0 {
@@ -756,6 +830,7 @@ fn run_request(
     meta.predicted_peak_bytes = Some(serve.predicted);
     meta.degraded = serve.degraded.clone();
     let precision = meta.precision;
+    let numeric_health = Some(meta.numeric_health);
     Ok(ApproxResponse {
         id: req.id,
         method: serve.method.name(),
@@ -767,6 +842,7 @@ fn run_request(
         precision,
         queue_wait_secs: 0.0, // filled by dispatch, which owns the clock
         ladder_secs: 0.0,
+        numeric_health,
         error: None,
     })
 }
@@ -836,6 +912,9 @@ mod tests {
             assert!(meta.compute_secs <= r.total_secs + 1e-9);
             assert!(meta.predicted_peak_bytes.unwrap() > 0);
             assert!(meta.degraded.is_none());
+            let health = r.numeric_health.expect("served responses carry numeric health");
+            assert_eq!(health, meta.numeric_health, "response mirrors meta");
+            assert!(health.is_clean(), "RBF kernels build clean: {health:?}");
         }
         // prototype and CUR observe n² + extras; nystrom the fewest
         assert!(entries_of(&resps[1]) > entries_of(&resps[2]));

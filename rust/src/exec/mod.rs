@@ -41,7 +41,7 @@ use crate::benchkit::alloc::{self, AllocGauge};
 use crate::coordinator::oracle::KernelOracle;
 use crate::coordinator::planner::{self, MethodSpec};
 use crate::cur::{self, CurDecomp, FastCurConfig};
-use crate::linalg::Matrix;
+use crate::linalg::{guard, Matrix};
 use crate::obs::{self, Stage, StageProfile};
 use crate::spsd::{self, FastConfig, SpsdApprox};
 use crate::stream::{self, TileSource};
@@ -82,6 +82,9 @@ impl Scope {
         };
         // Open the umbrella only after the trace tag is in place.
         let span = (trace != 0).then(|| obs::span(Stage::ExecRun));
+        // Discard numeric-health residue left on this thread by earlier
+        // unrelated work, so the run's record starts clean.
+        let _ = guard::take_health();
         Scope { sw: Stopwatch::start(), gauge: AllocGauge::start(), trace, owned, tscope, span }
     }
 
@@ -106,6 +109,13 @@ impl Scope {
             };
             StageProfile::from_records(&records, obs::current_thread_id())
         });
+        // Drain the thread-local numeric-health record (guarded core
+        // solves + quarantine notes all ran on this thread) and fold in
+        // the residency layer's corrupt-read counter.
+        let mut numeric_health = guard::take_health();
+        if let Some(rs) = &residency {
+            numeric_health.corrupt_reads = rs.corrupt_reads;
+        }
         RunMeta {
             entries,
             compute_secs,
@@ -115,6 +125,7 @@ impl Scope {
             degraded: None,
             precision,
             stage_profile,
+            numeric_health,
         }
     }
 }

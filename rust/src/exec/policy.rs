@@ -3,9 +3,11 @@
 //! to run it* ([`ExecPolicy`]) and from *what happened*
 //! ([`RunReport`] / [`RunMeta`]).
 
+use crate::linalg::NumericHealth;
 use crate::obs::StageProfile;
 use crate::stream::{
-    Precision, ResidencyConfig, ResidencyStats, StreamConfig, DEFAULT_RESIDENT_TILE_ROWS,
+    Precision, ResidencyConfig, ResidencyStats, StreamConfig, ValidateMode,
+    DEFAULT_RESIDENT_TILE_ROWS,
 };
 use std::path::PathBuf;
 
@@ -53,6 +55,9 @@ pub enum ExecPolicy {
         /// Element width tiles are computed, cached, and spilled at
         /// (`F32` halves cache/spill bytes; folds still accumulate f64).
         precision: Precision,
+        /// Tile quarantine mode for the pipeline passes this policy runs
+        /// (`Off` = the zero-overhead bit-compat default).
+        validate: ValidateMode,
     },
 }
 
@@ -71,6 +76,7 @@ impl ExecPolicy {
             tile_rows: None,
             spill_dir: None,
             precision: Precision::F64,
+            validate: ValidateMode::Off,
         }
     }
 
@@ -84,6 +90,7 @@ impl ExecPolicy {
             tile_rows: None,
             spill_dir: None,
             precision: Precision::F64,
+            validate: ValidateMode::Off,
         }
     }
 
@@ -130,14 +137,41 @@ impl ExecPolicy {
         }
     }
 
+    /// Pick the tile quarantine mode. Takes effect on the
+    /// [`Streamed`](ExecPolicy::Streamed) and
+    /// [`Resident`](ExecPolicy::Resident) variants; a deliberate no-op on
+    /// [`Materialized`](ExecPolicy::Materialized) (whole-matrix builds
+    /// have no tile pipeline to scan — its one inline tile is validated
+    /// only when routed through a streamed config).
+    pub fn with_validate(mut self, v: ValidateMode) -> Self {
+        match &mut self {
+            ExecPolicy::Materialized => {}
+            ExecPolicy::Streamed(cfg) => cfg.validate = v,
+            ExecPolicy::Resident { validate, .. } => *validate = v,
+        }
+        self
+    }
+
+    /// The tile quarantine mode this policy runs with
+    /// ([`ValidateMode::Off`] for
+    /// [`Materialized`](ExecPolicy::Materialized)).
+    pub fn validate(&self) -> ValidateMode {
+        match self {
+            ExecPolicy::Materialized => ValidateMode::Off,
+            ExecPolicy::Streamed(cfg) => cfg.validate,
+            ExecPolicy::Resident { validate, .. } => *validate,
+        }
+    }
+
     /// The pipeline configuration this policy runs with.
     pub(crate) fn stream_config(&self) -> StreamConfig {
         match self {
             ExecPolicy::Materialized => StreamConfig::whole(),
             ExecPolicy::Streamed(cfg) => *cfg,
-            ExecPolicy::Resident { tile_rows, precision, .. } => {
+            ExecPolicy::Resident { tile_rows, precision, validate, .. } => {
                 StreamConfig::tiled(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS))
                     .with_precision(*precision)
+                    .with_validate(*validate)
             }
         }
     }
@@ -148,7 +182,7 @@ impl ExecPolicy {
     /// align with cached tiles.
     pub(crate) fn residency_config(&self) -> Option<ResidencyConfig> {
         match self {
-            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision } => {
+            ExecPolicy::Resident { budget, spill, tile_rows, spill_dir, precision, .. } => {
                 let mut rc = if *spill {
                     ResidencyConfig::new(*budget)
                 } else {
@@ -273,6 +307,10 @@ pub struct RunMeta {
     /// `None` with the recorder disabled — tracing off means no bit of the
     /// report changes.
     pub stage_profile: Option<StageProfile>,
+    /// Numeric integrity record: worst core condition estimate, strongest
+    /// regularization, quarantined tiles, and corrupt spill reads. All
+    /// zeros/`None` (see [`NumericHealth::is_clean`]) on a clean run.
+    pub numeric_health: NumericHealth,
 }
 
 /// The uniform return of every `exec` entry point: the algorithm's result
@@ -347,5 +385,25 @@ mod tests {
         // Materialized is the f64 reference path: narrowing is a no-op
         let m = ExecPolicy::Materialized.with_precision(Precision::F32);
         assert_eq!(m.precision(), Precision::F64);
+    }
+
+    #[test]
+    fn validate_threads_through_policy_resolution() {
+        // default everywhere is Off — the zero-overhead bit-compat path
+        assert_eq!(ExecPolicy::Materialized.validate(), ValidateMode::Off);
+        assert_eq!(ExecPolicy::streamed(64).validate(), ValidateMode::Off);
+        assert_eq!(ExecPolicy::resident(1 << 20).validate(), ValidateMode::Off);
+
+        let st = ExecPolicy::streamed(64).with_validate(ValidateMode::NonFinite);
+        assert_eq!(st.validate(), ValidateMode::NonFinite);
+        assert_eq!(st.stream_config().validate, ValidateMode::NonFinite);
+
+        let r = ExecPolicy::resident(1 << 20).with_validate(ValidateMode::Full);
+        assert_eq!(r.validate(), ValidateMode::Full);
+        assert_eq!(r.stream_config().validate, ValidateMode::Full);
+
+        // Materialized has no tile pipeline: a no-op, like precision
+        let m = ExecPolicy::Materialized.with_validate(ValidateMode::Full);
+        assert_eq!(m.validate(), ValidateMode::Off);
     }
 }

@@ -80,7 +80,7 @@ pub fn run(ctx: &Ctx, args: &Args) {
 
     let mut csv = ctx.csv(
         "e2e.csv",
-        "id,method,entries,compute_secs,total_secs,queue_wait_secs,ladder_secs,predicted_peak_bytes",
+        "id,method,entries,compute_secs,total_secs,queue_wait_secs,ladder_secs,predicted_peak_bytes,numeric_health",
     );
     for r in &resps {
         let (entries, compute, predicted) = match &r.meta {
@@ -91,10 +91,23 @@ pub fn run(ctx: &Ctx, args: &Args) {
             ),
             None => (0, 0.0, 0),
         };
+        // One health cell per request: "clean", or the regularization
+        // name plus the integrity counters when anything was noted.
+        let health = match &r.numeric_health {
+            None => "unserved".to_string(),
+            Some(h) if h.is_clean() => "clean".to_string(),
+            Some(h) => format!(
+                "{}:esc={}:quar={}:corrupt={}",
+                h.regularization.name(),
+                h.escalations,
+                h.quarantined_tiles,
+                h.corrupt_reads
+            ),
+        };
         csv.row(&format!(
-            "{},{},{},{:.4},{:.4},{:.4},{:.4},{}",
+            "{},{},{},{:.4},{:.4},{:.4},{:.4},{},{}",
             r.id, r.method, entries, compute, r.total_secs, r.queue_wait_secs, r.ladder_secs,
-            predicted
+            predicted, health
         ));
     }
     csv.finish();
@@ -118,6 +131,17 @@ pub fn run(ctx: &Ctx, args: &Args) {
     let served_wait: f64 = resps.iter().map(|r| r.queue_wait_secs).sum();
     let ladder: f64 = resps.iter().map(|r| r.ladder_secs).sum();
     println!("# admission: queue_wait_total={served_wait:.4}s ladder_total={ladder:.6}s");
+    let healths: Vec<_> = resps.iter().filter_map(|r| r.numeric_health.as_ref()).collect();
+    let clean = healths.iter().filter(|h| h.is_clean()).count();
+    let worst_cond = healths.iter().map(|h| h.core_cond_est).fold(0.0f64, f64::max);
+    let escalations: u64 = healths.iter().map(|h| h.escalations).sum();
+    let quarantined: u64 = healths.iter().map(|h| h.quarantined_tiles).sum();
+    let corrupt: u64 = healths.iter().map(|h| h.corrupt_reads).sum();
+    println!(
+        "# numeric-health: clean={clean}/{} worst_cond={worst_cond:.3e} \
+         escalations={escalations} quarantined_tiles={quarantined} corrupt_reads={corrupt}",
+        healths.len()
+    );
     if let Some(profile) = resps.iter().filter_map(|r| r.meta.as_ref()).find_map(|m| m.stage_profile.as_ref()) {
         println!("# stage profile (first served request):");
         for line in profile.summary_lines() {

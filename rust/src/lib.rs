@@ -55,4 +55,6 @@ pub mod testkit;
 pub mod util;
 
 pub use exec::{DegradeAction, DegradeInfo, ExecPolicy, RunMeta, RunReport};
+pub use linalg::{NumericHealth, Regularization};
 pub use obs::StageProfile;
+pub use stream::ValidateMode;

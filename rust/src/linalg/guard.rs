@@ -1,0 +1,407 @@
+//! Conditioned core solves: condition-estimated, ladder-regularized
+//! versions of the c×c solves every model funnels through.
+//!
+//! The paper's U matrices are built from small core solves — `pinv(W)`
+//! (Nyström), `pinv(SᵀC)` (fast model), `pinv(C)` (prototype), and the
+//! Woodbury inner system `αI + BᵀB`. Each is tiny (c×c or s×s) but sits
+//! downstream of *sampled* data: an unlucky landmark set or a
+//! near-duplicate column pair can make the core numerically singular, and
+//! the unguarded solve then either panics (`lu_solve(...).expect`) or
+//! amplifies noise by `1/s_min` into every entry of the output.
+//!
+//! [`guarded_pinv`] and [`guarded_spd_solve`] wrap those seams:
+//!
+//! 1. **Estimate** — one spectral factorization (which the solve needs
+//!    anyway, or costs O(c³) ≪ the O(nc²) that produced the core) gives
+//!    `cond = s_max/s_min`.
+//! 2. **Healthy fast path** — `cond ≤` [`COND_GUARD`] runs the *exact*
+//!    pre-existing computation, bit for bit. Guarding is free of numeric
+//!    drift on every well-posed problem.
+//! 3. **Regularization ladder** — otherwise escalate through doubling
+//!    Tikhonov jitter (`λ` on the diagonal / `s/(s²+λ)` gains) until the
+//!    effective condition clears the guard, and as a final rung fall back
+//!    to a truncated-spectrum pseudoinverse whose condition is bounded by
+//!    construction. Never a panic, never an unbounded amplification.
+//!
+//! Every estimate and escalation is noted in a thread-local
+//! [`NumericHealth`] that `exec` drains into `RunMeta::numeric_health`
+//! (and the service surfaces on `ApproxResponse`), alongside the
+//! pipeline's quarantined-tile count and the spill arena's corrupt-read
+//! count — the one-stop "was this answer numerically clean?" record.
+
+use super::eig::eigh;
+use super::pinv::pinv;
+use super::solve::lu_solve;
+use super::svd::{svd_thin, SvdThin};
+use super::Matrix;
+use std::cell::RefCell;
+
+/// Condition estimate above which a core solve regularizes:
+/// `1/sqrt(f64::EPSILON)` ≈ 6.7e7, the classic "half your digits are
+/// gone" threshold. Below it the guarded solves are bit-identical to the
+/// unguarded ones.
+pub const COND_GUARD: f64 = 6.7108864e7;
+
+/// Doubling rungs tried before falling back to the truncated rung.
+const MAX_JITTER_RUNGS: u64 = 8;
+
+/// How a guarded core solve was stabilized.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Regularization {
+    /// Every guarded solve ran the exact unguarded computation.
+    #[default]
+    None,
+    /// Tikhonov jitter: `λ` added to the diagonal (SPD solve) or
+    /// `s/(s²+λ)` inverse gains (pinv).
+    Jitter {
+        /// The λ of the rung that cleared the guard.
+        lambda: f64,
+    },
+    /// Final rung: truncated-spectrum pseudoinverse with condition
+    /// bounded by [`COND_GUARD`] by construction.
+    TruncatedPinv,
+}
+
+impl Regularization {
+    /// Severity order for merging: `None < Jitter (by λ) < TruncatedPinv`.
+    fn strength(&self) -> (u8, f64) {
+        match self {
+            Regularization::None => (0, 0.0),
+            Regularization::Jitter { lambda } => (1, *lambda),
+            Regularization::TruncatedPinv => (2, 0.0),
+        }
+    }
+
+    /// Stable lowercase name for logs / bench rows / service replies.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regularization::None => "none",
+            Regularization::Jitter { .. } => "jitter",
+            Regularization::TruncatedPinv => "truncated-pinv",
+        }
+    }
+}
+
+/// Numeric integrity record of one run: the worst core condition seen,
+/// the strongest regularization applied, and the integrity counters from
+/// the streaming layers. Collected thread-locally while a run executes;
+/// `exec` drains it into `RunMeta::numeric_health`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct NumericHealth {
+    /// Largest condition estimate observed across the run's guarded core
+    /// solves (0 when no guarded solve ran).
+    pub core_cond_est: f64,
+    /// Strongest regularization any guarded solve escalated to.
+    pub regularization: Regularization,
+    /// Total regularization ladder rungs tried across all guarded solves.
+    pub escalations: u64,
+    /// Tiles rejected by pipeline validation
+    /// ([`ValidateMode`](crate::stream::ValidateMode)).
+    pub quarantined_tiles: u64,
+    /// Checksummed spill records that failed verification on read-back
+    /// and were transparently recomputed (mirrors
+    /// `ResidencyStats::corrupt_reads`).
+    pub corrupt_reads: u64,
+}
+
+impl NumericHealth {
+    /// True when nothing noteworthy happened: no ill-conditioned core, no
+    /// regularization, no quarantined tiles, no corrupt spill reads.
+    pub fn is_clean(&self) -> bool {
+        self.core_cond_est <= COND_GUARD
+            && self.regularization == Regularization::None
+            && self.quarantined_tiles == 0
+            && self.corrupt_reads == 0
+    }
+
+    /// Fold `other` in: worst condition, strongest regularization, summed
+    /// counters. The service uses this to carry health observed by failed
+    /// attempts of a retried request into the final reply.
+    pub fn merge(&mut self, other: &NumericHealth) {
+        self.core_cond_est = self.core_cond_est.max(other.core_cond_est);
+        if other.regularization.strength() > self.regularization.strength() {
+            self.regularization = other.regularization;
+        }
+        self.escalations += other.escalations;
+        self.quarantined_tiles += other.quarantined_tiles;
+        self.corrupt_reads += other.corrupt_reads;
+    }
+}
+
+thread_local! {
+    static HEALTH: RefCell<NumericHealth> = RefCell::new(NumericHealth::default());
+}
+
+/// Record a core condition estimate (keeps the max).
+pub(crate) fn note_core_cond(cond: f64) {
+    HEALTH.with(|h| {
+        let mut h = h.borrow_mut();
+        if cond > h.core_cond_est {
+            h.core_cond_est = cond;
+        }
+    });
+}
+
+/// Record a completed escalation (keeps the strongest regularization,
+/// sums the rung count).
+pub(crate) fn note_regularization(reg: Regularization, rungs: u64) {
+    HEALTH.with(|h| {
+        let mut h = h.borrow_mut();
+        if reg.strength() > h.regularization.strength() {
+            h.regularization = reg;
+        }
+        h.escalations += rungs;
+    });
+}
+
+/// Record a tile rejected by pipeline validation.
+pub(crate) fn note_quarantined_tile() {
+    HEALTH.with(|h| h.borrow_mut().quarantined_tiles += 1);
+}
+
+/// Drain this thread's health record, resetting it to default. `exec`
+/// calls this at run start (discarding residue from unrelated earlier
+/// work on the thread) and at run end (into `RunMeta`).
+pub(crate) fn take_health() -> NumericHealth {
+    HEALTH.with(|h| std::mem::take(&mut *h.borrow_mut()))
+}
+
+/// Rebuild `pinv`'s exact output from an already-computed SVD — the same
+/// arithmetic as [`pinv`], so the healthy path stays bit-identical while
+/// paying for only one factorization.
+fn pinv_from_svd(f: &SvdThin, rank: usize, rows: usize, cols: usize) -> Matrix {
+    if rank == 0 {
+        return Matrix::zeros(cols, rows);
+    }
+    let vs = Matrix::from_fn(f.v.rows(), rank, |i, j| f.v[(i, j)] / f.s[j]);
+    let idx: Vec<usize> = (0..rank).collect();
+    let ur = f.u.select_cols(&idx);
+    vs.matmul_tr(&ur)
+}
+
+/// Tikhonov-regularized pseudoinverse `V diag(s/(s²+λ)) Uᵀ`.
+fn tikhonov_pinv(f: &SvdThin, rank: usize, lambda: f64) -> Matrix {
+    let vs = Matrix::from_fn(f.v.rows(), rank, |i, j| {
+        f.v[(i, j)] * f.s[j] / (f.s[j] * f.s[j] + lambda)
+    });
+    let idx: Vec<usize> = (0..rank).collect();
+    let ur = f.u.select_cols(&idx);
+    vs.matmul_tr(&ur)
+}
+
+/// Effective condition of the Tikhonov inverse: `s_max · max_i gain(s_i)`
+/// with `gain(s) = s/(s²+λ)` (the amplification the regularized inverse
+/// can still apply, relative to the best-resolved direction).
+fn tikhonov_cond(s: &[f64], lambda: f64) -> f64 {
+    let smax = s.first().copied().unwrap_or(0.0);
+    let gmax = s.iter().map(|&si| si / (si * si + lambda)).fold(0.0f64, f64::max);
+    smax * gmax
+}
+
+/// Condition-guarded Moore–Penrose pseudoinverse.
+///
+/// Healthy cores (`s_max/s_min ≤` [`COND_GUARD`]) return exactly
+/// [`pinv`]`(a)` — same SVD, same arithmetic, same bits. Ill-conditioned
+/// cores escalate through doubling Tikhonov λ (base
+/// `s_max² · max(m,n) · ε`) until the effective condition clears the
+/// guard, then — if [`MAX_JITTER_RUNGS`] doublings were not enough — fall
+/// back to the truncated pseudoinverse that drops every singular value
+/// below `s_max /` [`COND_GUARD`]. Each estimate/escalation is noted in
+/// the thread-local [`NumericHealth`].
+pub fn guarded_pinv(a: &Matrix) -> Matrix {
+    if a.rows() == 0 || a.cols() == 0 {
+        return Matrix::zeros(a.cols(), a.rows());
+    }
+    let f = svd_thin(a);
+    let rank = f.rank(a.rows(), a.cols());
+    if rank == 0 {
+        return Matrix::zeros(a.cols(), a.rows());
+    }
+    let cond = f.s[0] / f.s[rank - 1];
+    note_core_cond(cond);
+    if cond.is_finite() && cond <= COND_GUARD {
+        return pinv_from_svd(&f, rank, a.rows(), a.cols());
+    }
+    let mut lambda = f.s[0] * f.s[0] * (a.rows().max(a.cols()) as f64) * f64::EPSILON;
+    for rung in 1..=MAX_JITTER_RUNGS {
+        if tikhonov_cond(&f.s[..rank], lambda) <= COND_GUARD {
+            note_regularization(Regularization::Jitter { lambda }, rung);
+            return tikhonov_pinv(&f, rank, lambda);
+        }
+        lambda *= 2.0;
+    }
+    // truncation keeps only directions resolvable within the guard
+    note_regularization(Regularization::TruncatedPinv, MAX_JITTER_RUNGS + 1);
+    let tol = f.s[0] / COND_GUARD;
+    let keep = f.s[..rank].iter().take_while(|&&s| s > tol).count().max(1);
+    pinv_from_svd(&f, keep, a.rows(), a.cols())
+}
+
+/// Condition-guarded solve of a symmetric positive (semi-)definite
+/// system `a x = b`.
+///
+/// Healthy systems run exactly [`lu_solve`]`(a, b)` — bit-identical to
+/// the unguarded call sites this replaces (the Woodbury inner system,
+/// which is SPD by construction whenever the inputs are sane). When the
+/// eigendecomposition says the system is ill-conditioned or indefinite
+/// (a corrupted or degenerate core), escalate through doubling diagonal
+/// jitter (base `tr(a)/n · ε`) and finally a truncated-eigenspectrum
+/// pseudo-solve with condition bounded by [`COND_GUARD`].
+pub fn guarded_spd_solve(a: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "guarded_spd_solve needs a square matrix");
+    assert_eq!(n, b.len());
+    if n == 0 {
+        return Vec::new();
+    }
+    let e = eigh(a);
+    let lmax = e.values.first().copied().unwrap_or(0.0);
+    let lmin = e.values.last().copied().unwrap_or(0.0);
+    let cond = if lmin > 0.0 { lmax / lmin } else { f64::INFINITY };
+    note_core_cond(cond);
+    if cond.is_finite() && cond <= COND_GUARD {
+        if let Some(x) = lu_solve(a, b) {
+            return x;
+        }
+        // estimate said healthy but the factorization disagreed — fall
+        // through to the ladder rather than trust either side
+    }
+    let base = (a.trace().abs() / n as f64).max(f64::MIN_POSITIVE);
+    let mut lambda = base * f64::EPSILON;
+    for rung in 1..=MAX_JITTER_RUNGS {
+        let cond_j = (lmax.max(0.0) + lambda) / (lmin.max(0.0) + lambda);
+        if cond_j <= COND_GUARD {
+            let mut m = a.clone();
+            m.add_diag(lambda);
+            if let Some(x) = lu_solve(&m, b) {
+                note_regularization(Regularization::Jitter { lambda }, rung);
+                return x;
+            }
+        }
+        lambda *= 2.0;
+    }
+    // truncated-eig pseudo-solve: x = Σ_{λi > λmax/guard} v_i (v_iᵀ b)/λ_i
+    note_regularization(Regularization::TruncatedPinv, MAX_JITTER_RUNGS + 1);
+    let tol = (lmax / COND_GUARD).max(0.0);
+    let mut x = vec![0.0; n];
+    if lmax <= 0.0 {
+        return x; // zero (or corrupt-negative) core: pseudo-solution is 0
+    }
+    for (j, &lj) in e.values.iter().enumerate() {
+        if lj <= tol {
+            break; // descending order
+        }
+        let mut vb = 0.0;
+        for i in 0..n {
+            vb += e.vectors[(i, j)] * b[i];
+        }
+        let scale = vb / lj;
+        for i in 0..n {
+            x[i] += e.vectors[(i, j)] * scale;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Drain before and after so parallel-unrelated residue never leaks in.
+    fn with_clean_health<T>(f: impl FnOnce() -> T) -> (T, NumericHealth) {
+        let _ = take_health();
+        let out = f();
+        (out, take_health())
+    }
+
+    #[test]
+    fn healthy_pinv_is_bit_identical_to_unguarded() {
+        let mut rng = Rng::new(0);
+        for &(m, n) in &[(6usize, 6usize), (9, 4), (4, 9)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let (guarded, health) = with_clean_health(|| guarded_pinv(&a));
+            assert_eq!(guarded.max_abs_diff(&pinv(&a)), 0.0, "{m}x{n}");
+            assert!(health.core_cond_est > 0.0, "cond must be recorded");
+            assert_eq!(health.regularization, Regularization::None);
+            assert_eq!(health.escalations, 0);
+            assert!(health.is_clean());
+        }
+    }
+
+    #[test]
+    fn ill_conditioned_pinv_escalates_and_bounds_amplification() {
+        // diag spectrum spanning 1e12: cond far beyond the guard
+        let a = Matrix::diag(&[1.0, 0.5, 1e-12]);
+        let (guarded, health) = with_clean_health(|| guarded_pinv(&a));
+        assert!(health.core_cond_est > COND_GUARD);
+        assert_ne!(health.regularization, Regularization::None);
+        assert!(health.escalations > 0);
+        assert!(!health.is_clean());
+        // amplification bounded: the unguarded pinv has a 1e12 entry, the
+        // guarded one stays within the guard
+        let amp = guarded.data().iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        assert!(amp <= COND_GUARD, "guarded amplification {amp:.3e}");
+        assert!(guarded.data().iter().all(|v| v.is_finite()));
+        // the well-resolved directions are still inverted exactly
+        assert!((guarded[(0, 0)] - 1.0).abs() < 1e-6);
+        assert!((guarded[(1, 1)] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn healthy_spd_solve_is_bit_identical_to_lu() {
+        let mut rng = Rng::new(1);
+        let g = Matrix::randn(7, 7, &mut rng);
+        let mut a = g.matmul_tr(&g);
+        a.add_diag(1.0); // well away from singular
+        let b: Vec<f64> = (0..7).map(|i| (i as f64 * 0.9).sin()).collect();
+        let (x, health) = with_clean_health(|| guarded_spd_solve(&a, &b));
+        assert_eq!(x, lu_solve(&a, &b).unwrap(), "healthy path must be the exact lu solve");
+        assert_eq!(health.regularization, Regularization::None);
+        assert!(health.core_cond_est >= 1.0);
+    }
+
+    #[test]
+    fn singular_spd_solve_never_panics_and_solves_the_resolvable_part() {
+        // rank-2 Gram of a 5x2 factor: lu would fail, the old call sites
+        // would panic via .expect
+        let mut rng = Rng::new(2);
+        let g = Matrix::randn(5, 2, &mut rng);
+        let a = g.matmul_tr(&g);
+        let xtrue = a.matvec(&[1.0, -2.0, 0.5, 0.0, 3.0]); // in range(a)
+        let (x, health) = with_clean_health(|| guarded_spd_solve(&a, &xtrue));
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert_ne!(health.regularization, Regularization::None);
+        // a x must reproduce the rhs (it lies in the range)
+        let ax = a.matvec(&x);
+        for (got, want) in ax.iter().zip(&xtrue) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn zero_core_yields_zero_solution() {
+        let a = Matrix::zeros(3, 3);
+        let (x, health) = with_clean_health(|| guarded_spd_solve(&a, &[1.0, 2.0, 3.0]));
+        assert_eq!(x, vec![0.0; 3]);
+        assert_eq!(health.regularization, Regularization::TruncatedPinv);
+    }
+
+    #[test]
+    fn health_collector_drains_and_merges() {
+        let _ = take_health();
+        note_core_cond(10.0);
+        note_core_cond(5.0); // keeps max
+        note_quarantined_tile();
+        note_quarantined_tile();
+        note_regularization(Regularization::Jitter { lambda: 1e-8 }, 3);
+        note_regularization(Regularization::TruncatedPinv, 9); // stronger wins
+        note_regularization(Regularization::Jitter { lambda: 1.0 }, 1); // weaker loses
+        let h = take_health();
+        assert_eq!(h.core_cond_est, 10.0);
+        assert_eq!(h.quarantined_tiles, 2);
+        assert_eq!(h.regularization, Regularization::TruncatedPinv);
+        assert_eq!(h.escalations, 13);
+        assert_eq!(take_health(), NumericHealth::default(), "take must drain");
+    }
+}

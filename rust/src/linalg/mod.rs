@@ -6,6 +6,7 @@
 
 pub mod eig;
 pub mod gemm;
+pub mod guard;
 pub mod lanczos;
 pub mod pinv;
 pub mod qr;
@@ -14,6 +15,7 @@ pub mod sparse;
 pub mod svd;
 
 pub use eig::{eigh, Eigh};
+pub use guard::{guarded_pinv, guarded_spd_solve, NumericHealth, Regularization};
 pub use gemm::{gemm_into, gemm_nt_into, gemm_tn_into, symm_nt, syrk_nt, syrk_tn, syrk_tn_into};
 pub use gemm::{gemm_nt_map_f32, syrk_nt_map_f32};
 pub use lanczos::{lanczos_top_k, lanczos_top_k_op};

@@ -7,6 +7,7 @@
 
 use super::eig::eigh;
 use super::gemm;
+use super::guard::guarded_spd_solve;
 use super::svd::svd_thin;
 use super::Matrix;
 
@@ -66,7 +67,11 @@ pub fn woodbury_solve(c: &Matrix, u: &Matrix, alpha: f64, y: &[f64]) -> Vec<f64>
     let mut inner = gemm::syrk_tn(&b);
     inner.add_diag(alpha);
     let bty = b.tr_matvec(y);
-    let z = lu_solve(&inner, &bty).expect("alpha I + B^T B is SPD");
+    // inner is SPD by construction, so the guarded solve is the plain LU
+    // solve whenever the inputs are sane — the ladder only engages when a
+    // corrupted or degenerate core sneaks an ill-conditioned system here
+    // (where the old .expect would have panicked or amplified noise).
+    let z = guarded_spd_solve(&inner, &bty);
     let bz = b.matvec(&z);
     y.iter()
         .zip(&bz)

@@ -23,11 +23,11 @@ pub mod adversarial;
 pub mod shift;
 
 use crate::coordinator::oracle::KernelOracle;
-use crate::linalg::{gemm, pinv, solve, Matrix};
+use crate::linalg::{gemm, guarded_pinv, pinv, solve, Matrix};
 use crate::obs::{self, Stage};
 use crate::sketch::{self, SketchKind, SketchOp};
 use crate::stream::{
-    run_pipeline_prec, CollectConsumer, ConjugateFold, LeverageFold, LeverageSampler,
+    run_pipeline_validated, CollectConsumer, ConjugateFold, LeverageFold, LeverageSampler,
     OracleColumnsSource, Precision, PrototypeUFold, ResidencyConfig, ResidencyStats,
     ResidentSource, RowGather, SketchFold, StreamConfig, StreamingOracle, TileConsumer,
     TileSource,
@@ -117,24 +117,28 @@ fn collect_via(
     let mut collect = CollectConsumer::new(n, width);
     match gather {
         None => {
-            run_pipeline_prec(
+            run_pipeline_validated(
                 src,
                 t,
                 stream_cfg.queue_depth,
                 stream_cfg.precision,
+                stream_cfg.validate,
                 &mut [&mut collect],
-            );
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
             (collect.into_matrix(), None)
         }
         Some(idx) => {
             let mut g = RowGather::new(idx.to_vec(), width);
-            run_pipeline_prec(
+            run_pipeline_validated(
                 src,
                 t,
                 stream_cfg.queue_depth,
                 stream_cfg.precision,
+                stream_cfg.validate,
                 &mut [&mut collect, &mut g],
-            );
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
             (collect.into_matrix(), Some(g.into_matrix()))
         }
     }
@@ -175,7 +179,10 @@ pub(crate) fn run_nystrom(
     let w = w.expect("gather requested");
     let mut u = {
         let _s = obs::span(Stage::SolveSvd);
-        pinv(&w)
+        // conditioned core solve: bit-identical to pinv(&w) on healthy W,
+        // ladder-regularized (and noted in RunMeta::numeric_health) on
+        // degenerate landmark draws
+        guarded_pinv(&w)
     };
     u.symmetrize();
     let approx = SpsdApprox {
@@ -209,7 +216,7 @@ pub(crate) fn run_prototype(
     let (c, _) = build_c_panel(oracle, p_idx, stream_cfg, None);
     let cp = {
         let _s = obs::span(Stage::SolveSvd);
-        pinv(&c) // c x n
+        guarded_pinv(&c) // c x n
     };
     let u = if stream_cfg.is_whole(n) && stream_cfg.precision == Precision::F64 {
         let k = oracle.full();
@@ -385,13 +392,15 @@ pub(crate) fn run_fast(
                         Some(collect.into_matrix())
                     }
                     Some(r) => {
-                        run_pipeline_prec(
+                        run_pipeline_validated(
                             r,
                             t,
                             stream_cfg.queue_depth,
                             stream_cfg.precision,
+                            stream_cfg.validate,
                             &mut [&mut fold],
-                        );
+                        )
+                        .unwrap_or_else(|e| panic!("{e}"));
                         None
                     }
                 };
@@ -414,13 +423,15 @@ pub(crate) fn run_fast(
                     }
                     (Some(r), _) => {
                         let mut collect = CollectConsumer::new(n, p_idx.len());
-                        run_pipeline_prec(
+                        run_pipeline_validated(
                             r,
                             t,
                             stream_cfg.queue_depth,
                             stream_cfg.precision,
+                            stream_cfg.validate,
                             &mut [&mut collect, &mut sampler],
-                        );
+                        )
+                        .unwrap_or_else(|e| panic!("{e}"));
                         collect.into_matrix()
                     }
                     (None, None) => unreachable!("pass 1 collects when not resident"),
@@ -474,7 +485,7 @@ pub(crate) fn run_fast(
 
     let stc_pinv = {
         let _s = obs::span(Stage::SolveSvd);
-        pinv(&stc) // c x s
+        guarded_pinv(&stc) // c x s
     };
     // (S^T C)† (S^T K S) ((S^T C)†)^T is symmetric since S^T K S is.
     let u = gemm::symm_nt(&stc_pinv.matmul(&sks), &stc_pinv);

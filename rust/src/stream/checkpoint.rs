@@ -1,0 +1,336 @@
+//! Checkpoint/resume for streaming passes.
+//!
+//! A long `n·c` pass whose consumers are **row-ordered sums** (GramFold,
+//! SketchFold, LeverageFold, MatvecFold — the folds with
+//! [`TileConsumer::snapshot`]) can persist its fold state every K tiles
+//! and, after an interruption, resume from the last completed tile
+//! instead of re-paying the whole stream: the oracle is re-charged only
+//! for tiles after the checkpoint, and because those folds add tiles in
+//! ascending row order, an interrupted+resumed pass is **bit-identical**
+//! to an uninterrupted one (asserted in `tests/stream_equiv.rs`).
+//!
+//! The context is armed per thread ([`arm`]) because the pipeline folds
+//! consumers on the caller's thread: the service worker arms it around a
+//! retried request, [`run_pipeline_resumable`] arms it around a single
+//! pass. Each pipeline run under an armed context takes the next pass
+//! ordinal, giving the deterministic file name `ckpt-pass-<k>.bin` — a
+//! re-run of the same request replays the same pass sequence, so pass k
+//! finds exactly its own checkpoint. Checkpoint files use the same
+//! checksummed [`record`](super::record) codec as the spill arena, are
+//! written atomically (tmp + rename), bind the pass shape (`n`, `cols`,
+//! tile height, element width, consumer count) so a stale or foreign
+//! file can never restore into the wrong pass, and are deleted when the
+//! pass completes. Any integrity or shape mismatch on load means
+//! *start from row 0* — never wrong bits, at worst a full re-stream.
+//!
+//! [`TileConsumer::snapshot`]: super::TileConsumer::snapshot
+//! [`run_pipeline_resumable`]: super::run_pipeline_resumable
+
+use super::record::{self, RECORD_HEADER_BYTES};
+use crate::linalg::{Matrix, Precision};
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{Read as _, Write as _};
+use std::path::{Path, PathBuf};
+
+/// Record tag for checkpoint files (distinct from the 8/4 element-width
+/// tags of arena tile records, so the codecs can never be confused).
+const CKPT_TAG: u8 = 0xC5;
+
+/// Identifies a checkpoint as belonging to this codec revision.
+const CKPT_MAGIC: u64 = 0x4653_5053_4443_4B50; // "FSPSDCKP"
+
+/// Default tiles-between-checkpoints when `FASTSPSD_CKPT_EVERY` is unset.
+pub const DEFAULT_CKPT_EVERY: usize = 16;
+
+/// Where and how often a streaming pass checkpoints its fold state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointConfig {
+    /// Directory checkpoint files live in (typically the spill dir).
+    pub dir: PathBuf,
+    /// Persist fold state every `every` folded tiles.
+    pub every: usize,
+}
+
+impl CheckpointConfig {
+    /// Checkpoint into `dir` every `FASTSPSD_CKPT_EVERY` tiles
+    /// (default [`DEFAULT_CKPT_EVERY`]).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        let every = std::env::var("FASTSPSD_CKPT_EVERY")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&k| k > 0)
+            .unwrap_or(DEFAULT_CKPT_EVERY);
+        CheckpointConfig { dir: dir.into(), every }
+    }
+
+    pub fn with_every(mut self, every: usize) -> Self {
+        self.every = every.max(1);
+        self
+    }
+}
+
+struct Ctx {
+    cfg: CheckpointConfig,
+    /// Pipeline runs seen under this context so far (the pass ordinal).
+    passes: u64,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// Arm checkpointing for pipeline runs on **this thread** until the
+/// guard drops (which restores whatever was armed before, including its
+/// pass counter).
+#[must_use = "dropping the guard immediately disarms checkpointing"]
+pub fn arm(cfg: &CheckpointConfig) -> CheckpointGuard {
+    let prev = CTX.with(|c| c.borrow_mut().replace(Ctx { cfg: cfg.clone(), passes: 0 }));
+    CheckpointGuard { prev }
+}
+
+/// Restores the previously armed context (if any) on drop.
+pub struct CheckpointGuard {
+    prev: Option<Ctx>,
+}
+
+impl Drop for CheckpointGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// One pipeline run's checkpoint assignment.
+pub(crate) struct PassSpec {
+    pub path: PathBuf,
+    pub every: usize,
+}
+
+/// Claim the next pass ordinal under the armed context (None when
+/// disarmed). Called once per pipeline run, whether or not the run's
+/// consumers end up supporting snapshots — the ordinal sequence must be
+/// a function of the run sequence alone so a retried request maps each
+/// pass onto the same file.
+pub(crate) fn next_pass_spec() -> Option<PassSpec> {
+    CTX.with(|c| {
+        c.borrow_mut().as_mut().map(|ctx| {
+            ctx.passes += 1;
+            PassSpec {
+                path: ctx.cfg.dir.join(format!("ckpt-pass-{}.bin", ctx.passes)),
+                every: ctx.cfg.every.max(1),
+            }
+        })
+    })
+}
+
+/// The shape a checkpoint is bound to; every field must match on load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct PassMeta {
+    pub n: usize,
+    pub cols: usize,
+    pub tile_rows: usize,
+    pub precision: Precision,
+    pub consumers: usize,
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Persist `snaps` + resume point atomically (tmp + rename). IO failure
+/// returns `false` and is ignored by the pipeline — a missed checkpoint
+/// only costs resume granularity, never correctness.
+pub(crate) fn save(path: &Path, meta: &PassMeta, next_r0: usize, snaps: &[Matrix]) -> bool {
+    let mut payload = Vec::new();
+    push_u64(&mut payload, CKPT_MAGIC);
+    push_u64(&mut payload, meta.n as u64);
+    push_u64(&mut payload, meta.cols as u64);
+    push_u64(&mut payload, meta.tile_rows as u64);
+    payload.push(record::width_tag(meta.precision));
+    push_u64(&mut payload, next_r0 as u64);
+    push_u64(&mut payload, snaps.len() as u64);
+    for s in snaps {
+        push_u64(&mut payload, s.rows() as u64);
+        push_u64(&mut payload, s.cols() as u64);
+        for &v in s.data() {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let rec = record::encode(CKPT_TAG, &payload);
+    let tmp = path.with_extension("tmp");
+    let ok = File::create(&tmp)
+        .and_then(|mut f| f.write_all(&rec))
+        .and_then(|_| std::fs::rename(&tmp, path))
+        .is_ok();
+    if !ok {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    ok
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn u64(&mut self) -> Option<u64> {
+        let b = self.buf.get(self.pos..self.pos + 8)?;
+        self.pos += 8;
+        Some(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        let b = *self.buf.get(self.pos)?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn matrix(&mut self) -> Option<Matrix> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let elems = rows.checked_mul(cols)?;
+        let bytes = self.buf.get(self.pos..self.pos + elems.checked_mul(8)?)?;
+        self.pos += elems * 8;
+        let data: Vec<f64> = bytes
+            .chunks_exact(8)
+            .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Some(Matrix::from_vec(rows, cols, data))
+    }
+}
+
+/// Load a checkpoint for the pass shaped by `meta`. Returns the resume
+/// row and one snapshot per consumer, or `None` for *any* problem —
+/// missing file, failed checksum, foreign shape, misaligned resume row —
+/// in which case the pass simply starts from row 0.
+pub(crate) fn load(path: &Path, meta: &PassMeta) -> Option<(usize, Vec<Matrix>)> {
+    let mut bytes = Vec::new();
+    File::open(path).ok()?.read_to_end(&mut bytes).ok()?;
+    if bytes.len() < RECORD_HEADER_BYTES {
+        return None;
+    }
+    let header: [u8; RECORD_HEADER_BYTES] = bytes[..RECORD_HEADER_BYTES].try_into().unwrap();
+    let payload = &bytes[RECORD_HEADER_BYTES..];
+    record::verify(CKPT_TAG, &header, payload).ok()?;
+    let mut r = Reader { buf: payload, pos: 0 };
+    if r.u64()? != CKPT_MAGIC
+        || r.u64()? as usize != meta.n
+        || r.u64()? as usize != meta.cols
+        || r.u64()? as usize != meta.tile_rows
+        || r.u8()? != record::width_tag(meta.precision)
+    {
+        return None;
+    }
+    let next_r0 = r.u64()? as usize;
+    if next_r0 == 0 || next_r0 >= meta.n || next_r0 % meta.tile_rows != 0 {
+        return None; // nothing to resume, or a row not on a tile boundary
+    }
+    let count = r.u64()? as usize;
+    if count != meta.consumers {
+        return None;
+    }
+    let mut snaps = Vec::with_capacity(count);
+    for _ in 0..count {
+        snaps.push(r.matrix()?);
+    }
+    if r.pos != r.buf.len() {
+        return None; // trailing garbage: not a record this codec wrote
+    }
+    Some((next_r0, snaps))
+}
+
+/// Remove a completed pass's checkpoint (best effort).
+pub(crate) fn discard(path: &Path) {
+    let _ = std::fs::remove_file(path);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn meta() -> PassMeta {
+        PassMeta { n: 40, cols: 3, tile_rows: 8, precision: Precision::F64, consumers: 2 }
+    }
+
+    fn snaps() -> Vec<Matrix> {
+        let mut rng = Rng::new(41);
+        vec![Matrix::randn(3, 3, &mut rng), Matrix::randn(1, 3, &mut rng)]
+    }
+
+    #[test]
+    fn save_load_round_trip_is_bit_exact() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("fastspsd-ckpt-test-{}.bin", std::process::id()));
+        let s = snaps();
+        assert!(save(&path, &meta(), 16, &s));
+        let (r0, back) = load(&path, &meta()).expect("clean checkpoint must load");
+        assert_eq!(r0, 16);
+        assert_eq!(back.len(), 2);
+        for (a, b) in s.iter().zip(&back) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
+        discard(&path);
+        assert!(!path.exists());
+        assert!(load(&path, &meta()).is_none(), "discarded checkpoint must not load");
+    }
+
+    #[test]
+    fn shape_or_integrity_mismatch_never_restores() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("fastspsd-ckpt-test2-{}.bin", std::process::id()));
+        assert!(save(&path, &meta(), 24, &snaps()));
+        // foreign shapes are rejected field by field
+        for wrong in [
+            PassMeta { n: 41, ..meta() },
+            PassMeta { cols: 4, ..meta() },
+            PassMeta { tile_rows: 7, ..meta() },
+            PassMeta { precision: Precision::F32, ..meta() },
+            PassMeta { consumers: 1, ..meta() },
+        ] {
+            assert!(load(&path, &wrong).is_none(), "{wrong:?} must not restore");
+        }
+        // a flipped payload byte fails the checksum
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = RECORD_HEADER_BYTES + (bytes.len() - RECORD_HEADER_BYTES) / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path, &meta()).is_none(), "corrupt checkpoint must not restore");
+        discard(&path);
+    }
+
+    #[test]
+    fn misaligned_or_degenerate_resume_rows_are_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("fastspsd-ckpt-test3-{}.bin", std::process::id()));
+        for bad_r0 in [0usize, 5, 40, 48] {
+            assert!(save(&path, &meta(), bad_r0, &snaps()));
+            assert!(load(&path, &meta()).is_none(), "next_r0={bad_r0} must not restore");
+        }
+        discard(&path);
+    }
+
+    #[test]
+    fn armed_context_hands_out_sequential_pass_files_and_restores_prev() {
+        let cfg = CheckpointConfig::new("/tmp/ck-a").with_every(4);
+        assert!(next_pass_spec().is_none(), "disarmed by default");
+        let g1 = arm(&cfg);
+        let s1 = next_pass_spec().unwrap();
+        let s2 = next_pass_spec().unwrap();
+        assert_eq!(s1.path, PathBuf::from("/tmp/ck-a/ckpt-pass-1.bin"));
+        assert_eq!(s2.path, PathBuf::from("/tmp/ck-a/ckpt-pass-2.bin"));
+        assert_eq!(s1.every, 4);
+        {
+            let inner = CheckpointConfig::new("/tmp/ck-b").with_every(2);
+            let _g2 = arm(&inner);
+            let s = next_pass_spec().unwrap();
+            assert_eq!(s.path, PathBuf::from("/tmp/ck-b/ckpt-pass-1.bin"));
+        }
+        // outer context back, counter intact
+        let s3 = next_pass_spec().unwrap();
+        assert_eq!(s3.path, PathBuf::from("/tmp/ck-a/ckpt-pass-3.bin"));
+        drop(g1);
+        assert!(next_pass_spec().is_none());
+    }
+}

@@ -43,6 +43,28 @@ pub trait TileConsumer {
             Tile::F32(m) => self.consume_f32(r0, m),
         }
     }
+
+    /// Serialize the fold's accumulated state as one matrix, for the
+    /// checkpointed pipeline. `None` (the default) opts the consumer out
+    /// of checkpointing — the pipeline persists state only when *every*
+    /// consumer in the pass snapshots, so a single gather or sampler in
+    /// the set disables resume for that pass rather than corrupting it.
+    ///
+    /// Contract: `restore(snapshot())` followed by the remaining tiles
+    /// must be bit-identical to an uninterrupted fold. Only the
+    /// prefix-sum folds (Gram, sketch, leverage pass-1, matvec) can
+    /// honor that; rng-consuming or position-dependent consumers must
+    /// keep the `None` default.
+    fn snapshot(&self) -> Option<Matrix> {
+        None
+    }
+
+    /// Restore state captured by [`TileConsumer::snapshot`]. Returns
+    /// `false` (leaving the consumer untouched) when the state's shape
+    /// does not match — the pipeline treats that as "start from scratch".
+    fn restore(&mut self, _state: &Matrix) -> bool {
+        false
+    }
 }
 
 /// Reassembles the streamed matrix (used when the full panel *is* the
@@ -190,6 +212,20 @@ impl TileConsumer for SketchFold<'_> {
             self.op.fold_rows(r0, tile, &mut self.acc);
         }
     }
+
+    // `scratch` is fully overwritten each consume, so the accumulator is
+    // the whole state.
+    fn snapshot(&self) -> Option<Matrix> {
+        Some(self.acc.clone())
+    }
+
+    fn restore(&mut self, state: &Matrix) -> bool {
+        if state.rows() != self.acc.rows() || state.cols() != self.acc.cols() {
+            return false;
+        }
+        self.acc = state.clone();
+        true
+    }
 }
 
 /// Gram accumulation `A^T A = Σ_t tile_t^T tile_t` via per-tile `syrk_tn`
@@ -214,6 +250,20 @@ impl TileConsumer for GramFold {
         let _s = obs::span(Stage::GramFold);
         gemm::syrk_tn_into(tile, &mut self.scratch);
         self.acc.axpy(1.0, &self.scratch);
+    }
+
+    // `scratch` is fully overwritten each consume, so the accumulator is
+    // the whole state.
+    fn snapshot(&self) -> Option<Matrix> {
+        Some(self.acc.clone())
+    }
+
+    fn restore(&mut self, state: &Matrix) -> bool {
+        if state.rows() != self.acc.rows() || state.cols() != self.acc.cols() {
+            return false;
+        }
+        self.acc = state.clone();
+        true
     }
 }
 
@@ -293,6 +343,28 @@ impl TileConsumer for LeverageFold<'_> {
             }
             LevAcc::Sketched { op, acc } => op.fold_rows(r0, tile, acc),
         }
+    }
+
+    // Both variants keep their whole state in one matrix (the exact Gram
+    // triangle or the sketched `Ω^T C`); the mirror in `into_estimate`
+    // runs after the fold, so an upper-triangle snapshot restores exactly.
+    fn snapshot(&self) -> Option<Matrix> {
+        Some(match &self.acc {
+            LevAcc::Exact { gram } => gram.clone(),
+            LevAcc::Sketched { acc, .. } => acc.clone(),
+        })
+    }
+
+    fn restore(&mut self, state: &Matrix) -> bool {
+        let dst = match &mut self.acc {
+            LevAcc::Exact { gram } => gram,
+            LevAcc::Sketched { acc, .. } => acc,
+        };
+        if state.rows() != dst.rows() || state.cols() != dst.cols() {
+            return false;
+        }
+        *dst = state.clone();
+        true
     }
 }
 
@@ -418,6 +490,18 @@ impl TileConsumer for MatvecFold<'_> {
         for (a, p) in self.acc.iter_mut().zip(part) {
             *a += p;
         }
+    }
+
+    fn snapshot(&self) -> Option<Matrix> {
+        Some(Matrix::from_vec(1, self.acc.len(), self.acc.clone()))
+    }
+
+    fn restore(&mut self, state: &Matrix) -> bool {
+        if state.rows() != 1 || state.cols() != self.acc.len() {
+            return false;
+        }
+        self.acc.copy_from_slice(state.row(0));
+        true
     }
 }
 
@@ -707,6 +791,116 @@ mod tests {
             0.0,
             "default f32 path must equal exact promotion"
         );
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_bit_identically_for_sum_folds() {
+        // Fold rows [0, split) in one consumer, snapshot, restore into a
+        // fresh consumer, fold [split, n): the result must be bit-identical
+        // to an uninterrupted fold — the contract the checkpointed
+        // pipeline leans on.
+        let mut rng = Rng::new(13);
+        let n = 37;
+        let a = Matrix::randn(n, 5, &mut rng);
+        let split = 16;
+        let head = a.block(0, split, 0, 5);
+        let tail = a.block(split, n, 0, 5);
+        let op = sketch::build(SketchKind::Gaussian, n, 8, None, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).cos()).collect();
+
+        // GramFold
+        let gram_ref = {
+            let mut f = GramFold::new(5);
+            f.consume(0, &head);
+            f.consume(split, &tail);
+            f.into_matrix()
+        };
+        let snap = {
+            let mut f = GramFold::new(5);
+            f.consume(0, &head);
+            f.snapshot().unwrap()
+        };
+        let mut f = GramFold::new(5);
+        assert!(f.restore(&snap));
+        f.consume(split, &tail);
+        assert_eq!(f.into_matrix().max_abs_diff(&gram_ref), 0.0, "GramFold");
+        assert!(!GramFold::new(4).restore(&snap), "shape mismatch must refuse");
+
+        // SketchFold (dense branch)
+        let sk_ref = {
+            let mut f = SketchFold::new(&op, 5);
+            f.consume(0, &head);
+            f.consume(split, &tail);
+            f.into_matrix()
+        };
+        let snap = {
+            let mut f = SketchFold::new(&op, 5);
+            f.consume(0, &head);
+            f.snapshot().unwrap()
+        };
+        let mut f = SketchFold::new(&op, 5);
+        assert!(f.restore(&snap));
+        f.consume(split, &tail);
+        assert_eq!(f.into_matrix().max_abs_diff(&sk_ref), 0.0, "SketchFold");
+
+        // LeverageFold, both variants
+        let lev_ref = {
+            let mut f = LeverageFold::exact(5);
+            f.consume(0, &head);
+            f.consume(split, &tail);
+            f.into_estimate()
+        };
+        let snap = {
+            let mut f = LeverageFold::exact(5);
+            f.consume(0, &head);
+            f.snapshot().unwrap()
+        };
+        let mut f = LeverageFold::exact(5);
+        assert!(f.restore(&snap));
+        f.consume(split, &tail);
+        let est = f.into_estimate();
+        assert_eq!(est.whiten.max_abs_diff(&lev_ref.whiten), 0.0, "LeverageFold exact");
+        assert_eq!(est.rank, lev_ref.rank);
+        let snap = {
+            let mut f = LeverageFold::sketched(&op, 5);
+            f.consume(0, &head);
+            f.snapshot().unwrap()
+        };
+        let mut f = LeverageFold::sketched(&op, 5);
+        assert!(f.restore(&snap));
+        f.consume(split, &tail);
+        let lev_sk_ref = {
+            let mut f = LeverageFold::sketched(&op, 5);
+            f.consume(0, &head);
+            f.consume(split, &tail);
+            f.into_estimate()
+        };
+        assert_eq!(
+            f.into_estimate().whiten.max_abs_diff(&lev_sk_ref.whiten),
+            0.0,
+            "LeverageFold sketched"
+        );
+
+        // MatvecFold
+        let mv_ref = {
+            let mut f = MatvecFold::new(&x, 5);
+            f.consume(0, &head);
+            f.consume(split, &tail);
+            f.into_vec()
+        };
+        let snap = {
+            let mut f = MatvecFold::new(&x, 5);
+            f.consume(0, &head);
+            f.snapshot().unwrap()
+        };
+        let mut f = MatvecFold::new(&x, 5);
+        assert!(f.restore(&snap));
+        f.consume(split, &tail);
+        assert_eq!(f.into_vec(), mv_ref, "MatvecFold");
+
+        // consumers without state support stay opted out
+        assert!(CollectConsumer::new(3, 3).snapshot().is_none());
+        assert!(RowGather::new(vec![0], 3).snapshot().is_none());
     }
 
     #[test]

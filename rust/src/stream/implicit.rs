@@ -27,10 +27,10 @@
 //! Results are bit-identical across all of these (`tests/exec_api.rs`).
 
 use super::{
-    run_pipeline_prec, GramFold, MatvecFold, ResidencyConfig, ResidencyStats, ResidentSource,
+    run_pipeline_validated, GramFold, MatvecFold, ResidencyConfig, ResidencyStats, ResidentSource,
     StreamConfig, TileConsumer, TileSource,
 };
-use crate::linalg::{eigh, lanczos, solve, Matrix};
+use crate::linalg::{eigh, guard, lanczos, Matrix};
 use crate::obs::{self, Stage};
 
 /// Second-pass consumer: `y[r0..r1] = tile · z`.
@@ -46,6 +46,21 @@ impl TileConsumer for OutMatvec {
     }
 }
 
+/// One validated pass with the config's quarantine mode; a poisoned tile
+/// panics with the typed message (the implicit ops' contract matches
+/// [`StreamingOracle`](super::StreamingOracle)).
+fn stream_validated(src: &dyn TileSource, cfg: StreamConfig, consumers: &mut [&mut dyn TileConsumer]) {
+    run_pipeline_validated(
+        src,
+        cfg.tile_rows,
+        cfg.queue_depth,
+        cfg.precision,
+        cfg.validate,
+        consumers,
+    )
+    .unwrap_or_else(|e| panic!("{e}"));
+}
+
 /// `y = C U C^T x` in two streaming passes over `src` (the `C` panel):
 /// `t = C^T x` (fold), `z = U t`, `y = C z` (emit). Peak extra memory
 /// `O(tile_rows · c + c²)`.
@@ -55,10 +70,10 @@ pub fn matvec_cuc(src: &dyn TileSource, u: &Matrix, x: &[f64], cfg: StreamConfig
     assert_eq!(x.len(), n, "matvec_cuc: x must have n entries");
     assert_eq!((u.rows(), u.cols()), (c, c), "matvec_cuc: U must be c x c");
     let mut fold = MatvecFold::new(x, c);
-    run_pipeline_prec(src, cfg.tile_rows, cfg.queue_depth, cfg.precision, &mut [&mut fold]);
+    stream_validated(src, cfg, &mut [&mut fold]);
     let z = u.matvec(&fold.into_vec());
     let mut out = OutMatvec { z, y: vec![0.0; n] };
-    run_pipeline_prec(src, cfg.tile_rows, cfg.queue_depth, cfg.precision, &mut [&mut out]);
+    stream_validated(src, cfg, &mut [&mut out]);
     out.y
 }
 
@@ -99,13 +114,7 @@ fn solve_impl(
     // One pass: C^T C and C^T y together.
     let mut gram = GramFold::new(c);
     let mut cty = MatvecFold::new(y, c);
-    run_pipeline_prec(
-        src,
-        cfg.tile_rows,
-        cfg.queue_depth,
-        cfg.precision,
-        &mut [&mut gram, &mut cty],
-    );
+    stream_validated(src, cfg, &mut [&mut gram, &mut cty]);
     // inner = alpha I + G^T (C^T C) G  (= alpha I + B^T B for B = C G)
     let ctc = gram.into_matrix();
     let mut inner = crate::linalg::gemm::symm_nt(&ctc.matmul(&g).transpose(), &g.transpose());
@@ -113,12 +122,15 @@ fn solve_impl(
     let bty = g.tr_matvec(&cty.into_vec());
     let z = {
         let _s = obs::span(Stage::SolveWoodbury);
-        solve::lu_solve(&inner, &bty).expect("alpha I + B^T B is SPD")
+        // SPD by construction → the guarded solve is the plain LU solve on
+        // every sane input; a degenerate core escalates the regularization
+        // ladder (noted in numeric_health) instead of panicking.
+        guard::guarded_spd_solve(&inner, &bty)
     };
     // Second pass: B z = C (G z).
     let gz = g.matvec(&z);
     let mut out = OutMatvec { z: gz, y: vec![0.0; n] };
-    run_pipeline_prec(src, cfg.tile_rows, cfg.queue_depth, cfg.precision, &mut [&mut out]);
+    stream_validated(src, cfg, &mut [&mut out]);
     y.iter()
         .zip(&out.y)
         .map(|(&yi, &bi)| (yi - bi) / alpha)

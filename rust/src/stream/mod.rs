@@ -25,11 +25,14 @@
 //! repeated sketch folds over the same `C`) pay the kernel oracle exactly
 //! once per tile — at any RAM budget, including zero.
 
+pub mod checkpoint;
 pub mod consumers;
 pub mod implicit;
 pub mod pipeline;
+pub mod record;
 pub mod residency;
 
+pub use checkpoint::CheckpointConfig;
 pub use consumers::{
     ColSubsetCollect, CollectConsumer, ConjugateFold, GramFold, LeverageFold, LeverageSampler,
     MatvecFold, PrototypeUFold, RowGather, SketchFold, TileConsumer,
@@ -42,7 +45,11 @@ pub use implicit::{
     solve_regularized, solve_regularized_budgeted, solve_regularized_resident, top_k_eigs,
     top_k_eigs_budgeted, top_k_eigs_resident,
 };
-pub use pipeline::{run_pipeline, run_pipeline_prec};
+pub use pipeline::{
+    run_pipeline, run_pipeline_prec, run_pipeline_resumable, run_pipeline_validated,
+    PipelineError, ValidateMode,
+};
+pub use record::RecordError;
 pub use residency::{
     ResidencyConfig, ResidencyStats, ResidentSource, DEFAULT_RESIDENT_TILE_ROWS,
 };
@@ -68,6 +75,12 @@ pub struct StreamConfig {
     /// f64 either way; `F32` halves tile bytes (queue, spill, panel cache)
     /// and runs the narrow gemm/oracle plane.
     pub precision: Precision,
+    /// Tile quarantine: scan every produced tile for non-finite (or
+    /// absurd-magnitude) values *before* any consumer folds it —
+    /// `PipelineError::PoisonedTile` instead of NaNs silently saturating
+    /// a Gram/sketch accumulator. `Off` (the default) costs one branch
+    /// per tile.
+    pub validate: ValidateMode,
 }
 
 /// Default queue depth for tiled streams (double buffering + one in hand).
@@ -80,17 +93,29 @@ impl StreamConfig {
             tile_rows: tile_rows.max(1),
             queue_depth: DEFAULT_QUEUE_DEPTH,
             precision: Precision::F64,
+            validate: ValidateMode::Off,
         }
     }
 
     /// One tile covering every row — the materialized path.
     pub fn whole() -> Self {
-        StreamConfig { tile_rows: usize::MAX, queue_depth: 1, precision: Precision::F64 }
+        StreamConfig {
+            tile_rows: usize::MAX,
+            queue_depth: 1,
+            precision: Precision::F64,
+            validate: ValidateMode::Off,
+        }
     }
 
     /// Same traversal, tiles carried at `precision`.
     pub fn with_precision(mut self, precision: Precision) -> Self {
         self.precision = precision;
+        self
+    }
+
+    /// Same traversal, tiles scanned per `validate` before folding.
+    pub fn with_validate(mut self, validate: ValidateMode) -> Self {
+        self.validate = validate;
         self
     }
 
@@ -369,25 +394,29 @@ impl<'a> StreamingOracle<'a> {
     /// element width.
     pub fn stream_columns(&self, cols: &[usize], consumers: &mut [&mut dyn TileConsumer]) {
         let src = OracleColumnsSource::new(self.oracle, cols);
-        run_pipeline_prec(
+        run_pipeline_validated(
             &src,
             self.cfg.tile_rows,
             self.cfg.queue_depth,
             self.cfg.precision,
+            self.cfg.validate,
             consumers,
-        );
+        )
+        .unwrap_or_else(|e| panic!("{e}"));
     }
 
     /// Stream the full `K` through `consumers` at the configured width.
     pub fn stream_full(&self, consumers: &mut [&mut dyn TileConsumer]) {
         let src = OracleFullSource::new(self.oracle);
-        run_pipeline_prec(
+        run_pipeline_validated(
             &src,
             self.cfg.tile_rows,
             self.cfg.queue_depth,
             self.cfg.precision,
+            self.cfg.validate,
             consumers,
-        );
+        )
+        .unwrap_or_else(|e| panic!("{e}"));
     }
 }
 
@@ -530,6 +559,11 @@ mod tests {
         let cfg = StreamConfig::tiled(8).with_precision(Precision::F32);
         assert_eq!(cfg.precision, Precision::F32);
         assert_eq!(cfg.tile_rows, 8);
+        assert_eq!(cfg.validate, ValidateMode::Off, "validation is opt-in");
+        assert_eq!(
+            StreamConfig::whole().with_validate(ValidateMode::NonFinite).validate,
+            ValidateMode::NonFinite
+        );
         // f32 panels charge exactly half the f64 unit.
         assert_eq!(panel_bytes(100, 7), 100 * 7 * 8);
         assert_eq!(panel_bytes_prec(100, 7, Precision::F32), 100 * 7 * 4);

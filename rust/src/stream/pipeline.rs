@@ -13,19 +13,104 @@
 //! consumers are bit-identical to the materialized path and
 //! accumulation-style consumers differ only by reduction grouping.
 //!
+//! Two integrity layers ride the same scheduler (both opt-in, both free
+//! when off):
+//!
+//! - **Tile quarantine** ([`ValidateMode`] via
+//!   [`run_pipeline_validated`]): every tile is scanned for non-finite
+//!   (or absurd-magnitude) values on the consumer thread *before* any
+//!   fold sees it; a hit fails the pass fast with the typed
+//!   [`PipelineError::PoisonedTile`] instead of letting one NaN saturate
+//!   a Gram/sketch accumulator into an all-NaN result. `Off` costs one
+//!   enum branch per tile.
+//! - **Checkpoint/resume** ([`checkpoint`](super::checkpoint)): when a
+//!   checkpoint context is armed on the calling thread and every
+//!   consumer supports [`TileConsumer::snapshot`], fold state is
+//!   persisted every K tiles and an interrupted pass resumes from the
+//!   last completed tile — the producer starts at the resumed row, so
+//!   the oracle is re-charged only for tiles after the checkpoint.
+//!
 //! Both sides are span-traced ([`obs`]): tile builds as
 //! `pipeline.produce`, folds as `pipeline.fold`, and the time each side
 //! spends blocked on the bounded channel as `pipeline.produce.stall` /
 //! `pipeline.fold.stall` — the stall fractions that answer whether a run
 //! is oracle-bound or fold-bound (EXPERIMENTS.md §Observability).
 
+use super::checkpoint::{self, CheckpointConfig};
 use super::{TileConsumer, TileSource};
 use crate::linalg::{Precision, Tile};
 use crate::obs::{self, Stage};
 use crate::pool;
 use crate::testkit::faults::{self, FaultPlan, FaultPoint};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// What the per-tile quarantine scan looks for (see
+/// [`StreamConfig::validate`](super::StreamConfig::validate)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ValidateMode {
+    /// No scan — one branch per tile, the bit-compat default.
+    #[default]
+    Off,
+    /// Reject tiles containing NaN or ±Inf.
+    NonFinite,
+    /// Additionally reject finite values with `|v| > 1e154` — magnitudes
+    /// whose square overflows f64, i.e. values guaranteed to poison a
+    /// Gram fold even though they are technically finite. (f32 tiles
+    /// cannot reach that magnitude, so `Full` equals `NonFinite` there.)
+    Full,
+}
+
+/// Finite values above this magnitude overflow when squared by a Gram
+/// fold (`sqrt(f64::MAX) ≈ 1.34e154`).
+const SQUARE_SAFE_MAX: f64 = 1e154;
+
+impl ValidateMode {
+    /// Scan `tile`; `Some(lane)` is the column of the first offending
+    /// value.
+    fn scan(self, tile: &Tile) -> Option<usize> {
+        match self {
+            ValidateMode::Off => None,
+            ValidateMode::NonFinite | ValidateMode::Full => {
+                let full = self == ValidateMode::Full;
+                match tile {
+                    Tile::F64(m) => {
+                        let cols = m.cols().max(1);
+                        m.data()
+                            .iter()
+                            .position(|v| !v.is_finite() || (full && v.abs() > SQUARE_SAFE_MAX))
+                            .map(|p| p % cols)
+                    }
+                    Tile::F32(m) => {
+                        let cols = m.cols().max(1);
+                        m.data().iter().position(|v| !v.is_finite()).map(|p| p % cols)
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Typed failure of a validated pipeline pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineError {
+    /// Tile `index` (ascending tile ordinal) carried a non-finite or
+    /// out-of-range value in column `lane`. No consumer folded it.
+    PoisonedTile { index: usize, lane: usize },
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::PoisonedTile { index, lane } => write!(
+                f,
+                "poisoned tile {index}: non-finite or out-of-range value in lane {lane}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
 
 struct ChanState {
     buf: VecDeque<(usize, Tile)>,
@@ -137,7 +222,44 @@ pub fn run_pipeline(
 }
 
 /// Stream `src` through `consumers` in `tile_rows`-high tiles of the
-/// requested element width.
+/// requested element width, without validation — an exact alias of
+/// [`run_pipeline_validated`]`(.., ValidateMode::Off, ..)` (which cannot
+/// fail). Checkpointing still engages when a
+/// [`checkpoint`](super::checkpoint) context is armed on this thread.
+pub fn run_pipeline_prec(
+    src: &dyn TileSource,
+    tile_rows: usize,
+    queue_depth: usize,
+    precision: Precision,
+    consumers: &mut [&mut dyn TileConsumer],
+) {
+    match run_pipeline_validated(src, tile_rows, queue_depth, precision, ValidateMode::Off, consumers)
+    {
+        Ok(()) => {}
+        Err(e) => unreachable!("ValidateMode::Off cannot fail: {e}"),
+    }
+}
+
+/// One explicitly checkpointed pass: arms `ckpt` for the duration of the
+/// run (so a later identical call resumes from whatever this one
+/// persisted) and streams with validation. See the module docs of
+/// [`checkpoint`](super::checkpoint) for the resume contract.
+pub fn run_pipeline_resumable(
+    src: &dyn TileSource,
+    tile_rows: usize,
+    queue_depth: usize,
+    precision: Precision,
+    validate: ValidateMode,
+    ckpt: &CheckpointConfig,
+    consumers: &mut [&mut dyn TileConsumer],
+) -> Result<(), PipelineError> {
+    let _g = checkpoint::arm(ckpt);
+    run_pipeline_validated(src, tile_rows, queue_depth, precision, validate, consumers)
+}
+
+/// Stream `src` through `consumers` in `tile_rows`-high tiles of the
+/// requested element width, scanning each tile per `validate` before any
+/// consumer folds it.
 ///
 /// When one tile covers every row the pipeline is skipped entirely: the
 /// tile is computed inline and fed once (the materialized fallback). A
@@ -146,49 +268,96 @@ pub fn run_pipeline(
 /// carries: consumption order, fault seams, and span accounting are
 /// identical in both precisions, and every consumer folds into f64 state
 /// regardless of the tile type.
-pub fn run_pipeline_prec(
+///
+/// On [`PipelineError::PoisonedTile`] the offending tile has been folded
+/// by **no** consumer, the producer is stopped, and — if a checkpoint
+/// context is armed — the last persisted checkpoint is left in place, so
+/// a retry after fixing the source resumes rather than restarting.
+pub fn run_pipeline_validated(
     src: &dyn TileSource,
     tile_rows: usize,
     queue_depth: usize,
     precision: Precision,
+    validate: ValidateMode,
     consumers: &mut [&mut dyn TileConsumer],
-) {
+) -> Result<(), PipelineError> {
     let n = src.rows();
     if n == 0 {
-        return;
+        return Ok(());
     }
-    // Chaos seam: a globally armed FaultPlan can schedule a panic before
-    // the fold of the Nth tile (captured once per pipeline run).
+    // Chaos seam: a globally armed FaultPlan can schedule a consumer-fold
+    // panic or a poisoned tile (captured once per pipeline run).
     let faults = faults::current();
     let t = tile_rows.clamp(1, n);
+    // Claim this run's pass ordinal even when the whole-tile shortcut or
+    // the consumers make checkpointing moot: the ordinal must be a
+    // function of the run sequence alone so a retried request maps every
+    // pass onto the same checkpoint file.
+    let pass = checkpoint::next_pass_spec();
     if t >= n {
-        let tile = {
+        let mut tile = {
             let _s = obs::span(Stage::PipelineProduce);
             src.tile_elem(0, n, precision)
         };
+        maybe_poison(&faults, &mut tile);
+        if let Some(lane) = validate.scan(&tile) {
+            crate::linalg::guard::note_quarantined_tile();
+            return Err(PipelineError::PoisonedTile { index: 0, lane });
+        }
         trip_fold_fault(&faults, 0);
         let _s = obs::span(Stage::PipelineFold);
         for c in consumers.iter_mut() {
             c.consume_tile(0, &tile);
         }
-        return;
+        return Ok(());
+    }
+    // Checkpointing engages only when every consumer can snapshot (the
+    // row-ordered sum folds); a pass with any gather/sampler consumer
+    // streams exactly as before.
+    let ckpt = pass.filter(|_| consumers.iter().all(|c| c.snapshot().is_some()));
+    let meta = checkpoint::PassMeta {
+        n,
+        cols: src.cols(),
+        tile_rows: t,
+        precision,
+        consumers: consumers.len(),
+    };
+    let mut start_r0 = 0usize;
+    if let Some(spec) = &ckpt {
+        if let Some((next_r0, snaps)) = checkpoint::load(&spec.path, &meta) {
+            let shapes_match = snaps.len() == consumers.len()
+                && consumers.iter().zip(&snaps).all(|(c, s)| {
+                    c.snapshot()
+                        .map_or(false, |cur| cur.rows() == s.rows() && cur.cols() == s.cols())
+                });
+            if shapes_match {
+                for (c, s) in consumers.iter_mut().zip(&snaps) {
+                    let restored = c.restore(s);
+                    debug_assert!(restored, "restore failed after shape check");
+                }
+                start_r0 = next_r0;
+            }
+        }
     }
     // Forward the caller's trace id into the pool-spawned producer so
     // both sides of the pipeline land in the same request timeline.
     let trace = obs::current_trace_raw();
     let chan = Chan::new(queue_depth.max(1));
     let chan_ref = &chan;
+    let faults_prod = faults.clone();
+    let mut outcome: Result<(), PipelineError> = Ok(());
     pool::global().scoped(|scope| {
         scope.spawn(move || {
             let _trace = obs::trace_scope(trace);
             let _done = TxGuard(chan_ref);
-            let mut r0 = 0;
+            let mut r0 = start_r0;
             while r0 < n {
                 let r1 = (r0 + t).min(n);
-                let tile = {
+                let mut tile = {
                     let _s = obs::span(Stage::PipelineProduce);
                     src.tile_elem(r0, r1, precision)
                 };
+                maybe_poison(&faults_prod, &mut tile);
                 let pushed = {
                     let _s = obs::span(Stage::PipelineProduceStall);
                     chan_ref.push((r0, tile))
@@ -200,28 +369,78 @@ pub fn run_pipeline_prec(
             }
         });
         let _guard = RxGuard(chan_ref);
+        let mut folded = 0usize;
         loop {
             let item = {
                 let _s = obs::span(Stage::PipelineFoldStall);
                 chan_ref.pop()
             };
             let Some((r0, tile)) = item else { break };
+            if let Some(lane) = validate.scan(&tile) {
+                // quarantine: no consumer sees the tile; RxGuard stops
+                // the producer on drop
+                crate::linalg::guard::note_quarantined_tile();
+                outcome = Err(PipelineError::PoisonedTile { index: r0 / t, lane });
+                break;
+            }
             trip_fold_fault(&faults, r0);
-            let _s = obs::span(Stage::PipelineFold);
-            for c in consumers.iter_mut() {
-                c.consume_tile(r0, &tile);
+            {
+                let _s = obs::span(Stage::PipelineFold);
+                for c in consumers.iter_mut() {
+                    c.consume_tile(r0, &tile);
+                }
+            }
+            if let Some(spec) = &ckpt {
+                folded += 1;
+                let r1 = (r0 + t).min(n);
+                if folded % spec.every == 0 && r1 < n {
+                    let snaps: Vec<_> = consumers
+                        .iter()
+                        .map(|c| c.snapshot().expect("snapshot support checked at pass start"))
+                        .collect();
+                    // a failed write only costs resume granularity
+                    let _ = checkpoint::save(&spec.path, &meta, r1, &snaps);
+                }
             }
         }
     });
+    if outcome.is_ok() {
+        if let Some(spec) = &ckpt {
+            checkpoint::discard(&spec.path);
+        }
+    }
+    outcome
 }
 
 /// Panic on the fold the armed plan scheduled (counted once per tile, on
 /// the consumer thread, so the unwind exercises the RxGuard exactly like
 /// a real consumer bug would).
-fn trip_fold_fault(faults: &Option<std::sync::Arc<FaultPlan>>, r0: usize) {
+fn trip_fold_fault(faults: &Option<Arc<FaultPlan>>, r0: usize) {
     if let Some(plan) = faults {
         if plan.should_fail(FaultPoint::ConsumerFold) {
             panic!("injected fault: consumer fold at r0={r0}");
+        }
+    }
+}
+
+/// Write a NaN into the scheduled tile on the producer side — the seam
+/// [`ValidateMode`] quarantines; with validation off the NaN flows into
+/// the folds exactly like an unguarded oracle bug would.
+fn maybe_poison(faults: &Option<Arc<FaultPlan>>, tile: &mut Tile) {
+    if let Some(plan) = faults {
+        if plan.should_fail(FaultPoint::PoisonTile) {
+            match tile {
+                Tile::F64(m) => {
+                    if let Some(v) = m.data_mut().first_mut() {
+                        *v = f64::NAN;
+                    }
+                }
+                Tile::F32(m) => {
+                    if let Some(v) = m.data_mut().first_mut() {
+                        *v = f32::NAN;
+                    }
+                }
+            }
         }
     }
 }
@@ -230,7 +449,7 @@ fn trip_fold_fault(faults: &Option<std::sync::Arc<FaultPlan>>, r0: usize) {
 mod tests {
     use super::*;
     use crate::linalg::Matrix;
-    use crate::stream::{CollectConsumer, MatrixSource, TileSource};
+    use crate::stream::{CollectConsumer, GramFold, MatrixSource, TileSource};
     use crate::util::Rng;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -387,5 +606,232 @@ mod tests {
             run_pipeline(&src, 4, 1, &mut [&mut bomb]);
         }));
         assert!(result.is_err(), "panic must propagate, not hang");
+    }
+
+    /// A matrix with one poisoned value at `(row, lane)`.
+    fn poisoned(n: usize, cols: usize, row: usize, lane: usize, v: f64) -> Matrix {
+        let mut rng = Rng::new(17);
+        let mut a = Matrix::randn(n, cols, &mut rng);
+        a.row_mut(row)[lane] = v;
+        a
+    }
+
+    #[test]
+    fn validation_quarantines_nan_with_typed_index_and_lane() {
+        let a = poisoned(29, 4, 13, 2, f64::NAN);
+        let src = MatrixSource::new(&a);
+        // tile 5 → row 13 falls in tile ordinal 2
+        struct CountFolds(usize);
+        impl TileConsumer for CountFolds {
+            fn consume(&mut self, _: usize, _: &Matrix) {
+                self.0 += 1;
+            }
+        }
+        let mut c = CountFolds(0);
+        let err = run_pipeline_validated(
+            &src,
+            5,
+            2,
+            Precision::F64,
+            ValidateMode::NonFinite,
+            &mut [&mut c],
+        )
+        .unwrap_err();
+        assert_eq!(err, PipelineError::PoisonedTile { index: 2, lane: 2 });
+        assert!(err.to_string().contains("poisoned tile"), "{err}");
+        assert_eq!(c.0, 2, "tiles before the poisoned one folded, none after");
+
+        // whole-tile shortcut reports ordinal 0 and folds nothing
+        let mut c = CountFolds(0);
+        let err = run_pipeline_validated(
+            &src,
+            64,
+            2,
+            Precision::F64,
+            ValidateMode::NonFinite,
+            &mut [&mut c],
+        )
+        .unwrap_err();
+        assert_eq!(err, PipelineError::PoisonedTile { index: 0, lane: 2 });
+        assert_eq!(c.0, 0);
+
+        // Off mode streams the same source without complaint (the
+        // pre-validation behavior, bit for bit)
+        let mut collect = CollectConsumer::new(29, 4);
+        run_pipeline(&src, 5, 2, &mut [&mut collect]);
+        assert!(collect.into_matrix()[(13, 2)].is_nan());
+    }
+
+    #[test]
+    fn full_mode_rejects_square_overflow_magnitudes() {
+        let a = poisoned(20, 3, 7, 1, 1e200);
+        let src = MatrixSource::new(&a);
+        // NonFinite accepts it (1e200 is finite)…
+        let mut sink = CollectConsumer::new(20, 3);
+        run_pipeline_validated(&src, 4, 2, Precision::F64, ValidateMode::NonFinite, &mut [
+            &mut sink,
+        ])
+        .expect("finite values pass NonFinite");
+        // …Full rejects it before a Gram fold can overflow
+        let mut gram = GramFold::new(3);
+        let err = run_pipeline_validated(&src, 4, 2, Precision::F64, ValidateMode::Full, &mut [
+            &mut gram,
+        ])
+        .unwrap_err();
+        assert_eq!(err, PipelineError::PoisonedTile { index: 1, lane: 1 });
+        // ±Inf in an f32 stream is caught by the narrow scan too
+        let b = poisoned(20, 3, 2, 0, f64::INFINITY);
+        let srcb = MatrixSource::new(&b);
+        let mut sink = CollectConsumer::new(20, 3);
+        let err = run_pipeline_validated(
+            &srcb,
+            4,
+            2,
+            Precision::F32,
+            ValidateMode::NonFinite,
+            &mut [&mut sink],
+        )
+        .unwrap_err();
+        assert_eq!(err, PipelineError::PoisonedTile { index: 0, lane: 0 });
+    }
+
+    /// Column-sum fold with snapshot/restore and a scheduled panic — the
+    /// checkpoint/resume test double.
+    struct BombSum {
+        acc: Vec<f64>,
+        panic_at: Option<usize>,
+    }
+
+    impl BombSum {
+        fn new(width: usize, panic_at: Option<usize>) -> Self {
+            BombSum { acc: vec![0.0; width], panic_at }
+        }
+    }
+
+    impl TileConsumer for BombSum {
+        fn consume(&mut self, r0: usize, tile: &Matrix) {
+            if self.panic_at == Some(r0) {
+                panic!("interrupted at r0={r0}");
+            }
+            for r in 0..tile.rows() {
+                for (a, v) in self.acc.iter_mut().zip(tile.row(r)) {
+                    *a += v;
+                }
+            }
+        }
+
+        fn snapshot(&self) -> Option<Matrix> {
+            Some(Matrix::from_vec(1, self.acc.len(), self.acc.clone()))
+        }
+
+        fn restore(&mut self, state: &Matrix) -> bool {
+            if state.rows() != 1 || state.cols() != self.acc.len() {
+                return false;
+            }
+            self.acc.copy_from_slice(state.row(0));
+            true
+        }
+    }
+
+    struct CountingSrc {
+        a: Matrix,
+        tiles: AtomicUsize,
+    }
+
+    impl TileSource for CountingSrc {
+        fn rows(&self) -> usize {
+            self.a.rows()
+        }
+        fn cols(&self) -> usize {
+            self.a.cols()
+        }
+        fn tile(&self, r0: usize, r1: usize) -> Matrix {
+            self.tiles.fetch_add(1, Ordering::SeqCst);
+            self.a.block(r0, r1, 0, self.a.cols())
+        }
+    }
+
+    #[test]
+    fn interrupted_pass_resumes_from_checkpoint_bit_identically() {
+        let mut rng = Rng::new(23);
+        let src = CountingSrc { a: Matrix::randn(40, 3, &mut rng), tiles: AtomicUsize::new(0) };
+        let reference = {
+            let mut fold = BombSum::new(3, None);
+            run_pipeline(&src, 8, 2, &mut [&mut fold]);
+            fold.acc.clone()
+        };
+        let dir = std::env::temp_dir().join(format!("fastspsd-ckpt-pipe-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = CheckpointConfig::new(&dir).with_every(1);
+        let ckpt_file = dir.join("ckpt-pass-1.bin");
+
+        // attempt 1 dies folding the tile at r0=16; tiles 0 and 8 are
+        // checkpointed
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut fold = BombSum::new(3, Some(16));
+            let _ = run_pipeline_resumable(
+                &src,
+                8,
+                2,
+                Precision::F64,
+                ValidateMode::Off,
+                &cfg,
+                &mut [&mut fold],
+            );
+        }));
+        assert!(result.is_err(), "scheduled interruption must propagate");
+        assert!(ckpt_file.exists(), "interrupted pass must leave its checkpoint");
+
+        // attempt 2 resumes at r0=16: only tiles 16, 24, 32 are recomputed
+        src.tiles.store(0, Ordering::SeqCst);
+        let mut fold = BombSum::new(3, None);
+        run_pipeline_resumable(
+            &src,
+            8,
+            2,
+            Precision::F64,
+            ValidateMode::Off,
+            &cfg,
+            &mut [&mut fold],
+        )
+        .unwrap();
+        assert_eq!(
+            src.tiles.load(Ordering::SeqCst),
+            3,
+            "resume must re-charge the source only for tiles after the checkpoint"
+        );
+        assert_eq!(fold.acc, reference, "interrupted+resumed must be bit-identical");
+        assert!(!ckpt_file.exists(), "completed pass must discard its checkpoint");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unsupported_consumers_stream_unchanged_under_armed_checkpoints() {
+        // CollectConsumer has no snapshot: the pass must neither write a
+        // checkpoint nor change results.
+        let mut rng = Rng::new(27);
+        let a = Matrix::randn(24, 2, &mut rng);
+        let src = MatrixSource::new(&a);
+        let dir = std::env::temp_dir().join(format!("fastspsd-ckpt-skip-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = CheckpointConfig::new(&dir).with_every(1);
+        let mut collect = CollectConsumer::new(24, 2);
+        run_pipeline_resumable(
+            &src,
+            4,
+            2,
+            Precision::F64,
+            ValidateMode::Off,
+            &cfg,
+            &mut [&mut collect],
+        )
+        .unwrap();
+        assert_eq!(collect.into_matrix().max_abs_diff(&a), 0.0);
+        assert_eq!(
+            std::fs::read_dir(&dir).unwrap().count(),
+            0,
+            "no checkpoint files for snapshot-less consumers"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

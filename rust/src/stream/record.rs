@@ -1,0 +1,212 @@
+//! Checksummed on-disk record codec shared by the spill arena
+//! ([`residency`](super::residency)) and the pipeline checkpoint files
+//! ([`checkpoint`](super::checkpoint)).
+//!
+//! Every record is
+//!
+//! ```text
+//! [ 1-byte width tag | 8-byte LE XXH64 digest of payload | payload ]
+//! ```
+//!
+//! The tag is the element width in bytes (8 = f64, 4 = f32) so a reader
+//! configured for one width never reinterprets the other's bytes; the
+//! digest (seeded by the tag, so a payload cannot validate under the
+//! wrong width) catches bit rot, torn writes, and buggy IO paths on
+//! read-back. Integrity failures are *typed* ([`RecordError`]) — the
+//! residency layer turns them into `corrupt_reads` + recompute, the
+//! checkpoint loader into restart-from-zero; neither ever folds wrong
+//! bits.
+//!
+//! Payload length is not stored: both consumers know the exact payload
+//! size from out-of-band metadata (tile dims × width; checkpoint header
+//! fields), and an append-only arena already tracks offsets. A
+//! truncated read therefore surfaces as a short-read IO error before
+//! checksum verification even runs.
+
+use crate::linalg::{Matrix, MatrixF32, Precision, Tile};
+use crate::util::xxh64;
+
+/// Bytes preceding the payload: 1 tag + 8 checksum.
+pub const RECORD_HEADER_BYTES: usize = 9;
+
+/// Why a record failed integrity verification on read-back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordError {
+    /// The width tag disagrees with the reader's element width.
+    TagMismatch { expected: u8, found: u8 },
+    /// The stored digest does not match the payload read back.
+    ChecksumMismatch,
+}
+
+impl std::fmt::Display for RecordError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecordError::TagMismatch { expected, found } => {
+                write!(f, "record width tag mismatch: expected {expected}, found {found}")
+            }
+            RecordError::ChecksumMismatch => write!(f, "record checksum mismatch"),
+        }
+    }
+}
+
+fn digest(tag: u8, payload: &[u8]) -> u64 {
+    xxh64(payload, tag as u64)
+}
+
+/// Frame `payload` under `tag` as one record (header + payload).
+pub fn encode(tag: u8, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(RECORD_HEADER_BYTES + payload.len());
+    buf.push(tag);
+    buf.extend_from_slice(&digest(tag, payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Flip one payload byte of an already-encoded record *without*
+/// refreshing the stored digest — the chaos harness's write-time
+/// corruption seam ([`FaultPoint::SpillCorrupt`]), guaranteed to be
+/// detected on read-back. No-op on a header-only record.
+///
+/// [`FaultPoint::SpillCorrupt`]: crate::testkit::faults::FaultPoint
+pub fn corrupt_in_place(record: &mut [u8]) {
+    if record.len() > RECORD_HEADER_BYTES {
+        // middle of the payload: representative of real bit rot, and
+        // never the header (a corrupted header is the tag-mismatch
+        // path, which read-back also ends typed)
+        let i = RECORD_HEADER_BYTES + (record.len() - RECORD_HEADER_BYTES) / 2;
+        record[i] ^= 0x01;
+    }
+}
+
+/// Verify a record read back as (9-byte header, payload).
+pub fn verify(expected_tag: u8, header: &[u8; RECORD_HEADER_BYTES], payload: &[u8]) -> Result<(), RecordError> {
+    if header[0] != expected_tag {
+        return Err(RecordError::TagMismatch { expected: expected_tag, found: header[0] });
+    }
+    let stored = u64::from_le_bytes(header[1..9].try_into().unwrap());
+    if stored != digest(header[0], payload) {
+        return Err(RecordError::ChecksumMismatch);
+    }
+    Ok(())
+}
+
+/// Serialize a tile's elements row-major little-endian (the record
+/// payload; the width tag is [`tile_tag`]).
+pub fn tile_payload(t: &Tile) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(t.payload_bytes() as usize);
+    match t {
+        Tile::F64(m) => {
+            for &v in m.data() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Tile::F32(m) => {
+            for &v in m.data() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    buf
+}
+
+/// The record width tag for an element width.
+pub fn width_tag(prec: Precision) -> u8 {
+    prec.bytes() as u8
+}
+
+/// Rebuild a `rows × cols` tile from a record payload (bit-exact
+/// inverse of [`tile_payload`]).
+pub fn tile_from_payload(rows: usize, cols: usize, prec: Precision, payload: &[u8]) -> Tile {
+    match prec {
+        Precision::F64 => {
+            let data: Vec<f64> = payload
+                .chunks_exact(8)
+                .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Tile::F64(Matrix::from_vec(rows, cols, data))
+        }
+        Precision::F32 => {
+            let data: Vec<f32> = payload
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Tile::F32(MatrixF32::from_vec(rows, cols, data))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_tile() -> Tile {
+        let mut rng = Rng::new(13);
+        Tile::F64(Matrix::randn(5, 3, &mut rng))
+    }
+
+    fn split(rec: &[u8]) -> ([u8; RECORD_HEADER_BYTES], &[u8]) {
+        (rec[..RECORD_HEADER_BYTES].try_into().unwrap(), &rec[RECORD_HEADER_BYTES..])
+    }
+
+    #[test]
+    fn round_trip_verifies_and_rebuilds_bit_exactly() {
+        let t = sample_tile();
+        let rec = encode(width_tag(t.precision()), &tile_payload(&t));
+        let (header, payload) = split(&rec);
+        verify(8, &header, payload).expect("clean record must verify");
+        let back = tile_from_payload(5, 3, Precision::F64, payload);
+        match (&t, &back) {
+            (Tile::F64(a), Tile::F64(b)) => assert_eq!(a.max_abs_diff(b), 0.0),
+            _ => panic!("width changed in round trip"),
+        }
+    }
+
+    #[test]
+    fn f32_round_trip_is_bit_exact() {
+        let mut rng = Rng::new(14);
+        let t = Tile::F32(Matrix::randn(4, 2, &mut rng).demote());
+        let rec = encode(width_tag(t.precision()), &tile_payload(&t));
+        let (header, payload) = split(&rec);
+        verify(4, &header, payload).expect("clean f32 record must verify");
+        match (tile_from_payload(4, 2, Precision::F32, payload), &t) {
+            (Tile::F32(a), Tile::F32(b)) => assert_eq!(a.promote().max_abs_diff(&b.promote()), 0.0),
+            _ => panic!("width changed in round trip"),
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected_and_tag_mismatch_is_typed() {
+        let t = sample_tile();
+        let mut rec = encode(8, &tile_payload(&t));
+        corrupt_in_place(&mut rec);
+        let (header, payload) = split(&rec);
+        assert_eq!(verify(8, &header, payload), Err(RecordError::ChecksumMismatch));
+        // a clean record read under the wrong width ends tag-typed
+        let clean = encode(8, &tile_payload(&t));
+        let (header, payload) = split(&clean);
+        assert_eq!(
+            verify(4, &header, payload),
+            Err(RecordError::TagMismatch { expected: 4, found: 8 })
+        );
+    }
+
+    #[test]
+    fn digest_is_tag_seeded() {
+        // the same payload must not validate under a forged tag even if
+        // the forger recomputes nothing — tag participates in the seed
+        let payload = tile_payload(&sample_tile());
+        let rec8 = encode(8, &payload);
+        let mut forged: [u8; RECORD_HEADER_BYTES] = rec8[..RECORD_HEADER_BYTES].try_into().unwrap();
+        forged[0] = 4;
+        assert!(verify(4, &forged, &payload).is_err());
+    }
+
+    #[test]
+    fn header_only_record_survives_corrupt_call() {
+        let mut rec = encode(8, &[]);
+        corrupt_in_place(&mut rec); // must not panic or touch the header
+        let (header, payload) = split(&rec);
+        verify(8, &header, payload).expect("empty payload stays clean");
+    }
+}

@@ -23,9 +23,11 @@
 //!   needs the arena to fit on disk.
 //!
 //! Tiles round-trip through the arena bit-exactly in either element width
-//! (`f64`/`f32` ↔ little-endian bytes; each arena record carries a 1-byte
-//! width header), so residency-served results are **bit-identical** to the
-//! recompute path. An f32-configured layer ([`ResidencyConfig::precision`])
+//! (`f64`/`f32` ↔ little-endian bytes; each arena record is framed by the
+//! checksummed codec in [`record`](super::record): a 1-byte width tag plus
+//! an 8-byte XXH64 digest of the payload, verified on every read-back), so
+//! residency-served results are **bit-identical** to the recompute path.
+//! An f32-configured layer ([`ResidencyConfig::precision`])
 //! caches and spills tiles at half the bytes per entry — the same panel
 //! fits twice over in the same `ram_budget`, and
 //! [`ResidencyStats::spilled_bytes`] (payload bytes, headers excluded)
@@ -35,10 +37,16 @@
 //! backoff (transient IO errors recover invisibly —
 //! [`ResidencyStats::io_retries`] counts them); a persistently failing
 //! arena is then dropped and the layer degrades to recompute-on-miss
-//! instead of erroring: residency is a performance layer, never a
+//! instead of erroring. A record whose checksum (or width tag) disagrees
+//! with the bytes read back is **not retried** — the bytes are wrong, not
+//! the IO — it bumps [`ResidencyStats::corrupt_reads`], invalidates only
+//! that record's offset, and recomputes the one tile (a fresh record is
+//! written through), so corruption costs one oracle charge, never wrong
+//! bits: residency is a performance layer, never a
 //! correctness dependency. The chaos harness
 //! ([`testkit::faults`](crate::testkit::faults)) injects failures into
-//! exactly these seams.
+//! exactly these seams, including write-time record corruption
+//! ([`FaultPoint::SpillCorrupt`]).
 //!
 //! Requests do not need to align with the residency grid
 //! ([`ResidencyConfig::tile_rows`]): arbitrary `[r0, r1)` ranges are
@@ -48,15 +56,16 @@
 //!
 //! [`Goal::memory_budget`]: crate::coordinator::planner::Goal
 
+use super::record::{self, RECORD_HEADER_BYTES};
 use super::TileSource;
 use crate::linalg::{Matrix, MatrixF32, Precision, Tile};
 use crate::obs::{self, Stage};
-use crate::testkit::faults::{self, FaultPlan, FaultPoint};
+use crate::testkit::faults::{self, FaultPoint};
 use std::fs::File;
 use std::io::{Read as _, Seek, SeekFrom, Write as _};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
 /// Default residency grid height: matches the stream bench's default tile
 /// and the AOT kernel artifacts' 256-row blocks.
@@ -139,6 +148,10 @@ pub struct ResidencyStats {
     /// Spill IO operations retried after a transient failure (each retry
     /// that was attempted counts once, whether or not it succeeded).
     pub io_retries: u64,
+    /// Arena records whose checksum or width tag failed verification on
+    /// read-back. Each one invalidated a single record and recomputed
+    /// that tile — corruption is detected, never folded.
+    pub corrupt_reads: u64,
 }
 
 impl ResidencyStats {
@@ -163,14 +176,15 @@ impl Drop for SpillGuard {
 
 /// The append-only tile arena. Field order matters: the handle closes
 /// before the guard unlinks the path.
+///
+/// The chaos plan is **not** captured here: every IO attempt re-reads
+/// [`faults::current`], so a plan armed mid-run (a service retry arming
+/// injection after the arena came up) is honored from its next operation.
 struct SpillArena {
     file: File,
     /// Next append offset.
     next: u64,
     guard: SpillGuard,
-    /// Fault plan captured at creation (the chaos harness's injection
-    /// seam); `None` in normal runs.
-    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Process-wide arena name sequence (several sources may spill at once).
@@ -181,32 +195,27 @@ fn create_arena(dir: Option<&Path>) -> Option<SpillArena> {
     let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
     let path = dir.join(format!("fastspsd-spill-{}-{seq}.tiles", std::process::id()));
     let file = File::options().read(true).write(true).create_new(true).open(&path).ok()?;
-    Some(SpillArena { file, next: 0, guard: SpillGuard { path }, faults: faults::current() })
+    Some(SpillArena { file, next: 0, guard: SpillGuard { path } })
 }
 
-/// Append `t` to the arena as a 1-byte element-width header followed by
-/// the row-major little-endian payload; `None` = IO failure (the caller
-/// retries, then degrades to recompute-on-miss).
+/// Append `t` to the arena as a checksummed [`record`] (width tag +
+/// XXH64 digest + row-major little-endian payload); `None` = IO failure
+/// (the caller retries, then degrades to recompute-on-miss).
 fn write_tile(arena: &mut SpillArena, t: &Tile) -> Option<u64> {
-    if let Some(plan) = &arena.faults {
+    let plan = faults::current();
+    if let Some(plan) = &plan {
         if plan.should_fail(FaultPoint::SpillWrite) {
             return None; // injected ENOSPC-style write failure
         }
     }
     let off = arena.next;
     arena.file.seek(SeekFrom::Start(off)).ok()?;
-    let mut buf = Vec::with_capacity(1 + t.payload_bytes() as usize);
-    buf.push(t.precision().bytes() as u8);
-    match t {
-        Tile::F64(m) => {
-            for &v in m.data() {
-                buf.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        Tile::F32(m) => {
-            for &v in m.data() {
-                buf.extend_from_slice(&v.to_le_bytes());
-            }
+    let mut buf = record::encode(record::width_tag(t.precision()), &record::tile_payload(t));
+    if let Some(plan) = &plan {
+        if plan.should_fail(FaultPoint::SpillCorrupt) {
+            // silent bit rot: the digest stays stale, so read-back
+            // deterministically detects the flip
+            record::corrupt_in_place(&mut buf);
         }
     }
     arena.file.write_all(&buf).ok()?;
@@ -214,46 +223,41 @@ fn write_tile(arena: &mut SpillArena, t: &Tile) -> Option<u64> {
     Some(off)
 }
 
+/// Why a spill read did not produce a tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SpillReadError {
+    /// The read itself failed (short read, IO error, injected fault) —
+    /// worth retrying, and grounds for dropping the arena if persistent.
+    Io,
+    /// The bytes came back but failed checksum/tag verification —
+    /// retrying would re-read the same wrong bytes, so the caller
+    /// invalidates the record and recomputes the tile instead.
+    Corrupt,
+}
+
 /// Read a `rows x cols` tile back (bit-exact round trip per element
-/// width). A header byte that disagrees with `prec` is treated as an IO
-/// failure — the layer then degrades to recompute rather than
-/// misinterpreting bytes.
+/// width), verifying the record checksum. A width tag that disagrees
+/// with `prec` or a digest that disagrees with the payload is
+/// [`SpillReadError::Corrupt`] — never reinterpret or fold wrong bytes.
 fn read_tile(
     arena: &mut SpillArena,
     off: u64,
     rows: usize,
     cols: usize,
     prec: Precision,
-) -> Option<Tile> {
-    if let Some(plan) = &arena.faults {
+) -> Result<Tile, SpillReadError> {
+    if let Some(plan) = faults::current() {
         if plan.should_fail(FaultPoint::SpillRead) {
-            return None; // injected short read / IO error
+            return Err(SpillReadError::Io); // injected short read / IO error
         }
     }
-    arena.file.seek(SeekFrom::Start(off)).ok()?;
-    let mut tag = [0u8; 1];
-    arena.file.read_exact(&mut tag).ok()?;
-    if tag[0] as usize != prec.bytes() {
-        return None; // width mismatch: never reinterpret payload bytes
-    }
+    arena.file.seek(SeekFrom::Start(off)).map_err(|_| SpillReadError::Io)?;
+    let mut header = [0u8; RECORD_HEADER_BYTES];
+    arena.file.read_exact(&mut header).map_err(|_| SpillReadError::Io)?;
     let mut buf = vec![0u8; rows * cols * prec.bytes()];
-    arena.file.read_exact(&mut buf).ok()?;
-    Some(match prec {
-        Precision::F64 => {
-            let data: Vec<f64> = buf
-                .chunks_exact(8)
-                .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
-                .collect();
-            Tile::F64(Matrix::from_vec(rows, cols, data))
-        }
-        Precision::F32 => {
-            let data: Vec<f32> = buf
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                .collect();
-            Tile::F32(MatrixF32::from_vec(rows, cols, data))
-        }
-    })
+    arena.file.read_exact(&mut buf).map_err(|_| SpillReadError::Io)?;
+    record::verify(record::width_tag(prec), &header, &buf).map_err(|_| SpillReadError::Corrupt)?;
+    Ok(record::tile_from_payload(rows, cols, prec, &buf))
 }
 
 /// Spill IO attempts per operation: one try + up to two retries with a
@@ -285,26 +289,32 @@ fn write_tile_retrying(arena: &mut SpillArena, m: &Tile) -> (Option<u64>, u64) {
     (None, retries)
 }
 
-/// [`read_tile`] with retries; same contract as [`write_tile_retrying`].
+/// [`read_tile`] with retries; same contract as [`write_tile_retrying`],
+/// except a [`SpillReadError::Corrupt`] result returns immediately —
+/// the bytes are deterministic, a retry would re-read the same
+/// corruption.
 fn read_tile_retrying(
     arena: &mut SpillArena,
     off: u64,
     rows: usize,
     cols: usize,
     prec: Precision,
-) -> (Option<Tile>, u64) {
+) -> (Result<Tile, SpillReadError>, u64) {
     let mut retries = 0;
+    let mut last = SpillReadError::Io;
     for attempt in 0..SPILL_IO_ATTEMPTS {
         if attempt > 0 {
             retries += 1;
             backoff(attempt);
         }
         let _s = obs::span(Stage::ResidencySpillRead);
-        if let Some(m) = read_tile(arena, off, rows, cols, prec) {
-            return (Some(m), retries);
+        match read_tile(arena, off, rows, cols, prec) {
+            Ok(m) => return (Ok(m), retries),
+            Err(SpillReadError::Corrupt) => return (Err(SpillReadError::Corrupt), retries),
+            Err(e) => last = e,
         }
     }
-    (None, retries)
+    (Err(last), retries)
 }
 
 struct Slot {
@@ -452,9 +462,11 @@ impl<'a> ResidentSource<'a> {
     }
 
     /// Fetch a non-resident grid tile: spill read when the arena has it,
-    /// compute (+ write-through) otherwise. Reads are retried with backoff
-    /// first; an arena that still fails is dropped wholesale — every
-    /// recorded offset becomes recompute.
+    /// compute (+ write-through) otherwise. IO failures are retried with
+    /// backoff first; an arena that still fails is dropped wholesale —
+    /// every recorded offset becomes recompute. A *corrupt* record (bad
+    /// checksum or width tag) invalidates only its own offset: the arena
+    /// stays live, this one tile recomputes and writes a fresh record.
     fn fetch_cold(&self, st: &mut ResState, g: usize, t0: usize, t1: usize) -> Tile {
         let spilled = st.slots[g].spill_off.filter(|_| st.arena.is_some());
         if let Some(off) = spilled {
@@ -466,13 +478,21 @@ impl<'a> ResidentSource<'a> {
                 self.precision,
             );
             st.stats.io_retries += retries;
-            if let Some(m) = m {
-                st.stats.spill_hits += 1;
-                return m;
-            }
-            st.arena = None;
-            for s in st.slots.iter_mut() {
-                s.spill_off = None;
+            match m {
+                Ok(m) => {
+                    st.stats.spill_hits += 1;
+                    return m;
+                }
+                Err(SpillReadError::Corrupt) => {
+                    st.stats.corrupt_reads += 1;
+                    st.slots[g].spill_off = None;
+                }
+                Err(SpillReadError::Io) => {
+                    st.arena = None;
+                    for s in st.slots.iter_mut() {
+                        s.spill_off = None;
+                    }
+                }
             }
         }
         self.compute_tile(st, g, t0, t1)
@@ -821,6 +841,47 @@ mod tests {
         assert_eq!(c1.into_matrix().max_abs_diff(&c2.into_matrix()), 0.0);
         assert_eq!(inner.computes.load(Ordering::SeqCst), 8, "both passes recompute");
         assert_eq!(src.stats().hits(), 0);
+    }
+
+    #[test]
+    fn corrupt_record_is_detected_recomputed_and_rewritten() {
+        // Flip one payload byte of the first arena record on disk (no
+        // fault plan — real bit rot): the next read must detect it via
+        // the checksum, recompute exactly that tile, write a fresh
+        // record, and keep the arena alive. Results stay bit-exact
+        // throughout.
+        let inner = counting(40, 4, 30);
+        let src = ResidentSource::new(&inner, &ResidencyConfig::new(0).with_tile_rows(8));
+        let tiles = 40usize.div_ceil(8);
+        let mut c1 = CollectConsumer::new(40, 4);
+        run_pipeline(&src, 8, 2, &mut [&mut c1]);
+        assert_eq!(c1.into_matrix().max_abs_diff(&inner.a), 0.0);
+
+        let path = src.spill_path().expect("arena live");
+        {
+            // record 0 starts at offset 0: header, then 8*4 f64s
+            use std::io::{Seek, SeekFrom, Write};
+            let mut f = File::options().read(true).write(true).open(&path).unwrap();
+            f.seek(SeekFrom::Start(RECORD_HEADER_BYTES as u64 + 3)).unwrap();
+            f.write_all(&[0xFF]).unwrap();
+        }
+
+        let mut c2 = CollectConsumer::new(40, 4);
+        run_pipeline(&src, 8, 2, &mut [&mut c2]);
+        assert_eq!(c2.into_matrix().max_abs_diff(&inner.a), 0.0, "never wrong bits");
+        let st = src.stats();
+        assert_eq!(st.corrupt_reads, 1, "exactly the flipped record detected");
+        assert_eq!(st.computes as usize, tiles + 1, "only the corrupt tile recomputed");
+        assert!(src.spill_active(), "one bad record must not drop the arena");
+
+        // pass 3: the rewritten record serves cleanly from disk
+        let mut c3 = CollectConsumer::new(40, 4);
+        run_pipeline(&src, 8, 2, &mut [&mut c3]);
+        assert_eq!(c3.into_matrix().max_abs_diff(&inner.a), 0.0);
+        let st = src.stats();
+        assert_eq!(st.corrupt_reads, 1, "no further corruption seen");
+        assert_eq!(st.computes as usize, tiles + 1);
+        assert_eq!(inner.computes.load(Ordering::SeqCst), tiles + 1);
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! Deterministic fault injection for the exec/service stack.
 //!
 //! A [`FaultPlan`] arms up to one fault per [`FaultPoint`]: the spill
-//! arena's write and read paths (`stream::residency`), the kernel oracle's
-//! tile production (via [`FaultyOracle`]), and the consumer fold inside
-//! `stream::run_pipeline` (globally armed, or per-consumer via
-//! [`FaultyConsumer`]). Faults are counted in *operations at that point*:
+//! arena's write and read paths (`stream::residency`), silent record
+//! corruption at write time ([`FaultPoint::SpillCorrupt`], caught by the
+//! checksum on read-back), the kernel oracle's tile production (via
+//! [`FaultyOracle`]), NaN-poisoning of produced tiles
+//! ([`FaultPoint::PoisonTile`], caught by `ValidateMode`), and the
+//! consumer fold inside `stream::run_pipeline` (globally armed, or
+//! per-consumer via [`FaultyConsumer`]). Faults are counted in
+//! *operations at that point*:
 //! `at = N` trips on the Nth operation, `persistent` keeps tripping from
 //! the Nth on, `at = 0` never trips. Everything is driven by explicit
 //! numbers or a seed ([`FaultPlan::seeded`]), so every chaos run replays
@@ -35,14 +39,23 @@ pub enum FaultPoint {
     OracleTile,
     /// A consumer fold panics mid-pipeline.
     ConsumerFold,
+    /// A spill-arena record is silently corrupted at write time (one
+    /// payload byte flipped after the checksum is computed) — the bit-rot
+    /// seam. Detected on read-back as `ResidencyStats::corrupt_reads`.
+    SpillCorrupt,
+    /// The pipeline producer poisons a tile with a NaN before sending it
+    /// — the seam `ValidateMode` quarantines.
+    PoisonTile,
 }
 
 /// Every fault point, in index order.
-pub const FAULT_POINTS: [FaultPoint; 4] = [
+pub const FAULT_POINTS: [FaultPoint; 6] = [
     FaultPoint::SpillWrite,
     FaultPoint::SpillRead,
     FaultPoint::OracleTile,
     FaultPoint::ConsumerFold,
+    FaultPoint::SpillCorrupt,
+    FaultPoint::PoisonTile,
 ];
 
 impl FaultPoint {
@@ -52,6 +65,8 @@ impl FaultPoint {
             FaultPoint::SpillRead => 1,
             FaultPoint::OracleTile => 2,
             FaultPoint::ConsumerFold => 3,
+            FaultPoint::SpillCorrupt => 4,
+            FaultPoint::PoisonTile => 5,
         }
     }
 
@@ -61,6 +76,8 @@ impl FaultPoint {
             FaultPoint::SpillRead => "spill read",
             FaultPoint::OracleTile => "oracle tile",
             FaultPoint::ConsumerFold => "consumer fold",
+            FaultPoint::SpillCorrupt => "spill corrupt",
+            FaultPoint::PoisonTile => "poisoned tile",
         }
     }
 }
@@ -94,13 +111,13 @@ impl FaultSpec {
     }
 }
 
-/// A deterministic fault schedule over the four [`FaultPoint`]s, with
+/// A deterministic fault schedule over the six [`FaultPoint`]s, with
 /// per-point operation and injection counters for post-mortem assertions.
 #[derive(Debug, Default)]
 pub struct FaultPlan {
-    specs: [FaultSpec; 4],
-    ops: [AtomicU64; 4],
-    injected: [AtomicU64; 4],
+    specs: [FaultSpec; 6],
+    ops: [AtomicU64; 6],
+    injected: [AtomicU64; 6],
 }
 
 impl Default for FaultSpec {

@@ -1,7 +1,9 @@
-//! Small shared utilities: RNG, timing.
+//! Small shared utilities: RNG, timing, content hashing.
 
+pub mod hash;
 pub mod rng;
 pub mod timer;
 
+pub use hash::xxh64;
 pub use rng::Rng;
 pub use timer::Stopwatch;

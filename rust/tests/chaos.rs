@@ -1,9 +1,10 @@
-//! Chaos acceptance matrix (ISSUE 6): deterministic fault injection over
-//! {spill write, spill read, oracle tile, consumer fold} ×
+//! Chaos acceptance matrix (ISSUE 6, extended by the integrity PR):
+//! deterministic fault injection over {spill write, spill read, oracle
+//! tile, consumer fold, spill corruption, tile poisoning} ×
 //! {transient, persistent}. Every cell must end in a typed error or a
 //! correct (possibly degraded) result — never a hang, never a poisoned
-//! worker — with the memory meter back at zero and no spill temp files
-//! left behind.
+//! worker, never silently wrong bits — with the memory meter back at
+//! zero and no spill temp files left behind.
 //!
 //! Tests that arm the process-global fault plan serialize on
 //! `CHAOS_LOCK` (the arm slot is process-wide). The seeded matrix at the
@@ -18,6 +19,9 @@ use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::obs::{self, sink, Stage};
 use fastspsd::sketch::SketchKind;
+use fastspsd::stream::{
+    OracleColumnsSource, ResidencyConfig, ResidentSource, TileSource, ValidateMode,
+};
 use fastspsd::testkit::faults::{
     self, FaultPlan, FaultPoint, FaultSpec, FaultyOracle,
 };
@@ -307,6 +311,214 @@ fn consumer_fold_panic_is_isolated_and_the_service_keeps_serving() {
     assert_no_spill_files(&dir);
 }
 
+/// Corruption chaos: flipped spill bytes must be *detected* (checksum),
+/// *counted* (`corrupt_reads`, mirrored into `numeric_health`), and
+/// *healed* (recompute) — the result stays bit-identical in every cell.
+#[test]
+fn spill_corruption_is_detected_recomputed_and_stays_bit_identical() {
+    let _g = chaos_guard();
+    let o = oracle();
+    let cols = landmarks();
+    let dir = spill_dir("spill-corrupt");
+    let (vals_ref, vecs_ref, stats_ref) = lanczos_under(&o, &cols, &spilled_in(&dir));
+    assert!(stats_ref.spill_hits > 0, "premise: the clean run re-reads the arena");
+
+    for spec in [FaultSpec::transient(2), FaultSpec::persistent(1)] {
+        let plan = Arc::new(FaultPlan::none().fail(FaultPoint::SpillCorrupt, spec));
+        let _armed = faults::arm(Arc::clone(&plan));
+        let src = OracleColumnsSource::new(&o, &cols);
+        let u = Matrix::identity(C);
+        let rep = exec::top_k_eigs(&src, &u, 3, 7, &spilled_in(&dir));
+        let (vals, vecs) = rep.result;
+        assert_eq!(vals_ref, vals, "{spec:?}: corruption must never change bits");
+        assert_eq!(vecs_ref.max_abs_diff(&vecs), 0.0, "{spec:?}");
+        let stats = rep.meta.residency.expect("resident policy carries stats");
+        assert!(stats.corrupt_reads >= 1, "{spec:?}: detection must be visible: {stats:?}");
+        assert_eq!(
+            rep.meta.numeric_health.corrupt_reads, stats.corrupt_reads,
+            "{spec:?}: numeric health mirrors the residency counter"
+        );
+        assert!(plan.injected(FaultPoint::SpillCorrupt) >= 1, "{spec:?}");
+        if spec.persistent {
+            // every re-read hit a corrupted record and was recomputed
+            assert!(
+                stats.corrupt_reads >= stats_ref.spill_hits,
+                "{spec:?}: all former spill hits must detect: {stats:?} vs {stats_ref:?}"
+            );
+        }
+    }
+    assert_no_spill_files(&dir);
+}
+
+/// Regression for the per-IO-attempt fault-plan read: a plan armed
+/// *after* the spill arena was created (mid-request, from another test's
+/// perspective) must still reach its IO paths. The old code captured the
+/// plan once at arena construction and never saw later arming.
+#[test]
+fn fault_plans_armed_mid_run_reach_a_live_arena() {
+    let _g = chaos_guard();
+    let o = oracle();
+    let cols = landmarks();
+    let src = OracleColumnsSource::new(&o, &cols);
+    let dir = spill_dir("mid-arm");
+    let cfg = ResidencyConfig::new(0).with_tile_rows(8).with_spill_dir(dir.clone());
+    let res = ResidentSource::new(&src, &cfg);
+    // Populate the arena with nothing armed (zero RAM budget: every
+    // revisit must come back through a spill read).
+    let tiles = N.div_ceil(8);
+    for g in 0..tiles {
+        let _ = res.tile(g * 8, ((g + 1) * 8).min(N));
+    }
+    assert!(res.spill_active(), "premise: the arena is live before arming");
+    assert_eq!(res.stats().io_retries, 0);
+    // Arm only now; the very next arena read must consult the new plan.
+    let clean = src.tile(0, 8);
+    let plan = Arc::new(FaultPlan::none().fail(FaultPoint::SpillRead, FaultSpec::transient(1)));
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let served = res.tile(0, 8);
+        assert_eq!(served.max_abs_diff(&clean), 0.0, "the retried read serves the right bits");
+    }
+    assert_eq!(plan.injected(FaultPoint::SpillRead), 1, "the mid-run plan must trip");
+    assert!(res.stats().io_retries >= 1, "and the retry must be visible in stats");
+    drop(res);
+    assert_no_spill_files(&dir);
+}
+
+/// Poisoned tiles under a validating policy end in a typed quarantine
+/// fault — never NaN eigenvalues — and the worker survives to serve the
+/// next request cleanly.
+#[test]
+fn poisoned_tiles_fail_typed_under_validation_and_the_worker_survives() {
+    let _g = chaos_guard();
+    let validated =
+        || ExecPolicy::streamed(8).with_validate(ValidateMode::NonFinite);
+    for spec in [FaultSpec::transient(2), FaultSpec::persistent(2)] {
+        let svc = ApproxService::new(
+            Arc::new(oracle()) as Arc<dyn KernelOracle + Send + Sync>,
+            ServiceConfig { workers: 1, ..Default::default() },
+        );
+        let plan = Arc::new(FaultPlan::none().fail(FaultPoint::PoisonTile, spec));
+        {
+            let _armed = faults::arm(Arc::clone(&plan));
+            let (tx, rx) = mpsc::channel();
+            svc.submit(req(0, Some(validated())), tx);
+            svc.drain();
+            let r = rx.iter().next().unwrap();
+            match &r.error {
+                Some(ServiceError::Faulted(msg)) => {
+                    assert!(msg.contains("poisoned tile"), "{spec:?}: typed end: {msg}");
+                }
+                other => panic!("{spec:?}: expected Faulted, got {other:?}"),
+            }
+            assert!(r.eigvals.is_empty(), "{spec:?}: no numbers from a poisoned build");
+            assert_eq!(
+                r.numeric_health.map(|h| h.quarantined_tiles >= 1),
+                Some(true),
+                "{spec:?}: the quarantine must be visible on the reply"
+            );
+        }
+        assert!(plan.injected(FaultPoint::PoisonTile) >= 1, "{spec:?}");
+        let m = svc.metrics();
+        assert_eq!(m.faulted.get(), 1, "{spec:?}");
+        assert_eq!(m.mem_in_use.get(), 0, "{spec:?}: reservation released");
+        // Disarmed, the same worker serves the same request clean.
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(1, Some(validated())), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "{spec:?}: worker must survive: {:?}", r.error);
+        assert_eq!(r.eigvals.len(), 3);
+        assert!(r.numeric_health.unwrap().is_clean(), "{spec:?}");
+    }
+}
+
+/// `retry_faulted`: a transiently poisoned build recovers on the retry —
+/// bit-identical to a never-faulted service — and the reply carries the
+/// health its failed attempt observed. A persistently poisoned build
+/// still ends typed after the retry budget.
+#[test]
+fn faulted_requests_retry_to_bit_identical_results_and_carry_health() {
+    let _g = chaos_guard();
+    let dir = spill_dir("retry");
+    let retrying = || {
+        ApproxService::new(
+            Arc::new(oracle()) as Arc<dyn KernelOracle + Send + Sync>,
+            ServiceConfig {
+                workers: 1,
+                spill_dir: Some(dir.clone()),
+                retry_faulted: 1,
+                ..Default::default()
+            },
+        )
+    };
+    let validated =
+        || ExecPolicy::streamed(8).with_validate(ValidateMode::NonFinite);
+    // Clean reference: same oracle data, same request, no faults.
+    let eig_ref = {
+        let svc = retrying();
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(0, Some(validated())), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        r.eigvals
+    };
+
+    // Transient poison: attempt 1 quarantines and faults, attempt 2 runs
+    // past the exhausted schedule and completes.
+    let svc = retrying();
+    let plan = Arc::new(FaultPlan::none().fail(FaultPoint::PoisonTile, FaultSpec::transient(3)));
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(0, Some(validated())), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "the retry must recover: {:?}", r.error);
+        assert_eq!(r.eigvals, eig_ref, "recovered ≠ different: bit-identity is the contract");
+        let health = r.numeric_health.expect("served responses carry health");
+        assert!(
+            health.quarantined_tiles >= 1,
+            "the failed attempt's quarantine must be carried: {health:?}"
+        );
+    }
+    assert_eq!(plan.injected(FaultPoint::PoisonTile), 1);
+    let m = svc.metrics();
+    assert_eq!(m.faulted.get(), 1, "per-attempt fault accounting");
+    assert_eq!(m.completed.get(), 1, "one request, one completion");
+
+    // Persistent poison: both attempts fault; the reply is typed.
+    let svc = retrying();
+    let plan =
+        Arc::new(FaultPlan::none().fail(FaultPoint::PoisonTile, FaultSpec::persistent(1)));
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(0, Some(validated())), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        match &r.error {
+            Some(ServiceError::Faulted(msg)) => {
+                assert!(msg.contains("poisoned tile"), "{msg}");
+            }
+            other => panic!("expected Faulted after the retry budget, got {other:?}"),
+        }
+        assert!(
+            r.numeric_health.map_or(false, |h| h.quarantined_tiles >= 2),
+            "both attempts' quarantines are carried: {:?}",
+            r.numeric_health
+        );
+    }
+    assert!(plan.injected(FaultPoint::PoisonTile) >= 2);
+    assert_eq!(svc.metrics().faulted.get(), 2, "per-attempt fault accounting");
+    assert_eq!(svc.metrics().completed.get(), 0);
+    assert_eq!(svc.metrics().mem_in_use.get(), 0);
+    drop(svc);
+    // Per-request checkpoint directories are removed on every outcome.
+    assert_no_spill_files(&dir);
+}
+
 /// A [`KernelOracle`] whose tile production blocks until released —
 /// deterministic "slow request" for queue/deadline/shutdown tests.
 struct GateOracle {
@@ -453,17 +665,21 @@ fn seeded_chaos_matrix_never_hangs_never_leaks_never_corrupts() {
     let o = oracle();
     let cols = landmarks();
     let dir = spill_dir("seeded");
-    let (vals_ref, vecs_ref, _) = lanczos_under(&o, &cols, &spilled_in(&dir));
+    // Validation on: a seeded PoisonTile fault must end *typed* (a
+    // quarantine panic through the oracle wrapper), never as silent NaNs.
+    let seeded_policy = || spilled_in(&dir).with_validate(ValidateMode::NonFinite);
+    let (vals_ref, vecs_ref, _) = lanczos_under(&o, &cols, &seeded_policy());
     for seed in chaos_seeds() {
         let plan = Arc::new(FaultPlan::seeded(seed));
         {
             let _armed = faults::arm(Arc::clone(&plan));
             // Whatever the seed armed: the run must either complete
-            // bit-identically (spill faults retry or degrade) or panic in
-            // a contained, propagated way (consumer-fold faults) — never
-            // hang, never return silently wrong numbers.
+            // bit-identically (spill write/read/corruption faults retry,
+            // degrade, or recompute) or panic in a contained, propagated
+            // way (consumer-fold and poisoned-tile faults) — never hang,
+            // never return silently wrong numbers.
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                lanczos_under(&o, &cols, &spilled_in(&dir))
+                lanczos_under(&o, &cols, &seeded_policy())
             }));
             match outcome {
                 Ok((vals, vecs, _)) => {
@@ -472,8 +688,9 @@ fn seeded_chaos_matrix_never_hangs_never_leaks_never_corrupts() {
                 }
                 Err(_) => {
                     assert!(
-                        plan.injected(FaultPoint::ConsumerFold) > 0,
-                        "seed {seed}: only a fold fault may panic this build"
+                        plan.injected(FaultPoint::ConsumerFold) > 0
+                            || plan.injected(FaultPoint::PoisonTile) > 0,
+                        "seed {seed}: only fold or poison faults may panic this build"
                     );
                 }
             }

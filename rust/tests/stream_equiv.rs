@@ -12,8 +12,13 @@ use fastspsd::exec::{self, ExecPolicy};
 use fastspsd::linalg::Matrix;
 use fastspsd::sketch::SketchKind;
 use fastspsd::spsd::{self, FastConfig, LeverageBasis};
-use fastspsd::stream::{self, MatrixSource, StreamConfig};
+use fastspsd::stream::{
+    self, run_pipeline_resumable, CheckpointConfig, GramFold, MatrixSource, MatvecFold, Precision,
+    StreamConfig, TileConsumer, TileSource, ValidateMode,
+};
 use fastspsd::util::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 const MAT: ExecPolicy = ExecPolicy::Materialized;
 use std::sync::Arc;
@@ -254,4 +259,210 @@ fn matrix_source_reassembles_through_every_tile_size() {
         stream::run_pipeline(&src, tile, 2, &mut [&mut collect]);
         assert_eq!(collect.into_matrix().max_abs_diff(&a), 0.0, "tile={tile}");
     }
+}
+
+// ---- checkpoint/resume equivalence ------------------------------------
+//
+// A streamed pass interrupted mid-flight and resumed from its checkpoint
+// must produce bit-identical fold results to the uninterrupted pass, and
+// the resume may charge the source only for the tiles after the
+// checkpointed row — that re-charging contract is what makes resume
+// cheaper than re-running.
+
+const CK_N: usize = 40;
+const CK_TILE: usize = 8; // 5 tiles; with_every(1) checkpoints after each
+
+/// Wraps [`MatrixSource`] and counts how many tiles the pipeline charges
+/// it for — the streamed analogue of "oracle entries observed".
+struct CountingSource<'a> {
+    inner: MatrixSource<'a>,
+    tiles: AtomicUsize,
+}
+
+impl<'a> CountingSource<'a> {
+    fn new(a: &'a Matrix) -> Self {
+        CountingSource { inner: MatrixSource::new(a), tiles: AtomicUsize::new(0) }
+    }
+
+    fn tiles(&self) -> usize {
+        self.tiles.load(Ordering::SeqCst)
+    }
+}
+
+impl TileSource for CountingSource<'_> {
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn tile(&self, r0: usize, r1: usize) -> Matrix {
+        self.tiles.fetch_add(1, Ordering::SeqCst);
+        self.inner.tile(r0, r1)
+    }
+}
+
+/// Column-sum fold that panics when asked to fold the tile starting at
+/// `panic_at` — the in-test stand-in for a mid-pass crash. Snapshots and
+/// restores its accumulator so it keeps the pass checkpoint-eligible
+/// (eligibility requires *every* consumer to snapshot).
+struct BombFold {
+    acc: Vec<f64>,
+    panic_at: Option<usize>,
+}
+
+impl BombFold {
+    fn new(width: usize, panic_at: Option<usize>) -> Self {
+        BombFold { acc: vec![0.0; width], panic_at }
+    }
+}
+
+impl TileConsumer for BombFold {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        if self.panic_at == Some(r0) {
+            panic!("bomb: interrupted at row {r0}");
+        }
+        for r in 0..tile.rows() {
+            for (a, v) in self.acc.iter_mut().zip(tile.row(r)) {
+                *a += v;
+            }
+        }
+    }
+
+    fn snapshot(&self) -> Option<Matrix> {
+        Some(Matrix::from_vec(1, self.acc.len(), self.acc.clone()))
+    }
+
+    fn restore(&mut self, state: &Matrix) -> bool {
+        if state.rows() != 1 || state.cols() != self.acc.len() {
+            return false;
+        }
+        self.acc.copy_from_slice(state.row(0));
+        true
+    }
+}
+
+#[test]
+fn interrupted_pass_resumes_bit_identically_and_recharges_only_the_tail() {
+    let dir = std::env::temp_dir().join(format!("fastspsd-ckpt-equiv-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut rng = Rng::new(61);
+    let a = Matrix::randn(CK_N, 6, &mut rng);
+    let x: Vec<f64> = (0..CK_N).map(|i| ((i * 5 % 13) as f64) - 6.0).collect();
+    let ckpt = CheckpointConfig::new(&dir).with_every(1);
+
+    // Uninterrupted reference through the same resumable entry point; a
+    // completed pass must leave no checkpoint behind.
+    let (g_ref, v_ref, b_ref) = {
+        let src = CountingSource::new(&a);
+        let mut gram = GramFold::new(6);
+        let mut mv = MatvecFold::new(&x, 6);
+        let mut bomb = BombFold::new(6, None);
+        run_pipeline_resumable(
+            &src,
+            CK_TILE,
+            2,
+            Precision::F64,
+            ValidateMode::Off,
+            &ckpt,
+            &mut [&mut gram, &mut mv, &mut bomb],
+        )
+        .unwrap();
+        assert!(
+            std::fs::read_dir(&dir).unwrap().next().is_none(),
+            "a completed pass discards its checkpoint"
+        );
+        (gram.into_matrix(), mv.into_vec(), bomb.acc)
+    };
+
+    // Interrupted run: the bomb goes off on the 4th tile (r0 = 24), after
+    // the checkpoint covering rows [0, 24) was persisted.
+    let src = CountingSource::new(&a);
+    let blast = catch_unwind(AssertUnwindSafe(|| {
+        let mut gram = GramFold::new(6);
+        let mut mv = MatvecFold::new(&x, 6);
+        let mut bomb = BombFold::new(6, Some(3 * CK_TILE));
+        let _ = run_pipeline_resumable(
+            &src,
+            CK_TILE,
+            2,
+            Precision::F64,
+            ValidateMode::Off,
+            &ckpt,
+            &mut [&mut gram, &mut mv, &mut bomb],
+        );
+    }));
+    assert!(blast.is_err(), "the bomb must abort the pass");
+    let ckpt_file = dir.join("ckpt-pass-1.bin");
+    assert!(ckpt_file.exists(), "an interrupted pass leaves its checkpoint for the retry");
+
+    // Resume with fresh consumers: state restores from the checkpoint and
+    // only the two tiles at/after row 24 are re-streamed.
+    let src2 = CountingSource::new(&a);
+    let mut gram = GramFold::new(6);
+    let mut mv = MatvecFold::new(&x, 6);
+    let mut bomb = BombFold::new(6, None);
+    run_pipeline_resumable(
+        &src2,
+        CK_TILE,
+        2,
+        Precision::F64,
+        ValidateMode::Off,
+        &ckpt,
+        &mut [&mut gram, &mut mv, &mut bomb],
+    )
+    .unwrap();
+    assert_eq!(src2.tiles(), 2, "resume re-charges the source only for rows >= 24");
+    assert_eq!(
+        gram.into_matrix().max_abs_diff(&g_ref),
+        0.0,
+        "resumed Gram fold is bit-identical to the uninterrupted pass"
+    );
+    assert_eq!(mv.into_vec(), v_ref, "resumed matvec fold is bit-identical");
+    assert_eq!(bomb.acc, b_ref, "resumed custom fold is bit-identical");
+    assert!(!ckpt_file.exists(), "a resumed pass discards its checkpoint on success");
+    assert!(std::fs::read_dir(&dir).unwrap().next().is_none(), "checkpoint dir drained");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn whole_tile_resumable_pass_streams_unchanged_and_writes_no_checkpoint() {
+    // tile = n takes the materialized fallback: one inline tile, nothing
+    // worth resuming, so arming a checkpoint must be a no-op on disk.
+    let dir = std::env::temp_dir().join(format!("fastspsd-ckpt-whole-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut rng = Rng::new(62);
+    let a = Matrix::randn(CK_N, 6, &mut rng);
+    let plain = {
+        let src = MatrixSource::new(&a);
+        let mut gram = GramFold::new(6);
+        stream::run_pipeline(&src, CK_N, 2, &mut [&mut gram]);
+        gram.into_matrix()
+    };
+
+    let src = CountingSource::new(&a);
+    let mut gram = GramFold::new(6);
+    run_pipeline_resumable(
+        &src,
+        CK_N,
+        2,
+        Precision::F64,
+        ValidateMode::Off,
+        &CheckpointConfig::new(&dir).with_every(1),
+        &mut [&mut gram],
+    )
+    .unwrap();
+    assert_eq!(src.tiles(), 1, "whole-tile pass charges exactly one tile");
+    assert_eq!(gram.into_matrix().max_abs_diff(&plain), 0.0, "whole-tile fold unchanged");
+    assert!(
+        std::fs::read_dir(&dir).unwrap().next().is_none(),
+        "whole-tile pass writes no checkpoint"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
