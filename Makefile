@@ -20,13 +20,20 @@
 #   make chaos        — the deterministic fault-injection matrix
 #                       (rust/tests/chaos.rs) over the pinned seed set:
 #                       {spill write, spill read, oracle tile, consumer
-#                       fold, spill corrupt, poisoned tile} × {transient,
-#                       persistent} must end typed or degraded — never
-#                       silently wrong bits, never hung. Corrupt spill
-#                       records are caught by the per-record checksum and
-#                       recomputed bit-identically; poisoned tiles fail
-#                       typed under ValidateMode before any fold sees
-#                       them. Part of `make ci`.
+#                       fold, spill corrupt, poisoned tile, shard worker
+#                       death} × {transient, persistent} must end typed
+#                       or degraded — never silently wrong bits, never
+#                       hung. Corrupt spill records are caught by the
+#                       per-record checksum and recomputed bit-identically;
+#                       poisoned tiles fail typed under ValidateMode before
+#                       any fold sees them; a dead shard worker's row-range
+#                       is re-executed or the request fails typed. Part of
+#                       `make ci`.
+#   make shard-smoke  — small-n sharded service round-trip: row-sharded
+#                       workers, per-shard accounting on the reply, and
+#                       one injected transient worker death absorbed by
+#                       re-execution (rust/tests/shard_smoke.rs). Part of
+#                       `make ci`.
 #   make trace-smoke  — serve one streamed and one resident-with-spill
 #                       request with tracing on and validate the emitted
 #                       Chrome trace_event JSON covers the mandatory
@@ -41,7 +48,7 @@ PYTHON ?= python3
 # overridable for exploration (FASTSPSD_CHAOS_SEEDS="1 2 3" make chaos).
 FASTSPSD_CHAOS_SEEDS ?= 11 23 47
 
-.PHONY: build test bench bench-quick chaos trace-smoke ci doc perf-check artifacts toolchain-guard
+.PHONY: build test bench bench-quick chaos trace-smoke shard-smoke ci doc perf-check artifacts toolchain-guard
 
 toolchain-guard:
 	@command -v $(CARGO) >/dev/null 2>&1 || { \
@@ -71,7 +78,10 @@ chaos: toolchain-guard
 trace-smoke: toolchain-guard
 	$(CARGO) test -q --test trace_smoke
 
-ci: toolchain-guard build test chaos trace-smoke doc
+shard-smoke: toolchain-guard
+	$(CARGO) test -q --test shard_smoke
+
+ci: toolchain-guard build test chaos trace-smoke shard-smoke doc
 	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
 	  $(CARGO) clippy --release -- -D warnings; \
 	else \

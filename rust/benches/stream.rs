@@ -411,6 +411,119 @@ fn main() {
         suite.counter("solve.core_cond_est", h.core_cond_est.min(1e300));
     }
 
+    // ---- sharded scale-out: per-worker working sets + coalescing --------
+    // The sharding headline (EXPERIMENTS.md §Sharding): a row-sharded
+    // build's memory story is the per-WORKER peak — each shard pass runs
+    // under its own allocator gauge — and K tenants asking for the same
+    // approximation ride ONE stream pass, so the oracle is charged one
+    // n·c for the whole batch instead of K of them.
+    {
+        use fastspsd::coordinator::{
+            planner, ApproxRequest, ApproxService, MethodSpec, ServiceConfig,
+        };
+        let shards = 4usize;
+        let budget = planner::predicted_policy_peak_bytes(
+            n,
+            c,
+            &MethodSpec::Nystrom,
+            &ExecPolicy::streamed(DEFAULT_TILE),
+        );
+        let split = planner::plan_shards(n, c, shards, budget);
+        let pol_sh = split.policy();
+        suite.bench(&format!("nystrom sharded w={shards} n={n}"), || {
+            black_box(exec::nystrom(&oracle, &p, &pol_sh));
+        });
+        let stats = exec::nystrom(&oracle, &p, &pol_sh)
+            .meta
+            .shard
+            .expect("sharded policies report per-shard stats");
+        println!(
+            "    {} workers, max per-worker peak {} (planner predicted {}), re-executed {}",
+            stats.workers.len(),
+            fmt_mib(stats.max_worker_peak_bytes() as usize),
+            fmt_mib(split.predicted_worker_peak_bytes as usize),
+            stats.reexecuted
+        );
+        for w in &stats.workers {
+            println!(
+                "      rows {:>5}..{:<5}  peak {}  {:.3} s",
+                w.r0,
+                w.r1,
+                fmt_mib(w.peak_bytes as usize),
+                w.secs
+            );
+        }
+        suite.counter("shard.workers", stats.workers.len() as f64);
+        suite.counter("shard.max_worker_peak_bytes", stats.max_worker_peak_bytes() as f64);
+        suite.counter(
+            "shard.predicted_worker_peak_bytes",
+            split.predicted_worker_peak_bytes as f64,
+        );
+
+        // Many-tenant coalescing: one worker, K tenants submitting the
+        // identical request. The first dispatch runs alone; the tenants
+        // arriving while it builds queue up and ride the next dispatch as
+        // one batch — visible in `batched` replies, the coalescing
+        // counters, and the oracle's entry ledger.
+        let tenants = 8u64;
+        let n_t = if quick { 400 } else { 1000 };
+        let c_t = 16usize;
+        let mut rng = Rng::new(37);
+        let t_oracle: Arc<dyn KernelOracle + Send + Sync> =
+            Arc::new(RbfOracle::cpu(Arc::new(Matrix::randn(n_t, 16, &mut rng)), 0.4));
+        // Admission is cap-gated (uncapped reservations always succeed and
+        // would dispatch every tenant straight to the pool), so cap at one
+        // request's predicted peak: tenant 0 takes the whole cap and the
+        // rest queue behind it until its build frees the headroom.
+        let one_req = planner::predicted_policy_peak_bytes(
+            n_t,
+            c_t,
+            &MethodSpec::Nystrom,
+            &planner::default_policy(),
+        );
+        let svc = ApproxService::new(
+            Arc::clone(&t_oracle),
+            ServiceConfig { workers: 1, memory_cap: Some(one_req), ..Default::default() },
+        );
+        t_oracle.reset_entries();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sw = std::time::Instant::now();
+        for i in 0..tenants {
+            svc.submit(
+                ApproxRequest {
+                    id: i,
+                    method: MethodSpec::Nystrom,
+                    c: c_t,
+                    k: 4,
+                    seed: 11,
+                    policy: None,
+                    precision: Precision::F64,
+                    deadline: None,
+                },
+                tx.clone(),
+            );
+        }
+        svc.drain();
+        drop(tx);
+        let resps: Vec<_> = rx.iter().collect();
+        let shared = resps.iter().filter(|r| r.batched).count();
+        let passes = t_oracle.entries_observed() as f64 / (n_t * c_t) as f64;
+        let m = svc.metrics();
+        println!(
+            "  many-tenant coalescing: {} tenants, {:.1} oracle passes, {} rode a shared \
+             pass, occupancy p95 {} in {:.3} s",
+            resps.len(),
+            passes,
+            shared,
+            m.batch_occupancy.quantile(0.95),
+            sw.elapsed().as_secs_f64()
+        );
+        suite.counter("service.coalesced_requests", m.coalesced_requests.get() as f64);
+        suite.counter("service.batch_occupancy_p95", m.batch_occupancy.quantile(0.95) as f64);
+        suite.counter("service.batch_occupancy_max", m.batch_occupancy.max() as f64);
+        suite.counter("service.tenant_oracle_passes", passes);
+    }
+
     // ---- observability: per-stage profile + pipeline stall fractions ----
     // Installed LAST so every timed section above ran with the recorder
     // disabled (the spans cost one atomic load there). One traced streamed

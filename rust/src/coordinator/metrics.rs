@@ -158,6 +158,72 @@ impl Histogram {
     }
 }
 
+/// Distribution of small integer samples (batch sizes, occupancy counts)
+/// — the unitless sibling of [`Histogram`], with the same bounded sample
+/// store and exact quantiles.
+#[derive(Debug, Default)]
+pub struct SampleDist {
+    count: AtomicU64,
+    max: AtomicU64,
+    samples: Mutex<Vec<u64>>,
+}
+
+impl SampleDist {
+    pub fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < 100_000 {
+            s.push(v);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Exact quantile from retained samples (q in [0, 1]); 0 when empty.
+    /// Sorts the store in place, like [`Histogram::quantile`].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let mut s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return 0;
+        }
+        s.sort_unstable();
+        let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+        s[idx]
+    }
+
+    /// count / max / p50 / p95 from one lock and one sort.
+    pub fn stats(&self) -> SampleDistSummary {
+        let count = self.count();
+        let max = self.max();
+        let mut s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return SampleDistSummary { count, max, p50: 0, p95: 0 };
+        }
+        s.sort_unstable();
+        let at = |q: f64| {
+            let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+            s[idx]
+        };
+        SampleDistSummary { count, max, p50: at(0.5), p95: at(0.95) }
+    }
+}
+
+/// Point-in-time statistics of one [`SampleDist`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SampleDistSummary {
+    pub count: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p95: u64,
+}
+
 /// Point-in-time statistics of one [`Histogram`]: a single pass under a
 /// single lock, instead of a clone-and-sort of the sample store per
 /// quantile.
@@ -197,6 +263,13 @@ pub struct Metrics {
     /// Requests served by a rung of the degrade ladder rather than
     /// exactly as requested.
     pub degraded: Counter,
+    /// Requests that rode another request's stream pass instead of
+    /// charging the oracle themselves (batch riders; the leader of a
+    /// batch is not counted).
+    pub coalesced_requests: Counter,
+    /// Requests served per dispatched stream pass (1 = no coalescing);
+    /// observed once per leader dispatch.
+    pub batch_occupancy: SampleDist,
     /// Sum of `predicted_peak_bytes` across in-flight requests: the
     /// service-level working-set meter the memory cap gates on.
     pub mem_in_use: Gauge,
@@ -219,6 +292,8 @@ impl Metrics {
             faulted: self.faulted.get(),
             queued: self.queued.get(),
             degraded: self.degraded.get(),
+            coalesced_requests: self.coalesced_requests.get(),
+            batch_occupancy: self.batch_occupancy.stats(),
             mem_in_use: self.mem_in_use.get(),
             latency: self.latency.stats(),
             queue_wait: self.queue_wait.stats(),
@@ -239,6 +314,8 @@ pub struct MetricsSnapshot {
     pub faulted: u64,
     pub queued: u64,
     pub degraded: u64,
+    pub coalesced_requests: u64,
+    pub batch_occupancy: SampleDistSummary,
     pub mem_in_use: u64,
     pub latency: HistogramSummary,
     pub queue_wait: HistogramSummary,
@@ -280,6 +357,23 @@ mod tests {
         assert_eq!(g.get(), 0);
         // u64::MAX cap never refuses (saturating add)
         assert!(g.try_add_below(u64::MAX, u64::MAX));
+    }
+
+    #[test]
+    fn sample_dist_quantiles() {
+        let d = SampleDist::default();
+        assert_eq!(d.stats(), SampleDistSummary { count: 0, max: 0, p50: 0, p95: 0 });
+        for v in [1u64, 1, 1, 4, 8] {
+            d.observe(v);
+        }
+        assert_eq!(d.count(), 5);
+        assert_eq!(d.max(), 8);
+        assert_eq!(d.quantile(0.5), 1);
+        let st = d.stats();
+        assert_eq!(st.p95, 8);
+        // the in-place sort is invisible to later observes
+        d.observe(2);
+        assert_eq!(d.stats().count, 6);
     }
 
     #[test]

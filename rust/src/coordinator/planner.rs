@@ -93,11 +93,15 @@ impl Plan {
     /// The streamed tile height of this plan (`None` = materialized), for
     /// callers that only care about the tiling.
     pub fn tile_rows(&self) -> Option<usize> {
-        match &self.policy {
-            ExecPolicy::Materialized => None,
-            ExecPolicy::Streamed(cfg) => Some(cfg.tile_rows),
-            ExecPolicy::Resident { tile_rows, .. } => {
-                Some(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS))
+        let mut policy = &self.policy;
+        loop {
+            match policy {
+                ExecPolicy::Materialized => return None,
+                ExecPolicy::Streamed(cfg) => return Some(cfg.tile_rows),
+                ExecPolicy::Resident { tile_rows, .. } => {
+                    return Some(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS))
+                }
+                ExecPolicy::Sharded { inner, .. } => policy = inner,
             }
         }
     }
@@ -234,6 +238,13 @@ pub fn predicted_policy_peak_bytes(
     method: &MethodSpec,
     policy: &ExecPolicy,
 ) -> u64 {
+    if let ExecPolicy::Sharded { inner, .. } = policy {
+        // Shard workers run sequentially on the calling thread, each
+        // under `inner`, so the coordinator's aggregate peak is the inner
+        // policy's peak — sharding shrinks each worker's row span, not
+        // the model terms one pass charges.
+        return predicted_policy_peak_bytes(n, c, method, inner);
+    }
     let s = method_s(method, c);
     let prec = policy.precision();
     let base = predicted_peak_bytes_prec(n, c, s, method, policy.planned_tile_rows(n), prec);
@@ -375,6 +386,60 @@ pub fn plan_residency(n: usize, c: usize, memory_budget: u64) -> ResidencySplit 
         predicted_hit_rate,
         spill: cache_budget < panel,
         predicted_peak_bytes: predicted_implicit_peak_bytes(n, c, tile_rows, cache_budget),
+    }
+}
+
+/// How a sharded build splits rows and memory across workers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardSplit {
+    /// Worker count (≥ 1, capped at one row per worker).
+    pub shards: usize,
+    /// Rows the widest worker owns (`ceil(n / shards)`).
+    pub rows_per_shard: usize,
+    /// Bytes of the memory budget one worker may use.
+    pub per_worker_budget: u64,
+    /// Pipeline tile height inside each worker.
+    pub tile_rows: usize,
+    /// Modeled peak for one worker's pass: its live tiles plus its
+    /// `rows_per_shard x c` slice of the shared output panel.
+    pub predicted_worker_peak_bytes: u64,
+}
+
+impl ShardSplit {
+    /// This split as an [`ExecPolicy`], ready to hand to the `exec` entry
+    /// points.
+    pub fn policy(&self) -> ExecPolicy {
+        ExecPolicy::Sharded {
+            shards: self.shards,
+            inner: Box::new(ExecPolicy::Streamed(StreamConfig::tiled(self.tile_rows))),
+        }
+    }
+}
+
+/// Split `memory_budget` across `shards` row-sharded workers. Each worker
+/// streams only its own row-block, so its working set is its live tiles
+/// plus its slice of the `n x c` output panel; the live set gets at most a
+/// quarter of the per-worker budget (the [`plan_residency`] rule), with
+/// the tile height clamped to the worker's row span. Never fails: an
+/// infeasible budget degrades to one-row tiles and the overshoot is
+/// visible in `predicted_worker_peak_bytes`.
+pub fn plan_shards(n: usize, c: usize, shards: usize, memory_budget: u64) -> ShardSplit {
+    let n = n.max(1);
+    let c = c.max(1);
+    let shards = shards.clamp(1, n);
+    let rows_per_shard = n.div_ceil(shards);
+    let per_worker_budget = memory_budget / shards as u64;
+    let per_row = ENTRY_BYTES * live_tiles() * c as u64;
+    let tile_rows = ((per_worker_budget / 4) / per_row)
+        .clamp(1, DEFAULT_RESIDENT_TILE_ROWS as u64)
+        .min(rows_per_shard as u64) as usize;
+    let live = per_row * tile_rows as u64;
+    ShardSplit {
+        shards,
+        rows_per_shard,
+        per_worker_budget,
+        tile_rows,
+        predicted_worker_peak_bytes: live + panel_bytes(rows_per_shard, c),
     }
 }
 
@@ -623,6 +688,12 @@ pub fn degrade_ladder(
 /// working set, when one exists.
 fn tightened_policy(n: usize, method: &MethodSpec, policy: &ExecPolicy) -> Option<ExecPolicy> {
     match (method, policy) {
+        // Sharding is an orchestration wrapper; tighten the per-worker
+        // policy it carries and keep the shard split.
+        (_, ExecPolicy::Sharded { shards, inner }) => {
+            tightened_policy(n, method, inner)
+                .map(|tight| ExecPolicy::Sharded { shards: *shards, inner: Box::new(tight) })
+        }
         // The prototype's materialized path holds the full n x n tile;
         // streaming it caps live tiles at the pipeline depth.
         (MethodSpec::Prototype, p) if p.planned_tile_rows(n).is_none() => {
@@ -1194,6 +1265,60 @@ mod tests {
             } else {
                 panic!("CUR must stay CUR down the ladder");
             }
+        }
+    }
+
+    #[test]
+    fn plan_shards_splits_rows_and_budget() {
+        let (n, c) = (10_000usize, 64usize);
+        let split = plan_shards(n, c, 4, 64 << 20);
+        assert_eq!(split.shards, 4);
+        assert_eq!(split.rows_per_shard, 2_500);
+        assert_eq!(split.per_worker_budget, 16 << 20);
+        assert!(split.tile_rows >= 1 && split.tile_rows <= split.rows_per_shard);
+        // the worker model charges its panel slice, not the whole panel
+        assert!(split.predicted_worker_peak_bytes < panel_bytes(n, c));
+        // shards are capped at one row per worker, floor 1
+        assert_eq!(plan_shards(3, c, 100, u64::MAX).shards, 3);
+        assert_eq!(plan_shards(n, c, 0, u64::MAX).shards, 1);
+        // a starvation budget degrades to one-row tiles, never panics
+        assert_eq!(plan_shards(n, c, 4, 0).tile_rows, 1);
+        // and the policy wraps a streamed inner at the chosen tile height
+        match split.policy() {
+            ExecPolicy::Sharded { shards, inner } => {
+                assert_eq!(shards, 4);
+                assert_eq!(*inner, ExecPolicy::Streamed(StreamConfig::tiled(split.tile_rows)));
+            }
+            p => panic!("expected sharded policy, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_policy_prices_as_its_inner_and_tightens_inside() {
+        let n = 5_000usize;
+        let m = MethodSpec::Nystrom;
+        let inner = ExecPolicy::streamed(128);
+        let sharded = ExecPolicy::sharded(4, inner.clone());
+        // sequential workers: the aggregate peak is the inner policy's
+        assert_eq!(
+            predicted_policy_peak_bytes(n, 64, &m, &sharded),
+            predicted_policy_peak_bytes(n, 64, &m, &inner),
+        );
+        // the plan's tile accessor sees through the wrapper
+        let plan = Plan {
+            method: m,
+            c: 64,
+            predicted_entries: 0,
+            policy: sharded.clone(),
+            predicted_peak_bytes: 0,
+        };
+        assert_eq!(plan.tile_rows(), Some(128));
+        // tightening rewraps: the shard split survives, the inner shrinks
+        match tightened_policy(n, &m, &sharded) {
+            Some(ExecPolicy::Sharded { shards: 4, inner }) => {
+                assert_eq!(*inner, ExecPolicy::Materialized);
+            }
+            p => panic!("expected rewrapped sharded policy, got {p:?}"),
         }
     }
 }

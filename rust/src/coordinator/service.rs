@@ -162,6 +162,12 @@ pub struct ApproxResponse {
     /// `None` when no build ran (rejected/expired/stopping) or a failed
     /// build observed nothing noteworthy.
     pub numeric_health: Option<NumericHealth>,
+    /// This request rode a shared stream pass: it was coalesced with at
+    /// least one identical same-oracle request (same method, sizes, seed,
+    /// policy), so the kernel was charged once for the whole batch. True
+    /// on the batch leader and every rider; riders' `meta` is a clone of
+    /// the leader's run accounting.
+    pub batched: bool,
     /// Why the request was not served (`None` on success).
     pub error: Option<ServiceError>,
 }
@@ -353,11 +359,7 @@ impl ApproxService {
         let n = s.oracle.n();
         let c = req.c.clamp(1, n.max(1));
         let mut policy = req.policy.clone().unwrap_or_else(planner::default_policy);
-        if let ExecPolicy::Resident { spill: true, spill_dir, .. } = &mut policy {
-            if spill_dir.is_none() {
-                *spill_dir = s.spill_dir.clone();
-            }
-        }
+        inherit_spill_dir(&mut policy, &s.spill_dir);
         if req.precision == Precision::F32 {
             policy = policy.with_precision(Precision::F32);
         }
@@ -514,6 +516,19 @@ fn try_admit(s: &Shared, job: &QueuedJob, pressure: bool) -> Option<ServeAs> {
     admitted
 }
 
+/// Fill the service's spill directory into every spilling
+/// [`Resident`](ExecPolicy::Resident) policy in this (possibly
+/// `Sharded`-wrapped) policy tree that has not pinned its own.
+fn inherit_spill_dir(policy: &mut ExecPolicy, dir: &Option<PathBuf>) {
+    match policy {
+        ExecPolicy::Resident { spill: true, spill_dir, .. } if spill_dir.is_none() => {
+            *spill_dir = dir.clone();
+        }
+        ExecPolicy::Sharded { inner, .. } => inherit_spill_dir(inner, dir),
+        _ => {}
+    }
+}
+
 /// Drop the spans of a trace that will never reach a worker (rejected,
 /// expired, or flushed at shutdown) so the central store cannot
 /// accumulate orphaned records.
@@ -559,6 +574,7 @@ fn error_response(id: u64, method: String, error: ServiceError) -> ApproxRespons
         queue_wait_secs: 0.0,
         ladder_secs: 0.0,
         numeric_health: None,
+        batched: false,
         error: Some(error),
     }
 }
@@ -618,8 +634,50 @@ fn reaper_loop(s: Arc<Shared>) {
     }
 }
 
+/// Two requests the service may serve with one stream pass: everything
+/// that determines the computed result must match — method, sizes, seed,
+/// tile element width, and the requested traversal policy. (`k` shapes
+/// the reply's eigenvalue count, so it is part of the key.)
+fn coalescable(a: &ApproxRequest, b: &ApproxRequest) -> bool {
+    a.method == b.method
+        && a.c == b.c
+        && a.k == b.k
+        && a.seed == b.seed
+        && a.precision == b.precision
+        && a.policy == b.policy
+}
+
 /// Hand an admitted job (holding its reservation) to the worker pool.
+///
+/// Same-oracle coalescing happens here: a leader admitted at rung 0 (not
+/// degraded — riders must get exactly what they asked for) sweeps the
+/// admission queue for identical unexpired requests and carries them as
+/// riders. The batch runs ONE build — K tenants charge the oracle one
+/// `n·c` — and every rider's reply is a clone of the leader's with its
+/// own id/queue accounting and `batched = true`. Riders never held a
+/// memory reservation (they were queued), so nothing extra is released.
 fn dispatch(s: &Arc<Shared>, job: QueuedJob, serve: ServeAs) {
+    let riders: Vec<QueuedJob> = if serve.degraded.is_none() {
+        let mut q = s.queue.lock().unwrap();
+        let now = Instant::now();
+        let mut riders = Vec::new();
+        let mut i = 0;
+        while i < q.len() {
+            if q[i].deadline > now && coalescable(&job.req, &q[i].req) {
+                riders.push(q.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        riders
+    } else {
+        Vec::new()
+    };
+    s.metrics.batch_occupancy.observe(1 + riders.len() as u64);
+    if !riders.is_empty() {
+        s.metrics.coalesced_requests.add(riders.len() as u64);
+        s.queue_cv.notify_all(); // drain() watches the queue shrink
+    }
     s.inflight.fetch_add(1, Ordering::SeqCst);
     let shared = Arc::clone(s);
     let QueuedJob { req, reply, enqueued: submitted, trace, enqueue_ns, ladder_ns, .. } = job;
@@ -729,6 +787,26 @@ fn dispatch(s: &Arc<Shared>, job: QueuedJob, serve: ServeAs) {
             }
         }
         shared.metrics.latency.observe(submitted.elapsed());
+        // Fan the one result out to the batch: riders get a clone with
+        // their own id and queue accounting. A faulted leader faults its
+        // riders too (an identical build would have failed identically);
+        // only successful riders count as completed.
+        resp.batched = !riders.is_empty();
+        for rider in riders {
+            let waited = started.saturating_duration_since(rider.enqueued);
+            shared.metrics.queue_wait.observe(waited);
+            shared.metrics.latency.observe(rider.enqueued.elapsed());
+            if resp.error.is_none() {
+                shared.metrics.completed.inc();
+            }
+            let mut rr = resp.clone();
+            rr.id = rider.req.id;
+            rr.batched = true;
+            rr.queue_wait_secs = waited.as_secs_f64();
+            rr.ladder_secs = 0.0;
+            discard_trace(rider.trace);
+            let _ = rider.reply.send(rr);
+        }
         let _ = reply.send(resp);
     });
 }
@@ -843,6 +921,7 @@ fn run_request(
         queue_wait_secs: 0.0, // filled by dispatch, which owns the clock
         ladder_secs: 0.0,
         numeric_health,
+        batched: false, // filled by dispatch, which knows the batch
         error: None,
     })
 }

@@ -355,7 +355,7 @@ pub fn cur_fast_streamed_resident(
 
 /// Sample `s` row indices of `basis` (uniform or by row leverage scores),
 /// unioned with `forced`.
-fn build_indices(
+pub(crate) fn build_indices(
     basis: &Matrix,
     kind: SketchKind,
     score_basis: CurScoreBasis,

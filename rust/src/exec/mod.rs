@@ -8,9 +8,11 @@
 //! *execution policy*. This module is that policy surface:
 //!
 //! - [`ExecPolicy`] picks the traversal: [`Materialized`]
-//!   (whole-matrix tiles), [`Streamed`] (the bounded tile pipeline), or
+//!   (whole-matrix tiles), [`Streamed`] (the bounded tile pipeline),
 //!   [`Resident`] (the pipeline behind the hot-tile LRU + disk-spill
-//!   residency layer).
+//!   residency layer), or [`Sharded`] (row-sharded workers running an
+//!   inner policy over their own row-blocks, partial states merged by
+//!   the [`shard`](crate::shard) coordinator).
 //! - one public entry per algorithm family — [`nystrom`], [`prototype`],
 //!   [`fast`], [`cur_fast`], [`top_k_eigs`], [`solve_regularized`] — each
 //!   `(source-or-oracle, algo-config, &ExecPolicy, rng) → RunReport`.
@@ -32,6 +34,7 @@
 //! [`Materialized`]: ExecPolicy::Materialized
 //! [`Streamed`]: ExecPolicy::Streamed
 //! [`Resident`]: ExecPolicy::Resident
+//! [`Sharded`]: ExecPolicy::Sharded
 
 pub mod policy;
 
@@ -43,7 +46,9 @@ use crate::coordinator::planner::{self, MethodSpec};
 use crate::cur::{self, CurDecomp, FastCurConfig};
 use crate::linalg::{guard, Matrix};
 use crate::obs::{self, Stage, StageProfile};
-use crate::spsd::{self, FastConfig, SpsdApprox};
+use crate::shard;
+use crate::sketch::SketchKind;
+use crate::spsd::{self, FastConfig, LeverageBasis, SpsdApprox};
 use crate::stream::{self, TileSource};
 use crate::util::{Rng, Stopwatch};
 
@@ -126,6 +131,7 @@ impl Scope {
             precision,
             stage_profile,
             numeric_health,
+            shard: None,
         }
     }
 }
@@ -139,6 +145,17 @@ pub fn nystrom(
 ) -> RunReport<SpsdApprox> {
     let scope = Scope::start();
     let n = oracle.n();
+    if let ExecPolicy::Sharded { shards, inner } = policy {
+        let rc = inner.residency_config();
+        let (approx, stats, shard_stats) =
+            shard::nystrom_sharded(oracle, p_idx, *shards, inner.stream_config(), rc.as_ref());
+        let predicted =
+            planner::predicted_policy_peak_bytes(n, p_idx.len(), &MethodSpec::Nystrom, policy);
+        let entries = Some(approx.entries_observed);
+        let mut meta = scope.finish(entries, stats, Some(predicted), policy.precision());
+        meta.shard = Some(shard_stats);
+        return RunReport { result: approx, meta };
+    }
     let rc = policy.residency_config();
     let (approx, stats) =
         spsd::run_nystrom(oracle, p_idx, policy.stream_config(), rc.as_ref());
@@ -160,6 +177,12 @@ pub fn prototype(
     p_idx: &[usize],
     policy: &ExecPolicy,
 ) -> RunReport<SpsdApprox> {
+    if let ExecPolicy::Sharded { inner, .. } = policy {
+        // The prototype streams the full `K` with a fold whose scratch is
+        // `O(tile·n)` — not a row-shardable working set here; serve it
+        // with the per-worker policy instead (meta.shard stays None).
+        return prototype(oracle, p_idx, inner);
+    }
     let scope = Scope::start();
     let n = oracle.n();
     let approx = spsd::run_prototype(oracle, p_idx, policy.stream_config());
@@ -183,6 +206,41 @@ pub fn fast(
     policy: &ExecPolicy,
     rng: &mut Rng,
 ) -> RunReport<SpsdApprox> {
+    if let ExecPolicy::Sharded { shards, inner } = policy {
+        // Row-shardable: uniform selection (S drawn up front) and the
+        // streamed leverage estimators (associative score partials).
+        // Projection sketches and the ExactSvd leverage reference need
+        // state no worker can fold locally — serve those with the
+        // per-worker policy (meta.shard stays None).
+        let shardable = match cfg.kind {
+            SketchKind::Uniform => true,
+            SketchKind::Leverage { .. } => {
+                !matches!(cfg.leverage_basis, LeverageBasis::ExactSvd)
+            }
+            _ => false,
+        };
+        if !shardable {
+            return fast(oracle, p_idx, cfg, inner, rng);
+        }
+        let scope = Scope::start();
+        let n = oracle.n();
+        let rc = inner.residency_config();
+        let (approx, stats, shard_stats) = shard::fast_sharded(
+            oracle,
+            p_idx,
+            cfg,
+            *shards,
+            inner.stream_config(),
+            rc.as_ref(),
+            rng,
+        );
+        let method = MethodSpec::Fast { s: cfg.s, kind: cfg.kind };
+        let predicted = planner::predicted_policy_peak_bytes(n, p_idx.len(), &method, policy);
+        let entries = Some(approx.entries_observed);
+        let mut meta = scope.finish(entries, stats, Some(predicted), policy.precision());
+        meta.shard = Some(shard_stats);
+        return RunReport { result: approx, meta };
+    }
     let scope = Scope::start();
     let n = oracle.n();
     let rc = if cfg.kind.is_column_selection() { policy.residency_config() } else { None };
@@ -210,6 +268,23 @@ pub fn cur_fast(
     rng: &mut Rng,
 ) -> RunReport<CurDecomp> {
     let scope = Scope::start();
+    if let ExecPolicy::Sharded { shards, inner } = policy {
+        let rc = inner.residency_config();
+        let (decomp, stats, shard_stats) = shard::cur_fast_sharded(
+            a,
+            col_idx,
+            row_idx,
+            cfg,
+            *shards,
+            inner.stream_config(),
+            rc.as_ref(),
+            rng,
+        );
+        let entries = Some(decomp.entries_for_u);
+        let mut meta = scope.finish(entries, stats, None, policy.precision());
+        meta.shard = Some(shard_stats);
+        return RunReport { result: decomp, meta };
+    }
     let stream_cfg = match policy {
         ExecPolicy::Materialized => None,
         _ => Some(policy.stream_config()),
@@ -234,6 +309,12 @@ pub fn top_k_eigs(
     seed: u64,
     policy: &ExecPolicy,
 ) -> RunReport<(Vec<f64>, Matrix)> {
+    if let ExecPolicy::Sharded { inner, .. } = policy {
+        // Lanczos is an iteration of full-source matvecs; sharding one
+        // matvec buys nothing over the pipeline's own tiling. Serve with
+        // the per-worker policy (meta.shard stays None).
+        return top_k_eigs(src, u, k, seed, inner);
+    }
     let scope = Scope::start();
     let cfg = policy.stream_config();
     let rc = policy.residency_config();
@@ -252,6 +333,9 @@ pub fn solve_regularized(
     y: &[f64],
     policy: &ExecPolicy,
 ) -> RunReport<Vec<f64>> {
+    if let ExecPolicy::Sharded { inner, .. } = policy {
+        return solve_regularized(src, u, alpha, y, inner);
+    }
     let scope = Scope::start();
     let cfg = policy.stream_config();
     let rc = policy.residency_config();

@@ -5,6 +5,7 @@
 
 use crate::linalg::NumericHealth;
 use crate::obs::StageProfile;
+use crate::shard::ShardStats;
 use crate::stream::{
     Precision, ResidencyConfig, ResidencyStats, StreamConfig, ValidateMode,
     DEFAULT_RESIDENT_TILE_ROWS,
@@ -25,6 +26,10 @@ use std::path::PathBuf;
 ///   tile residency layer ([`ResidentSource`]): a `budget`-byte hot-tile
 ///   LRU, optionally backed by a disk spill arena, so multi-pass plans pay
 ///   the underlying source exactly once per tile.
+/// - [`Sharded`](ExecPolicy::Sharded) — the row-sharded execution plane of
+///   [`shard`](crate::shard): N workers each own a contiguous row-block,
+///   run the `inner` policy locally over it, and the coordinator merges the
+///   tiny associative partial states before finishing the solve once.
 ///
 /// A device (GPU / PJRT) tile backend slots in here as another variant —
 /// callers match on nothing, they just hand the policy down.
@@ -58,6 +63,18 @@ pub enum ExecPolicy {
         /// Tile quarantine mode for the pipeline passes this policy runs
         /// (`Off` = the zero-overhead bit-compat default).
         validate: ValidateMode,
+    },
+    /// Row-sharded scale-out ([`shard`](crate::shard)): `shards` workers
+    /// each own a contiguous row-block of the source and run `inner` over
+    /// it; per-worker partial fold state is merged by the coordinator.
+    /// Selection paths stay bit-identical to the unsharded `inner` run;
+    /// reduction paths regroup floating-point sums (≤1e-12).
+    Sharded {
+        /// Worker count (clamped to `[1, n]` when ranges are cut).
+        shards: usize,
+        /// How each worker traverses its own row-block. Builders and
+        /// accessors on a `Sharded` policy delegate to this inner policy.
+        inner: Box<ExecPolicy>,
     },
 }
 
@@ -94,21 +111,38 @@ impl ExecPolicy {
         }
     }
 
+    /// `shards` row-sharded workers, each running `inner` over its own
+    /// contiguous row-block ([`plan_shards`](crate::coordinator::planner::plan_shards)
+    /// picks both from a memory budget).
+    pub fn sharded(shards: usize, inner: ExecPolicy) -> Self {
+        ExecPolicy::Sharded { shards: shards.max(1), inner: Box::new(inner) }
+    }
+
     /// Pin the tile height of a [`Resident`](ExecPolicy::Resident) policy
     /// (no-op for the other variants — use [`ExecPolicy::streamed`] to
     /// pick a streamed tile height).
     pub fn with_tile_rows(mut self, t: usize) -> Self {
-        if let ExecPolicy::Resident { tile_rows, .. } = &mut self {
-            *tile_rows = Some(t.max(1));
+        match &mut self {
+            ExecPolicy::Resident { tile_rows, .. } => *tile_rows = Some(t.max(1)),
+            ExecPolicy::Sharded { inner, .. } => {
+                **inner = std::mem::take(&mut **inner).with_tile_rows(t);
+            }
+            _ => {}
         }
         self
     }
 
     /// Point a spilling [`Resident`](ExecPolicy::Resident) policy at a
-    /// directory (no-op for the other variants and for `spill: false`).
+    /// directory (no-op for the other variants and for `spill: false`;
+    /// [`Sharded`](ExecPolicy::Sharded) delegates to its inner policy).
     pub fn with_spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
-        if let ExecPolicy::Resident { spill: true, spill_dir, .. } = &mut self {
-            *spill_dir = Some(dir.into());
+        let dir = dir.into();
+        match &mut self {
+            ExecPolicy::Resident { spill: true, spill_dir, .. } => *spill_dir = Some(dir),
+            ExecPolicy::Sharded { inner, .. } => {
+                **inner = std::mem::take(&mut **inner).with_spill_dir(dir);
+            }
+            _ => {}
         }
         self
     }
@@ -123,6 +157,9 @@ impl ExecPolicy {
             ExecPolicy::Materialized => {}
             ExecPolicy::Streamed(cfg) => cfg.precision = p,
             ExecPolicy::Resident { precision, .. } => *precision = p,
+            ExecPolicy::Sharded { inner, .. } => {
+                **inner = std::mem::take(&mut **inner).with_precision(p);
+            }
         }
         self
     }
@@ -134,6 +171,7 @@ impl ExecPolicy {
             ExecPolicy::Materialized => Precision::F64,
             ExecPolicy::Streamed(cfg) => cfg.precision,
             ExecPolicy::Resident { precision, .. } => *precision,
+            ExecPolicy::Sharded { inner, .. } => inner.precision(),
         }
     }
 
@@ -148,6 +186,9 @@ impl ExecPolicy {
             ExecPolicy::Materialized => {}
             ExecPolicy::Streamed(cfg) => cfg.validate = v,
             ExecPolicy::Resident { validate, .. } => *validate = v,
+            ExecPolicy::Sharded { inner, .. } => {
+                **inner = std::mem::take(&mut **inner).with_validate(v);
+            }
         }
         self
     }
@@ -160,6 +201,7 @@ impl ExecPolicy {
             ExecPolicy::Materialized => ValidateMode::Off,
             ExecPolicy::Streamed(cfg) => cfg.validate,
             ExecPolicy::Resident { validate, .. } => *validate,
+            ExecPolicy::Sharded { inner, .. } => inner.validate(),
         }
     }
 
@@ -173,6 +215,7 @@ impl ExecPolicy {
                     .with_precision(*precision)
                     .with_validate(*validate)
             }
+            ExecPolicy::Sharded { inner, .. } => inner.stream_config(),
         }
     }
 
@@ -197,6 +240,7 @@ impl ExecPolicy {
                 }
                 Some(rc)
             }
+            ExecPolicy::Sharded { inner, .. } => inner.residency_config(),
             _ => None,
         }
     }
@@ -206,6 +250,7 @@ impl ExecPolicy {
     pub(crate) fn cache_budget(&self) -> u64 {
         match self {
             ExecPolicy::Resident { budget, .. } => *budget,
+            ExecPolicy::Sharded { inner, .. } => inner.cache_budget(),
             _ => 0,
         }
     }
@@ -220,6 +265,7 @@ impl ExecPolicy {
             ExecPolicy::Resident { tile_rows, .. } => {
                 Some(tile_rows.unwrap_or(DEFAULT_RESIDENT_TILE_ROWS).clamp(1, n.max(1)))
             }
+            ExecPolicy::Sharded { inner, .. } => inner.planned_tile_rows(n),
         }
     }
 }
@@ -311,6 +357,11 @@ pub struct RunMeta {
     /// regularization, quarantined tiles, and corrupt spill reads. All
     /// zeros/`None` (see [`NumericHealth::is_clean`]) on a clean run.
     pub numeric_health: NumericHealth,
+    /// Per-worker accounting when the run executed under
+    /// [`ExecPolicy::Sharded`] (`None` otherwise, including when a
+    /// sharded request fell back to its inner policy — e.g. projection
+    /// sketches, whose full-`K` pass is not row-shardable here).
+    pub shard: Option<ShardStats>,
 }
 
 /// The uniform return of every `exec` entry point: the algorithm's result
@@ -405,5 +456,37 @@ mod tests {
         // Materialized has no tile pipeline: a no-op, like precision
         let m = ExecPolicy::Materialized.with_validate(ValidateMode::Full);
         assert_eq!(m.validate(), ValidateMode::Off);
+    }
+
+    #[test]
+    fn sharded_policy_delegates_to_its_inner() {
+        let sh = ExecPolicy::sharded(4, ExecPolicy::streamed(32));
+        assert_eq!(sh.stream_config(), StreamConfig::tiled(32));
+        assert!(sh.residency_config().is_none());
+        assert_eq!(sh.cache_budget(), 0);
+        assert_eq!(sh.planned_tile_rows(1000), Some(32));
+        assert_eq!(sh.precision(), Precision::F64);
+        assert_eq!(sh.validate(), ValidateMode::Off);
+
+        // builders recurse into the inner policy
+        let sh = sh.with_precision(Precision::F32).with_validate(ValidateMode::NonFinite);
+        assert_eq!(sh.precision(), Precision::F32);
+        assert_eq!(sh.stream_config().precision, Precision::F32);
+        assert_eq!(sh.validate(), ValidateMode::NonFinite);
+
+        let shr = ExecPolicy::sharded(2, ExecPolicy::resident(1 << 20))
+            .with_tile_rows(48)
+            .with_spill_dir("/tmp");
+        let rc = shr.residency_config().expect("sharded-resident configures residency");
+        assert_eq!(rc.tile_rows, 48);
+        assert!(rc.spill);
+        assert_eq!(shr.cache_budget(), 1 << 20);
+        assert_eq!(shr.stream_config(), StreamConfig::tiled(48));
+
+        // worker count floor
+        assert!(matches!(
+            ExecPolicy::sharded(0, ExecPolicy::Materialized),
+            ExecPolicy::Sharded { shards: 1, .. }
+        ));
     }
 }

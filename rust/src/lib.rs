@@ -22,6 +22,11 @@
 //!   bounded double-buffered queue, so builds run with peak extra memory
 //!   `O(tile_rows·c + s²)` instead of materializing `n x c` (or `n x n`)
 //!   panels.
+//! - [`shard`] is the row-sharded scale-out plane: N workers each run the
+//!   streaming pipeline over a contiguous row-block of the kernel, the
+//!   coordinator merges their tiny associative fold states
+//!   ([`shard::ShardReduce`]) and finishes the solve once — same bits,
+//!   per-worker working sets (EXPERIMENTS.md §Sharding).
 //! - [`sketch`] implements the five sketching matrices of Lemma 2 / Table 4.
 //! - [`obs`] is the always-on span tracer: per-request trace ids, a
 //!   stable stage taxonomy over the hot seams (oracle tiles, pipeline
@@ -48,6 +53,7 @@ pub mod linalg;
 pub mod obs;
 pub mod pool;
 pub mod runtime;
+pub mod shard;
 pub mod sketch;
 pub mod spsd;
 pub mod stream;

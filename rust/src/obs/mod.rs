@@ -78,11 +78,16 @@ pub enum Stage {
     SolveWoodbury,
     /// SVD-backed pseudoinverse.
     SolveSvd,
+    /// One shard worker's local pass over its row-block (pipeline stages
+    /// for that block nest inside it).
+    ShardWorker,
+    /// Coordinator merging one worker's partial fold state.
+    ShardReduce,
 }
 
 impl Stage {
     /// Every stage, in taxonomy order (profile rows use this order).
-    pub const ALL: [Stage; 18] = [
+    pub const ALL: [Stage; 20] = [
         Stage::AdmissionQueue,
         Stage::Plan,
         Stage::DegradeLadder,
@@ -101,6 +106,8 @@ impl Stage {
         Stage::SolveEig,
         Stage::SolveWoodbury,
         Stage::SolveSvd,
+        Stage::ShardWorker,
+        Stage::ShardReduce,
     ];
 
     /// The stable dotted name (artifact contract — see type docs).
@@ -124,6 +131,8 @@ impl Stage {
             Stage::SolveEig => "solve.eig",
             Stage::SolveWoodbury => "solve.woodbury",
             Stage::SolveSvd => "solve.svd",
+            Stage::ShardWorker => "shard.worker",
+            Stage::ShardReduce => "shard.reduce",
         }
     }
 }

@@ -1,0 +1,690 @@
+//! Row-sharded execution plane: N workers each own a contiguous row-block
+//! of the kernel, stream it through the existing tile pipeline, and a
+//! coordinator merges the tiny associative partial states.
+//!
+//! The paper's fast model is linear-time precisely because every statistic
+//! it needs — the `c×c` Gram, the leverage-score state, sketch folds `S^T C`
+//! — is an associative sum over row blocks of `C`. That is what makes the
+//! computation shardable: each worker runs the *same* consumers the
+//! single-process build uses over a [`ShardSource`] (a row-range view of
+//! the oracle), partial fold state rides the existing
+//! [`TileConsumer::snapshot`]/`restore` plumbing, and [`ShardReduce`]
+//! merges the `O(c²)` partials before the coordinator finishes the solve
+//! once. Gittens–Mahoney (arXiv 1303.1849) frame exactly this large-scale
+//! regime as the one where Nyström-type methods earn their keep, and the
+//! modified-Nyström analysis (arXiv 1404.0138) shows the error bounds
+//! survive the regrouped computation.
+//!
+//! Determinism contract (asserted in `tests/shard_equiv.rs`):
+//!
+//! - **Selection paths are bit-identical** across shard counts: Nyström,
+//!   `fast[uniform]` (its `S` is drawn before any tile streams) and fast
+//!   CUR are pure row gathers plus draws whose rng sequence does not
+//!   depend on how rows were grouped, so every float matches the
+//!   unsharded run exactly.
+//! - **Reduction paths regroup floating-point sums**: the Gram / sketched
+//!   leverage state merges per-shard partial sums, so scores (and the `U`
+//!   built from them) agree with the unsharded run to summation
+//!   reordering (≤1e-12 in the equivalence matrix), not bit-for-bit. The
+//!   *number* of rng draws is unchanged (one Bernoulli per row, in row
+//!   order), so the sampled index set stays aligned unless a draw lands
+//!   within the regrouping error of its threshold.
+//!
+//! Worker death is handled through the existing fault machinery
+//! ([`FaultPoint::ShardWorkerDeath`]): a dead worker's row-range is
+//! re-executed once from scratch — never silently dropped — and a second
+//! death of the same range propagates as a panic that the service turns
+//! into a typed `ServiceError::Faulted` reply. Shard passes run
+//! *sequentially* on the calling thread (the pipeline producer already
+//! fans out on the global pool; nesting a second pool here could
+//! deadlock), which also makes the per-worker [`AllocGauge`] measurement
+//! sound and lands every per-shard span under the request's trace.
+
+use crate::benchkit::alloc::{self, AllocGauge};
+use crate::coordinator::oracle::KernelOracle;
+use crate::cur::{self, CurDecomp, FastCurConfig};
+use crate::linalg::{gemm, guarded_pinv, pinv, Matrix, MatrixF32, Precision, Tile};
+use crate::obs::{self, Stage};
+use crate::sketch::{self, SketchKind};
+use crate::spsd::{self, FastConfig, LeverageBasis, SpsdApprox};
+use crate::stream::{
+    run_pipeline_validated, ColSubsetCollect, CollectConsumer, GramFold, LeverageFold,
+    LeverageSampler, MatrixSource, MatvecFold, OracleColumnsSource, ResidencyConfig,
+    ResidencyStats, ResidentSource, RowGather, SketchFold, StreamConfig, TileConsumer,
+    TileSource,
+};
+use crate::testkit::faults::{self, FaultPoint};
+use crate::util::{Rng, Stopwatch};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+/// Contiguous row ranges `[r0, r1)` partitioning `[0, n)` across `shards`
+/// workers: the first `n % shards` ranges get one extra row. `shards` is
+/// clamped to `[1, n]` so no worker owns an empty range (a 0-row kernel
+/// degenerates to one empty shard).
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.clamp(1, n.max(1));
+    let base = n / shards;
+    let rem = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut r0 = 0;
+    for i in 0..shards {
+        let h = base + usize::from(i < rem);
+        out.push((r0, r0 + h));
+        r0 += h;
+    }
+    debug_assert_eq!(r0, n);
+    out
+}
+
+/// A row-range view of a [`TileSource`] — the worker's whole world. The
+/// pipeline running over it sees rows `[0, r1-r0)` and hands consumers
+/// *local* offsets; [`OffsetConsumer`] rebases them to global rows.
+pub struct ShardSource<'a> {
+    inner: &'a dyn TileSource,
+    r0: usize,
+    r1: usize,
+}
+
+impl<'a> ShardSource<'a> {
+    pub fn new(inner: &'a dyn TileSource, r0: usize, r1: usize) -> Self {
+        assert!(r0 <= r1 && r1 <= inner.rows(), "shard range out of bounds");
+        ShardSource { inner, r0, r1 }
+    }
+}
+
+impl TileSource for ShardSource<'_> {
+    fn rows(&self) -> usize {
+        self.r1 - self.r0
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn tile(&self, a: usize, b: usize) -> Matrix {
+        self.inner.tile(self.r0 + a, self.r0 + b)
+    }
+
+    fn tile_f32(&self, a: usize, b: usize) -> MatrixF32 {
+        self.inner.tile_f32(self.r0 + a, self.r0 + b)
+    }
+
+    fn tile_elem(&self, a: usize, b: usize, prec: Precision) -> Tile {
+        self.inner.tile_elem(self.r0 + a, self.r0 + b, prec)
+    }
+}
+
+/// Rebases a consumer from shard-local to global row offsets: a worker's
+/// pipeline emits tiles at local `r0`, but row-indexed consumers
+/// ([`RowGather`], [`CollectConsumer`], [`SketchFold`]'s dense block,
+/// [`MatvecFold`]'s `x` slice, the sketched leverage fold) speak global
+/// rows. Snapshot/restore forward unchanged — the state is offset-free.
+pub struct OffsetConsumer<'a> {
+    inner: &'a mut dyn TileConsumer,
+    base: usize,
+}
+
+impl<'a> OffsetConsumer<'a> {
+    pub fn new(inner: &'a mut dyn TileConsumer, base: usize) -> Self {
+        OffsetConsumer { inner, base }
+    }
+}
+
+impl TileConsumer for OffsetConsumer<'_> {
+    fn consume(&mut self, r0: usize, tile: &Matrix) {
+        self.inner.consume(self.base + r0, tile);
+    }
+
+    fn consume_f32(&mut self, r0: usize, tile: &MatrixF32) {
+        // Forward natively so a fold's narrow path stays on the narrow
+        // path (the default would promote here and change the fold).
+        self.inner.consume_f32(self.base + r0, tile);
+    }
+
+    fn snapshot(&self) -> Option<Matrix> {
+        self.inner.snapshot()
+    }
+
+    fn restore(&mut self, state: &Matrix) -> bool {
+        self.inner.restore(state)
+    }
+}
+
+/// Coordinator-side merge of two workers' partial fold states. The
+/// default merges the [`TileConsumer::snapshot`] matrices by summation —
+/// exactly right for every prefix-sum fold (Gram, sketch, leverage,
+/// matvec: the only consumers that snapshot), because each accumulator is
+/// an associative sum over rows and disjoint row-ranges contribute
+/// disjoint summands. `LeverageFold`'s row-ordered upper-triangle
+/// accumulation was built for exactly this regrouping: the sum of
+/// per-shard upper triangles *is* the upper triangle of the global sum.
+pub trait ShardReduce: TileConsumer {
+    /// Fold `other`'s partial state into `self`.
+    fn reduce(&mut self, other: &Self) {
+        let mut acc = self.snapshot().expect("ShardReduce requires a snapshotting consumer");
+        let theirs = other.snapshot().expect("ShardReduce requires a snapshotting consumer");
+        acc.axpy(1.0, &theirs);
+        assert!(self.restore(&acc), "ShardReduce: consumer rejected merged state");
+    }
+}
+
+impl ShardReduce for GramFold {}
+impl ShardReduce for SketchFold<'_> {}
+impl ShardReduce for LeverageFold<'_> {}
+impl ShardReduce for MatvecFold<'_> {}
+
+/// Allocator-measured accounting for one worker's pass over its row-range.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardWorkerStats {
+    /// First global row of the range.
+    pub r0: usize,
+    /// One past the last global row of the range.
+    pub r1: usize,
+    /// Allocator-measured (not predicted) peak extra bytes while this
+    /// worker's pass ran — 0 when the counting allocator is not installed.
+    pub peak_bytes: u64,
+    /// Wall-clock seconds of the (successful) pass.
+    pub secs: f64,
+}
+
+/// Per-run shard accounting, carried on
+/// [`RunMeta::shard`](crate::exec::RunMeta) and merged into service
+/// replies. `workers` holds one entry per *successful* pass in execution
+/// order; a range that died and was re-executed appears once (the
+/// surviving attempt) and bumps `reexecuted`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardStats {
+    /// Worker count the plan requested (ranges may be fewer when `n` is
+    /// smaller).
+    pub shards: usize,
+    pub workers: Vec<ShardWorkerStats>,
+    /// Row-ranges re-executed after a worker death. Never silently
+    /// dropped: a range either completes or the run fails typed.
+    pub reexecuted: u32,
+}
+
+impl ShardStats {
+    pub fn new(shards: usize) -> Self {
+        ShardStats { shards, workers: Vec::new(), reexecuted: 0 }
+    }
+
+    /// The largest allocator-measured per-worker working set — the number
+    /// the many-tenant bench reports per worker.
+    pub fn max_worker_peak_bytes(&self) -> u64 {
+        self.workers.iter().map(|w| w.peak_bytes).max().unwrap_or(0)
+    }
+}
+
+/// Injected worker death (armed via [`FaultPoint::ShardWorkerDeath`]).
+fn fail_if_armed(range: (usize, usize)) {
+    if let Some(plan) = faults::current() {
+        if plan.should_fail(FaultPoint::ShardWorkerDeath) {
+            panic!("injected fault: shard worker death (rows {}..{})", range.0, range.1);
+        }
+    }
+}
+
+/// Run one worker's pass with death injection, a per-worker allocator
+/// gauge, a [`Stage::ShardWorker`] span, and re-execution semantics: the
+/// first panic re-runs `pass` from scratch (callers build fresh fold
+/// state inside `pass`; global gathers are idempotent overwrites), the
+/// second propagates to the caller's fault machinery.
+fn run_worker<T>(range: (usize, usize), stats: &mut ShardStats, mut pass: impl FnMut() -> T) -> T {
+    let mut retried = false;
+    loop {
+        let sw = Stopwatch::start();
+        let gauge = AllocGauge::start();
+        let out = catch_unwind(AssertUnwindSafe(|| {
+            let _s = obs::span(Stage::ShardWorker);
+            fail_if_armed(range);
+            pass()
+        }));
+        match out {
+            Ok(v) => {
+                let peak =
+                    if alloc::installed() { gauge.peak_extra_bytes() as u64 } else { 0 };
+                stats.workers.push(ShardWorkerStats {
+                    r0: range.0,
+                    r1: range.1,
+                    peak_bytes: peak,
+                    secs: sw.secs(),
+                });
+                return v;
+            }
+            Err(payload) => {
+                if retried {
+                    resume_unwind(payload);
+                }
+                retried = true;
+                stats.reexecuted += 1;
+            }
+        }
+    }
+}
+
+/// Stream one shard's rows through `consumers`, which speak **global**
+/// row offsets (each is wrapped in an [`OffsetConsumer`]). With a
+/// residency config, the shard's view goes through its own
+/// [`ResidentSource`] (per-worker LRU + spill arena) and the pass returns
+/// its counters for the coordinator to absorb.
+fn shard_pass(
+    source: &dyn TileSource,
+    range: (usize, usize),
+    cfg: StreamConfig,
+    residency: Option<&ResidencyConfig>,
+    consumers: &mut [&mut dyn TileConsumer],
+) -> Option<ResidencyStats> {
+    let (r0, r1) = range;
+    let view = ShardSource::new(source, r0, r1);
+    let mut offset: Vec<OffsetConsumer<'_>> =
+        consumers.iter_mut().map(|c| OffsetConsumer::new(&mut **c, r0)).collect();
+    let mut refs: Vec<&mut dyn TileConsumer> =
+        offset.iter_mut().map(|c| c as &mut dyn TileConsumer).collect();
+    match residency {
+        Some(rc) => {
+            let res = ResidentSource::new(&view, rc);
+            run_pipeline_validated(
+                &res,
+                cfg.tile_rows,
+                cfg.queue_depth,
+                cfg.precision,
+                cfg.validate,
+                &mut refs,
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
+            Some(res.stats())
+        }
+        None => {
+            run_pipeline_validated(
+                &view,
+                cfg.tile_rows,
+                cfg.queue_depth,
+                cfg.precision,
+                cfg.validate,
+                &mut refs,
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
+            None
+        }
+    }
+}
+
+fn absorb_residency(acc: &mut Option<ResidencyStats>, rs: Option<ResidencyStats>) {
+    if let Some(rs) = rs {
+        acc.get_or_insert_with(ResidencyStats::default).absorb(&rs);
+    }
+}
+
+/// Sharded Nyström: each worker collects its row-block of `C = K[:, P]`;
+/// the coordinator takes `W = C[P, :]` and finishes `U = W†` once. Pure
+/// row gathers — bit-identical to the unsharded build at any shard count.
+pub(crate) fn nystrom_sharded(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    shards: usize,
+    cfg: StreamConfig,
+    residency: Option<&ResidencyConfig>,
+) -> (SpsdApprox, Option<ResidencyStats>, ShardStats) {
+    let sw = Stopwatch::start();
+    let before = oracle.entries_observed();
+    let n = oracle.n();
+    let mut stats = ShardStats::new(shards);
+    let mut res_acc = None;
+    let src = OracleColumnsSource::new(oracle, p_idx);
+    let mut collect = CollectConsumer::new(n, p_idx.len());
+    for range in shard_ranges(n, shards) {
+        let rs = run_worker(range, &mut stats, || {
+            shard_pass(&src, range, cfg, residency, &mut [&mut collect])
+        });
+        absorb_residency(&mut res_acc, rs);
+    }
+    let c = collect.into_matrix();
+    let w = c.select_rows(p_idx);
+    let mut u = {
+        let _s = obs::span(Stage::SolveSvd);
+        guarded_pinv(&w)
+    };
+    u.symmetrize();
+    let approx = SpsdApprox {
+        c,
+        u,
+        p_indices: p_idx.to_vec(),
+        method: "nystrom".to_string(),
+        entries_observed: oracle.entries_observed() - before,
+        build_secs: sw.secs(),
+    };
+    (approx, res_acc, stats)
+}
+
+/// Sharded fast model (column-selection sketches; the exec layer routes
+/// `ExactSvd`-basis leverage and projection sketches to the inner
+/// policy). Uniform draws `S` up front, so the sharded build is a pure
+/// gather — bit-identical. Leverage folds per-worker score partials,
+/// merges them under [`Stage::ShardReduce`], then scores/draws/gathers in
+/// one global row-order sweep, so only summation regrouping separates it
+/// from the unsharded run.
+pub(crate) fn fast_sharded(
+    oracle: &dyn KernelOracle,
+    p_idx: &[usize],
+    cfg: FastConfig,
+    shards: usize,
+    stream_cfg: StreamConfig,
+    residency: Option<&ResidencyConfig>,
+    rng: &mut Rng,
+) -> (SpsdApprox, Option<ResidencyStats>, ShardStats) {
+    let sw = Stopwatch::start();
+    let before = oracle.entries_observed();
+    let n = oracle.n();
+    let mut stats = ShardStats::new(shards);
+    let mut res_acc = None;
+    let src = OracleColumnsSource::new(oracle, p_idx);
+
+    let (c_mat, stc, sks) = match cfg.kind {
+        SketchKind::Uniform => {
+            // S doesn't depend on C: same draw order as the unsharded
+            // build, before any tile streams.
+            let op = spsd::build_selection_sketch(None, p_idx, cfg, n, rng);
+            let (indices, scales) = spsd::select_parts(&op);
+            let mut collect = CollectConsumer::new(n, p_idx.len());
+            for range in shard_ranges(n, shards) {
+                let rs = run_worker(range, &mut stats, || {
+                    shard_pass(&src, range, stream_cfg, residency, &mut [&mut collect])
+                });
+                absorb_residency(&mut res_acc, rs);
+            }
+            let c_mat = collect.into_matrix();
+            let rows_s = c_mat.select_rows(&indices);
+            let stc = spsd::scale_rows(&rows_s, &scales);
+            let sks = spsd::assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+            (c_mat, stc, sks)
+        }
+        SketchKind::Leverage { scaled } => {
+            // Per-worker partial score state (the O(c²) Gram or SRHT
+            // surrogate), reduced by the coordinator. The SRHT draw (when
+            // used) happens before any tile streams, exactly like the
+            // unsharded pass-1 setup.
+            let sk_op = match cfg.leverage_basis {
+                LeverageBasis::Sketched { m } => {
+                    Some(sketch::srht_sketch(n, m.max(p_idx.len()), rng))
+                }
+                LeverageBasis::Gram => None,
+                LeverageBasis::ExactSvd => {
+                    panic!("fast_sharded: ExactSvd leverage basis is routed to the inner policy")
+                }
+            };
+            let mut collect = CollectConsumer::new(n, p_idx.len());
+            let mut merged: Option<LeverageFold<'_>> = None;
+            for range in shard_ranges(n, shards) {
+                let (fold, rs) = run_worker(range, &mut stats, || {
+                    // Fresh fold per attempt: a half-folded partial from a
+                    // dead worker is discarded, never double-counted.
+                    let mut fold = match &sk_op {
+                        Some(op) => LeverageFold::sketched(op, p_idx.len()),
+                        None => LeverageFold::exact(p_idx.len()),
+                    };
+                    let rs = shard_pass(
+                        &src,
+                        range,
+                        stream_cfg,
+                        residency,
+                        &mut [&mut collect, &mut fold],
+                    );
+                    (fold, rs)
+                });
+                absorb_residency(&mut res_acc, rs);
+                match merged.as_mut() {
+                    None => merged = Some(fold),
+                    Some(m) => {
+                        let _s = obs::span(Stage::ShardReduce);
+                        m.reduce(&fold);
+                    }
+                }
+            }
+            let est = merged.expect("at least one shard").into_estimate();
+
+            let s_extra = cfg
+                .s
+                .saturating_sub(if cfg.force_p_in_s { p_idx.len() } else { 0 })
+                .max(1);
+            let forced = if cfg.force_p_in_s { p_idx.to_vec() } else { Vec::new() };
+            let c_mat = collect.into_matrix();
+            let mut sampler =
+                LeverageSampler::new(&est, s_extra, scaled, forced, n, p_idx.len(), rng);
+            // One global row-order sweep over the assembled panel — the
+            // same rng call sequence (one Bernoulli per row, ascending)
+            // as the unsharded pass 2.
+            sampler.consume(0, &c_mat);
+            let (mut indices, mut scales, mut rows_s, sampled) = sampler.into_parts();
+            if sampled == 0 {
+                // Degenerate draw: mirror run_fast's single uniform pick.
+                let pick = rng.usize_below(n);
+                if let Err(pos) = indices.binary_search(&pick) {
+                    indices.insert(pos, pick);
+                    scales.insert(pos, 1.0);
+                    rows_s = c_mat.select_rows(&indices);
+                }
+            }
+            let stc = spsd::scale_rows(&rows_s, &scales);
+            let sks = spsd::assemble_sks(oracle, &rows_s, p_idx, &indices, &scales);
+            (c_mat, stc, sks)
+        }
+        other => panic!(
+            "fast_sharded supports column-selection sketches, not {} (exec routes projection \
+             sketches to the inner policy)",
+            other.name()
+        ),
+    };
+
+    let stc_pinv = {
+        let _s = obs::span(Stage::SolveSvd);
+        guarded_pinv(&stc)
+    };
+    let u = gemm::symm_nt(&stc_pinv.matmul(&sks), &stc_pinv);
+    let approx = SpsdApprox {
+        c: c_mat,
+        u,
+        p_indices: p_idx.to_vec(),
+        method: format!("fast[{}]", cfg.kind.name()),
+        entries_observed: oracle.entries_observed() - before,
+        build_secs: sw.secs(),
+    };
+    (approx, res_acc, stats)
+}
+
+/// Sharded fast CUR: workers gather their row-blocks of `C`, `R` and (for
+/// uniform, whose indices exist up front) the core in one pass; the
+/// coordinator draws any leverage indices from the assembled `C`/`R`
+/// exactly as the unsharded build does and finishes `U` once. All gathers
+/// plus draws whose sequence is grouping-independent — bit-identical.
+pub(crate) fn cur_fast_sharded(
+    a: &Matrix,
+    col_idx: &[usize],
+    row_idx: &[usize],
+    cfg: FastCurConfig,
+    shards: usize,
+    stream_cfg: StreamConfig,
+    residency: Option<&ResidencyConfig>,
+    rng: &mut Rng,
+) -> (CurDecomp, Option<ResidencyStats>, ShardStats) {
+    let sw = Stopwatch::start();
+    let (m, n) = (a.rows(), a.cols());
+    assert!(
+        cfg.kind.is_column_selection(),
+        "fast CUR supports column-selection sketches, not {}",
+        cfg.kind.name()
+    );
+    let forced_rows: &[usize] = if cfg.force_overlap { row_idx } else { &[] };
+    let forced_cols: &[usize] = if cfg.force_overlap { col_idx } else { &[] };
+    let mut stats = ShardStats::new(shards);
+    let mut res_acc = None;
+    let src = MatrixSource::new(a);
+    let mut c_collect = ColSubsetCollect::new(m, col_idx.to_vec());
+    let mut r_gather = RowGather::new(row_idx.to_vec(), n);
+
+    let (c, r, sc_idx, sr_idx, core) = match cfg.kind {
+        SketchKind::Uniform => {
+            let dummy = Matrix::zeros(0, 0);
+            let sc_idx = cur::build_indices(
+                &dummy, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng,
+            );
+            let sr_idx = cur::build_indices(
+                &dummy, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng,
+            );
+            let mut core_gather = RowGather::with_cols(sc_idx.clone(), sr_idx.clone());
+            for range in shard_ranges(m, shards) {
+                let rs = run_worker(range, &mut stats, || {
+                    shard_pass(
+                        &src,
+                        range,
+                        stream_cfg,
+                        residency,
+                        &mut [&mut c_collect, &mut r_gather, &mut core_gather],
+                    )
+                });
+                absorb_residency(&mut res_acc, rs);
+            }
+            (
+                c_collect.into_matrix(),
+                r_gather.into_matrix(),
+                sc_idx,
+                sr_idx,
+                core_gather.into_matrix(),
+            )
+        }
+        _ => {
+            // Leverage: pass over all shards gathers C and R; the draws
+            // and the core gather happen once on the coordinator, exactly
+            // as the unsharded streamed build does.
+            for range in shard_ranges(m, shards) {
+                let rs = run_worker(range, &mut stats, || {
+                    shard_pass(
+                        &src,
+                        range,
+                        stream_cfg,
+                        residency,
+                        &mut [&mut c_collect, &mut r_gather],
+                    )
+                });
+                absorb_residency(&mut res_acc, rs);
+            }
+            let c = c_collect.into_matrix();
+            let r = r_gather.into_matrix();
+            let sc_idx =
+                cur::build_indices(&c, cfg.kind, cfg.score_basis, cfg.s_c, m, forced_rows, rng);
+            let rt = r.transpose();
+            let sr_idx =
+                cur::build_indices(&rt, cfg.kind, cfg.score_basis, cfg.s_r, n, forced_cols, rng);
+            let core = Matrix::from_fn(sc_idx.len(), sr_idx.len(), |i, j| {
+                a[(sc_idx[i], sr_idx[j])]
+            });
+            (c, r, sc_idx, sr_idx, core)
+        }
+    };
+
+    let stc = c.select_rows(&sc_idx);
+    let rsr = r.select_cols(&sr_idx);
+    let u = {
+        let _s = obs::span(Stage::SolveSvd);
+        pinv(&stc).matmul(&core).matmul(&pinv(&rsr))
+    };
+    let decomp = CurDecomp {
+        c,
+        u,
+        r,
+        method: format!("fast[{}]", cfg.kind.name()),
+        build_secs: sw.secs(),
+        entries_for_u: (sc_idx.len() * sr_idx.len()) as u64,
+    };
+    (decomp, res_acc, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::oracle::DenseOracle;
+
+    fn test_oracle(n: usize) -> DenseOracle {
+        let mut rng = Rng::new(7);
+        let g = Matrix::randn(n, 6, &mut rng);
+        DenseOracle::new(g.matmul_tr(&g))
+    }
+
+    #[test]
+    fn shard_ranges_partition_contiguously() {
+        for (n, shards) in [(10, 3), (7, 7), (5, 9), (53, 4), (1, 1), (0, 4)] {
+            let ranges = shard_ranges(n, shards);
+            assert!(!ranges.is_empty());
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+            }
+            let hs: Vec<usize> = ranges.iter().map(|&(a, b)| b - a).collect();
+            let (min, max) = (hs.iter().min().unwrap(), hs.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced to within one row: {hs:?}");
+        }
+    }
+
+    #[test]
+    fn shard_source_views_global_rows() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(19, 5, &mut rng);
+        let src = MatrixSource::new(&a);
+        let view = ShardSource::new(&src, 6, 15);
+        assert_eq!((view.rows(), view.cols()), (9, 5));
+        assert_eq!(view.tile(2, 7).max_abs_diff(&a.block(8, 13, 0, 5)), 0.0);
+    }
+
+    #[test]
+    fn offset_consumer_rebases_row_indexed_folds() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(24, 4, &mut rng);
+        let x: Vec<f64> = (0..24).map(|i| 0.5 + i as f64).collect();
+        let mut whole = MatvecFold::new(&x, 4);
+        whole.consume(0, &a);
+        let expected = whole.into_vec();
+
+        let src = MatrixSource::new(&a);
+        let mut fold = MatvecFold::new(&x, 4);
+        for range in shard_ranges(24, 3) {
+            shard_pass(&src, range, StreamConfig::tiled(5), None, &mut [&mut fold]);
+        }
+        let got = fold.into_vec();
+        for (g, e) in got.iter().zip(&expected) {
+            assert!((g - e).abs() <= 1e-12 * e.abs().max(1.0), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn shard_reduce_merges_partial_gram_state() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(30, 6, &mut rng);
+        let mut whole = GramFold::new(6);
+        whole.consume(0, &a);
+        let want = whole.snapshot().unwrap();
+
+        let top = a.block(0, 18, 0, 6);
+        let bot = a.block(18, 30, 0, 6);
+        let mut g0 = GramFold::new(6);
+        g0.consume(0, &top);
+        let mut g1 = GramFold::new(6);
+        g1.consume(0, &bot);
+        g0.reduce(&g1);
+        let got = g0.snapshot().unwrap();
+        assert!(got.max_abs_diff(&want) <= 1e-12 * want.fro_norm().max(1.0));
+    }
+
+    #[test]
+    fn sharded_nystrom_matches_unsharded_bit_for_bit() {
+        let o = test_oracle(41);
+        let p = vec![1usize, 9, 17, 33];
+        let (base, _) = spsd::run_nystrom(&o, &p, StreamConfig::tiled(8), None);
+        for shards in [1usize, 2, 5] {
+            let (sh, _, st) = nystrom_sharded(&o, &p, shards, StreamConfig::tiled(8), None);
+            assert_eq!(sh.c.max_abs_diff(&base.c), 0.0, "{shards} shards: C drifted");
+            assert_eq!(sh.u.max_abs_diff(&base.u), 0.0, "{shards} shards: U drifted");
+            assert_eq!(st.workers.len(), shards, "one stats entry per worker");
+            assert_eq!(st.reexecuted, 0);
+        }
+    }
+}

@@ -589,7 +589,7 @@ pub fn fast_streamed_resident(
 }
 
 /// Clone out the index/scale arrays of a column-selection sketch.
-fn select_parts(op: &SketchOp) -> (Vec<usize>, Vec<f64>) {
+pub(crate) fn select_parts(op: &SketchOp) -> (Vec<usize>, Vec<f64>) {
     match op {
         SketchOp::Select { indices, scales, .. } => (indices.clone(), scales.clone()),
         _ => unreachable!("selection sketch expected"),
@@ -599,7 +599,7 @@ fn select_parts(op: &SketchOp) -> (Vec<usize>, Vec<f64>) {
 /// `diag(scales) · rows` — the `S^T C` of a column-selection sketch given
 /// the already-gathered rows `C[S, :]`. Matches `SketchOp::apply_left`
 /// bit-for-bit (same gather, same in-place scaling).
-fn scale_rows(rows_s: &Matrix, scales: &[f64]) -> Matrix {
+pub(crate) fn scale_rows(rows_s: &Matrix, scales: &[f64]) -> Matrix {
     let mut out = rows_s.clone();
     for (r, &sc) in scales.iter().enumerate() {
         if sc != 1.0 {
@@ -613,7 +613,7 @@ fn scale_rows(rows_s: &Matrix, scales: &[f64]) -> Matrix {
 
 /// Build the column-selection S for the fast model, honoring `P ⊂ S`.
 /// `c_mat` is only consulted for leverage-score sampling.
-fn build_selection_sketch(
+pub(crate) fn build_selection_sketch(
     c_mat: Option<&Matrix>,
     p_idx: &[usize],
     cfg: FastConfig,
@@ -646,7 +646,7 @@ fn build_selection_sketch(
 /// block touches the oracle — and only the `s x c` gather (not the full
 /// `n x c` panel) is needed here, which is what lets the streamed build
 /// drop `C` tiles as soon as they are folded.
-fn assemble_sks(
+pub(crate) fn assemble_sks(
     oracle: &dyn KernelOracle,
     c_s: &Matrix,
     p_idx: &[usize],

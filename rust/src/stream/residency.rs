@@ -159,6 +159,19 @@ impl ResidencyStats {
     pub fn hits(&self) -> u64 {
         self.ram_hits + self.spill_hits
     }
+
+    /// Fold another worker's counters into this one. Every field is an
+    /// event count, so the shard coordinator can sum per-worker stats
+    /// into one request-level view.
+    pub fn absorb(&mut self, other: &ResidencyStats) {
+        self.ram_hits += other.ram_hits;
+        self.spill_hits += other.spill_hits;
+        self.computes += other.computes;
+        self.spilled_bytes += other.spilled_bytes;
+        self.evictions += other.evictions;
+        self.io_retries += other.io_retries;
+        self.corrupt_reads += other.corrupt_reads;
+    }
 }
 
 /// Removes the arena file when dropped — a guard object, so the temp file

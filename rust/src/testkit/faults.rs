@@ -46,16 +46,22 @@ pub enum FaultPoint {
     /// The pipeline producer poisons a tile with a NaN before sending it
     /// — the seam `ValidateMode` quarantines.
     PoisonTile,
+    /// A shard worker dies (panics) at the start of its row-block pass —
+    /// the scale-out seam. Transient: the coordinator re-executes the
+    /// row-range, bit-identical. Persistent: the second attempt dies too
+    /// and the panic propagates to the service's typed-error machinery.
+    ShardWorkerDeath,
 }
 
 /// Every fault point, in index order.
-pub const FAULT_POINTS: [FaultPoint; 6] = [
+pub const FAULT_POINTS: [FaultPoint; 7] = [
     FaultPoint::SpillWrite,
     FaultPoint::SpillRead,
     FaultPoint::OracleTile,
     FaultPoint::ConsumerFold,
     FaultPoint::SpillCorrupt,
     FaultPoint::PoisonTile,
+    FaultPoint::ShardWorkerDeath,
 ];
 
 impl FaultPoint {
@@ -67,6 +73,7 @@ impl FaultPoint {
             FaultPoint::ConsumerFold => 3,
             FaultPoint::SpillCorrupt => 4,
             FaultPoint::PoisonTile => 5,
+            FaultPoint::ShardWorkerDeath => 6,
         }
     }
 
@@ -78,6 +85,7 @@ impl FaultPoint {
             FaultPoint::ConsumerFold => "consumer fold",
             FaultPoint::SpillCorrupt => "spill corrupt",
             FaultPoint::PoisonTile => "poisoned tile",
+            FaultPoint::ShardWorkerDeath => "shard worker death",
         }
     }
 }
@@ -111,13 +119,13 @@ impl FaultSpec {
     }
 }
 
-/// A deterministic fault schedule over the six [`FaultPoint`]s, with
+/// A deterministic fault schedule over the seven [`FaultPoint`]s, with
 /// per-point operation and injection counters for post-mortem assertions.
 #[derive(Debug, Default)]
 pub struct FaultPlan {
-    specs: [FaultSpec; 6],
-    ops: [AtomicU64; 6],
-    injected: [AtomicU64; 6],
+    specs: [FaultSpec; 7],
+    ops: [AtomicU64; 7],
+    injected: [AtomicU64; 7],
 }
 
 impl Default for FaultSpec {

@@ -1,10 +1,10 @@
-//! Chaos acceptance matrix (ISSUE 6, extended by the integrity PR):
-//! deterministic fault injection over {spill write, spill read, oracle
-//! tile, consumer fold, spill corruption, tile poisoning} ×
-//! {transient, persistent}. Every cell must end in a typed error or a
-//! correct (possibly degraded) result — never a hang, never a poisoned
-//! worker, never silently wrong bits — with the memory meter back at
-//! zero and no spill temp files left behind.
+//! Chaos acceptance matrix (ISSUE 6, extended by the integrity and
+//! sharding PRs): deterministic fault injection over {spill write, spill
+//! read, oracle tile, consumer fold, spill corruption, tile poisoning,
+//! shard worker death} × {transient, persistent}. Every cell must end in
+//! a typed error or a correct (possibly degraded) result — never a hang,
+//! never a poisoned worker, never silently wrong bits — with the memory
+//! meter back at zero and no spill temp files left behind.
 //!
 //! Tests that arm the process-global fault plan serialize on
 //! `CHAOS_LOCK` (the arm slot is process-wide). The seeded matrix at the
@@ -517,6 +517,84 @@ fn faulted_requests_retry_to_bit_identical_results_and_carry_health() {
     drop(svc);
     // Per-request checkpoint directories are removed on every outcome.
     assert_no_spill_files(&dir);
+}
+
+/// Worker-death cells (ISSUE 10): a shard worker that dies transiently
+/// has its row-range re-executed — bit-identical reply, death visible
+/// only in `ShardStats::reexecuted` — while a persistent death exhausts
+/// the one re-execution and ends as a typed `Faulted`, never a hang,
+/// with the worker thread surviving to serve the next request.
+#[test]
+fn shard_worker_death_reexecutes_transiently_and_ends_typed_persistently() {
+    let _g = chaos_guard();
+    let sharded = || Some(ExecPolicy::sharded(3, ExecPolicy::streamed(8)));
+    let svc = ApproxService::new(
+        Arc::new(oracle()) as Arc<dyn KernelOracle + Send + Sync>,
+        ServiceConfig { workers: 1, ..Default::default() },
+    );
+    // Clean sharded reference (same service, nothing armed).
+    let eig_ref = {
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(0, sharded()), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.meta.as_ref().unwrap().shard.as_ref().unwrap().reexecuted, 0);
+        r.eigvals
+    };
+
+    // transient: the 2nd shard's worker dies once; its row-range is
+    // re-executed and the reply is bit-identical.
+    let plan = Arc::new(
+        FaultPlan::none().fail(FaultPoint::ShardWorkerDeath, FaultSpec::transient(2)),
+    );
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(0, sharded()), tx); // same seed as the reference
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "transient death must be re-executed: {:?}", r.error);
+        assert_eq!(r.eigvals, eig_ref, "the re-executed shard must reproduce the bits");
+        let stats = r.meta.unwrap().shard.unwrap();
+        assert_eq!(stats.reexecuted, 1, "the death is accounted, never silent");
+        assert_eq!(stats.workers.len(), 3);
+    }
+    assert_eq!(plan.injected(FaultPoint::ShardWorkerDeath), 1);
+    assert_eq!(svc.metrics().faulted.get(), 0, "the service never saw the death");
+
+    // persistent: the worker dies on the re-execution too; the request
+    // ends typed, reservations drain, and the worker thread survives.
+    let plan = Arc::new(
+        FaultPlan::none().fail(FaultPoint::ShardWorkerDeath, FaultSpec::persistent(1)),
+    );
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let (tx, rx) = mpsc::channel();
+        svc.submit(req(2, sharded()), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        match &r.error {
+            Some(ServiceError::Faulted(msg)) => {
+                assert!(msg.contains("injected fault: shard worker death"), "{msg}");
+            }
+            other => panic!("expected Faulted after the re-execution budget, got {other:?}"),
+        }
+        assert!(r.eigvals.is_empty(), "no numbers from a dead shard");
+    }
+    assert!(plan.injected(FaultPoint::ShardWorkerDeath) >= 2, "first run + re-execution");
+    let m = svc.metrics();
+    assert_eq!(m.faulted.get(), 1);
+    assert_eq!(m.mem_in_use.get(), 0, "reservation released through the unwind");
+    assert_eq!(svc.inflight(), 0);
+
+    // Disarmed, the same worker serves the same sharded request clean.
+    let (tx, rx) = mpsc::channel();
+    svc.submit(req(0, sharded()), tx);
+    svc.drain();
+    let r = rx.iter().next().unwrap();
+    assert!(r.error.is_none(), "worker must survive the dead shard: {:?}", r.error);
+    assert_eq!(r.eigvals, eig_ref);
 }
 
 /// A [`KernelOracle`] whose tile production blocks until released —

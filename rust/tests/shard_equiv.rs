@@ -1,0 +1,407 @@
+//! Shard-count invariance matrix (ISSUE 10): the row-sharded execution
+//! plane must be an accounting change, not a numeric one. For shard
+//! counts {1, 2, 4, 7} against the unsharded streamed run:
+//!
+//! - **Selection paths** (nystrom, fast[uniform], cur_fast) gather rows
+//!   and solve small resident systems — bit-identical across shard
+//!   counts, including the degenerate 1-shard wrapper.
+//! - **Reduction-regrouped paths** (fast[leverage] on the Gram basis)
+//!   merge per-shard partial Gram folds, so sums regroup by shard
+//!   boundary: scores agree only to reduction-reordering tolerance
+//!   (≤1e-12 relative), while the gathered `C` panel stays bit-identical.
+//!
+//! Plus the coalescing contract: K same-oracle requests queued behind a
+//! gated worker ride ONE stream pass — the oracle is charged exactly one
+//! build's entries (measured through the entry counter), every rider
+//! reply carries `batched = true`, and the coalescing counters land in
+//! the service metrics.
+//!
+//! Tests that run sharded passes share `SHARD_LOCK`: the worker-death
+//! test arms the process-global fault plan, and an armed
+//! `ShardWorkerDeath` must not leak into a concurrently running
+//! equivalence cell.
+
+use fastspsd::coordinator::oracle::{DenseOracle, KernelOracle, RbfOracle};
+use fastspsd::coordinator::{planner, ApproxRequest, ApproxService, MethodSpec, ServiceConfig};
+use fastspsd::cur::FastCurConfig;
+use fastspsd::exec::{self, ExecPolicy};
+use fastspsd::linalg::Matrix;
+use fastspsd::spsd::FastConfig;
+use fastspsd::stream::Precision;
+use fastspsd::testkit::faults::{self, FaultPlan, FaultPoint, FaultSpec};
+use fastspsd::util::Rng;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// Serializes the file's sharded passes against the fault-arming test.
+static SHARD_LOCK: Mutex<()> = Mutex::new(());
+
+fn shard_guard() -> std::sync::MutexGuard<'static, ()> {
+    SHARD_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const N: usize = 57;
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+fn psd_oracle() -> DenseOracle {
+    let mut rng = Rng::new(9);
+    let g = Matrix::randn(N, 7, &mut rng);
+    DenseOracle::new(g.matmul_tr(&g))
+}
+
+fn landmarks() -> Vec<usize> {
+    vec![1, 8, 19, 30, 44, 55]
+}
+
+fn streamed() -> ExecPolicy {
+    ExecPolicy::streamed(9)
+}
+
+fn sharded(shards: usize) -> ExecPolicy {
+    ExecPolicy::sharded(shards, streamed())
+}
+
+/// The shard accounting every sharded run must carry: one worker per
+/// shard, contiguous ranges covering all n rows, no silent re-execution.
+fn assert_shard_meta(meta: &fastspsd::exec::RunMeta, shards: usize) {
+    let stats = meta.shard.as_ref().expect("sharded policy carries ShardStats");
+    assert_eq!(stats.shards, shards);
+    assert_eq!(stats.workers.len(), shards);
+    assert_eq!(stats.reexecuted, 0, "no faults armed, no re-execution");
+    let mut next = 0;
+    for w in &stats.workers {
+        assert_eq!(w.r0, next, "shard ranges must be contiguous");
+        assert!(w.r1 > w.r0);
+        next = w.r1;
+    }
+    assert_eq!(next, N, "shard ranges must cover every row");
+}
+
+#[test]
+fn sharded_nystrom_is_bit_identical_across_shard_counts() {
+    let _g = shard_guard();
+    let o = psd_oracle();
+    let p = landmarks();
+    let reference = exec::nystrom(&o, &p, &streamed());
+    assert!(reference.meta.shard.is_none(), "unsharded runs carry no shard stats");
+    for shards in SHARD_COUNTS {
+        let rep = exec::nystrom(&o, &p, &sharded(shards));
+        assert_eq!(
+            reference.result.c.max_abs_diff(&rep.result.c),
+            0.0,
+            "{shards} shards: C must gather the same bits"
+        );
+        assert_eq!(
+            reference.result.u.max_abs_diff(&rep.result.u),
+            0.0,
+            "{shards} shards: U solves the same W"
+        );
+        assert_eq!(reference.result.p_indices, rep.result.p_indices);
+        assert_shard_meta(&rep.meta, shards);
+    }
+}
+
+#[test]
+fn sharded_fast_uniform_is_bit_identical_across_shard_counts() {
+    let _g = shard_guard();
+    let o = psd_oracle();
+    let p = landmarks();
+    let cfg = FastConfig::uniform(20);
+    let reference = exec::fast(&o, &p, cfg, &streamed(), &mut Rng::new(41));
+    for shards in SHARD_COUNTS {
+        // A fresh rng with the reference seed: the sharded path must make
+        // exactly the reference's draws (S is drawn once, up front).
+        let rep = exec::fast(&o, &p, cfg, &sharded(shards), &mut Rng::new(41));
+        assert_eq!(reference.result.c.max_abs_diff(&rep.result.c), 0.0, "{shards} shards");
+        assert_eq!(reference.result.u.max_abs_diff(&rep.result.u), 0.0, "{shards} shards");
+        assert_eq!(reference.result.p_indices, rep.result.p_indices);
+        assert_shard_meta(&rep.meta, shards);
+    }
+}
+
+#[test]
+fn sharded_fast_leverage_matches_within_reduction_tolerance() {
+    let _g = shard_guard();
+    let o = psd_oracle();
+    let p = landmarks();
+    let cfg = FastConfig::leverage(20); // Gram basis: per-shard partial folds
+    let reference = exec::fast(&o, &p, cfg, &streamed(), &mut Rng::new(17));
+    let u_scale = 1.0 + reference.result.u.fro_norm();
+    for shards in SHARD_COUNTS {
+        let rep = exec::fast(&o, &p, cfg, &sharded(shards), &mut Rng::new(17));
+        // The gathered C panel is untouched by the reduction regrouping.
+        assert_eq!(reference.result.c.max_abs_diff(&rep.result.c), 0.0, "{shards} shards");
+        // The merged Gram regroups sums by shard boundary: scores move by
+        // ~1e-16, selections stay pinned by the seed, and U tracks to
+        // reduction-reordering tolerance.
+        assert_eq!(
+            reference.result.p_indices, rep.result.p_indices,
+            "{shards} shards: pinned seed must keep the same selection"
+        );
+        let diff = reference.result.u.max_abs_diff(&rep.result.u);
+        assert!(
+            diff <= 1e-12 * u_scale,
+            "{shards} shards: |ΔU| = {diff:e} exceeds reduction tolerance"
+        );
+        assert_shard_meta(&rep.meta, shards);
+    }
+}
+
+#[test]
+fn sharded_cur_fast_is_bit_identical_across_shard_counts() {
+    let _g = shard_guard();
+    let mut rng = Rng::new(23);
+    let a = Matrix::randn(N, 37, &mut rng);
+    let col_idx = vec![0, 5, 12, 20, 29, 36];
+    let row_idx = vec![2, 9, 21, 33, 48, 56];
+    for cfg in [FastCurConfig::uniform(14, 14), FastCurConfig::leverage(14, 14)] {
+        let reference =
+            exec::cur_fast(&a, &col_idx, &row_idx, cfg, &streamed(), &mut Rng::new(31));
+        for shards in SHARD_COUNTS {
+            let rep = exec::cur_fast(
+                &a,
+                &col_idx,
+                &row_idx,
+                cfg,
+                &sharded(shards),
+                &mut Rng::new(31),
+            );
+            assert_eq!(reference.result.c.max_abs_diff(&rep.result.c), 0.0, "{shards} shards");
+            assert_eq!(reference.result.u.max_abs_diff(&rep.result.u), 0.0, "{shards} shards");
+            assert_eq!(reference.result.r.max_abs_diff(&rep.result.r), 0.0, "{shards} shards");
+            assert_eq!(reference.result.entries_for_u, rep.result.entries_for_u);
+            assert_shard_meta(&rep.meta, shards);
+        }
+    }
+}
+
+/// Nested sharding-aware policy plumbing: builders applied to the outer
+/// `Sharded` must reach the inner per-worker policy the runs actually use.
+#[test]
+fn sharded_policy_builders_reach_the_workers() {
+    let _g = shard_guard();
+    let o = psd_oracle();
+    let p = landmarks();
+    let reference = exec::nystrom(&o, &p, &streamed());
+    let rep = exec::nystrom(&o, &p, &sharded(3).with_tile_rows(4));
+    assert_eq!(reference.result.u.max_abs_diff(&rep.result.u), 0.0);
+    assert_shard_meta(&rep.meta, 3);
+}
+
+#[test]
+fn transient_worker_death_reexecutes_the_shard_bit_identically() {
+    let _g = shard_guard();
+    let o = psd_oracle();
+    let p = landmarks();
+    let reference = exec::nystrom(&o, &p, &streamed());
+    let plan = Arc::new(
+        FaultPlan::none().fail(FaultPoint::ShardWorkerDeath, FaultSpec::transient(2)),
+    );
+    {
+        let _armed = faults::arm(Arc::clone(&plan));
+        let rep = exec::nystrom(&o, &p, &sharded(3));
+        assert_eq!(
+            reference.result.c.max_abs_diff(&rep.result.c),
+            0.0,
+            "a re-executed shard must reproduce the same bits"
+        );
+        assert_eq!(reference.result.u.max_abs_diff(&rep.result.u), 0.0);
+        let stats = rep.meta.shard.expect("sharded run carries stats");
+        assert_eq!(stats.reexecuted, 1, "the death must be visible in accounting");
+        assert_eq!(stats.workers.len(), 3, "every shard still reports a worker");
+    }
+    assert_eq!(plan.injected(FaultPoint::ShardWorkerDeath), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Request coalescing: K same-oracle requests, one stream pass.
+// ---------------------------------------------------------------------------
+
+/// A [`KernelOracle`] whose tile production blocks until released — holds
+/// the single worker busy so identical requests pile into the admission
+/// queue and must coalesce on the next dispatch.
+struct GateOracle {
+    inner: Arc<dyn KernelOracle + Send + Sync>,
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl GateOracle {
+    fn new(inner: Arc<dyn KernelOracle + Send + Sync>) -> Self {
+        GateOracle { inner, open: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait_open(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+impl KernelOracle for GateOracle {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        self.wait_open();
+        self.inner.block(rows, cols)
+    }
+
+    fn row_block(&self, r0: usize, r1: usize, cols: &[usize]) -> Matrix {
+        self.wait_open();
+        self.inner.row_block(r0, r1, cols)
+    }
+
+    fn full_rows(&self, r0: usize, r1: usize) -> Matrix {
+        self.wait_open();
+        self.inner.full_rows(r0, r1)
+    }
+
+    fn entries_observed(&self) -> u64 {
+        self.inner.entries_observed()
+    }
+
+    fn reset_entries(&self) {
+        self.inner.reset_entries();
+    }
+}
+
+fn rbf() -> RbfOracle {
+    let mut rng = Rng::new(3);
+    RbfOracle::cpu(Arc::new(Matrix::randn(N, 6, &mut rng)), 0.5)
+}
+
+fn nystrom_req(id: u64, seed: u64) -> ApproxRequest {
+    ApproxRequest {
+        id,
+        method: MethodSpec::Nystrom,
+        c: 8,
+        k: 3,
+        seed,
+        policy: None,
+        precision: Precision::F64,
+        deadline: None,
+    }
+}
+
+/// Admission only defers work when the memory cap blocks it — uncapped
+/// reservations always succeed, so without a cap every submit would
+/// dispatch straight to the worker pool and the admission queue (where
+/// riders are swept from) would stay empty. Capping at exactly one
+/// request's predicted peak makes the gate deterministic: the blocker
+/// holds the whole cap and every later submit queues.
+fn gated_service() -> (Arc<GateOracle>, ApproxService) {
+    let gate = Arc::new(GateOracle::new(Arc::new(rbf())));
+    let cap = planner::predicted_policy_peak_bytes(
+        N,
+        8,
+        &MethodSpec::Nystrom,
+        &planner::default_policy(),
+    );
+    let svc = ApproxService::new(
+        Arc::clone(&gate) as Arc<dyn KernelOracle + Send + Sync>,
+        ServiceConfig { workers: 1, memory_cap: Some(cap), ..Default::default() },
+    );
+    (gate, svc)
+}
+
+#[test]
+fn coalesced_requests_charge_the_oracle_exactly_one_pass() {
+    const K: u64 = 4;
+    // Entry cost of one Nyström build: n·c, independent of the seed (the
+    // seed picks WHICH c columns are gathered, never how many entries).
+    // Measured rather than assumed, on an identical but ungated oracle.
+    let one_build = {
+        let svc = ApproxService::new(
+            Arc::new(rbf()) as Arc<dyn KernelOracle + Send + Sync>,
+            ServiceConfig { workers: 1, ..Default::default() },
+        );
+        let (tx, rx) = mpsc::channel();
+        svc.submit(nystrom_req(0, 7), tx);
+        svc.drain();
+        let r = rx.iter().next().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(!r.batched, "a singleton dispatch is not a shared pass");
+        r.meta
+            .expect("served requests carry meta")
+            .entries
+            .expect("oracle-backed runs count entries")
+    };
+    assert_eq!(one_build, (N * 8) as u64, "premise: Nyström reads exactly n·c");
+
+    let (gate, svc) = gated_service();
+    // The blocker (a DIFFERENT seed, so it can never coalesce with the
+    // riders) takes the whole cap and parks on the closed gate...
+    let (tx_b, rx_b) = mpsc::channel();
+    svc.submit(nystrom_req(100, 99), tx_b);
+    // ...so the K identical requests all land in the admission queue.
+    let (tx, rx) = mpsc::channel();
+    for id in 1..=K {
+        svc.submit(nystrom_req(id, 7), tx.clone());
+    }
+    drop(tx);
+    gate.release();
+    svc.drain();
+
+    let rb = rx_b.iter().next().unwrap();
+    assert!(rb.error.is_none(), "{:?}", rb.error);
+    assert!(!rb.batched, "the blocker dispatched alone");
+    let mut resps: Vec<_> = rx.iter().collect();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len() as u64, K, "every rider must be replied to");
+    for r in &resps {
+        assert!(r.error.is_none(), "request {}: {:?}", r.id, r.error);
+        assert!(r.batched, "request {} must see it rode a shared pass", r.id);
+        assert_eq!(r.eigvals.len(), 3);
+    }
+    // All K riders returned the same build: identical spectra.
+    for r in &resps[1..] {
+        assert_eq!(r.eigvals, resps[0].eigvals, "riders share the leader's bits");
+    }
+    // The oracle's ledger: one blocker build + ONE batch build. Without
+    // coalescing this would read (K + 1)·n·c.
+    assert_eq!(
+        gate.entries_observed(),
+        2 * one_build,
+        "K same-oracle requests must charge the oracle exactly one n·c"
+    );
+    let m = svc.metrics();
+    assert_eq!(m.coalesced_requests.get(), K - 1, "riders counted, leader not");
+    assert_eq!(m.completed.get(), K + 1, "every reply is a completion");
+    assert_eq!(m.batch_occupancy.max(), K, "the shared dispatch carried all K");
+    assert_eq!(m.batch_occupancy.count(), 2, "two dispatches: blocker + batch");
+    assert_eq!(m.batch_occupancy.quantile(0.95), K, "p95 occupancy sees the batch");
+    assert_eq!(m.mem_in_use.get(), 0, "riders never hold reservations");
+}
+
+/// Requests that differ in any identity field (here: the seed) must NOT
+/// coalesce, even when they sit in the queue side by side.
+#[test]
+fn different_seed_requests_do_not_coalesce() {
+    let (gate, svc) = gated_service();
+    let (tx_b, rx_b) = mpsc::channel();
+    svc.submit(nystrom_req(100, 99), tx_b);
+    let (tx, rx) = mpsc::channel();
+    for id in 1..=3u64 {
+        svc.submit(nystrom_req(id, id), tx.clone()); // distinct seeds
+    }
+    drop(tx);
+    gate.release();
+    svc.drain();
+    let _ = rx_b.iter().next().unwrap();
+    let resps: Vec<_> = rx.iter().collect();
+    assert_eq!(resps.len(), 3);
+    for r in &resps {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(!r.batched, "request {} must have run its own build", r.id);
+    }
+    assert_eq!(svc.metrics().coalesced_requests.get(), 0);
+    // 4 builds: the blocker + one per distinct seed.
+    assert_eq!(gate.entries_observed(), 4 * (N * 8) as u64);
+}

@@ -1,0 +1,125 @@
+//! `make shard-smoke` — the CI gate for the sharded scale-out plane: a
+//! small-n sharded service round-trip (same bits as the unsharded run,
+//! per-shard accounting on the reply) including one injected transient
+//! worker death that must be re-executed invisibly.
+//!
+//! Tests here arm the process-global fault plan, so they serialize on a
+//! file-local lock (the smoke binary is its own process; chaos.rs' lock
+//! guards its process, this one guards ours).
+
+use fastspsd::coordinator::oracle::{KernelOracle, RbfOracle};
+use fastspsd::coordinator::{ApproxRequest, ApproxService, MethodSpec, ServiceConfig};
+use fastspsd::exec::ExecPolicy;
+use fastspsd::linalg::Matrix;
+use fastspsd::sketch::SketchKind;
+use fastspsd::stream::Precision;
+use fastspsd::testkit::faults::{self, FaultPlan, FaultPoint, FaultSpec};
+use fastspsd::util::Rng;
+use std::sync::{mpsc, Arc, Mutex};
+
+static SMOKE_LOCK: Mutex<()> = Mutex::new(());
+
+fn smoke_guard() -> std::sync::MutexGuard<'static, ()> {
+    SMOKE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const N: usize = 41;
+
+fn service(workers: usize) -> ApproxService {
+    let mut rng = Rng::new(2);
+    let oracle = RbfOracle::cpu(Arc::new(Matrix::randn(N, 5, &mut rng)), 0.7);
+    ApproxService::new(
+        Arc::new(oracle) as Arc<dyn KernelOracle + Send + Sync>,
+        ServiceConfig { workers, ..Default::default() },
+    )
+}
+
+fn req(id: u64, policy: Option<ExecPolicy>) -> ApproxRequest {
+    ApproxRequest {
+        id,
+        method: MethodSpec::Fast { s: 16, kind: SketchKind::Uniform },
+        c: 6,
+        k: 3,
+        seed: 5,
+        policy,
+        precision: Precision::F64,
+        deadline: None,
+    }
+}
+
+fn serve_one(svc: &ApproxService, r: ApproxRequest) -> fastspsd::coordinator::ApproxResponse {
+    let (tx, rx) = mpsc::channel();
+    svc.submit(r, tx);
+    svc.drain();
+    rx.iter().next().unwrap()
+}
+
+#[test]
+fn sharded_service_round_trip_matches_unsharded_and_reports_per_shard_accounting() {
+    let _g = smoke_guard();
+    let svc = service(2);
+    let reference = serve_one(&svc, req(0, Some(ExecPolicy::streamed(8))));
+    assert!(reference.error.is_none(), "{:?}", reference.error);
+    assert!(reference.meta.as_ref().unwrap().shard.is_none());
+
+    let resp = serve_one(
+        &svc,
+        req(1, Some(ExecPolicy::sharded(3, ExecPolicy::streamed(8)))),
+    );
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.eigvals, reference.eigvals, "sharding must not move a single bit");
+    let meta = resp.meta.expect("served requests carry meta");
+    let stats = meta.shard.expect("a sharded policy reports per-shard accounting");
+    assert_eq!(stats.shards, 3);
+    assert_eq!(stats.workers.len(), 3);
+    assert_eq!(stats.reexecuted, 0);
+    let mut next = 0;
+    for w in &stats.workers {
+        assert_eq!(w.r0, next, "contiguous row-blocks");
+        next = w.r1;
+        // peak_bytes is allocator-measured and stays 0 here: the counting
+        // allocator is only installed in the bench binary.
+        assert!(w.secs >= 0.0);
+    }
+    assert_eq!(next, N, "the shards cover every row");
+}
+
+#[test]
+fn sharded_resident_workers_merge_their_residency_stats_into_the_reply() {
+    let _g = smoke_guard();
+    let svc = service(1);
+    let resp = serve_one(
+        &svc,
+        req(2, Some(ExecPolicy::sharded(2, ExecPolicy::resident(0).with_tile_rows(8)))),
+    );
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let meta = resp.meta.unwrap();
+    assert_eq!(meta.shard.as_ref().unwrap().workers.len(), 2);
+    let res = meta.residency.expect("per-shard residency stats merge into the reply");
+    assert!(res.computes > 0, "both workers' computes are absorbed: {res:?}");
+}
+
+#[test]
+fn injected_transient_worker_death_is_reexecuted_invisibly() {
+    let _g = smoke_guard();
+    let svc = service(1);
+    let sharded = || Some(ExecPolicy::sharded(3, ExecPolicy::streamed(8)));
+    let reference = serve_one(&svc, req(3, sharded()));
+    assert!(reference.error.is_none(), "{:?}", reference.error);
+
+    let plan = Arc::new(
+        FaultPlan::none().fail(FaultPoint::ShardWorkerDeath, FaultSpec::transient(2)),
+    );
+    let resp = {
+        let _armed = faults::arm(Arc::clone(&plan));
+        serve_one(&svc, req(4, sharded()))
+    };
+    assert!(resp.error.is_none(), "a transient death must be absorbed: {:?}", resp.error);
+    assert_eq!(resp.eigvals, reference.eigvals, "re-execution must reproduce the bits");
+    let stats = resp.meta.unwrap().shard.unwrap();
+    assert_eq!(stats.reexecuted, 1, "the re-executed row-range is accounted");
+    assert_eq!(plan.injected(FaultPoint::ShardWorkerDeath), 1);
+    let m = svc.metrics();
+    assert_eq!(m.faulted.get(), 0, "the service never saw the death");
+    assert_eq!(m.mem_in_use.get(), 0);
+}
